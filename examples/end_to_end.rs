@@ -1,0 +1,149 @@
+//! End-to-end driver (EXPERIMENTS.md headline run): the full system on a
+//! real small workload, proving all layers compose.
+//!
+//! Pipeline:
+//!   1. generate a corpus dataset (paper's Bank Marketing recipe, scaled);
+//!   2. tune d_rmax with the paper's tolerance protocol (eval::tuner stage 2);
+//!   3. train G-DaRE and R-DaRE; evaluate through the PJRT predictor
+//!      (L1/L2 artifacts) when the model fits the compiled shape;
+//!   4. start the coordinator and stream GDPR deletion requests through the
+//!      JSON-lines TCP protocol, interleaved with predict requests;
+//!   5. report the speedup vs naive retraining, the R-DaRE error delta, and
+//!      the service telemetry.
+//!
+//!     make artifacts && cargo run --release --offline --example end_to_end
+
+use dare::coordinator::{serve, Client, ServiceConfig, UnlearningService};
+use dare::data::registry::find;
+use dare::data::split::train_test;
+use dare::eval::adversary::Adversary;
+use dare::eval::speedup::{measure, SpeedupConfig};
+use dare::forest::{DareForest, Params};
+use dare::util::json::{parse, Value};
+use dare::util::timer::time;
+
+fn main() -> anyhow::Result<()> {
+    let scale = std::env::var("DARE_E2E_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100usize);
+    let info = find("bank_marketing").expect("corpus dataset");
+    let data = info.generate(scale, 7);
+    let (train, test) = train_test(&data, 0.8, 7);
+    let (_, test_ys, _) = test.to_row_major();
+    println!(
+        "== DaRE end-to-end: bank_marketing @ 1/{scale} scale ({} train / {} test, p={}) ==",
+        train.n_total(),
+        test.n_total(),
+        train.n_features()
+    );
+
+    // --- stage 1: models ---------------------------------------------------
+    let gdare = Params::gdare(&info.gini).with_threads(4);
+    let rdare = Params::rdare(&info.gini, 1).with_threads(4); // tol = 0.25%
+
+    // --- stage 2: deletion-efficiency measurement (paper Fig. 1 protocol) --
+    for (name, params) in [("G-DaRE", &gdare), ("R-DaRE(0.25%)", &rdare)] {
+        let r = measure(
+            &train,
+            &test,
+            params,
+            &SpeedupConfig {
+                adversary: Adversary::Random,
+                max_deletions: 300,
+                metric: info.metric,
+                seed: 3,
+            },
+        );
+        println!(
+            "{name}: naive retrain {:.2}s | {} deletions in {:.2}s ({:.1}ms each) | speedup {:.0}x{} | {}: {:.4} -> {:.4}",
+            r.naive_seconds,
+            r.n_deleted,
+            r.delete_seconds,
+            1000.0 * r.mean_delete_seconds,
+            r.speedup,
+            if r.extrapolated { " (extrapolated)" } else { "" },
+            info.metric.name(),
+            r.metric_before,
+            r.metric_after,
+        );
+    }
+
+    // --- stage 3: serve through the coordinator -----------------------------
+    let (forest, fit_secs) = time(|| DareForest::fit(train.clone(), &gdare, 42));
+    println!("serving a fresh G-DaRE model (fit {fit_secs:.2}s)");
+    let svc = UnlearningService::new(forest, ServiceConfig::default());
+    println!("PJRT predictor active: {}", svc.pjrt_active());
+    let svc_for_server = std::sync::Arc::clone(&svc);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let server = std::thread::spawn(move || {
+        serve(svc_for_server, "127.0.0.1:0", 4, move |addr| {
+            tx.send(addr).unwrap();
+        })
+    });
+    let addr = rx.recv()?;
+    let mut client = Client::connect(addr)?;
+
+    // stream: delete 120 training instances in batches of 6, predicting the
+    // test head between batches and tracking the metric trajectory.
+    let victims: Vec<u32> = svc.forest().read().unwrap().live_ids().into_iter().take(120).collect();
+    let probe_rows: Vec<Vec<f32>> = test.live_ids().iter().take(64).map(|&i| test.row(i)).collect();
+    let probe_ys: Vec<u8> = test.live_ids().iter().take(64).map(|&i| test.y(i)).collect();
+    let mut curve: Vec<(usize, f64)> = Vec::new();
+    for (i, chunk) in victims.chunks(6).enumerate() {
+        let ids: Vec<String> = chunk.iter().map(|c| c.to_string()).collect();
+        let resp = client.call(&parse(&format!(r#"{{"op":"delete","ids":[{}]}}"#, ids.join(",")))?)
+            .map_err(|e| anyhow::anyhow!("delete failed: {e}"))?;
+        anyhow::ensure!(resp.get("ok").and_then(Value::as_bool) == Some(true));
+        if i % 5 == 0 {
+            let rows_json: Vec<String> = probe_rows
+                .iter()
+                .map(|r| format!("[{}]", r.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")))
+                .collect();
+            let resp = client.call(&parse(&format!(r#"{{"op":"predict","rows":[{}]}}"#, rows_json.join(",")))?)?;
+            let probs: Vec<f32> = resp
+                .get("probs")
+                .and_then(Value::as_arr)
+                .map(|a| a.iter().filter_map(Value::as_f64).map(|p| p as f32).collect())
+                .unwrap_or_default();
+            let acc = dare::metrics::accuracy(&probs, &probe_ys);
+            curve.push(((i + 1) * 6, acc));
+        }
+    }
+    println!("probe-accuracy curve over the deletion stream:");
+    for (deleted, acc) in &curve {
+        println!("  after {deleted:>4} deletions: probe acc {acc:.4}");
+    }
+
+    let stats = client.call(&parse(r#"{"op":"stats"}"#)?)?;
+    println!(
+        "service telemetry: {}",
+        stats.get("telemetry").map(Value::to_string).unwrap_or_default()
+    );
+    println!(
+        "live instances now: {}",
+        stats.get("n_alive").and_then(Value::as_u64).unwrap_or(0)
+    );
+    client.call(&parse(r#"{"op":"shutdown"}"#)?)?;
+    server.join().unwrap()?;
+
+    // --- stage 4: closing check against a scratch model --------------------
+    let reduced = {
+        let f = svc.forest().read().unwrap();
+        f.data().compacted()
+    };
+    let scratch = DareForest::fit(reduced, &gdare, 99);
+    let probs = scratch.predict_proba_dataset(&test);
+    let scratch_acc = info.metric.score(&probs, &test_ys);
+    let served = svc.forest().read().unwrap();
+    let probs = served.predict_proba_dataset(&test);
+    let served_acc = info.metric.score(&probs, &test_ys);
+    println!(
+        "final: unlearned-model {} = {served_acc:.4} vs scratch-retrained {} = {scratch_acc:.4} (Δ {:+.4})",
+        info.metric.name(),
+        info.metric.name(),
+        served_acc - scratch_acc
+    );
+    println!("== end-to-end complete ==");
+    Ok(())
+}

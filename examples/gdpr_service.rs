@@ -1,0 +1,100 @@
+//! GDPR deletion service demo: run the coordinator, then simulate a fleet
+//! of clients filing right-to-be-forgotten requests concurrently while
+//! others query predictions — the vLLM-router-style serving view of DaRE.
+//!
+//!     make artifacts && cargo run --release --offline --example gdpr_service
+
+use dare::coordinator::{serve, Client, ServiceConfig, UnlearningService};
+use dare::data::registry::find;
+use dare::forest::{DareForest, Params};
+use dare::util::json::{parse, Value};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let info = find("adult").expect("corpus dataset");
+    let data = info.generate(500, 3);
+    let params = Params::gdare(&info.gini).with_threads(4);
+    println!("training the served model ({} instances)...", data.n_total());
+    let forest = DareForest::fit(data, &params, 17);
+
+    let svc = UnlearningService::new(
+        forest,
+        ServiceConfig {
+            batch_window: Duration::from_millis(25), // group concurrent requests
+            ..Default::default()
+        },
+    );
+    println!("PJRT predictor active: {}", svc.pjrt_active());
+
+    let svc_srv = Arc::clone(&svc);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let server = std::thread::spawn(move || {
+        serve(svc_srv, "127.0.0.1:0", 8, move |a| {
+            tx.send(a).unwrap();
+        })
+    });
+    let addr = rx.recv()?;
+    println!("service up at {addr}");
+
+    // --- 6 deletion clients + 2 prediction clients, concurrently ------------
+    let mut handles = Vec::new();
+    for c in 0..6u32 {
+        handles.push(std::thread::spawn(move || -> anyhow::Result<(usize, usize)> {
+            let mut client = Client::connect(addr)?;
+            let mut deleted = 0;
+            let mut batched = 0;
+            for r in 0..10u32 {
+                let id = 100 + c * 40 + r;
+                let resp = client.call(&parse(&format!(r#"{{"op":"delete","ids":[{id}]}}"#)).unwrap())?;
+                if resp.get("ok").and_then(Value::as_bool) == Some(true) {
+                    deleted += resp.get("deleted").and_then(Value::as_u64).unwrap_or(0) as usize;
+                    if resp.get("batch_size").and_then(Value::as_u64).unwrap_or(1) > 1 {
+                        batched += 1;
+                    }
+                }
+            }
+            Ok((deleted, batched))
+        }));
+    }
+    let p = {
+        let f = svc.forest().read().unwrap();
+        f.data().n_features()
+    };
+    for _ in 0..2 {
+        handles.push(std::thread::spawn(move || -> anyhow::Result<(usize, usize)> {
+            let mut client = Client::connect(addr)?;
+            let row = vec!["0.0"; p].join(",");
+            let mut ok = 0;
+            for _ in 0..20 {
+                let resp = client.call(&parse(&format!(r#"{{"op":"predict","rows":[[{row}]]}}"#)).unwrap())?;
+                if resp.get("ok").and_then(Value::as_bool) == Some(true) {
+                    ok += 1;
+                }
+            }
+            Ok((ok, 0))
+        }));
+    }
+
+    let mut total_deleted = 0;
+    let mut total_batched = 0;
+    for h in handles {
+        let (a, b) = h.join().unwrap()?;
+        total_deleted += a;
+        total_batched += b;
+    }
+    println!("fleet done: {total_deleted} instances deleted; {total_batched} requests shared a batch");
+
+    let mut client = Client::connect(addr)?;
+    let stats = client.call(&parse(r#"{"op":"stats"}"#)?)?;
+    let tele = stats.get("telemetry").unwrap();
+    println!("telemetry snapshot:\n{}", tele.to_pretty());
+    println!(
+        "n_alive = {}",
+        stats.get("n_alive").and_then(Value::as_u64).unwrap_or(0)
+    );
+    client.call(&parse(r#"{"op":"shutdown"}"#)?)?;
+    server.join().unwrap()?;
+    println!("service stopped cleanly");
+    Ok(())
+}

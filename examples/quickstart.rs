@@ -1,0 +1,57 @@
+//! Quickstart: train a DaRE forest, unlearn some instances, verify the
+//! model stays accurate, save/load a snapshot.
+//!
+//!     cargo run --release --offline --example quickstart
+
+use dare::data::registry::find;
+use dare::data::split::train_test;
+use dare::forest::{serialize, DareForest, Params};
+use dare::util::timer::time;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A corpus dataset (1/200th of the paper's Surgical; see DESIGN.md §2).
+    let info = find("surgical").expect("corpus dataset");
+    let data = info.generate(200, 0);
+    let (train, test) = train_test(&data, 0.8, 0);
+    let (_, test_ys, _) = test.to_row_major();
+    println!(
+        "surgical @ 1/200 scale: {} train / {} test instances, {} attributes",
+        train.n_total(),
+        test.n_total(),
+        train.n_features()
+    );
+
+    // 2. Train G-DaRE with the paper's tuned hyperparameters (Table 6).
+    let params = Params::gdare(&info.gini).with_threads(4);
+    let (mut forest, secs) = time(|| DareForest::fit(train, &params, 42));
+    let probs = forest.predict_proba_dataset(&test);
+    let acc_before = info.metric.score(&probs, &test_ys);
+    println!("trained {} trees in {secs:.2}s; test acc = {acc_before:.4}", params.n_trees);
+
+    // 3. Exactly unlearn 50 training instances.
+    let victims: Vec<u32> = forest.live_ids().into_iter().take(50).collect();
+    let (_, del_secs) = time(|| {
+        for &id in &victims {
+            forest.delete(id).expect("live instance");
+        }
+    });
+    println!(
+        "unlearned {} instances in {del_secs:.3}s ({:.1}ms each)",
+        victims.len(),
+        1000.0 * del_secs / victims.len() as f64
+    );
+
+    // 4. The model is exactly what retraining on the reduced data gives.
+    let probs = forest.predict_proba_dataset(&test);
+    let acc_after = info.metric.score(&probs, &test_ys);
+    println!("test acc after unlearning = {acc_after:.4} (Δ {:+.4})", acc_after - acc_before);
+
+    // 5. Snapshot round-trip.
+    let path = std::env::temp_dir().join("dare_quickstart.json");
+    serialize::save(&forest, &path)?;
+    let loaded = serialize::load(&path)?;
+    assert_eq!(loaded.n_alive(), forest.n_alive());
+    println!("snapshot saved + reloaded: {} live instances", loaded.n_alive());
+    std::fs::remove_file(&path).ok();
+    Ok(())
+}

@@ -1,0 +1,110 @@
+"""AOT lowering: JAX -> stablehlo -> XlaComputation -> HLO *text*.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Artifacts written (plus artifacts/manifest.json describing shapes):
+  split_scores_gini.hlo.txt     — L1 Pallas kernel, Gini, flat batch
+  split_scores_entropy.hlo.txt  — L1 Pallas kernel, entropy, flat batch
+  forest_predict.hlo.txt        — L2 tensorized-forest inference graph
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.split_scores import BLOCK
+
+# Canonical artifact shapes — the Rust runtime pads to these (manifest.json
+# records them so Rust never hard-codes).
+SCORE_BATCH = 4 * BLOCK  # 8192 candidates per scorer call
+PRED_BATCH = 256  # examples per predictor call
+PRED_FEATURES = 64  # feature slots (pad columns with zeros)
+# Two predict variants: XLA-CPU gather cost scales with the padded tree
+# count, so small forests should not pay for 128 slots (§Perf).
+PRED_TREES = 128  # large variant (paper T <= 250; most entries <= 100)
+PRED_TREES_SMALL = 32  # small variant for <= 32-tree forests
+PRED_NODES = 4096  # node slots per tree
+PRED_DEPTH = 24  # traversal unroll bound (>= max_depth + random layers)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_scores(criterion: str) -> str:
+    fn = (
+        model.batch_split_scores_gini
+        if criterion == "gini"
+        else model.batch_split_scores_entropy
+    )
+    spec = jax.ShapeDtypeStruct((SCORE_BATCH,), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, spec, spec, spec)
+    return to_hlo_text(lowered)
+
+
+def lower_predict(trees: int = PRED_TREES) -> str:
+    fn = model.make_forest_predict(PRED_DEPTH)
+    x = jax.ShapeDtypeStruct((PRED_BATCH, PRED_FEATURES), jnp.float32)
+    ti = jax.ShapeDtypeStruct((trees, PRED_NODES), jnp.int32)
+    tf = jax.ShapeDtypeStruct((trees, PRED_NODES), jnp.float32)
+    lowered = jax.jit(fn).lower(x, ti, tf, ti, ti, tf)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    artifacts = {}
+
+    for crit in ("gini", "entropy"):
+        name = f"split_scores_{crit}.hlo.txt"
+        text = lower_scores(crit)
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        artifacts[f"split_scores_{crit}"] = {
+            "file": name,
+            "batch": SCORE_BATCH,
+            "block": BLOCK,
+            "inputs": ["n", "n_pos", "n_left", "n_left_pos"],
+        }
+        print(f"wrote {name} ({len(text)} chars)")
+
+    for key, trees in (("forest_predict", PRED_TREES), ("forest_predict_small", PRED_TREES_SMALL)):
+        name = f"{key}.hlo.txt"
+        text = lower_predict(trees)
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        artifacts[key] = {
+            "file": name,
+            "batch": PRED_BATCH,
+            "features": PRED_FEATURES,
+            "trees": trees,
+            "nodes": PRED_NODES,
+            "depth": PRED_DEPTH,
+        }
+        print(f"wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"format": "dare-artifacts-v1", "artifacts": artifacts}, f, indent=2)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Pure-jnp oracle for the split-criterion kernels.
+
+This is the correctness reference (paper Eq. 2 / Eq. 3) that the Pallas
+kernel in `split_scores.py` is validated against at build time, and that the
+Rust scorer (`rust/src/forest/criterion.rs`, `rust/src/runtime/scorer.rs`)
+matches semantically.
+
+All inputs are float32 count arrays of one shape:
+  n          -- |D| at the node (broadcast per candidate)
+  n_pos      -- |D_{.,1}| at the node
+  n_left     -- |D_l| for the candidate threshold
+  n_left_pos -- |D_{l,1}| for the candidate threshold
+Outputs are float32 scores; lower is better. Empty branches contribute 0,
+matching the Rust implementation.
+"""
+
+import jax.numpy as jnp
+
+
+def _safe_div(a, b):
+    """a/b with 0 where b == 0."""
+    return jnp.where(b > 0, a / jnp.maximum(b, 1.0), 0.0)
+
+
+def gini_ref(n, n_pos, n_left, n_left_pos):
+    """Weighted Gini index of the binary split (paper Eq. 2)."""
+    n = n.astype(jnp.float32)
+    n_pos = n_pos.astype(jnp.float32)
+    n_left = n_left.astype(jnp.float32)
+    n_left_pos = n_left_pos.astype(jnp.float32)
+    n_right = n - n_left
+    n_right_pos = n_pos - n_left_pos
+
+    def side(nb, nb_pos):
+        p1 = _safe_div(nb_pos, nb)
+        imp = 1.0 - p1 * p1 - (1.0 - p1) * (1.0 - p1)
+        w = _safe_div(nb, n)
+        return jnp.where(nb > 0, w * imp, 0.0)
+
+    return side(n_left, n_left_pos) + side(n_right, n_right_pos)
+
+
+def entropy_ref(n, n_pos, n_left, n_left_pos):
+    """Weighted entropy of the binary split (paper Eq. 3)."""
+    n = n.astype(jnp.float32)
+    n_pos = n_pos.astype(jnp.float32)
+    n_left = n_left.astype(jnp.float32)
+    n_left_pos = n_left_pos.astype(jnp.float32)
+    n_right = n - n_left
+    n_right_pos = n_pos - n_left_pos
+
+    def h(p):
+        # -p log2 p - (1-p) log2 (1-p), with 0 at the endpoints
+        def term(q):
+            return jnp.where(
+                (q > 0.0) & (q < 1.0), -q * jnp.log2(jnp.clip(q, 1e-30, 1.0)), 0.0
+            )
+
+        return term(p) + term(1.0 - p)
+
+    def side(nb, nb_pos):
+        p1 = _safe_div(nb_pos, nb)
+        w = _safe_div(nb, n)
+        return jnp.where(nb > 0, w * h(p1), 0.0)
+
+    return side(n_left, n_left_pos) + side(n_right, n_right_pos)
+
+
+def forest_predict_ref(x, attr, thresh, left, right, value, n_real_trees):
+    """Reference batched forest inference via plain python traversal.
+
+    x:      (B, P) float32 features
+    attr:   (T, M) int32   split attribute per node (leaves: 0)
+    thresh: (T, M) float32 split threshold (leaves: 0)
+    left:   (T, M) int32   left-child index (leaves: self-loop)
+    right:  (T, M) int32   right-child index (leaves: self-loop)
+    value:  (T, M) float32 leaf value (internal nodes: 0, unused)
+    n_real_trees: padded trees are all-leaf value 0; the mean divides by the
+        real count.
+    Returns (B,) positive-class probabilities.
+
+    This python-loop version exists only as a test oracle; the L2 graph in
+    `model.py` is the vectorized/jitted implementation.
+    """
+    import numpy as np
+
+    x = np.asarray(x)
+    attr = np.asarray(attr)
+    thresh = np.asarray(thresh)
+    left = np.asarray(left)
+    right = np.asarray(right)
+    value = np.asarray(value)
+    B = x.shape[0]
+    T, _ = attr.shape
+    out = np.zeros(B, dtype=np.float32)
+    for b in range(B):
+        s = 0.0
+        for t in range(T):
+            idx = 0
+            # at most M steps; leaves self-loop so extra steps are no-ops
+            for _ in range(attr.shape[1]):
+                nxt = (
+                    left[t, idx]
+                    if x[b, attr[t, idx]] <= thresh[t, idx]
+                    else right[t, idx]
+                )
+                if nxt == idx:
+                    break
+                idx = nxt
+            s += value[t, idx]
+        out[b] = s / float(n_real_trees)
+    return out

@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: batched split-criterion scoring.
+
+The one dense hot-spot of DaRE training/deletion is scoring the cached
+(attribute x threshold) statistic tables with Gini (Eq. 2) or entropy
+(Eq. 3). On the paper's CPU implementation this is a scalar loop over
+p-tilde * k candidates per node; here it is re-thought for the TPU model
+(DESIGN.md section Hardware-Adaptation):
+
+  - the candidate table is laid out as a flat float32 vector of counts
+    (n, n_pos, n_left, n_left_pos), padded to a block multiple;
+  - the Pallas grid tiles the table into VMEM-resident blocks of
+    BLOCK candidates; each block is scored fully vectorized on the VPU
+    (no MXU needed: the kernel is elementwise);
+  - `interpret=True` is mandatory for CPU-PJRT execution (real TPU lowering
+    emits a Mosaic custom-call the CPU plugin cannot run).
+
+VMEM footprint per block: 4 inputs + 1 output = 5 * BLOCK * 4 bytes
+(= 40 KiB at BLOCK=2048), far under the ~16 MiB VMEM budget, leaving room
+for double-buffering the HBM->VMEM pipeline.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Candidates per grid block (VPU lane-friendly multiple of 128).
+BLOCK = 2048
+
+
+def _score_block(n, n_pos, n_left, n_left_pos, criterion):
+    """Vectorized criterion over one block of candidate counts."""
+    n_right = n - n_left
+    n_right_pos = n_pos - n_left_pos
+
+    def safe_div(a, b):
+        return jnp.where(b > 0, a / jnp.maximum(b, 1.0), 0.0)
+
+    if criterion == "gini":
+
+        def side(nb, nb_pos):
+            p1 = safe_div(nb_pos, nb)
+            imp = 1.0 - p1 * p1 - (1.0 - p1) * (1.0 - p1)
+            return jnp.where(nb > 0, safe_div(nb, n) * imp, 0.0)
+
+    elif criterion == "entropy":
+
+        def h(p):
+            def term(q):
+                return jnp.where(
+                    (q > 0.0) & (q < 1.0),
+                    -q * jnp.log2(jnp.clip(q, 1e-30, 1.0)),
+                    0.0,
+                )
+
+            return term(p) + term(1.0 - p)
+
+        def side(nb, nb_pos):
+            p1 = safe_div(nb_pos, nb)
+            return jnp.where(nb > 0, safe_div(nb, n) * h(p1), 0.0)
+
+    else:  # pragma: no cover - guarded by callers
+        raise ValueError(f"unknown criterion {criterion!r}")
+
+    return side(n_left, n_left_pos) + side(n_right, n_right_pos)
+
+
+def _kernel(n_ref, np_ref, nl_ref, nlp_ref, out_ref, *, criterion):
+    """Pallas kernel body: score one VMEM-resident block."""
+    out_ref[...] = _score_block(
+        n_ref[...], np_ref[...], nl_ref[...], nlp_ref[...], criterion
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("criterion",))
+def split_scores(n, n_pos, n_left, n_left_pos, criterion="gini"):
+    """Score a flat batch of split candidates with the Pallas kernel.
+
+    All four inputs are float32 arrays of the same 1-D shape whose length
+    must be a multiple of BLOCK (callers pad; padded entries are scored but
+    ignored downstream). Returns float32 scores of the same shape.
+    """
+    (total,) = n.shape
+    assert total % BLOCK == 0, f"pad candidate count to a multiple of {BLOCK}"
+    grid = (total // BLOCK,)
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_kernel, criterion=criterion),
+        out_shape=jax.ShapeDtypeStruct((total,), jnp.float32),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=spec,
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(
+        n.astype(jnp.float32),
+        n_pos.astype(jnp.float32),
+        n_left.astype(jnp.float32),
+        n_left_pos.astype(jnp.float32),
+    )
+
+
+def pad_to_block(arr, fill=0.0):
+    """Pad a 1-D array up to the next BLOCK multiple."""
+    import numpy as np
+
+    arr = np.asarray(arr, dtype=np.float32)
+    rem = (-len(arr)) % BLOCK
+    if rem == 0 and len(arr) > 0:
+        return arr
+    return np.concatenate([arr, np.full(max(rem, BLOCK if len(arr) == 0 else rem), fill, dtype=np.float32)])

@@ -1,0 +1,80 @@
+"""L2: the JAX compute graphs AOT-lowered for the Rust runtime.
+
+Two graphs, both jitted and exported as HLO text by `aot.py`:
+
+1. `batch_split_scores` — wraps the L1 Pallas kernel
+   (`kernels.split_scores`) so split-criterion scoring over cached
+   (attribute x threshold) statistics runs as one fused XLA computation.
+
+2. `forest_predict` — batched forest inference over a *tensorized* forest:
+   each tree is flattened (BFS order) into fixed-size node arrays
+   (attribute, threshold, left/right child, leaf value); traversal is a
+   gather-based loop unrolled to the padded node-array depth bound. Leaves
+   self-loop, so once a path reaches a leaf further steps are no-ops. Padded
+   trees are single leaves with value 0 and the caller divides by the real
+   tree count — the sum over padded trees is exact.
+
+Python never runs at request time: Rust loads the lowered HLO through PJRT
+(`rust/src/runtime/`).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.split_scores import split_scores
+
+
+def batch_split_scores_gini(n, n_pos, n_left, n_left_pos):
+    """Gini scores for a flat, BLOCK-padded candidate batch (L1 kernel)."""
+    return (split_scores(n, n_pos, n_left, n_left_pos, criterion="gini"),)
+
+
+def batch_split_scores_entropy(n, n_pos, n_left, n_left_pos):
+    """Entropy scores for a flat, BLOCK-padded candidate batch (L1 kernel)."""
+    return (split_scores(n, n_pos, n_left, n_left_pos, criterion="entropy"),)
+
+
+def forest_predict(x, attr, thresh, left, right, value, depth: int):
+    """Batched positive-class scores, summed over trees.
+
+    x:      (B, P) float32
+    attr:   (T, M) int32 — split attribute (leaves: 0)
+    thresh: (T, M) float32 — threshold (leaves: 0)
+    left:   (T, M) int32 — left-child node index (leaves: self)
+    right:  (T, M) int32 — right-child node index (leaves: self)
+    value:  (T, M) float32 — leaf value (internal: anything, unread)
+    depth:  static unroll bound (max tree depth)
+
+    Returns (B,) float32 = sum over trees of leaf values; the caller divides
+    by the live tree count (padded trees contribute 0).
+    """
+    B = x.shape[0]
+    T = attr.shape[0]
+
+    # idx[t, b] — current node of example b in tree t.
+    idx = jnp.zeros((T, B), dtype=jnp.int32)
+
+    def step(_, idx):
+        a = jnp.take_along_axis(attr, idx, axis=1)  # (T, B)
+        v = jnp.take_along_axis(thresh, idx, axis=1)  # (T, B)
+        # feature values per (tree, example): x[b, a[t,b]] as a 2-D gather —
+        # NOT a (T, B, P) broadcast, which would materialize T copies of the
+        # feature batch per step (§Perf: 49 ms → ~5 ms per 256-row batch).
+        xa = jnp.take_along_axis(x, a.T, axis=1).T  # (T, B)
+        go_left = xa <= v
+        l = jnp.take_along_axis(left, idx, axis=1)
+        r = jnp.take_along_axis(right, idx, axis=1)
+        return jnp.where(go_left, l, r)
+
+    idx = jax.lax.fori_loop(0, depth, step, idx)
+    leaf_vals = jnp.take_along_axis(value, idx, axis=1)  # (T, B)
+    return (jnp.sum(leaf_vals, axis=0),)
+
+
+def make_forest_predict(depth: int):
+    """Bind the static unroll depth for lowering."""
+
+    def fn(x, attr, thresh, left, right, value):
+        return forest_predict(x, attr, thresh, left, right, value, depth)
+
+    return fn

@@ -1,0 +1,133 @@
+"""L1 kernel correctness: Pallas split_scores vs the pure-jnp oracle.
+
+The hypothesis sweep drives random count tables (including the tie-heavy and
+empty-branch edge cases) through both implementations and requires exact
+float32 agreement patterns (allclose at 1e-6).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.ref import entropy_ref, gini_ref
+from compile.kernels.split_scores import BLOCK, pad_to_block, split_scores
+
+
+def random_counts(rng, total):
+    """Valid count tables: n >= n_left, n_pos >= n_left_pos, etc."""
+    n = rng.integers(1, 1000, size=total).astype(np.float32)
+    n_pos = (rng.random(total) * n).astype(np.int64).astype(np.float32)
+    n_left = (rng.random(total) * n).astype(np.int64).astype(np.float32)
+    # n_left_pos <= min(n_left, n_pos) and n_right_pos >= 0:
+    lo = np.maximum(0, n_pos - (n - n_left))
+    hi = np.minimum(n_left, n_pos)
+    n_left_pos = (lo + rng.random(total) * (hi - lo)).astype(np.int64).astype(np.float32)
+    return n, n_pos, n_left, n_left_pos
+
+
+@pytest.mark.parametrize("criterion", ["gini", "entropy"])
+def test_kernel_matches_ref_basic(criterion):
+    rng = np.random.default_rng(0)
+    n, n_pos, n_left, n_left_pos = random_counts(rng, BLOCK)
+    got = split_scores(
+        jnp.array(n), jnp.array(n_pos), jnp.array(n_left), jnp.array(n_left_pos),
+        criterion=criterion,
+    )
+    ref_fn = gini_ref if criterion == "gini" else entropy_ref
+    want = ref_fn(jnp.array(n), jnp.array(n_pos), jnp.array(n_left), jnp.array(n_left_pos))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+@pytest.mark.parametrize("criterion", ["gini", "entropy"])
+@pytest.mark.parametrize("blocks", [1, 2, 4])
+def test_kernel_grid_tiling(criterion, blocks):
+    """Multi-block grids must score identically to one concatenated ref call."""
+    rng = np.random.default_rng(blocks)
+    n, n_pos, n_left, n_left_pos = random_counts(rng, blocks * BLOCK)
+    got = split_scores(
+        jnp.array(n), jnp.array(n_pos), jnp.array(n_left), jnp.array(n_left_pos),
+        criterion=criterion,
+    )
+    ref_fn = gini_ref if criterion == "gini" else entropy_ref
+    want = ref_fn(jnp.array(n), jnp.array(n_pos), jnp.array(n_left), jnp.array(n_left_pos))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    criterion=st.sampled_from(["gini", "entropy"]),
+)
+def test_kernel_matches_ref_hypothesis(seed, criterion):
+    rng = np.random.default_rng(seed)
+    n, n_pos, n_left, n_left_pos = random_counts(rng, BLOCK)
+    got = split_scores(
+        jnp.array(n), jnp.array(n_pos), jnp.array(n_left), jnp.array(n_left_pos),
+        criterion=criterion,
+    )
+    ref_fn = gini_ref if criterion == "gini" else entropy_ref
+    want = ref_fn(jnp.array(n), jnp.array(n_pos), jnp.array(n_left), jnp.array(n_left_pos))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+@pytest.mark.parametrize("criterion", ["gini", "entropy"])
+def test_edge_cases(criterion):
+    """Pure splits score 0; empty branches don't NaN; useless splits max out."""
+    n = np.full(BLOCK, 8.0, dtype=np.float32)
+    n_pos = np.full(BLOCK, 4.0, dtype=np.float32)
+    # candidate 0: perfect split (left = all pos)
+    n_left = np.full(BLOCK, 4.0, dtype=np.float32)
+    n_left_pos = np.zeros(BLOCK, dtype=np.float32)
+    n_left_pos[0] = 4.0
+    # candidate 1: empty left branch
+    n_left[1] = 0.0
+    n_left_pos[1] = 0.0
+    # candidate 2: useless split (both sides 50/50)
+    n_left[2] = 4.0
+    n_left_pos[2] = 2.0
+    got = np.asarray(
+        split_scores(
+            jnp.array(n), jnp.array(n_pos), jnp.array(n_left), jnp.array(n_left_pos),
+            criterion=criterion,
+        )
+    )
+    assert got[0] == pytest.approx(0.0, abs=1e-6), "perfect split"
+    assert np.isfinite(got[1]), "empty branch must not NaN"
+    expected_max = 0.5 if criterion == "gini" else 1.0
+    assert got[2] == pytest.approx(expected_max, abs=1e-6), "useless split"
+    assert np.all(np.isfinite(got))
+
+
+def test_scores_match_rust_reference_values():
+    """Pin the exact values the Rust unit tests assert
+    (rust/src/forest/criterion.rs) so all three implementations agree."""
+    n = pad_to_block([10.0])
+    n_pos = pad_to_block([4.0])
+    n_left = pad_to_block([6.0])
+    n_left_pos = pad_to_block([1.0])
+    gini = np.asarray(
+        split_scores(jnp.array(n), jnp.array(n_pos), jnp.array(n_left), jnp.array(n_left_pos))
+    )[0]
+    expect = 0.6 * (10.0 / 36.0) + 0.4 * (6.0 / 16.0)
+    assert gini == pytest.approx(expect, abs=1e-6)
+
+    # entropy pin: n=8, pos=2, left=4 with 2 pos -> 0.5
+    e = np.asarray(
+        split_scores(
+            jnp.array(pad_to_block([8.0])),
+            jnp.array(pad_to_block([2.0])),
+            jnp.array(pad_to_block([4.0])),
+            jnp.array(pad_to_block([2.0])),
+            criterion="entropy",
+        )
+    )[0]
+    assert e == pytest.approx(0.5, abs=1e-6)
+
+
+def test_pad_to_block():
+    assert len(pad_to_block([1.0, 2.0])) == BLOCK
+    assert len(pad_to_block([0.0] * BLOCK)) == BLOCK
+    assert len(pad_to_block([0.0] * (BLOCK + 1))) == 2 * BLOCK
+    assert len(pad_to_block([])) == BLOCK

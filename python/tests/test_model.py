@@ -1,0 +1,126 @@
+"""L2 graph correctness: vectorized forest_predict vs the python-loop oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.ref import forest_predict_ref
+from compile.model import forest_predict
+
+
+def random_forest_arrays(rng, n_trees, max_nodes, n_features, depth):
+    """Generate random, structurally valid tensorized trees.
+
+    Builds each tree top-down; node 0 is the root. Internal nodes get two
+    children while the node budget lasts; leaves self-loop with a random
+    value in [0, 1].
+    """
+    T, M = n_trees, max_nodes
+    attr = np.zeros((T, M), dtype=np.int32)
+    thresh = np.zeros((T, M), dtype=np.float32)
+    left = np.tile(np.arange(M, dtype=np.int32), (T, 1))
+    right = left.copy()
+    value = rng.random((T, M)).astype(np.float32)
+
+    for t in range(T):
+        next_free = 1
+        frontier = [(0, 0)]  # (node, depth)
+        while frontier:
+            node, d = frontier.pop()
+            if d >= depth or next_free + 1 >= M or rng.random() < 0.3:
+                continue  # leaf: self-loop already set
+            attr[t, node] = rng.integers(0, n_features)
+            thresh[t, node] = rng.normal()
+            left[t, node] = next_free
+            right[t, node] = next_free + 1
+            frontier.append((next_free, d + 1))
+            frontier.append((next_free + 1, d + 1))
+            next_free += 2
+    return attr, thresh, left, right, value
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_predict_matches_reference(seed):
+    rng = np.random.default_rng(seed)
+    T, M, P, D, B = 4, 64, 6, 5, 16
+    attr, thresh, left, right, value = random_forest_arrays(rng, T, M, P, D)
+    x = rng.normal(size=(B, P)).astype(np.float32)
+    (got,) = forest_predict(
+        jnp.array(x), jnp.array(attr), jnp.array(thresh),
+        jnp.array(left), jnp.array(right), jnp.array(value), depth=M,
+    )
+    got = np.asarray(got) / T
+    want = forest_predict_ref(x, attr, thresh, left, right, value, T)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_predict_matches_reference_hypothesis(seed):
+    rng = np.random.default_rng(seed)
+    T = int(rng.integers(1, 6))
+    P = int(rng.integers(1, 8))
+    D = int(rng.integers(1, 6))
+    B = int(rng.integers(1, 24))
+    M = 64
+    attr, thresh, left, right, value = random_forest_arrays(rng, T, M, P, D)
+    x = rng.normal(size=(B, P)).astype(np.float32)
+    (got,) = forest_predict(
+        jnp.array(x), jnp.array(attr), jnp.array(thresh),
+        jnp.array(left), jnp.array(right), jnp.array(value), depth=D + 2,
+    )
+    got = np.asarray(got) / T
+    want = forest_predict_ref(x, attr, thresh, left, right, value, T)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_padded_trees_contribute_zero():
+    """Padding trees as value-0 single leaves must not change the sum."""
+    rng = np.random.default_rng(7)
+    T, M, P, D, B = 3, 32, 4, 4, 8
+    attr, thresh, left, right, value = random_forest_arrays(rng, T, M, P, D)
+    x = rng.normal(size=(B, P)).astype(np.float32)
+
+    def pad(arrs, extra):
+        attr, thresh, left, right, value = arrs
+        T0, M0 = attr.shape
+        za = np.zeros((extra, M0), dtype=attr.dtype)
+        zf = np.zeros((extra, M0), dtype=np.float32)
+        sl = np.tile(np.arange(M0, dtype=np.int32), (extra, 1))
+        return (
+            np.vstack([attr, za]),
+            np.vstack([thresh, zf]),
+            np.vstack([left, sl]),
+            np.vstack([right, sl]),
+            np.vstack([value, zf]),
+        )
+
+    (base,) = forest_predict(
+        jnp.array(x), jnp.array(attr), jnp.array(thresh),
+        jnp.array(left), jnp.array(right), jnp.array(value), depth=D + 1,
+    )
+    pa, pt, pl_, pr, pv = pad((attr, thresh, left, right, value), 5)
+    (padded,) = forest_predict(
+        jnp.array(x), jnp.array(pa), jnp.array(pt),
+        jnp.array(pl_), jnp.array(pr), jnp.array(pv), depth=D + 1,
+    )
+    np.testing.assert_allclose(np.asarray(base), np.asarray(padded), atol=1e-6)
+
+
+def test_single_leaf_forest():
+    """A forest of bare leaves predicts the leaf values regardless of x."""
+    T, M, P, B = 2, 8, 3, 5
+    attr = np.zeros((T, M), dtype=np.int32)
+    thresh = np.zeros((T, M), dtype=np.float32)
+    idx = np.tile(np.arange(M, dtype=np.int32), (T, 1))
+    value = np.zeros((T, M), dtype=np.float32)
+    value[0, 0] = 1.0
+    value[1, 0] = 0.5
+    x = np.random.default_rng(0).normal(size=(B, P)).astype(np.float32)
+    (got,) = forest_predict(
+        jnp.array(x), jnp.array(attr), jnp.array(thresh),
+        jnp.array(idx), jnp.array(idx), jnp.array(value), depth=4,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.full(B, 1.5), atol=1e-6)

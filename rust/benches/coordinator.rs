@@ -1,0 +1,101 @@
+//! Bench: coordinator service throughput — predict QPS, deletion latency
+//! through the batcher, and batched vs unbatched deletion streams (§A.7).
+
+use dare::bench::{BenchConfig, Suite};
+use dare::coordinator::{ServiceConfig, UnlearningService};
+use dare::data::synth::{generate, SynthSpec};
+use dare::forest::{DareForest, Params};
+use dare::util::json::parse;
+use std::time::Duration;
+
+fn fresh_service(n: usize) -> std::sync::Arc<UnlearningService> {
+    let data = generate(
+        &SynthSpec {
+            n,
+            informative: 4,
+            redundant: 2,
+            noise: 6,
+            flip: 0.05,
+            ..Default::default()
+        },
+        4,
+    );
+    let forest = DareForest::fit(
+        data,
+        &Params {
+            n_trees: 10,
+            max_depth: 10,
+            k: 10,
+            n_threads: 4,
+            ..Default::default()
+        },
+        8,
+    );
+    UnlearningService::new(
+        forest,
+        ServiceConfig {
+            batch_window: Duration::from_millis(2),
+            use_pjrt: false,
+            ..Default::default()
+        },
+    )
+}
+
+fn main() {
+    let mut suite = Suite::new("coordinator");
+    let quick = BenchConfig {
+        target_seconds: 2.0,
+        ..Default::default()
+    };
+
+    let svc = fresh_service(4000);
+    let p = svc.forest().read().unwrap().data().n_features();
+    let row = vec!["0.25"; p].join(",");
+    let predict_req = parse(&format!(r#"{{"op":"predict","rows":[[{row}]]}}"#)).unwrap();
+    suite.run("predict request (native engine)", quick, || {
+        let r = svc.handle(&predict_req);
+        std::hint::black_box(r.get("ok"));
+    });
+
+    let stats_req = parse(r#"{"op":"stats"}"#).unwrap();
+    suite.run("stats request", quick, || {
+        std::hint::black_box(svc.handle(&stats_req).get("ok"));
+    });
+
+    // deletion through the batcher (single-id requests)
+    let mut next_id = 0u32;
+    suite.run(
+        "delete request through batcher",
+        BenchConfig {
+            target_seconds: 2.0,
+            max_iters: 600,
+            ..Default::default()
+        },
+        || {
+            let req = parse(&format!(r#"{{"op":"delete","ids":[{next_id}]}}"#)).unwrap();
+            std::hint::black_box(svc.handle(&req).get("ok"));
+            next_id += 1;
+        },
+    );
+
+    // §A.7: one batch of 64 vs 64 singles
+    let svc_batch = fresh_service(4000);
+    let mut base = 0u32;
+    suite.run(
+        "delete batch of 64 (one request)",
+        BenchConfig {
+            target_seconds: 3.0,
+            min_iters: 5,
+            max_iters: 30,
+            warmup_iters: 1,
+        },
+        || {
+            let ids: Vec<String> = (base..base + 64).map(|i| i.to_string()).collect();
+            let req = parse(&format!(r#"{{"op":"delete","ids":[{}]}}"#, ids.join(","))).unwrap();
+            std::hint::black_box(svc_batch.handle(&req).get("ok"));
+            base += 64;
+        },
+    );
+
+    suite.save_json().ok();
+}

@@ -1,0 +1,93 @@
+//! Bench: Figure 1 / Table 2 — end-to-end deletion efficiency on a
+//! representative slice of the corpus, plus per-deletion latency micro-bench.
+//!
+//! Env knobs: DARE_BENCH_SCALE (default 2000), DARE_BENCH_DATASETS
+//! (comma list, default ctr,twitter,credit_card), DARE_BENCH_CRITERION.
+
+use dare::bench::{BenchConfig, Suite};
+use dare::eval::adversary::Adversary;
+use dare::exp::common::ExpConfig;
+use dare::exp::{fig1, table2};
+use dare::forest::DareForest;
+use dare::util::rng::Rng;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let scale = env_usize("DARE_BENCH_SCALE", 2000);
+    let datasets: Vec<String> = std::env::var("DARE_BENCH_DATASETS")
+        .unwrap_or_else(|_| "ctr,twitter,credit_card".into())
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let criterion = std::env::var("DARE_BENCH_CRITERION")
+        .unwrap_or_else(|_| "gini".into())
+        .parse()
+        .unwrap_or(dare::forest::SplitCriterion::Gini);
+
+    // ---- micro: single-deletion latency ---------------------------------
+    let mut suite = Suite::new("fig1 deletion");
+    let info = dare::data::registry::find(&datasets[0]).expect("dataset");
+    let (train, _) = ExpConfig {
+        scale_div: scale,
+        ..Default::default()
+    }
+    .prepare(&info, 0);
+    let params = dare::forest::Params::gdare(&info.gini);
+    let base = DareForest::fit(train, &params, 1);
+    let mut rng = Rng::new(2);
+    let mut forest = base.clone();
+    suite.run(
+        &format!("delete one instance [{}]", info.name),
+        BenchConfig {
+            target_seconds: 2.0,
+            max_iters: 400,
+            ..Default::default()
+        },
+        || {
+            if forest.n_alive() < 16 {
+                forest = base.clone();
+            }
+            let live = forest.live_ids();
+            let id = live[rng.index(live.len())];
+            forest.delete_seq(id).unwrap();
+        },
+    );
+    let mut forest2 = base.clone();
+    suite.run(
+        &format!("delete worst-of-50 instance [{}]", info.name),
+        BenchConfig {
+            target_seconds: 2.0,
+            max_iters: 200,
+            ..Default::default()
+        },
+        || {
+            if forest2.n_alive() < 64 {
+                forest2 = base.clone();
+            }
+            let id = Adversary::WorstOf(50)
+                .next_target(&forest2, &mut rng)
+                .unwrap();
+            forest2.delete_seq(id).unwrap();
+        },
+    );
+    suite.save_json().ok();
+
+    // ---- end-to-end: the paper's speedup grid on the selected slice -------
+    let cfg = ExpConfig {
+        scale_div: scale,
+        repeats: 1,
+        max_deletions: 100,
+        worst_of: 50,
+        datasets,
+        criterion,
+        out_dir: "results".into(),
+        ..Default::default()
+    };
+    let r = fig1::run(&cfg).expect("fig1");
+    println!("{}", fig1::render(&r));
+    let rows = table2::summarize(&r);
+    println!("{}", table2::render(&rows, cfg.criterion_tag()));
+}

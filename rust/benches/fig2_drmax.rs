@@ -1,0 +1,25 @@
+//! Bench: Figure 2 — d_rmax sweep (deletion efficiency / predictive perf /
+//! retrain-depth histogram) on Bank Marketing (paper's headline dataset).
+
+use dare::exp::common::ExpConfig;
+use dare::exp::fig2;
+
+fn main() {
+    let scale = std::env::var("DARE_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000usize);
+    let dataset =
+        std::env::var("DARE_BENCH_DATASET").unwrap_or_else(|_| "bank_marketing".into());
+    let cfg = ExpConfig {
+        scale_div: scale,
+        repeats: 1,
+        max_deletions: 60,
+        worst_of: 30,
+        max_trees: 25,
+        out_dir: "results".into(),
+        ..Default::default()
+    };
+    let r = fig2::run(&cfg, &dataset).expect("fig2");
+    println!("{}", fig2::render(&r));
+}

@@ -1,0 +1,23 @@
+//! Bench: Figure 3 — k sweep (predictive performance vs deletion
+//! efficiency) on Surgical (paper's headline dataset for this figure).
+
+use dare::exp::common::ExpConfig;
+use dare::exp::fig3;
+
+fn main() {
+    let scale = std::env::var("DARE_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200usize);
+    let dataset = std::env::var("DARE_BENCH_DATASET").unwrap_or_else(|_| "surgical".into());
+    let cfg = ExpConfig {
+        scale_div: scale,
+        repeats: 1,
+        max_deletions: 60,
+        max_trees: 25,
+        out_dir: "results".into(),
+        ..Default::default()
+    };
+    let r = fig3::run(&cfg, &dataset, &[1, 5, 10, 25, 50, 100]).expect("fig3");
+    println!("{}", fig3::render(&r));
+}

@@ -1,0 +1,119 @@
+//! Bench: L3 hot paths — split-criterion scoring, threshold enumeration,
+//! node training, single-tree deletion, prediction. The profiling anchors
+//! for EXPERIMENTS.md §Perf.
+
+use dare::bench::{BenchConfig, Suite};
+use dare::data::synth::{generate, SynthSpec};
+use dare::forest::criterion::{entropy, gini};
+use dare::forest::stats::enumerate_valid;
+use dare::forest::tree::DareTree;
+use dare::forest::Params;
+use dare::util::rng::Rng;
+
+fn main() {
+    let mut suite = Suite::new("hot paths");
+    let quick = BenchConfig {
+        target_seconds: 1.5,
+        ..Default::default()
+    };
+
+    // --- criterion scoring (the L1 kernel's native twin) -------------------
+    let mut rng = Rng::new(1);
+    let counts: Vec<(u32, u32, u32, u32)> = (0..8192)
+        .map(|_| {
+            let n = 2 + rng.index(100_000) as u32;
+            let np = rng.index(n as usize) as u32;
+            let nl = 1 + rng.index(n as usize - 1) as u32;
+            let nlp = np.min(nl);
+            (n, np, nl, nlp)
+        })
+        .collect();
+    suite.run("gini x8192 (native)", quick, || {
+        let mut acc = 0.0;
+        for &(n, np, nl, nlp) in &counts {
+            acc += gini(n, np, nl, nlp);
+        }
+        std::hint::black_box(acc);
+    });
+    suite.run("entropy x8192 (native)", quick, || {
+        let mut acc = 0.0;
+        for &(n, np, nl, nlp) in &counts {
+            acc += entropy(n, np, nl, nlp);
+        }
+        std::hint::black_box(acc);
+    });
+
+    // --- valid-threshold enumeration (the training/resampling inner loop) --
+    let mut pairs: Vec<(f32, u8)> = (0..4096)
+        .map(|_| (rng.range_f32(-10.0, 10.0), rng.bernoulli(0.4) as u8))
+        .collect();
+    suite.run("enumerate_valid n=4096", quick, || {
+        let mut p = pairs.clone();
+        std::hint::black_box(enumerate_valid(&mut p).len());
+    });
+    pairs.truncate(256);
+    suite.run("enumerate_valid n=256", quick, || {
+        let mut p = pairs.clone();
+        std::hint::black_box(enumerate_valid(&mut p).len());
+    });
+
+    // --- single-tree operations -------------------------------------------
+    let data = generate(
+        &SynthSpec {
+            n: 4000,
+            informative: 5,
+            redundant: 3,
+            noise: 8,
+            flip: 0.05,
+            ..Default::default()
+        },
+        3,
+    );
+    let params = Params {
+        n_trees: 1,
+        max_depth: 12,
+        k: 10,
+        ..Default::default()
+    };
+    suite.run("DareTree::fit n=4000 p=16 d=12", BenchConfig {
+        target_seconds: 3.0,
+        min_iters: 5,
+        max_iters: 50,
+        warmup_iters: 1,
+    }, || {
+        std::hint::black_box(DareTree::fit(&data, &params, 7).shape());
+    });
+
+    let tree = DareTree::fit(&data, &params, 7);
+    let rows: Vec<Vec<f32>> = (0..256).map(|i| data.row(i)).collect();
+    suite.run("DareTree::predict x256", quick, || {
+        let mut acc = 0.0f32;
+        for r in &rows {
+            acc += tree.predict(r);
+        }
+        std::hint::black_box(acc);
+    });
+
+    let mut del_data = data.clone();
+    let mut del_tree = tree.clone();
+    let mut i = 0u32;
+    suite.run("DareTree::delete (sequential ids)", BenchConfig {
+        target_seconds: 2.0,
+        max_iters: 2000,
+        ..Default::default()
+    }, || {
+        if del_data.n_alive() < 256 {
+            del_data = data.clone();
+            del_tree = tree.clone();
+            i = 0;
+        }
+        while !del_data.is_alive(i) {
+            i += 1;
+        }
+        del_tree.delete(&del_data, &params, i);
+        del_data.mark_removed(i);
+        i += 1;
+    });
+
+    suite.save_json().ok();
+}

@@ -1,0 +1,98 @@
+//! Bench: the PJRT runtime — L1 kernel scoring and L2 batched prediction,
+//! against their native fallbacks. Requires `make artifacts`.
+
+use dare::bench::{BenchConfig, Suite};
+use dare::data::synth::{generate, SynthSpec};
+use dare::forest::{DareForest, Params, SplitCriterion};
+use dare::runtime::scorer::{score_native, Counts, PjrtScorer};
+use dare::runtime::{Engine, Manifest, PjrtPredictor};
+use dare::util::rng::Rng;
+
+fn main() {
+    let Some(dir) = dare::runtime::manifest::locate_artifacts() else {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return;
+    };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let engine = Engine::global().expect("pjrt engine");
+    let mut suite = Suite::new("runtime pjrt");
+    let quick = BenchConfig {
+        target_seconds: 2.0,
+        ..Default::default()
+    };
+
+    // --- scoring: PJRT kernel vs native -------------------------------------
+    let mut rng = Rng::new(5);
+    let counts: Vec<Counts> = (0..manifest.score_gini.batch)
+        .map(|_| {
+            let n = 2 + rng.index(10_000) as u32;
+            let n_pos = rng.index(n as usize) as u32;
+            let n_left = 1 + rng.index(n as usize - 1) as u32;
+            Counts {
+                n,
+                n_pos,
+                n_left,
+                n_left_pos: n_pos.min(n_left),
+            }
+        })
+        .collect();
+    let scorer = PjrtScorer::new(engine, &manifest, SplitCriterion::Gini).expect("scorer");
+    suite.run(
+        &format!("split_scores pjrt batch={}", counts.len()),
+        quick,
+        || {
+            std::hint::black_box(scorer.score(&counts).unwrap().len());
+        },
+    );
+    suite.run(
+        &format!("split_scores native batch={}", counts.len()),
+        quick,
+        || {
+            std::hint::black_box(score_native(SplitCriterion::Gini, &counts).len());
+        },
+    );
+
+    // --- prediction: PJRT graph vs native traversal -------------------------
+    let data = generate(
+        &SynthSpec {
+            n: 2000,
+            informative: 5,
+            redundant: 3,
+            noise: 8,
+            flip: 0.05,
+            ..Default::default()
+        },
+        9,
+    );
+    let forest = DareForest::fit(
+        data.clone(),
+        &Params {
+            n_trees: manifest.predict.trees.min(16),
+            max_depth: 10,
+            k: 10,
+            n_threads: 4,
+            ..Default::default()
+        },
+        3,
+    );
+    let predictor = PjrtPredictor::new(engine, &manifest, &forest).expect("predictor");
+    let rows: Vec<Vec<f32>> = (0..manifest.predict.batch)
+        .map(|i| data.row(i as u32))
+        .collect();
+    suite.run(
+        &format!("forest_predict pjrt batch={}", rows.len()),
+        quick,
+        || {
+            std::hint::black_box(predictor.predict(&rows).unwrap().len());
+        },
+    );
+    suite.run(
+        &format!("forest_predict native batch={}", rows.len()),
+        quick,
+        || {
+            std::hint::black_box(forest.predict_proba_rows(&rows).len());
+        },
+    );
+
+    suite.save_json().ok();
+}

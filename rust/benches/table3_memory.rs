@@ -1,0 +1,19 @@
+//! Bench: Table 3 — memory breakdown across the corpus.
+
+use dare::exp::common::ExpConfig;
+use dare::exp::table3;
+
+fn main() {
+    let scale = std::env::var("DARE_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000usize);
+    let cfg = ExpConfig {
+        scale_div: scale,
+        max_trees: 25,
+        out_dir: "results".into(),
+        ..Default::default()
+    };
+    let r = table3::run(&cfg).expect("table3");
+    println!("{}", table3::render(&r));
+}

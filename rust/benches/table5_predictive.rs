@@ -1,0 +1,21 @@
+//! Bench: Table 5 — predictive performance of G-DaRE vs the baseline
+//! families across the corpus.
+
+use dare::exp::common::ExpConfig;
+use dare::exp::table5;
+
+fn main() {
+    let scale = std::env::var("DARE_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000usize);
+    let cfg = ExpConfig {
+        scale_div: scale,
+        repeats: 2,
+        max_trees: 25,
+        out_dir: "results".into(),
+        ..Default::default()
+    };
+    let r = table5::run(&cfg).expect("table5");
+    println!("{}", table5::render(&r));
+}

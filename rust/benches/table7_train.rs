@@ -1,0 +1,53 @@
+//! Bench: Table 7 — G-DaRE training time across the corpus; also compares
+//! DaRE training against the lean standard-RF baseline (Theorem 3.2: the
+//! statistics overhead should be a small constant factor).
+
+use dare::baselines::simple::{BaselineForest, BaselineParams};
+use dare::bench::{BenchConfig, Suite};
+use dare::exp::common::ExpConfig;
+use dare::exp::table7;
+use dare::forest::DareForest;
+
+fn main() {
+    let scale = std::env::var("DARE_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000usize);
+    let cfg = ExpConfig {
+        scale_div: scale,
+        repeats: 2,
+        max_trees: 25,
+        out_dir: "results".into(),
+        ..Default::default()
+    };
+    let r = table7::run(&cfg).expect("table7");
+    println!("{}", table7::render(&r));
+
+    // micro: DaRE vs lean-RF training cost on one dataset
+    let info = dare::data::registry::find("twitter").unwrap();
+    let (train, _) = cfg.prepare(&info, 0);
+    let pp = cfg.paper_params(&info);
+    let params = cfg.params(&pp, 0);
+    let mut suite = Suite::new("table7 train micro");
+    let bc = BenchConfig {
+        target_seconds: 3.0,
+        max_iters: 20,
+        min_iters: 5,
+        warmup_iters: 1,
+    };
+    suite.run("DaRE fit [twitter]", bc, || {
+        let f = DareForest::fit(train.clone(), &params, 1);
+        std::hint::black_box(f.n_trees());
+    });
+    let bp = BaselineParams {
+        n_trees: params.n_trees,
+        max_depth: params.max_depth,
+        n_threads: params.n_threads,
+        ..Default::default()
+    };
+    suite.run("lean standard-RF fit [twitter]", bc, || {
+        let f = BaselineForest::fit(&train, &bp, 1);
+        std::hint::black_box(f.n_trees());
+    });
+    suite.save_json().ok();
+}

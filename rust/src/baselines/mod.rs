@@ -1,0 +1,17 @@
+//! Baseline tree-ensemble learners for the paper's Table 5 comparison and
+//! the naive-retraining comparator:
+//!
+//! - [`BaselineKind::Standard`] — a standard greedy random forest à la
+//!   scikit-learn (exhaustive valid thresholds per sampled attribute),
+//!   with or without bootstrapping;
+//! - [`BaselineKind::ExtraTrees`] — Extra Trees (Geurts et al., 2006): one
+//!   uniformly-drawn threshold per sampled attribute, best kept;
+//! - [`BaselineKind::RandomTrees`] — extremely randomized trees: a single
+//!   uniformly-drawn attribute + threshold, no scoring at all.
+//!
+//! Baselines use a *lean* node representation (split + children only) so the
+//! Table-3 memory comparison against DaRE's stat-laden nodes is honest.
+
+pub mod simple;
+
+pub use simple::{BaselineForest, BaselineKind, BaselineParams};

@@ -1,0 +1,415 @@
+//! Lean baseline forests (see module docs in `baselines`).
+
+use crate::data::dataset::{Dataset, InstanceId};
+use crate::forest::criterion::split_score;
+use crate::forest::params::{MaxFeatures, SplitCriterion};
+use crate::forest::stats::enumerate_valid;
+use crate::util::rng::{mix_seed, Rng};
+use crate::util::threadpool::scope_map;
+
+/// Which baseline family to train.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BaselineKind {
+    /// Greedy RF over all valid thresholds of p̃ sampled attributes
+    /// (scikit-learn-style).
+    Standard,
+    /// Extra Trees: one random threshold per sampled attribute, scored.
+    ExtraTrees,
+    /// Extremely randomized: one random attribute, one random threshold.
+    RandomTrees,
+}
+
+impl std::str::FromStr for BaselineKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "standard" | "rf" | "sklearn" => Ok(BaselineKind::Standard),
+            "extra" | "extra_trees" | "extratrees" => Ok(BaselineKind::ExtraTrees),
+            "random" | "random_trees" | "randomtrees" => Ok(BaselineKind::RandomTrees),
+            _ => Err(format!("unknown baseline '{s}'")),
+        }
+    }
+}
+
+/// Baseline hyperparameters (subset of DaRE's [`crate::forest::Params`]).
+#[derive(Clone, Debug)]
+pub struct BaselineParams {
+    pub kind: BaselineKind,
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub max_features: MaxFeatures,
+    pub criterion: SplitCriterion,
+    pub bootstrap: bool,
+    pub min_samples_split: usize,
+    pub n_threads: usize,
+}
+
+impl Default for BaselineParams {
+    fn default() -> Self {
+        BaselineParams {
+            kind: BaselineKind::Standard,
+            n_trees: 100,
+            max_depth: 10,
+            max_features: MaxFeatures::Sqrt,
+            criterion: SplitCriterion::Gini,
+            bootstrap: false,
+            min_samples_split: 2,
+            n_threads: 1,
+        }
+    }
+}
+
+/// Lean tree node: split info or leaf value only (what a deployed
+/// scikit-learn forest stores — the Table-3 "SKLearn RF" column).
+#[derive(Clone, Debug)]
+pub enum SimpleNode {
+    Leaf {
+        value: f32,
+    },
+    Split {
+        attr: usize,
+        v: f32,
+        left: Box<SimpleNode>,
+        right: Box<SimpleNode>,
+    },
+}
+
+impl SimpleNode {
+    pub fn predict(&self, row: &[f32]) -> f32 {
+        let mut node = self;
+        loop {
+            match node {
+                SimpleNode::Leaf { value } => return *value,
+                SimpleNode::Split { attr, v, left, right } => {
+                    node = if row[*attr] <= *v { left } else { right };
+                }
+            }
+        }
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        use std::mem::size_of;
+        match self {
+            SimpleNode::Leaf { .. } => size_of::<f32>(),
+            SimpleNode::Split { left, right, .. } => {
+                size_of::<usize>()
+                    + size_of::<f32>()
+                    + 2 * size_of::<usize>()
+                    + left.memory_bytes()
+                    + right.memory_bytes()
+            }
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        match self {
+            SimpleNode::Leaf { .. } => 1,
+            SimpleNode::Split { left, right, .. } => 1 + left.node_count() + right.node_count(),
+        }
+    }
+}
+
+/// An ensemble of lean trees.
+#[derive(Clone, Debug)]
+pub struct BaselineForest {
+    pub params: BaselineParams,
+    trees: Vec<SimpleNode>,
+}
+
+impl BaselineForest {
+    pub fn fit(data: &Dataset, params: &BaselineParams, seed: u64) -> Self {
+        let seeds: Vec<u64> = (0..params.n_trees)
+            .map(|t| mix_seed(&[seed, t as u64, 0xBA5E]))
+            .collect();
+        let trees = scope_map(&seeds, params.n_threads, |_, &ts| {
+            let mut rng = Rng::new(ts);
+            let ids = if params.bootstrap {
+                let live = data.live_ids();
+                (0..live.len())
+                    .map(|_| live[rng.index(live.len())])
+                    .collect()
+            } else {
+                data.live_ids()
+            };
+            train(data, params, ids, 0, &mut rng)
+        });
+        BaselineForest {
+            params: params.clone(),
+            trees,
+        }
+    }
+
+    pub fn predict_proba(&self, row: &[f32]) -> f32 {
+        let s: f32 = self.trees.iter().map(|t| t.predict(row)).sum();
+        s / self.trees.len() as f32
+    }
+
+    pub fn predict_proba_dataset(&self, data: &Dataset) -> Vec<f32> {
+        data.live_ids()
+            .iter()
+            .map(|&i| self.predict_proba(&data.row(i)))
+            .collect()
+    }
+
+    /// Total model bytes (structure only — lean representation).
+    pub fn memory_bytes(&self) -> usize {
+        self.trees.iter().map(|t| t.memory_bytes()).sum()
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+fn leaf(data: &Dataset, ids: &[InstanceId]) -> SimpleNode {
+    let n = ids.len() as f32;
+    if n == 0.0 {
+        return SimpleNode::Leaf { value: 0.5 };
+    }
+    let pos: u32 = ids.iter().map(|&i| data.y(i) as u32).sum();
+    SimpleNode::Leaf {
+        value: pos as f32 / n,
+    }
+}
+
+fn train(
+    data: &Dataset,
+    params: &BaselineParams,
+    ids: Vec<InstanceId>,
+    depth: usize,
+    rng: &mut Rng,
+) -> SimpleNode {
+    let n = ids.len() as u32;
+    let n_pos: u32 = ids.iter().map(|&i| data.y(i) as u32).sum();
+    if n < params.min_samples_split as u32
+        || n_pos == 0
+        || n_pos == n
+        || depth >= params.max_depth
+    {
+        return leaf(data, &ids);
+    }
+    let p = data.n_features();
+    let p_tilde = params.max_features.resolve(p);
+
+    let chosen: Option<(usize, f32)> = match params.kind {
+        BaselineKind::Standard => {
+            // exhaustive valid thresholds over p̃ sampled attributes
+            let mut order: Vec<usize> = (0..p).collect();
+            rng.shuffle(&mut order);
+            let mut tried = 0usize;
+            let mut best: Option<(usize, f32, f64)> = None;
+            for attr in order {
+                if tried == p_tilde {
+                    break;
+                }
+                let mut pairs: Vec<(f32, u8)> =
+                    ids.iter().map(|&i| (data.x(i, attr), data.y(i))).collect();
+                let cands = enumerate_valid(&mut pairs);
+                if cands.is_empty() {
+                    continue;
+                }
+                tried += 1;
+                for t in cands {
+                    let s = split_score(params.criterion, n, n_pos, t.n_left, t.n_left_pos);
+                    match best {
+                        Some((_, _, bs)) if s >= bs => {}
+                        _ => best = Some((attr, t.v, s)),
+                    }
+                }
+            }
+            best.map(|(a, v, _)| (a, v))
+        }
+        BaselineKind::ExtraTrees => {
+            // one uniform threshold per sampled attribute, best kept
+            let mut order: Vec<usize> = (0..p).collect();
+            rng.shuffle(&mut order);
+            let mut tried = 0usize;
+            let mut best: Option<(usize, f32, f64)> = None;
+            for attr in order {
+                if tried == p_tilde {
+                    break;
+                }
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for &i in &ids {
+                    let x = data.x(i, attr);
+                    lo = lo.min(x);
+                    hi = hi.max(x);
+                }
+                if !(lo < hi) {
+                    continue;
+                }
+                tried += 1;
+                let v = rng.range_f32(lo, hi);
+                let mut n_l = 0u32;
+                let mut n_lp = 0u32;
+                for &i in &ids {
+                    if data.x(i, attr) <= v {
+                        n_l += 1;
+                        n_lp += data.y(i) as u32;
+                    }
+                }
+                if n_l == 0 || n_l == n {
+                    continue;
+                }
+                let s = split_score(params.criterion, n, n_pos, n_l, n_lp);
+                match best {
+                    Some((_, _, bs)) if s >= bs => {}
+                    _ => best = Some((attr, v, s)),
+                }
+            }
+            best.map(|(a, v, _)| (a, v))
+        }
+        BaselineKind::RandomTrees => {
+            // a single random attribute + threshold, unscored
+            let mut order: Vec<usize> = (0..p).collect();
+            rng.shuffle(&mut order);
+            let mut pick = None;
+            for attr in order {
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for &i in &ids {
+                    let x = data.x(i, attr);
+                    lo = lo.min(x);
+                    hi = hi.max(x);
+                }
+                if lo < hi {
+                    pick = Some((attr, rng.range_f32(lo, hi)));
+                    break;
+                }
+            }
+            pick
+        }
+    };
+
+    let Some((attr, v)) = chosen else {
+        return leaf(data, &ids);
+    };
+    let mut left_ids = Vec::new();
+    let mut right_ids = Vec::new();
+    for &i in &ids {
+        if data.x(i, attr) <= v {
+            left_ids.push(i);
+        } else {
+            right_ids.push(i);
+        }
+    }
+    if left_ids.is_empty() || right_ids.is_empty() {
+        return leaf(data, &ids);
+    }
+    let left = train(data, params, left_ids, depth + 1, rng);
+    let right = train(data, params, right_ids, depth + 1, rng);
+    SimpleNode::Split {
+        attr,
+        v,
+        left: Box::new(left),
+        right: Box::new(right),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::split::train_test;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::metrics::accuracy;
+
+    fn dataset() -> (Dataset, Dataset) {
+        let all = generate(
+            &SynthSpec {
+                n: 900,
+                informative: 4,
+                redundant: 2,
+                noise: 4,
+                flip: 0.05,
+                ..Default::default()
+            },
+            31,
+        );
+        train_test(&all, 0.67, 0)
+    }
+
+    fn acc_of(kind: BaselineKind, bootstrap: bool) -> f64 {
+        let (train_d, test_d) = dataset();
+        let params = BaselineParams {
+            kind,
+            n_trees: 20,
+            max_depth: 8,
+            bootstrap,
+            ..Default::default()
+        };
+        let f = BaselineForest::fit(&train_d, &params, 5);
+        let probs = f.predict_proba_dataset(&test_d);
+        let (_, ys, _) = test_d.to_row_major();
+        accuracy(&probs, &ys)
+    }
+
+    #[test]
+    fn standard_rf_learns() {
+        let acc = acc_of(BaselineKind::Standard, false);
+        assert!(acc > 0.75, "standard RF acc {acc}");
+    }
+
+    #[test]
+    fn bootstrap_comparable_to_plain() {
+        let plain = acc_of(BaselineKind::Standard, false);
+        let boot = acc_of(BaselineKind::Standard, true);
+        assert!((plain - boot).abs() < 0.08, "plain {plain} vs boot {boot}");
+    }
+
+    #[test]
+    fn family_ordering_matches_paper() {
+        // Table 5: RandomTrees ≤ ExtraTrees ≤ Standard (within tolerance)
+        let rt = acc_of(BaselineKind::RandomTrees, false);
+        let et = acc_of(BaselineKind::ExtraTrees, false);
+        let st = acc_of(BaselineKind::Standard, false);
+        assert!(rt > 0.5, "random trees beat chance: {rt}");
+        assert!(st >= et - 0.05, "standard {st} vs extra {et}");
+        assert!(et >= rt - 0.05, "extra {et} vs random {rt}");
+    }
+
+    #[test]
+    fn memory_is_lean() {
+        let (train_d, _) = dataset();
+        let params = BaselineParams {
+            n_trees: 5,
+            max_depth: 6,
+            ..Default::default()
+        };
+        let f = BaselineForest::fit(&train_d, &params, 1);
+        assert!(f.memory_bytes() > 0);
+        assert_eq!(f.n_trees(), 5);
+        // per-node cost is tiny: < 40 bytes per node
+        let nodes: usize = 5 * 2usize.pow(7); // generous upper bound
+        assert!(f.memory_bytes() < nodes * 40 * 4);
+    }
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!("rf".parse::<BaselineKind>().unwrap(), BaselineKind::Standard);
+        assert_eq!(
+            "extra_trees".parse::<BaselineKind>().unwrap(),
+            BaselineKind::ExtraTrees
+        );
+        assert!("zzz".parse::<BaselineKind>().is_err());
+    }
+
+    #[test]
+    fn degenerate_data_yields_leaf() {
+        let d = Dataset::from_rows(&[vec![1.0], vec![1.0]], vec![0, 1]);
+        for kind in [
+            BaselineKind::Standard,
+            BaselineKind::ExtraTrees,
+            BaselineKind::RandomTrees,
+        ] {
+            let f = BaselineForest::fit(
+                &d,
+                &BaselineParams {
+                    kind,
+                    n_trees: 2,
+                    ..Default::default()
+                },
+                3,
+            );
+            assert_eq!(f.predict_proba(&[1.0]), 0.5);
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Hand-rolled benchmark harness (no criterion in the offline image).
+//!
+//! `cargo bench` targets are built with `harness = false` and drive this
+//! module: warmup, timed iterations until a target duration or iteration
+//! cap, and mean/std/p50/p95 reporting in a criterion-like format. Suites
+//! can also dump JSON for the experiment index.
+
+use crate::util::stats::{mean, percentile, std_dev};
+use crate::util::timer::fmt_secs;
+use std::time::Instant;
+
+/// Config for one benchmark.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop once this much measurement time has accumulated.
+    pub target_seconds: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            target_seconds: 2.0,
+        }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            f64::INFINITY
+        }
+    }
+    pub fn render(&self) -> String {
+        format!(
+            "{:<44} time: [{} {} {}]  p95: {}  ({} iters)",
+            self.name,
+            fmt_secs(self.min_s),
+            fmt_secs(self.mean_s),
+            fmt_secs(self.p50_s),
+            fmt_secs(self.p95_s),
+            self.iters
+        )
+    }
+}
+
+/// Run one benchmark.
+pub fn bench<F: FnMut()>(name: &str, cfg: BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let started = Instant::now();
+    while samples.len() < cfg.min_iters
+        || (samples.len() < cfg.max_iters
+            && started.elapsed().as_secs_f64() < cfg.target_seconds)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let (min_s, _) = crate::util::stats::min_max(&samples);
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean(&samples),
+        std_s: std_dev(&samples),
+        p50_s: percentile(&samples, 50.0),
+        p95_s: percentile(&samples, 95.0),
+        min_s,
+    }
+}
+
+/// A collection of results with uniform reporting.
+#[derive(Default)]
+pub struct Suite {
+    pub title: String,
+    pub results: Vec<BenchResult>,
+}
+
+impl Suite {
+    pub fn new(title: &str) -> Suite {
+        println!("\n=== bench suite: {title} ===");
+        Suite {
+            title: title.to_string(),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn run<F: FnMut()>(&mut self, name: &str, cfg: BenchConfig, f: F) -> &BenchResult {
+        let r = bench(name, cfg, f);
+        println!("{}", r.render());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Write results to results/bench_<title>.json.
+    pub fn save_json(&self) -> anyhow::Result<std::path::PathBuf> {
+        use crate::util::json::Value;
+        std::fs::create_dir_all("results")?;
+        let mut arr = Vec::new();
+        for r in &self.results {
+            let mut o = Value::obj();
+            o.set("name", r.name.as_str())
+                .set("iters", r.iters)
+                .set("mean_s", r.mean_s)
+                .set("std_s", r.std_s)
+                .set("p50_s", r.p50_s)
+                .set("p95_s", r.p95_s)
+                .set("min_s", r.min_s);
+            arr.push(o);
+        }
+        let mut top = Value::obj();
+        top.set("suite", self.title.as_str())
+            .set("results", Value::Arr(arr));
+        let path = std::path::PathBuf::from(format!(
+            "results/bench_{}.json",
+            self.title.replace([' ', '/'], "_")
+        ));
+        std::fs::write(&path, top.to_pretty())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut count = 0usize;
+        let r = bench(
+            "noop",
+            BenchConfig {
+                warmup_iters: 1,
+                min_iters: 5,
+                max_iters: 8,
+                target_seconds: 0.01,
+            },
+            || {
+                count += 1;
+            },
+        );
+        assert!(r.iters >= 5 && r.iters <= 8);
+        assert_eq!(count, r.iters + 1); // + warmup
+        assert!(r.mean_s >= 0.0);
+        assert!(r.p95_s >= r.p50_s);
+        assert!(r.render().contains("noop"));
+    }
+
+    #[test]
+    fn suite_saves_json() {
+        let mut s = Suite::new("unit test");
+        s.run(
+            "sleepless",
+            BenchConfig {
+                warmup_iters: 0,
+                min_iters: 3,
+                max_iters: 3,
+                target_seconds: 0.001,
+            },
+            || {},
+        );
+        let path = s.save_json().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("sleepless"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn throughput_inverse_of_mean() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_s: 0.25,
+            std_s: 0.0,
+            p50_s: 0.25,
+            p95_s: 0.25,
+            min_s: 0.25,
+        };
+        assert_eq!(r.throughput_per_sec(), 4.0);
+    }
+}

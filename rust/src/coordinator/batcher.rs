@@ -1,0 +1,215 @@
+//! Deletion batcher: the coordinator's dynamic-batching stage.
+//!
+//! Deletions must serialize (they mutate the forest), but retraining a node
+//! at most once per *batch* (paper §A.7) makes grouped deletions cheaper
+//! than one-at-a-time processing. The batcher collects deletion requests
+//! that arrive within a short window (or up to a max batch size) and applies
+//! them under a single write lock.
+
+use crate::data::dataset::InstanceId;
+use crate::forest::forest::DareForest;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Outcome of one deletion request.
+#[derive(Clone, Debug)]
+pub struct DeleteOutcome {
+    pub requested: usize,
+    pub deleted: usize,
+    pub skipped: usize,
+    pub retrain_cost: u64,
+    /// Requests that shared this batch (including this one).
+    pub batch_size: usize,
+}
+
+struct Job {
+    ids: Vec<InstanceId>,
+    reply: Sender<DeleteOutcome>,
+}
+
+/// Handle for submitting deletion requests.
+pub struct DeletionBatcher {
+    tx: Sender<Job>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl DeletionBatcher {
+    /// Spawn the mutation thread. `window` bounds how long the first request
+    /// in a batch waits for company; `max_batch` bounds batch size.
+    pub fn start(
+        forest: Arc<RwLock<DareForest>>,
+        window: Duration,
+        max_batch: usize,
+    ) -> DeletionBatcher {
+        let (tx, rx) = channel::<Job>();
+        let worker = std::thread::Builder::new()
+            .name("dare-batcher".into())
+            .spawn(move || run_worker(forest, rx, window, max_batch))
+            .expect("spawn batcher");
+        DeletionBatcher {
+            tx,
+            worker: Some(worker),
+        }
+    }
+
+    /// Submit ids for deletion; blocks until the batch containing them has
+    /// been applied and returns this request's outcome.
+    pub fn delete(&self, ids: Vec<InstanceId>) -> anyhow::Result<DeleteOutcome> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Job {
+                ids,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow::anyhow!("batcher stopped"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("batcher dropped reply"))
+    }
+}
+
+impl Drop for DeletionBatcher {
+    fn drop(&mut self) {
+        // Closing the channel stops the worker after it drains.
+        let (tx, _) = channel();
+        let _ = std::mem::replace(&mut self.tx, tx);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn run_worker(
+    forest: Arc<RwLock<DareForest>>,
+    rx: Receiver<Job>,
+    window: Duration,
+    max_batch: usize,
+) {
+    loop {
+        // block for the first job
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => return,
+        };
+        let mut jobs = vec![first];
+        let mut total: usize = jobs[0].ids.len();
+        let deadline = Instant::now() + window;
+        // gather more jobs within the window / batch cap
+        while total < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => {
+                    total += j.ids.len();
+                    jobs.push(j);
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // apply the whole batch under one write lock
+        let batch_size = jobs.len();
+        let mut guard = forest.write().unwrap();
+        for job in jobs {
+            let requested = job.ids.len();
+            let (report, skipped) = guard.delete_batch(&job.ids);
+            let outcome = DeleteOutcome {
+                requested,
+                deleted: requested - skipped,
+                skipped,
+                retrain_cost: report.cost(),
+                batch_size,
+            };
+            let _ = job.reply.send(outcome);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::forest::params::Params;
+
+    fn forest(n: usize) -> Arc<RwLock<DareForest>> {
+        let d = generate(
+            &SynthSpec {
+                n,
+                informative: 3,
+                redundant: 0,
+                noise: 2,
+                flip: 0.05,
+                ..Default::default()
+            },
+            5,
+        );
+        Arc::new(RwLock::new(DareForest::fit(
+            d,
+            &Params {
+                n_trees: 3,
+                max_depth: 5,
+                k: 5,
+                ..Default::default()
+            },
+            9,
+        )))
+    }
+
+    #[test]
+    fn single_request_applies() {
+        let f = forest(150);
+        let b = DeletionBatcher::start(Arc::clone(&f), Duration::from_millis(5), 64);
+        let out = b.delete(vec![0, 1, 2]).unwrap();
+        assert_eq!(out.deleted, 3);
+        assert_eq!(out.skipped, 0);
+        assert_eq!(f.read().unwrap().n_alive(), 147);
+    }
+
+    #[test]
+    fn dead_ids_skipped() {
+        let f = forest(100);
+        let b = DeletionBatcher::start(Arc::clone(&f), Duration::from_millis(1), 64);
+        b.delete(vec![5]).unwrap();
+        let out = b.delete(vec![5, 6]).unwrap();
+        assert_eq!(out.deleted, 1);
+        assert_eq!(out.skipped, 1);
+    }
+
+    #[test]
+    fn concurrent_requests_batch_together() {
+        let f = forest(300);
+        let b = Arc::new(DeletionBatcher::start(
+            Arc::clone(&f),
+            Duration::from_millis(50),
+            1024,
+        ));
+        let mut handles = Vec::new();
+        for i in 0..8u32 {
+            let b = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || {
+                b.delete(vec![i * 10, i * 10 + 1]).unwrap()
+            }));
+        }
+        let outcomes: Vec<DeleteOutcome> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(outcomes.iter().map(|o| o.deleted).sum::<usize>(), 16);
+        assert_eq!(f.read().unwrap().n_alive(), 284);
+        // at least some requests should have shared a batch
+        assert!(
+            outcomes.iter().any(|o| o.batch_size > 1),
+            "window should group concurrent requests"
+        );
+    }
+
+    #[test]
+    fn drop_stops_worker() {
+        let f = forest(50);
+        let b = DeletionBatcher::start(f, Duration::from_millis(1), 8);
+        drop(b); // must not hang
+    }
+}

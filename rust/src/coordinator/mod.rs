@@ -1,0 +1,13 @@
+//! L3 coordinator: the unlearning service around the DaRE forest — request
+//! router, deletion batcher (dynamic batching of GDPR deletion requests),
+//! per-operation telemetry, and a JSON-lines TCP protocol.
+
+pub mod batcher;
+pub mod protocol;
+pub mod service;
+pub mod telemetry;
+
+pub use batcher::{DeleteOutcome, DeletionBatcher};
+pub use protocol::{serve, Client};
+pub use service::{ServiceConfig, UnlearningService};
+pub use telemetry::Telemetry;

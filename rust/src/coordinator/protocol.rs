@@ -1,0 +1,188 @@
+//! Wire protocol: JSON-lines over TCP.
+//!
+//! Each request is one JSON object on one line; the service answers with one
+//! JSON object on one line. `serve` runs the accept loop with a worker pool;
+//! `Client` is the matching blocking client used by examples and tests.
+
+use crate::coordinator::service::{err_response, UnlearningService};
+use crate::util::json::{parse, Value};
+use crate::util::threadpool::ThreadPool;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Serve the JSON-lines protocol until a `shutdown` request arrives.
+/// Returns the bound local address via the callback before blocking.
+pub fn serve(
+    svc: Arc<UnlearningService>,
+    addr: &str,
+    workers: usize,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    on_bound(listener.local_addr()?);
+    let pool = ThreadPool::new(workers.max(1));
+    loop {
+        if svc.is_shutdown() {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let svc = Arc::clone(&svc);
+                pool.execute(move || {
+                    let _ = handle_connection(&svc, stream);
+                });
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    pool.join();
+    Ok(())
+}
+
+fn handle_connection(svc: &UnlearningService, stream: TcpStream) -> anyhow::Result<()> {
+    stream.set_nodelay(true)?;
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match parse(&line) {
+            Ok(req) => svc.handle(&req),
+            Err(e) => err_response(&format!("bad request: {e}")),
+        };
+        writer.write_all(resp.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if svc.is_shutdown() {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Blocking JSON-lines client.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> anyhow::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    /// Send one request and read one response.
+    pub fn call(&mut self, req: &Value) -> anyhow::Result<Value> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        anyhow::ensure!(!line.is_empty(), "server closed connection");
+        parse(&line).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::{ServiceConfig, UnlearningService};
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::forest::forest::DareForest;
+    use crate::forest::params::Params;
+
+    fn spawn_server() -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+        let d = generate(
+            &SynthSpec {
+                n: 150,
+                informative: 3,
+                redundant: 0,
+                noise: 1,
+                flip: 0.05,
+                ..Default::default()
+            },
+            2,
+        );
+        let f = DareForest::fit(
+            d,
+            &Params {
+                n_trees: 3,
+                max_depth: 5,
+                k: 5,
+                ..Default::default()
+            },
+            1,
+        );
+        let svc = UnlearningService::new(
+            f,
+            ServiceConfig {
+                use_pjrt: false,
+                ..Default::default()
+            },
+        );
+        let (tx, rx) = std::sync::mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            serve(svc, "127.0.0.1:0", 2, move |addr| {
+                tx.send(addr).unwrap();
+            })
+            .unwrap();
+        });
+        (rx.recv().unwrap(), handle)
+    }
+
+    #[test]
+    fn tcp_roundtrip_and_shutdown() {
+        let (addr, handle) = spawn_server();
+        let mut c = Client::connect(addr).unwrap();
+
+        let r = c.call(&parse(r#"{"op":"stats"}"#).unwrap()).unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(r.get("n_alive").unwrap().as_u64(), Some(150));
+
+        let r = c.call(&parse(r#"{"op":"delete","ids":[1,2]}"#).unwrap()).unwrap();
+        assert_eq!(r.get("deleted").unwrap().as_u64(), Some(2));
+
+        // malformed request gets an error response, connection stays up
+        let r = c.call(&parse(r#"{"op":"bogus"}"#).unwrap()).unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+
+        let r = c.call(&parse(r#"{"op":"shutdown"}"#).unwrap()).unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (addr, handle) = spawn_server();
+        let mut handles = Vec::new();
+        for i in 0..4u32 {
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let req = parse(&format!(r#"{{"op":"delete","ids":[{}]}}"#, 10 + i)).unwrap();
+                let r = c.call(&req).unwrap();
+                assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut c = Client::connect(addr).unwrap();
+        let r = c.call(&parse(r#"{"op":"stats"}"#).unwrap()).unwrap();
+        assert_eq!(r.get("n_alive").unwrap().as_u64(), Some(146));
+        c.call(&parse(r#"{"op":"shutdown"}"#).unwrap()).unwrap();
+        handle.join().unwrap();
+    }
+}

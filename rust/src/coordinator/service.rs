@@ -1,0 +1,432 @@
+//! The unlearning service: a request router over a DaRE forest.
+//!
+//! Requests (JSON objects) are dispatched to:
+//! - `predict` — read path: batched inference under a read lock, via the
+//!   PJRT predictor when the forest fits the compiled artifact (refreshing
+//!   the tensorized snapshot lazily after mutations), else native traversal;
+//! - `delete` — write path: routed through the [`DeletionBatcher`] so
+//!   concurrent GDPR requests share a write lock / retrain batches;
+//! - `add` — write path (continual learning §6);
+//! - `delete_cost` — the dry-run adversary signal;
+//! - `stats` — telemetry + model shape snapshot;
+//! - `save` — snapshot the model+data to disk;
+//! - `shutdown` — stop a `serve()` loop.
+//!
+//! Wire format: one JSON object per line over TCP (see `protocol`).
+
+use crate::coordinator::batcher::DeletionBatcher;
+use crate::coordinator::telemetry::Telemetry;
+use crate::forest::forest::DareForest;
+use crate::runtime::{Engine, Manifest, PjrtPredictor};
+use crate::util::json::Value;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Batching window for deletion requests.
+    pub batch_window: Duration,
+    /// Max ids per deletion batch.
+    pub max_batch: usize,
+    /// Try to use the PJRT predictor (falls back to native when the forest
+    /// exceeds the artifact shape or artifacts are missing).
+    pub use_pjrt: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            batch_window: Duration::from_millis(10),
+            max_batch: 4096,
+            use_pjrt: true,
+        }
+    }
+}
+
+/// The unlearning service.
+pub struct UnlearningService {
+    forest: Arc<RwLock<DareForest>>,
+    batcher: DeletionBatcher,
+    telemetry: Telemetry,
+    pjrt: Mutex<Option<PjrtPredictor>>,
+    manifest: Option<Manifest>,
+    /// Bumped on every mutation; predictor refreshes when stale.
+    version: AtomicU64,
+    pjrt_version: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+impl UnlearningService {
+    pub fn new(forest: DareForest, cfg: ServiceConfig) -> Arc<Self> {
+        let forest = Arc::new(RwLock::new(forest));
+        let batcher = DeletionBatcher::start(Arc::clone(&forest), cfg.batch_window, cfg.max_batch);
+        let (pjrt, manifest) = if cfg.use_pjrt {
+            match crate::runtime::manifest::locate_artifacts()
+                .ok_or_else(|| anyhow::anyhow!("artifacts not built"))
+                .and_then(|dir| Manifest::load(&dir))
+            {
+                Ok(m) => {
+                    let p = Engine::global()
+                        .and_then(|e| PjrtPredictor::new(e, &m, &forest.read().unwrap()))
+                        .ok();
+                    (p, Some(m))
+                }
+                Err(_) => (None, None),
+            }
+        } else {
+            (None, None)
+        };
+        Arc::new(UnlearningService {
+            forest,
+            batcher,
+            telemetry: Telemetry::new(),
+            pjrt: Mutex::new(pjrt),
+            manifest,
+            version: AtomicU64::new(0),
+            pjrt_version: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    /// Whether the PJRT predictor is active.
+    pub fn pjrt_active(&self) -> bool {
+        self.pjrt.lock().unwrap().is_some()
+    }
+
+    pub fn forest(&self) -> &Arc<RwLock<DareForest>> {
+        &self.forest
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Handle one request object, returning the response object.
+    pub fn handle(&self, req: &Value) -> Value {
+        let op = req.get("op").and_then(Value::as_str).unwrap_or("");
+        match op {
+            "predict" => self.telemetry.timed("predict", || {
+                let r = self.op_predict(req);
+                let ok = r.get("ok").and_then(Value::as_bool) == Some(true);
+                (r, ok)
+            }),
+            "delete" => self.telemetry.timed("delete", || {
+                let r = self.op_delete(req);
+                let ok = r.get("ok").and_then(Value::as_bool) == Some(true);
+                (r, ok)
+            }),
+            "add" => self.telemetry.timed("add", || {
+                let r = self.op_add(req);
+                let ok = r.get("ok").and_then(Value::as_bool) == Some(true);
+                (r, ok)
+            }),
+            "delete_cost" => self.telemetry.timed("delete_cost", || {
+                let r = self.op_delete_cost(req);
+                let ok = r.get("ok").and_then(Value::as_bool) == Some(true);
+                (r, ok)
+            }),
+            "stats" => self.op_stats(),
+            "save" => self.op_save(req),
+            "shutdown" => {
+                self.shutdown.store(true, Ordering::SeqCst);
+                ok_response()
+            }
+            _ => err_response(&format!("unknown op '{op}'")),
+        }
+    }
+
+    fn op_predict(&self, req: &Value) -> Value {
+        let Some(rows_json) = req.get("rows").and_then(Value::as_arr) else {
+            return err_response("predict needs 'rows': [[f32,...],...]");
+        };
+        let mut rows: Vec<Vec<f32>> = Vec::with_capacity(rows_json.len());
+        for r in rows_json {
+            let Some(cells) = r.as_arr() else {
+                return err_response("rows must be arrays of numbers");
+            };
+            rows.push(cells.iter().map(|c| c.as_f64().unwrap_or(0.0) as f32).collect());
+        }
+
+        // Fast path: PJRT batch predictor (refresh if the model mutated).
+        let version = self.version.load(Ordering::SeqCst);
+        let mut pjrt_guard = self.pjrt.lock().unwrap();
+        if let (Some(pred), Some(m)) = (pjrt_guard.as_mut(), self.manifest.as_ref()) {
+            let forest = self.forest.read().unwrap();
+            if self.pjrt_version.swap(version, Ordering::SeqCst) != version {
+                if pred.refresh(m, &forest).is_err() {
+                    *pjrt_guard = None; // forest outgrew the artifact: fall back
+                }
+            }
+            if let Some(pred) = pjrt_guard.as_ref() {
+                if let Ok(probs) = pred.predict(&rows) {
+                    let mut resp = ok_response();
+                    resp.set("probs", probs.iter().map(|p| *p as f64).collect::<Vec<f64>>());
+                    resp.set("engine", "pjrt");
+                    return resp;
+                }
+            }
+        }
+        drop(pjrt_guard);
+
+        // Native path.
+        let forest = self.forest.read().unwrap();
+        let probs = forest.predict_proba_rows(&rows);
+        let mut resp = ok_response();
+        resp.set("probs", probs.iter().map(|p| *p as f64).collect::<Vec<f64>>());
+        resp.set("engine", "native");
+        resp
+    }
+
+    fn op_delete(&self, req: &Value) -> Value {
+        let Some(ids_json) = req.get("ids").and_then(Value::as_arr) else {
+            return err_response("delete needs 'ids': [u32,...]");
+        };
+        let ids: Vec<u32> = ids_json.iter().filter_map(|v| v.as_u64()).map(|v| v as u32).collect();
+        if ids.len() != ids_json.len() {
+            return err_response("ids must be non-negative integers");
+        }
+        match self.batcher.delete(ids) {
+            Ok(out) => {
+                self.version.fetch_add(1, Ordering::SeqCst);
+                let mut resp = ok_response();
+                resp.set("deleted", out.deleted)
+                    .set("skipped", out.skipped)
+                    .set("retrain_cost", out.retrain_cost)
+                    .set("batch_size", out.batch_size);
+                resp
+            }
+            Err(e) => err_response(&format!("{e}")),
+        }
+    }
+
+    fn op_add(&self, req: &Value) -> Value {
+        let Some(row_json) = req.get("row").and_then(Value::as_arr) else {
+            return err_response("add needs 'row': [f32,...]");
+        };
+        let Some(label) = req.get("label").and_then(Value::as_u64) else {
+            return err_response("add needs 'label': 0|1");
+        };
+        if label > 1 {
+            return err_response("label must be 0 or 1");
+        }
+        let row: Vec<f32> = row_json.iter().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect();
+        let mut forest = self.forest.write().unwrap();
+        if row.len() != forest.data().n_features() {
+            return err_response(&format!(
+                "row has {} features, model expects {}",
+                row.len(),
+                forest.data().n_features()
+            ));
+        }
+        let id = forest.add(&row, label as u8);
+        drop(forest);
+        self.version.fetch_add(1, Ordering::SeqCst);
+        let mut resp = ok_response();
+        resp.set("id", id);
+        resp
+    }
+
+    fn op_delete_cost(&self, req: &Value) -> Value {
+        let Some(id) = req.get("id").and_then(Value::as_u64) else {
+            return err_response("delete_cost needs 'id'");
+        };
+        let forest = self.forest.read().unwrap();
+        let id = id as u32;
+        if (id as usize) >= forest.data().n_total() || !forest.data().is_alive(id) {
+            return err_response("not a live instance");
+        }
+        let cost = forest.delete_cost(id);
+        let mut resp = ok_response();
+        resp.set("cost", cost);
+        resp
+    }
+
+    fn op_stats(&self) -> Value {
+        let forest = self.forest.read().unwrap();
+        let mem = forest.memory();
+        let mut resp = ok_response();
+        resp.set("telemetry", self.telemetry.snapshot())
+            .set("n_alive", forest.n_alive())
+            .set("n_trees", forest.n_trees())
+            .set("pjrt_active", self.pjrt_active())
+            .set("model_bytes", mem.total())
+            .set("data_bytes", forest.data_bytes());
+        resp
+    }
+
+    fn op_save(&self, req: &Value) -> Value {
+        let Some(path) = req.get("path").and_then(Value::as_str) else {
+            return err_response("save needs 'path'");
+        };
+        let forest = self.forest.read().unwrap();
+        match crate::forest::serialize::save(&forest, std::path::Path::new(path)) {
+            Ok(()) => ok_response(),
+            Err(e) => err_response(&format!("{e}")),
+        }
+    }
+}
+
+pub fn ok_response() -> Value {
+    let mut v = Value::obj();
+    v.set("ok", true);
+    v
+}
+
+pub fn err_response(msg: &str) -> Value {
+    let mut v = Value::obj();
+    v.set("ok", false).set("error", msg);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::forest::params::Params;
+    use crate::util::json::parse;
+
+    fn service() -> Arc<UnlearningService> {
+        let d = generate(
+            &SynthSpec {
+                n: 200,
+                informative: 3,
+                redundant: 0,
+                noise: 2,
+                flip: 0.05,
+                ..Default::default()
+            },
+            7,
+        );
+        let f = DareForest::fit(
+            d,
+            &Params {
+                n_trees: 4,
+                max_depth: 5,
+                k: 5,
+                ..Default::default()
+            },
+            3,
+        );
+        UnlearningService::new(
+            f,
+            ServiceConfig {
+                batch_window: Duration::from_millis(1),
+                use_pjrt: false, // unit tests: native path (pjrt covered separately)
+                ..Default::default()
+            },
+        )
+    }
+
+    fn req(s: &str) -> Value {
+        parse(s).unwrap()
+    }
+
+    #[test]
+    fn predict_roundtrip() {
+        let svc = service();
+        let p = svc.forest().read().unwrap().data().n_features();
+        let row: Vec<String> = vec!["0.1".into(); p];
+        let r = svc.handle(&req(&format!(r#"{{"op":"predict","rows":[[{}]]}}"#, row.join(","))));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        let probs = r.get("probs").unwrap().as_arr().unwrap();
+        assert_eq!(probs.len(), 1);
+        let pr = probs[0].as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&pr));
+        assert_eq!(r.get("engine").unwrap().as_str(), Some("native"));
+    }
+
+    #[test]
+    fn delete_then_stats() {
+        let svc = service();
+        let r = svc.handle(&req(r#"{"op":"delete","ids":[0,1,2]}"#));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(r.get("deleted").unwrap().as_u64(), Some(3));
+        let s = svc.handle(&req(r#"{"op":"stats"}"#));
+        assert_eq!(s.get("n_alive").unwrap().as_u64(), Some(197));
+        let tele = s.get("telemetry").unwrap().get("ops").unwrap();
+        assert!(tele.get("delete").is_some());
+    }
+
+    #[test]
+    fn add_then_delete_roundtrip() {
+        let svc = service();
+        let p = svc.forest().read().unwrap().data().n_features();
+        let row: Vec<String> = vec!["0.5".into(); p];
+        let r = svc.handle(&req(&format!(
+            r#"{{"op":"add","row":[{}],"label":1}}"#,
+            row.join(",")
+        )));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        let id = r.get("id").unwrap().as_u64().unwrap();
+        let r = svc.handle(&req(&format!(r#"{{"op":"delete","ids":[{id}]}}"#)));
+        assert_eq!(r.get("deleted").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn delete_cost_query() {
+        let svc = service();
+        let r = svc.handle(&req(r#"{"op":"delete_cost","id":5}"#));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        assert!(r.get("cost").unwrap().as_u64().is_some());
+        let bad = svc.handle(&req(r#"{"op":"delete_cost","id":999999}"#));
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn error_paths() {
+        let svc = service();
+        for bad in [
+            r#"{"op":"nope"}"#,
+            r#"{"op":"predict"}"#,
+            r#"{"op":"delete"}"#,
+            r#"{"op":"add","row":[1.0],"label":5}"#,
+            r#"{"op":"add","row":[1.0],"label":1}"#, // wrong arity
+        ] {
+            let r = svc.handle(&req(bad));
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{bad}");
+            assert!(r.get("error").is_some());
+        }
+    }
+
+    #[test]
+    fn shutdown_flag() {
+        let svc = service();
+        assert!(!svc.is_shutdown());
+        svc.handle(&req(r#"{"op":"shutdown"}"#));
+        assert!(svc.is_shutdown());
+    }
+
+    #[test]
+    fn predictions_change_after_unlearning_an_instance_class() {
+        // Deleting all positives of a region should pull predictions down —
+        // the service-level view of exact unlearning.
+        let svc = service();
+        let (probe, pos_ids): (Vec<f32>, Vec<u32>) = {
+            let f = svc.forest().read().unwrap();
+            let d = f.data();
+            let pos: Vec<u32> = d.live_ids().into_iter().filter(|&i| d.y(i) == 1).collect();
+            (d.row(pos[0]), pos)
+        };
+        let before = {
+            let f = svc.forest().read().unwrap();
+            f.predict_proba(&probe)
+        };
+        // delete 80% of positives
+        let del: Vec<String> = pos_ids
+            .iter()
+            .take(pos_ids.len() * 4 / 5)
+            .map(|i| i.to_string())
+            .collect();
+        svc.handle(&req(&format!(r#"{{"op":"delete","ids":[{}]}}"#, del.join(","))));
+        let after = {
+            let f = svc.forest().read().unwrap();
+            f.predict_proba(&probe)
+        };
+        assert!(
+            after < before + 1e-6,
+            "removing positives should not raise positive probability ({before} -> {after})"
+        );
+    }
+}

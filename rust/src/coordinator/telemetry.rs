@@ -1,0 +1,133 @@
+//! Service telemetry: per-operation counters and streaming latency stats
+//! (Welford — no per-request samples retained).
+
+use crate::util::json::Value;
+use crate::util::stats::Welford;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Default)]
+struct OpStats {
+    count: u64,
+    errors: u64,
+    latency: Welford,
+}
+
+/// Thread-safe telemetry registry.
+#[derive(Default)]
+pub struct Telemetry {
+    ops: Mutex<BTreeMap<String, OpStats>>,
+    started: Option<Instant>,
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Telemetry {
+            ops: Mutex::new(BTreeMap::new()),
+            started: Some(Instant::now()),
+        }
+    }
+
+    /// Record one operation with its latency; `ok` false counts an error.
+    pub fn record(&self, op: &str, seconds: f64, ok: bool) {
+        let mut ops = self.ops.lock().unwrap();
+        let s = ops.entry(op.to_string()).or_default();
+        s.count += 1;
+        if !ok {
+            s.errors += 1;
+        }
+        s.latency.push(seconds);
+    }
+
+    /// Time a closure and record it under `op`.
+    pub fn timed<R>(&self, op: &str, f: impl FnOnce() -> (R, bool)) -> R {
+        let t0 = Instant::now();
+        let (r, ok) = f();
+        self.record(op, t0.elapsed().as_secs_f64(), ok);
+        r
+    }
+
+    /// JSON snapshot for the `stats` op.
+    pub fn snapshot(&self) -> Value {
+        let ops = self.ops.lock().unwrap();
+        let mut out = Value::obj();
+        if let Some(t0) = self.started {
+            out.set("uptime_seconds", t0.elapsed().as_secs_f64());
+        }
+        let mut per_op = Value::obj();
+        for (name, s) in ops.iter() {
+            let mut o = Value::obj();
+            o.set("count", s.count)
+                .set("errors", s.errors)
+                .set("latency_mean_s", s.latency.mean())
+                .set("latency_std_s", s.latency.std())
+                .set("latency_min_s", s.latency.min())
+                .set("latency_max_s", s.latency.max());
+            per_op.set(name, o);
+        }
+        out.set("ops", per_op);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let t = Telemetry::new();
+        t.record("delete", 0.010, true);
+        t.record("delete", 0.020, true);
+        t.record("predict", 0.001, false);
+        let snap = t.snapshot();
+        let del = snap.get("ops").unwrap().get("delete").unwrap();
+        assert_eq!(del.get("count").unwrap().as_u64(), Some(2));
+        assert_eq!(del.get("errors").unwrap().as_u64(), Some(0));
+        let mean = del.get("latency_mean_s").unwrap().as_f64().unwrap();
+        assert!((mean - 0.015).abs() < 1e-9);
+        let pred = snap.get("ops").unwrap().get("predict").unwrap();
+        assert_eq!(pred.get("errors").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn timed_wrapper() {
+        let t = Telemetry::new();
+        let v = t.timed("op", || (42, true));
+        assert_eq!(v, 42);
+        assert_eq!(
+            t.snapshot()
+                .get("ops")
+                .unwrap()
+                .get("op")
+                .unwrap()
+                .get("count")
+                .unwrap()
+                .as_u64(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let t = std::sync::Arc::new(Telemetry::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let t = std::sync::Arc::clone(&t);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    t.record("x", 0.001, true);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = t.snapshot();
+        assert_eq!(
+            snap.get("ops").unwrap().get("x").unwrap().get("count").unwrap().as_u64(),
+            Some(800)
+        );
+    }
+}

@@ -1,0 +1,311 @@
+//! Dataset storage.
+//!
+//! Column-major `f32` feature storage plus `u8` binary labels, with a
+//! liveness mask so deletions are O(1) "remove from database" operations
+//! (Alg. 2 line 6/18). Trees reference instances by stable `u32` ids; ids are
+//! never recycled while a dataset is alive, so leaf instance lists stay valid
+//! across deletions and additions (§6 continual learning).
+
+/// Stable instance identifier (index into the dataset's backing columns).
+pub type InstanceId = u32;
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Column-major features: `cols[j][i]` is attribute j of instance i.
+    cols: Vec<Vec<f32>>,
+    /// Binary labels (0/1).
+    labels: Vec<u8>,
+    /// Liveness mask: false once deleted.
+    alive: Vec<bool>,
+    n_alive: usize,
+    n_pos_alive: usize,
+}
+
+impl Dataset {
+    /// Build from column-major data. All columns must share a length.
+    pub fn from_columns(cols: Vec<Vec<f32>>, labels: Vec<u8>) -> Self {
+        let n = labels.len();
+        for (j, c) in cols.iter().enumerate() {
+            assert_eq!(c.len(), n, "column {j} length mismatch");
+        }
+        assert!(labels.iter().all(|&y| y <= 1), "labels must be binary");
+        let n_pos = labels.iter().filter(|&&y| y == 1).count();
+        Dataset {
+            cols,
+            alive: vec![true; n],
+            n_alive: n,
+            n_pos_alive: n_pos,
+            labels,
+        }
+    }
+
+    /// Build from row-major data (`rows[i][j]`).
+    pub fn from_rows(rows: &[Vec<f32>], labels: Vec<u8>) -> Self {
+        let n = rows.len();
+        assert_eq!(n, labels.len());
+        let p = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut cols = vec![Vec::with_capacity(n); p];
+        for row in rows {
+            assert_eq!(row.len(), p, "ragged rows");
+            for (j, &v) in row.iter().enumerate() {
+                cols[j].push(v);
+            }
+        }
+        Dataset::from_columns(cols, labels)
+    }
+
+    /// Empty dataset with `p` attributes.
+    pub fn empty(p: usize) -> Self {
+        Dataset {
+            cols: vec![Vec::new(); p],
+            labels: Vec::new(),
+            alive: Vec::new(),
+            n_alive: 0,
+            n_pos_alive: 0,
+        }
+    }
+
+    /// Number of attributes.
+    #[inline]
+    pub fn n_features(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Total instances ever inserted (including deleted ones).
+    #[inline]
+    pub fn n_total(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Currently-live instances.
+    #[inline]
+    pub fn n_alive(&self) -> usize {
+        self.n_alive
+    }
+
+    /// Currently-live positive instances.
+    #[inline]
+    pub fn n_pos_alive(&self) -> usize {
+        self.n_pos_alive
+    }
+
+    /// Feature value (caller must pass a valid id; deleted rows still readable
+    /// — trees read values mid-deletion).
+    #[inline]
+    pub fn x(&self, i: InstanceId, j: usize) -> f32 {
+        self.cols[j][i as usize]
+    }
+
+    /// Label of instance `i`.
+    #[inline]
+    pub fn y(&self, i: InstanceId) -> u8 {
+        self.labels[i as usize]
+    }
+
+    #[inline]
+    pub fn is_alive(&self, i: InstanceId) -> bool {
+        self.alive[i as usize]
+    }
+
+    /// Entire column `j` (includes dead rows; filter by liveness if needed).
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f32] {
+        &self.cols[j]
+    }
+
+    /// Row-major copy of instance `i`.
+    pub fn row(&self, i: InstanceId) -> Vec<f32> {
+        (0..self.n_features()).map(|j| self.x(i, j)).collect()
+    }
+
+    /// Mark an instance deleted ("remove from database"). Returns false if it
+    /// was already dead.
+    pub fn mark_removed(&mut self, i: InstanceId) -> bool {
+        let idx = i as usize;
+        if !self.alive[idx] {
+            return false;
+        }
+        self.alive[idx] = false;
+        self.n_alive -= 1;
+        if self.labels[idx] == 1 {
+            self.n_pos_alive -= 1;
+        }
+        true
+    }
+
+    /// Append a new instance (continual learning §6); returns its id.
+    pub fn push_row(&mut self, row: &[f32], label: u8) -> InstanceId {
+        assert_eq!(row.len(), self.n_features(), "row arity mismatch");
+        assert!(label <= 1);
+        for (j, &v) in row.iter().enumerate() {
+            self.cols[j].push(v);
+        }
+        self.labels.push(label);
+        self.alive.push(true);
+        self.n_alive += 1;
+        if label == 1 {
+            self.n_pos_alive += 1;
+        }
+        (self.labels.len() - 1) as InstanceId
+    }
+
+    /// Ids of all live instances, ascending.
+    pub fn live_ids(&self) -> Vec<InstanceId> {
+        (0..self.n_total() as u32)
+            .filter(|&i| self.alive[i as usize])
+            .collect()
+    }
+
+    /// Copy of the live subset as a fresh dataset (used by the naive-retrain
+    /// baseline and scratch-equality tests).
+    pub fn compacted(&self) -> Dataset {
+        let ids = self.live_ids();
+        let mut cols = vec![Vec::with_capacity(ids.len()); self.n_features()];
+        let mut labels = Vec::with_capacity(ids.len());
+        for &i in &ids {
+            for (j, c) in cols.iter_mut().enumerate() {
+                c.push(self.x(i, j));
+            }
+            labels.push(self.y(i));
+        }
+        Dataset::from_columns(cols, labels)
+    }
+
+    /// Subset by explicit ids (e.g. a train/test split or CV fold).
+    pub fn subset(&self, ids: &[InstanceId]) -> Dataset {
+        let mut cols = vec![Vec::with_capacity(ids.len()); self.n_features()];
+        let mut labels = Vec::with_capacity(ids.len());
+        for &i in ids {
+            for (j, c) in cols.iter_mut().enumerate() {
+                c.push(self.x(i, j));
+            }
+            labels.push(self.y(i));
+        }
+        Dataset::from_columns(cols, labels)
+    }
+
+    /// Fraction of live instances that are positive.
+    pub fn pos_fraction(&self) -> f64 {
+        if self.n_alive == 0 {
+            0.0
+        } else {
+            self.n_pos_alive as f64 / self.n_alive as f64
+        }
+    }
+
+    /// Bytes used by the raw data (features + labels + mask) — the "Data"
+    /// column of the paper's Table 3.
+    pub fn memory_bytes(&self) -> usize {
+        self.cols.iter().map(|c| c.len() * 4).sum::<usize>()
+            + self.labels.len()
+            + self.alive.len()
+    }
+
+    /// Row-major feature matrix of live instances plus labels — feed for the
+    /// PJRT batch predictor and the python parity tests.
+    pub fn to_row_major(&self) -> (Vec<f32>, Vec<u8>, usize) {
+        let ids = self.live_ids();
+        let p = self.n_features();
+        let mut flat = Vec::with_capacity(ids.len() * p);
+        let mut ys = Vec::with_capacity(ids.len());
+        for &i in &ids {
+            for j in 0..p {
+                flat.push(self.x(i, j));
+            }
+            ys.push(self.y(i));
+        }
+        (flat, ys, p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::from_rows(
+            &[
+                vec![1.0, 10.0],
+                vec![2.0, 20.0],
+                vec![3.0, 30.0],
+                vec![4.0, 40.0],
+            ],
+            vec![0, 1, 0, 1],
+        )
+    }
+
+    #[test]
+    fn construction_and_access() {
+        let d = toy();
+        assert_eq!(d.n_features(), 2);
+        assert_eq!(d.n_total(), 4);
+        assert_eq!(d.n_alive(), 4);
+        assert_eq!(d.n_pos_alive(), 2);
+        assert_eq!(d.x(2, 1), 30.0);
+        assert_eq!(d.y(3), 1);
+        assert_eq!(d.row(1), vec![2.0, 20.0]);
+        assert_eq!(d.col(0), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn delete_updates_counts() {
+        let mut d = toy();
+        assert!(d.mark_removed(1));
+        assert!(!d.mark_removed(1), "double delete is a no-op");
+        assert_eq!(d.n_alive(), 3);
+        assert_eq!(d.n_pos_alive(), 1);
+        assert!(!d.is_alive(1));
+        assert_eq!(d.live_ids(), vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn push_after_delete_gets_fresh_id() {
+        let mut d = toy();
+        d.mark_removed(0);
+        let id = d.push_row(&[5.0, 50.0], 1);
+        assert_eq!(id, 4);
+        assert_eq!(d.n_alive(), 4);
+        assert_eq!(d.x(id, 0), 5.0);
+    }
+
+    #[test]
+    fn compacted_drops_dead_rows() {
+        let mut d = toy();
+        d.mark_removed(2);
+        let c = d.compacted();
+        assert_eq!(c.n_total(), 3);
+        assert_eq!(c.n_alive(), 3);
+        assert_eq!(c.col(0), &[1.0, 2.0, 4.0]);
+        assert_eq!(c.pos_fraction(), 2.0 / 3.0);
+    }
+
+    #[test]
+    fn subset_selects_ids() {
+        let d = toy();
+        let s = d.subset(&[3, 0]);
+        assert_eq!(s.col(0), &[4.0, 1.0]);
+        assert_eq!(s.y(0), 1);
+    }
+
+    #[test]
+    fn row_major_export() {
+        let mut d = toy();
+        d.mark_removed(1);
+        let (flat, ys, p) = d.to_row_major();
+        assert_eq!(p, 2);
+        assert_eq!(flat, vec![1.0, 10.0, 3.0, 30.0, 4.0, 40.0]);
+        assert_eq!(ys, vec![0, 0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "binary")]
+    fn rejects_nonbinary_labels() {
+        Dataset::from_rows(&[vec![1.0]], vec![2]);
+    }
+
+    #[test]
+    fn memory_accounting_positive() {
+        let d = toy();
+        assert_eq!(d.memory_bytes(), 4 * 2 * 4 + 4 + 4);
+    }
+}

@@ -1,0 +1,116 @@
+//! CSV load/save so users can bring their own data (`dare train --csv ...`).
+//! Format: header row optional; last column is the 0/1 label.
+
+use crate::data::dataset::Dataset;
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Load a dataset from CSV. If the first row fails numeric parsing it is
+/// treated as a header and skipped. Last column = binary label.
+pub fn load_csv(path: &Path) -> anyhow::Result<Dataset> {
+    let file = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(file);
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    let mut labels: Vec<u8> = Vec::new();
+    let mut arity: Option<usize> = None;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = t.split(',').map(|f| f.trim()).collect();
+        if fields.len() < 2 {
+            anyhow::bail!("line {}: need at least one feature + label", lineno + 1);
+        }
+        let parsed: Result<Vec<f32>, _> = fields.iter().map(|f| f.parse::<f32>()).collect();
+        match parsed {
+            Err(_) if rows.is_empty() && labels.is_empty() => continue, // header
+            Err(e) => anyhow::bail!("line {}: parse error: {e}", lineno + 1),
+            Ok(vals) => {
+                if let Some(a) = arity {
+                    if vals.len() != a {
+                        anyhow::bail!(
+                            "line {}: expected {} columns, got {}",
+                            lineno + 1,
+                            a,
+                            vals.len()
+                        );
+                    }
+                } else {
+                    arity = Some(vals.len());
+                }
+                let y = *vals.last().unwrap();
+                if y != 0.0 && y != 1.0 {
+                    anyhow::bail!("line {}: label must be 0 or 1, got {y}", lineno + 1);
+                }
+                labels.push(y as u8);
+                rows.push(vals[..vals.len() - 1].to_vec());
+            }
+        }
+    }
+    if rows.is_empty() {
+        anyhow::bail!("no data rows in {}", path.display());
+    }
+    Ok(Dataset::from_rows(&rows, labels))
+}
+
+/// Save the live subset of a dataset as CSV (features then label).
+pub fn save_csv(data: &Dataset, path: &Path) -> anyhow::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    let p = data.n_features();
+    for j in 0..p {
+        write!(w, "f{j},")?;
+    }
+    writeln!(w, "label")?;
+    for id in data.live_ids() {
+        for j in 0..p {
+            write!(w, "{},", data.x(id, j))?;
+        }
+        writeln!(w, "{}", data.y(id))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let d = Dataset::from_rows(
+            &[vec![1.5, 2.0], vec![-3.0, 0.25], vec![0.0, 9.0]],
+            vec![1, 0, 1],
+        );
+        let tmp = std::env::temp_dir().join("dare_io_test.csv");
+        save_csv(&d, &tmp).unwrap();
+        let back = load_csv(&tmp).unwrap();
+        assert_eq!(back.n_total(), 3);
+        assert_eq!(back.n_features(), 2);
+        assert_eq!(back.x(1, 0), -3.0);
+        assert_eq!(back.y(2), 1);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn headerless_and_comments() {
+        let tmp = std::env::temp_dir().join("dare_io_test2.csv");
+        std::fs::write(&tmp, "# comment\n1.0,2.0,0\n3.0,4.0,1\n\n").unwrap();
+        let d = load_csv(&tmp).unwrap();
+        assert_eq!(d.n_total(), 2);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn rejects_bad_labels_and_ragged() {
+        let tmp = std::env::temp_dir().join("dare_io_test3.csv");
+        std::fs::write(&tmp, "1.0,2.0,5\n").unwrap();
+        assert!(load_csv(&tmp).is_err());
+        std::fs::write(&tmp, "1.0,2.0,1\n1.0,1\n").unwrap();
+        assert!(load_csv(&tmp).is_err());
+        std::fs::write(&tmp, "").unwrap();
+        assert!(load_csv(&tmp).is_err());
+        std::fs::remove_file(&tmp).ok();
+    }
+}

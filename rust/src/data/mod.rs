@@ -1,0 +1,12 @@
+//! Data substrate: storage, the paper's 14-dataset corpus (synthetic
+//! generators), splits/folds, and CSV I/O.
+
+pub mod dataset;
+pub mod io;
+pub mod registry;
+pub mod split;
+pub mod synth;
+
+pub use dataset::{Dataset, InstanceId};
+pub use registry::{corpus, find, DatasetInfo};
+pub use synth::{generate, SynthSpec};

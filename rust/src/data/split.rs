@@ -1,0 +1,130 @@
+//! Train/test splits and cross-validation folds (the paper uses an 80/20
+//! split and 5-fold CV for tuning).
+
+use crate::data::dataset::{Dataset, InstanceId};
+use crate::util::rng::Rng;
+
+/// Random train/test split by fraction (paper: 80% train).
+pub fn train_test(data: &Dataset, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+    let mut ids = data.live_ids();
+    let mut rng = Rng::new(crate::util::rng::mix_seed(&[seed, 0x7e57]));
+    rng.shuffle(&mut ids);
+    let n_train = ((ids.len() as f64) * train_frac).round() as usize;
+    let n_train = n_train.clamp(1, ids.len().saturating_sub(1).max(1));
+    let (tr, te) = ids.split_at(n_train.min(ids.len()));
+    (data.subset(tr), data.subset(te))
+}
+
+/// Stratified K-fold indices: returns `k` (train_ids, valid_ids) pairs with
+/// class balance preserved per fold, as scikit-learn's StratifiedKFold does
+/// (the paper tunes with 5-fold CV on imbalanced data, so stratification
+/// matters for the AP/AUC datasets).
+pub fn stratified_kfold(
+    data: &Dataset,
+    k: usize,
+    seed: u64,
+) -> Vec<(Vec<InstanceId>, Vec<InstanceId>)> {
+    assert!(k >= 2, "k-fold needs k >= 2");
+    let mut rng = Rng::new(crate::util::rng::mix_seed(&[seed, 0xf01d]));
+    let mut pos: Vec<InstanceId> = Vec::new();
+    let mut neg: Vec<InstanceId> = Vec::new();
+    for id in data.live_ids() {
+        if data.y(id) == 1 {
+            pos.push(id);
+        } else {
+            neg.push(id);
+        }
+    }
+    rng.shuffle(&mut pos);
+    rng.shuffle(&mut neg);
+
+    // round-robin assignment to folds keeps per-fold class counts within 1
+    let mut folds: Vec<Vec<InstanceId>> = vec![Vec::new(); k];
+    for (i, &id) in pos.iter().enumerate() {
+        folds[i % k].push(id);
+    }
+    for (i, &id) in neg.iter().enumerate() {
+        folds[i % k].push(id);
+    }
+
+    (0..k)
+        .map(|f| {
+            let valid = folds[f].clone();
+            let train: Vec<InstanceId> = (0..k)
+                .filter(|&g| g != f)
+                .flat_map(|g| folds[g].iter().copied())
+                .collect();
+            (train, valid)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+
+    fn toy(n: usize, pos: f64) -> Dataset {
+        generate(
+            &SynthSpec {
+                n,
+                pos_fraction: pos,
+                flip: 0.0,
+                ..Default::default()
+            },
+            42,
+        )
+    }
+
+    #[test]
+    fn split_sizes() {
+        let d = toy(1000, 0.3);
+        let (tr, te) = train_test(&d, 0.8, 1);
+        assert_eq!(tr.n_total(), 800);
+        assert_eq!(te.n_total(), 200);
+        assert_eq!(tr.n_features(), d.n_features());
+    }
+
+    #[test]
+    fn split_deterministic_and_seed_sensitive() {
+        let d = toy(500, 0.5);
+        let (a, _) = train_test(&d, 0.8, 9);
+        let (b, _) = train_test(&d, 0.8, 9);
+        let (c, _) = train_test(&d, 0.8, 10);
+        assert_eq!(a.col(0), b.col(0));
+        assert_ne!(a.col(0), c.col(0));
+    }
+
+    #[test]
+    fn kfold_partitions_everything() {
+        let d = toy(503, 0.25);
+        let folds = stratified_kfold(&d, 5, 3);
+        assert_eq!(folds.len(), 5);
+        let mut all_valid: Vec<u32> = folds.iter().flat_map(|(_, v)| v.clone()).collect();
+        all_valid.sort_unstable();
+        let mut expect = d.live_ids();
+        expect.sort_unstable();
+        assert_eq!(all_valid, expect, "valid folds partition the data");
+        for (tr, va) in &folds {
+            assert_eq!(tr.len() + va.len(), d.n_total());
+            // no overlap
+            for id in va {
+                assert!(!tr.contains(id));
+            }
+        }
+    }
+
+    #[test]
+    fn kfold_is_stratified() {
+        let d = toy(1000, 0.1);
+        let total_pos = d.n_pos_alive();
+        for (_, valid) in stratified_kfold(&d, 5, 7) {
+            let pos = valid.iter().filter(|&&i| d.y(i) == 1).count();
+            let expected = total_pos as f64 / 5.0;
+            assert!(
+                (pos as f64 - expected).abs() <= 1.0,
+                "fold pos {pos} vs expected {expected}"
+            );
+        }
+    }
+}

@@ -1,0 +1,298 @@
+//! Synthetic dataset generation.
+//!
+//! The paper evaluates on 13 public datasets plus one synthetic dataset. The
+//! public data is not available in this offline image, so each dataset is
+//! *simulated* by a generator that reproduces the characteristics DaRE's
+//! behaviour actually depends on (DESIGN.md §2): instance count `n`, post-
+//! one-hot attribute count `p`, positive-label rate, the numeric/one-hot/
+//! binary attribute mix, and learnable (but noisy) class structure.
+//!
+//! The generator follows the scikit-learn `make_classification` recipe the
+//! paper itself uses for its Synthetic dataset: class-conditional Gaussian
+//! clusters at hypercube vertices for informative features, random linear
+//! combinations for redundant features, pure noise features, plus categorical
+//! latents (class-correlated multinomials) that are one-hot encoded, and a
+//! label-flip rate.
+
+use crate::data::dataset::Dataset;
+use crate::util::rng::Rng;
+
+/// Specification of a synthetic binary-classification dataset.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    /// Total instances to generate.
+    pub n: usize,
+    /// Informative numeric attributes (class-separating).
+    pub informative: usize,
+    /// Redundant numeric attributes (linear combos of informative).
+    pub redundant: usize,
+    /// Pure-noise numeric attributes.
+    pub noise: usize,
+    /// Cardinalities of categorical attributes; each is one-hot encoded into
+    /// `card` binary columns (mirroring the paper's preprocessing).
+    pub categorical: Vec<usize>,
+    /// Target positive-label fraction (class prior).
+    pub pos_fraction: f64,
+    /// Fraction of labels flipped after generation (task difficulty).
+    pub flip: f64,
+    /// Gaussian clusters per class (hypercube vertices).
+    pub clusters_per_class: usize,
+    /// Class separation multiplier (distance between cluster centers).
+    pub class_sep: f64,
+}
+
+impl Default for SynthSpec {
+    fn default() -> Self {
+        SynthSpec {
+            n: 1000,
+            informative: 5,
+            redundant: 5,
+            noise: 30,
+            categorical: Vec::new(),
+            pos_fraction: 0.5,
+            flip: 0.05,
+            clusters_per_class: 2,
+            class_sep: 1.0,
+        }
+    }
+}
+
+impl SynthSpec {
+    /// Post-one-hot attribute count.
+    pub fn p_total(&self) -> usize {
+        self.informative + self.redundant + self.noise + self.categorical.iter().sum::<usize>()
+    }
+}
+
+/// Generate a dataset from a spec, deterministically from `seed`.
+pub fn generate(spec: &SynthSpec, seed: u64) -> Dataset {
+    let mut rng = Rng::new(crate::util::rng::mix_seed(&[seed, 0x5E17]));
+    let n = spec.n;
+    let ni = spec.informative.max(1);
+
+    // --- labels from the class prior -------------------------------------
+    // Compensate the prior for the label-flip noise applied later so the
+    // *observed* positive rate matches the spec: obs = q(1-f) + (1-q)f.
+    let f = spec.flip.min(0.49);
+    let q = ((spec.pos_fraction - f) / (1.0 - 2.0 * f)).clamp(0.0, 1.0);
+    let mut labels: Vec<u8> = (0..n).map(|_| rng.bernoulli(q) as u8).collect();
+    // Guarantee both classes exist for non-degenerate training.
+    if n >= 2 {
+        if labels.iter().all(|&y| y == 1) {
+            labels[0] = 0;
+        }
+        if labels.iter().all(|&y| y == 0) {
+            labels[0] = 1;
+        }
+    }
+
+    // --- cluster centers at hypercube vertices ---------------------------
+    // 2 classes × clusters_per_class centers in R^informative.
+    let n_clusters = 2 * spec.clusters_per_class.max(1);
+    let mut centers = Vec::with_capacity(n_clusters);
+    for c in 0..n_clusters {
+        let mut v = Vec::with_capacity(ni);
+        for j in 0..ni {
+            // Vertex coordinate: deterministic pseudo-random ±1 pattern per
+            // (cluster, dim), scaled by class_sep.
+            let bit = (crate::util::rng::mix_seed(&[seed, c as u64, j as u64]) >> 17) & 1;
+            v.push(if bit == 1 { spec.class_sep } else { -spec.class_sep });
+        }
+        centers.push(v);
+    }
+
+    // --- informative features --------------------------------------------
+    // cluster assignment: label selects among its class's clusters.
+    let mut cols: Vec<Vec<f32>> = Vec::with_capacity(spec.p_total());
+    let mut info_cols: Vec<Vec<f32>> = vec![Vec::with_capacity(n); ni];
+    for i in 0..n {
+        let class = labels[i] as usize;
+        let cluster = class * spec.clusters_per_class + rng.index(spec.clusters_per_class.max(1));
+        for (j, col) in info_cols.iter_mut().enumerate() {
+            col.push((centers[cluster][j] + rng.normal()) as f32);
+        }
+    }
+
+    // --- redundant features: random linear combos of informative ----------
+    let mut red_cols: Vec<Vec<f32>> = Vec::with_capacity(spec.redundant);
+    for _ in 0..spec.redundant {
+        let w: Vec<f64> = (0..ni).map(|_| rng.normal()).collect();
+        let mut col = Vec::with_capacity(n);
+        for i in 0..n {
+            let v: f64 = (0..ni).map(|j| w[j] * info_cols[j][i] as f64).sum();
+            col.push(v as f32);
+        }
+        red_cols.push(col);
+    }
+
+    // --- noise features -----------------------------------------------------
+    let mut noise_cols: Vec<Vec<f32>> = Vec::with_capacity(spec.noise);
+    for _ in 0..spec.noise {
+        noise_cols.push((0..n).map(|_| rng.normal() as f32).collect());
+    }
+
+    // --- categorical features (one-hot) -----------------------------------
+    // Each categorical attribute has class-correlated category probabilities:
+    // category c gets weight ~ Dirichlet-ish noise, shifted by class so trees
+    // can exploit it (mirrors real categorical signal like "job" in Bank Mktg).
+    let mut cat_cols: Vec<Vec<f32>> = Vec::new();
+    for (g, &card) in spec.categorical.iter().enumerate() {
+        let card = card.max(2);
+        // class-conditional category weights
+        let mut w0: Vec<f64> = (0..card).map(|_| rng.f64() + 0.2).collect();
+        let mut w1: Vec<f64> = w0
+            .iter()
+            .map(|&w| (w * (0.5 + rng.f64())).max(0.05))
+            .collect();
+        let s0: f64 = w0.iter().sum();
+        let s1: f64 = w1.iter().sum();
+        for w in w0.iter_mut() {
+            *w /= s0;
+        }
+        for w in w1.iter_mut() {
+            *w /= s1;
+        }
+        let base = cat_cols.len();
+        for _ in 0..card {
+            cat_cols.push(vec![0.0; n]);
+        }
+        for i in 0..n {
+            let w = if labels[i] == 1 { &w1 } else { &w0 };
+            let mut u = rng.f64();
+            let mut c = card - 1;
+            for (k, &wk) in w.iter().enumerate() {
+                if u < wk {
+                    c = k;
+                    break;
+                }
+                u -= wk;
+            }
+            cat_cols[base + c][i] = 1.0;
+        }
+        let _ = g;
+    }
+
+    // --- label flips ---------------------------------------------------------
+    if spec.flip > 0.0 {
+        for y in labels.iter_mut() {
+            if rng.bernoulli(spec.flip) {
+                *y ^= 1;
+            }
+        }
+    }
+
+    cols.extend(info_cols);
+    cols.extend(red_cols);
+    cols.extend(noise_cols);
+    cols.extend(cat_cols);
+    Dataset::from_columns(cols, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_spec() {
+        let spec = SynthSpec {
+            n: 500,
+            informative: 3,
+            redundant: 2,
+            noise: 4,
+            categorical: vec![3, 5],
+            pos_fraction: 0.3,
+            flip: 0.0,
+            ..Default::default()
+        };
+        let d = generate(&spec, 1);
+        assert_eq!(d.n_total(), 500);
+        assert_eq!(d.n_features(), spec.p_total());
+        assert_eq!(spec.p_total(), 3 + 2 + 4 + 8);
+    }
+
+    #[test]
+    fn pos_fraction_approximate() {
+        let spec = SynthSpec {
+            n: 20_000,
+            pos_fraction: 0.2,
+            flip: 0.0,
+            ..Default::default()
+        };
+        let d = generate(&spec, 2);
+        let f = d.pos_fraction();
+        assert!((f - 0.2).abs() < 0.02, "pos fraction {f}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = SynthSpec {
+            n: 200,
+            ..Default::default()
+        };
+        let a = generate(&spec, 7);
+        let b = generate(&spec, 7);
+        let c = generate(&spec, 8);
+        assert_eq!(a.col(0), b.col(0));
+        assert_ne!(a.col(0), c.col(0));
+    }
+
+    #[test]
+    fn one_hot_columns_are_binary_and_exclusive() {
+        let spec = SynthSpec {
+            n: 300,
+            informative: 2,
+            redundant: 0,
+            noise: 0,
+            categorical: vec![4],
+            flip: 0.0,
+            ..Default::default()
+        };
+        let d = generate(&spec, 3);
+        let base = 2;
+        for i in 0..300u32 {
+            let s: f32 = (0..4).map(|k| d.x(i, base + k)).sum();
+            assert_eq!(s, 1.0, "one-hot exactly one set");
+        }
+    }
+
+    #[test]
+    fn informative_features_separate_classes() {
+        // Sanity: the mean of informative feature 0 should differ by class.
+        let spec = SynthSpec {
+            n: 5_000,
+            informative: 4,
+            redundant: 0,
+            noise: 0,
+            flip: 0.0,
+            class_sep: 2.0,
+            clusters_per_class: 1,
+            ..Default::default()
+        };
+        let d = generate(&spec, 4);
+        let (mut m0, mut c0, mut m1, mut c1) = (0.0f64, 0, 0.0f64, 0);
+        for i in 0..d.n_total() as u32 {
+            if d.y(i) == 1 {
+                m1 += d.x(i, 0) as f64;
+                c1 += 1;
+            } else {
+                m0 += d.x(i, 0) as f64;
+                c0 += 1;
+            }
+        }
+        let gap = (m1 / c1 as f64 - m0 / c0 as f64).abs();
+        assert!(gap > 0.5, "class means should separate, gap={gap}");
+    }
+
+    #[test]
+    fn both_classes_present_even_extreme_prior() {
+        let spec = SynthSpec {
+            n: 50,
+            pos_fraction: 0.0001,
+            flip: 0.0,
+            ..Default::default()
+        };
+        let d = generate(&spec, 5);
+        assert!(d.n_pos_alive() >= 1);
+        assert!(d.n_pos_alive() < d.n_alive());
+    }
+}

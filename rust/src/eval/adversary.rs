@@ -1,0 +1,150 @@
+//! Deletion-order adversaries (paper §4.1): *Random* picks uniformly among
+//! live instances; *Worst-of-c* samples c candidates and deletes the one
+//! whose dry-run retrain cost (instances assigned to retrained nodes, summed
+//! over trees) is largest — the paper uses c = 1000.
+
+use crate::data::dataset::InstanceId;
+use crate::forest::forest::DareForest;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Adversary {
+    Random,
+    WorstOf(usize),
+}
+
+impl Adversary {
+    pub fn name(&self) -> String {
+        match self {
+            Adversary::Random => "random".to_string(),
+            Adversary::WorstOf(c) => format!("worst_of_{c}"),
+        }
+    }
+
+    /// Choose the next instance to delete. Returns None when no live
+    /// instances remain.
+    pub fn next_target(&self, forest: &DareForest, rng: &mut Rng) -> Option<InstanceId> {
+        let live = forest.live_ids();
+        if live.is_empty() {
+            return None;
+        }
+        match self {
+            Adversary::Random => Some(live[rng.index(live.len())]),
+            Adversary::WorstOf(c) => {
+                let c = (*c).max(1).min(live.len());
+                let picks = rng.sample_indices(live.len(), c);
+                let mut best: Option<(InstanceId, u64)> = None;
+                for idx in picks {
+                    let id = live[idx];
+                    let cost = forest.delete_cost(id);
+                    match best {
+                        Some((_, bc)) if cost <= bc => {}
+                        _ => best = Some((id, cost)),
+                    }
+                }
+                best.map(|(id, _)| id)
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for Adversary {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let l = s.to_ascii_lowercase();
+        if l == "random" {
+            return Ok(Adversary::Random);
+        }
+        if let Some(rest) = l.strip_prefix("worst_of_").or(l.strip_prefix("worst")) {
+            let c = rest.trim_start_matches('_').parse::<usize>().unwrap_or(1000);
+            return Ok(Adversary::WorstOf(c));
+        }
+        Err(format!("unknown adversary '{s}' (random|worst_of_<c>)"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::forest::params::Params;
+
+    fn forest(n: usize) -> DareForest {
+        let d = generate(
+            &SynthSpec {
+                n,
+                informative: 3,
+                redundant: 0,
+                noise: 2,
+                flip: 0.1,
+                ..Default::default()
+            },
+            3,
+        );
+        DareForest::fit(
+            d,
+            &Params {
+                n_trees: 3,
+                max_depth: 5,
+                k: 5,
+                ..Default::default()
+            },
+            7,
+        )
+    }
+
+    #[test]
+    fn random_returns_live_ids() {
+        let f = forest(100);
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let id = Adversary::Random.next_target(&f, &mut rng).unwrap();
+            assert!(f.data().is_alive(id));
+        }
+    }
+
+    #[test]
+    fn worst_of_prefers_expensive_deletions() {
+        let f = forest(200);
+        let mut rng = Rng::new(2);
+        // Average dry-run cost of worst-of-32 picks should dominate random's.
+        let mut worst_sum = 0u64;
+        let mut rand_sum = 0u64;
+        for _ in 0..15 {
+            let wid = Adversary::WorstOf(32).next_target(&f, &mut rng).unwrap();
+            worst_sum += f.delete_cost(wid);
+            let rid = Adversary::Random.next_target(&f, &mut rng).unwrap();
+            rand_sum += f.delete_cost(rid);
+        }
+        assert!(
+            worst_sum >= rand_sum,
+            "worst-of adversary should find costlier deletions ({worst_sum} vs {rand_sum})"
+        );
+    }
+
+    #[test]
+    fn exhausted_forest_returns_none() {
+        let mut f = forest(20);
+        let ids = f.live_ids();
+        for id in ids {
+            f.delete_seq(id).unwrap();
+        }
+        let mut rng = Rng::new(3);
+        assert!(Adversary::Random.next_target(&f, &mut rng).is_none());
+        assert!(Adversary::WorstOf(10).next_target(&f, &mut rng).is_none());
+    }
+
+    #[test]
+    fn parsing() {
+        assert_eq!("random".parse::<Adversary>().unwrap(), Adversary::Random);
+        assert_eq!(
+            "worst_of_1000".parse::<Adversary>().unwrap(),
+            Adversary::WorstOf(1000)
+        );
+        assert_eq!(
+            "worst_of_50".parse::<Adversary>().unwrap(),
+            Adversary::WorstOf(50)
+        );
+        assert!("x".parse::<Adversary>().is_err());
+    }
+}

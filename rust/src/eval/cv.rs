@@ -1,0 +1,83 @@
+//! Stratified k-fold cross-validation of DaRE parameter settings — the
+//! scoring primitive behind the paper's tuning protocol (§4).
+
+use crate::data::dataset::Dataset;
+use crate::data::split::stratified_kfold;
+use crate::forest::forest::DareForest;
+use crate::forest::params::Params;
+use crate::metrics::Metric;
+
+/// Mean validation score of `params` across `k` stratified folds.
+pub fn cv_score(data: &Dataset, params: &Params, metric: Metric, k: usize, seed: u64) -> f64 {
+    let folds = stratified_kfold(data, k, seed);
+    let mut scores = Vec::with_capacity(k);
+    for (fi, (train_ids, valid_ids)) in folds.iter().enumerate() {
+        let train = data.subset(train_ids);
+        let valid = data.subset(valid_ids);
+        let forest = DareForest::fit(
+            train,
+            params,
+            crate::util::rng::mix_seed(&[seed, fi as u64, 0xCF]),
+        );
+        let probs = forest.predict_proba_dataset(&valid);
+        let (_, ys, _) = valid.to_row_major();
+        scores.push(metric.score(&probs, &ys));
+    }
+    crate::util::stats::mean(&scores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+
+    fn data() -> Dataset {
+        generate(
+            &SynthSpec {
+                n: 500,
+                informative: 4,
+                redundant: 0,
+                noise: 2,
+                flip: 0.05,
+                ..Default::default()
+            },
+            9,
+        )
+    }
+
+    #[test]
+    fn cv_scores_sane_and_deterministic() {
+        let d = data();
+        let p = Params {
+            n_trees: 5,
+            max_depth: 5,
+            k: 5,
+            ..Default::default()
+        };
+        let a = cv_score(&d, &p, Metric::Accuracy, 3, 1);
+        let b = cv_score(&d, &p, Metric::Accuracy, 3, 1);
+        assert_eq!(a, b);
+        assert!(a > 0.7, "cv accuracy {a}");
+        assert!(a <= 1.0);
+    }
+
+    #[test]
+    fn deeper_trees_not_worse_on_learnable_data() {
+        let d = data();
+        let shallow = Params {
+            n_trees: 5,
+            max_depth: 1,
+            k: 5,
+            ..Default::default()
+        };
+        let deep = Params {
+            n_trees: 5,
+            max_depth: 8,
+            k: 5,
+            ..Default::default()
+        };
+        let s = cv_score(&d, &shallow, Metric::Accuracy, 3, 2);
+        let dscore = cv_score(&d, &deep, Metric::Accuracy, 3, 2);
+        assert!(dscore >= s - 0.02, "deep {dscore} vs shallow {s}");
+    }
+}

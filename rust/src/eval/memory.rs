@@ -1,0 +1,123 @@
+//! Space-overhead accounting (paper §4.4, Table 3): break G-DaRE memory into
+//! structure / decision statistics / leaf statistics, compare against a lean
+//! standard-RF model with the same T and d_max, and compute the paper's
+//! overhead ratio (data + DaRE) / (data + lean RF).
+
+use crate::baselines::simple::{BaselineForest, BaselineParams};
+use crate::data::dataset::Dataset;
+use crate::forest::forest::DareForest;
+use crate::forest::params::Params;
+
+/// One Table-3 row, in bytes.
+#[derive(Clone, Debug)]
+pub struct MemoryRow {
+    pub data_bytes: usize,
+    pub structure: usize,
+    pub decision_stats: usize,
+    pub leaf_stats: usize,
+    pub dare_total: usize,
+    pub sklearn_like: usize,
+    /// (data + DaRE) / (data + lean RF)
+    pub overhead_ratio: f64,
+    pub mean_decision_nodes: f64,
+}
+
+/// Measure the space breakdown of a trained DaRE forest versus a lean RF
+/// trained with the same T / d_max on the same data.
+pub fn measure(train: &Dataset, params: &Params, seed: u64) -> MemoryRow {
+    let forest = DareForest::fit(train.clone(), params, seed);
+    let m = forest.memory();
+    let lean_params = BaselineParams {
+        n_trees: params.n_trees,
+        max_depth: params.max_depth,
+        criterion: params.criterion,
+        max_features: params.max_features,
+        n_threads: params.n_threads,
+        ..Default::default()
+    };
+    let lean = BaselineForest::fit(train, &lean_params, seed);
+    let data_bytes = train.memory_bytes();
+    let dare_total = m.total();
+    let sklearn_like = lean.memory_bytes();
+    MemoryRow {
+        data_bytes,
+        structure: m.structure,
+        decision_stats: m.decision_stats,
+        leaf_stats: m.leaf_stats,
+        dare_total,
+        sklearn_like,
+        overhead_ratio: (data_bytes + dare_total) as f64 / (data_bytes + sklearn_like) as f64,
+        mean_decision_nodes: forest.mean_decision_nodes(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+
+    #[test]
+    fn breakdown_reflects_paper_shape() {
+        let d = generate(
+            &SynthSpec {
+                n: 800,
+                informative: 4,
+                redundant: 2,
+                noise: 6,
+                flip: 0.05,
+                ..Default::default()
+            },
+            3,
+        );
+        let params = Params {
+            n_trees: 10,
+            max_depth: 8,
+            k: 10,
+            ..Default::default()
+        };
+        let row = measure(&d, &params, 1);
+        assert_eq!(
+            row.dare_total,
+            row.structure + row.decision_stats + row.leaf_stats
+        );
+        // Table 3: decision stats dominate the DaRE overhead...
+        assert!(row.decision_stats > row.structure);
+        // ...and the DaRE model is much larger than the lean model...
+        assert!(row.dare_total > 3 * row.sklearn_like);
+        // ...but the *relative* overhead (counting data) is single/double-digit
+        assert!(row.overhead_ratio > 1.0 && row.overhead_ratio < 200.0);
+        assert!(row.mean_decision_nodes > 1.0);
+    }
+
+    #[test]
+    fn more_k_means_more_decision_stats() {
+        let d = generate(
+            &SynthSpec {
+                n: 600,
+                ..Default::default()
+            },
+            4,
+        );
+        let small = measure(
+            &d,
+            &Params {
+                n_trees: 5,
+                max_depth: 6,
+                k: 5,
+                ..Default::default()
+            },
+            1,
+        );
+        let big = measure(
+            &d,
+            &Params {
+                n_trees: 5,
+                max_depth: 6,
+                k: 50,
+                ..Default::default()
+            },
+            1,
+        );
+        assert!(big.decision_stats > small.decision_stats);
+    }
+}

@@ -1,0 +1,13 @@
+//! Evaluation harness: deletion adversaries, cross-validation, the paper's
+//! hyperparameter tuning protocol, speedup measurement, and space-overhead
+//! accounting.
+
+pub mod adversary;
+pub mod cv;
+pub mod memory;
+pub mod speedup;
+pub mod tuner;
+
+pub use adversary::Adversary;
+pub use speedup::{measure as measure_speedup, SpeedupConfig, SpeedupResult};
+pub use tuner::{tune, Grid, TuneResult};

@@ -1,0 +1,180 @@
+//! The paper's two-stage hyperparameter tuning protocol (§4, Appendix B.2):
+//!
+//! 1. Grid-search T (trees), d_max (depth) and k (thresholds/attribute) for
+//!    the greedy model (d_rmax = 0) by 5-fold CV — paper grids:
+//!    T ∈ {10,25,50,100,250}, d_max ∈ {1,3,5,10,20}, k ∈ {5,10,25,50}.
+//! 2. Holding those fixed, increment d_rmax from 0 until the CV score drops
+//!    more than each error tolerance below the greedy model's score,
+//!    recording the largest admissible d_rmax per tolerance
+//!    (paper tolerances: 0.1%, 0.25%, 0.5%, 1.0%).
+
+use crate::data::dataset::Dataset;
+use crate::eval::cv::cv_score;
+use crate::forest::params::{Params, SplitCriterion};
+use crate::metrics::Metric;
+
+/// Search space for stage 1.
+#[derive(Clone, Debug)]
+pub struct Grid {
+    pub n_trees: Vec<usize>,
+    pub max_depth: Vec<usize>,
+    pub k: Vec<usize>,
+}
+
+impl Grid {
+    /// The paper's full grid (Appendix B.2).
+    pub fn paper() -> Self {
+        Grid {
+            n_trees: vec![10, 25, 50, 100, 250],
+            max_depth: vec![1, 3, 5, 10, 20],
+            k: vec![5, 10, 25, 50],
+        }
+    }
+
+    /// A reduced grid for CI-scale runs.
+    pub fn small() -> Self {
+        Grid {
+            n_trees: vec![5, 10, 25],
+            max_depth: vec![3, 5, 8],
+            k: vec![5, 10, 25],
+        }
+    }
+}
+
+/// Tuning output: the greedy optimum and d_rmax per tolerance (Table 6/8).
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub gdare: Params,
+    pub gdare_cv: f64,
+    /// (tolerance, d_rmax, cv score at that d_rmax)
+    pub drmax_per_tol: Vec<(f64, usize, f64)>,
+}
+
+/// Run the full protocol.
+pub fn tune(
+    data: &Dataset,
+    metric: Metric,
+    criterion: SplitCriterion,
+    grid: &Grid,
+    tolerances: &[f64],
+    folds: usize,
+    threads: usize,
+    seed: u64,
+) -> TuneResult {
+    // stage 1: grid-search the greedy model
+    let mut best: Option<(Params, f64)> = None;
+    for &t in &grid.n_trees {
+        for &d in &grid.max_depth {
+            for &k in &grid.k {
+                let params = Params {
+                    n_trees: t,
+                    max_depth: d,
+                    k,
+                    d_rmax: 0,
+                    criterion,
+                    n_threads: threads,
+                    ..Default::default()
+                };
+                let score = cv_score(data, &params, metric, folds, seed);
+                match &best {
+                    Some((_, bs)) if score <= *bs => {}
+                    _ => best = Some((params, score)),
+                }
+            }
+        }
+    }
+    let (gdare, gdare_cv) = best.expect("non-empty grid");
+
+    // stage 2: push d_rmax up per tolerance
+    let mut drmax_per_tol = Vec::with_capacity(tolerances.len());
+    let mut scores_by_drmax: Vec<Option<f64>> = vec![None; gdare.max_depth + 1];
+    scores_by_drmax[0] = Some(gdare_cv);
+    for &tol in tolerances {
+        let budget = tol / 100.0; // tolerances given in percent
+        let mut chosen = 0usize;
+        let mut chosen_score = gdare_cv;
+        for d_rmax in 1..=gdare.max_depth {
+            let score = match scores_by_drmax[d_rmax] {
+                Some(s) => s,
+                None => {
+                    let p = Params {
+                        d_rmax,
+                        ..gdare.clone()
+                    };
+                    let s = cv_score(data, &p, metric, folds, seed);
+                    scores_by_drmax[d_rmax] = Some(s);
+                    s
+                }
+            };
+            if gdare_cv - score > budget {
+                break;
+            }
+            chosen = d_rmax;
+            chosen_score = score;
+        }
+        drmax_per_tol.push((tol, chosen, chosen_score));
+    }
+
+    TuneResult {
+        gdare,
+        gdare_cv,
+        drmax_per_tol,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+
+    fn data() -> Dataset {
+        generate(
+            &SynthSpec {
+                n: 400,
+                informative: 4,
+                redundant: 0,
+                noise: 2,
+                flip: 0.05,
+                ..Default::default()
+            },
+            13,
+        )
+    }
+
+    #[test]
+    fn tune_small_grid_end_to_end() {
+        let d = data();
+        let grid = Grid {
+            n_trees: vec![5],
+            max_depth: vec![3, 6],
+            k: vec![5],
+        };
+        let r = tune(
+            &d,
+            Metric::Accuracy,
+            SplitCriterion::Gini,
+            &grid,
+            &[0.5, 5.0],
+            3,
+            1,
+            1,
+        );
+        assert!(r.gdare_cv > 0.7);
+        assert_eq!(r.gdare.d_rmax, 0);
+        assert!(grid.max_depth.contains(&r.gdare.max_depth));
+        assert_eq!(r.drmax_per_tol.len(), 2);
+        // looser tolerance admits at least as much randomness
+        assert!(r.drmax_per_tol[1].1 >= r.drmax_per_tol[0].1);
+        for (_, drmax, _) in &r.drmax_per_tol {
+            assert!(*drmax <= r.gdare.max_depth);
+        }
+    }
+
+    #[test]
+    fn grids_exist() {
+        let p = Grid::paper();
+        assert_eq!(p.n_trees.len() * p.max_depth.len() * p.k.len(), 100);
+        let s = Grid::small();
+        assert!(s.n_trees.len() * s.max_depth.len() * s.k.len() <= 27);
+    }
+}

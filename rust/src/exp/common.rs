@@ -1,0 +1,179 @@
+//! Shared plumbing for the experiment reproductions (`dare reproduce ...`):
+//! scaled dataset preparation, config, and JSON result output.
+
+use crate::data::dataset::Dataset;
+use crate::data::registry::{corpus, DatasetInfo, PaperParams};
+use crate::data::split::train_test;
+use crate::forest::params::{Params, SplitCriterion};
+use crate::util::json::Value;
+use std::path::PathBuf;
+
+/// Experiment configuration (defaults target a few-minute CI-scale run;
+/// `--scale 1 --repeats 5 --deletions 0` reproduces the paper's protocol).
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    /// Divide each dataset's paper-size n by this (min 800 rows).
+    pub scale_div: usize,
+    /// Repeats per cell (paper: 5).
+    pub repeats: usize,
+    /// Deletion cap per speedup run (0 = unlimited, paper protocol).
+    pub max_deletions: usize,
+    /// Candidate pool for the worst-of adversary (paper: 1000).
+    pub worst_of: usize,
+    /// Dataset name filter (empty = all 14).
+    pub datasets: Vec<String>,
+    /// Split criterion.
+    pub criterion: SplitCriterion,
+    /// Worker threads for training.
+    pub threads: usize,
+    /// Cap on trees/depth for quick smoke runs (0 = paper values).
+    pub max_trees: usize,
+    pub seed: u64,
+    pub out_dir: PathBuf,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            scale_div: 500,
+            repeats: 1,
+            max_deletions: 150,
+            worst_of: 100,
+            datasets: Vec::new(),
+            criterion: SplitCriterion::Gini,
+            threads: crate::util::threadpool::default_threads(),
+            max_trees: 0,
+            seed: 1,
+            out_dir: PathBuf::from("results"),
+        }
+    }
+}
+
+impl ExpConfig {
+    /// Datasets selected by the filter, in Table-1 order.
+    pub fn selected(&self) -> Vec<DatasetInfo> {
+        corpus()
+            .into_iter()
+            .filter(|d| {
+                self.datasets.is_empty()
+                    || self
+                        .datasets
+                        .iter()
+                        .any(|n| n.eq_ignore_ascii_case(d.name))
+            })
+            .collect()
+    }
+
+    /// Paper params for a dataset under the configured criterion, with the
+    /// optional tree cap applied.
+    pub fn paper_params(&self, info: &DatasetInfo) -> PaperParams {
+        let mut pp = match self.criterion {
+            SplitCriterion::Gini => info.gini,
+            SplitCriterion::Entropy => info.entropy,
+        };
+        if self.max_trees > 0 {
+            pp.n_trees = pp.n_trees.min(self.max_trees);
+        }
+        pp
+    }
+
+    /// Instantiate Params from PaperParams with this config's threading.
+    pub fn params(&self, pp: &PaperParams, d_rmax: usize) -> Params {
+        Params {
+            criterion: self.criterion,
+            n_threads: self.threads,
+            ..Params::from_paper(pp, d_rmax)
+        }
+    }
+
+    /// Generate + split one dataset at the configured scale (paper: 80/20).
+    pub fn prepare(&self, info: &DatasetInfo, repeat: u64) -> (Dataset, Dataset) {
+        let full = info.generate(
+            self.scale_div,
+            crate::util::rng::mix_seed(&[self.seed, repeat]),
+        );
+        train_test(&full, 0.8, crate::util::rng::mix_seed(&[self.seed, repeat, 0x59]))
+    }
+
+    /// Write a result JSON under out_dir.
+    pub fn save(&self, name: &str, value: &Value) -> anyhow::Result<PathBuf> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let path = self.out_dir.join(format!("{name}.json"));
+        std::fs::write(&path, value.to_pretty())?;
+        Ok(path)
+    }
+
+    /// Load a previously saved result (for aggregation steps like Table 2).
+    pub fn load(&self, name: &str) -> Option<Value> {
+        let path = self.out_dir.join(format!("{name}.json"));
+        let text = std::fs::read_to_string(path).ok()?;
+        crate::util::json::parse(&text).ok()
+    }
+
+    pub fn criterion_tag(&self) -> &'static str {
+        match self.criterion {
+            SplitCriterion::Gini => "gini",
+            SplitCriterion::Entropy => "entropy",
+        }
+    }
+}
+
+/// The paper's four R-DaRE error tolerances (percent).
+pub const TOLERANCES: [f64; 4] = [0.1, 0.25, 0.5, 1.0];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selection_filters() {
+        let mut cfg = ExpConfig::default();
+        assert_eq!(cfg.selected().len(), 14);
+        cfg.datasets = vec!["surgical".into(), "higgs".into()];
+        let sel = cfg.selected();
+        assert_eq!(sel.len(), 2);
+        assert_eq!(sel[0].name, "surgical");
+    }
+
+    #[test]
+    fn params_respect_caps_and_criterion() {
+        let cfg = ExpConfig {
+            max_trees: 10,
+            criterion: SplitCriterion::Entropy,
+            ..Default::default()
+        };
+        let info = crate::data::registry::find("vaccine").unwrap();
+        let pp = cfg.paper_params(&info);
+        assert_eq!(pp.n_trees, 10); // capped from 250 (entropy table)
+        let p = cfg.params(&pp, 2);
+        assert_eq!(p.d_rmax, 2);
+        assert_eq!(p.criterion, SplitCriterion::Entropy);
+    }
+
+    #[test]
+    fn prepare_shapes() {
+        let cfg = ExpConfig {
+            scale_div: 1000,
+            ..Default::default()
+        };
+        let info = crate::data::registry::find("surgical").unwrap();
+        let (tr, te) = cfg.prepare(&info, 0);
+        assert_eq!(tr.n_features(), info.p);
+        assert!(tr.n_total() >= 600);
+        assert!(te.n_total() >= 100);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = ExpConfig {
+            out_dir: std::env::temp_dir().join("dare_exp_test"),
+            ..Default::default()
+        };
+        let mut v = Value::obj();
+        v.set("x", 1u64);
+        cfg.save("unit", &v).unwrap();
+        let back = cfg.load("unit").unwrap();
+        assert_eq!(back.get("x").unwrap().as_u64(), Some(1));
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

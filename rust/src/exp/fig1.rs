@@ -1,0 +1,211 @@
+//! Figure 1 + Table 2 (and Table 9 with entropy): deletion efficiency of
+//! G-DaRE and R-DaRE (four tolerances) under the random and worst-of-c
+//! adversaries, plus the R-DaRE test-error increase relative to G-DaRE
+//! (Fig. 1 bottom).
+
+use crate::eval::adversary::Adversary;
+use crate::eval::speedup::{measure, SpeedupConfig};
+use crate::exp::common::{ExpConfig, TOLERANCES};
+use crate::util::json::Value;
+use crate::util::stats::{mean, std_dev};
+use crate::util::table::{speedup as fmt_speedup, Table};
+
+/// One (dataset, model, adversary) cell.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub dataset: String,
+    pub model: String,
+    pub adversary: String,
+    pub speedups: Vec<f64>,
+    pub err_increase_pct: Vec<f64>, // vs G-DaRE, same repeat
+    pub n_deleted: Vec<f64>,
+}
+
+/// Full Figure-1 result grid.
+pub struct Fig1Result {
+    pub cells: Vec<Cell>,
+}
+
+pub fn run(cfg: &ExpConfig) -> anyhow::Result<Fig1Result> {
+    let mut cells: Vec<Cell> = Vec::new();
+    let adversaries = [Adversary::Random, Adversary::WorstOf(cfg.worst_of)];
+
+    for info in cfg.selected() {
+        let pp = cfg.paper_params(&info);
+        // model list: G-DaRE + R-DaRE per tolerance (dedupe d_rmax=0 repeats)
+        let mut models: Vec<(String, usize)> = vec![("G-DaRE".to_string(), 0)];
+        for (i, tol) in TOLERANCES.iter().enumerate() {
+            models.push((format!("R-DaRE({tol}%)"), pp.drmax[i]));
+        }
+
+        for adv in adversaries {
+            // per-repeat G-DaRE metric to compute error increases
+            let mut gdare_metric: Vec<f64> = Vec::new();
+            for (model_name, d_rmax) in &models {
+                let params = cfg.params(&pp, *d_rmax);
+                let mut speedups = Vec::new();
+                let mut errs = Vec::new();
+                let mut dels = Vec::new();
+                for rep in 0..cfg.repeats {
+                    let (train, test) = cfg.prepare(&info, rep as u64);
+                    let scfg = SpeedupConfig {
+                        adversary: adv,
+                        max_deletions: cfg.max_deletions,
+                        metric: info.metric,
+                        seed: crate::util::rng::mix_seed(&[cfg.seed, rep as u64, *d_rmax as u64]),
+                    };
+                    let r = measure(&train, &test, &params, &scfg);
+                    speedups.push(r.speedup);
+                    dels.push(r.n_deleted as f64);
+                    if *d_rmax == 0 && model_name == "G-DaRE" {
+                        gdare_metric.push(r.metric_before);
+                        errs.push(0.0);
+                    } else {
+                        let base = gdare_metric.get(rep).copied().unwrap_or(r.metric_before);
+                        // error increase = (base score − this score) in percent
+                        errs.push((base - r.metric_before) * 100.0);
+                    }
+                }
+                eprintln!(
+                    "fig1 [{}] {} {} -> {:.0}x (mean of {} reps)",
+                    info.name,
+                    model_name,
+                    adv.name(),
+                    mean(&speedups),
+                    cfg.repeats
+                );
+                cells.push(Cell {
+                    dataset: info.name.to_string(),
+                    model: model_name.clone(),
+                    adversary: adv.name(),
+                    speedups,
+                    err_increase_pct: errs,
+                    n_deleted: dels,
+                });
+            }
+        }
+    }
+
+    let result = Fig1Result { cells };
+    let json = to_json(&result);
+    cfg.save(&format!("fig1_{}", cfg.criterion_tag()), &json)?;
+    Ok(result)
+}
+
+pub fn to_json(r: &Fig1Result) -> Value {
+    let mut arr = Vec::new();
+    for c in &r.cells {
+        let mut o = Value::obj();
+        o.set("dataset", c.dataset.as_str())
+            .set("model", c.model.as_str())
+            .set("adversary", c.adversary.as_str())
+            .set("speedups", c.speedups.clone())
+            .set("err_increase_pct", c.err_increase_pct.clone())
+            .set("n_deleted", c.n_deleted.clone());
+        arr.push(o);
+    }
+    let mut top = Value::obj();
+    top.set("experiment", "fig1").set("cells", Value::Arr(arr));
+    top
+}
+
+pub fn from_json(v: &Value) -> Option<Fig1Result> {
+    let cells = v.get("cells")?.as_arr()?;
+    let mut out = Vec::new();
+    for c in cells {
+        let nums = |k: &str| -> Vec<f64> {
+            c.get(k)
+                .and_then(Value::as_arr)
+                .map(|a| a.iter().filter_map(Value::as_f64).collect())
+                .unwrap_or_default()
+        };
+        out.push(Cell {
+            dataset: c.get("dataset")?.as_str()?.to_string(),
+            model: c.get("model")?.as_str()?.to_string(),
+            adversary: c.get("adversary")?.as_str()?.to_string(),
+            speedups: nums("speedups"),
+            err_increase_pct: nums("err_increase_pct"),
+            n_deleted: nums("n_deleted"),
+        });
+    }
+    Some(Fig1Result { cells: out })
+}
+
+/// Render the Figure-1 grid as text tables (top/middle/bottom panels).
+pub fn render(r: &Fig1Result) -> String {
+    let mut out = String::new();
+    for adv in ["random", "worst_of"] {
+        let mut t = Table::new(
+            &format!("Figure 1 — deletions per naive-retrain time ({adv} adversary)"),
+            &["dataset", "model", "speedup (mean±std)", "deleted"],
+        );
+        for c in r.cells.iter().filter(|c| c.adversary.starts_with(adv)) {
+            t.row(vec![
+                c.dataset.clone(),
+                c.model.clone(),
+                format!(
+                    "{} ± {:.0}",
+                    fmt_speedup(mean(&c.speedups)),
+                    std_dev(&c.speedups)
+                ),
+                format!("{:.0}", mean(&c.n_deleted)),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    let mut t = Table::new(
+        "Figure 1 (bottom) — R-DaRE test-error increase vs G-DaRE (%)",
+        &["dataset", "model", "err increase (mean)"],
+    );
+    for c in r
+        .cells
+        .iter()
+        .filter(|c| c.adversary == "random" && c.model != "G-DaRE")
+    {
+        t.row(vec![
+            c.dataset.clone(),
+            c.model.clone(),
+            format!("{:+.3}", mean(&c.err_increase_pct)),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExpConfig {
+        ExpConfig {
+            scale_div: 20_000,
+            repeats: 1,
+            max_deletions: 8,
+            worst_of: 8,
+            datasets: vec!["ctr".into()],
+            max_trees: 3,
+            out_dir: std::env::temp_dir().join("dare_fig1_test"),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fig1_tiny_end_to_end() {
+        let cfg = tiny_cfg();
+        let r = run(&cfg).unwrap();
+        // 5 models × 2 adversaries × 1 dataset
+        assert_eq!(r.cells.len(), 10);
+        assert!(r.cells.iter().all(|c| !c.speedups.is_empty()));
+        let text = render(&r);
+        assert!(text.contains("ctr"));
+        assert!(text.contains("G-DaRE"));
+        // json roundtrip
+        let v = to_json(&r);
+        let back = from_json(&v).unwrap();
+        assert_eq!(back.cells.len(), 10);
+        // result file written
+        assert!(cfg.load("fig1_gini").is_some());
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

@@ -1,0 +1,168 @@
+//! Figure 2 (+ Appendix Fig. 4): effect of d_rmax on deletion efficiency
+//! (left), predictive performance (middle), and the retrain-cost-by-depth
+//! histogram (right), for one dataset under both adversaries.
+
+use crate::eval::adversary::Adversary;
+use crate::eval::speedup::{measure, SpeedupConfig};
+use crate::exp::common::ExpConfig;
+use crate::util::json::Value;
+use crate::util::stats::{mean, std_dev, std_err};
+use crate::util::table::Table;
+
+#[derive(Clone, Debug)]
+pub struct DrmaxPoint {
+    pub d_rmax: usize,
+    pub adversary: String,
+    pub speedups: Vec<f64>,
+    pub metric: Vec<f64>,
+    pub cost_by_depth: Vec<u64>,
+}
+
+pub struct Fig2Result {
+    pub dataset: String,
+    pub points: Vec<DrmaxPoint>,
+}
+
+/// Sweep d_rmax from 0 to d_max (sampled levels when d_max is large).
+pub fn run(cfg: &ExpConfig, dataset: &str) -> anyhow::Result<Fig2Result> {
+    let info = crate::data::registry::find(dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset}'"))?;
+    let pp = cfg.paper_params(&info);
+    // sample levels: all up to 6, then every other
+    let levels: Vec<usize> = (0..=pp.max_depth)
+        .filter(|&d| d <= 6 || d % 2 == 0)
+        .collect();
+
+    let mut points = Vec::new();
+    for adv in [Adversary::Random, Adversary::WorstOf(cfg.worst_of)] {
+        for &d_rmax in &levels {
+            let params = cfg.params(&pp, d_rmax);
+            let mut speedups = Vec::new();
+            let mut metric = Vec::new();
+            let mut hist = vec![0u64; pp.max_depth + 1];
+            for rep in 0..cfg.repeats {
+                let (train, test) = cfg.prepare(&info, rep as u64);
+                let r = measure(
+                    &train,
+                    &test,
+                    &params,
+                    &SpeedupConfig {
+                        adversary: adv,
+                        max_deletions: cfg.max_deletions,
+                        metric: info.metric,
+                        seed: crate::util::rng::mix_seed(&[cfg.seed, rep as u64, d_rmax as u64]),
+                    },
+                );
+                speedups.push(r.speedup);
+                metric.push(r.metric_before);
+                for (d, c) in r.cost_by_depth.iter().enumerate() {
+                    hist[d] += c;
+                }
+            }
+            eprintln!(
+                "fig2 [{}] d_rmax={} {} -> {:.0}x, {}={:.4}",
+                info.name,
+                d_rmax,
+                adv.name(),
+                mean(&speedups),
+                info.metric.name(),
+                mean(&metric)
+            );
+            points.push(DrmaxPoint {
+                d_rmax,
+                adversary: adv.name(),
+                speedups,
+                metric,
+                cost_by_depth: hist,
+            });
+        }
+    }
+    let r = Fig2Result {
+        dataset: info.name.to_string(),
+        points,
+    };
+    cfg.save(&format!("fig2_{}_{}", info.name, cfg.criterion_tag()), &to_json(&r))?;
+    Ok(r)
+}
+
+fn to_json(r: &Fig2Result) -> Value {
+    let mut arr = Vec::new();
+    for p in &r.points {
+        let mut o = Value::obj();
+        o.set("d_rmax", p.d_rmax)
+            .set("adversary", p.adversary.as_str())
+            .set("speedups", p.speedups.clone())
+            .set("metric", p.metric.clone())
+            .set(
+                "cost_by_depth",
+                p.cost_by_depth.iter().map(|&c| c as f64).collect::<Vec<f64>>(),
+            );
+        arr.push(o);
+    }
+    let mut top = Value::obj();
+    top.set("experiment", "fig2")
+        .set("dataset", r.dataset.as_str())
+        .set("points", Value::Arr(arr));
+    top
+}
+
+pub fn render(r: &Fig2Result) -> String {
+    let mut out = String::new();
+    for adv_prefix in ["random", "worst_of"] {
+        let mut t = Table::new(
+            &format!(
+                "Figure 2 [{}] — d_rmax sweep ({adv_prefix} adversary)",
+                r.dataset
+            ),
+            &[
+                "d_rmax",
+                "speedup (±std)",
+                "test metric (±se)",
+                "retrained instances (by depth, head)",
+            ],
+        );
+        for p in r.points.iter().filter(|p| p.adversary.starts_with(adv_prefix)) {
+            let head: Vec<String> = p
+                .cost_by_depth
+                .iter()
+                .take(8)
+                .map(|c| c.to_string())
+                .collect();
+            t.row(vec![
+                p.d_rmax.to_string(),
+                format!("{:.0} ± {:.0}", mean(&p.speedups), std_dev(&p.speedups)),
+                format!("{:.4} ± {:.4}", mean(&p.metric), std_err(&p.metric)),
+                head.join(","),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_tiny_sweep() {
+        let cfg = ExpConfig {
+            scale_div: 20_000,
+            repeats: 1,
+            max_deletions: 6,
+            worst_of: 6,
+            max_trees: 2,
+            out_dir: std::env::temp_dir().join("dare_fig2_test"),
+            ..Default::default()
+        };
+        let r = run(&cfg, "ctr").unwrap();
+        assert_eq!(r.dataset, "ctr");
+        // ctr: d_max = 10 → levels 0..6 + 8,10 = 9 levels × 2 adversaries
+        assert_eq!(r.points.len(), 18);
+        // speedup should (weakly) increase with d_rmax at the extremes
+        let text = render(&r);
+        assert!(text.contains("d_rmax"));
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

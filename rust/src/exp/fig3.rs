@@ -1,0 +1,123 @@
+//! Figure 3 (+ Appendix Fig. 5): effect of k (thresholds per attribute) on
+//! predictive performance and deletion efficiency, d_rmax fixed at 0.
+
+use crate::eval::adversary::Adversary;
+use crate::eval::speedup::{measure, SpeedupConfig};
+use crate::exp::common::ExpConfig;
+use crate::util::json::Value;
+use crate::util::stats::{mean, std_dev, std_err};
+use crate::util::table::Table;
+
+#[derive(Clone, Debug)]
+pub struct KPoint {
+    pub k: usize,
+    pub speedups: Vec<f64>,
+    pub metric: Vec<f64>,
+}
+
+pub struct Fig3Result {
+    pub dataset: String,
+    pub points: Vec<KPoint>,
+}
+
+/// Sweep the paper's k grid {1, 5, 10, 25, 50, 100} (Appendix B.4).
+pub fn run(cfg: &ExpConfig, dataset: &str, ks: &[usize]) -> anyhow::Result<Fig3Result> {
+    let info = crate::data::registry::find(dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset}'"))?;
+    let pp = cfg.paper_params(&info);
+    let mut points = Vec::new();
+    for &k in ks {
+        let mut p = cfg.params(&pp, 0);
+        p.k = k;
+        let mut speedups = Vec::new();
+        let mut metric = Vec::new();
+        for rep in 0..cfg.repeats {
+            let (train, test) = cfg.prepare(&info, rep as u64);
+            let r = measure(
+                &train,
+                &test,
+                &p,
+                &SpeedupConfig {
+                    adversary: Adversary::Random,
+                    max_deletions: cfg.max_deletions,
+                    metric: info.metric,
+                    seed: crate::util::rng::mix_seed(&[cfg.seed, rep as u64, k as u64]),
+                },
+            );
+            speedups.push(r.speedup);
+            metric.push(r.metric_before);
+        }
+        eprintln!(
+            "fig3 [{}] k={} -> {:.0}x, {}={:.4}",
+            info.name,
+            k,
+            mean(&speedups),
+            info.metric.name(),
+            mean(&metric)
+        );
+        points.push(KPoint {
+            k,
+            speedups,
+            metric,
+        });
+    }
+    let r = Fig3Result {
+        dataset: info.name.to_string(),
+        points,
+    };
+    let mut arr = Vec::new();
+    for p in &r.points {
+        let mut o = Value::obj();
+        o.set("k", p.k)
+            .set("speedups", p.speedups.clone())
+            .set("metric", p.metric.clone());
+        arr.push(o);
+    }
+    let mut top = Value::obj();
+    top.set("experiment", "fig3")
+        .set("dataset", r.dataset.as_str())
+        .set("points", Value::Arr(arr));
+    cfg.save(&format!("fig3_{}_{}", info.name, cfg.criterion_tag()), &top)?;
+    Ok(r)
+}
+
+pub fn render(r: &Fig3Result) -> String {
+    let mut t = Table::new(
+        &format!(
+            "Figure 3 [{}] — k sweep (random adversary, d_rmax=0)",
+            r.dataset
+        ),
+        &["k", "test metric (±se)", "speedup (±std)"],
+    );
+    for p in &r.points {
+        t.row(vec![
+            p.k.to_string(),
+            format!("{:.4} ± {:.4}", mean(&p.metric), std_err(&p.metric)),
+            format!("{:.0} ± {:.0}", mean(&p.speedups), std_dev(&p.speedups)),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_tiny_sweep() {
+        let cfg = ExpConfig {
+            scale_div: 20_000,
+            repeats: 1,
+            max_deletions: 6,
+            max_trees: 2,
+            out_dir: std::env::temp_dir().join("dare_fig3_test"),
+            ..Default::default()
+        };
+        let r = run(&cfg, "twitter", &[1, 10]).unwrap();
+        assert_eq!(r.points.len(), 2);
+        assert_eq!(r.points[0].k, 1);
+        let text = render(&r);
+        assert!(text.contains("twitter"));
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

@@ -1,0 +1,25 @@
+//! Experiment reproductions: one module per paper table/figure
+//! (see DESIGN.md §4 for the index). All are driven by `dare reproduce`.
+//!
+//! | module  | paper artifact                                  |
+//! |---------|--------------------------------------------------|
+//! | fig1    | Fig. 1 — deletion efficiency grid + error deltas |
+//! | table2  | Table 2 (Gini) / Table 9 (entropy) summaries     |
+//! | fig2    | Fig. 2 / Fig. 4 — d_rmax sweeps                  |
+//! | fig3    | Fig. 3 / Fig. 5 — k sweeps                       |
+//! | table3  | Table 3 — memory breakdown                       |
+//! | table5  | Table 5 — predictive performance comparison      |
+//! | table6  | Table 6 (Gini) / Table 8 (entropy) — tuning      |
+//! | table7  | Table 7 — training time                          |
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod table2;
+pub mod table3;
+pub mod table5;
+pub mod table6;
+pub mod table7;
+
+pub use common::{ExpConfig, TOLERANCES};

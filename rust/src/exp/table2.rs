@@ -1,0 +1,145 @@
+//! Table 2 (Gini) / Table 9 (entropy): min / max / geometric-mean speedup
+//! over all datasets, per model and adversary — aggregated from the Fig. 1
+//! grid (reusing results/fig1_<criterion>.json when present).
+
+use crate::exp::common::ExpConfig;
+use crate::exp::fig1::{self, Fig1Result};
+use crate::util::stats::{geo_mean, mean};
+use crate::util::table::{speedup as fmt, Table};
+
+#[derive(Clone, Debug)]
+pub struct SummaryRow {
+    pub adversary: String,
+    pub model: String,
+    pub min: f64,
+    pub max: f64,
+    pub gmean: f64,
+}
+
+pub fn summarize(r: &Fig1Result) -> Vec<SummaryRow> {
+    let mut rows = Vec::new();
+    let mut keys: Vec<(String, String)> = Vec::new();
+    for c in &r.cells {
+        let key = (c.adversary.clone(), c.model.clone());
+        if !keys.contains(&key) {
+            keys.push(key);
+        }
+    }
+    for (adv, model) in keys {
+        let per_dataset: Vec<f64> = r
+            .cells
+            .iter()
+            .filter(|c| c.adversary == adv && c.model == model)
+            .map(|c| mean(&c.speedups))
+            .collect();
+        if per_dataset.is_empty() {
+            continue;
+        }
+        let (min, max) = crate::util::stats::min_max(&per_dataset);
+        rows.push(SummaryRow {
+            adversary: adv,
+            model,
+            min,
+            max,
+            gmean: geo_mean(&per_dataset),
+        });
+    }
+    rows
+}
+
+pub fn run(cfg: &ExpConfig) -> anyhow::Result<Vec<SummaryRow>> {
+    let name = format!("fig1_{}", cfg.criterion_tag());
+    let fig1_result = match cfg.load(&name).and_then(|v| fig1::from_json(&v)) {
+        Some(r) => {
+            eprintln!("table2: reusing {}/{}.json", cfg.out_dir.display(), name);
+            r
+        }
+        None => fig1::run(cfg)?,
+    };
+    let rows = summarize(&fig1_result);
+
+    // save
+    let mut arr = Vec::new();
+    for r in &rows {
+        let mut o = crate::util::json::Value::obj();
+        o.set("adversary", r.adversary.as_str())
+            .set("model", r.model.as_str())
+            .set("min", r.min)
+            .set("max", r.max)
+            .set("gmean", r.gmean);
+        arr.push(o);
+    }
+    let mut top = crate::util::json::Value::obj();
+    top.set("experiment", "table2")
+        .set("rows", crate::util::json::Value::Arr(arr));
+    let out_name = match cfg.criterion_tag() {
+        "entropy" => "table9",
+        _ => "table2",
+    };
+    cfg.save(out_name, &top)?;
+    Ok(rows)
+}
+
+pub fn render(rows: &[SummaryRow], criterion: &str) -> String {
+    let title = if criterion == "entropy" {
+        "Table 9 — deletion-efficiency summary (entropy)"
+    } else {
+        "Table 2 — deletion-efficiency summary (Gini)"
+    };
+    let mut out = String::new();
+    for adv_prefix in ["random", "worst_of"] {
+        let mut t = Table::new(
+            &format!("{title} — {adv_prefix} adversary"),
+            &["model", "min", "max", "g-mean"],
+        );
+        for r in rows.iter().filter(|r| r.adversary.starts_with(adv_prefix)) {
+            t.row(vec![
+                r.model.clone(),
+                fmt(r.min),
+                fmt(r.max),
+                fmt(r.gmean),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::fig1::Cell;
+
+    #[test]
+    fn summarize_grid() {
+        let r = Fig1Result {
+            cells: vec![
+                Cell {
+                    dataset: "a".into(),
+                    model: "G-DaRE".into(),
+                    adversary: "random".into(),
+                    speedups: vec![10.0, 20.0],
+                    err_increase_pct: vec![],
+                    n_deleted: vec![],
+                },
+                Cell {
+                    dataset: "b".into(),
+                    model: "G-DaRE".into(),
+                    adversary: "random".into(),
+                    speedups: vec![1000.0],
+                    err_increase_pct: vec![],
+                    n_deleted: vec![],
+                },
+            ],
+        };
+        let rows = summarize(&r);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].min, 15.0);
+        assert_eq!(rows[0].max, 1000.0);
+        assert!((rows[0].gmean - (15.0f64 * 1000.0).sqrt()).abs() < 1e-9);
+        let text = render(&rows, "gini");
+        assert!(text.contains("Table 2"));
+        assert!(text.contains("G-DaRE"));
+    }
+}

@@ -1,0 +1,112 @@
+//! Table 3: memory usage breakdown — training data, G-DaRE structure /
+//! decision stats / leaf stats, a lean standard-RF model at the same T and
+//! d_max, and the (data + DaRE)/(data + RF) overhead ratio.
+
+use crate::eval::memory::{measure, MemoryRow};
+use crate::exp::common::ExpConfig;
+use crate::util::json::Value;
+use crate::util::table::Table;
+
+pub struct Table3Result {
+    pub rows: Vec<(String, MemoryRow)>,
+}
+
+pub fn run(cfg: &ExpConfig) -> anyhow::Result<Table3Result> {
+    let mut rows = Vec::new();
+    for info in cfg.selected() {
+        let pp = cfg.paper_params(&info);
+        let params = cfg.params(&pp, 0); // G-DaRE
+        let (train, _) = cfg.prepare(&info, 0);
+        let row = measure(&train, &params, cfg.seed);
+        eprintln!(
+            "table3 [{}] data={}KB dare={}KB rf={}KB overhead={:.1}x",
+            info.name,
+            row.data_bytes / 1024,
+            row.dare_total / 1024,
+            row.sklearn_like / 1024,
+            row.overhead_ratio
+        );
+        rows.push((info.name.to_string(), row));
+    }
+    let r = Table3Result { rows };
+    cfg.save(&format!("table3_{}", cfg.criterion_tag()), &to_json(&r))?;
+    Ok(r)
+}
+
+fn to_json(r: &Table3Result) -> Value {
+    let mut arr = Vec::new();
+    for (name, row) in &r.rows {
+        let mut o = Value::obj();
+        o.set("dataset", name.as_str())
+            .set("data_bytes", row.data_bytes)
+            .set("structure", row.structure)
+            .set("decision_stats", row.decision_stats)
+            .set("leaf_stats", row.leaf_stats)
+            .set("dare_total", row.dare_total)
+            .set("sklearn_like", row.sklearn_like)
+            .set("overhead_ratio", row.overhead_ratio)
+            .set("mean_decision_nodes", row.mean_decision_nodes);
+        arr.push(o);
+    }
+    let mut top = Value::obj();
+    top.set("experiment", "table3").set("rows", Value::Arr(arr));
+    top
+}
+
+fn mb(bytes: usize) -> String {
+    format!("{:.2}", bytes as f64 / 1e6)
+}
+
+pub fn render(r: &Table3Result) -> String {
+    let mut t = Table::new(
+        "Table 3 — memory usage (MB)",
+        &[
+            "dataset",
+            "data",
+            "structure",
+            "decision stats",
+            "leaf stats",
+            "total",
+            "lean RF",
+            "overhead",
+        ],
+    );
+    for (name, row) in &r.rows {
+        t.row(vec![
+            name.clone(),
+            mb(row.data_bytes),
+            mb(row.structure),
+            mb(row.decision_stats),
+            mb(row.leaf_stats),
+            mb(row.dare_total),
+            mb(row.sklearn_like),
+            format!("{:.1}x", row.overhead_ratio),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_two_datasets() {
+        let cfg = ExpConfig {
+            scale_div: 20_000,
+            datasets: vec!["ctr".into(), "credit_card".into()],
+            max_trees: 3,
+            out_dir: std::env::temp_dir().join("dare_table3_test"),
+            ..Default::default()
+        };
+        let r = run(&cfg).unwrap();
+        assert_eq!(r.rows.len(), 2);
+        for (_, row) in &r.rows {
+            assert!(row.overhead_ratio >= 1.0);
+            assert!(row.dare_total > row.sklearn_like);
+        }
+        let text = render(&r);
+        assert!(text.contains("overhead"));
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

@@ -1,0 +1,158 @@
+//! Table 5: predictive performance of G-DaRE RF against Random Trees,
+//! Extra Trees, and a standard RF with and without bootstrapping,
+//! averaged over repeats.
+
+use crate::baselines::simple::{BaselineForest, BaselineKind, BaselineParams};
+use crate::exp::common::ExpConfig;
+use crate::forest::forest::DareForest;
+use crate::util::json::Value;
+use crate::util::stats::{mean, std_err};
+use crate::util::table::Table;
+
+#[derive(Clone, Debug)]
+pub struct Table5Row {
+    pub dataset: String,
+    pub metric: &'static str,
+    /// model name → per-repeat scores
+    pub scores: Vec<(String, Vec<f64>)>,
+}
+
+pub struct Table5Result {
+    pub rows: Vec<Table5Row>,
+}
+
+pub fn run(cfg: &ExpConfig) -> anyhow::Result<Table5Result> {
+    let mut rows = Vec::new();
+    for info in cfg.selected() {
+        let pp = cfg.paper_params(&info);
+        let models: Vec<String> = vec![
+            "RandomTrees".into(),
+            "ExtraTrees".into(),
+            "StandardRF".into(),
+            "StandardRF(bootstrap)".into(),
+            "G-DaRE".into(),
+        ];
+        let mut scores: Vec<(String, Vec<f64>)> =
+            models.iter().map(|m| (m.clone(), Vec::new())).collect();
+
+        for rep in 0..cfg.repeats {
+            let (train, test) = cfg.prepare(&info, rep as u64);
+            let (_, test_ys, _) = test.to_row_major();
+            let seed = crate::util::rng::mix_seed(&[cfg.seed, rep as u64, 0x7AB5]);
+
+            for (mi, model) in models.iter().enumerate() {
+                let probs: Vec<f32> = match model.as_str() {
+                    "G-DaRE" => {
+                        let params = cfg.params(&pp, 0);
+                        let f = DareForest::fit(train.clone(), &params, seed);
+                        f.predict_proba_dataset(&test)
+                    }
+                    name => {
+                        let kind = match name {
+                            "RandomTrees" => BaselineKind::RandomTrees,
+                            "ExtraTrees" => BaselineKind::ExtraTrees,
+                            _ => BaselineKind::Standard,
+                        };
+                        let bp = BaselineParams {
+                            kind,
+                            n_trees: pp.n_trees,
+                            max_depth: pp.max_depth,
+                            criterion: cfg.criterion,
+                            bootstrap: name.contains("bootstrap"),
+                            n_threads: cfg.threads,
+                            ..Default::default()
+                        };
+                        let f = BaselineForest::fit(&train, &bp, seed);
+                        f.predict_proba_dataset(&test)
+                    }
+                };
+                scores[mi].1.push(info.metric.score(&probs, &test_ys));
+            }
+        }
+        eprintln!(
+            "table5 [{}] {}: {}",
+            info.name,
+            info.metric.name(),
+            scores
+                .iter()
+                .map(|(m, s)| format!("{m}={:.4}", mean(s)))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+        rows.push(Table5Row {
+            dataset: info.name.to_string(),
+            metric: info.metric.name(),
+            scores,
+        });
+    }
+    let r = Table5Result { rows };
+    cfg.save(&format!("table5_{}", cfg.criterion_tag()), &to_json(&r))?;
+    Ok(r)
+}
+
+fn to_json(r: &Table5Result) -> Value {
+    let mut arr = Vec::new();
+    for row in &r.rows {
+        let mut o = Value::obj();
+        o.set("dataset", row.dataset.as_str())
+            .set("metric", row.metric);
+        let mut models = Value::obj();
+        for (m, s) in &row.scores {
+            models.set(m, s.clone());
+        }
+        o.set("models", models);
+        arr.push(o);
+    }
+    let mut top = Value::obj();
+    top.set("experiment", "table5").set("rows", Value::Arr(arr));
+    top
+}
+
+pub fn render(r: &Table5Result) -> String {
+    let headers: Vec<&str> = vec![
+        "dataset",
+        "metric",
+        "RandomTrees",
+        "ExtraTrees",
+        "StandardRF",
+        "StdRF(boot)",
+        "G-DaRE",
+    ];
+    let mut t = Table::new("Table 5 — predictive performance (mean ± se)", &headers);
+    for row in &r.rows {
+        let mut cells = vec![row.dataset.clone(), row.metric.to_string()];
+        for (_, s) in &row.scores {
+            cells.push(format!("{:.3}±{:.3}", mean(s), std_err(s)));
+        }
+        t.row(cells);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_one_dataset() {
+        let cfg = ExpConfig {
+            scale_div: 20_000,
+            repeats: 2,
+            datasets: vec!["twitter".into()],
+            max_trees: 3,
+            out_dir: std::env::temp_dir().join("dare_table5_test"),
+            ..Default::default()
+        };
+        let r = run(&cfg).unwrap();
+        assert_eq!(r.rows.len(), 1);
+        assert_eq!(r.rows[0].scores.len(), 5);
+        assert!(r.rows[0].scores.iter().all(|(_, s)| s.len() == 2));
+        // all models beat random guessing on AUC
+        for (m, s) in &r.rows[0].scores {
+            assert!(mean(s) > 0.5, "{m}: {}", mean(s));
+        }
+        let text = render(&r);
+        assert!(text.contains("G-DaRE"));
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

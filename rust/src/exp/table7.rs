@@ -1,0 +1,104 @@
+//! Table 7: G-DaRE training time per dataset (mean ± std over repeats).
+
+use crate::exp::common::ExpConfig;
+use crate::forest::forest::DareForest;
+use crate::util::json::Value;
+use crate::util::stats::{mean, std_dev};
+use crate::util::table::Table;
+use crate::util::timer::time;
+
+#[derive(Clone, Debug)]
+pub struct Table7Row {
+    pub dataset: String,
+    pub n_train: usize,
+    pub seconds: Vec<f64>,
+}
+
+pub struct Table7Result {
+    pub rows: Vec<Table7Row>,
+}
+
+pub fn run(cfg: &ExpConfig) -> anyhow::Result<Table7Result> {
+    let mut rows = Vec::new();
+    for info in cfg.selected() {
+        let pp = cfg.paper_params(&info);
+        let params = cfg.params(&pp, 0);
+        let mut seconds = Vec::new();
+        let mut n_train = 0;
+        for rep in 0..cfg.repeats.max(1) {
+            let (train, _) = cfg.prepare(&info, rep as u64);
+            n_train = train.n_total();
+            let (_, secs) = time(|| {
+                DareForest::fit(
+                    train,
+                    &params,
+                    crate::util::rng::mix_seed(&[cfg.seed, rep as u64]),
+                )
+            });
+            seconds.push(secs);
+        }
+        eprintln!(
+            "table7 [{}] n={} -> {:.2}s ± {:.2}",
+            info.name,
+            n_train,
+            mean(&seconds),
+            std_dev(&seconds)
+        );
+        rows.push(Table7Row {
+            dataset: info.name.to_string(),
+            n_train,
+            seconds,
+        });
+    }
+    let result = Table7Result { rows };
+    let mut arr = Vec::new();
+    for r in &result.rows {
+        let mut o = Value::obj();
+        o.set("dataset", r.dataset.as_str())
+            .set("n_train", r.n_train)
+            .set("seconds", r.seconds.clone());
+        arr.push(o);
+    }
+    let mut top = Value::obj();
+    top.set("experiment", "table7").set("rows", Value::Arr(arr));
+    cfg.save(&format!("table7_{}", cfg.criterion_tag()), &top)?;
+    Ok(result)
+}
+
+pub fn render(r: &Table7Result) -> String {
+    let mut t = Table::new(
+        "Table 7 — G-DaRE training time (seconds)",
+        &["dataset", "n_train", "mean", "s.d."],
+    );
+    for row in &r.rows {
+        t.row(vec![
+            row.dataset.clone(),
+            row.n_train.to_string(),
+            format!("{:.2}", mean(&row.seconds)),
+            format!("{:.2}", std_dev(&row.seconds)),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table7_times_two_datasets() {
+        let cfg = ExpConfig {
+            scale_div: 20_000,
+            repeats: 2,
+            datasets: vec!["ctr".into(), "higgs".into()],
+            max_trees: 3,
+            out_dir: std::env::temp_dir().join("dare_table7_test"),
+            ..Default::default()
+        };
+        let r = run(&cfg).unwrap();
+        assert_eq!(r.rows.len(), 2);
+        assert!(r.rows.iter().all(|row| row.seconds.iter().all(|&s| s > 0.0)));
+        assert!(render(&r).contains("higgs"));
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

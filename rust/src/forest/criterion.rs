@@ -1,0 +1,128 @@
+//! Split criteria (paper Eq. 2 and Eq. 3), computed from cached counts in
+//! O(1) per (attribute, threshold) pair — the property that makes DaRE's
+//! post-deletion rescoring cheap (Theorem 3.3).
+//!
+//! These scalar routines are the semantic reference for the L1 Pallas kernel
+//! (`python/compile/kernels/split_scores.py`); `runtime::scorer` checks the
+//! PJRT-executed kernel against them bit-for-bit at f32 granularity.
+
+use crate::forest::params::SplitCriterion;
+
+/// Weighted Gini index of a binary split (Eq. 2). Lower is better.
+///
+/// `n`/`n_pos`: instances and positives at the node;
+/// `n_l`/`n_l_pos`: instances and positives in the left branch (x ≤ v).
+#[inline]
+pub fn gini(n: u32, n_pos: u32, n_l: u32, n_l_pos: u32) -> f64 {
+    debug_assert!(n_l <= n && n_l_pos <= n_pos);
+    let n_r = n - n_l;
+    let n_r_pos = n_pos - n_l_pos;
+    let side = |nb: u32, nb_pos: u32| -> f64 {
+        if nb == 0 {
+            return 0.0;
+        }
+        let p1 = nb_pos as f64 / nb as f64;
+        let p0 = 1.0 - p1;
+        (nb as f64 / n as f64) * (1.0 - p1 * p1 - p0 * p0)
+    };
+    side(n_l, n_l_pos) + side(n_r, n_r_pos)
+}
+
+/// Weighted entropy of a binary split (Eq. 3). Lower is better.
+#[inline]
+pub fn entropy(n: u32, n_pos: u32, n_l: u32, n_l_pos: u32) -> f64 {
+    debug_assert!(n_l <= n && n_l_pos <= n_pos);
+    let n_r = n - n_l;
+    let n_r_pos = n_pos - n_l_pos;
+    let h = |p: f64| -> f64 {
+        if p <= 0.0 || p >= 1.0 {
+            0.0
+        } else {
+            -p * p.log2() - (1.0 - p) * (1.0 - p).log2()
+        }
+    };
+    let side = |nb: u32, nb_pos: u32| -> f64 {
+        if nb == 0 {
+            return 0.0;
+        }
+        (nb as f64 / n as f64) * h(nb_pos as f64 / nb as f64)
+    };
+    side(n_l, n_l_pos) + side(n_r, n_r_pos)
+}
+
+/// Dispatch on the configured criterion.
+#[inline]
+pub fn split_score(c: SplitCriterion, n: u32, n_pos: u32, n_l: u32, n_l_pos: u32) -> f64 {
+    match c {
+        SplitCriterion::Gini => gini(n, n_pos, n_l, n_l_pos),
+        SplitCriterion::Entropy => entropy(n, n_pos, n_l, n_l_pos),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gini_pure_split_is_zero() {
+        // 4 instances, 2 pos; left = both pos, right = both neg
+        assert_eq!(gini(4, 2, 2, 2), 0.0);
+    }
+
+    #[test]
+    fn gini_useless_split_max() {
+        // 50/50 at node and in both branches → 0.5
+        let g = gini(8, 4, 4, 2);
+        assert!((g - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gini_known_value() {
+        // n=10, pos=4; left: 6 instances 1 pos; right: 4 instances 3 pos
+        // left gini = 1 - (1/6)^2 - (5/6)^2 = 10/36; right = 1 - 9/16 - 1/16 = 6/16
+        let expect = 0.6 * (10.0 / 36.0) + 0.4 * (6.0 / 16.0);
+        assert!((gini(10, 4, 6, 1) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_pure_split_is_zero() {
+        assert_eq!(entropy(4, 2, 2, 2), 0.0);
+    }
+
+    #[test]
+    fn entropy_useless_split_is_one() {
+        assert!((entropy(8, 4, 4, 2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_known_value() {
+        // left: 2 of 4 pos → H=1, weight 0.5; right: 0 of 4 → H=0
+        assert!((entropy(8, 2, 4, 2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_side_contributes_zero() {
+        assert!(gini(5, 2, 0, 0).is_finite());
+        assert!(entropy(5, 2, 0, 0).is_finite());
+        assert!((gini(5, 2, 5, 2) - gini(5, 2, 0, 0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn informative_beats_uninformative() {
+        for c in [SplitCriterion::Gini, SplitCriterion::Entropy] {
+            let good = split_score(c, 100, 50, 50, 45); // mostly separates
+            let bad = split_score(c, 100, 50, 50, 25); // no separation
+            assert!(good < bad, "{c:?}: {good} !< {bad}");
+        }
+    }
+
+    #[test]
+    fn symmetry_left_right() {
+        // swapping branch contents leaves the weighted score unchanged
+        for c in [SplitCriterion::Gini, SplitCriterion::Entropy] {
+            let a = split_score(c, 10, 4, 6, 1);
+            let b = split_score(c, 10, 4, 4, 3); // complementary branch
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

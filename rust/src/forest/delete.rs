@@ -1,0 +1,907 @@
+//! Deletion (paper Alg. 2 / Alg. 3 DELETE), addition (§6 continual
+//! learning), and the non-mutating deletion-cost dry run used by the
+//! worst-of-1000 adversary (§4.1).
+//!
+//! Deletion walks the instance's root→leaf path, updating cached statistics
+//! top-down. A subtree is retrained only when the updated statistics say the
+//! structure must change:
+//! - any node: collapses to a leaf when the updated data is pure or too small
+//!   (matching the TRAIN stopping criteria — scratch equality);
+//! - random node: a branch emptied ⇒ the node is retrained from its leaves'
+//!   data with its *path-derived* seed, which replays exactly what scratch
+//!   training on the updated data would build;
+//! - greedy node: invalidated thresholds/attributes are resampled per
+//!   Lemma A.1, scores are recomputed from the cached counts, and only a
+//!   *changed argmax* forces retraining the two children on the new split.
+
+use crate::data::dataset::InstanceId;
+use crate::forest::criterion::split_score;
+use crate::forest::node::Node;
+use crate::forest::stats::{enumerate_valid, resample_invalid, sample_thresholds, AttrStats};
+use crate::forest::train::{
+    child_path, gather_pairs, make_leaf, partition, select_best, train, TrainCtx,
+};
+use crate::util::rng::{mix_seed, Rng};
+
+/// One subtree-retrain event (for Fig. 2's cost-by-depth histogram).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetrainEvent {
+    pub depth: usize,
+    /// Instances assigned to the retrained node (after the update).
+    pub n: u32,
+}
+
+/// What a single deletion/addition did to one tree.
+#[derive(Clone, Debug, Default)]
+pub struct DeleteReport {
+    pub retrain_events: Vec<RetrainEvent>,
+    pub thresholds_resampled: u64,
+    pub attrs_resampled: u64,
+}
+
+impl DeleteReport {
+    /// The paper's retrain-cost measure: total instances across retrained
+    /// nodes.
+    pub fn cost(&self) -> u64 {
+        self.retrain_events.iter().map(|e| e.n as u64).sum()
+    }
+    pub fn merge(&mut self, o: &DeleteReport) {
+        self.retrain_events.extend_from_slice(&o.retrain_events);
+        self.thresholds_resampled += o.thresholds_resampled;
+        self.attrs_resampled += o.attrs_resampled;
+    }
+}
+
+/// Per-deletion RNG for Lemma A.1 resampling; `epoch` is a per-tree update
+/// counter so successive deletions draw fresh randomness.
+fn delete_rng(tree_seed: u64, path: u64, epoch: u64) -> Rng {
+    Rng::new(mix_seed(&[tree_seed, path, 0xDE1E_7E00, epoch]))
+}
+
+/// Delete instance `id` from the subtree at `node` (paper Alg. 2).
+/// `ctx.data` must still contain the instance (the forest marks it removed
+/// from the database only after all trees are updated).
+pub fn delete(
+    ctx: &TrainCtx<'_>,
+    node: &mut Node,
+    id: InstanceId,
+    depth: usize,
+    path: u64,
+    epoch: u64,
+    report: &mut DeleteReport,
+) {
+    let y = ctx.data.y(id);
+
+    // ---- leaf: Alg. 2 lines 3–6 -----------------------------------------
+    if let Node::Leaf(l) = node {
+        let pos = l
+            .ids
+            .iter()
+            .position(|&i| i == id)
+            .expect("deleting an instance absent from its leaf");
+        l.ids.swap_remove(pos);
+        l.n -= 1;
+        l.n_pos -= y as u32;
+        return;
+    }
+
+    // ---- decision node ----------------------------------------------------
+    let n_new = node.n() - 1;
+    let pos_new = node.n_pos() - y as u32;
+
+    // Collapse to a leaf when scratch training would stop here now.
+    if n_new < ctx.params.min_samples_split as u32 || pos_new == 0 || pos_new == n_new {
+        let mut ids = Vec::with_capacity(n_new as usize);
+        node.collect_ids(Some(id), &mut ids);
+        report.retrain_events.push(RetrainEvent { depth, n: n_new });
+        *node = make_leaf(ctx.data, ids);
+        return;
+    }
+
+    if matches!(node, Node::Random(_)) {
+        delete_random(ctx, node, id, y, n_new, pos_new, depth, path, epoch, report);
+    } else {
+        delete_greedy(ctx, node, id, y, n_new, pos_new, depth, path, epoch, report);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn delete_random(
+    ctx: &TrainCtx<'_>,
+    node: &mut Node,
+    id: InstanceId,
+    _y: u8,
+    n_new: u32,
+    pos_new: u32,
+    depth: usize,
+    path: u64,
+    epoch: u64,
+    report: &mut DeleteReport,
+) {
+    // stage 1: update counts; decide whether the threshold fell out of range
+    let (goes_left, needs_retrain) = {
+        let Node::Random(r) = &mut *node else { unreachable!() };
+        r.n = n_new;
+        r.n_pos = pos_new;
+        let xa = ctx.data.x(id, r.attr);
+        let gl = xa <= r.v;
+        if gl {
+            r.n_left -= 1;
+        } else {
+            r.n_right -= 1;
+        }
+        (gl, r.n_left == 0 || r.n_right == 0)
+    };
+
+    if needs_retrain {
+        // Threshold no longer inside [a_min, a_max): retrain this node with
+        // its path seed — identical to scratch training on the updated data
+        // (Alg. 2 lines 10–17, derandomized; DESIGN.md §5).
+        let mut ids = Vec::with_capacity(n_new as usize);
+        node.collect_ids(Some(id), &mut ids);
+        report.retrain_events.push(RetrainEvent { depth, n: n_new });
+        *node = train(ctx, ids, depth, path);
+        return;
+    }
+
+    let Node::Random(r) = node else { unreachable!() };
+    let (next, right) = if goes_left {
+        (&mut r.left, false)
+    } else {
+        (&mut r.right, true)
+    };
+    delete(
+        ctx,
+        next,
+        id,
+        depth + 1,
+        child_path(path, depth, right),
+        epoch,
+        report,
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn delete_greedy(
+    ctx: &TrainCtx<'_>,
+    node: &mut Node,
+    id: InstanceId,
+    y: u8,
+    n_new: u32,
+    pos_new: u32,
+    depth: usize,
+    path: u64,
+    epoch: u64,
+    report: &mut DeleteReport,
+) {
+    // stage 1: update node + threshold statistics (Alg. 2 line 8): O(p̃·k)
+    let (old_attr, old_v, any_invalid) = {
+        let Node::Greedy(g) = &mut *node else { unreachable!() };
+        g.n = n_new;
+        g.n_pos = pos_new;
+        let old_attr = g.split_attr();
+        let old_v = g.split_v();
+        let mut any_invalid = false;
+        for a in g.attrs.iter_mut() {
+            let xa = ctx.data.x(id, a.attr);
+            for t in a.thresholds.iter_mut() {
+                t.remove(xa, y);
+                any_invalid |= !t.is_valid();
+            }
+        }
+        (old_attr, old_v, any_invalid)
+    };
+
+    // stage 2: resample invalidated thresholds / attributes (Lemma A.1);
+    // requires gathering the node's data from its leaves (§3.1).
+    let mut gathered: Option<Vec<InstanceId>> = None;
+    if any_invalid {
+        let mut ids = Vec::with_capacity(n_new as usize);
+        node.collect_ids(Some(id), &mut ids);
+
+        let made_leaf = {
+            let Node::Greedy(g) = &mut *node else { unreachable!() };
+            let mut rng = delete_rng(ctx.tree_seed, path, epoch);
+            let mut dead_slots: Vec<usize> = Vec::new();
+            for (slot, a) in g.attrs.iter_mut().enumerate() {
+                if a.thresholds.iter().all(|t| t.is_valid()) {
+                    continue;
+                }
+                let mut pairs = gather_pairs(ctx.data, &ids, a.attr);
+                let candidates = enumerate_valid(&mut pairs);
+                report.thresholds_resampled +=
+                    resample_invalid(&mut a.thresholds, &candidates, ctx.params.k, &mut rng)
+                        as u64;
+                if a.thresholds.is_empty() {
+                    dead_slots.push(slot);
+                }
+            }
+            // Attributes with no remaining valid thresholds are replaced by
+            // uniformly drawn valid attributes (§A.1).
+            if !dead_slots.is_empty() {
+                let in_use: Vec<usize> = g.attrs.iter().map(|a| a.attr).collect();
+                let p = ctx.data.n_features();
+                let mut pool: Vec<usize> = (0..p).filter(|a| !in_use.contains(a)).collect();
+                rng.shuffle(&mut pool);
+                let mut pool_iter = pool.into_iter();
+                for slot in dead_slots {
+                    for attr in pool_iter.by_ref() {
+                        let mut pairs = gather_pairs(ctx.data, &ids, attr);
+                        let candidates = enumerate_valid(&mut pairs);
+                        if candidates.is_empty() {
+                            continue;
+                        }
+                        g.attrs[slot] = AttrStats {
+                            attr,
+                            thresholds: sample_thresholds(candidates, ctx.params.k, &mut rng),
+                        };
+                        report.attrs_resampled += 1;
+                        break;
+                    }
+                }
+                g.attrs.retain(|a| !a.thresholds.is_empty());
+            }
+            g.attrs.is_empty()
+        };
+
+        if made_leaf {
+            // No valid split exists anywhere anymore: leaf.
+            report.retrain_events.push(RetrainEvent { depth, n: n_new });
+            *node = make_leaf(ctx.data, ids);
+            return;
+        }
+        gathered = Some(ids);
+    }
+
+    // stage 3: recompute scores from cached counts, select the optimum
+    // (Alg. 2 lines 23–24).
+    let (new_attr, new_v) = {
+        let Node::Greedy(g) = &mut *node else { unreachable!() };
+        let (ba, bt) = select_best(n_new, pos_new, &g.attrs, ctx.params).expect("attrs non-empty");
+        g.best_attr = ba;
+        g.best_thr = bt;
+        (g.split_attr(), g.split_v())
+    };
+
+    if new_attr != old_attr || new_v != old_v {
+        // Optimal split changed: retrain both children on the new partition
+        // (Alg. 2 lines 25–27).
+        let ids = match gathered {
+            Some(ids) => ids,
+            None => {
+                let mut v = Vec::with_capacity(n_new as usize);
+                node.collect_ids(Some(id), &mut v);
+                v
+            }
+        };
+        report.retrain_events.push(RetrainEvent { depth, n: n_new });
+        let (left_ids, right_ids) = partition(ctx.data, &ids, new_attr, new_v);
+        debug_assert!(!left_ids.is_empty() && !right_ids.is_empty());
+        let left = train(ctx, left_ids, depth + 1, child_path(path, depth, false));
+        let right = train(ctx, right_ids, depth + 1, child_path(path, depth, true));
+        let Node::Greedy(g) = node else { unreachable!() };
+        g.left = Box::new(left);
+        g.right = Box::new(right);
+        return;
+    }
+
+    // stage 4: split unchanged — continue down the instance's branch.
+    let Node::Greedy(g) = node else { unreachable!() };
+    let xa = ctx.data.x(id, new_attr);
+    let (next, right) = if xa <= new_v {
+        (&mut g.left, false)
+    } else {
+        (&mut g.right, true)
+    };
+    delete(
+        ctx,
+        next,
+        id,
+        depth + 1,
+        child_path(path, depth, right),
+        epoch,
+        report,
+    );
+}
+
+/// Non-mutating estimate of the retrain cost of deleting `id` — the ranking
+/// signal for the worst-of-1000 adversary. Mirrors `delete` but computes the
+/// decremented statistics in temporaries; resampling outcomes are
+/// approximated pessimistically (an invalidated *chosen* threshold counts as
+/// a retrain).
+pub fn delete_cost(ctx: &TrainCtx<'_>, node: &Node, id: InstanceId, depth: usize) -> u64 {
+    let y = ctx.data.y(id);
+    match node {
+        Node::Leaf(_) => 0,
+        Node::Random(r) => {
+            let n_new = r.n - 1;
+            let pos_new = r.n_pos - y as u32;
+            if n_new < ctx.params.min_samples_split as u32 || pos_new == 0 || pos_new == n_new {
+                return n_new as u64;
+            }
+            let xa = ctx.data.x(id, r.attr);
+            let goes_left = xa <= r.v;
+            let (nl, nr) = if goes_left {
+                (r.n_left - 1, r.n_right)
+            } else {
+                (r.n_left, r.n_right - 1)
+            };
+            if nl == 0 || nr == 0 {
+                return n_new as u64;
+            }
+            if goes_left {
+                delete_cost(ctx, &r.left, id, depth + 1)
+            } else {
+                delete_cost(ctx, &r.right, id, depth + 1)
+            }
+        }
+        Node::Greedy(g) => {
+            let n_new = g.n - 1;
+            let pos_new = g.n_pos - y as u32;
+            if n_new < ctx.params.min_samples_split as u32 || pos_new == 0 || pos_new == n_new {
+                return n_new as u64;
+            }
+            let old_attr = g.split_attr();
+            let old_v = g.split_v();
+            // Find the best split over decremented, still-valid thresholds.
+            let mut best: Option<(usize, f32, f64)> = None;
+            let mut chosen_invalid = false;
+            for a in &g.attrs {
+                let xa = ctx.data.x(id, a.attr);
+                for t in &a.thresholds {
+                    let mut tt = *t;
+                    tt.remove(xa, y);
+                    let is_chosen = a.attr == old_attr && t.v == old_v;
+                    if !tt.is_valid() {
+                        if is_chosen {
+                            chosen_invalid = true;
+                        }
+                        continue;
+                    }
+                    let s = split_score(
+                        ctx.params.criterion,
+                        n_new,
+                        pos_new,
+                        tt.n_left,
+                        tt.n_left_pos,
+                    );
+                    match best {
+                        Some((_, _, bs)) if s >= bs => {}
+                        _ => best = Some((a.attr, t.v, s)),
+                    }
+                }
+            }
+            if chosen_invalid {
+                return n_new as u64; // pessimistic: resampling may move the split
+            }
+            match best {
+                Some((ba, bv, _)) if ba == old_attr && bv == old_v => {
+                    let xa = ctx.data.x(id, old_attr);
+                    if xa <= old_v {
+                        delete_cost(ctx, &g.left, id, depth + 1)
+                    } else {
+                        delete_cost(ctx, &g.right, id, depth + 1)
+                    }
+                }
+                _ => n_new as u64,
+            }
+        }
+    }
+}
+
+/// Add an instance (already inserted into the dataset) to the subtree —
+/// the §6 continual-learning extension, mirroring `delete`.
+pub fn add(
+    ctx: &TrainCtx<'_>,
+    node: &mut Node,
+    id: InstanceId,
+    depth: usize,
+    path: u64,
+    epoch: u64,
+    report: &mut DeleteReport,
+) {
+    let y = ctx.data.y(id);
+
+    // ---- leaf ----------------------------------------------------------
+    if let Node::Leaf(l) = node {
+        l.ids.push(id);
+        l.n += 1;
+        l.n_pos += y as u32;
+        // A leaf that scratch training would now split gets rebuilt (it may
+        // have stopped on purity / size before this addition).
+        let should_split = l.n >= ctx.params.min_samples_split as u32
+            && l.n_pos > 0
+            && l.n_pos < l.n
+            && depth < ctx.params.max_depth;
+        if should_split {
+            let ids = std::mem::take(&mut l.ids);
+            report.retrain_events.push(RetrainEvent {
+                depth,
+                n: ids.len() as u32,
+            });
+            *node = train(ctx, ids, depth, path);
+        }
+        return;
+    }
+
+    if matches!(node, Node::Random(_)) {
+        let Node::Random(r) = node else { unreachable!() };
+        r.n += 1;
+        r.n_pos += y as u32;
+        let xa = ctx.data.x(id, r.attr);
+        let goes_left = xa <= r.v;
+        if goes_left {
+            r.n_left += 1;
+        } else {
+            r.n_right += 1;
+        }
+        let (next, right) = if goes_left {
+            (&mut r.left, false)
+        } else {
+            (&mut r.right, true)
+        };
+        add(
+            ctx,
+            next,
+            id,
+            depth + 1,
+            child_path(path, depth, right),
+            epoch,
+            report,
+        );
+        return;
+    }
+
+    // ---- greedy node ------------------------------------------------------
+    // stage 1: update stats; detect thresholds whose adjacency the new value
+    // breaks (x strictly between v_low and v_high).
+    let (old_attr, old_v, any_broken) = {
+        let Node::Greedy(g) = &mut *node else { unreachable!() };
+        g.n += 1;
+        g.n_pos += y as u32;
+        let old_attr = g.split_attr();
+        let old_v = g.split_v();
+        let mut any_broken = false;
+        for a in g.attrs.iter_mut() {
+            let xa = ctx.data.x(id, a.attr);
+            for t in a.thresholds.iter_mut() {
+                if t.adjacency_broken(xa) {
+                    any_broken = true;
+                    t.n_low = 0; // force invalid so the resampler replaces it
+                } else {
+                    t.add(xa, y);
+                }
+            }
+        }
+        (old_attr, old_v, any_broken)
+    };
+
+    // stage 2: resample broken thresholds over the updated data.
+    if any_broken {
+        let mut ids = Vec::new();
+        node.collect_ids(None, &mut ids);
+        ids.push(id); // leaves below don't know the new instance yet
+
+        let made_leafless = {
+            let Node::Greedy(g) = &mut *node else { unreachable!() };
+            let mut rng = delete_rng(ctx.tree_seed, path, 0xADD ^ epoch);
+            for a in g.attrs.iter_mut() {
+                if a.thresholds.iter().all(|t| t.is_valid()) {
+                    continue;
+                }
+                let mut pairs = gather_pairs(ctx.data, &ids, a.attr);
+                let candidates = enumerate_valid(&mut pairs);
+                report.thresholds_resampled +=
+                    resample_invalid(&mut a.thresholds, &candidates, ctx.params.k, &mut rng)
+                        as u64;
+            }
+            g.attrs.retain(|a| !a.thresholds.is_empty());
+            g.attrs.is_empty()
+        };
+        if made_leafless {
+            report.retrain_events.push(RetrainEvent {
+                depth,
+                n: ids.len() as u32,
+            });
+            *node = train(ctx, ids, depth, path);
+            return;
+        }
+    }
+
+    // stage 3: re-select optimum; retrain children if it moved.
+    let (new_attr, new_v, n_now, pos_now) = {
+        let Node::Greedy(g) = &mut *node else { unreachable!() };
+        let (ba, bt) = select_best(g.n, g.n_pos, &g.attrs, ctx.params).expect("attrs");
+        g.best_attr = ba;
+        g.best_thr = bt;
+        (g.split_attr(), g.split_v(), g.n, g.n_pos)
+    };
+    let _ = (n_now, pos_now);
+
+    if new_attr != old_attr || new_v != old_v {
+        let mut ids = Vec::new();
+        node.collect_ids(None, &mut ids);
+        if !ids.contains(&id) {
+            ids.push(id);
+        }
+        report.retrain_events.push(RetrainEvent {
+            depth,
+            n: ids.len() as u32,
+        });
+        let (left_ids, right_ids) = partition(ctx.data, &ids, new_attr, new_v);
+        let left = train(ctx, left_ids, depth + 1, child_path(path, depth, false));
+        let right = train(ctx, right_ids, depth + 1, child_path(path, depth, true));
+        let Node::Greedy(g) = node else { unreachable!() };
+        g.left = Box::new(left);
+        g.right = Box::new(right);
+        return;
+    }
+
+    let Node::Greedy(g) = node else { unreachable!() };
+    let xa = ctx.data.x(id, new_attr);
+    let (next, right) = if xa <= new_v {
+        (&mut g.left, false)
+    } else {
+        (&mut g.right, true)
+    };
+    add(
+        ctx,
+        next,
+        id,
+        depth + 1,
+        child_path(path, depth, right),
+        epoch,
+        report,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::forest::params::{MaxFeatures, Params};
+    use crate::forest::train::{count_pos, ROOT_PATH};
+
+    fn params(d_rmax: usize, k: usize) -> Params {
+        Params {
+            max_depth: 8,
+            k,
+            d_rmax,
+            max_features: MaxFeatures::Sqrt,
+            ..Default::default()
+        }
+    }
+
+    fn data(n: usize, seed: u64) -> Dataset {
+        generate(
+            &SynthSpec {
+                n,
+                informative: 3,
+                redundant: 1,
+                noise: 2,
+                flip: 0.1,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    /// Verify every invariant that ties cached statistics to actual data.
+    fn check_invariants(node: &Node, d: &Dataset) {
+        match node {
+            Node::Leaf(l) => {
+                assert_eq!(l.n as usize, l.ids.len());
+                assert_eq!(l.n_pos, count_pos(d, &l.ids));
+            }
+            Node::Random(r) => {
+                assert_eq!(r.n, r.left.n() + r.right.n());
+                assert_eq!(r.n_left, r.left.n());
+                assert_eq!(r.n_right, r.right.n());
+                assert!(r.n_left > 0 && r.n_right > 0);
+                check_invariants(&r.left, d);
+                check_invariants(&r.right, d);
+            }
+            Node::Greedy(g) => {
+                assert_eq!(g.n, g.left.n() + g.right.n());
+                assert_eq!(g.n_pos, g.left.n_pos() + g.right.n_pos());
+                let mut ids = Vec::new();
+                node.collect_ids(None, &mut ids);
+                // cached threshold stats match a fresh recount
+                for a in &g.attrs {
+                    for t in &a.thresholds {
+                        assert!(t.is_valid());
+                        let mut n_left = 0;
+                        let mut n_left_pos = 0;
+                        for &i in &ids {
+                            if d.x(i, a.attr) <= t.v {
+                                n_left += 1;
+                                n_left_pos += d.y(i) as u32;
+                            }
+                        }
+                        assert_eq!(t.n_left, n_left, "stale n_left");
+                        assert_eq!(t.n_left_pos, n_left_pos, "stale n_left_pos");
+                    }
+                }
+                check_invariants(&g.left, d);
+                check_invariants(&g.right, d);
+            }
+        }
+    }
+
+    #[test]
+    fn delete_preserves_invariants_greedy() {
+        let mut d = data(250, 1);
+        let p = params(0, 5);
+        let mut root = {
+            let ctx = TrainCtx {
+                data: &d,
+                params: &p,
+                tree_seed: 3,
+            };
+            train(&ctx, d.live_ids(), 0, ROOT_PATH)
+        };
+        let mut rng = Rng::new(10);
+        for epoch in 0..120u64 {
+            let live = d.live_ids();
+            let id = live[rng.index(live.len())];
+            let mut report = DeleteReport::default();
+            {
+                let ctx = TrainCtx {
+                    data: &d,
+                    params: &p,
+                    tree_seed: 3,
+                };
+                delete(&ctx, &mut root, id, 0, ROOT_PATH, epoch, &mut report);
+            }
+            d.mark_removed(id);
+            assert_eq!(root.n() as usize, d.n_alive());
+            check_invariants(&root, &d);
+        }
+    }
+
+    #[test]
+    fn delete_preserves_invariants_random_layers() {
+        let mut d = data(300, 2);
+        let p = params(3, 5);
+        let mut root = {
+            let ctx = TrainCtx {
+                data: &d,
+                params: &p,
+                tree_seed: 4,
+            };
+            train(&ctx, d.live_ids(), 0, ROOT_PATH)
+        };
+        let mut rng = Rng::new(11);
+        for epoch in 0..150u64 {
+            let live = d.live_ids();
+            let id = live[rng.index(live.len())];
+            let mut report = DeleteReport::default();
+            {
+                let ctx = TrainCtx {
+                    data: &d,
+                    params: &p,
+                    tree_seed: 4,
+                };
+                delete(&ctx, &mut root, id, 0, ROOT_PATH, epoch, &mut report);
+            }
+            d.mark_removed(id);
+            check_invariants(&root, &d);
+        }
+    }
+
+    #[test]
+    fn delete_down_to_nothing() {
+        let mut d = data(60, 3);
+        let p = params(1, 3);
+        let mut root = {
+            let ctx = TrainCtx {
+                data: &d,
+                params: &p,
+                tree_seed: 5,
+            };
+            train(&ctx, d.live_ids(), 0, ROOT_PATH)
+        };
+        let ids = d.live_ids();
+        for (epoch, id) in ids.into_iter().enumerate() {
+            let mut report = DeleteReport::default();
+            {
+                let ctx = TrainCtx {
+                    data: &d,
+                    params: &p,
+                    tree_seed: 5,
+                };
+                delete(&ctx, &mut root, id, 0, ROOT_PATH, epoch as u64, &mut report);
+            }
+            d.mark_removed(id);
+            check_invariants(&root, &d);
+        }
+        assert_eq!(root.n(), 0);
+        assert!(matches!(root, Node::Leaf(_)));
+        assert_eq!(root.predict(&[0.0; 6]), 0.5);
+    }
+
+    /// The core exactness check: with exhaustive thresholds (k ≥ all valid)
+    /// and all attributes considered, deletion must produce *structurally*
+    /// the same tree as training from scratch on the updated data with the
+    /// same path seeds (DESIGN.md §5).
+    #[test]
+    fn exactness_vs_scratch_retrain_exhaustive_k() {
+        let mut d = data(120, 6);
+        let p = Params {
+            max_depth: 6,
+            k: 10_000,
+            d_rmax: 0,
+            max_features: MaxFeatures::All,
+            ..Default::default()
+        };
+        let mut root = {
+            let ctx = TrainCtx {
+                data: &d,
+                params: &p,
+                tree_seed: 9,
+            };
+            train(&ctx, d.live_ids(), 0, ROOT_PATH)
+        };
+        let mut rng = Rng::new(42);
+        for epoch in 0..40u64 {
+            let live = d.live_ids();
+            let id = live[rng.index(live.len())];
+            let mut report = DeleteReport::default();
+            {
+                let ctx = TrainCtx {
+                    data: &d,
+                    params: &p,
+                    tree_seed: 9,
+                };
+                delete(&ctx, &mut root, id, 0, ROOT_PATH, epoch, &mut report);
+            }
+            d.mark_removed(id);
+            let scratch = {
+                let ctx = TrainCtx {
+                    data: &d,
+                    params: &p,
+                    tree_seed: 9,
+                };
+                train(&ctx, d.live_ids(), 0, ROOT_PATH)
+            };
+            assert!(
+                crate::forest::tree::structural_eq(&root, &scratch),
+                "delete != scratch retrain after epoch {epoch}"
+            );
+        }
+    }
+
+    #[test]
+    fn delete_cost_zero_when_structure_stable() {
+        // Well-separated data: deleting one point deep in a cluster should
+        // rarely force retraining near the root.
+        let d = generate(
+            &SynthSpec {
+                n: 400,
+                informative: 4,
+                redundant: 0,
+                noise: 0,
+                flip: 0.0,
+                class_sep: 3.0,
+                ..Default::default()
+            },
+            7,
+        );
+        let p = params(0, 10);
+        let ctx = TrainCtx {
+            data: &d,
+            params: &p,
+            tree_seed: 12,
+        };
+        let root = train(&ctx, d.live_ids(), 0, ROOT_PATH);
+        let costs: Vec<u64> = d
+            .live_ids()
+            .iter()
+            .take(100)
+            .map(|&id| delete_cost(&ctx, &root, id, 0))
+            .collect();
+        let zeros = costs.iter().filter(|&&c| c == 0).count();
+        assert!(zeros > 50, "most dry-run deletions should be free: {zeros}/100");
+    }
+
+    #[test]
+    fn dry_run_does_not_mutate() {
+        let d = data(200, 8);
+        let p = params(2, 5);
+        let ctx = TrainCtx {
+            data: &d,
+            params: &p,
+            tree_seed: 13,
+        };
+        let root = train(&ctx, d.live_ids(), 0, ROOT_PATH);
+        let before = format!("{root:?}");
+        for id in d.live_ids().iter().take(50) {
+            let _ = delete_cost(&ctx, &root, *id, 0);
+        }
+        assert_eq!(before, format!("{root:?}"));
+    }
+
+    #[test]
+    fn add_then_invariants_hold() {
+        let mut d = data(150, 9);
+        let p = params(1, 5);
+        let mut root = {
+            let ctx = TrainCtx {
+                data: &d,
+                params: &p,
+                tree_seed: 21,
+            };
+            train(&ctx, d.live_ids(), 0, ROOT_PATH)
+        };
+        let mut rng = Rng::new(77);
+        for epoch in 0..60u64 {
+            let row: Vec<f32> = (0..d.n_features())
+                .map(|_| rng.range_f32(-3.0, 3.0))
+                .collect();
+            let y = rng.bernoulli(0.5) as u8;
+            let id = d.push_row(&row, y);
+            let mut report = DeleteReport::default();
+            {
+                let ctx = TrainCtx {
+                    data: &d,
+                    params: &p,
+                    tree_seed: 21,
+                };
+                add(&ctx, &mut root, id, 0, ROOT_PATH, epoch, &mut report);
+            }
+            assert_eq!(root.n() as usize, d.n_alive());
+            check_invariants(&root, &d);
+        }
+    }
+
+    #[test]
+    fn add_then_delete_roundtrip_counts() {
+        let mut d = data(100, 10);
+        let p = params(0, 5);
+        let mut root = {
+            let ctx = TrainCtx {
+                data: &d,
+                params: &p,
+                tree_seed: 31,
+            };
+            train(&ctx, d.live_ids(), 0, ROOT_PATH)
+        };
+        let row: Vec<f32> = vec![0.1; d.n_features()];
+        let id = d.push_row(&row, 1);
+        let mut report = DeleteReport::default();
+        {
+            let ctx = TrainCtx {
+                data: &d,
+                params: &p,
+                tree_seed: 31,
+            };
+            add(&ctx, &mut root, id, 0, ROOT_PATH, 0, &mut report);
+        }
+        assert_eq!(root.n(), 101);
+        {
+            let ctx = TrainCtx {
+                data: &d,
+                params: &p,
+                tree_seed: 31,
+            };
+            delete(&ctx, &mut root, id, 0, ROOT_PATH, 1, &mut report);
+        }
+        d.mark_removed(id);
+        assert_eq!(root.n(), 100);
+        check_invariants(&root, &d);
+    }
+
+    #[test]
+    fn report_costs_accumulate() {
+        let mut r = DeleteReport::default();
+        r.retrain_events.push(RetrainEvent { depth: 1, n: 10 });
+        let mut r2 = DeleteReport::default();
+        r2.retrain_events.push(RetrainEvent { depth: 0, n: 5 });
+        r2.thresholds_resampled = 2;
+        r.merge(&r2);
+        assert_eq!(r.cost(), 15);
+        assert_eq!(r.retrain_events.len(), 2);
+        assert_eq!(r.thresholds_resampled, 2);
+    }
+}

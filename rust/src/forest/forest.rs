@@ -1,0 +1,369 @@
+//! The DaRE forest: an ensemble of independently trained DaRE trees over a
+//! shared (liveness-masked) dataset. No bootstrapping (§2.2): every tree sees
+//! the same instances but samples its own attributes/thresholds.
+
+use crate::data::dataset::{Dataset, InstanceId};
+use crate::forest::delete::DeleteReport;
+use crate::forest::node::NodeMemory;
+use crate::forest::params::Params;
+use crate::forest::tree::DareTree;
+use crate::util::rng::mix_seed;
+use crate::util::threadpool::{scope_map, scope_map_mut};
+
+/// Ensemble of DaRE trees plus the training database they index into.
+#[derive(Clone, Debug)]
+pub struct DareForest {
+    params: Params,
+    seed: u64,
+    trees: Vec<DareTree>,
+    data: Dataset,
+}
+
+/// Aggregate report for one forest-level deletion (all trees).
+#[derive(Clone, Debug, Default)]
+pub struct ForestDeleteReport {
+    pub per_tree: Vec<DeleteReport>,
+}
+
+impl ForestDeleteReport {
+    /// Total instances across retrained nodes, summed over trees — the
+    /// paper's worst-of-1000 cost measure.
+    pub fn cost(&self) -> u64 {
+        self.per_tree.iter().map(|r| r.cost()).sum()
+    }
+    pub fn retrain_events(&self) -> usize {
+        self.per_tree.iter().map(|r| r.retrain_events.len()).sum()
+    }
+    /// Histogram of retrained instances by node depth (Fig. 2 right).
+    pub fn cost_by_depth(&self, max_depth: usize) -> Vec<u64> {
+        let mut h = vec![0u64; max_depth + 1];
+        for r in &self.per_tree {
+            for e in &r.retrain_events {
+                h[e.depth.min(max_depth)] += e.n as u64;
+            }
+        }
+        h
+    }
+}
+
+impl DareForest {
+    /// Train a forest on (a copy of) `data`'s live instances.
+    pub fn fit(data: Dataset, params: &Params, seed: u64) -> Self {
+        params.validate().expect("invalid params");
+        let tree_seeds: Vec<u64> = (0..params.n_trees)
+            .map(|t| mix_seed(&[seed, t as u64, 0x7EEE]))
+            .collect();
+        let trees = scope_map(&tree_seeds, params.n_threads, |_, &ts| {
+            DareTree::fit(&data, params, ts)
+        });
+        DareForest {
+            params: params.clone(),
+            seed,
+            trees,
+            data,
+        }
+    }
+
+    /// Reassemble a forest from snapshot parts (see `forest::serialize`).
+    pub fn from_parts(
+        params: Params,
+        seed: u64,
+        trees: Vec<DareTree>,
+        data: Dataset,
+    ) -> anyhow::Result<Self> {
+        params.validate()?;
+        anyhow::ensure!(!trees.is_empty(), "snapshot has no trees");
+        for t in &trees {
+            anyhow::ensure!(
+                t.root.n() as usize == data.n_alive(),
+                "tree size {} != live instances {}",
+                t.root.n(),
+                data.n_alive()
+            );
+        }
+        Ok(DareForest {
+            params,
+            seed,
+            trees,
+            data,
+        })
+    }
+
+    pub fn params(&self) -> &Params {
+        &self.params
+    }
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+    pub fn trees(&self) -> &[DareTree] {
+        &self.trees
+    }
+    pub fn data(&self) -> &Dataset {
+        &self.data
+    }
+    pub fn n_alive(&self) -> usize {
+        self.data.n_alive()
+    }
+
+    /// Ids that can currently be deleted.
+    pub fn live_ids(&self) -> Vec<InstanceId> {
+        self.data.live_ids()
+    }
+
+    /// Exactly unlearn one training instance (paper Alg. 2 across all trees,
+    /// then remove it from the database).
+    pub fn delete(&mut self, id: InstanceId) -> anyhow::Result<ForestDeleteReport> {
+        anyhow::ensure!(
+            (id as usize) < self.data.n_total() && self.data.is_alive(id),
+            "instance {id} is not a live training instance"
+        );
+        let data = &self.data;
+        let params = &self.params;
+        let per_tree = scope_map_mut(&mut self.trees, params.n_threads, |_, t| {
+            t.delete(data, params, id)
+        });
+        self.data.mark_removed(id);
+        Ok(ForestDeleteReport { per_tree })
+    }
+
+    /// Sequential (no-clone) deletion used on the single-threaded hot path.
+    pub fn delete_seq(&mut self, id: InstanceId) -> anyhow::Result<ForestDeleteReport> {
+        anyhow::ensure!(
+            (id as usize) < self.data.n_total() && self.data.is_alive(id),
+            "instance {id} is not a live training instance"
+        );
+        let mut per_tree = Vec::with_capacity(self.trees.len());
+        for t in self.trees.iter_mut() {
+            per_tree.push(t.delete(&self.data, &self.params, id));
+        }
+        self.data.mark_removed(id);
+        Ok(ForestDeleteReport { per_tree })
+    }
+
+    /// Batch deletion (§A.7): applies a set of deletions tree-by-tree.
+    /// Duplicate or dead ids are skipped and reported.
+    pub fn delete_batch(&mut self, ids: &[InstanceId]) -> (ForestDeleteReport, usize) {
+        let mut seen = std::collections::BTreeSet::new();
+        let mut skipped = 0usize;
+        let mut report = ForestDeleteReport::default();
+        for &id in ids {
+            if !seen.insert(id)
+                || (id as usize) >= self.data.n_total()
+                || !self.data.is_alive(id)
+            {
+                skipped += 1;
+                continue;
+            }
+            match self.delete_seq(id) {
+                Ok(r) => report.per_tree.extend(r.per_tree),
+                Err(_) => skipped += 1,
+            }
+        }
+        (report, skipped)
+    }
+
+    /// Add a fresh training instance to the database and all trees (§6).
+    pub fn add(&mut self, row: &[f32], label: u8) -> InstanceId {
+        let id = self.data.push_row(row, label);
+        let data = &self.data;
+        let params = &self.params;
+        scope_map_mut(&mut self.trees, params.n_threads, |_, t| {
+            t.add(data, params, id);
+        });
+        id
+    }
+
+    /// Dry-run total retrain cost of deleting `id` across all trees — the
+    /// worst-of-1000 adversary's ranking signal.
+    pub fn delete_cost(&self, id: InstanceId) -> u64 {
+        self.trees
+            .iter()
+            .map(|t| t.delete_cost(&self.data, &self.params, id))
+            .sum()
+    }
+
+    /// Positive-class probability for one feature row (mean over trees).
+    pub fn predict_proba(&self, row: &[f32]) -> f32 {
+        let s: f32 = self.trees.iter().map(|t| t.predict(row)).sum();
+        s / self.trees.len() as f32
+    }
+
+    /// Batch prediction over row-major features.
+    pub fn predict_proba_rows(&self, rows: &[Vec<f32>]) -> Vec<f32> {
+        rows.iter().map(|r| self.predict_proba(r)).collect()
+    }
+
+    /// Predict every live instance of an external dataset.
+    pub fn predict_proba_dataset(&self, data: &Dataset) -> Vec<f32> {
+        data.live_ids()
+            .iter()
+            .map(|&i| self.predict_proba(&data.row(i)))
+            .collect()
+    }
+
+    /// Memory breakdown across all trees (paper Table 3).
+    pub fn memory(&self) -> NodeMemory {
+        let mut m = NodeMemory::default();
+        for t in &self.trees {
+            m.add(&t.memory());
+        }
+        m
+    }
+
+    /// Bytes of the training database (Table 3 "Data" column).
+    pub fn data_bytes(&self) -> usize {
+        self.data.memory_bytes()
+    }
+
+    /// Mean decision nodes per tree (paper §4.4 discussion).
+    pub fn mean_decision_nodes(&self) -> f64 {
+        let total: usize = self.trees.iter().map(|t| t.shape().decision_nodes()).sum();
+        total as f64 / self.trees.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::metrics::accuracy;
+
+    fn data(n: usize, seed: u64) -> Dataset {
+        generate(
+            &SynthSpec {
+                n,
+                informative: 4,
+                redundant: 2,
+                noise: 4,
+                flip: 0.05,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    fn small_params(n_trees: usize) -> Params {
+        Params {
+            n_trees,
+            max_depth: 6,
+            k: 5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fit_and_predict_better_than_chance() {
+        let all = data(900, 1);
+        let (train, test) = crate::data::split::train_test(&all, 0.67, 0);
+        let f = DareForest::fit(train, &small_params(10), 7);
+        let probs = f.predict_proba_dataset(&test);
+        let (_, ys, _) = test.to_row_major();
+        let acc = accuracy(&probs, &ys);
+        assert!(acc > 0.75, "test acc {acc}");
+    }
+
+    #[test]
+    fn delete_keeps_forest_consistent() {
+        let train = data(300, 3);
+        let mut f = DareForest::fit(train, &small_params(5), 9);
+        let ids = f.live_ids();
+        for &id in ids.iter().take(50) {
+            let r = f.delete(id).unwrap();
+            assert_eq!(r.per_tree.len(), 5);
+        }
+        assert_eq!(f.n_alive(), 250);
+        for t in f.trees() {
+            assert_eq!(t.root.n() as usize, 250);
+        }
+        // double-delete errors
+        assert!(f.delete(ids[0]).is_err());
+        // out-of-range errors
+        assert!(f.delete(10_000_000).is_err());
+    }
+
+    #[test]
+    fn delete_seq_matches_parallel_delete() {
+        let train = data(200, 4);
+        let mut f1 = DareForest::fit(train.clone(), &small_params(4), 11);
+        let mut f2 = DareForest::fit(train, &small_params(4), 11);
+        for id in [3u32, 77, 150, 42] {
+            f1.delete(id).unwrap();
+            f2.delete_seq(id).unwrap();
+        }
+        for (a, b) in f1.trees().iter().zip(f2.trees()) {
+            assert!(crate::forest::tree::structural_eq(&a.root, &b.root));
+        }
+    }
+
+    #[test]
+    fn batch_delete_skips_duplicates_and_dead() {
+        let train = data(200, 5);
+        let mut f = DareForest::fit(train, &small_params(3), 13);
+        let (_, skipped) = f.delete_batch(&[1, 2, 2, 3, 999_999]);
+        assert_eq!(skipped, 2);
+        assert_eq!(f.n_alive(), 197);
+    }
+
+    #[test]
+    fn add_grows_forest() {
+        let train = data(150, 6);
+        let p = train.n_features();
+        let mut f = DareForest::fit(train, &small_params(4), 15);
+        let id = f.add(&vec![0.0; p], 1);
+        assert_eq!(f.n_alive(), 151);
+        for t in f.trees() {
+            assert_eq!(t.root.n(), 151);
+        }
+        // the added instance can be deleted again
+        f.delete(id).unwrap();
+        assert_eq!(f.n_alive(), 150);
+    }
+
+    #[test]
+    fn parallel_fit_matches_sequential_fit() {
+        let train = data(250, 7);
+        let par = Params {
+            n_threads: 4,
+            ..small_params(6)
+        };
+        let seq = small_params(6);
+        let f1 = DareForest::fit(train.clone(), &par, 21);
+        let f2 = DareForest::fit(train, &seq, 21);
+        for (a, b) in f1.trees().iter().zip(f2.trees()) {
+            assert!(crate::forest::tree::structural_eq(&a.root, &b.root));
+        }
+    }
+
+    #[test]
+    fn memory_breakdown_scales_with_trees() {
+        let train = data(300, 8);
+        let f1 = DareForest::fit(train.clone(), &small_params(2), 1);
+        let f2 = DareForest::fit(train, &small_params(8), 1);
+        assert!(f2.memory().total() > f1.memory().total());
+        assert!(f1.data_bytes() > 0);
+        assert!(f1.mean_decision_nodes() > 0.0);
+    }
+
+    #[test]
+    fn deletion_probability_stays_calibrated() {
+        // After deleting many random instances, predictions should still be
+        // sane probabilities and accuracy should not collapse.
+        let all = data(700, 9);
+        let (train, test) = crate::data::split::train_test(&all, 0.71, 0);
+        let mut f = DareForest::fit(train, &small_params(10), 3);
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..200 {
+            let live = f.live_ids();
+            let id = live[rng.index(live.len())];
+            f.delete_seq(id).unwrap();
+        }
+        let probs = f.predict_proba_dataset(&test);
+        assert!(probs.iter().all(|p| (0.0..=1.0).contains(p)));
+        let (_, ys, _) = test.to_row_major();
+        let acc = accuracy(&probs, &ys);
+        assert!(acc > 0.7, "post-deletion acc {acc}");
+    }
+}

@@ -1,0 +1,19 @@
+//! The DaRE forest core (paper §3): data-removal-enabled trees with cached
+//! node statistics, random upper layers, threshold subsampling, and exact
+//! deletion.
+
+pub mod criterion;
+pub mod delete;
+pub mod forest;
+pub mod node;
+pub mod params;
+pub mod serialize;
+pub mod stats;
+pub mod train;
+pub mod tree;
+
+pub use delete::{DeleteReport, RetrainEvent};
+pub use forest::{DareForest, ForestDeleteReport};
+pub use node::{Node, NodeMemory, TreeShape};
+pub use params::{MaxFeatures, Params, SplitCriterion};
+pub use tree::{structural_eq, DareTree};

@@ -1,0 +1,347 @@
+//! Tree node representation (paper §A.6): leaf, random decision, and greedy
+//! decision nodes, each with the cached statistics that make deletions cheap.
+
+use crate::data::dataset::InstanceId;
+use crate::forest::stats::AttrStats;
+
+/// A leaf: label counts plus the training-instance pointer list that lets
+/// any ancestor gather its data for subtree retraining (§3.1).
+#[derive(Clone, Debug)]
+pub struct LeafNode {
+    pub n: u32,
+    pub n_pos: u32,
+    pub ids: Vec<InstanceId>,
+}
+
+impl LeafNode {
+    /// Leaf prediction: fraction of positives (0.5 when empty).
+    #[inline]
+    pub fn value(&self) -> f32 {
+        if self.n == 0 {
+            0.5
+        } else {
+            self.n_pos as f32 / self.n as f32
+        }
+    }
+}
+
+/// A random decision node (§3.3): uniformly sampled attribute + threshold;
+/// stores only |D|, |D_{·,1}|, |D_l|, |D_r| and retrains iff a side empties.
+#[derive(Clone, Debug)]
+pub struct RandomNode {
+    pub n: u32,
+    pub n_pos: u32,
+    pub attr: usize,
+    pub v: f32,
+    pub n_left: u32,
+    pub n_right: u32,
+    pub left: Box<Node>,
+    pub right: Box<Node>,
+}
+
+/// A greedy decision node: p̃ sampled attributes × ≤k candidate thresholds
+/// with cached statistics; the chosen split is (attrs[best_attr],
+/// thresholds[best_thr]).
+#[derive(Clone, Debug)]
+pub struct GreedyNode {
+    pub n: u32,
+    pub n_pos: u32,
+    pub attrs: Vec<AttrStats>,
+    pub best_attr: usize,
+    pub best_thr: usize,
+    pub left: Box<Node>,
+    pub right: Box<Node>,
+}
+
+impl GreedyNode {
+    #[inline]
+    pub fn split_attr(&self) -> usize {
+        self.attrs[self.best_attr].attr
+    }
+    #[inline]
+    pub fn split_v(&self) -> f32 {
+        self.attrs[self.best_attr].thresholds[self.best_thr].v
+    }
+}
+
+/// A DaRE tree node.
+#[derive(Clone, Debug)]
+pub enum Node {
+    Leaf(LeafNode),
+    Random(RandomNode),
+    Greedy(GreedyNode),
+}
+
+impl Node {
+    /// |D| at this node.
+    #[inline]
+    pub fn n(&self) -> u32 {
+        match self {
+            Node::Leaf(l) => l.n,
+            Node::Random(r) => r.n,
+            Node::Greedy(g) => g.n,
+        }
+    }
+
+    /// |D_{·,1}| at this node.
+    #[inline]
+    pub fn n_pos(&self) -> u32 {
+        match self {
+            Node::Leaf(l) => l.n_pos,
+            Node::Random(r) => r.n_pos,
+            Node::Greedy(g) => g.n_pos,
+        }
+    }
+
+    /// Split (attribute, threshold) for decision nodes.
+    #[inline]
+    pub fn split(&self) -> Option<(usize, f32)> {
+        match self {
+            Node::Leaf(_) => None,
+            Node::Random(r) => Some((r.attr, r.v)),
+            Node::Greedy(g) => Some((g.split_attr(), g.split_v())),
+        }
+    }
+
+    /// Predict the positive-class probability for a feature row.
+    pub fn predict(&self, row: &[f32]) -> f32 {
+        let mut node = self;
+        loop {
+            match node {
+                Node::Leaf(l) => return l.value(),
+                Node::Random(r) => {
+                    node = if row[r.attr] <= r.v { &r.left } else { &r.right };
+                }
+                Node::Greedy(g) => {
+                    let (a, v) = (g.split_attr(), g.split_v());
+                    node = if row[a] <= v { &g.left } else { &g.right };
+                }
+            }
+        }
+    }
+
+    /// Gather the instance ids stored at the leaves of this subtree (§3.1),
+    /// optionally excluding one id (the instance being deleted).
+    pub fn collect_ids(&self, exclude: Option<InstanceId>, out: &mut Vec<InstanceId>) {
+        match self {
+            Node::Leaf(l) => {
+                match exclude {
+                    Some(ex) => out.extend(l.ids.iter().copied().filter(|&i| i != ex)),
+                    None => out.extend_from_slice(&l.ids),
+                };
+            }
+            Node::Random(r) => {
+                r.left.collect_ids(exclude, out);
+                r.right.collect_ids(exclude, out);
+            }
+            Node::Greedy(g) => {
+                g.left.collect_ids(exclude, out);
+                g.right.collect_ids(exclude, out);
+            }
+        }
+    }
+
+    /// Count of (decision nodes, random nodes, leaves, max depth).
+    pub fn shape(&self) -> TreeShape {
+        let mut s = TreeShape::default();
+        self.shape_rec(0, &mut s);
+        s
+    }
+
+    fn shape_rec(&self, depth: usize, s: &mut TreeShape) {
+        s.max_depth = s.max_depth.max(depth);
+        match self {
+            Node::Leaf(_) => s.leaves += 1,
+            Node::Random(r) => {
+                s.random_nodes += 1;
+                r.left.shape_rec(depth + 1, s);
+                r.right.shape_rec(depth + 1, s);
+            }
+            Node::Greedy(g) => {
+                s.greedy_nodes += 1;
+                g.left.shape_rec(depth + 1, s);
+                g.right.shape_rec(depth + 1, s);
+            }
+        }
+    }
+
+    /// Memory accounting for the paper's Table 3 breakdown, in bytes.
+    pub fn memory(&self) -> NodeMemory {
+        let mut m = NodeMemory::default();
+        self.memory_rec(&mut m);
+        m
+    }
+
+    fn memory_rec(&self, m: &mut NodeMemory) {
+        use std::mem::size_of;
+        match self {
+            Node::Leaf(l) => {
+                // structure: the leaf's prediction value
+                m.structure += size_of::<f32>();
+                // leaf stats: counts + instance pointer list
+                m.leaf_stats += 2 * size_of::<u32>() + l.ids.capacity() * size_of::<InstanceId>();
+            }
+            Node::Random(r) => {
+                // structure: attr + threshold + two child pointers
+                m.structure += size_of::<usize>() + size_of::<f32>() + 2 * size_of::<usize>();
+                // decision stats: n, n_pos, n_left, n_right
+                m.decision_stats += 4 * size_of::<u32>();
+                r.left.memory_rec(m);
+                r.right.memory_rec(m);
+            }
+            Node::Greedy(g) => {
+                m.structure += size_of::<usize>() + size_of::<f32>() + 2 * size_of::<usize>();
+                // decision stats: n, n_pos + per-attribute threshold tables
+                m.decision_stats += 2 * size_of::<u32>();
+                for a in &g.attrs {
+                    m.decision_stats += size_of::<usize>()
+                        + a.thresholds.capacity()
+                            * size_of::<crate::forest::stats::ThresholdStats>();
+                }
+                g.left.memory_rec(m);
+                g.right.memory_rec(m);
+            }
+        }
+    }
+}
+
+/// Structural summary of a tree.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TreeShape {
+    pub greedy_nodes: usize,
+    pub random_nodes: usize,
+    pub leaves: usize,
+    pub max_depth: usize,
+}
+
+impl TreeShape {
+    pub fn decision_nodes(&self) -> usize {
+        self.greedy_nodes + self.random_nodes
+    }
+}
+
+/// Byte counts for the Table-3 memory breakdown.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NodeMemory {
+    pub structure: usize,
+    pub decision_stats: usize,
+    pub leaf_stats: usize,
+}
+
+impl NodeMemory {
+    pub fn total(&self) -> usize {
+        self.structure + self.decision_stats + self.leaf_stats
+    }
+    pub fn add(&mut self, o: &NodeMemory) {
+        self.structure += o.structure;
+        self.decision_stats += o.decision_stats;
+        self.leaf_stats += o.leaf_stats;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::stats::ThresholdStats;
+
+    fn leaf(n: u32, n_pos: u32, ids: Vec<u32>) -> Node {
+        Node::Leaf(LeafNode { n, n_pos, ids })
+    }
+
+    fn toy_greedy() -> Node {
+        let t = ThresholdStats {
+            v: 1.5,
+            v_low: 1.0,
+            v_high: 2.0,
+            n_left: 2,
+            n_left_pos: 0,
+            n_low: 2,
+            n_low_pos: 0,
+            n_high: 2,
+            n_high_pos: 2,
+        };
+        Node::Greedy(GreedyNode {
+            n: 4,
+            n_pos: 2,
+            attrs: vec![AttrStats {
+                attr: 0,
+                thresholds: vec![t],
+            }],
+            best_attr: 0,
+            best_thr: 0,
+            left: Box::new(leaf(2, 0, vec![0, 1])),
+            right: Box::new(leaf(2, 2, vec![2, 3])),
+        })
+    }
+
+    #[test]
+    fn leaf_value() {
+        assert_eq!(
+            LeafNode {
+                n: 4,
+                n_pos: 1,
+                ids: vec![]
+            }
+            .value(),
+            0.25
+        );
+        assert_eq!(
+            LeafNode {
+                n: 0,
+                n_pos: 0,
+                ids: vec![]
+            }
+            .value(),
+            0.5
+        );
+    }
+
+    #[test]
+    fn predict_routes() {
+        let t = toy_greedy();
+        assert_eq!(t.predict(&[1.0]), 0.0);
+        assert_eq!(t.predict(&[2.0]), 1.0);
+        assert_eq!(t.predict(&[1.5]), 0.0, "x <= v goes left");
+    }
+
+    #[test]
+    fn collect_ids_excludes() {
+        let t = toy_greedy();
+        let mut ids = Vec::new();
+        t.collect_ids(None, &mut ids);
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        ids.clear();
+        t.collect_ids(Some(2), &mut ids);
+        assert_eq!(ids, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn shape_counts() {
+        let t = toy_greedy();
+        let s = t.shape();
+        assert_eq!(s.greedy_nodes, 1);
+        assert_eq!(s.random_nodes, 0);
+        assert_eq!(s.leaves, 2);
+        assert_eq!(s.max_depth, 1);
+        assert_eq!(s.decision_nodes(), 1);
+    }
+
+    #[test]
+    fn memory_nonzero_partition() {
+        let t = toy_greedy();
+        let m = t.memory();
+        assert!(m.structure > 0);
+        assert!(m.decision_stats > 0);
+        assert!(m.leaf_stats > 0);
+        assert_eq!(m.total(), m.structure + m.decision_stats + m.leaf_stats);
+    }
+
+    #[test]
+    fn split_accessor() {
+        let t = toy_greedy();
+        assert_eq!(t.split(), Some((0, 1.5)));
+        assert_eq!(leaf(1, 0, vec![9]).split(), None);
+        assert_eq!(t.n(), 4);
+        assert_eq!(t.n_pos(), 2);
+    }
+}

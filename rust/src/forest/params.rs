@@ -1,0 +1,181 @@
+//! DaRE forest hyperparameters (paper §3–4).
+
+use crate::data::registry::PaperParams;
+
+/// Split criterion (paper Eq. 2 / Eq. 3; Appendix C.1 evaluates both).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitCriterion {
+    Gini,
+    Entropy,
+}
+
+impl std::str::FromStr for SplitCriterion {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "gini" => Ok(SplitCriterion::Gini),
+            "entropy" => Ok(SplitCriterion::Entropy),
+            _ => Err(format!("unknown criterion '{s}' (gini|entropy)")),
+        }
+    }
+}
+
+/// How many attributes each decision node considers (p̃).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MaxFeatures {
+    /// ⌊√p⌋ — the paper's choice.
+    Sqrt,
+    /// All p attributes (degenerates to a single deterministic tree family).
+    All,
+    /// Fixed count.
+    Fixed(usize),
+}
+
+impl MaxFeatures {
+    pub fn resolve(&self, p: usize) -> usize {
+        match self {
+            MaxFeatures::Sqrt => ((p as f64).sqrt().floor() as usize).max(1),
+            MaxFeatures::All => p.max(1),
+            MaxFeatures::Fixed(m) => (*m).clamp(1, p.max(1)),
+        }
+    }
+}
+
+/// Hyperparameters for a DaRE forest.
+#[derive(Clone, Debug)]
+pub struct Params {
+    /// Number of trees (T).
+    pub n_trees: usize,
+    /// Maximum tree depth (d_max).
+    pub max_depth: usize,
+    /// Thresholds considered per attribute at greedy nodes (k).
+    pub k: usize,
+    /// Layers of random nodes at the top of each tree (d_rmax);
+    /// 0 ⇒ G-DaRE, >0 ⇒ R-DaRE.
+    pub d_rmax: usize,
+    /// Split criterion for greedy nodes.
+    pub criterion: SplitCriterion,
+    /// Attributes sampled per decision node (p̃).
+    pub max_features: MaxFeatures,
+    /// Minimum instances required to attempt a split (2 in the paper:
+    /// training stops on pure nodes or max depth).
+    pub min_samples_split: usize,
+    /// Worker threads for per-tree parallelism (1 ⇒ sequential, matching the
+    /// paper's single-threaded timing protocol).
+    pub n_threads: usize,
+}
+
+impl Default for Params {
+    fn default() -> Self {
+        Params {
+            n_trees: 100,
+            max_depth: 10,
+            k: 25,
+            d_rmax: 0,
+            criterion: SplitCriterion::Gini,
+            max_features: MaxFeatures::Sqrt,
+            min_samples_split: 2,
+            n_threads: 1,
+        }
+    }
+}
+
+impl Params {
+    /// Instantiate from a paper Table-6/8 row with an explicit d_rmax.
+    pub fn from_paper(pp: &PaperParams, d_rmax: usize) -> Self {
+        Params {
+            n_trees: pp.n_trees,
+            max_depth: pp.max_depth,
+            k: pp.k,
+            d_rmax,
+            ..Default::default()
+        }
+    }
+
+    /// G-DaRE variant (d_rmax = 0).
+    pub fn gdare(pp: &PaperParams) -> Self {
+        Self::from_paper(pp, 0)
+    }
+
+    /// R-DaRE at one of the paper's four error tolerances
+    /// (0 → 0.1%, 1 → 0.25%, 2 → 0.5%, 3 → 1.0%).
+    pub fn rdare(pp: &PaperParams, tol_idx: usize) -> Self {
+        Self::from_paper(pp, pp.drmax[tol_idx.min(3)])
+    }
+
+    pub fn with_threads(mut self, t: usize) -> Self {
+        self.n_threads = t.max(1);
+        self
+    }
+
+    pub fn with_criterion(mut self, c: SplitCriterion) -> Self {
+        self.criterion = c;
+        self
+    }
+
+    /// Sanity-check invariants; call before fitting.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_trees >= 1, "n_trees must be >= 1");
+        anyhow::ensure!(self.max_depth >= 1, "max_depth must be >= 1");
+        anyhow::ensure!(self.k >= 1, "k must be >= 1");
+        anyhow::ensure!(
+            self.d_rmax <= self.max_depth,
+            "d_rmax ({}) cannot exceed max_depth ({})",
+            self.d_rmax,
+            self.max_depth
+        );
+        anyhow::ensure!(self.min_samples_split >= 2, "min_samples_split must be >= 2");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_features_resolution() {
+        assert_eq!(MaxFeatures::Sqrt.resolve(100), 10);
+        assert_eq!(MaxFeatures::Sqrt.resolve(90), 9); // ⌊√90⌋
+        assert_eq!(MaxFeatures::Sqrt.resolve(0), 1);
+        assert_eq!(MaxFeatures::All.resolve(7), 7);
+        assert_eq!(MaxFeatures::Fixed(3).resolve(2), 2);
+        assert_eq!(MaxFeatures::Fixed(0).resolve(5), 1);
+    }
+
+    #[test]
+    fn paper_param_construction() {
+        let pp = crate::data::registry::find("bank_marketing").unwrap().gini;
+        let g = Params::gdare(&pp);
+        assert_eq!(g.d_rmax, 0);
+        assert_eq!(g.n_trees, 100);
+        let r = Params::rdare(&pp, 1); // tol=0.25% → d_rmax=9
+        assert_eq!(r.d_rmax, 9);
+    }
+
+    #[test]
+    fn validation() {
+        assert!(Params::default().validate().is_ok());
+        let bad = Params {
+            d_rmax: 11,
+            max_depth: 10,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad2 = Params {
+            k: 0,
+            ..Default::default()
+        };
+        assert!(bad2.validate().is_err());
+    }
+
+    #[test]
+    fn criterion_parse() {
+        assert_eq!("gini".parse::<SplitCriterion>().unwrap(), SplitCriterion::Gini);
+        assert_eq!(
+            "Entropy".parse::<SplitCriterion>().unwrap(),
+            SplitCriterion::Entropy
+        );
+        assert!("x".parse::<SplitCriterion>().is_err());
+    }
+}

@@ -1,0 +1,429 @@
+//! Forest (de)serialization to JSON — model snapshots for the coordinator
+//! and the `dare train --save` / `dare serve --load` CLI paths.
+//!
+//! The dataset is serialized alongside the trees: DaRE deletion requires the
+//! training data (leaf instance pointers reference it), so a snapshot is only
+//! self-contained with both.
+
+use crate::data::dataset::Dataset;
+use crate::forest::forest::DareForest;
+use crate::forest::node::{GreedyNode, LeafNode, Node, RandomNode};
+use crate::forest::params::{MaxFeatures, Params, SplitCriterion};
+use crate::forest::stats::{AttrStats, ThresholdStats};
+use crate::forest::tree::DareTree;
+use crate::util::json::{parse, Value};
+
+/// u64 values (seeds) exceed f64's exact-integer range; encode as strings.
+fn set_u64(o: &mut Value, key: &str, v: u64) {
+    o.set(key, v.to_string());
+}
+
+fn get_u64(v: &Value, key: &str) -> anyhow::Result<u64> {
+    match v.get(key) {
+        Some(Value::Str(s)) => s
+            .parse::<u64>()
+            .map_err(|e| anyhow::anyhow!("bad u64 field '{key}': {e}")),
+        Some(Value::Num(n)) => Ok(*n as u64),
+        _ => anyhow::bail!("u64 field '{key}' missing"),
+    }
+}
+
+fn thr_to_json(t: &ThresholdStats) -> Value {
+    let mut o = Value::obj();
+    o.set("v", t.v)
+        .set("vl", t.v_low)
+        .set("vh", t.v_high)
+        .set("nl", t.n_left)
+        .set("nlp", t.n_left_pos)
+        .set("clo", t.n_low)
+        .set("clop", t.n_low_pos)
+        .set("chi", t.n_high)
+        .set("chip", t.n_high_pos);
+    o
+}
+
+fn thr_from_json(v: &Value) -> anyhow::Result<ThresholdStats> {
+    let g = |k: &str| -> anyhow::Result<f64> {
+        v.get(k)
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("threshold field '{k}' missing"))
+    };
+    Ok(ThresholdStats {
+        v: g("v")? as f32,
+        v_low: g("vl")? as f32,
+        v_high: g("vh")? as f32,
+        n_left: g("nl")? as u32,
+        n_left_pos: g("nlp")? as u32,
+        n_low: g("clo")? as u32,
+        n_low_pos: g("clop")? as u32,
+        n_high: g("chi")? as u32,
+        n_high_pos: g("chip")? as u32,
+    })
+}
+
+fn node_to_json(n: &Node) -> Value {
+    let mut o = Value::obj();
+    match n {
+        Node::Leaf(l) => {
+            o.set("t", "leaf")
+                .set("n", l.n)
+                .set("np", l.n_pos)
+                .set("ids", l.ids.clone());
+        }
+        Node::Random(r) => {
+            o.set("t", "rand")
+                .set("n", r.n)
+                .set("np", r.n_pos)
+                .set("a", r.attr)
+                .set("v", r.v)
+                .set("nl", r.n_left)
+                .set("nr", r.n_right)
+                .set("l", node_to_json(&r.left))
+                .set("r", node_to_json(&r.right));
+        }
+        Node::Greedy(g) => {
+            let attrs: Vec<Value> = g
+                .attrs
+                .iter()
+                .map(|a| {
+                    let mut ao = Value::obj();
+                    ao.set("a", a.attr).set(
+                        "thr",
+                        Value::Arr(a.thresholds.iter().map(thr_to_json).collect()),
+                    );
+                    ao
+                })
+                .collect();
+            o.set("t", "greedy")
+                .set("n", g.n)
+                .set("np", g.n_pos)
+                .set("attrs", Value::Arr(attrs))
+                .set("ba", g.best_attr)
+                .set("bt", g.best_thr)
+                .set("l", node_to_json(&g.left))
+                .set("r", node_to_json(&g.right));
+        }
+    }
+    o
+}
+
+fn node_from_json(v: &Value) -> anyhow::Result<Node> {
+    let t = v
+        .get("t")
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| anyhow::anyhow!("node kind missing"))?;
+    let num =
+        |k: &str| -> anyhow::Result<u32> {
+            v.get(k)
+                .and_then(|x| x.as_u64())
+                .map(|x| x as u32)
+                .ok_or_else(|| anyhow::anyhow!("node field '{k}' missing"))
+        };
+    match t {
+        "leaf" => {
+            let ids = v
+                .get("ids")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("leaf ids missing"))?
+                .iter()
+                .map(|x| x.as_u64().unwrap_or(0) as u32)
+                .collect();
+            Ok(Node::Leaf(LeafNode {
+                n: num("n")?,
+                n_pos: num("np")?,
+                ids,
+            }))
+        }
+        "rand" => Ok(Node::Random(RandomNode {
+            n: num("n")?,
+            n_pos: num("np")?,
+            attr: num("a")? as usize,
+            v: v.get("v").and_then(|x| x.as_f64()).unwrap_or(0.0) as f32,
+            n_left: num("nl")?,
+            n_right: num("nr")?,
+            left: Box::new(node_from_json(
+                v.get("l").ok_or_else(|| anyhow::anyhow!("left missing"))?,
+            )?),
+            right: Box::new(node_from_json(
+                v.get("r").ok_or_else(|| anyhow::anyhow!("right missing"))?,
+            )?),
+        })),
+        "greedy" => {
+            let attrs_json = v
+                .get("attrs")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("attrs missing"))?;
+            let mut attrs = Vec::with_capacity(attrs_json.len());
+            for a in attrs_json {
+                let attr = a
+                    .get("a")
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| anyhow::anyhow!("attr id missing"))?;
+                let thr = a
+                    .get("thr")
+                    .and_then(|x| x.as_arr())
+                    .ok_or_else(|| anyhow::anyhow!("thresholds missing"))?
+                    .iter()
+                    .map(thr_from_json)
+                    .collect::<anyhow::Result<Vec<_>>>()?;
+                attrs.push(AttrStats {
+                    attr,
+                    thresholds: thr,
+                });
+            }
+            Ok(Node::Greedy(GreedyNode {
+                n: num("n")?,
+                n_pos: num("np")?,
+                attrs,
+                best_attr: num("ba")? as usize,
+                best_thr: num("bt")? as usize,
+                left: Box::new(node_from_json(
+                    v.get("l").ok_or_else(|| anyhow::anyhow!("left missing"))?,
+                )?),
+                right: Box::new(node_from_json(
+                    v.get("r").ok_or_else(|| anyhow::anyhow!("right missing"))?,
+                )?),
+            }))
+        }
+        _ => anyhow::bail!("unknown node kind '{t}'"),
+    }
+}
+
+fn params_to_json(p: &Params) -> Value {
+    let mut o = Value::obj();
+    o.set("n_trees", p.n_trees)
+        .set("max_depth", p.max_depth)
+        .set("k", p.k)
+        .set("d_rmax", p.d_rmax)
+        .set(
+            "criterion",
+            match p.criterion {
+                SplitCriterion::Gini => "gini",
+                SplitCriterion::Entropy => "entropy",
+            },
+        )
+        .set(
+            "max_features",
+            match p.max_features {
+                MaxFeatures::Sqrt => "sqrt".to_string(),
+                MaxFeatures::All => "all".to_string(),
+                MaxFeatures::Fixed(n) => n.to_string(),
+            },
+        )
+        .set("min_samples_split", p.min_samples_split)
+        .set("n_threads", p.n_threads);
+    o
+}
+
+fn params_from_json(v: &Value) -> anyhow::Result<Params> {
+    let get = |k: &str| -> anyhow::Result<usize> {
+        v.get(k)
+            .and_then(|x| x.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("params field '{k}' missing"))
+    };
+    let mf = match v.get("max_features").and_then(|x| x.as_str()) {
+        Some("sqrt") | None => MaxFeatures::Sqrt,
+        Some("all") => MaxFeatures::All,
+        Some(s) => MaxFeatures::Fixed(s.parse::<usize>().unwrap_or(1)),
+    };
+    Ok(Params {
+        n_trees: get("n_trees")?,
+        max_depth: get("max_depth")?,
+        k: get("k")?,
+        d_rmax: get("d_rmax")?,
+        criterion: v
+            .get("criterion")
+            .and_then(|x| x.as_str())
+            .unwrap_or("gini")
+            .parse()
+            .map_err(|e: String| anyhow::anyhow!(e))?,
+        max_features: mf,
+        min_samples_split: get("min_samples_split")?,
+        n_threads: get("n_threads").unwrap_or(1),
+    })
+}
+
+fn dataset_to_json(d: &Dataset) -> Value {
+    // Store the full backing arrays including dead rows so instance ids in
+    // leaf lists stay valid; liveness is reconstructed from the alive list.
+    let n = d.n_total();
+    let p = d.n_features();
+    let mut cols: Vec<Value> = Vec::with_capacity(p);
+    for j in 0..p {
+        cols.push(Value::Arr(
+            d.col(j).iter().map(|&x| Value::Num(x as f64)).collect(),
+        ));
+    }
+    let labels: Vec<Value> = (0..n as u32).map(|i| Value::Num(d.y(i) as f64)).collect();
+    let alive: Vec<Value> = (0..n as u32)
+        .map(|i| Value::Bool(d.is_alive(i)))
+        .collect();
+    let mut o = Value::obj();
+    o.set("cols", Value::Arr(cols))
+        .set("labels", Value::Arr(labels))
+        .set("alive", Value::Arr(alive));
+    o
+}
+
+fn dataset_from_json(v: &Value) -> anyhow::Result<Dataset> {
+    let cols_json = v
+        .get("cols")
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("dataset cols missing"))?;
+    let cols: Vec<Vec<f32>> = cols_json
+        .iter()
+        .map(|c| {
+            c.as_arr()
+                .map(|a| a.iter().map(|x| x.as_f64().unwrap_or(0.0) as f32).collect())
+                .ok_or_else(|| anyhow::anyhow!("bad column"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let labels: Vec<u8> = v
+        .get("labels")
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("labels missing"))?
+        .iter()
+        .map(|x| x.as_u64().unwrap_or(0) as u8)
+        .collect();
+    let mut d = Dataset::from_columns(cols, labels);
+    if let Some(alive) = v.get("alive").and_then(|x| x.as_arr()) {
+        for (i, a) in alive.iter().enumerate() {
+            if a.as_bool() == Some(false) {
+                d.mark_removed(i as u32);
+            }
+        }
+    }
+    Ok(d)
+}
+
+/// Serialize a forest (model + params + database) to a JSON string.
+pub fn forest_to_json(f: &DareForest) -> String {
+    let trees: Vec<Value> = f
+        .trees()
+        .iter()
+        .map(|t| {
+            let mut o = Value::obj();
+            set_u64(&mut o, "seed", t.tree_seed);
+            set_u64(&mut o, "epoch", t.epoch);
+            o.set("root", node_to_json(&t.root));
+            o
+        })
+        .collect();
+    let mut o = Value::obj();
+    o.set("format", "dare-forest-v1");
+    set_u64(&mut o, "seed", f.seed());
+    o.set("params", params_to_json(f.params()))
+        .set("trees", Value::Arr(trees))
+        .set("data", dataset_to_json(f.data()));
+    o.to_string()
+}
+
+/// Deserialize a forest from JSON produced by [`forest_to_json`].
+pub fn forest_from_json(s: &str) -> anyhow::Result<DareForest> {
+    let v = parse(s).map_err(|e| anyhow::anyhow!("{e}"))?;
+    anyhow::ensure!(
+        v.get("format").and_then(|x| x.as_str()) == Some("dare-forest-v1"),
+        "unknown snapshot format"
+    );
+    let params = params_from_json(v.get("params").ok_or_else(|| anyhow::anyhow!("params"))?)?;
+    let seed = get_u64(&v, "seed")?;
+    let data = dataset_from_json(v.get("data").ok_or_else(|| anyhow::anyhow!("data"))?)?;
+    let trees_json = v
+        .get("trees")
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("trees missing"))?;
+    let mut trees = Vec::with_capacity(trees_json.len());
+    for t in trees_json {
+        trees.push(DareTree {
+            root: node_from_json(t.get("root").ok_or_else(|| anyhow::anyhow!("root"))?)?,
+            tree_seed: get_u64(t, "seed")?,
+            epoch: get_u64(t, "epoch").unwrap_or(0),
+        });
+    }
+    DareForest::from_parts(params, seed, trees, data)
+}
+
+/// Save to a file.
+pub fn save(f: &DareForest, path: &std::path::Path) -> anyhow::Result<()> {
+    std::fs::write(path, forest_to_json(f))?;
+    Ok(())
+}
+
+/// Load from a file.
+pub fn load(path: &std::path::Path) -> anyhow::Result<DareForest> {
+    let s = std::fs::read_to_string(path)?;
+    forest_from_json(&s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::forest::tree::structural_eq;
+
+    fn forest() -> DareForest {
+        let data = generate(
+            &SynthSpec {
+                n: 150,
+                informative: 3,
+                redundant: 0,
+                noise: 2,
+                flip: 0.05,
+                ..Default::default()
+            },
+            5,
+        );
+        let params = Params {
+            n_trees: 3,
+            max_depth: 5,
+            k: 5,
+            d_rmax: 1,
+            ..Default::default()
+        };
+        DareForest::fit(data, &params, 77)
+    }
+
+    #[test]
+    fn roundtrip_preserves_structure_and_predictions() {
+        let f = forest();
+        let json = forest_to_json(&f);
+        let back = forest_from_json(&json).unwrap();
+        assert_eq!(back.n_trees(), f.n_trees());
+        assert_eq!(back.n_alive(), f.n_alive());
+        for (a, b) in f.trees().iter().zip(back.trees()) {
+            assert!(structural_eq(&a.root, &b.root));
+            assert_eq!(a.tree_seed, b.tree_seed);
+        }
+        let row = f.data().row(3);
+        assert_eq!(f.predict_proba(&row), back.predict_proba(&row));
+    }
+
+    #[test]
+    fn roundtrip_supports_further_deletions() {
+        let mut f = forest();
+        f.delete(0).unwrap();
+        let json = forest_to_json(&f);
+        let mut back = forest_from_json(&json).unwrap();
+        // deleting the same id again fails (dead), a live one succeeds
+        assert!(back.delete(0).is_err());
+        back.delete(5).unwrap();
+        assert_eq!(back.n_alive(), f.n_alive() - 1);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(forest_from_json("{}").is_err());
+        assert!(forest_from_json("not json").is_err());
+        assert!(forest_from_json(r#"{"format":"other"}"#).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let f = forest();
+        let tmp = std::env::temp_dir().join("dare_snapshot_test.json");
+        save(&f, &tmp).unwrap();
+        let back = load(&tmp).unwrap();
+        assert_eq!(back.n_trees(), 3);
+        std::fs::remove_file(&tmp).ok();
+    }
+}

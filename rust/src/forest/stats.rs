@@ -1,0 +1,377 @@
+//! Cached node statistics (paper §3.1–3.2, Appendix A.6).
+//!
+//! Greedy decision nodes store, per sampled attribute, up to `k` candidate
+//! thresholds. Each threshold is the midpoint of two *adjacent* attribute
+//! values `v_low < v_high` present in the node's data, and is **valid** iff
+//! some instance at `v_low` and some instance at `v_high` carry opposite
+//! labels (§3.2). Alongside the split counts (|D_l|, |D_l,1|) we cache the
+//! per-boundary-value counts so invalidation is detected in O(1) per deletion
+//! and scores recompute in O(1) without touching the data (Theorem 3.3).
+
+use crate::util::rng::Rng;
+
+/// Statistics for one candidate threshold of one attribute (§A.6).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ThresholdStats {
+    /// The threshold value v (midpoint of `v_low` and `v_high`).
+    pub v: f32,
+    /// Adjacent attribute value just below/at the boundary.
+    pub v_low: f32,
+    /// Adjacent attribute value just above the boundary.
+    pub v_high: f32,
+    /// |D_l| — instances with x ≤ v.
+    pub n_left: u32,
+    /// |D_{l,1}| — positives with x ≤ v.
+    pub n_left_pos: u32,
+    /// Instances with x == v_low.
+    pub n_low: u32,
+    /// Positives with x == v_low.
+    pub n_low_pos: u32,
+    /// Instances with x == v_high.
+    pub n_high: u32,
+    /// Positives with x == v_high.
+    pub n_high_pos: u32,
+}
+
+impl ThresholdStats {
+    /// Validity per §3.2: both boundary value-groups non-empty and at least
+    /// one opposite-label pair across the boundary.
+    #[inline]
+    pub fn is_valid(&self) -> bool {
+        if self.n_low == 0 || self.n_high == 0 {
+            return false;
+        }
+        let low_neg = self.n_low - self.n_low_pos;
+        let high_neg = self.n_high - self.n_high_pos;
+        (self.n_low_pos > 0 && high_neg > 0) || (low_neg > 0 && self.n_high_pos > 0)
+    }
+
+    /// Update counts for the removal of an instance with attribute value `x`
+    /// and label `y` (O(1); called on the deletion path).
+    #[inline]
+    pub fn remove(&mut self, x: f32, y: u8) {
+        let yp = y as u32;
+        if x <= self.v {
+            self.n_left -= 1;
+            self.n_left_pos -= yp;
+        }
+        if x == self.v_low {
+            self.n_low -= 1;
+            self.n_low_pos -= yp;
+        } else if x == self.v_high {
+            self.n_high -= 1;
+            self.n_high_pos -= yp;
+        }
+    }
+
+    /// Update counts for an added instance. NOTE: addition can also *break
+    /// adjacency* (a new value strictly between `v_low` and `v_high`); the
+    /// caller detects that via [`ThresholdStats::adjacency_broken`].
+    #[inline]
+    pub fn add(&mut self, x: f32, y: u8) {
+        let yp = y as u32;
+        if x <= self.v {
+            self.n_left += 1;
+            self.n_left_pos += yp;
+        }
+        if x == self.v_low {
+            self.n_low += 1;
+            self.n_low_pos += yp;
+        } else if x == self.v_high {
+            self.n_high += 1;
+            self.n_high_pos += yp;
+        }
+    }
+
+    /// True if inserting value `x` would break the (v_low, v_high) adjacency.
+    #[inline]
+    pub fn adjacency_broken(&self, x: f32) -> bool {
+        x > self.v_low && x < self.v_high
+    }
+}
+
+/// Per-attribute statistics at a greedy node: the attribute id and its
+/// sampled candidate thresholds (≤ k, possibly fewer when the attribute has
+/// few valid thresholds).
+#[derive(Clone, Debug, Default)]
+pub struct AttrStats {
+    pub attr: usize,
+    pub thresholds: Vec<ThresholdStats>,
+}
+
+/// Enumerate ALL valid thresholds of one attribute over `pairs`
+/// (value, label) — O(m log m). Returns fully-populated stats, sorted by v.
+pub fn enumerate_valid(pairs: &mut Vec<(f32, u8)>) -> Vec<ThresholdStats> {
+    if pairs.len() < 2 {
+        return Vec::new();
+    }
+    // total_cmp avoids the partial_cmp Option in the hot sort (§Perf); NaNs
+    // would sort to the end and produce no valid candidates rather than
+    // panicking, which matches "no usable threshold" semantics.
+    pairs.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+    // group by distinct value
+    struct Group {
+        v: f32,
+        n: u32,
+        pos: u32,
+    }
+    let mut groups: Vec<Group> = Vec::new();
+    for &(v, y) in pairs.iter() {
+        match groups.last_mut() {
+            Some(g) if g.v == v => {
+                g.n += 1;
+                g.pos += y as u32;
+            }
+            _ => groups.push(Group {
+                v,
+                n: 1,
+                pos: y as u32,
+            }),
+        }
+    }
+    let mut out = Vec::new();
+    let mut cum_n = 0u32;
+    let mut cum_pos = 0u32;
+    for w in 0..groups.len().saturating_sub(1) {
+        let lo = &groups[w];
+        let hi = &groups[w + 1];
+        cum_n += lo.n;
+        cum_pos += lo.pos;
+        let lo_neg = lo.n - lo.pos;
+        let hi_neg = hi.n - hi.pos;
+        let valid = (lo.pos > 0 && hi_neg > 0) || (lo_neg > 0 && hi.pos > 0);
+        if valid {
+            let v = midpoint(lo.v, hi.v);
+            out.push(ThresholdStats {
+                v,
+                v_low: lo.v,
+                v_high: hi.v,
+                n_left: cum_n,
+                n_left_pos: cum_pos,
+                n_low: lo.n,
+                n_low_pos: lo.pos,
+                n_high: hi.n,
+                n_high_pos: hi.pos,
+            });
+        }
+    }
+    out
+}
+
+/// Midpoint of two adjacent float values, guaranteed to satisfy
+/// `lo <= mid < hi` so `x ≤ v` routes the `lo` group left and the `hi`
+/// group right even when the values are adjacent floats.
+#[inline]
+pub fn midpoint(lo: f32, hi: f32) -> f32 {
+    debug_assert!(lo < hi);
+    let mid = lo + (hi - lo) * 0.5;
+    if mid >= hi {
+        lo
+    } else {
+        mid
+    }
+}
+
+/// Sample up to `k` of the given candidates uniformly without replacement,
+/// preserving the (random) sample order. Used at training time (Alg. 1 l.20).
+pub fn sample_thresholds(candidates: Vec<ThresholdStats>, k: usize, rng: &mut Rng) -> Vec<ThresholdStats> {
+    if candidates.len() <= k {
+        return candidates;
+    }
+    rng.sample_indices(candidates.len(), k)
+        .into_iter()
+        .map(|i| candidates[i])
+        .collect()
+}
+
+/// Resample invalidated thresholds after a deletion (Lemma A.1): keep the
+/// still-valid stored thresholds, and replace the invalid ones by sampling
+/// uniformly from the valid-and-unselected candidates. `candidates` must be
+/// the full valid set for this attribute over the node's updated data.
+///
+/// Returns the number of thresholds replaced.
+pub fn resample_invalid(
+    stored: &mut Vec<ThresholdStats>,
+    candidates: &[ThresholdStats],
+    k: usize,
+    rng: &mut Rng,
+) -> usize {
+    // keep valid stored thresholds
+    let before = stored.len();
+    stored.retain(|t| t.is_valid());
+    let kept = stored.len();
+    let dropped = before - kept;
+
+    // pool = candidates not currently stored (match on the threshold value;
+    // midpoints are recomputed bit-identically from the same adjacent values)
+    let pool: Vec<&ThresholdStats> = candidates
+        .iter()
+        .filter(|c| !stored.iter().any(|s| s.v == c.v))
+        .collect();
+    let target = k.min(kept + pool.len());
+    let need = target.saturating_sub(kept);
+    if need > 0 {
+        for i in rng.sample_indices(pool.len(), need) {
+            stored.push(*pool[i]);
+        }
+    }
+    dropped
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pairs(vals: &[(f32, u8)]) -> Vec<(f32, u8)> {
+        vals.to_vec()
+    }
+
+    #[test]
+    fn enumerate_simple() {
+        // values 1(neg) 2(pos) 3(neg): both boundaries valid
+        let mut p = pairs(&[(1.0, 0), (2.0, 1), (3.0, 0)]);
+        let c = enumerate_valid(&mut p);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c[0].v, 1.5);
+        assert_eq!(c[0].n_left, 1);
+        assert_eq!(c[0].n_left_pos, 0);
+        assert_eq!(c[1].v, 2.5);
+        assert_eq!(c[1].n_left, 2);
+        assert_eq!(c[1].n_left_pos, 1);
+    }
+
+    #[test]
+    fn same_label_boundary_invalid() {
+        // 1(neg) 2(neg) 3(pos): only the 2/3 boundary is valid
+        let mut p = pairs(&[(1.0, 0), (2.0, 0), (3.0, 1)]);
+        let c = enumerate_valid(&mut p);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].v_low, 2.0);
+        assert_eq!(c[0].v_high, 3.0);
+    }
+
+    #[test]
+    fn mixed_labels_at_one_value_validates_boundary() {
+        // value 1 has both labels; value 2 all neg → boundary valid
+        // (pos@1 vs neg@2)
+        let mut p = pairs(&[(1.0, 0), (1.0, 1), (2.0, 0)]);
+        let c = enumerate_valid(&mut p);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].n_low, 2);
+        assert_eq!(c[0].n_low_pos, 1);
+    }
+
+    #[test]
+    fn constant_attribute_no_thresholds() {
+        let mut p = pairs(&[(5.0, 0), (5.0, 1), (5.0, 0)]);
+        assert!(enumerate_valid(&mut p).is_empty());
+        let mut single = pairs(&[(1.0, 1)]);
+        assert!(enumerate_valid(&mut single).is_empty());
+    }
+
+    #[test]
+    fn pure_labels_no_thresholds() {
+        let mut p = pairs(&[(1.0, 1), (2.0, 1), (3.0, 1)]);
+        assert!(enumerate_valid(&mut p).is_empty());
+    }
+
+    #[test]
+    fn remove_updates_and_invalidates() {
+        let mut p = pairs(&[(1.0, 0), (2.0, 1), (3.0, 0)]);
+        let c = enumerate_valid(&mut p);
+        let mut t = c[0]; // boundary 1/2, v=1.5
+        assert!(t.is_valid());
+        // delete the only positive at value 2 → boundary 1/2 loses its
+        // opposite-label pair (v_high group keeps... the 2.0 instance is the
+        // only one at v_high) → invalid
+        t.remove(2.0, 1);
+        assert_eq!(t.n_high, 0);
+        assert!(!t.is_valid());
+    }
+
+    #[test]
+    fn remove_left_count_tracking() {
+        let mut p = pairs(&[(1.0, 0), (2.0, 1), (3.0, 0), (1.0, 1)]);
+        let c = enumerate_valid(&mut p);
+        let mut t = *c.iter().find(|t| t.v == 1.5).unwrap();
+        assert_eq!(t.n_left, 2);
+        assert_eq!(t.n_left_pos, 1);
+        t.remove(1.0, 1);
+        assert_eq!(t.n_left, 1);
+        assert_eq!(t.n_left_pos, 0);
+        assert_eq!(t.n_low, 1);
+        assert_eq!(t.n_low_pos, 0);
+        // still valid: neg@1 vs pos@2
+        assert!(t.is_valid());
+    }
+
+    #[test]
+    fn add_and_adjacency() {
+        let mut p = pairs(&[(1.0, 0), (3.0, 1)]);
+        let c = enumerate_valid(&mut p);
+        let mut t = c[0];
+        assert!(!t.adjacency_broken(1.0));
+        assert!(!t.adjacency_broken(3.0));
+        assert!(t.adjacency_broken(2.0));
+        t.add(1.0, 1);
+        assert_eq!(t.n_low, 2);
+        assert_eq!(t.n_low_pos, 1);
+        assert_eq!(t.n_left, 2);
+    }
+
+    #[test]
+    fn midpoint_routes_correctly() {
+        // adjacent f32s: midpoint must stay strictly below hi
+        let lo = 1.0f32;
+        let hi = f32::from_bits(lo.to_bits() + 1);
+        let m = midpoint(lo, hi);
+        assert!(lo <= m && m < hi);
+        assert!((midpoint(2.0, 4.0) - 3.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn sampling_respects_k() {
+        let mut rng = Rng::new(3);
+        let mut p: Vec<(f32, u8)> = (0..40).map(|i| (i as f32, (i % 2) as u8)).collect();
+        let c = enumerate_valid(&mut p);
+        assert!(c.len() >= 30);
+        let total = c.len();
+        let s = sample_thresholds(c.clone(), 5, &mut rng);
+        assert_eq!(s.len(), 5);
+        let s2 = sample_thresholds(c, total + 10, &mut rng);
+        assert_eq!(s2.len(), total);
+    }
+
+    #[test]
+    fn resample_keeps_valid_replaces_invalid() {
+        let mut rng = Rng::new(5);
+        let mut p: Vec<(f32, u8)> = (0..20).map(|i| (i as f32, (i % 2) as u8)).collect();
+        let full = enumerate_valid(&mut p);
+        let mut stored = vec![full[0], full[1], full[2]];
+        // invalidate stored[1] artificially
+        stored[1].n_low = 0;
+        let replaced = resample_invalid(&mut stored, &full, 3, &mut rng);
+        assert_eq!(replaced, 1);
+        assert_eq!(stored.len(), 3);
+        assert!(stored.iter().all(|t| t.is_valid()));
+        // originals kept
+        assert!(stored.iter().any(|t| t.v == full[0].v));
+        assert!(stored.iter().any(|t| t.v == full[2].v));
+        // replacement is none of the kept ones
+        let mut vs: Vec<u32> = stored.iter().map(|t| t.v.to_bits()).collect();
+        vs.sort_unstable();
+        vs.dedup();
+        assert_eq!(vs.len(), 3, "no duplicate thresholds");
+    }
+
+    #[test]
+    fn resample_shrinks_when_candidates_exhausted() {
+        let mut rng = Rng::new(6);
+        let mut p = pairs(&[(1.0, 0), (2.0, 1)]);
+        let full = enumerate_valid(&mut p); // exactly one candidate
+        let mut stored = vec![full[0], full[0]];
+        stored[1].n_high = 0; // invalid duplicate
+        resample_invalid(&mut stored, &full, 2, &mut rng);
+        assert_eq!(stored.len(), 1, "no unselected candidates to draw");
+    }
+}

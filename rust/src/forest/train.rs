@@ -1,0 +1,438 @@
+//! DaRE tree training (paper Alg. 1 / Alg. 3 TRAIN).
+//!
+//! Training is recursive: random nodes in the top `d_rmax` layers, greedy
+//! nodes below, leaves at the stopping criteria (pure node, max depth, or
+//! too few instances). Every node's randomness comes from a stream seeded by
+//! `(tree_seed, node_path)`, so retraining a subtree on the same data replays
+//! the same choices — the property the exactness tests exploit (DESIGN.md §5).
+
+use crate::data::dataset::{Dataset, InstanceId};
+use crate::forest::node::{GreedyNode, LeafNode, Node, RandomNode};
+use crate::forest::params::Params;
+use crate::forest::stats::{enumerate_valid, sample_thresholds, AttrStats};
+use crate::forest::criterion::split_score;
+use crate::util::rng::{mix_seed, Rng};
+
+/// Shared context threaded through the recursion.
+pub struct TrainCtx<'a> {
+    pub data: &'a Dataset,
+    pub params: &'a Params,
+    pub tree_seed: u64,
+}
+
+/// Path discriminator of the root node.
+pub const ROOT_PATH: u64 = 0x600D_F00D;
+
+/// Path discriminator of a child node.
+#[inline]
+pub fn child_path(path: u64, depth: usize, right: bool) -> u64 {
+    mix_seed(&[path, depth as u64, right as u64 + 1])
+}
+
+/// RNG for the node at `path`.
+#[inline]
+pub fn node_rng(tree_seed: u64, path: u64) -> Rng {
+    Rng::new(mix_seed(&[tree_seed, path]))
+}
+
+/// Gather (value, label) pairs of one attribute over the given instances.
+/// Reads through the column slice directly (no per-element bounds hops).
+pub fn gather_pairs(data: &Dataset, ids: &[InstanceId], attr: usize) -> Vec<(f32, u8)> {
+    let col = data.col(attr);
+    ids.iter()
+        .map(|&i| (col[i as usize], data.y(i)))
+        .collect()
+}
+
+/// Partition ids by `x_attr ≤ v` into (left, right).
+pub fn partition(
+    data: &Dataset,
+    ids: &[InstanceId],
+    attr: usize,
+    v: f32,
+) -> (Vec<InstanceId>, Vec<InstanceId>) {
+    let mut left = Vec::with_capacity(ids.len());
+    let mut right = Vec::with_capacity(ids.len());
+    let col = data.col(attr);
+    for &i in ids {
+        if col[i as usize] <= v {
+            left.push(i);
+        } else {
+            right.push(i);
+        }
+    }
+    (left, right)
+}
+
+/// Select the best (attr_slot, thr_slot) over all cached stats; ties break to
+/// the first-encountered pair (stored order is random, so the tie-break is
+/// distributionally harmless). Returns None when no thresholds exist.
+pub fn select_best(node_n: u32, node_pos: u32, attrs: &[AttrStats], params: &Params) -> Option<(usize, usize)> {
+    let mut best: Option<(usize, usize, f64)> = None;
+    for (ai, a) in attrs.iter().enumerate() {
+        for (ti, t) in a.thresholds.iter().enumerate() {
+            let s = split_score(params.criterion, node_n, node_pos, t.n_left, t.n_left_pos);
+            match best {
+                Some((_, _, bs)) if s >= bs => {}
+                _ => best = Some((ai, ti, s)),
+            }
+        }
+    }
+    best.map(|(a, t, _)| (a, t))
+}
+
+/// Count positives among `ids`.
+#[inline]
+pub fn count_pos(data: &Dataset, ids: &[InstanceId]) -> u32 {
+    ids.iter().map(|&i| data.y(i) as u32).sum()
+}
+
+/// Build a leaf from `ids`.
+pub fn make_leaf(data: &Dataset, ids: Vec<InstanceId>) -> Node {
+    let n_pos = count_pos(data, &ids);
+    Node::Leaf(LeafNode {
+        n: ids.len() as u32,
+        n_pos,
+        ids,
+    })
+}
+
+/// Train a DaRE (sub)tree on `ids` rooted at `depth` with path id `path`
+/// (paper Alg. 1). Used both for initial training and for the subtree
+/// retraining triggered by deletions (Alg. 2).
+pub fn train(ctx: &TrainCtx<'_>, ids: Vec<InstanceId>, depth: usize, path: u64) -> Node {
+    let n = ids.len() as u32;
+    let n_pos = count_pos(ctx.data, &ids);
+
+    // stopping criteria: pure node, insufficient data, or max depth
+    if n < ctx.params.min_samples_split as u32
+        || n_pos == 0
+        || n_pos == n
+        || depth >= ctx.params.max_depth
+    {
+        return make_leaf(ctx.data, ids);
+    }
+
+    if depth < ctx.params.d_rmax {
+        train_random(ctx, ids, n, n_pos, depth, path)
+    } else {
+        train_greedy(ctx, ids, n, n_pos, depth, path)
+    }
+}
+
+/// Random decision node (§3.3): attribute uniform over P (rejecting
+/// attributes constant in D), threshold uniform in [a_min, a_max).
+fn train_random(
+    ctx: &TrainCtx<'_>,
+    ids: Vec<InstanceId>,
+    n: u32,
+    n_pos: u32,
+    depth: usize,
+    path: u64,
+) -> Node {
+    let mut rng = node_rng(ctx.tree_seed, path);
+    let p = ctx.data.n_features();
+    // Rejection-sample an attribute that is non-constant at this node;
+    // uniform over the non-constant attributes.
+    let mut order: Vec<usize> = (0..p).collect();
+    rng.shuffle(&mut order);
+    let mut chosen: Option<(usize, f32, f32)> = None;
+    for attr in order {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &i in &ids {
+            let v = ctx.data.x(i, attr);
+            if v < lo {
+                lo = v;
+            }
+            if v > hi {
+                hi = v;
+            }
+        }
+        if lo < hi {
+            chosen = Some((attr, lo, hi));
+            break;
+        }
+    }
+    let Some((attr, lo, hi)) = chosen else {
+        // all attributes constant: cannot split (duplicate points)
+        return make_leaf(ctx.data, ids);
+    };
+    let v = rng.range_f32(lo, hi);
+    let (left_ids, right_ids) = partition(ctx.data, &ids, attr, v);
+    debug_assert!(!left_ids.is_empty() && !right_ids.is_empty());
+    let n_left = left_ids.len() as u32;
+    let n_right = right_ids.len() as u32;
+    let left = train(ctx, left_ids, depth + 1, child_path(path, depth, false));
+    let right = train(ctx, right_ids, depth + 1, child_path(path, depth, true));
+    Node::Random(RandomNode {
+        n,
+        n_pos,
+        attr,
+        v,
+        n_left,
+        n_right,
+        left: Box::new(left),
+        right: Box::new(right),
+    })
+}
+
+/// Greedy decision node (Alg. 1 lines 15–27): sample p̃ *valid* attributes
+/// (uniform over valid attributes, per §A.1), ≤k valid thresholds each,
+/// cache statistics, pick the criterion-optimal pair.
+fn train_greedy(
+    ctx: &TrainCtx<'_>,
+    ids: Vec<InstanceId>,
+    n: u32,
+    n_pos: u32,
+    depth: usize,
+    path: u64,
+) -> Node {
+    let mut rng = node_rng(ctx.tree_seed, path);
+    let p = ctx.data.n_features();
+    let p_tilde = ctx.params.max_features.resolve(p);
+
+    // Draw attributes uniformly without replacement, keeping the first p̃
+    // that have at least one valid threshold (rejection ⇒ uniform over the
+    // valid attributes, matching the resampling semantics of §A.1).
+    let mut order: Vec<usize> = (0..p).collect();
+    rng.shuffle(&mut order);
+    let mut attrs: Vec<AttrStats> = Vec::with_capacity(p_tilde);
+    for attr in order {
+        if attrs.len() == p_tilde {
+            break;
+        }
+        let mut pairs = gather_pairs(ctx.data, &ids, attr);
+        let candidates = enumerate_valid(&mut pairs);
+        if candidates.is_empty() {
+            continue; // invalid attribute at this node
+        }
+        let thresholds = sample_thresholds(candidates, ctx.params.k, &mut rng);
+        attrs.push(AttrStats { attr, thresholds });
+    }
+    if attrs.is_empty() {
+        // No valid split anywhere (e.g. identical points with mixed labels).
+        return make_leaf(ctx.data, ids);
+    }
+
+    let (best_attr, best_thr) =
+        select_best(n, n_pos, &attrs, ctx.params).expect("non-empty attrs");
+    let split_attr = attrs[best_attr].attr;
+    let split_v = attrs[best_attr].thresholds[best_thr].v;
+    let (left_ids, right_ids) = partition(ctx.data, &ids, split_attr, split_v);
+    debug_assert!(
+        !left_ids.is_empty() && !right_ids.is_empty(),
+        "valid threshold must split non-trivially"
+    );
+    let left = train(ctx, left_ids, depth + 1, child_path(path, depth, false));
+    let right = train(ctx, right_ids, depth + 1, child_path(path, depth, true));
+    Node::Greedy(GreedyNode {
+        n,
+        n_pos,
+        attrs,
+        best_attr,
+        best_thr,
+        left: Box::new(left),
+        right: Box::new(right),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::forest::params::MaxFeatures;
+
+    fn ctx_params(d_rmax: usize, k: usize) -> Params {
+        Params {
+            n_trees: 1,
+            max_depth: 8,
+            k,
+            d_rmax,
+            max_features: MaxFeatures::Sqrt,
+            ..Default::default()
+        }
+    }
+
+    fn toy_data(n: usize) -> Dataset {
+        generate(
+            &SynthSpec {
+                n,
+                informative: 3,
+                redundant: 1,
+                noise: 2,
+                flip: 0.05,
+                ..Default::default()
+            },
+            99,
+        )
+    }
+
+    fn check_counts(node: &Node, data: &Dataset) {
+        match node {
+            Node::Leaf(l) => {
+                assert_eq!(l.n as usize, l.ids.len());
+                assert_eq!(l.n_pos, count_pos(data, &l.ids));
+            }
+            Node::Random(r) => {
+                assert_eq!(r.n, r.left.n() + r.right.n());
+                assert_eq!(r.n_pos, r.left.n_pos() + r.right.n_pos());
+                assert_eq!(r.n_left, r.left.n());
+                assert_eq!(r.n_right, r.right.n());
+                assert!(r.n_left > 0 && r.n_right > 0);
+                check_counts(&r.left, data);
+                check_counts(&r.right, data);
+            }
+            Node::Greedy(g) => {
+                assert_eq!(g.n, g.left.n() + g.right.n());
+                assert_eq!(g.n_pos, g.left.n_pos() + g.right.n_pos());
+                let t = &g.attrs[g.best_attr].thresholds[g.best_thr];
+                assert_eq!(t.n_left, g.left.n());
+                assert_eq!(t.n_left_pos, g.left.n_pos());
+                for a in &g.attrs {
+                    assert!(!a.thresholds.is_empty());
+                    for t in &a.thresholds {
+                        assert!(t.is_valid(), "thresholds valid at train time");
+                        assert!(t.n_left <= g.n && t.n_left_pos <= g.n_pos);
+                    }
+                }
+                check_counts(&g.left, data);
+                check_counts(&g.right, data);
+            }
+        }
+    }
+
+    #[test]
+    fn trains_consistent_greedy_tree() {
+        let data = toy_data(300);
+        let params = ctx_params(0, 5);
+        let ctx = TrainCtx {
+            data: &data,
+            params: &params,
+            tree_seed: 7,
+        };
+        let root = train(&ctx, data.live_ids(), 0, ROOT_PATH);
+        assert_eq!(root.n() as usize, 300);
+        check_counts(&root, &data);
+        let s = root.shape();
+        assert!(s.greedy_nodes > 0);
+        assert_eq!(s.random_nodes, 0);
+        assert!(s.max_depth <= 8);
+    }
+
+    #[test]
+    fn random_layers_obey_drmax() {
+        let data = toy_data(400);
+        let params = ctx_params(3, 5);
+        let ctx = TrainCtx {
+            data: &data,
+            params: &params,
+            tree_seed: 11,
+        };
+        let root = train(&ctx, data.live_ids(), 0, ROOT_PATH);
+        check_counts(&root, &data);
+        // walk: depth < 3 ⇒ Random or Leaf; depth >= 3 ⇒ Greedy or Leaf
+        fn walk(node: &Node, depth: usize) {
+            match node {
+                Node::Leaf(_) => {}
+                Node::Random(r) => {
+                    assert!(depth < 3, "random node below d_rmax at depth {depth}");
+                    walk(&r.left, depth + 1);
+                    walk(&r.right, depth + 1);
+                }
+                Node::Greedy(g) => {
+                    assert!(depth >= 3, "greedy node above d_rmax at depth {depth}");
+                    walk(&g.left, depth + 1);
+                    walk(&g.right, depth + 1);
+                }
+            }
+        }
+        walk(&root, 0);
+        assert!(root.shape().random_nodes > 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let data = toy_data(200);
+        let params = ctx_params(2, 5);
+        let ctx = TrainCtx {
+            data: &data,
+            params: &params,
+            tree_seed: 5,
+        };
+        let a = train(&ctx, data.live_ids(), 0, ROOT_PATH);
+        let b = train(&ctx, data.live_ids(), 0, ROOT_PATH);
+        assert!(crate::forest::tree::structural_eq(&a, &b));
+        let ctx2 = TrainCtx {
+            tree_seed: 6,
+            ..ctx
+        };
+        let c = train(&ctx2, data.live_ids(), 0, ROOT_PATH);
+        assert!(!crate::forest::tree::structural_eq(&a, &c));
+    }
+
+    #[test]
+    fn pure_data_yields_leaf() {
+        let data = Dataset::from_rows(&[vec![1.0], vec![2.0], vec![3.0]], vec![1, 1, 1]);
+        let params = ctx_params(0, 5);
+        let ctx = TrainCtx {
+            data: &data,
+            params: &params,
+            tree_seed: 1,
+        };
+        let root = train(&ctx, data.live_ids(), 0, ROOT_PATH);
+        assert!(matches!(root, Node::Leaf(_)));
+        assert_eq!(root.predict(&[1.0]), 1.0);
+    }
+
+    #[test]
+    fn identical_points_mixed_labels_yield_leaf() {
+        let data = Dataset::from_rows(&[vec![1.0], vec![1.0], vec![1.0], vec![1.0]], vec![1, 0, 1, 0]);
+        let params = ctx_params(2, 5); // even with random layers requested
+        let ctx = TrainCtx {
+            data: &data,
+            params: &params,
+            tree_seed: 1,
+        };
+        let root = train(&ctx, data.live_ids(), 0, ROOT_PATH);
+        assert!(matches!(root, Node::Leaf(_)));
+        assert_eq!(root.predict(&[1.0]), 0.5);
+    }
+
+    #[test]
+    fn max_depth_respected() {
+        let data = toy_data(2000);
+        let params = Params {
+            max_depth: 3,
+            ..ctx_params(0, 10)
+        };
+        let ctx = TrainCtx {
+            data: &data,
+            params: &params,
+            tree_seed: 2,
+        };
+        let root = train(&ctx, data.live_ids(), 0, ROOT_PATH);
+        assert!(root.shape().max_depth <= 3);
+    }
+
+    #[test]
+    fn training_accuracy_beats_chance() {
+        let data = toy_data(1000);
+        let params = ctx_params(0, 10);
+        let ctx = TrainCtx {
+            data: &data,
+            params: &params,
+            tree_seed: 3,
+        };
+        let root = train(&ctx, data.live_ids(), 0, ROOT_PATH);
+        let mut correct = 0;
+        for id in data.live_ids() {
+            let p = root.predict(&data.row(id));
+            if (p >= 0.5) as u8 == data.y(id) {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / 1000.0;
+        assert!(acc > 0.8, "training acc {acc}");
+    }
+}

@@ -1,0 +1,190 @@
+//! A single DaRE tree: the unit of training, deletion and prediction.
+
+use crate::data::dataset::{Dataset, InstanceId};
+use crate::forest::delete::{add, delete, delete_cost, DeleteReport};
+use crate::forest::node::{Node, NodeMemory, TreeShape};
+use crate::forest::params::Params;
+use crate::forest::train::{train, TrainCtx, ROOT_PATH};
+
+/// One DaRE tree plus its seed and update counter.
+#[derive(Clone, Debug)]
+pub struct DareTree {
+    pub root: Node,
+    pub tree_seed: u64,
+    /// Number of structural updates applied (deletions + additions); feeds
+    /// the per-update resampling RNG (Lemma A.1 streams).
+    pub epoch: u64,
+}
+
+impl DareTree {
+    /// Train on the live instances of `data` (paper Alg. 1).
+    pub fn fit(data: &Dataset, params: &Params, tree_seed: u64) -> Self {
+        let ctx = TrainCtx {
+            data,
+            params,
+            tree_seed,
+        };
+        let root = train(&ctx, data.live_ids(), 0, ROOT_PATH);
+        DareTree {
+            root,
+            tree_seed,
+            epoch: 0,
+        }
+    }
+
+    /// Delete a (still-live) instance (paper Alg. 2).
+    pub fn delete(&mut self, data: &Dataset, params: &Params, id: InstanceId) -> DeleteReport {
+        let ctx = TrainCtx {
+            data,
+            params,
+            tree_seed: self.tree_seed,
+        };
+        let mut report = DeleteReport::default();
+        delete(&ctx, &mut self.root, id, 0, ROOT_PATH, self.epoch, &mut report);
+        self.epoch += 1;
+        report
+    }
+
+    /// Add an instance already pushed into `data` (§6).
+    pub fn add(&mut self, data: &Dataset, params: &Params, id: InstanceId) -> DeleteReport {
+        let ctx = TrainCtx {
+            data,
+            params,
+            tree_seed: self.tree_seed,
+        };
+        let mut report = DeleteReport::default();
+        add(&ctx, &mut self.root, id, 0, ROOT_PATH, self.epoch, &mut report);
+        self.epoch += 1;
+        report
+    }
+
+    /// Dry-run retrain cost of deleting `id` (adversary signal; no mutation).
+    pub fn delete_cost(&self, data: &Dataset, params: &Params, id: InstanceId) -> u64 {
+        let ctx = TrainCtx {
+            data,
+            params,
+            tree_seed: self.tree_seed,
+        };
+        delete_cost(&ctx, &self.root, id, 0)
+    }
+
+    /// Positive-class probability for one feature row.
+    #[inline]
+    pub fn predict(&self, row: &[f32]) -> f32 {
+        self.root.predict(row)
+    }
+
+    pub fn shape(&self) -> TreeShape {
+        self.root.shape()
+    }
+
+    pub fn memory(&self) -> NodeMemory {
+        self.root.memory()
+    }
+}
+
+/// Structural equality of two trees: same node kinds, splits, counts and
+/// leaf contents (id order-insensitive). Used by the exactness tests.
+pub fn structural_eq(a: &Node, b: &Node) -> bool {
+    match (a, b) {
+        (Node::Leaf(x), Node::Leaf(y)) => {
+            if x.n != y.n || x.n_pos != y.n_pos {
+                return false;
+            }
+            let mut xi = x.ids.clone();
+            let mut yi = y.ids.clone();
+            xi.sort_unstable();
+            yi.sort_unstable();
+            xi == yi
+        }
+        (Node::Random(x), Node::Random(y)) => {
+            x.attr == y.attr
+                && x.v == y.v
+                && x.n == y.n
+                && x.n_pos == y.n_pos
+                && structural_eq(&x.left, &y.left)
+                && structural_eq(&x.right, &y.right)
+        }
+        (Node::Greedy(x), Node::Greedy(y)) => {
+            x.split_attr() == y.split_attr()
+                && x.split_v() == y.split_v()
+                && x.n == y.n
+                && x.n_pos == y.n_pos
+                && structural_eq(&x.left, &y.left)
+                && structural_eq(&x.right, &y.right)
+        }
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+
+    fn data(n: usize) -> Dataset {
+        generate(
+            &SynthSpec {
+                n,
+                informative: 3,
+                redundant: 1,
+                noise: 2,
+                flip: 0.05,
+                ..Default::default()
+            },
+            17,
+        )
+    }
+
+    #[test]
+    fn fit_predict_delete_cycle() {
+        let mut d = data(300);
+        let params = Params {
+            max_depth: 8,
+            k: 5,
+            ..Default::default()
+        };
+        let mut tree = DareTree::fit(&d, &params, 1);
+        assert_eq!(tree.root.n() as usize, 300);
+        let p0 = tree.predict(&d.row(0));
+        assert!((0.0..=1.0).contains(&p0));
+
+        let report = tree.delete(&d, &params, 0);
+        d.mark_removed(0);
+        assert_eq!(tree.root.n() as usize, 299);
+        assert_eq!(tree.epoch, 1);
+        let _ = report.cost();
+    }
+
+    #[test]
+    fn structural_eq_detects_difference() {
+        let d = data(150);
+        let params = Params {
+            max_depth: 5,
+            k: 5,
+            ..Default::default()
+        };
+        let t1 = DareTree::fit(&d, &params, 1);
+        let t2 = DareTree::fit(&d, &params, 1);
+        let t3 = DareTree::fit(&d, &params, 2);
+        assert!(structural_eq(&t1.root, &t2.root));
+        assert!(!structural_eq(&t1.root, &t3.root));
+    }
+
+    #[test]
+    fn shape_and_memory_exposed() {
+        let d = data(200);
+        let params = Params {
+            max_depth: 6,
+            k: 5,
+            d_rmax: 2,
+            ..Default::default()
+        };
+        let tree = DareTree::fit(&d, &params, 3);
+        let s = tree.shape();
+        assert!(s.leaves > 0);
+        assert!(s.random_nodes > 0);
+        let m = tree.memory();
+        assert!(m.total() > 0);
+    }
+}

@@ -1,0 +1,38 @@
+//! # DaRE RF — Machine Unlearning for Random Forests
+//!
+//! Production reimplementation of *Machine Unlearning for Random Forests*
+//! (Brophy & Lowd, ICML 2021) as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)**: the DaRE forest engine — training, exact deletion
+//!   (Alg. 1–3), random/greedy nodes, cached node statistics — plus the
+//!   unlearning service (coordinator), baselines, dataset corpus, evaluation
+//!   harness and the experiment reproductions.
+//! - **L2/L1 (python/, build-time only)**: JAX batched-inference graph and
+//!   the Pallas split-criterion kernel, AOT-lowered to HLO text in
+//!   `artifacts/` and executed from Rust through PJRT (`runtime`).
+//!
+//! Quickstart:
+//! ```no_run
+//! use dare::data::{find, split::train_test};
+//! use dare::forest::{DareForest, Params};
+//!
+//! let info = find("surgical").unwrap();
+//! let data = info.generate(10, 0);           // 1/10th-scale corpus entry
+//! let (train, test) = train_test(&data, 0.8, 0);
+//! let params = Params::from_paper(&info.gini, 0); // G-DaRE (d_rmax = 0)
+//! let mut forest = DareForest::fit(train, &params, 42);
+//! let deleted = forest.delete(3).unwrap();    // exact unlearning of id 3
+//! let probs = forest.predict_proba_dataset(&test);
+//! # let _ = (deleted, probs);
+//! ```
+
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod exp;
+pub mod forest;
+pub mod metrics;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,337 @@
+//! `dare` — CLI for the DaRE-forest unlearning system.
+//!
+//! Subcommands:
+//!   train      train a forest on a corpus dataset or CSV, optionally save
+//!   delete     unlearn instances from a saved model
+//!   predict    score a CSV with a saved model
+//!   serve      run the unlearning service (JSON-lines over TCP)
+//!   tune       run the paper's hyperparameter tuning protocol
+//!   reproduce  regenerate a paper table/figure (fig1 fig2 fig3 table2
+//!              table3 table5 table6 table7 table9 | all)
+//!   datasets   list the 14-dataset corpus
+
+use dare::coordinator::{serve, ServiceConfig, UnlearningService};
+use dare::data::registry::{corpus, find};
+use dare::data::split::train_test;
+use dare::eval::tuner::Grid;
+use dare::exp;
+use dare::forest::{serialize, DareForest, Params, SplitCriterion};
+use dare::metrics::Metric;
+use dare::util::cli::{parse, Args};
+use dare::util::table::Table;
+use std::path::Path;
+
+const VALUE_KEYS: &[&str] = &[
+    "dataset", "scale", "trees", "depth", "k", "drmax", "criterion", "seed", "threads", "save",
+    "load", "csv", "ids", "addr", "workers", "repeats", "deletions", "worst-of", "datasets",
+    "out-dir", "max-trees", "ks", "grid", "folds", "tolerances", "label", "n",
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = parse(argv, VALUE_KEYS);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let result = match cmd {
+        "train" => cmd_train(&args),
+        "delete" => cmd_delete(&args),
+        "predict" => cmd_predict(&args),
+        "serve" => cmd_serve(&args),
+        "tune" => cmd_tune(&args),
+        "reproduce" => cmd_reproduce(&args),
+        "datasets" => cmd_datasets(),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "dare — machine unlearning for random forests (Brophy & Lowd, ICML 2021)
+
+USAGE: dare <command> [flags]
+
+COMMANDS
+  train      --dataset <name>|--csv <file> [--scale N] [--trees T] [--depth D]
+             [--k K] [--drmax R] [--criterion gini|entropy] [--save model.json]
+  delete     --load model.json --ids 1,2,3 [--save out.json]
+  predict    --load model.json --csv data.csv
+  serve      --load model.json|--dataset <name> [--addr 127.0.0.1:7878]
+             [--workers W]
+  tune       --dataset <name> [--scale N] [--grid paper|small] [--folds F]
+  reproduce  <fig1|fig2|fig3|table2|table3|table5|table6|table7|table9|all>
+             [--scale N] [--repeats R] [--deletions D] [--worst-of C]
+             [--datasets a,b] [--criterion gini|entropy] [--max-trees T]
+             [--out-dir results]
+  datasets   list the corpus (paper Table 1)"
+    );
+}
+
+fn load_params(args: &Args, defaults: Params) -> anyhow::Result<Params> {
+    let criterion: SplitCriterion = args
+        .get_or("criterion", "gini")
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!(e))?;
+    Ok(Params {
+        n_trees: args.usize("trees", defaults.n_trees),
+        max_depth: args.usize("depth", defaults.max_depth),
+        k: args.usize("k", defaults.k),
+        d_rmax: args.usize("drmax", defaults.d_rmax),
+        criterion,
+        n_threads: args.usize("threads", dare::util::threadpool::default_threads()),
+        ..defaults
+    })
+}
+
+fn load_training_data(args: &Args) -> anyhow::Result<(dare::data::Dataset, Params, Metric)> {
+    if let Some(csv) = args.get("csv") {
+        let data = dare::data::io::load_csv(Path::new(csv))?;
+        let params = load_params(args, Params::default())?;
+        return Ok((data, params, Metric::Accuracy));
+    }
+    let name = args
+        .get("dataset")
+        .ok_or_else(|| anyhow::anyhow!("--dataset or --csv required"))?;
+    let info = find(name).ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}'"))?;
+    let scale = args.usize("scale", 500);
+    let data = info.generate(scale, args.u64("seed", 1));
+    let defaults = Params::from_paper(&info.gini, 0);
+    let params = load_params(args, defaults)?;
+    Ok((data, params, info.metric))
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let (data, params, metric) = load_training_data(args)?;
+    let (train, test) = train_test(&data, 0.8, args.u64("seed", 1));
+    let (_, test_ys, _) = test.to_row_major();
+    println!(
+        "training DaRE forest: n={} p={} T={} d_max={} k={} d_rmax={} criterion={:?}",
+        train.n_total(),
+        train.n_features(),
+        params.n_trees,
+        params.max_depth,
+        params.k,
+        params.d_rmax,
+        params.criterion
+    );
+    let (forest, secs) =
+        dare::util::timer::time(|| DareForest::fit(train, &params, args.u64("seed", 1)));
+    let probs = forest.predict_proba_dataset(&test);
+    println!(
+        "trained in {:.2}s; test {} = {:.4}",
+        secs,
+        metric.name(),
+        metric.score(&probs, &test_ys)
+    );
+    let mem = forest.memory();
+    println!(
+        "memory: structure={}KB decision_stats={}KB leaf_stats={}KB",
+        mem.structure / 1024,
+        mem.decision_stats / 1024,
+        mem.leaf_stats / 1024
+    );
+    if let Some(path) = args.get("save") {
+        serialize::save(&forest, Path::new(path))?;
+        println!("saved model to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_delete(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .get("load")
+        .ok_or_else(|| anyhow::anyhow!("--load <model.json> required"))?;
+    let mut forest = serialize::load(Path::new(path))?;
+    let ids: Vec<u32> = args
+        .get("ids")
+        .ok_or_else(|| anyhow::anyhow!("--ids 1,2,3 required"))?
+        .split(',')
+        .map(|s| s.trim().parse::<u32>())
+        .collect::<Result<_, _>>()?;
+    let ((report, skipped), secs) = dare::util::timer::time(|| forest.delete_batch(&ids));
+    println!(
+        "deleted {} instances ({} skipped) in {:.4}s; retrain cost = {} instances across {} events",
+        ids.len() - skipped,
+        skipped,
+        secs,
+        report.cost(),
+        report.retrain_events()
+    );
+    let out = args.get("save").unwrap_or(path);
+    serialize::save(&forest, Path::new(out))?;
+    println!("saved updated model to {out}");
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .get("load")
+        .ok_or_else(|| anyhow::anyhow!("--load <model.json> required"))?;
+    let forest = serialize::load(Path::new(path))?;
+    let csv = args
+        .get("csv")
+        .ok_or_else(|| anyhow::anyhow!("--csv <file> required"))?;
+    let data = dare::data::io::load_csv(Path::new(csv))?;
+    let probs = forest.predict_proba_dataset(&data);
+    let (_, ys, _) = data.to_row_major();
+    for (i, p) in probs.iter().enumerate() {
+        println!("{i},{p:.6}");
+    }
+    eprintln!(
+        "accuracy={:.4} auc={:.4}",
+        dare::metrics::accuracy(&probs, &ys),
+        dare::metrics::auc(&probs, &ys)
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let forest = if let Some(path) = args.get("load") {
+        serialize::load(Path::new(path))?
+    } else {
+        let (data, params, _) = load_training_data(args)?;
+        println!("no --load given; training a fresh model first...");
+        DareForest::fit(data, &params, args.u64("seed", 1))
+    };
+    let svc = UnlearningService::new(forest, ServiceConfig::default());
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    println!("dare unlearning service (pjrt={})", svc.pjrt_active());
+    serve(svc, addr, args.usize("workers", 4), |bound| {
+        println!("listening on {bound} (JSON-lines; send {{\"op\":\"shutdown\"}} to stop)");
+    })
+}
+
+fn cmd_tune(args: &Args) -> anyhow::Result<()> {
+    let cfg = exp_config(args)?;
+    let grid = match args.get_or("grid", "small") {
+        "paper" => Grid::paper(),
+        _ => Grid::small(),
+    };
+    let r = exp::table6::run(&cfg, &grid, args.usize("folds", 5))?;
+    println!("{}", exp::table6::render(&r, cfg.criterion_tag()));
+    Ok(())
+}
+
+fn exp_config(args: &Args) -> anyhow::Result<exp::ExpConfig> {
+    let criterion: SplitCriterion = args
+        .get_or("criterion", "gini")
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!(e))?;
+    Ok(exp::ExpConfig {
+        scale_div: args.usize("scale", 500),
+        repeats: args.usize("repeats", 1),
+        max_deletions: args.usize("deletions", 150),
+        worst_of: args.usize("worst-of", 100),
+        datasets: args.str_list("datasets").unwrap_or_default(),
+        criterion,
+        threads: args.usize("threads", dare::util::threadpool::default_threads()),
+        max_trees: args.usize("max-trees", 0),
+        seed: args.u64("seed", 1),
+        out_dir: args.get_or("out-dir", "results").into(),
+    })
+}
+
+fn cmd_reproduce(args: &Args) -> anyhow::Result<()> {
+    let what = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "reproduce what? (fig1|fig2|fig3|table2|table3|table5|table6|table7|table9|all)"
+            )
+        })?;
+    let mut cfg = exp_config(args)?;
+    let run_one = |what: &str, cfg: &exp::ExpConfig| -> anyhow::Result<()> {
+        match what {
+            "fig1" => {
+                let r = exp::fig1::run(cfg)?;
+                println!("{}", exp::fig1::render(&r));
+            }
+            "table2" => {
+                let rows = exp::table2::run(cfg)?;
+                println!("{}", exp::table2::render(&rows, cfg.criterion_tag()));
+            }
+            "table9" => {
+                let mut c = cfg.clone();
+                c.criterion = SplitCriterion::Entropy;
+                let rows = exp::table2::run(&c)?;
+                println!("{}", exp::table2::render(&rows, "entropy"));
+            }
+            "fig2" => {
+                let ds = args.get_or("dataset", "bank_marketing");
+                let r = exp::fig2::run(cfg, ds)?;
+                println!("{}", exp::fig2::render(&r));
+            }
+            "fig3" => {
+                let ds = args.get_or("dataset", "surgical");
+                let ks = args.usize_list("ks", &[1, 5, 10, 25, 50, 100]);
+                let r = exp::fig3::run(cfg, ds, &ks)?;
+                println!("{}", exp::fig3::render(&r));
+            }
+            "table3" => {
+                let r = exp::table3::run(cfg)?;
+                println!("{}", exp::table3::render(&r));
+            }
+            "table5" => {
+                let r = exp::table5::run(cfg)?;
+                println!("{}", exp::table5::render(&r));
+            }
+            "table6" => {
+                let grid = match args.get_or("grid", "small") {
+                    "paper" => Grid::paper(),
+                    _ => Grid::small(),
+                };
+                let r = exp::table6::run(cfg, &grid, args.usize("folds", 5))?;
+                println!("{}", exp::table6::render(&r, cfg.criterion_tag()));
+            }
+            "table7" => {
+                let r = exp::table7::run(cfg)?;
+                println!("{}", exp::table7::render(&r));
+            }
+            other => anyhow::bail!("unknown experiment '{other}'"),
+        }
+        Ok(())
+    };
+    if what == "all" {
+        for w in [
+            "fig1", "table2", "fig2", "fig3", "table3", "table5", "table6", "table7", "table9",
+        ] {
+            println!("\n##### reproduce {w} #####");
+            run_one(w, &cfg)?;
+        }
+    } else {
+        if what == "table9" {
+            cfg.criterion = SplitCriterion::Entropy;
+        }
+        run_one(what, &cfg)?;
+    }
+    Ok(())
+}
+
+fn cmd_datasets() -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "DaRE corpus (paper Table 1; synthetic generators, see DESIGN.md §2)",
+        &["dataset", "n (paper)", "p", "pos %", "metric", "T", "d_max", "k", "drmax@tols"],
+    );
+    for d in corpus() {
+        t.row(vec![
+            d.name.to_string(),
+            d.n_paper.to_string(),
+            d.p.to_string(),
+            format!("{:.1}", d.pos_pct),
+            d.metric.name().to_string(),
+            d.gini.n_trees.to_string(),
+            d.gini.max_depth.to_string(),
+            d.gini.k.to_string(),
+            format!("{:?}", d.gini.drmax),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,204 @@
+//! Predictive-performance metrics: accuracy, AUC (Hanley & McNeil 1982), and
+//! average precision (Zhu 2004) — the three metrics the paper selects among
+//! based on label imbalance (§4, Table 1).
+
+/// Which metric a dataset is scored with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Accuracy,
+    Auc,
+    AveragePrecision,
+}
+
+impl Metric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Accuracy => "acc",
+            Metric::Auc => "auc",
+            Metric::AveragePrecision => "ap",
+        }
+    }
+
+    /// Score predicted positive-class probabilities against labels.
+    pub fn score(&self, probs: &[f32], labels: &[u8]) -> f64 {
+        match self {
+            Metric::Accuracy => accuracy(probs, labels),
+            Metric::Auc => auc(probs, labels),
+            Metric::AveragePrecision => average_precision(probs, labels),
+        }
+    }
+}
+
+impl std::str::FromStr for Metric {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "acc" | "accuracy" => Ok(Metric::Accuracy),
+            "auc" => Ok(Metric::Auc),
+            "ap" | "average_precision" => Ok(Metric::AveragePrecision),
+            _ => Err(format!("unknown metric '{s}'")),
+        }
+    }
+}
+
+/// Fraction of correct predictions at the 0.5 threshold.
+pub fn accuracy(probs: &[f32], labels: &[u8]) -> f64 {
+    assert_eq!(probs.len(), labels.len());
+    if probs.is_empty() {
+        return 0.0;
+    }
+    let correct = probs
+        .iter()
+        .zip(labels)
+        .filter(|(&p, &y)| (p >= 0.5) as u8 == y)
+        .count();
+    correct as f64 / probs.len() as f64
+}
+
+/// Area under the ROC curve via the rank-sum (Mann–Whitney) formulation,
+/// with midrank handling for tied scores. Returns 0.5 when a class is absent.
+pub fn auc(probs: &[f32], labels: &[u8]) -> f64 {
+    assert_eq!(probs.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&y| y == 1).count();
+    let n_neg = labels.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    // sort indices by score ascending
+    let mut idx: Vec<usize> = (0..probs.len()).collect();
+    idx.sort_by(|&a, &b| probs[a].partial_cmp(&probs[b]).unwrap());
+    // midranks over ties
+    let mut rank_sum_pos = 0.0f64;
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && probs[idx[j + 1]] == probs[idx[i]] {
+            j += 1;
+        }
+        // ranks i+1 ..= j+1 share midrank
+        let midrank = (i + 1 + j + 1) as f64 / 2.0;
+        for &t in &idx[i..=j] {
+            if labels[t] == 1 {
+                rank_sum_pos += midrank;
+            }
+        }
+        i = j + 1;
+    }
+    let u = rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0;
+    u / (n_pos as f64 * n_neg as f64)
+}
+
+/// Average precision: AP = Σ_k (R_k − R_{k−1}) · P_k over the ranking, i.e.
+/// precision averaged at each positive hit. Ties are broken pessimistically
+/// (stable order). Returns 0.0 when there are no positives.
+pub fn average_precision(probs: &[f32], labels: &[u8]) -> f64 {
+    assert_eq!(probs.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&y| y == 1).count();
+    if n_pos == 0 {
+        return 0.0;
+    }
+    let mut idx: Vec<usize> = (0..probs.len()).collect();
+    // descending score
+    idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+    let mut tp = 0usize;
+    let mut ap = 0.0f64;
+    for (rank, &i) in idx.iter().enumerate() {
+        if labels[i] == 1 {
+            tp += 1;
+            let precision = tp as f64 / (rank + 1) as f64;
+            ap += precision / n_pos as f64;
+        }
+    }
+    ap
+}
+
+/// Binary log loss (used by the end-to-end example's loss curve).
+pub fn log_loss(probs: &[f32], labels: &[u8]) -> f64 {
+    assert_eq!(probs.len(), labels.len());
+    if probs.is_empty() {
+        return 0.0;
+    }
+    let eps = 1e-7f64;
+    let mut s = 0.0;
+    for (&p, &y) in probs.iter().zip(labels) {
+        let p = (p as f64).clamp(eps, 1.0 - eps);
+        s -= if y == 1 { p.ln() } else { (1.0 - p).ln() };
+    }
+    s / probs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[0.9, 0.1, 0.6, 0.4], &[1, 0, 1, 1]), 0.75);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn auc_perfect_and_inverted() {
+        let y = [0u8, 0, 1, 1];
+        assert_eq!(auc(&[0.1, 0.2, 0.8, 0.9], &y), 1.0);
+        assert_eq!(auc(&[0.9, 0.8, 0.2, 0.1], &y), 0.0);
+        assert_eq!(auc(&[0.5, 0.5, 0.5, 0.5], &y), 0.5);
+    }
+
+    #[test]
+    fn auc_ties_midrank() {
+        // scores: pos {0.5, 0.8}, neg {0.5, 0.2}
+        // pairs: (0.5,0.5)=0.5, (0.5,0.2)=1, (0.8,0.5)=1, (0.8,0.2)=1 → 3.5/4
+        let v = auc(&[0.5, 0.8, 0.5, 0.2], &[1, 1, 0, 0]);
+        assert!((v - 0.875).abs() < 1e-12, "{v}");
+    }
+
+    #[test]
+    fn auc_degenerate_single_class() {
+        assert_eq!(auc(&[0.3, 0.7], &[1, 1]), 0.5);
+        assert_eq!(auc(&[0.3, 0.7], &[0, 0]), 0.5);
+    }
+
+    #[test]
+    fn ap_perfect_ranking() {
+        let v = average_precision(&[0.9, 0.8, 0.3, 0.2], &[1, 1, 0, 0]);
+        assert!((v - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ap_known_value() {
+        // ranking: pos@1, neg@2, pos@3 → AP = (1/1 + 2/3) / 2 = 5/6
+        let v = average_precision(&[0.9, 0.5, 0.4], &[1, 0, 1]);
+        assert!((v - 5.0 / 6.0).abs() < 1e-12, "{v}");
+    }
+
+    #[test]
+    fn ap_no_positives() {
+        assert_eq!(average_precision(&[0.5], &[0]), 0.0);
+    }
+
+    #[test]
+    fn log_loss_sane() {
+        assert!(log_loss(&[0.99, 0.01], &[1, 0]) < 0.05);
+        assert!(log_loss(&[0.01, 0.99], &[1, 0]) > 2.0);
+    }
+
+    #[test]
+    fn metric_dispatch_and_parse() {
+        assert_eq!("auc".parse::<Metric>().unwrap(), Metric::Auc);
+        assert_eq!("ACC".parse::<Metric>().unwrap(), Metric::Accuracy);
+        assert!("bogus".parse::<Metric>().is_err());
+        let m = Metric::Auc;
+        assert_eq!(m.score(&[0.1, 0.9], &[0, 1]), 1.0);
+        assert_eq!(m.name(), "auc");
+    }
+
+    #[test]
+    fn auc_is_threshold_invariant_monotone() {
+        // monotone transform of scores leaves AUC unchanged
+        let y = [0u8, 1, 0, 1, 1, 0, 0, 1];
+        let s1: Vec<f32> = vec![0.1, 0.4, 0.35, 0.8, 0.7, 0.2, 0.5, 0.9];
+        let s2: Vec<f32> = s1.iter().map(|v| v * v).collect();
+        assert!((auc(&s1, &y) - auc(&s2, &y)).abs() < 1e-12);
+    }
+}

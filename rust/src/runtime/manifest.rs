@@ -1,0 +1,151 @@
+//! Artifact manifest (artifacts/manifest.json): shapes and file names the
+//! AOT step baked into the HLO modules, so Rust never hard-codes them.
+
+use crate::util::json::{parse, Value};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct ScoreArtifact {
+    pub file: PathBuf,
+    pub batch: usize,
+    pub block: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct PredictArtifact {
+    pub file: PathBuf,
+    pub batch: usize,
+    pub features: usize,
+    pub trees: usize,
+    pub nodes: usize,
+    pub depth: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub score_gini: ScoreArtifact,
+    pub score_entropy: ScoreArtifact,
+    pub predict: PredictArtifact,
+    /// Optional small-tree-count variant — XLA-CPU gather cost scales with
+    /// the padded tree dimension, so ≤32-tree forests use this one (§Perf).
+    pub predict_small: Option<PredictArtifact>,
+}
+
+impl Manifest {
+    /// Default artifact directory: `$DARE_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("DARE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load `manifest.json` from a directory.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("missing artifacts (run `make artifacts`): {e}"))?;
+        let v = parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        anyhow::ensure!(
+            v.get("format").and_then(|x| x.as_str()) == Some("dare-artifacts-v1"),
+            "unknown artifact manifest format"
+        );
+        let arts = v
+            .get("artifacts")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts'"))?;
+
+        let score = |key: &str| -> anyhow::Result<ScoreArtifact> {
+            let a = arts
+                .get(key)
+                .ok_or_else(|| anyhow::anyhow!("manifest missing '{key}'"))?;
+            Ok(ScoreArtifact {
+                file: dir.join(
+                    a.get("file")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| anyhow::anyhow!("{key}.file missing"))?,
+                ),
+                batch: a
+                    .get("batch")
+                    .and_then(Value::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("{key}.batch missing"))?,
+                block: a.get("block").and_then(Value::as_usize).unwrap_or(0),
+            })
+        };
+        let predict_art = |key: &str| -> anyhow::Result<PredictArtifact> {
+            let p = arts
+                .get(key)
+                .ok_or_else(|| anyhow::anyhow!("manifest missing '{key}'"))?;
+            let pu = |k: &str| -> anyhow::Result<usize> {
+                p.get(k)
+                    .and_then(Value::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("{key}.{k} missing"))
+            };
+            Ok(PredictArtifact {
+                file: dir.join(
+                    p.get("file")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| anyhow::anyhow!("{key}.file missing"))?,
+                ),
+                batch: pu("batch")?,
+                features: pu("features")?,
+                trees: pu("trees")?,
+                nodes: pu("nodes")?,
+                depth: pu("depth")?,
+            })
+        };
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            score_gini: score("split_scores_gini")?,
+            score_entropy: score("split_scores_entropy")?,
+            predict: predict_art("forest_predict")?,
+            predict_small: predict_art("forest_predict_small").ok(),
+        })
+    }
+
+    /// Smallest predict artifact that fits a forest with `n_trees`.
+    pub fn predict_for(&self, n_trees: usize) -> &PredictArtifact {
+        match &self.predict_small {
+            Some(s) if n_trees <= s.trees => s,
+            _ => &self.predict,
+        }
+    }
+}
+
+/// Locate the artifacts dir for tests/examples: walks up from cwd looking
+/// for `artifacts/manifest.json`. Returns None when artifacts are not built.
+pub fn locate_artifacts() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join("artifacts/manifest.json");
+        if cand.exists() {
+            return Some(dir.join("artifacts"));
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_built_manifest_when_present() {
+        let Some(dir) = locate_artifacts() else {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.score_gini.batch >= m.score_gini.block);
+        assert!(m.predict.trees > 0);
+        assert!(m.predict.depth >= 20);
+        assert!(m.score_gini.file.exists());
+        assert!(m.score_entropy.file.exists());
+        assert!(m.predict.file.exists());
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent/xyz")).is_err());
+    }
+}

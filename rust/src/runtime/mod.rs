@@ -1,0 +1,23 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO text) and executes them on the XLA CPU client from the Rust hot
+//! path. Python never runs at request time.
+//!
+//! - [`pjrt::Engine`] — PJRT client + compile cache;
+//! - [`manifest::Manifest`] — artifact shapes (artifacts/manifest.json);
+//! - [`scorer::PjrtScorer`] — batched split-criterion scoring (L1 kernel);
+//! - [`predictor::PjrtPredictor`] — batched forest inference over a
+//!   tensorized forest (L2 graph).
+//!
+//! Every runtime component has a native-Rust fallback with identical
+//! semantics; parity tests in each module pin them together.
+
+pub mod manifest;
+pub mod pjrt;
+pub mod predictor;
+pub mod scorer;
+pub mod tensorize;
+
+pub use manifest::Manifest;
+pub use pjrt::Engine;
+pub use predictor::PjrtPredictor;
+pub use scorer::PjrtScorer;

@@ -1,0 +1,153 @@
+//! PJRT engine: wraps the `xla` crate's CPU client, loads HLO-text
+//! artifacts, compiles them once, and executes with f32/i32 literals.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`.
+
+use std::path::Path;
+use std::sync::Mutex;
+
+// The `xla` crate's client/executable types hold raw pointers and are not
+// marked Send/Sync, but the underlying PJRT C API objects are thread-safe
+// (the PJRT contract requires it; the TFRT CPU client serializes internally).
+// We wrap them and assert Send + Sync, and additionally serialize all
+// compile/execute calls behind Mutexes for belt-and-braces safety.
+struct SendClient(xla::PjRtClient);
+unsafe impl Send for SendClient {}
+struct SendExe(xla::PjRtLoadedExecutable);
+unsafe impl Send for SendExe {}
+
+/// A compiled executable plus its expected argument count.
+pub struct LoadedExe {
+    exe: Mutex<SendExe>,
+}
+
+/// One input tensor for execution.
+pub enum Input {
+    F32(Vec<f32>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl Input {
+    fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        match self {
+            Input::F32(data, dims) => Ok(xla::Literal::vec1(data).reshape(dims)?),
+            Input::I32(data, dims) => Ok(xla::Literal::vec1(data).reshape(dims)?),
+        }
+    }
+}
+
+impl LoadedExe {
+    /// Execute and return the first (tuple-unwrapped) output as f32s.
+    pub fn run_f32(&self, inputs: &[Input]) -> anyhow::Result<Vec<f32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|i| i.to_literal())
+            .collect::<anyhow::Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.run_f32_literals(&refs)
+    }
+
+    /// Execute with pre-built literals (hot path: callers cache the large
+    /// constant inputs — e.g. the tensorized forest — across calls).
+    pub fn run_f32_literals(&self, inputs: &[&xla::Literal]) -> anyhow::Result<Vec<f32>> {
+        let exe = self.exe.lock().unwrap();
+        let result = exe.0.execute::<&xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple output
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Build a literal from an [`Input`] (exposed for callers that cache).
+pub fn build_literal(input: &Input) -> anyhow::Result<xla::Literal> {
+    input.to_literal()
+}
+
+/// PJRT CPU engine. Creating a client is expensive (TFRT thread pools), so
+/// share one per process via [`Engine::global`].
+pub struct Engine {
+    client: Mutex<SendClient>,
+}
+
+impl Engine {
+    pub fn new() -> anyhow::Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(Engine {
+            client: Mutex::new(SendClient(client)),
+        })
+    }
+
+    /// Process-wide shared engine (PJRT clients are heavy; one is enough).
+    pub fn global() -> anyhow::Result<&'static Engine> {
+        use std::sync::OnceLock;
+        static ENGINE: OnceLock<Option<Engine>> = OnceLock::new();
+        ENGINE
+            .get_or_init(|| Engine::new().ok())
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("failed to create PJRT CPU client"))
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> anyhow::Result<LoadedExe> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let client = self.client.lock().unwrap();
+        let exe = client
+            .0
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display()))?;
+        Ok(LoadedExe {
+            exe: Mutex::new(SendExe(exe)),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.lock().unwrap().0.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::locate_artifacts;
+
+    #[test]
+    fn engine_loads_and_runs_score_artifact() {
+        let Some(dir) = locate_artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = crate::runtime::Manifest::load(&dir).unwrap();
+        let engine = Engine::global().unwrap();
+        assert_eq!(engine.platform(), "cpu");
+        let exe = engine.load_hlo_text(&m.score_gini.file).unwrap();
+        let b = m.score_gini.batch;
+        let dims = vec![b as i64];
+        let out = exe
+            .run_f32(&[
+                Input::F32(vec![10.0; b], dims.clone()),
+                Input::F32(vec![4.0; b], dims.clone()),
+                Input::F32(vec![6.0; b], dims.clone()),
+                Input::F32(vec![1.0; b], dims.clone()),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), b);
+        // matches rust/src/forest/criterion.rs gini_known_value
+        let expect = 0.6 * (10.0 / 36.0) + 0.4 * (6.0 / 16.0);
+        assert!((out[0] as f64 - expect).abs() < 1e-6, "{}", out[0]);
+        assert!(out.iter().all(|v| (v - out[0]).abs() < 1e-7));
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        let engine = match Engine::global() {
+            Ok(e) => e,
+            Err(_) => return,
+        };
+        assert!(engine
+            .load_hlo_text(Path::new("/nonexistent/file.hlo.txt"))
+            .is_err());
+    }
+}

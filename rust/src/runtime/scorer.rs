@@ -1,0 +1,161 @@
+//! Batched split-criterion scoring through the AOT-compiled L1 Pallas
+//! kernel, with the native `forest::criterion` implementation as both
+//! fallback and parity oracle.
+
+use crate::forest::params::SplitCriterion;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::pjrt::{Engine, Input, LoadedExe};
+
+/// One candidate's counts (matching the kernel's four input vectors).
+#[derive(Clone, Copy, Debug)]
+pub struct Counts {
+    pub n: u32,
+    pub n_pos: u32,
+    pub n_left: u32,
+    pub n_left_pos: u32,
+}
+
+/// PJRT-backed scorer for one criterion.
+pub struct PjrtScorer {
+    exe: LoadedExe,
+    batch: usize,
+    criterion: SplitCriterion,
+}
+
+impl PjrtScorer {
+    pub fn new(
+        engine: &Engine,
+        manifest: &Manifest,
+        criterion: SplitCriterion,
+    ) -> anyhow::Result<Self> {
+        let art = match criterion {
+            SplitCriterion::Gini => &manifest.score_gini,
+            SplitCriterion::Entropy => &manifest.score_entropy,
+        };
+        Ok(PjrtScorer {
+            exe: engine.load_hlo_text(&art.file)?,
+            batch: art.batch,
+            criterion,
+        })
+    }
+
+    pub fn criterion(&self) -> SplitCriterion {
+        self.criterion
+    }
+
+    /// Kernel batch size (callers may exceed it; chunking is internal).
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Score candidates via the compiled kernel. Input length is arbitrary;
+    /// batches are padded with benign counts and truncated on return.
+    pub fn score(&self, counts: &[Counts]) -> anyhow::Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(counts.len());
+        for chunk in counts.chunks(self.batch) {
+            let mut n = vec![1.0f32; self.batch];
+            let mut np = vec![0.0f32; self.batch];
+            let mut nl = vec![0.0f32; self.batch];
+            let mut nlp = vec![0.0f32; self.batch];
+            for (i, c) in chunk.iter().enumerate() {
+                n[i] = c.n as f32;
+                np[i] = c.n_pos as f32;
+                nl[i] = c.n_left as f32;
+                nlp[i] = c.n_left_pos as f32;
+            }
+            let dims = vec![self.batch as i64];
+            let scores = self.exe.run_f32(&[
+                Input::F32(n, dims.clone()),
+                Input::F32(np, dims.clone()),
+                Input::F32(nl, dims.clone()),
+                Input::F32(nlp, dims),
+            ])?;
+            out.extend_from_slice(&scores[..chunk.len()]);
+        }
+        Ok(out)
+    }
+}
+
+/// Native fallback with identical semantics (f64 internally, like the
+/// forest's own scorer, cast to f32 on return).
+pub fn score_native(criterion: SplitCriterion, counts: &[Counts]) -> Vec<f32> {
+    counts
+        .iter()
+        .map(|c| {
+            crate::forest::criterion::split_score(criterion, c.n, c.n_pos, c.n_left, c.n_left_pos)
+                as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::locate_artifacts;
+    use crate::util::rng::Rng;
+
+    fn random_counts(rng: &mut Rng, total: usize) -> Vec<Counts> {
+        (0..total)
+            .map(|_| {
+                let n = 1 + rng.index(1000) as u32;
+                let n_pos = rng.index(n as usize + 1) as u32;
+                let n_left = rng.index(n as usize + 1) as u32;
+                let lo = n_pos.saturating_sub(n - n_left);
+                let hi = n_left.min(n_pos);
+                let n_left_pos = if hi > lo {
+                    lo + rng.index((hi - lo) as usize + 1) as u32
+                } else {
+                    lo
+                };
+                Counts {
+                    n,
+                    n_pos,
+                    n_left,
+                    n_left_pos,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pjrt_matches_native_for_both_criteria() {
+        let Some(dir) = locate_artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        let engine = Engine::global().unwrap();
+        let mut rng = Rng::new(4);
+        for criterion in [SplitCriterion::Gini, SplitCriterion::Entropy] {
+            let scorer = PjrtScorer::new(engine, &manifest, criterion).unwrap();
+            // irregular length forces chunking + padding
+            let counts = random_counts(&mut rng, scorer.batch() + 333);
+            let got = scorer.score(&counts).unwrap();
+            let want = score_native(criterion, &counts);
+            assert_eq!(got.len(), counts.len());
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() < 1e-5,
+                    "{criterion:?} candidate {i}: pjrt {g} vs native {w} ({:?})",
+                    counts[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn native_scorer_edge_cases() {
+        let cases = [
+            Counts { n: 4, n_pos: 2, n_left: 2, n_left_pos: 2 }, // perfect
+            Counts { n: 5, n_pos: 2, n_left: 0, n_left_pos: 0 }, // empty side
+            Counts { n: 8, n_pos: 4, n_left: 4, n_left_pos: 2 }, // useless
+        ];
+        let g = score_native(SplitCriterion::Gini, &cases);
+        assert!(g[0].abs() < 1e-7);
+        assert!(g.iter().all(|v| v.is_finite()));
+        assert!((g[2] - 0.5).abs() < 1e-6);
+        let e = score_native(SplitCriterion::Entropy, &cases);
+        assert!(e[0].abs() < 1e-7);
+        assert!((e[2] - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,234 @@
+//! Tensorize a DaRE forest for the L2 predict graph: flatten each tree
+//! (BFS order) into fixed-size node arrays. Leaves self-loop; padded trees
+//! are value-0 single leaves (they add 0 to the sum the graph returns).
+
+use crate::forest::forest::DareForest;
+use crate::forest::node::Node;
+use crate::runtime::manifest::PredictArtifact;
+
+/// Flat forest arrays matching the predict artifact's (T, M) layout.
+#[derive(Clone, Debug)]
+pub struct TensorForest {
+    pub attr: Vec<i32>,    // T*M
+    pub thresh: Vec<f32>,  // T*M
+    pub left: Vec<i32>,    // T*M
+    pub right: Vec<i32>,   // T*M
+    pub value: Vec<f32>,   // T*M
+    pub n_real_trees: usize,
+    pub trees: usize,
+    pub nodes: usize,
+}
+
+/// Errors when the forest exceeds the artifact's static shape.
+pub fn tensorize(forest: &DareForest, art: &PredictArtifact) -> anyhow::Result<TensorForest> {
+    let t_real = forest.n_trees();
+    anyhow::ensure!(
+        t_real <= art.trees,
+        "forest has {t_real} trees, artifact supports {}",
+        art.trees
+    );
+    anyhow::ensure!(
+        forest.data().n_features() <= art.features,
+        "dataset has {} features, artifact supports {}",
+        forest.data().n_features(),
+        art.features
+    );
+    let (t, m) = (art.trees, art.nodes);
+    let mut tf = TensorForest {
+        attr: vec![0; t * m],
+        thresh: vec![0.0; t * m],
+        left: vec![0; t * m],
+        right: vec![0; t * m],
+        value: vec![0.0; t * m],
+        n_real_trees: t_real,
+        trees: t,
+        nodes: m,
+    };
+    // initialize all slots as self-looping value-0 leaves
+    for ti in 0..t {
+        for ni in 0..m {
+            tf.left[ti * m + ni] = ni as i32;
+            tf.right[ti * m + ni] = ni as i32;
+        }
+    }
+    for (ti, tree) in forest.trees().iter().enumerate() {
+        let used = flatten_tree(&tree.root, ti, m, &mut tf)?;
+        let max_d = tree.shape().max_depth;
+        anyhow::ensure!(
+            max_d <= art.depth,
+            "tree depth {max_d} exceeds artifact unroll bound {}",
+            art.depth
+        );
+        let _ = used;
+    }
+    Ok(tf)
+}
+
+/// BFS-flatten one tree into slots `[ti*m .. ti*m+m)`. Returns nodes used.
+fn flatten_tree(root: &Node, ti: usize, m: usize, tf: &mut TensorForest) -> anyhow::Result<usize> {
+    let base = ti * m;
+    let mut queue: std::collections::VecDeque<(&Node, usize)> = Default::default();
+    let mut next_free = 1usize;
+    queue.push_back((root, 0));
+    while let Some((node, slot)) = queue.pop_front() {
+        match node {
+            Node::Leaf(l) => {
+                tf.value[base + slot] = l.value();
+                tf.left[base + slot] = slot as i32;
+                tf.right[base + slot] = slot as i32;
+            }
+            Node::Random(r) => {
+                anyhow::ensure!(next_free + 1 < m, "tree exceeds {m} node slots");
+                tf.attr[base + slot] = r.attr as i32;
+                tf.thresh[base + slot] = r.v;
+                tf.left[base + slot] = next_free as i32;
+                tf.right[base + slot] = (next_free + 1) as i32;
+                queue.push_back((&r.left, next_free));
+                queue.push_back((&r.right, next_free + 1));
+                next_free += 2;
+            }
+            Node::Greedy(g) => {
+                anyhow::ensure!(next_free + 1 < m, "tree exceeds {m} node slots");
+                tf.attr[base + slot] = g.split_attr() as i32;
+                tf.thresh[base + slot] = g.split_v();
+                tf.left[base + slot] = next_free as i32;
+                tf.right[base + slot] = (next_free + 1) as i32;
+                queue.push_back((&g.left, next_free));
+                queue.push_back((&g.right, next_free + 1));
+                next_free += 2;
+            }
+        }
+    }
+    Ok(next_free)
+}
+
+/// Pure-Rust traversal of the tensorized arrays — the parity oracle for the
+/// PJRT predictor and a fallback when artifacts are unavailable.
+pub fn predict_tensorized(tf: &TensorForest, row: &[f32]) -> f32 {
+    let m = tf.nodes;
+    let mut sum = 0.0f32;
+    for ti in 0..tf.trees {
+        let base = ti * m;
+        let mut idx = 0usize;
+        loop {
+            let l = tf.left[base + idx] as usize;
+            let r = tf.right[base + idx] as usize;
+            if l == idx && r == idx {
+                break;
+            }
+            let a = tf.attr[base + idx] as usize;
+            let v = tf.thresh[base + idx];
+            idx = if row.get(a).copied().unwrap_or(0.0) <= v {
+                l
+            } else {
+                r
+            };
+        }
+        sum += tf.value[base + idx];
+    }
+    sum / tf.n_real_trees as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::forest::params::Params;
+    use crate::runtime::manifest::PredictArtifact;
+
+    fn art() -> PredictArtifact {
+        PredictArtifact {
+            file: "unused".into(),
+            batch: 8,
+            features: 16,
+            trees: 8,
+            nodes: 512,
+            depth: 24,
+        }
+    }
+
+    fn forest(n_trees: usize) -> DareForest {
+        let d = generate(
+            &SynthSpec {
+                n: 300,
+                informative: 3,
+                redundant: 1,
+                noise: 2,
+                flip: 0.05,
+                ..Default::default()
+            },
+            3,
+        );
+        DareForest::fit(
+            d,
+            &Params {
+                n_trees,
+                max_depth: 6,
+                k: 5,
+                d_rmax: 1,
+                ..Default::default()
+            },
+            9,
+        )
+    }
+
+    #[test]
+    fn tensorized_matches_native_predictions() {
+        let f = forest(4);
+        let tf = tensorize(&f, &art()).unwrap();
+        assert_eq!(tf.n_real_trees, 4);
+        for id in f.data().live_ids().iter().take(100) {
+            let row = f.data().row(*id);
+            let native = f.predict_proba(&row);
+            let tens = predict_tensorized(&tf, &row);
+            assert!(
+                (native - tens).abs() < 1e-6,
+                "id {id}: native {native} vs tensorized {tens}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_too_many_trees() {
+        let f = forest(9);
+        assert!(tensorize(&f, &art()).is_err());
+    }
+
+    #[test]
+    fn rejects_too_many_features() {
+        let d = generate(
+            &SynthSpec {
+                n: 100,
+                informative: 10,
+                redundant: 5,
+                noise: 5,
+                ..Default::default()
+            },
+            1,
+        );
+        let f = DareForest::fit(
+            d,
+            &Params {
+                n_trees: 2,
+                max_depth: 3,
+                k: 5,
+                ..Default::default()
+            },
+            1,
+        );
+        assert!(tensorize(&f, &art()).is_err()); // 20 > 16 features
+    }
+
+    #[test]
+    fn padded_tree_slots_are_zero_leaves() {
+        let f = forest(2);
+        let tf = tensorize(&f, &art()).unwrap();
+        // slots for trees 2..8 must be self-looping zero leaves
+        let m = tf.nodes;
+        for ti in 2..8 {
+            assert_eq!(tf.value[ti * m], 0.0);
+            assert_eq!(tf.left[ti * m], 0);
+            assert_eq!(tf.right[ti * m], 0);
+        }
+    }
+}

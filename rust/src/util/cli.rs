@@ -1,0 +1,156 @@
+//! Tiny CLI argument parser (no clap in the offline image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional arguments.
+//! Typed getters parse on demand and report readable errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Keys that take a value; everything else starting with `--` is a flag.
+pub fn parse<I: IntoIterator<Item = String>>(args: I, value_keys: &[&str]) -> Args {
+    let mut out = Args::default();
+    let mut it = args.into_iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(body) = a.strip_prefix("--") {
+            if let Some((k, v)) = body.split_once('=') {
+                out.options.insert(k.to_string(), v.to_string());
+            } else if value_keys.contains(&body) {
+                match it.next() {
+                    Some(v) => {
+                        out.options.insert(body.to_string(), v);
+                    }
+                    None => {
+                        out.flags.push(body.to_string());
+                    }
+                }
+            } else {
+                out.flags.push(body.to_string());
+            }
+        } else {
+            out.positional.push(a);
+        }
+    }
+    out
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|s| {
+                s.parse::<usize>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|s| {
+                s.parse::<u64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|s| {
+                s.parse::<f64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+    /// Comma-separated list of usize, e.g. `--ks 1,5,10`.
+    pub fn usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .map(|t| {
+                    t.trim()
+                        .parse::<usize>()
+                        .unwrap_or_else(|_| panic!("--{name}: bad integer '{t}'"))
+                })
+                .collect(),
+        }
+    }
+    /// Comma-separated list of f64.
+    pub fn f64_list(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .map(|t| {
+                    t.trim()
+                        .parse::<f64>()
+                        .unwrap_or_else(|_| panic!("--{name}: bad number '{t}'"))
+                })
+                .collect(),
+        }
+    }
+    /// Comma-separated list of strings.
+    pub fn str_list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name)
+            .map(|s| s.split(',').map(|t| t.trim().to_string()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = parse(
+            args(&["train", "--trees", "100", "--depth=20", "--verbose", "surgical"]),
+            &["trees", "depth"],
+        );
+        assert_eq!(a.positional, vec!["train", "surgical"]);
+        assert_eq!(a.usize("trees", 0), 100);
+        assert_eq!(a.usize("depth", 0), 20);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(args(&[]), &[]);
+        assert_eq!(a.usize("k", 25), 25);
+        assert_eq!(a.f64("tol", 0.5), 0.5);
+        assert_eq!(a.get_or("name", "x"), "x");
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(args(&["--ks=1,5,10", "--tols", "0.1,0.25"]), &["tols"]);
+        assert_eq!(a.usize_list("ks", &[]), vec![1, 5, 10]);
+        assert_eq!(a.f64_list("tols", &[]), vec![0.1, 0.25]);
+        assert_eq!(a.usize_list("missing", &[7]), vec![7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn bad_integer_panics() {
+        let a = parse(args(&["--trees", "abc"]), &["trees"]);
+        a.usize("trees", 0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! RNG, JSON, CLI parsing, thread pool, statistics, property testing, timing,
+//! and text-table rendering for the experiment harness.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;
+pub mod timer;

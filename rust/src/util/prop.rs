@@ -1,0 +1,205 @@
+//! Property-based testing mini-framework (no proptest in the offline image).
+//!
+//! A property is a closure over a seeded [`crate::util::rng::Rng`]; the runner
+//! executes it across many cases and, on failure, reports the failing seed so
+//! the case can be replayed deterministically. Generators are free functions
+//! over the Rng — composition happens in plain Rust.
+//!
+//! Shrinking: numeric sizes are retried at smaller magnitudes (halving) before
+//! reporting, which in practice pinpoints minimal dataset sizes for forest
+//! invariant failures.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 64,
+            base_seed: 0xDA2E_2021,
+        }
+    }
+}
+
+/// Run `prop` across `cfg.cases` deterministic seeds. The property receives a
+/// fresh Rng per case; it should panic (e.g. via assert!) on failure.
+pub fn check<F: Fn(&mut Rng)>(name: &str, cfg: Config, prop: F) {
+    for case in 0..cfg.cases {
+        let seed = crate::util::rng::mix_seed(&[cfg.base_seed, case as u64]);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = panic_message(&e);
+            panic!(
+                "property '{name}' failed at case {case}/{} (seed={seed:#x}): {msg}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Run a property parameterized by a "size" drawn from `[1, max_size]`.
+/// On failure, tries to find a smaller failing size (simple halving shrink)
+/// and reports the smallest found.
+pub fn check_sized<F: Fn(&mut Rng, usize)>(name: &str, cfg: Config, max_size: usize, prop: F) {
+    for case in 0..cfg.cases {
+        let seed = crate::util::rng::mix_seed(&[cfg.base_seed, case as u64, 0x517E]);
+        let mut rng = Rng::new(seed);
+        let size = 1 + rng.index(max_size.max(1));
+        let run = |sz: usize| {
+            let mut r = Rng::new(seed);
+            let _ = r.index(max_size.max(1)); // keep stream aligned
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut r, sz)))
+        };
+        if let Err(first) = run(size) {
+            // Shrink: halve until it passes, keep the smallest failure.
+            let mut lo_fail = size;
+            let mut msg = panic_message(&first);
+            let mut sz = size / 2;
+            while sz >= 1 {
+                match run(sz) {
+                    Err(e) => {
+                        lo_fail = sz;
+                        msg = panic_message(&e);
+                        sz /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed at case {case} (seed={seed:#x}, size={lo_fail}, original size={size}): {msg}"
+            );
+        }
+    }
+}
+
+fn panic_message(e: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Common generators
+// ---------------------------------------------------------------------------
+
+/// Vector of f32 features in [-scale, scale], with a proportion of repeated
+/// values (ties are the interesting edge case for threshold validity).
+pub fn gen_feature_column(rng: &mut Rng, n: usize, tie_prob: f64, scale: f32) -> Vec<f32> {
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        if i > 0 && rng.bernoulli(tie_prob) {
+            // duplicate a previous value to create ties
+            let j = rng.index(i);
+            out.push(out[j]);
+        } else {
+            out.push(rng.range_f32(-scale, scale));
+        }
+    }
+    out
+}
+
+/// Binary labels with given positive rate; guarantees at least one of each
+/// class when n >= 2 (so trees are non-trivial).
+pub fn gen_labels(rng: &mut Rng, n: usize, pos_rate: f64) -> Vec<u8> {
+    let mut y: Vec<u8> = (0..n).map(|_| rng.bernoulli(pos_rate) as u8).collect();
+    if n >= 2 {
+        if y.iter().all(|&v| v == 0) {
+            let i = rng.index(n);
+            y[i] = 1;
+        }
+        if y.iter().all(|&v| v == 1) {
+            let i = rng.index(n);
+            y[i] = 0;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", Config::default(), |rng| {
+            let a = rng.index(1000) as i64;
+            let b = rng.index(1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check(
+                "always fails",
+                Config {
+                    cases: 3,
+                    base_seed: 1,
+                },
+                |_rng| {
+                    panic!("intentional");
+                },
+            );
+        });
+        let msg = match r {
+            Err(e) => panic_message(&e),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("seed="), "message should include seed: {msg}");
+        assert!(msg.contains("intentional"));
+    }
+
+    #[test]
+    fn sized_shrinks_down() {
+        let r = std::panic::catch_unwind(|| {
+            check_sized(
+                "fails for size>=2",
+                Config {
+                    cases: 5,
+                    base_seed: 2,
+                },
+                100,
+                |_rng, size| {
+                    assert!(size < 2, "too big");
+                },
+            );
+        });
+        let msg = match r {
+            Err(e) => panic_message(&e),
+            Ok(()) => return, // all sampled sizes were 1 — acceptable
+        };
+        // shrinker should land on exactly size=2 or 3 (halving)
+        assert!(msg.contains("size="), "{msg}");
+    }
+
+    #[test]
+    fn generators_sane() {
+        let mut rng = Rng::new(5);
+        let col = gen_feature_column(&mut rng, 100, 0.5, 10.0);
+        assert_eq!(col.len(), 100);
+        assert!(col.iter().all(|v| (-10.0..10.0).contains(v)));
+        // tie probability 0.5 should produce duplicates
+        let mut sorted = col.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.dedup();
+        assert!(sorted.len() < 100);
+
+        let y = gen_labels(&mut rng, 50, 0.2);
+        assert!(y.iter().any(|&v| v == 1));
+        assert!(y.iter().any(|&v| v == 0));
+    }
+}

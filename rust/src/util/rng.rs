@@ -1,0 +1,303 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The image is offline (no `rand` crate), and DaRE's exactness guarantees
+//! require *reproducible* randomness: every node in a DaRE tree draws from a
+//! stream derived from `(tree_seed, node_path)` so that retraining a subtree
+//! from scratch replays the same choices (see DESIGN.md §5).
+//!
+//! We implement SplitMix64 (for seeding / hashing) and Xoshiro256** (the
+//! workhorse generator), both public-domain algorithms by Blackman & Vigna.
+
+/// SplitMix64 step: used to expand a single `u64` seed into a full
+/// Xoshiro256** state, and as a cheap avalanche hash for path-derived seeds.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Mix an arbitrary sequence of `u64` words into a single seed word.
+/// Used to derive per-node seeds from `(tree_seed, node_path_hash)`.
+#[inline]
+pub fn mix_seed(words: &[u64]) -> u64 {
+    let mut s: u64 = 0x243F_6A88_85A3_08D3; // pi fraction, arbitrary constant
+    for &w in words {
+        s ^= w;
+        s = splitmix64(&mut s);
+    }
+    s
+}
+
+/// Xoshiro256** — fast, high-quality, 256-bit state PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive a child generator from this one plus a stream discriminator.
+    /// Streams with different tags are independent for practical purposes.
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(mix_seed(&[self.next_u64(), tag]))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, bound)` using Lemire's nearly-divisionless method.
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0, "next_below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in `[0, bound)`.
+    #[inline]
+    pub fn index(&mut self, bound: usize) -> usize {
+        self.next_below(bound as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform f32 in `[lo, hi)`. Returns `lo` when the range is degenerate.
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        if !(hi > lo) {
+            return lo;
+        }
+        let v = lo + (hi - lo) * self.f32();
+        // Guard against rounding up to `hi` exactly.
+        if v >= hi {
+            lo
+        } else {
+            v
+        }
+    }
+
+    /// Standard normal via Box–Muller (polar form avoided for determinism).
+    pub fn normal(&mut self) -> f64 {
+        // u in (0,1] to avoid ln(0)
+        let u = 1.0 - self.f64();
+        let v = self.f64();
+        (-2.0 * u.ln()).sqrt() * (2.0 * std::f64::consts::PI * v).cos()
+    }
+
+    /// Bernoulli draw with probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        let n = xs.len();
+        if n < 2 {
+            return;
+        }
+        for i in (1..n).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `m` distinct indices from `[0, n)` uniformly at random,
+    /// in random order. When `m >= n`, returns a permutation of `0..n`.
+    pub fn sample_indices(&mut self, n: usize, m: usize) -> Vec<usize> {
+        let m = m.min(n);
+        if m == 0 {
+            return Vec::new();
+        }
+        // Partial Fisher-Yates over an index array; O(n) alloc but simple and
+        // exact. For n large and m tiny, use rejection via a small set.
+        if m * 8 < n {
+            let mut chosen = Vec::with_capacity(m);
+            'outer: while chosen.len() < m {
+                let c = self.index(n);
+                for &p in &chosen {
+                    if p == c {
+                        continue 'outer;
+                    }
+                }
+                chosen.push(c);
+            }
+            chosen
+        } else {
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..m {
+                let j = i + self.index(n - i);
+                idx.swap(i, j);
+            }
+            idx.truncate(m);
+            idx
+        }
+    }
+
+    /// Reservoir-sample `m` items from an iterator of unknown length.
+    pub fn reservoir<T, I: Iterator<Item = T>>(&mut self, iter: I, m: usize) -> Vec<T> {
+        let mut out: Vec<T> = Vec::with_capacity(m);
+        if m == 0 {
+            return out;
+        }
+        for (i, item) in iter.enumerate() {
+            if i < m {
+                out.push(item);
+            } else {
+                let j = self.index(i + 1);
+                if j < m {
+                    out[j] = item;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn next_below_in_range_and_covers() {
+        let mut r = Rng::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.next_below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn f64_unit_interval_mean() {
+        let mut r = Rng::new(3);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn range_f32_degenerate() {
+        let mut r = Rng::new(9);
+        assert_eq!(r.range_f32(2.0, 2.0), 2.0);
+        for _ in 0..100 {
+            let v = r.range_f32(-1.5, 2.5);
+            assert!((-1.5..2.5).contains(&v));
+        }
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(11);
+        for (n, m) in [(10, 3), (100, 99), (5, 5), (1000, 4), (4, 9)] {
+            let s = r.sample_indices(n, m);
+            assert_eq!(s.len(), m.min(n));
+            let mut sorted = s.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), s.len(), "indices must be distinct");
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(13);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(17);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn reservoir_sizes() {
+        let mut r = Rng::new(19);
+        assert_eq!(r.reservoir(0..100u32, 10).len(), 10);
+        assert_eq!(r.reservoir(0..5u32, 10).len(), 5);
+        assert!(r.reservoir(0..100u32, 0).is_empty());
+    }
+
+    #[test]
+    fn mix_seed_order_sensitive() {
+        assert_ne!(mix_seed(&[1, 2]), mix_seed(&[2, 1]));
+        assert_eq!(mix_seed(&[1, 2, 3]), mix_seed(&[1, 2, 3]));
+    }
+}

@@ -1,0 +1,134 @@
+//! Plain-text table rendering for the experiment harness — the `reproduce`
+//! subcommands print the same rows the paper's tables report.
+
+/// A simple column-aligned text table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self
+            .header
+            .len()
+            .max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.chars().count());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&self.title);
+            out.push('\n');
+        }
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, w) in widths.iter().enumerate() {
+                let empty = String::new();
+                let c = cells.get(i).unwrap_or(&empty);
+                line.push_str(c);
+                for _ in c.chars().count()..*w {
+                    line.push(' ');
+                }
+                if i + 1 < widths.len() {
+                    line.push_str("  ");
+                }
+            }
+            while line.ends_with(' ') {
+                line.pop();
+            }
+            line
+        };
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header, &widths));
+            out.push('\n');
+            let total: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
+            out.push_str(&"-".repeat(total));
+            out.push('\n');
+        }
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with `d` decimals.
+pub fn f(v: f64, d: usize) -> String {
+    format!("{:.*}", d, v)
+}
+
+/// Format "mean (stderr)" in the paper's Table-3 style.
+pub fn mean_se(mean: f64, se: f64, d: usize) -> String {
+    format!("{:.*} ({:.*})", d, mean, d, se)
+}
+
+/// Format a speedup multiplier like the paper's "257x".
+pub fn speedup(v: f64) -> String {
+    if v >= 100.0 {
+        format!("{:.0}x", v)
+    } else if v >= 10.0 {
+        format!("{:.1}x", v)
+    } else {
+        format!("{:.2}x", v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbb"]);
+        t.row(vec!["x".into(), "1".into()]);
+        t.row(vec!["yyyy".into(), "22".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[0], "T");
+        assert!(lines[1].starts_with("a"));
+        assert!(lines[3].starts_with("x"));
+        // columns aligned: 'bbb' column starts at same offset in all rows
+        let col = lines[1].find("bbb").unwrap();
+        assert_eq!(&lines[3][col..col + 1], "1");
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(f(1.23456, 3), "1.235");
+        assert_eq!(mean_se(0.5, 0.01, 2), "0.50 (0.01)");
+        assert_eq!(speedup(257.3), "257x");
+        assert_eq!(speedup(52.6), "52.6x");
+        assert_eq!(speedup(5.25), "5.25x");
+    }
+
+    #[test]
+    fn ragged_rows_ok() {
+        let mut t = Table::new("", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains('2'));
+    }
+}

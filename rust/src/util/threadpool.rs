@@ -1,0 +1,338 @@
+//! Fixed-size worker thread pool (no tokio in the offline image).
+//!
+//! Two front-ends:
+//! - [`ThreadPool::execute`] — fire-and-forget jobs with a [`ThreadPool::join`]
+//!   barrier, used by the coordinator for request handling.
+//! - [`scope_map`] — structured fork/join over a slice, used to parallelize
+//!   per-tree work (training, deletion, dry-run costing) in the forest.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Shared state tracking in-flight jobs so `join` can block until quiescent.
+struct Inflight {
+    count: Mutex<usize>,
+    cv: Condvar,
+}
+
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    rx_holder: Arc<Mutex<mpsc::Receiver<Msg>>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    inflight: Arc<Inflight>,
+    panics: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Create a pool with `n` workers (minimum 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let inflight = Arc::new(Inflight {
+            count: Mutex::new(0),
+            cv: Condvar::new(),
+        });
+        let panics = Arc::new(AtomicUsize::new(0));
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            let inflight = Arc::clone(&inflight);
+            let panics = Arc::clone(&panics);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("dare-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match msg {
+                            Ok(Msg::Run(job)) => {
+                                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                    panics.fetch_add(1, Ordering::SeqCst);
+                                }
+                                let mut c = inflight.count.lock().unwrap();
+                                *c -= 1;
+                                if *c == 0 {
+                                    inflight.cv.notify_all();
+                                }
+                            }
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool {
+            tx,
+            rx_holder: rx,
+            workers,
+            inflight,
+            panics,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let mut c = self.inflight.count.lock().unwrap();
+            *c += 1;
+        }
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool send");
+    }
+
+    /// Block until all submitted jobs have completed.
+    pub fn join(&self) {
+        let mut c = self.inflight.count.lock().unwrap();
+        while *c != 0 {
+            c = self.inflight.cv.wait(c).unwrap();
+        }
+    }
+
+    /// Number of jobs that panicked since pool creation.
+    pub fn panic_count(&self) -> usize {
+        self.panics.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.join();
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        // Wake any worker blocked on recv via channel disconnect semantics is
+        // handled by Shutdown messages; drain handles.
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let _ = &self.rx_holder; // keep receiver alive until workers exit
+    }
+}
+
+/// Structured fork/join: apply `f` to every element of `items` using up to
+/// `threads` OS threads, preserving output order. Panics in `f` propagate.
+///
+/// This is the substrate for per-tree parallelism in the forest: trees are
+/// independent, so training/deletion parallelizes embarrassingly.
+pub fn scope_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots = Mutex::new(&mut out);
+    // SAFETY: std::thread::scope guarantees all threads finish before refs die.
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                let mut guard = slots.lock().unwrap();
+                guard[i] = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("scope_map slot")).collect()
+}
+
+/// Structured fork/join over a mutable slice: apply `f` to every element in
+/// parallel, preserving output order. Each element is visited by exactly one
+/// thread (disjoint &mut access via an atomic work index).
+pub fn scope_map_mut<T, R, F>(items: &mut [T], threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    struct Ptr<T>(*mut T);
+    // SAFETY: each index is claimed exactly once via fetch_add, so threads
+    // never alias an element; the scope outlives all accesses.
+    unsafe impl<T> Sync for Ptr<T> {}
+    impl<T> Ptr<T> {
+        /// SAFETY: caller guarantees exclusive access to index `i`.
+        unsafe fn get(&self, i: usize) -> &mut T {
+            &mut *self.0.add(i)
+        }
+    }
+    let base = Ptr(items.as_mut_ptr());
+    let base = &base; // capture the wrapper, not the raw field (edition-2021 closures)
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots = Mutex::new(&mut out);
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item: &mut T = unsafe { base.get(i) };
+                let r = f(i, item);
+                let mut guard = slots.lock().unwrap();
+                guard[i] = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("scope_map_mut slot")).collect()
+}
+
+/// Parallel for over `0..n` with an index-only body.
+pub fn scope_for<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Default parallelism: available cores (capped to 16 to avoid oversubscribing
+/// the shared container).
+pub fn default_threads() -> usize {
+    thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_join_is_reusable() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for round in 0..3 {
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.join();
+            assert_eq!(counter.load(Ordering::SeqCst), (round + 1) * 10);
+        }
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        pool.join();
+        assert_eq!(pool.panic_count(), 1);
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&counter);
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn scope_map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = scope_map(&items, 8, |_, &x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_map_single_thread_path() {
+        let items = vec![1, 2, 3];
+        assert_eq!(scope_map(&items, 1, |i, &x| i as i32 + x), vec![1, 3, 5]);
+        let empty: Vec<i32> = vec![];
+        assert!(scope_map(&empty, 4, |_, &x: &i32| x).is_empty());
+    }
+
+    #[test]
+    fn scope_map_mut_updates_in_place() {
+        let mut items: Vec<u64> = (0..500).collect();
+        let out = scope_map_mut(&mut items, 8, |i, x| {
+            *x += 1;
+            i as u64
+        });
+        assert_eq!(items, (1..=500).collect::<Vec<_>>());
+        assert_eq!(out, (0..500).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_for_covers_all_indices() {
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        scope_for(100, 8, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+}

@@ -1,0 +1,102 @@
+//! Wall-clock timing helpers shared by the eval + bench harnesses.
+
+use std::time::{Duration, Instant};
+
+/// Time a closure, returning (result, elapsed seconds).
+pub fn time<R, F: FnOnce() -> R>(f: F) -> (R, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// A stopwatch that can accumulate across multiple start/stop intervals.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    acc: Duration,
+    started: Option<Instant>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch {
+            acc: Duration::ZERO,
+            started: None,
+        }
+    }
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.acc += t0.elapsed();
+        }
+    }
+    pub fn seconds(&self) -> f64 {
+        let mut d = self.acc;
+        if let Some(t0) = self.started {
+            d += t0.elapsed();
+        }
+        d.as_secs_f64()
+    }
+    pub fn reset(&mut self) {
+        self.acc = Duration::ZERO;
+        self.started = None;
+    }
+}
+
+/// Format seconds human-readably (µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2}s", s)
+    } else {
+        format!("{:.1}min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_returns_result() {
+        let (v, secs) = time(|| 40 + 2);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        let a = sw.seconds();
+        assert!(a >= 0.004, "a={a}");
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        assert!(sw.seconds() > a);
+        sw.reset();
+        assert_eq!(sw.seconds(), 0.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+        assert!(fmt_secs(600.0).ends_with("min"));
+    }
+}

@@ -1,0 +1,253 @@
+//! Integration tests: cross-module flows — corpus → forest → deletion →
+//! metrics, snapshots, the coordinator over TCP, the PJRT runtime, and the
+//! experiment harness at smoke scale.
+
+use dare::coordinator::{serve, Client, ServiceConfig, UnlearningService};
+use dare::data::registry::find;
+use dare::data::split::train_test;
+use dare::eval::adversary::Adversary;
+use dare::eval::speedup::{measure, SpeedupConfig};
+use dare::forest::{serialize, structural_eq, DareForest, MaxFeatures, Params, SplitCriterion};
+use dare::util::json::parse;
+use dare::util::rng::Rng;
+
+fn corpus_forest(name: &str, n_trees: usize, d_rmax: usize) -> (DareForest, dare::data::Dataset) {
+    let info = find(name).unwrap();
+    let data = info.generate(20_000, 5);
+    let (train, test) = train_test(&data, 0.8, 5);
+    let params = Params {
+        n_trees,
+        max_depth: 8,
+        k: 10,
+        d_rmax,
+        n_threads: 2,
+        ..Default::default()
+    };
+    (DareForest::fit(train, &params, 11), test)
+}
+
+#[test]
+fn corpus_to_metrics_pipeline() {
+    let (forest, test) = corpus_forest("twitter", 10, 2);
+    let probs = forest.predict_proba_dataset(&test);
+    let (_, ys, _) = test.to_row_major();
+    let auc = dare::metrics::auc(&probs, &ys);
+    assert!(auc > 0.6, "auc {auc}");
+}
+
+#[test]
+fn unlearning_matches_scratch_model_distributionally() {
+    // Delete 30% of training data; the unlearned model's test metric should
+    // track a scratch-trained model on the reduced data closely.
+    let info = find("synthetic").unwrap();
+    let data = info.generate(2_000, 9);
+    let (train, test) = train_test(&data, 0.8, 9);
+    let (_, ys, _) = test.to_row_major();
+    let params = Params {
+        n_trees: 20,
+        max_depth: 8,
+        k: 10,
+        n_threads: 2,
+        ..Default::default()
+    };
+    let mut unlearned = DareForest::fit(train.clone(), &params, 21);
+    let mut rng = Rng::new(3);
+    let n_del = unlearned.n_alive() * 3 / 10;
+    for _ in 0..n_del {
+        let live = unlearned.live_ids();
+        let id = live[rng.index(live.len())];
+        unlearned.delete_seq(id).unwrap();
+    }
+    let reduced = unlearned.data().compacted();
+    let scratch = DareForest::fit(reduced, &params, 22);
+    let acc_unlearned =
+        dare::metrics::accuracy(&unlearned.predict_proba_dataset(&test), &ys);
+    let acc_scratch = dare::metrics::accuracy(&scratch.predict_proba_dataset(&test), &ys);
+    assert!(
+        (acc_unlearned - acc_scratch).abs() < 0.07,
+        "unlearned {acc_unlearned} vs scratch {acc_scratch}"
+    );
+}
+
+#[test]
+fn full_exactness_forest_level() {
+    // Forest-level version of the exhaustive-k structural-equality check.
+    let info = find("ctr").unwrap();
+    let data = info.generate(50_000, 2);
+    let (train, _) = train_test(&data, 0.8, 2);
+    let params = Params {
+        n_trees: 3,
+        max_depth: 5,
+        k: 100_000,
+        max_features: MaxFeatures::All,
+        n_threads: 2,
+        ..Default::default()
+    };
+    let mut f = DareForest::fit(train, &params, 77);
+    for id in [3u32, 55, 200, 411] {
+        f.delete(id).unwrap();
+    }
+    let scratch = DareForest::fit(f.data().compacted(), &params, 77);
+    // note: scratch is trained on compacted ids, so compare predictions (ids
+    // shift); structural comparison needs the same id space:
+    // reuse the already-masked dataset: training only sees live ids, so the
+    // id space matches for structural comparison
+    let scratch_same_ids = DareForest::fit(f.data().clone(), &params, 77);
+    for (a, b) in f.trees().iter().zip(scratch_same_ids.trees()) {
+        assert!(structural_eq(&a.root, &b.root), "delete != scratch");
+    }
+    // prediction parity with the compacted scratch model too
+    for i in 0..50u32 {
+        let row = f.data().row(i);
+        assert!((f.predict_proba(&row) - scratch.predict_proba(&row)).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn snapshot_roundtrip_through_service() {
+    let (forest, _) = corpus_forest("adult", 4, 1);
+    let svc = UnlearningService::new(
+        forest,
+        ServiceConfig {
+            use_pjrt: false,
+            ..Default::default()
+        },
+    );
+    svc.handle(&parse(r#"{"op":"delete","ids":[1,2,3]}"#).unwrap());
+    let path = std::env::temp_dir().join("dare_integration_snapshot.json");
+    let resp = svc.handle(
+        &parse(&format!(r#"{{"op":"save","path":"{}"}}"#, path.display())).unwrap(),
+    );
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    let restored = serialize::load(&path).unwrap();
+    assert_eq!(restored.n_alive(), svc.forest().read().unwrap().n_alive());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn service_over_tcp_full_flow() {
+    let (forest, test) = corpus_forest("bank_marketing", 5, 2);
+    let svc = UnlearningService::new(
+        forest,
+        ServiceConfig {
+            use_pjrt: false,
+            ..Default::default()
+        },
+    );
+    let svc2 = std::sync::Arc::clone(&svc);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let server = std::thread::spawn(move || {
+        serve(svc2, "127.0.0.1:0", 2, move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+    let mut c = Client::connect(addr).unwrap();
+
+    // predict a test row
+    let row: Vec<String> = test.row(0).iter().map(|v| v.to_string()).collect();
+    let r = c
+        .call(&parse(&format!(r#"{{"op":"predict","rows":[[{}]]}}"#, row.join(","))).unwrap())
+        .unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+
+    // delete, add, cost, stats
+    let r = c.call(&parse(r#"{"op":"delete","ids":[7,8]}"#).unwrap()).unwrap();
+    assert_eq!(r.get("deleted").unwrap().as_u64(), Some(2));
+    let r = c
+        .call(&parse(&format!(r#"{{"op":"add","row":[{}],"label":1}}"#, row.join(","))).unwrap())
+        .unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    let r = c.call(&parse(r#"{"op":"delete_cost","id":20}"#).unwrap()).unwrap();
+    assert!(r.get("cost").unwrap().as_u64().is_some());
+    let r = c.call(&parse(r#"{"op":"stats"}"#).unwrap()).unwrap();
+    assert!(r.get("telemetry").is_some());
+
+    c.call(&parse(r#"{"op":"shutdown"}"#).unwrap()).unwrap();
+    server.join().unwrap();
+}
+
+#[test]
+fn speedup_pipeline_on_corpus_entry() {
+    let info = find("credit_card").unwrap();
+    let data = info.generate(20_000, 4);
+    let (train, test) = train_test(&data, 0.8, 4);
+    let params = Params {
+        n_trees: 5,
+        max_depth: 8,
+        k: 5,
+        n_threads: 2,
+        ..Default::default()
+    };
+    let r = measure(
+        &train,
+        &test,
+        &params,
+        &SpeedupConfig {
+            adversary: Adversary::Random,
+            max_deletions: 25,
+            metric: info.metric,
+            seed: 6,
+        },
+    );
+    assert!(r.speedup > 1.0, "speedup {}", r.speedup);
+    assert!(r.metric_before >= 0.0 && r.metric_before <= 1.0);
+}
+
+#[test]
+fn pjrt_runtime_agrees_with_forest_when_artifacts_present() {
+    let Some(dir) = dare::runtime::manifest::locate_artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let manifest = dare::runtime::Manifest::load(&dir).unwrap();
+    let engine = dare::runtime::Engine::global().unwrap();
+    let (forest, test) = corpus_forest("higgs", 6, 1);
+    let predictor = dare::runtime::PjrtPredictor::new(engine, &manifest, &forest).unwrap();
+    let rows: Vec<Vec<f32>> = test.live_ids().iter().take(40).map(|&i| test.row(i)).collect();
+    let pjrt = predictor.predict(&rows).unwrap();
+    for (i, row) in rows.iter().enumerate() {
+        assert!((pjrt[i] - forest.predict_proba(row)).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn entropy_criterion_full_cycle() {
+    let info = find("twitter").unwrap();
+    let data = info.generate(20_000, 8);
+    let (train, test) = train_test(&data, 0.8, 8);
+    let params = Params {
+        n_trees: 5,
+        max_depth: 7,
+        k: 10,
+        criterion: SplitCriterion::Entropy,
+        n_threads: 2,
+        ..Default::default()
+    };
+    let mut f = DareForest::fit(train, &params, 2);
+    for id in f.live_ids().into_iter().take(30) {
+        f.delete_seq(id).unwrap();
+    }
+    let probs = f.predict_proba_dataset(&test);
+    let (_, ys, _) = test.to_row_major();
+    assert!(dare::metrics::auc(&probs, &ys) > 0.55);
+}
+
+#[test]
+fn experiment_smoke_fig1_table2() {
+    // Tiny smoke of the full experiment pipeline: fig1 → table2 aggregation.
+    let cfg = dare::exp::ExpConfig {
+        scale_div: 50_000,
+        repeats: 1,
+        max_deletions: 5,
+        worst_of: 5,
+        datasets: vec!["twitter".into()],
+        max_trees: 2,
+        out_dir: std::env::temp_dir().join("dare_integration_exp"),
+        ..Default::default()
+    };
+    let rows = dare::exp::table2::run(&cfg).unwrap();
+    assert!(!rows.is_empty());
+    // rerun reuses the cached fig1 json
+    let rows2 = dare::exp::table2::run(&cfg).unwrap();
+    assert_eq!(rows.len(), rows2.len());
+    std::fs::remove_dir_all(&cfg.out_dir).ok();
+}

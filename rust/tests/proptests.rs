@@ -1,0 +1,365 @@
+//! Property-based tests (util::prop) over forest and coordinator invariants:
+//! random workloads of trains/deletes/adds must preserve every structural
+//! invariant, and the coordinator's routing/batching/state must stay
+//! consistent under arbitrary interleavings.
+
+use dare::coordinator::{ServiceConfig, UnlearningService};
+use dare::data::dataset::Dataset;
+use dare::forest::{DareForest, Node, Params};
+use dare::util::json::{parse, Value};
+use dare::util::prop::{check, check_sized, gen_feature_column, gen_labels, Config};
+use dare::util::rng::Rng;
+use std::time::Duration;
+
+fn random_dataset(rng: &mut Rng, n: usize, p: usize) -> Dataset {
+    let cols: Vec<Vec<f32>> = (0..p)
+        .map(|_| gen_feature_column(rng, n, 0.3, 5.0))
+        .collect();
+    let pos_rate = 0.2 + 0.6 * rng.f64();
+    let labels = gen_labels(rng, n, pos_rate);
+    Dataset::from_columns(cols, labels)
+}
+
+fn random_params(rng: &mut Rng) -> Params {
+    let max_depth = 2 + rng.index(7);
+    Params {
+        n_trees: 1 + rng.index(3),
+        max_depth,
+        k: 1 + rng.index(12),
+        d_rmax: rng.index(4).min(max_depth),
+        ..Default::default()
+    }
+}
+
+/// Recount every cached statistic from the ground-truth data.
+fn assert_node_invariants(node: &Node, d: &Dataset) {
+    match node {
+        Node::Leaf(l) => {
+            assert_eq!(l.n as usize, l.ids.len());
+            let pos: u32 = l.ids.iter().map(|&i| d.y(i) as u32).sum();
+            assert_eq!(l.n_pos, pos);
+            for &id in &l.ids {
+                assert!(d.is_alive(id), "leaf holds dead instance {id}");
+            }
+        }
+        Node::Random(r) => {
+            assert_eq!(r.n, r.left.n() + r.right.n());
+            assert_eq!(r.n_pos, r.left.n_pos() + r.right.n_pos());
+            assert_eq!(r.n_left, r.left.n());
+            assert_eq!(r.n_right, r.right.n());
+            assert!(r.n_left > 0 && r.n_right > 0);
+            assert_node_invariants(&r.left, d);
+            assert_node_invariants(&r.right, d);
+        }
+        Node::Greedy(g) => {
+            assert_eq!(g.n, g.left.n() + g.right.n());
+            assert_eq!(g.n_pos, g.left.n_pos() + g.right.n_pos());
+            let mut ids = Vec::new();
+            node.collect_ids(None, &mut ids);
+            for a in &g.attrs {
+                assert!(!a.thresholds.is_empty());
+                for t in &a.thresholds {
+                    assert!(t.is_valid(), "invalid threshold survived an update");
+                    let mut nl = 0u32;
+                    let mut nlp = 0u32;
+                    let mut clo = 0u32;
+                    let mut clop = 0u32;
+                    let mut chi = 0u32;
+                    let mut chip = 0u32;
+                    for &i in &ids {
+                        let x = d.x(i, a.attr);
+                        let y = d.y(i) as u32;
+                        if x <= t.v {
+                            nl += 1;
+                            nlp += y;
+                        }
+                        if x == t.v_low {
+                            clo += 1;
+                            clop += y;
+                        } else if x == t.v_high {
+                            chi += 1;
+                            chip += y;
+                        }
+                    }
+                    assert_eq!(t.n_left, nl);
+                    assert_eq!(t.n_left_pos, nlp);
+                    assert_eq!(t.n_low, clo);
+                    assert_eq!(t.n_low_pos, clop);
+                    assert_eq!(t.n_high, chi);
+                    assert_eq!(t.n_high_pos, chip);
+                }
+            }
+            assert_node_invariants(&g.left, d);
+            assert_node_invariants(&g.right, d);
+        }
+    }
+}
+
+#[test]
+fn prop_forest_invariants_under_random_deletion_streams() {
+    check_sized(
+        "forest invariants under deletions",
+        Config {
+            cases: 20,
+            base_seed: 0xF0_01,
+        },
+        150,
+        |rng, size| {
+            let n = size + 10;
+            let p = 1 + rng.index(6);
+            let data = random_dataset(rng, n, p);
+            let params = random_params(rng);
+            let mut forest = DareForest::fit(data, &params, rng.next_u64());
+            let deletions = rng.index(n);
+            for _ in 0..deletions {
+                let live = forest.live_ids();
+                if live.len() <= 1 {
+                    break;
+                }
+                let id = live[rng.index(live.len())];
+                forest.delete_seq(id).unwrap();
+            }
+            for tree in forest.trees() {
+                assert_eq!(tree.root.n() as usize, forest.n_alive());
+                assert_node_invariants(&tree.root, forest.data());
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_forest_invariants_under_mixed_add_delete() {
+    check_sized(
+        "forest invariants under add+delete",
+        Config {
+            cases: 15,
+            base_seed: 0xF0_02,
+        },
+        100,
+        |rng, size| {
+            let n = size + 10;
+            let p = 1 + rng.index(5);
+            let data = random_dataset(rng, n, p);
+            let params = random_params(rng);
+            let mut forest = DareForest::fit(data, &params, rng.next_u64());
+            for _ in 0..30 {
+                if rng.bernoulli(0.5) && forest.n_alive() > 2 {
+                    let live = forest.live_ids();
+                    let id = live[rng.index(live.len())];
+                    forest.delete_seq(id).unwrap();
+                } else {
+                    let row: Vec<f32> = (0..p).map(|_| rng.range_f32(-5.0, 5.0)).collect();
+                    forest.add(&row, rng.bernoulli(0.5) as u8);
+                }
+            }
+            for tree in forest.trees() {
+                assert_node_invariants(&tree.root, forest.data());
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_predictions_always_probabilities() {
+    check(
+        "predictions in [0,1]",
+        Config {
+            cases: 25,
+            base_seed: 0xF0_03,
+        },
+        |rng| {
+            let n = 20 + rng.index(80);
+            let p = 1 + rng.index(4);
+            let data = random_dataset(rng, n, p);
+            let params = random_params(rng);
+            let forest = DareForest::fit(data, &params, rng.next_u64());
+            for _ in 0..10 {
+                let row: Vec<f32> = (0..forest.data().n_features())
+                    .map(|_| rng.range_f32(-100.0, 100.0))
+                    .collect();
+                let p = forest.predict_proba(&row);
+                assert!((0.0..=1.0).contains(&p), "p={p}");
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_delete_cost_dry_run_never_mutates() {
+    check(
+        "delete_cost is pure",
+        Config {
+            cases: 15,
+            base_seed: 0xF0_04,
+        },
+        |rng| {
+            let n = 30 + rng.index(100);
+            let p = 2 + rng.index(4);
+            let data = random_dataset(rng, n, p);
+            let params = random_params(rng);
+            let forest = DareForest::fit(data, &params, rng.next_u64());
+            let probe: Vec<f32> = (0..forest.data().n_features())
+                .map(|_| rng.range_f32(-5.0, 5.0))
+                .collect();
+            let before = forest.predict_proba(&probe);
+            for id in forest.live_ids().into_iter().take(20) {
+                let _ = forest.delete_cost(id);
+            }
+            assert_eq!(forest.predict_proba(&probe), before);
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator invariants: routing, batching, state.
+// ---------------------------------------------------------------------------
+
+fn service_with(n: usize, rng: &mut Rng) -> std::sync::Arc<UnlearningService> {
+    let data = random_dataset(rng, n, 4);
+    let forest = DareForest::fit(
+        data,
+        &Params {
+            n_trees: 2,
+            max_depth: 5,
+            k: 5,
+            ..Default::default()
+        },
+        rng.next_u64(),
+    );
+    UnlearningService::new(
+        forest,
+        ServiceConfig {
+            batch_window: Duration::from_millis(1),
+            use_pjrt: false,
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn prop_coordinator_state_consistent_under_request_interleavings() {
+    check_sized(
+        "coordinator state under interleavings",
+        Config {
+            cases: 12,
+            base_seed: 0xC0_01,
+        },
+        60,
+        |rng, size| {
+            let n = size + 20;
+            let svc = service_with(n, rng);
+            let p = svc.forest().read().unwrap().data().n_features();
+            let mut expected_alive = n as i64;
+            let mut deleted: std::collections::BTreeSet<u32> = Default::default();
+            for _ in 0..25 {
+                match rng.index(4) {
+                    0 => {
+                        // delete a random id (maybe dead/out of range)
+                        let id = rng.index(n + 5) as u32;
+                        let r = svc.handle(
+                            &parse(&format!(r#"{{"op":"delete","ids":[{id}]}}"#)).unwrap(),
+                        );
+                        if r.get("ok").and_then(Value::as_bool) == Some(true) {
+                            let d = r.get("deleted").unwrap().as_u64().unwrap();
+                            if d == 1 && deleted.insert(id) {
+                                expected_alive -= 1;
+                            }
+                            // routing invariant: a dead/bogus id is skipped,
+                            // never double-deleted
+                            if deleted.contains(&id) && d == 1 {
+                            } else {
+                                assert_eq!(
+                                    r.get("skipped").unwrap().as_u64(),
+                                    Some(1),
+                                    "dead id must be reported skipped"
+                                );
+                            }
+                        }
+                    }
+                    1 => {
+                        // add
+                        let row = vec!["0.5"; p].join(",");
+                        let r = svc.handle(
+                            &parse(&format!(r#"{{"op":"add","row":[{row}],"label":0}}"#))
+                                .unwrap(),
+                        );
+                        assert_eq!(r.get("ok").and_then(Value::as_bool), Some(true));
+                        expected_alive += 1;
+                    }
+                    2 => {
+                        // predict never changes state
+                        let row = vec!["1.0"; p].join(",");
+                        let r = svc.handle(
+                            &parse(&format!(r#"{{"op":"predict","rows":[[{row}]]}}"#)).unwrap(),
+                        );
+                        assert_eq!(r.get("ok").and_then(Value::as_bool), Some(true));
+                    }
+                    _ => {
+                        let r = svc.handle(&parse(r#"{"op":"stats"}"#).unwrap());
+                        assert_eq!(
+                            r.get("n_alive").and_then(Value::as_u64),
+                            Some(expected_alive as u64),
+                            "stats must report exact live count"
+                        );
+                    }
+                }
+                // global state invariant after every request
+                let f = svc.forest().read().unwrap();
+                assert_eq!(f.n_alive() as i64, expected_alive);
+                for tree in f.trees() {
+                    assert_eq!(tree.root.n() as i64, expected_alive);
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_coordinator_batching_equivalent_to_sequential() {
+    // Deleting a set through concurrent batched requests must leave exactly
+    // the same live-id set as deleting sequentially.
+    check(
+        "batching equivalence",
+        Config {
+            cases: 8,
+            base_seed: 0xC0_02,
+        },
+        |rng| {
+            let n = 60 + rng.index(60);
+            let mut seed_rng = Rng::new(rng.next_u64());
+            let svc_batched = service_with(n, &mut seed_rng.clone());
+            let svc_seq = service_with(n, &mut seed_rng);
+            let n_victims = 10 + rng.index(20);
+            let victims: Vec<u32> = rng
+                .sample_indices(n, n_victims)
+                .into_iter()
+                .map(|i| i as u32)
+                .collect();
+
+            // batched: concurrent single-id requests
+            let svc2 = std::sync::Arc::clone(&svc_batched);
+            let handles: Vec<_> = victims
+                .iter()
+                .map(|&id| {
+                    let svc = std::sync::Arc::clone(&svc2);
+                    std::thread::spawn(move || {
+                        svc.handle(&parse(&format!(r#"{{"op":"delete","ids":[{id}]}}"#)).unwrap())
+                    })
+                })
+                .collect();
+            for h in handles {
+                let r = h.join().unwrap();
+                assert_eq!(r.get("ok").and_then(Value::as_bool), Some(true));
+            }
+
+            // sequential
+            for &id in &victims {
+                svc_seq.handle(&parse(&format!(r#"{{"op":"delete","ids":[{id}]}}"#)).unwrap());
+            }
+
+            let a = svc_batched.forest().read().unwrap().live_ids();
+            let b = svc_seq.forest().read().unwrap().live_ids();
+            assert_eq!(a, b, "batched and sequential deletion must agree on state");
+        },
+    );
+}
