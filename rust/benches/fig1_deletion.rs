@@ -1,5 +1,8 @@
 //! Bench: Figure 1 / Table 2 — end-to-end deletion efficiency on a
 //! representative slice of the corpus, plus per-deletion latency micro-bench.
+//! Subtree retrains triggered by threshold invalidation now run through the
+//! sort-free training workspace (DESIGN.md §6); the micro suite is mirrored
+//! to `BENCH_fig1_deletion.json` at the repo root for cross-PR tracking.
 //!
 //! Env knobs: DARE_BENCH_SCALE (default 2000), DARE_BENCH_DATASETS
 //! (comma list, default ctr,twitter,credit_card), DARE_BENCH_CRITERION.
@@ -74,6 +77,9 @@ fn main() {
         },
     );
     suite.save_json().ok();
+    let root_json =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_fig1_deletion.json");
+    suite.save_json_to(&root_json).ok();
 
     // ---- end-to-end: the paper's speedup grid on the selected slice -------
     let cfg = ExpConfig {

@@ -1,12 +1,16 @@
 //! Bench: L3 hot paths — split-criterion scoring, threshold enumeration,
-//! node training, single-tree deletion, prediction. The profiling anchors
-//! for EXPERIMENTS.md §Perf.
+//! node training (seed gather+sort path vs. sort-free workspace), single-tree
+//! deletion, prediction. The profiling anchors for the perf trajectory:
+//! besides the human-readable report this emits `BENCH_hot_paths.json` at the
+//! repo root (suite name + ns/iter per case) so future PRs can diff perf.
 
 use dare::bench::{BenchConfig, Suite};
 use dare::data::synth::{generate, SynthSpec};
 use dare::forest::criterion::{entropy, gini};
-use dare::forest::stats::enumerate_valid;
+use dare::forest::stats::{enumerate_valid, enumerate_valid_presorted};
+use dare::forest::train::{train, TrainCtx, ROOT_PATH};
 use dare::forest::tree::DareTree;
+use dare::forest::workspace::train_subtree;
 use dare::forest::Params;
 use dare::util::rng::Rng;
 
@@ -51,6 +55,16 @@ fn main() {
         let mut p = pairs.clone();
         std::hint::black_box(enumerate_valid(&mut p).len());
     });
+    // the workspace's linear-scan twin over an already-sorted run
+    let scan_col: Vec<f32> = pairs.iter().map(|&(v, _)| v).collect();
+    let scan_labels: Vec<u8> = pairs.iter().map(|&(_, y)| y).collect();
+    let mut scan_run: Vec<u32> = (0..4096u32).collect();
+    scan_run.sort_unstable_by(|&a, &b| scan_col[a as usize].total_cmp(&scan_col[b as usize]));
+    suite.run("enumerate_valid_presorted n=4096", quick, || {
+        std::hint::black_box(
+            enumerate_valid_presorted(&scan_col, &scan_labels, &scan_run).len(),
+        );
+    });
     pairs.truncate(256);
     suite.run("enumerate_valid n=256", quick, || {
         let mut p = pairs.clone();
@@ -58,9 +72,11 @@ fn main() {
     });
 
     // --- single-tree operations -------------------------------------------
+    // n=4096 synthetic case: the acceptance anchor for node training and
+    // single-tree deletion.
     let data = generate(
         &SynthSpec {
-            n: 4000,
+            n: 4096,
             informative: 5,
             redundant: 3,
             noise: 8,
@@ -75,12 +91,31 @@ fn main() {
         k: 10,
         ..Default::default()
     };
-    suite.run("DareTree::fit n=4000 p=16 d=12", BenchConfig {
+    let fit_cfg = BenchConfig {
         target_seconds: 3.0,
         min_iters: 5,
         max_iters: 50,
         warmup_iters: 1,
-    }, || {
+    };
+    // head-to-head: seed gather+sort path vs. the sort-free workspace
+    // (bit-exact results; see tests/workspace_exactness.rs)
+    suite.run("train seed-path n=4096 p=16 d=12", fit_cfg, || {
+        let ctx = TrainCtx {
+            data: &data,
+            params: &params,
+            tree_seed: 7,
+        };
+        std::hint::black_box(train(&ctx, data.live_ids(), 0, ROOT_PATH).shape());
+    });
+    suite.run("train workspace n=4096 p=16 d=12", fit_cfg, || {
+        let ctx = TrainCtx {
+            data: &data,
+            params: &params,
+            tree_seed: 7,
+        };
+        std::hint::black_box(train_subtree(&ctx, data.live_ids(), 0, ROOT_PATH).shape());
+    });
+    suite.run("DareTree::fit n=4096 p=16 d=12", fit_cfg, || {
         std::hint::black_box(DareTree::fit(&data, &params, 7).shape());
     });
 
@@ -116,4 +151,13 @@ fn main() {
     });
 
     suite.save_json().ok();
+    // machine-readable perf trajectory at the repo root (CARGO_MANIFEST_DIR
+    // is rust/, so ".." is the repo root regardless of the bench's cwd)
+    let root_json =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hot_paths.json");
+    if let Err(e) = suite.save_json_to(&root_json) {
+        eprintln!("warning: could not write {}: {e}", root_json.display());
+    } else {
+        println!("wrote {}", root_json.display());
+    }
 }

@@ -14,7 +14,13 @@ fn main() {
         return;
     };
     let manifest = Manifest::load(&dir).expect("manifest");
-    let engine = Engine::global().expect("pjrt engine");
+    let engine = match Engine::global() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("pjrt engine unavailable — {e}");
+            return;
+        }
+    };
     let mut suite = Suite::new("runtime pjrt");
     let quick = BenchConfig {
         target_seconds: 2.0,

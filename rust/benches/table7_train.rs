@@ -1,6 +1,9 @@
 //! Bench: Table 7 — G-DaRE training time across the corpus; also compares
 //! DaRE training against the lean standard-RF baseline (Theorem 3.2: the
-//! statistics overhead should be a small constant factor).
+//! statistics overhead should be a small constant factor). Forest fitting
+//! now runs through the sort-free training workspace (DESIGN.md §6); the
+//! micro suite is mirrored to `BENCH_table7_train.json` at the repo root
+//! for cross-PR perf tracking.
 
 use dare::baselines::simple::{BaselineForest, BaselineParams};
 use dare::bench::{BenchConfig, Suite};
@@ -50,4 +53,7 @@ fn main() {
         std::hint::black_box(f.n_trees());
     });
     suite.save_json().ok();
+    let root_json =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_table7_train.json");
+    suite.save_json_to(&root_json).ok();
 }

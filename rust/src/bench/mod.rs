@@ -50,6 +50,12 @@ impl BenchResult {
             f64::INFINITY
         }
     }
+
+    /// Mean nanoseconds per iteration — the unit the cross-PR perf
+    /// trajectory (BENCH_*.json at the repo root) is tracked in.
+    pub fn ns_per_iter(&self) -> f64 {
+        self.mean_s * 1e9
+    }
     pub fn render(&self) -> String {
         format!(
             "{:<44} time: [{} {} {}]  p95: {}  ({} iters)",
@@ -113,14 +119,15 @@ impl Suite {
         self.results.last().unwrap()
     }
 
-    /// Write results to results/bench_<title>.json.
-    pub fn save_json(&self) -> anyhow::Result<std::path::PathBuf> {
+    /// The suite as a JSON value: suite name plus per-case stats, with
+    /// `ns_per_iter` as the headline number for cross-PR tracking.
+    pub fn to_json(&self) -> crate::util::json::Value {
         use crate::util::json::Value;
-        std::fs::create_dir_all("results")?;
         let mut arr = Vec::new();
         for r in &self.results {
             let mut o = Value::obj();
             o.set("name", r.name.as_str())
+                .set("ns_per_iter", r.ns_per_iter())
                 .set("iters", r.iters)
                 .set("mean_s", r.mean_s)
                 .set("std_s", r.std_s)
@@ -132,12 +139,32 @@ impl Suite {
         let mut top = Value::obj();
         top.set("suite", self.title.as_str())
             .set("results", Value::Arr(arr));
+        top
+    }
+
+    /// Write results to results/bench_<title>.json.
+    pub fn save_json(&self) -> anyhow::Result<std::path::PathBuf> {
+        std::fs::create_dir_all("results")?;
         let path = std::path::PathBuf::from(format!(
             "results/bench_{}.json",
             self.title.replace([' ', '/'], "_")
         ));
-        std::fs::write(&path, top.to_pretty())?;
+        std::fs::write(&path, self.to_json().to_pretty())?;
         Ok(path)
+    }
+
+    /// Write the machine-readable dump to an explicit path — used by the
+    /// bench binaries to refresh the `BENCH_<suite>.json` perf-trajectory
+    /// files at the repo root.
+    pub fn save_json_to<P: AsRef<std::path::Path>>(&self, path: P) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_pretty())?;
+        Ok(())
     }
 }
 
@@ -184,6 +211,41 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("sleepless"));
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn suite_saves_json_to_explicit_path() {
+        let mut s = Suite::new("explicit path");
+        s.run(
+            "case",
+            BenchConfig {
+                warmup_iters: 0,
+                min_iters: 2,
+                max_iters: 2,
+                target_seconds: 0.001,
+            },
+            || {},
+        );
+        let path = std::env::temp_dir().join("dare_bench_explicit.json");
+        s.save_json_to(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("ns_per_iter"));
+        assert!(text.contains("explicit path"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn ns_per_iter_scales_mean() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_s: 0.5e-6,
+            std_s: 0.0,
+            p50_s: 0.0,
+            p95_s: 0.0,
+            min_s: 0.0,
+        };
+        assert!((r.ns_per_iter() - 500.0).abs() < 1e-9);
     }
 
     #[test]

@@ -113,6 +113,14 @@ impl Dataset {
         &self.cols[j]
     }
 
+    /// All labels as a slice (`labels()[i]` is the label of instance `i`;
+    /// includes dead rows). The training workspace's linear scans read
+    /// through this directly instead of per-element `y(i)` calls.
+    #[inline]
+    pub fn labels(&self) -> &[u8] {
+        &self.labels
+    }
+
     /// Row-major copy of instance `i`.
     pub fn row(&self, i: InstanceId) -> Vec<f32> {
         (0..self.n_features()).map(|j| self.x(i, j)).collect()

@@ -19,8 +19,9 @@ use crate::forest::criterion::split_score;
 use crate::forest::node::Node;
 use crate::forest::stats::{enumerate_valid, resample_invalid, sample_thresholds, AttrStats};
 use crate::forest::train::{
-    child_path, gather_pairs, make_leaf, partition, select_best, train, TrainCtx,
+    child_path, gather_pairs, make_leaf, partition, select_best, TrainCtx,
 };
+use crate::forest::workspace::train_subtree;
 use crate::util::rng::{mix_seed, Rng};
 
 /// One subtree-retrain event (for Fig. 2's cost-by-depth histogram).
@@ -136,11 +137,12 @@ fn delete_random(
     if needs_retrain {
         // Threshold no longer inside [a_min, a_max): retrain this node with
         // its path seed — identical to scratch training on the updated data
-        // (Alg. 2 lines 10–17, derandomized; DESIGN.md §5).
+        // (Alg. 2 lines 10–17, derandomized; DESIGN.md §5). Retraining goes
+        // through the sort-free workspace (DESIGN.md §6).
         let mut ids = Vec::with_capacity(n_new as usize);
         node.collect_ids(Some(id), &mut ids);
         report.retrain_events.push(RetrainEvent { depth, n: n_new });
-        *node = train(ctx, ids, depth, path);
+        *node = train_subtree(ctx, ids, depth, path);
         return;
     }
 
@@ -277,8 +279,8 @@ fn delete_greedy(
         report.retrain_events.push(RetrainEvent { depth, n: n_new });
         let (left_ids, right_ids) = partition(ctx.data, &ids, new_attr, new_v);
         debug_assert!(!left_ids.is_empty() && !right_ids.is_empty());
-        let left = train(ctx, left_ids, depth + 1, child_path(path, depth, false));
-        let right = train(ctx, right_ids, depth + 1, child_path(path, depth, true));
+        let left = train_subtree(ctx, left_ids, depth + 1, child_path(path, depth, false));
+        let right = train_subtree(ctx, right_ids, depth + 1, child_path(path, depth, true));
         let Node::Greedy(g) = node else { unreachable!() };
         g.left = Box::new(left);
         g.right = Box::new(right);
@@ -419,7 +421,7 @@ pub fn add(
                 depth,
                 n: ids.len() as u32,
             });
-            *node = train(ctx, ids, depth, path);
+            *node = train_subtree(ctx, ids, depth, path);
         }
         return;
     }
@@ -503,7 +505,7 @@ pub fn add(
                 depth,
                 n: ids.len() as u32,
             });
-            *node = train(ctx, ids, depth, path);
+            *node = train_subtree(ctx, ids, depth, path);
             return;
         }
     }
@@ -529,8 +531,8 @@ pub fn add(
             n: ids.len() as u32,
         });
         let (left_ids, right_ids) = partition(ctx.data, &ids, new_attr, new_v);
-        let left = train(ctx, left_ids, depth + 1, child_path(path, depth, false));
-        let right = train(ctx, right_ids, depth + 1, child_path(path, depth, true));
+        let left = train_subtree(ctx, left_ids, depth + 1, child_path(path, depth, false));
+        let right = train_subtree(ctx, right_ids, depth + 1, child_path(path, depth, true));
         let Node::Greedy(g) = node else { unreachable!() };
         g.left = Box::new(left);
         g.right = Box::new(right);
@@ -561,7 +563,7 @@ mod tests {
     use crate::data::dataset::Dataset;
     use crate::data::synth::{generate, SynthSpec};
     use crate::forest::params::{MaxFeatures, Params};
-    use crate::forest::train::{count_pos, ROOT_PATH};
+    use crate::forest::train::{count_pos, train, ROOT_PATH};
 
     fn params(d_rmax: usize, k: usize) -> Params {
         Params {

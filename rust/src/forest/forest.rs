@@ -143,26 +143,45 @@ impl DareForest {
         Ok(ForestDeleteReport { per_tree })
     }
 
-    /// Batch deletion (§A.7): applies a set of deletions tree-by-tree.
+    /// Batch deletion (§A.7): applies a set of deletions tree-by-tree, with
+    /// the independently-retrained trees fanned out over the threadpool.
     /// Duplicate or dead ids are skipped and reported.
+    ///
+    /// Equivalent to a sequential id-by-id [`DareForest::delete_seq`] loop:
+    /// tree updates never read the liveness mask (only row values, which are
+    /// immutable), and each tree applies the same deletion sequence with the
+    /// same per-tree epoch order, so the Lemma-A.1 RNG streams — and hence
+    /// the resulting trees — are identical. The mask is updated once at the
+    /// end. Returns one merged [`DeleteReport`] per tree.
     pub fn delete_batch(&mut self, ids: &[InstanceId]) -> (ForestDeleteReport, usize) {
+        // Validate and dedupe up front; liveness cannot change until the
+        // mark-removed pass below, so the filter sees a consistent mask.
         let mut seen = std::collections::BTreeSet::new();
+        let mut accepted: Vec<InstanceId> = Vec::with_capacity(ids.len());
         let mut skipped = 0usize;
-        let mut report = ForestDeleteReport::default();
         for &id in ids {
             if !seen.insert(id)
                 || (id as usize) >= self.data.n_total()
                 || !self.data.is_alive(id)
             {
                 skipped += 1;
-                continue;
-            }
-            match self.delete_seq(id) {
-                Ok(r) => report.per_tree.extend(r.per_tree),
-                Err(_) => skipped += 1,
+            } else {
+                accepted.push(id);
             }
         }
-        (report, skipped)
+        let data = &self.data;
+        let params = &self.params;
+        let per_tree = scope_map_mut(&mut self.trees, params.n_threads, |_, t| {
+            let mut merged = DeleteReport::default();
+            for &id in &accepted {
+                merged.merge(&t.delete(data, params, id));
+            }
+            merged
+        });
+        for &id in &accepted {
+            self.data.mark_removed(id);
+        }
+        (ForestDeleteReport { per_tree }, skipped)
     }
 
     /// Add a fresh training instance to the database and all trees (§6).
@@ -293,6 +312,28 @@ mod tests {
             f1.delete(id).unwrap();
             f2.delete_seq(id).unwrap();
         }
+        for (a, b) in f1.trees().iter().zip(f2.trees()) {
+            assert!(crate::forest::tree::structural_eq(&a.root, &b.root));
+        }
+    }
+
+    #[test]
+    fn parallel_batch_matches_sequential_deletes() {
+        let train = data(240, 10);
+        let par = Params {
+            n_threads: 4,
+            ..small_params(4)
+        };
+        let mut f1 = DareForest::fit(train.clone(), &par, 19);
+        let mut f2 = DareForest::fit(train, &small_params(4), 19);
+        let ids = [5u32, 9, 100, 100, 57, 33, 999_999];
+        let (report, skipped) = f1.delete_batch(&ids);
+        assert_eq!(skipped, 2, "one duplicate + one out-of-range");
+        assert_eq!(report.per_tree.len(), 4, "one merged report per tree");
+        for id in [5u32, 9, 100, 57, 33] {
+            f2.delete_seq(id).unwrap();
+        }
+        assert_eq!(f1.n_alive(), f2.n_alive());
         for (a, b) in f1.trees().iter().zip(f2.trees()) {
             assert!(crate::forest::tree::structural_eq(&a.root, &b.root));
         }

@@ -11,6 +11,7 @@ pub mod serialize;
 pub mod stats;
 pub mod train;
 pub mod tree;
+pub mod workspace;
 
 pub use delete::{DeleteReport, RetrainEvent};
 pub use forest::{DareForest, ForestDeleteReport};

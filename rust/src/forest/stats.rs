@@ -8,7 +8,9 @@
 //! per-boundary-value counts so invalidation is detected in O(1) per deletion
 //! and scores recompute in O(1) without touching the data (Theorem 3.3).
 
+use crate::data::dataset::InstanceId;
 use crate::util::rng::Rng;
+use std::collections::HashSet;
 
 /// Statistics for one candidate threshold of one attribute (§A.6).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -99,6 +101,88 @@ pub struct AttrStats {
     pub thresholds: Vec<ThresholdStats>,
 }
 
+/// One distinct attribute value with its label counts, as seen by the
+/// streaming enumeration.
+#[derive(Clone, Copy)]
+struct Group {
+    v: f32,
+    n: u32,
+    pos: u32,
+}
+
+/// Emit the boundary between two adjacent value-groups if it is valid
+/// (§3.2). `cum_n`/`cum_pos` are the totals over all groups up to and
+/// including `lo`.
+#[inline]
+fn push_boundary(lo: &Group, hi: &Group, cum_n: u32, cum_pos: u32, out: &mut Vec<ThresholdStats>) {
+    let lo_neg = lo.n - lo.pos;
+    let hi_neg = hi.n - hi.pos;
+    let valid = (lo.pos > 0 && hi_neg > 0) || (lo_neg > 0 && hi.pos > 0);
+    if valid {
+        out.push(ThresholdStats {
+            v: midpoint(lo.v, hi.v),
+            v_low: lo.v,
+            v_high: hi.v,
+            n_left: cum_n,
+            n_left_pos: cum_pos,
+            n_low: lo.n,
+            n_low_pos: lo.pos,
+            n_high: hi.n,
+            n_high_pos: hi.pos,
+        });
+    }
+}
+
+/// Streaming core shared by [`enumerate_valid`] and
+/// [`enumerate_valid_presorted`]: consumes (value, label) pairs that must
+/// arrive in value-sorted order and emits the fully-populated stats of every
+/// valid boundary, in value order. One pass, no intermediate group vector —
+/// only the last completed group and the group still accumulating are held.
+///
+/// NaN feature values are skipped outright: NaN never satisfies `x ≤ v`, so
+/// a NaN instance belongs to no left count and can define no boundary — a
+/// NaN-valued midpoint would otherwise produce a split with an empty left
+/// partition.
+fn enumerate_sorted(pairs: impl Iterator<Item = (f32, u8)>) -> Vec<ThresholdStats> {
+    let mut out = Vec::new();
+    let mut prev: Option<Group> = None; // last completed value-group
+    let mut cur: Option<Group> = None; // group still accumulating
+    let mut cum_n = 0u32; // totals over groups completed before `prev`
+    let mut cum_pos = 0u32;
+    for (v, y) in pairs {
+        if v.is_nan() {
+            continue;
+        }
+        match cur.as_mut() {
+            Some(g) if g.v == v => {
+                g.n += 1;
+                g.pos += y as u32;
+            }
+            _ => {
+                if let Some(done) = cur.take() {
+                    if let Some(p) = prev.take() {
+                        cum_n += p.n;
+                        cum_pos += p.pos;
+                        push_boundary(&p, &done, cum_n, cum_pos, &mut out);
+                    }
+                    prev = Some(done);
+                }
+                cur = Some(Group {
+                    v,
+                    n: 1,
+                    pos: y as u32,
+                });
+            }
+        }
+    }
+    if let (Some(p), Some(done)) = (prev, cur) {
+        cum_n += p.n;
+        cum_pos += p.pos;
+        push_boundary(&p, &done, cum_n, cum_pos, &mut out);
+    }
+    out
+}
+
 /// Enumerate ALL valid thresholds of one attribute over `pairs`
 /// (value, label) — O(m log m). Returns fully-populated stats, sorted by v.
 pub fn enumerate_valid(pairs: &mut Vec<(f32, u8)>) -> Vec<ThresholdStats> {
@@ -106,56 +190,32 @@ pub fn enumerate_valid(pairs: &mut Vec<(f32, u8)>) -> Vec<ThresholdStats> {
         return Vec::new();
     }
     // total_cmp avoids the partial_cmp Option in the hot sort (§Perf); NaNs
-    // would sort to the end and produce no valid candidates rather than
-    // panicking, which matches "no usable threshold" semantics.
+    // sort to the run's ends (negative NaNs first, positive last) and are
+    // then skipped by the streaming core, so they never form thresholds.
     pairs.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
-    // group by distinct value
-    struct Group {
-        v: f32,
-        n: u32,
-        pos: u32,
+    enumerate_sorted(pairs.iter().copied())
+}
+
+/// Enumerate valid thresholds over a run of instance ids that is already
+/// sorted by the attribute — the sort-free workspace path (DESIGN.md §6).
+/// `run` must be ordered by `col[id]` under `total_cmp`; the output is
+/// bit-identical to [`enumerate_valid`] on the same instance multiset, in
+/// O(m) with no sort and no intermediate allocation.
+pub fn enumerate_valid_presorted(
+    col: &[f32],
+    labels: &[u8],
+    run: &[InstanceId],
+) -> Vec<ThresholdStats> {
+    if run.len() < 2 {
+        return Vec::new();
     }
-    let mut groups: Vec<Group> = Vec::new();
-    for &(v, y) in pairs.iter() {
-        match groups.last_mut() {
-            Some(g) if g.v == v => {
-                g.n += 1;
-                g.pos += y as u32;
-            }
-            _ => groups.push(Group {
-                v,
-                n: 1,
-                pos: y as u32,
-            }),
-        }
-    }
-    let mut out = Vec::new();
-    let mut cum_n = 0u32;
-    let mut cum_pos = 0u32;
-    for w in 0..groups.len().saturating_sub(1) {
-        let lo = &groups[w];
-        let hi = &groups[w + 1];
-        cum_n += lo.n;
-        cum_pos += lo.pos;
-        let lo_neg = lo.n - lo.pos;
-        let hi_neg = hi.n - hi.pos;
-        let valid = (lo.pos > 0 && hi_neg > 0) || (lo_neg > 0 && hi.pos > 0);
-        if valid {
-            let v = midpoint(lo.v, hi.v);
-            out.push(ThresholdStats {
-                v,
-                v_low: lo.v,
-                v_high: hi.v,
-                n_left: cum_n,
-                n_left_pos: cum_pos,
-                n_low: lo.n,
-                n_low_pos: lo.pos,
-                n_high: hi.n,
-                n_high_pos: hi.pos,
-            });
-        }
-    }
-    out
+    debug_assert!(
+        run.windows(2).all(|w| {
+            col[w[0] as usize].total_cmp(&col[w[1] as usize]) != std::cmp::Ordering::Greater
+        }),
+        "presorted run is not value-sorted"
+    );
+    enumerate_sorted(run.iter().map(|&i| (col[i as usize], labels[i as usize])))
 }
 
 /// Midpoint of two adjacent float values, guaranteed to satisfy
@@ -184,6 +244,13 @@ pub fn sample_thresholds(candidates: Vec<ThresholdStats>, k: usize, rng: &mut Rn
         .collect()
 }
 
+/// Bit-key of a threshold value for set membership: normalizes −0.0 to +0.0
+/// so the key relation matches float `==` on the stored values.
+#[inline]
+fn threshold_key(v: f32) -> u32 {
+    (v + 0.0).to_bits()
+}
+
 /// Resample invalidated thresholds after a deletion (Lemma A.1): keep the
 /// still-valid stored thresholds, and replace the invalid ones by sampling
 /// uniformly from the valid-and-unselected candidates. `candidates` must be
@@ -202,11 +269,16 @@ pub fn resample_invalid(
     let kept = stored.len();
     let dropped = before - kept;
 
-    // pool = candidates not currently stored (match on the threshold value;
-    // midpoints are recomputed bit-identically from the same adjacent values)
+    // pool = candidates not currently stored, tested against a bit-key set
+    // of the stored threshold values — O(k + |candidates|) instead of the
+    // former O(k·|candidates|) nested scan. Midpoints are recomputed
+    // bit-identically from the same adjacent values, so bit-key membership
+    // coincides with float `==` (−0.0 is normalized; NaN thresholds cannot
+    // arise from midpoints of real data values).
+    let stored_keys: HashSet<u32> = stored.iter().map(|s| threshold_key(s.v)).collect();
     let pool: Vec<&ThresholdStats> = candidates
         .iter()
-        .filter(|c| !stored.iter().any(|s| s.v == c.v))
+        .filter(|c| !stored_keys.contains(&threshold_key(c.v)))
         .collect();
     let target = k.min(kept + pool.len());
     let need = target.saturating_sub(kept);
@@ -362,6 +434,62 @@ mod tests {
         vs.sort_unstable();
         vs.dedup();
         assert_eq!(vs.len(), 3, "no duplicate thresholds");
+    }
+
+    #[test]
+    fn presorted_matches_gathered_enumeration() {
+        // random-ish column with duplicates; labels alternate with runs
+        let mut rng = Rng::new(8);
+        let n = 200usize;
+        let col: Vec<f32> = (0..n).map(|_| (rng.index(40) as f32) * 0.5 - 3.0).collect();
+        let labels: Vec<u8> = (0..n).map(|_| rng.bernoulli(0.45) as u8).collect();
+        // pick an arbitrary subset as the "node"
+        let ids: Vec<InstanceId> = (0..n as u32).filter(|i| i % 3 != 1).collect();
+        let mut run = ids.clone();
+        run.sort_unstable_by(|&a, &b| col[a as usize].total_cmp(&col[b as usize]));
+        let by_scan = enumerate_valid_presorted(&col, &labels, &run);
+        let mut pairs: Vec<(f32, u8)> = ids
+            .iter()
+            .map(|&i| (col[i as usize], labels[i as usize]))
+            .collect();
+        let by_sort = enumerate_valid(&mut pairs);
+        assert_eq!(by_scan.len(), by_sort.len());
+        for (a, b) in by_scan.iter().zip(&by_sort) {
+            assert_eq!(a, b, "presorted enumeration diverged");
+        }
+    }
+
+    #[test]
+    fn presorted_trivial_runs_empty() {
+        let col = [1.0f32, 2.0];
+        let labels = [0u8, 1];
+        assert!(enumerate_valid_presorted(&col, &labels, &[]).is_empty());
+        assert!(enumerate_valid_presorted(&col, &labels, &[1]).is_empty());
+        let both = enumerate_valid_presorted(&col, &labels, &[0, 1]);
+        assert_eq!(both.len(), 1);
+        assert_eq!(both[0].v, 1.5);
+    }
+
+    #[test]
+    fn nan_values_never_form_thresholds() {
+        // NaNs sort to the ends under total_cmp; they must be excluded from
+        // boundaries AND from left counts (x ≤ v is false for NaN, so the
+        // partition would never route them left).
+        let mut p = pairs(&[(f32::NAN, 1), (1.0, 0), (2.0, 1), (-f32::NAN, 0)]);
+        let c = enumerate_valid(&mut p);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].v, 1.5);
+        assert_eq!(c[0].n_left, 1);
+        assert_eq!(c[0].n_high_pos, 1);
+        // all-NaN column: no candidates at all
+        let mut all_nan = pairs(&[(f32::NAN, 0), (f32::NAN, 1)]);
+        assert!(enumerate_valid(&mut all_nan).is_empty());
+    }
+
+    #[test]
+    fn threshold_key_normalizes_signed_zero() {
+        assert_eq!(threshold_key(-0.0), threshold_key(0.0));
+        assert_ne!(threshold_key(1.0), threshold_key(2.0));
     }
 
     #[test]

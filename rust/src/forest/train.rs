@@ -138,10 +138,13 @@ fn train_random(
     rng.shuffle(&mut order);
     let mut chosen: Option<(usize, f32, f32)> = None;
     for attr in order {
+        // Read through the column slice directly (like `gather_pairs`)
+        // instead of per-element `x(i, attr)` double-indexing.
+        let col = ctx.data.col(attr);
         let mut lo = f32::INFINITY;
         let mut hi = f32::NEG_INFINITY;
         for &i in &ids {
-            let v = ctx.data.x(i, attr);
+            let v = col[i as usize];
             if v < lo {
                 lo = v;
             }

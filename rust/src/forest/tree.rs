@@ -4,7 +4,8 @@ use crate::data::dataset::{Dataset, InstanceId};
 use crate::forest::delete::{add, delete, delete_cost, DeleteReport};
 use crate::forest::node::{Node, NodeMemory, TreeShape};
 use crate::forest::params::Params;
-use crate::forest::train::{train, TrainCtx, ROOT_PATH};
+use crate::forest::train::{TrainCtx, ROOT_PATH};
+use crate::forest::workspace::train_tree;
 
 /// One DaRE tree plus its seed and update counter.
 #[derive(Clone, Debug)]
@@ -17,16 +18,11 @@ pub struct DareTree {
 }
 
 impl DareTree {
-    /// Train on the live instances of `data` (paper Alg. 1).
+    /// Train on the live instances of `data` (paper Alg. 1), via the
+    /// sort-free workspace (bit-exact with the plain path; DESIGN.md §6).
     pub fn fit(data: &Dataset, params: &Params, tree_seed: u64) -> Self {
-        let ctx = TrainCtx {
-            data,
-            params,
-            tree_seed,
-        };
-        let root = train(&ctx, data.live_ids(), 0, ROOT_PATH);
         DareTree {
-            root,
+            root: train_tree(data, params, tree_seed),
             tree_seed,
             epoch: 0,
         }

@@ -1,0 +1,484 @@
+//! Sort-free training workspace (DESIGN.md §6).
+//!
+//! The seed training path (`train.rs`) re-gathers and re-sorts every sampled
+//! attribute at **every** greedy node — an O(depth · p̃ · m log m) cascade of
+//! redundant sorts plus a fresh `Vec` per gather. This module removes both:
+//!
+//! 1. **Presorted columns.** Each feature column is sorted *once* per
+//!    (sub)tree: `cols[j]` holds the node's instance ids ordered by attribute
+//!    `j` under `f32::total_cmp`. A node occupies the same index range
+//!    `[lo, hi)` in all `p` orderings, and splitting a node stably partitions
+//!    every ordering in place, so both children inherit value-sorted runs.
+//!    Threshold enumeration then becomes a linear scan
+//!    ([`crate::forest::stats::enumerate_valid_presorted`]) instead of a
+//!    gather + `sort_unstable` per attribute per node.
+//! 2. **Reusable scratch buffers.** The id orderings, the stable-partition
+//!    scratch vector, and the goes-left byte mask are owned by a
+//!    thread-local [`TrainWorkspace`] and recycled across nodes, trees and
+//!    subtree retrains — no per-node `Vec` churn.
+//!
+//! **Exactness invariant** (enforced by `tests/workspace_exactness.rs`):
+//! trees built here are `structural_eq` to the seed path's. This holds
+//! because (a) node RNG streams are keyed by `(tree_seed, node_path)` and
+//! both paths consume draws in the same order, (b) a stably-partitioned
+//! subset of a `total_cmp`-sorted run is itself `total_cmp`-sorted, so the
+//! per-attribute (value, label) group sequence — and therefore every
+//! candidate-threshold list — is bit-identical to gather + sort, and (c) the
+//! split predicate `x ≤ v` partitions the same instance sets. Leaf id
+//! *order* differs (value order vs. arrival order), which `structural_eq`
+//! deliberately ignores.
+
+use std::cell::RefCell;
+
+use crate::data::dataset::{Dataset, InstanceId};
+use crate::forest::node::{GreedyNode, Node, RandomNode};
+use crate::forest::params::Params;
+use crate::forest::stats::{enumerate_valid_presorted, sample_thresholds, AttrStats};
+use crate::forest::train::{
+    child_path, count_pos, make_leaf, node_rng, select_best, train, TrainCtx, ROOT_PATH,
+};
+
+/// Below this many instances the plain gather+sort path always wins: the
+/// workspace setup costs p column sorts, which only amortize over a deep
+/// enough recursion. Both paths are bit-exact, so the gate (see
+/// [`workspace_pays`]) is a pure heuristic — the deletion path's many tiny
+/// subtree retrains take the plain route.
+pub const WORKSPACE_CUTOFF: usize = 64;
+
+/// Retained-buffer bound: after a build whose buffers exceed this many
+/// elements, the thread-local workspace is dropped instead of cached, so
+/// paper-scale fits (p·n can reach hundreds of MB) don't stay pinned in
+/// thread-local storage for the thread's lifetime. ~16 MB of u32 ids.
+const RETAIN_ELEMS: usize = 1 << 22;
+
+/// Does presorting pay for this job? The workspace sorts ALL p columns once
+/// (O(p·m log m)); the seed path sorts only the p̃ sampled columns, but at
+/// every level (O(p̃·m log m) per level). The crossover is a recursion depth
+/// of ~p/p̃, so wide datasets with `MaxFeatures::Sqrt` need a deeper (≈
+/// larger) subtree before the workspace wins. Purely a perf heuristic —
+/// both paths produce `structural_eq` trees.
+fn workspace_pays(m: usize, p: usize, depth: usize, params: &Params) -> bool {
+    if m < WORKSPACE_CUTOFF || p == 0 {
+        return false;
+    }
+    let p_tilde = params.max_features.resolve(p);
+    let remaining = params.max_depth.saturating_sub(depth).max(1);
+    let depth_est = ((usize::BITS - m.leading_zeros()) as usize).min(remaining);
+    depth_est >= p / p_tilde
+}
+
+/// Reusable per-thread training state: presorted per-attribute id orderings
+/// plus the scratch buffers of the stable partition.
+///
+/// Buffer ownership (DESIGN.md §6): one workspace per OS thread, held in a
+/// thread-local and borrowed for the duration of one (sub)tree build. The
+/// recursion works entirely inside `[lo, hi)` index ranges of the shared
+/// orderings, so no per-node allocation is needed; `mask` is indexed by
+/// global instance id and only ever read after being written for the node at
+/// hand, so it is never cleared.
+#[derive(Debug, Default)]
+pub struct TrainWorkspace {
+    /// `cols[j][lo..hi]` = ids of the current node, sorted by attribute `j`
+    /// (`total_cmp` order). All attributes hold the same id multiset per
+    /// node range.
+    cols: Vec<Vec<InstanceId>>,
+    /// Stable-partition staging area (sized to the root segment).
+    scratch: Vec<InstanceId>,
+    /// Goes-left flags of the split being applied, indexed by instance id.
+    mask: Vec<u8>,
+}
+
+impl TrainWorkspace {
+    pub fn new() -> Self {
+        TrainWorkspace::default()
+    }
+
+    /// Load `ids` and sort them by every attribute — the single O(p·m log m)
+    /// sort this whole (sub)tree build will perform.
+    fn prepare(&mut self, data: &Dataset, ids: &[InstanceId]) {
+        let p = data.n_features();
+        self.cols.resize_with(p, Vec::new);
+        for (j, ordering) in self.cols.iter_mut().enumerate() {
+            let col = data.col(j);
+            ordering.clear();
+            ordering.extend_from_slice(ids);
+            ordering.sort_unstable_by(|&a, &b| col[a as usize].total_cmp(&col[b as usize]));
+        }
+        self.scratch.resize(ids.len(), 0);
+        if self.mask.len() < data.n_total() {
+            self.mask.resize(data.n_total(), 0);
+        }
+    }
+
+    /// Stable-partition every attribute ordering of `[lo, hi)` by
+    /// `col[id] ≤ v` (`col` = the split attribute's column). Left-going ids
+    /// end up in `[lo, lo + n_left)`, right-going in the remainder, each
+    /// side preserving its value-sorted order. Returns `n_left`.
+    fn split_segment(&mut self, col: &[f32], lo: usize, hi: usize, split_attr: usize, v: f32) -> usize {
+        let mut n_left = 0usize;
+        for &i in &self.cols[split_attr][lo..hi] {
+            let gl = (col[i as usize] <= v) as u8;
+            self.mask[i as usize] = gl;
+            n_left += gl as usize;
+        }
+        let m = hi - lo;
+        for j in 0..self.cols.len() {
+            let scratch = &mut self.scratch[..m];
+            let seg = &mut self.cols[j][lo..hi];
+            let (mut a, mut b) = (0usize, n_left);
+            for &i in seg.iter() {
+                if self.mask[i as usize] == 1 {
+                    scratch[a] = i;
+                    a += 1;
+                } else {
+                    scratch[b] = i;
+                    b += 1;
+                }
+            }
+            debug_assert!(a == n_left && b == m, "partition counts disagree");
+            seg.copy_from_slice(scratch);
+        }
+        n_left
+    }
+
+    /// Current node's ids (any attribute ordering works — attribute 0 by
+    /// convention; callers guarantee p ≥ 1).
+    #[inline]
+    fn ids(&self, lo: usize, hi: usize) -> &[InstanceId] {
+        &self.cols[0][lo..hi]
+    }
+}
+
+thread_local! {
+    /// One workspace per thread: per-tree parallelism hands whole trees to
+    /// worker threads, so builds never share a workspace.
+    static WS: RefCell<TrainWorkspace> = RefCell::new(TrainWorkspace::new());
+}
+
+/// Train a full tree over the live instances — the workspace-backed
+/// equivalent of `train(ctx, data.live_ids(), 0, ROOT_PATH)`.
+pub fn train_tree(data: &Dataset, params: &Params, tree_seed: u64) -> Node {
+    let ctx = TrainCtx {
+        data,
+        params,
+        tree_seed,
+    };
+    train_subtree(&ctx, data.live_ids(), 0, ROOT_PATH)
+}
+
+/// Drop-in replacement for [`train`]: trains the (sub)tree rooted at `depth`
+/// / `path` over `ids`, producing a `structural_eq`-identical tree. Small
+/// jobs (and the degenerate p = 0 case) fall through to the plain path; big
+/// ones sort each column once and recurse sort-free. Used by `DareTree::fit`
+/// and by every subtree-retrain site on the deletion/addition path.
+pub fn train_subtree(ctx: &TrainCtx<'_>, ids: Vec<InstanceId>, depth: usize, path: u64) -> Node {
+    let m = ids.len();
+    let p = ctx.data.n_features();
+    if !workspace_pays(m, p, depth, ctx.params) {
+        return train(ctx, ids, depth, path);
+    }
+    WS.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut ws) => {
+            ws.prepare(ctx.data, &ids);
+            drop(ids);
+            let node = train_ws(ctx, &mut ws, 0, m, depth, path);
+            // Cache small buffers for the next (sub)tree on this thread;
+            // drop big ones so paper-scale builds don't pin O(p·n) memory
+            // in thread-local storage (mask counts at 1/4 weight: u8 vs u32).
+            let retained = m
+                .saturating_mul(p + 1)
+                .saturating_add(ctx.data.n_total() / 4);
+            if retained > RETAIN_ELEMS {
+                *ws = TrainWorkspace::default();
+            }
+            node
+        }
+        // Defensive: a re-entrant build on this thread (none exist today)
+        // falls back to the allocation-per-node path rather than panicking.
+        Err(_) => train(ctx, ids, depth, path),
+    })
+}
+
+/// Core recursion: mirrors `train.rs::train` over a workspace segment.
+fn train_ws(
+    ctx: &TrainCtx<'_>,
+    ws: &mut TrainWorkspace,
+    lo: usize,
+    hi: usize,
+    depth: usize,
+    path: u64,
+) -> Node {
+    let n = (hi - lo) as u32;
+    let n_pos = count_pos(ctx.data, ws.ids(lo, hi));
+
+    // stopping criteria: pure node, insufficient data, or max depth
+    if n < ctx.params.min_samples_split as u32
+        || n_pos == 0
+        || n_pos == n
+        || depth >= ctx.params.max_depth
+    {
+        return make_leaf(ctx.data, ws.ids(lo, hi).to_vec());
+    }
+
+    if depth < ctx.params.d_rmax {
+        train_random_ws(ctx, ws, lo, hi, n, n_pos, depth, path)
+    } else {
+        train_greedy_ws(ctx, ws, lo, hi, n, n_pos, depth, path)
+    }
+}
+
+/// Random decision node (§3.3) over a presorted segment. The min/max scan of
+/// the seed path collapses to reading the ends of the value-sorted run
+/// (skipping inward past NaNs, which the seed scan's `<`/`>` comparisons
+/// ignore).
+#[allow(clippy::too_many_arguments)]
+fn train_random_ws(
+    ctx: &TrainCtx<'_>,
+    ws: &mut TrainWorkspace,
+    lo: usize,
+    hi: usize,
+    n: u32,
+    n_pos: u32,
+    depth: usize,
+    path: u64,
+) -> Node {
+    let mut rng = node_rng(ctx.tree_seed, path);
+    let p = ctx.data.n_features();
+    let mut order: Vec<usize> = (0..p).collect();
+    rng.shuffle(&mut order);
+    let mut chosen: Option<(usize, f32, f32)> = None;
+    for attr in order {
+        let col = ctx.data.col(attr);
+        let seg = &ws.cols[attr][lo..hi];
+        let mut a = 0usize;
+        let mut b = seg.len();
+        while a < b && col[seg[a] as usize].is_nan() {
+            a += 1;
+        }
+        while b > a && col[seg[b - 1] as usize].is_nan() {
+            b -= 1;
+        }
+        if a < b {
+            let lo_v = col[seg[a] as usize];
+            let hi_v = col[seg[b - 1] as usize];
+            if lo_v < hi_v {
+                chosen = Some((attr, lo_v, hi_v));
+                break;
+            }
+        }
+    }
+    let Some((attr, lo_v, hi_v)) = chosen else {
+        // all attributes constant: cannot split (duplicate points)
+        return make_leaf(ctx.data, ws.ids(lo, hi).to_vec());
+    };
+    let v = rng.range_f32(lo_v, hi_v);
+    let n_left = ws.split_segment(ctx.data.col(attr), lo, hi, attr, v);
+    debug_assert!(n_left > 0 && n_left < hi - lo);
+    let mid = lo + n_left;
+    let left = train_ws(ctx, ws, lo, mid, depth + 1, child_path(path, depth, false));
+    let right = train_ws(ctx, ws, mid, hi, depth + 1, child_path(path, depth, true));
+    Node::Random(RandomNode {
+        n,
+        n_pos,
+        attr,
+        v,
+        n_left: n_left as u32,
+        n_right: (hi - mid) as u32,
+        left: Box::new(left),
+        right: Box::new(right),
+    })
+}
+
+/// Greedy decision node (Alg. 1 lines 15–27) over a presorted segment:
+/// candidate enumeration is a linear scan per sampled attribute.
+#[allow(clippy::too_many_arguments)]
+fn train_greedy_ws(
+    ctx: &TrainCtx<'_>,
+    ws: &mut TrainWorkspace,
+    lo: usize,
+    hi: usize,
+    n: u32,
+    n_pos: u32,
+    depth: usize,
+    path: u64,
+) -> Node {
+    let mut rng = node_rng(ctx.tree_seed, path);
+    let p = ctx.data.n_features();
+    let p_tilde = ctx.params.max_features.resolve(p);
+    let labels = ctx.data.labels();
+
+    let mut order: Vec<usize> = (0..p).collect();
+    rng.shuffle(&mut order);
+    let mut attrs: Vec<AttrStats> = Vec::with_capacity(p_tilde);
+    for attr in order {
+        if attrs.len() == p_tilde {
+            break;
+        }
+        let candidates =
+            enumerate_valid_presorted(ctx.data.col(attr), labels, &ws.cols[attr][lo..hi]);
+        if candidates.is_empty() {
+            continue; // invalid attribute at this node
+        }
+        let thresholds = sample_thresholds(candidates, ctx.params.k, &mut rng);
+        attrs.push(AttrStats { attr, thresholds });
+    }
+    if attrs.is_empty() {
+        // No valid split anywhere (e.g. identical points with mixed labels).
+        return make_leaf(ctx.data, ws.ids(lo, hi).to_vec());
+    }
+
+    let (best_attr, best_thr) =
+        select_best(n, n_pos, &attrs, ctx.params).expect("non-empty attrs");
+    let split_attr = attrs[best_attr].attr;
+    let split_v = attrs[best_attr].thresholds[best_thr].v;
+    let n_left = ws.split_segment(ctx.data.col(split_attr), lo, hi, split_attr, split_v);
+    debug_assert!(
+        n_left > 0 && n_left < hi - lo,
+        "valid threshold must split non-trivially"
+    );
+    let mid = lo + n_left;
+    let left = train_ws(ctx, ws, lo, mid, depth + 1, child_path(path, depth, false));
+    let right = train_ws(ctx, ws, mid, hi, depth + 1, child_path(path, depth, true));
+    Node::Greedy(GreedyNode {
+        n,
+        n_pos,
+        attrs,
+        best_attr,
+        best_thr,
+        left: Box::new(left),
+        right: Box::new(right),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::forest::params::MaxFeatures;
+    use crate::forest::tree::structural_eq;
+
+    fn toy_data(n: usize, seed: u64) -> Dataset {
+        generate(
+            &SynthSpec {
+                n,
+                informative: 3,
+                redundant: 1,
+                noise: 2,
+                flip: 0.05,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    fn params(d_rmax: usize) -> Params {
+        Params {
+            n_trees: 1,
+            max_depth: 8,
+            k: 5,
+            d_rmax,
+            max_features: MaxFeatures::Sqrt,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn prepare_sorts_every_column() {
+        let data = toy_data(200, 3);
+        let mut ws = TrainWorkspace::new();
+        ws.prepare(&data, &data.live_ids());
+        for j in 0..data.n_features() {
+            let col = data.col(j);
+            assert_eq!(ws.cols[j].len(), 200);
+            assert!(ws.cols[j]
+                .windows(2)
+                .all(|w| col[w[0] as usize] <= col[w[1] as usize]));
+        }
+    }
+
+    #[test]
+    fn split_segment_is_stable_and_complete() {
+        let data = toy_data(150, 4);
+        let mut ws = TrainWorkspace::new();
+        ws.prepare(&data, &data.live_ids());
+        let col0 = data.col(0).to_vec();
+        // split on the median-ish value of attribute 0
+        let v = col0[ws.cols[0][75] as usize];
+        let n_left = ws.split_segment(&col0, 0, 150, 0, v);
+        assert!(n_left > 0 && n_left < 150);
+        for j in 0..data.n_features() {
+            let col = data.col(j);
+            let (l, r) = ws.cols[j].split_at(n_left);
+            // membership respects the predicate
+            assert!(l.iter().all(|&i| col0[i as usize] <= v));
+            assert!(r.iter().all(|&i| col0[i as usize] > v));
+            // each side stays value-sorted on its own attribute
+            assert!(l.windows(2).all(|w| col[w[0] as usize] <= col[w[1] as usize]));
+            assert!(r.windows(2).all(|w| col[w[0] as usize] <= col[w[1] as usize]));
+        }
+    }
+
+    #[test]
+    fn workspace_tree_matches_seed_tree() {
+        // Above the cutoff so the presorted path actually runs.
+        let data = toy_data(500, 5);
+        for d_rmax in [0usize, 2] {
+            let p = params(d_rmax);
+            for tree_seed in [1u64, 2, 3] {
+                let ctx = TrainCtx {
+                    data: &data,
+                    params: &p,
+                    tree_seed,
+                };
+                let seed_tree = train(&ctx, data.live_ids(), 0, ROOT_PATH);
+                let ws_tree = train_subtree(&ctx, data.live_ids(), 0, ROOT_PATH);
+                assert!(
+                    structural_eq(&seed_tree, &ws_tree),
+                    "workspace tree diverged (d_rmax={d_rmax}, seed={tree_seed})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn small_jobs_fall_back_to_plain_path() {
+        let data = toy_data(WORKSPACE_CUTOFF - 1, 6);
+        let p = params(0);
+        let ctx = TrainCtx {
+            data: &data,
+            params: &p,
+            tree_seed: 9,
+        };
+        let a = train_subtree(&ctx, data.live_ids(), 0, ROOT_PATH);
+        let b = train(&ctx, data.live_ids(), 0, ROOT_PATH);
+        assert!(structural_eq(&a, &b));
+    }
+
+    #[test]
+    fn zero_feature_data_degrades_to_leaf() {
+        let data = Dataset::from_columns(vec![], vec![0, 1, 0, 1]);
+        let p = params(0);
+        let ctx = TrainCtx {
+            data: &data,
+            params: &p,
+            tree_seed: 1,
+        };
+        let root = train_subtree(&ctx, data.live_ids(), 0, ROOT_PATH);
+        assert!(matches!(root, Node::Leaf(_)));
+        assert_eq!(root.n(), 4);
+    }
+
+    #[test]
+    fn train_tree_entry_point() {
+        let data = toy_data(300, 7);
+        let p = params(1);
+        let a = train_tree(&data, &p, 42);
+        let ctx = TrainCtx {
+            data: &data,
+            params: &p,
+            tree_seed: 42,
+        };
+        let b = train(&ctx, data.live_ids(), 0, ROOT_PATH);
+        assert!(structural_eq(&a, &b));
+    }
+}

@@ -3,115 +3,202 @@
 //!
 //! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
 //! → `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! **Build gating:** the `xla` crate is not on crates.io and only exists in
+//! images that ship the XLA toolchain. The real backend compiles under
+//! `--cfg pjrt_xla` (set `RUSTFLAGS="--cfg pjrt_xla"` and add the `xla`
+//! path dependency); otherwise an API-identical stub is built whose
+//! [`Engine::new`] fails, so every caller takes its native fallback exactly
+//! as it would when artifacts are missing. The native paths have identical
+//! semantics (see `runtime::mod`), so no functionality is lost — only the
+//! batched-inference speedup.
 
-use std::path::Path;
-use std::sync::Mutex;
+#[cfg(pjrt_xla)]
+mod backend {
+    use std::path::Path;
+    use std::sync::Mutex;
 
-// The `xla` crate's client/executable types hold raw pointers and are not
-// marked Send/Sync, but the underlying PJRT C API objects are thread-safe
-// (the PJRT contract requires it; the TFRT CPU client serializes internally).
-// We wrap them and assert Send + Sync, and additionally serialize all
-// compile/execute calls behind Mutexes for belt-and-braces safety.
-struct SendClient(xla::PjRtClient);
-unsafe impl Send for SendClient {}
-struct SendExe(xla::PjRtLoadedExecutable);
-unsafe impl Send for SendExe {}
+    /// The backend's literal type (re-exported so callers never name `xla::`
+    /// directly and keep compiling against the stub).
+    pub type Literal = xla::Literal;
 
-/// A compiled executable plus its expected argument count.
-pub struct LoadedExe {
-    exe: Mutex<SendExe>,
-}
+    // The `xla` crate's client/executable types hold raw pointers and are not
+    // marked Send/Sync, but the underlying PJRT C API objects are thread-safe
+    // (the PJRT contract requires it; the TFRT CPU client serializes
+    // internally). We wrap them and assert Send + Sync, and additionally
+    // serialize all compile/execute calls behind Mutexes for belt-and-braces
+    // safety.
+    struct SendClient(xla::PjRtClient);
+    unsafe impl Send for SendClient {}
+    struct SendExe(xla::PjRtLoadedExecutable);
+    unsafe impl Send for SendExe {}
 
-/// One input tensor for execution.
-pub enum Input {
-    F32(Vec<f32>, Vec<i64>),
-    I32(Vec<i32>, Vec<i64>),
-}
+    /// A compiled executable plus its expected argument count.
+    pub struct LoadedExe {
+        exe: Mutex<SendExe>,
+    }
 
-impl Input {
-    fn to_literal(&self) -> anyhow::Result<xla::Literal> {
-        match self {
-            Input::F32(data, dims) => Ok(xla::Literal::vec1(data).reshape(dims)?),
-            Input::I32(data, dims) => Ok(xla::Literal::vec1(data).reshape(dims)?),
+    /// One input tensor for execution.
+    pub enum Input {
+        F32(Vec<f32>, Vec<i64>),
+        I32(Vec<i32>, Vec<i64>),
+    }
+
+    impl Input {
+        fn to_literal(&self) -> anyhow::Result<Literal> {
+            match self {
+                Input::F32(data, dims) => Ok(xla::Literal::vec1(data).reshape(dims)?),
+                Input::I32(data, dims) => Ok(xla::Literal::vec1(data).reshape(dims)?),
+            }
+        }
+    }
+
+    impl LoadedExe {
+        /// Execute and return the first (tuple-unwrapped) output as f32s.
+        pub fn run_f32(&self, inputs: &[Input]) -> anyhow::Result<Vec<f32>> {
+            let literals: Vec<Literal> = inputs
+                .iter()
+                .map(|i| i.to_literal())
+                .collect::<anyhow::Result<_>>()?;
+            let refs: Vec<&Literal> = literals.iter().collect();
+            self.run_f32_literals(&refs)
+        }
+
+        /// Execute with pre-built literals (hot path: callers cache the large
+        /// constant inputs — e.g. the tensorized forest — across calls).
+        pub fn run_f32_literals(&self, inputs: &[&Literal]) -> anyhow::Result<Vec<f32>> {
+            let exe = self.exe.lock().unwrap();
+            let result = exe.0.execute::<&Literal>(inputs)?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True → 1-tuple output
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
+        }
+    }
+
+    /// Build a literal from an [`Input`] (exposed for callers that cache).
+    pub fn build_literal(input: &Input) -> anyhow::Result<Literal> {
+        input.to_literal()
+    }
+
+    /// PJRT CPU engine. Creating a client is expensive (TFRT thread pools),
+    /// so share one per process via [`Engine::global`].
+    pub struct Engine {
+        client: Mutex<SendClient>,
+    }
+
+    impl Engine {
+        pub fn new() -> anyhow::Result<Engine> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+            Ok(Engine {
+                client: Mutex::new(SendClient(client)),
+            })
+        }
+
+        /// Process-wide shared engine (PJRT clients are heavy; one is
+        /// enough).
+        pub fn global() -> anyhow::Result<&'static Engine> {
+            use std::sync::OnceLock;
+            static ENGINE: OnceLock<Option<Engine>> = OnceLock::new();
+            ENGINE
+                .get_or_init(|| Engine::new().ok())
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("failed to create PJRT CPU client"))
+        }
+
+        /// Load an HLO-text artifact and compile it.
+        pub fn load_hlo_text(&self, path: &Path) -> anyhow::Result<LoadedExe> {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let client = self.client.lock().unwrap();
+            let exe = client
+                .0
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display()))?;
+            Ok(LoadedExe {
+                exe: Mutex::new(SendExe(exe)),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.lock().unwrap().0.platform_name()
         }
     }
 }
 
-impl LoadedExe {
-    /// Execute and return the first (tuple-unwrapped) output as f32s.
-    pub fn run_f32(&self, inputs: &[Input]) -> anyhow::Result<Vec<f32>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|i| i.to_literal())
-            .collect::<anyhow::Result<_>>()?;
-        let refs: Vec<&xla::Literal> = literals.iter().collect();
-        self.run_f32_literals(&refs)
+#[cfg(not(pjrt_xla))]
+mod backend {
+    //! API-identical stub: every entry point fails with a clear message, so
+    //! callers fall back to the native implementations (the same graceful
+    //! path they take when AOT artifacts are missing).
+
+    use std::path::Path;
+
+    const UNAVAILABLE: &str =
+        "PJRT backend not compiled in (build with RUSTFLAGS=\"--cfg pjrt_xla\" and the xla crate)";
+
+    /// Opaque placeholder for the backend literal type.
+    pub struct Literal {
+        _private: (),
     }
 
-    /// Execute with pre-built literals (hot path: callers cache the large
-    /// constant inputs — e.g. the tensorized forest — across calls).
-    pub fn run_f32_literals(&self, inputs: &[&xla::Literal]) -> anyhow::Result<Vec<f32>> {
-        let exe = self.exe.lock().unwrap();
-        let result = exe.0.execute::<&xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True → 1-tuple output
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
-}
-
-/// Build a literal from an [`Input`] (exposed for callers that cache).
-pub fn build_literal(input: &Input) -> anyhow::Result<xla::Literal> {
-    input.to_literal()
-}
-
-/// PJRT CPU engine. Creating a client is expensive (TFRT thread pools), so
-/// share one per process via [`Engine::global`].
-pub struct Engine {
-    client: Mutex<SendClient>,
-}
-
-impl Engine {
-    pub fn new() -> anyhow::Result<Engine> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
-        Ok(Engine {
-            client: Mutex::new(SendClient(client)),
-        })
+    /// A compiled executable (never constructible in the stub).
+    pub struct LoadedExe {
+        _private: (),
     }
 
-    /// Process-wide shared engine (PJRT clients are heavy; one is enough).
-    pub fn global() -> anyhow::Result<&'static Engine> {
-        use std::sync::OnceLock;
-        static ENGINE: OnceLock<Option<Engine>> = OnceLock::new();
-        ENGINE
-            .get_or_init(|| Engine::new().ok())
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("failed to create PJRT CPU client"))
+    /// One input tensor for execution.
+    pub enum Input {
+        F32(Vec<f32>, Vec<i64>),
+        I32(Vec<i32>, Vec<i64>),
     }
 
-    /// Load an HLO-text artifact and compile it.
-    pub fn load_hlo_text(&self, path: &Path) -> anyhow::Result<LoadedExe> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let client = self.client.lock().unwrap();
-        let exe = client
-            .0
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display()))?;
-        Ok(LoadedExe {
-            exe: Mutex::new(SendExe(exe)),
-        })
+    impl LoadedExe {
+        pub fn run_f32(&self, _inputs: &[Input]) -> anyhow::Result<Vec<f32>> {
+            Err(anyhow::anyhow!(UNAVAILABLE))
+        }
+
+        pub fn run_f32_literals(&self, _inputs: &[&Literal]) -> anyhow::Result<Vec<f32>> {
+            Err(anyhow::anyhow!(UNAVAILABLE))
+        }
     }
 
-    pub fn platform(&self) -> String {
-        self.client.lock().unwrap().0.platform_name()
+    /// Build a literal from an [`Input`] (exposed for callers that cache).
+    pub fn build_literal(_input: &Input) -> anyhow::Result<Literal> {
+        Err(anyhow::anyhow!(UNAVAILABLE))
+    }
+
+    /// PJRT CPU engine stub: construction always fails.
+    pub struct Engine {
+        _private: (),
+    }
+
+    impl Engine {
+        pub fn new() -> anyhow::Result<Engine> {
+            Err(anyhow::anyhow!(UNAVAILABLE))
+        }
+
+        pub fn global() -> anyhow::Result<&'static Engine> {
+            Err(anyhow::anyhow!(UNAVAILABLE))
+        }
+
+        pub fn load_hlo_text(&self, _path: &Path) -> anyhow::Result<LoadedExe> {
+            Err(anyhow::anyhow!(UNAVAILABLE))
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
     }
 }
 
-#[cfg(test)]
+pub use backend::{build_literal, Engine, Input, Literal, LoadedExe};
+
+#[cfg(all(test, pjrt_xla))]
 mod tests {
     use super::*;
     use crate::runtime::manifest::locate_artifacts;
+    use std::path::Path;
 
     #[test]
     fn engine_loads_and_runs_score_artifact() {
@@ -149,5 +236,22 @@ mod tests {
         assert!(engine
             .load_hlo_text(Path::new("/nonexistent/file.hlo.txt"))
             .is_err());
+    }
+}
+
+#[cfg(all(test, not(pjrt_xla)))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_reports_unavailable() {
+        let e = match Engine::global() {
+            Err(e) => e,
+            Ok(_) => panic!("stub engine should not construct"),
+        };
+        assert!(e.to_string().contains("PJRT backend not compiled in"));
+        assert!(Engine::new().is_err());
+        let lit = build_literal(&Input::F32(vec![1.0], vec![1]));
+        assert!(lit.is_err());
     }
 }

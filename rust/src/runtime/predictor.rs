@@ -4,7 +4,7 @@
 
 use crate::forest::forest::DareForest;
 use crate::runtime::manifest::Manifest;
-use crate::runtime::pjrt::{Engine, Input, LoadedExe};
+use crate::runtime::pjrt::{Engine, Input, Literal, LoadedExe};
 use crate::runtime::tensorize::{predict_tensorized, tensorize, TensorForest};
 
 /// PJRT-backed batch predictor over a tensorized forest snapshot.
@@ -21,10 +21,11 @@ pub struct PjrtPredictor {
     features: usize,
 }
 
-/// `xla::Literal` wraps a raw pointer and is not marked Send; literals are
-/// plain host buffers owned by this predictor and only touched under the
-/// caller's synchronization (the service keeps the predictor in a Mutex).
-struct SendLiteral(xla::Literal);
+/// The backend `Literal` wraps a raw pointer and is not marked Send;
+/// literals are plain host buffers owned by this predictor and only touched
+/// under the caller's synchronization (the service keeps the predictor in a
+/// Mutex).
+struct SendLiteral(Literal);
 unsafe impl Send for SendLiteral {}
 
 impl PjrtPredictor {
@@ -96,7 +97,7 @@ impl PjrtPredictor {
                 x,
                 vec![self.batch as i64, self.features as i64],
             ))?;
-            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(6);
+            let mut inputs: Vec<&Literal> = Vec::with_capacity(6);
             inputs.push(&x_lit);
             inputs.extend(self.forest_literals.iter().map(|l| &l.0));
             let sums = self.exe.run_f32_literals(&inputs)?;
@@ -152,7 +153,10 @@ mod tests {
             return;
         };
         let manifest = Manifest::load(&dir).unwrap();
-        let engine = Engine::global().unwrap();
+        let Ok(engine) = Engine::global() else {
+            eprintln!("skipping: PJRT backend unavailable");
+            return;
+        };
         let f = forest();
         let predictor = PjrtPredictor::new(engine, &manifest, &f).unwrap();
         // irregular row count forces chunk padding
@@ -188,7 +192,10 @@ mod tests {
             return;
         };
         let manifest = Manifest::load(&dir).unwrap();
-        let engine = Engine::global().unwrap();
+        let Ok(engine) = Engine::global() else {
+            eprintln!("skipping: PJRT backend unavailable");
+            return;
+        };
         let mut f = forest();
         let mut predictor = PjrtPredictor::new(engine, &manifest, &f).unwrap();
         let probe: Vec<Vec<f32>> = (0..8).map(|i| f.data().row(i)).collect();

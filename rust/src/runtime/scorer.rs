@@ -124,7 +124,10 @@ mod tests {
             return;
         };
         let manifest = Manifest::load(&dir).unwrap();
-        let engine = Engine::global().unwrap();
+        let Ok(engine) = Engine::global() else {
+            eprintln!("skipping: PJRT backend unavailable");
+            return;
+        };
         let mut rng = Rng::new(4);
         for criterion in [SplitCriterion::Gini, SplitCriterion::Entropy] {
             let scorer = PjrtScorer::new(engine, &manifest, criterion).unwrap();

@@ -199,7 +199,10 @@ fn pjrt_runtime_agrees_with_forest_when_artifacts_present() {
         return;
     };
     let manifest = dare::runtime::Manifest::load(&dir).unwrap();
-    let engine = dare::runtime::Engine::global().unwrap();
+    let Ok(engine) = dare::runtime::Engine::global() else {
+        eprintln!("skipping: PJRT backend unavailable");
+        return;
+    };
     let (forest, test) = corpus_forest("higgs", 6, 1);
     let predictor = dare::runtime::PjrtPredictor::new(engine, &manifest, &forest).unwrap();
     let rows: Vec<Vec<f32>> = test.live_ids().iter().take(40).map(|&i| test.row(i)).collect();

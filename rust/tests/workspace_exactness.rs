@@ -1,0 +1,133 @@
+//! Cross-check (ISSUE 1 acceptance): the sort-free workspace training path
+//! must be bit-exact — `structural_eq` — with the seed gather+sort path
+//! across seeds, d_rmax settings and split criteria, and deletion sequences
+//! (whose subtree retrains now run through the workspace) must still match
+//! retraining from scratch on the updated data.
+
+use dare::data::dataset::Dataset;
+use dare::data::synth::{generate, SynthSpec};
+use dare::forest::train::{train, TrainCtx, ROOT_PATH};
+use dare::forest::workspace::train_subtree;
+use dare::forest::{structural_eq, DareTree, MaxFeatures, Params, SplitCriterion};
+use dare::util::rng::Rng;
+
+fn synth(n: usize, seed: u64) -> Dataset {
+    generate(
+        &SynthSpec {
+            n,
+            informative: 4,
+            redundant: 2,
+            noise: 3,
+            flip: 0.08,
+            ..Default::default()
+        },
+        seed,
+    )
+}
+
+/// Tentpole invariant: optimized training is bit-exact with the seed path
+/// over ≥3 data seeds × d_rmax ∈ {0, 2} × {gini, entropy} × 3 tree seeds.
+#[test]
+fn workspace_matches_seed_path_across_grid() {
+    for &data_seed in &[1u64, 2, 3] {
+        let data = synth(600, data_seed);
+        for &d_rmax in &[0usize, 2] {
+            for &criterion in &[SplitCriterion::Gini, SplitCriterion::Entropy] {
+                let params = Params {
+                    n_trees: 1,
+                    max_depth: 9,
+                    k: 5,
+                    d_rmax,
+                    criterion,
+                    max_features: MaxFeatures::Sqrt,
+                    ..Default::default()
+                };
+                for tree_seed in 0..3u64 {
+                    let ctx = TrainCtx {
+                        data: &data,
+                        params: &params,
+                        tree_seed,
+                    };
+                    let seed_tree = train(&ctx, data.live_ids(), 0, ROOT_PATH);
+                    let ws_tree = train_subtree(&ctx, data.live_ids(), 0, ROOT_PATH);
+                    assert!(
+                        structural_eq(&seed_tree, &ws_tree),
+                        "workspace != seed path (data_seed={data_seed}, d_rmax={d_rmax}, \
+                         criterion={criterion:?}, tree_seed={tree_seed})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// With exhaustive thresholds (k ≥ all valid) and all attributes considered,
+/// a deletion sequence — whose invalidation-triggered subtree retrains go
+/// through the workspace — must keep the tree structurally identical to
+/// scratch training on the updated data, on BOTH training paths.
+#[test]
+fn deletion_sequences_still_match_scratch_retrain() {
+    let mut d = synth(300, 7);
+    let params = Params {
+        n_trees: 1,
+        max_depth: 6,
+        k: 10_000,
+        d_rmax: 0,
+        max_features: MaxFeatures::All,
+        ..Default::default()
+    };
+    let mut tree = DareTree::fit(&d, &params, 9);
+    let mut rng = Rng::new(42);
+    for epoch in 0..30u64 {
+        let live = d.live_ids();
+        let id = live[rng.index(live.len())];
+        tree.delete(&d, &params, id);
+        d.mark_removed(id);
+
+        let ctx = TrainCtx {
+            data: &d,
+            params: &params,
+            tree_seed: 9,
+        };
+        let scratch_seed = train(&ctx, d.live_ids(), 0, ROOT_PATH);
+        let scratch_ws = train_subtree(&ctx, d.live_ids(), 0, ROOT_PATH);
+        assert!(
+            structural_eq(&tree.root, &scratch_seed),
+            "delete != scratch retrain (seed path) after epoch {epoch}"
+        );
+        assert!(
+            structural_eq(&tree.root, &scratch_ws),
+            "delete != scratch retrain (workspace path) after epoch {epoch}"
+        );
+    }
+}
+
+/// R-DaRE (random upper layers) exactness under deletion with workspace
+/// retrains: invariants tie cached stats to data, and the forest stays
+/// usable after a long deletion run.
+#[test]
+fn rdare_deletion_run_stays_consistent_with_workspace_retrains() {
+    let mut d = synth(500, 11);
+    let params = Params {
+        n_trees: 1,
+        max_depth: 8,
+        k: 5,
+        d_rmax: 3,
+        max_features: MaxFeatures::Sqrt,
+        ..Default::default()
+    };
+    let mut tree = DareTree::fit(&d, &params, 21);
+    let mut rng = Rng::new(5);
+    for _ in 0..200u64 {
+        let live = d.live_ids();
+        let id = live[rng.index(live.len())];
+        tree.delete(&d, &params, id);
+        d.mark_removed(id);
+        assert_eq!(tree.root.n() as usize, d.n_alive());
+    }
+    // surviving tree still predicts sane probabilities
+    for id in d.live_ids().into_iter().take(50) {
+        let p = tree.predict(&d.row(id));
+        assert!((0.0..=1.0).contains(&p));
+    }
+}

@@ -1,0 +1,136 @@
+//! Offline stand-in for the `anyhow` crate (string-backed).
+//!
+//! The build image has no crates.io access, so this in-repo shim provides
+//! the tiny slice of anyhow's API this codebase uses — `Result`, `Error`,
+//! and the `anyhow!` / `bail!` / `ensure!` macros. Errors carry a rendered
+//! message only (no backtraces, no source chains, no downcasting); like the
+//! real crate, `Error` deliberately does NOT implement `std::error::Error`,
+//! which is what lets the blanket `From` conversion below coexist with the
+//! identity `From<Error>` used by `?`.
+
+use std::fmt;
+
+/// A rendered error message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> anyhow::Result<()>` prints the Debug form on exit;
+        // keep it human-readable like the real crate does.
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(!flag, "flag was {}", flag);
+        Ok(7)
+    }
+
+    fn bails() -> Result<()> {
+        bail!("gone");
+    }
+
+    fn io_propagates() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn macros_render_messages() {
+        assert_eq!(fails(false).unwrap(), 7);
+        assert_eq!(fails(true).unwrap_err().to_string(), "flag was true");
+        assert_eq!(bails().unwrap_err().to_string(), "gone");
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(format!("{e}"), "x = 3");
+        assert_eq!(format!("{e:?}"), "x = 3");
+        let from_string = anyhow!(String::from("owned"));
+        assert_eq!(from_string.to_string(), "owned");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_propagates().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn check(v: usize) -> Result<()> {
+            ensure!(v > 2);
+            Ok(())
+        }
+        assert!(check(3).is_ok());
+        let msg = check(1).unwrap_err().to_string();
+        assert!(msg.contains("condition failed"), "{msg}");
+    }
+}
