@@ -1,0 +1,159 @@
+//! Bench: serving-path prediction throughput (ISSUE 2 acceptance): per-row
+//! descent vs. level-synchronous batched blocks vs. batched + threadpool
+//! fan-out, over an n_trees × batch grid. Besides the human-readable report
+//! this emits `BENCH_predict.json` at the repo root with rows/s per case and
+//! the headline batched-parallel vs per-row speedup at n_trees=100,
+//! batch=256.
+
+use dare::bench::{BenchConfig, Suite};
+use dare::data::synth::{generate, SynthSpec};
+use dare::forest::{DareForest, Params};
+use dare::util::json::Value;
+use dare::util::threadpool::default_threads;
+
+struct Case {
+    name: String,
+    mode: &'static str,
+    n_trees: usize,
+    batch: usize,
+    ns_per_iter: f64,
+    rows_per_sec: f64,
+}
+
+fn main() {
+    let mut suite = Suite::new("predict throughput");
+    let cfg = BenchConfig {
+        warmup_iters: 2,
+        min_iters: 10,
+        max_iters: 400,
+        target_seconds: 1.5,
+    };
+    let data = generate(
+        &SynthSpec {
+            n: 8192,
+            informative: 5,
+            redundant: 3,
+            noise: 8,
+            flip: 0.05,
+            ..Default::default()
+        },
+        3,
+    );
+    let threads = default_threads();
+    let mut cases: Vec<Case> = Vec::new();
+    let mut headline: Option<(f64, f64)> = None; // (per-row, batched+parallel) rows/s
+
+    for &n_trees in &[10usize, 100] {
+        let params = Params {
+            n_trees,
+            max_depth: 10,
+            k: 10,
+            d_rmax: 0,
+            ..Default::default()
+        };
+        // Fit once (parallel), then share the identical trees between a
+        // single-threaded and a parallel serving configuration.
+        let f_par = DareForest::fit(data.clone(), &params.clone().with_threads(threads), 7);
+        let f_seq = DareForest::from_parts(
+            params.clone().with_threads(1),
+            f_par.seed(),
+            f_par.trees().to_vec(),
+            f_par.data().clone(),
+        )
+        .expect("same trees, same data");
+
+        for &batch in &[64usize, 256, 1024] {
+            let rows: Vec<Vec<f32>> = (0..batch as u32)
+                .map(|i| data.row(i % data.n_total() as u32))
+                .collect();
+
+            let per_row_mean = suite
+                .run(
+                    &format!("per-row       T={n_trees:<3} batch={batch}"),
+                    cfg,
+                    || {
+                        let mut acc = 0.0f32;
+                        for row in &rows {
+                            acc += f_seq.predict_proba(row);
+                        }
+                        std::hint::black_box(acc);
+                    },
+                )
+                .mean_s;
+            let batched_mean = suite
+                .run(
+                    &format!("batched       T={n_trees:<3} batch={batch}"),
+                    cfg,
+                    || {
+                        std::hint::black_box(f_seq.predict_proba_rows(&rows).len());
+                    },
+                )
+                .mean_s;
+            let par_mean = suite
+                .run(
+                    &format!("batched+par{threads:<2} T={n_trees:<3} batch={batch}"),
+                    cfg,
+                    || {
+                        std::hint::black_box(f_par.predict_proba_rows(&rows).len());
+                    },
+                )
+                .mean_s;
+            for (mode, mean_s) in [
+                ("per-row", per_row_mean),
+                ("batched", batched_mean),
+                ("batched+parallel", par_mean),
+            ] {
+                cases.push(Case {
+                    name: format!("{mode} T={n_trees} batch={batch}"),
+                    mode,
+                    n_trees,
+                    batch,
+                    ns_per_iter: mean_s * 1e9,
+                    rows_per_sec: batch as f64 / mean_s,
+                });
+            }
+
+            if n_trees == 100 && batch == 256 {
+                headline = Some((256.0 / per_row_mean, 256.0 / par_mean));
+            }
+        }
+    }
+
+    // machine-readable perf trajectory at the repo root
+    let mut top = Value::obj();
+    top.set("suite", "predict_throughput")
+        .set("threads", threads)
+        .set("rows_source", "synthetic n=8192 p=16");
+    let mut arr = Vec::new();
+    for c in &cases {
+        let mut o = Value::obj();
+        o.set("name", c.name.as_str())
+            .set("mode", c.mode)
+            .set("n_trees", c.n_trees)
+            .set("batch", c.batch)
+            .set("ns_per_iter", c.ns_per_iter)
+            .set("rows_per_sec", c.rows_per_sec);
+        arr.push(o);
+    }
+    top.set("results", Value::Arr(arr));
+    if let Some((base, par)) = headline {
+        let mut h = Value::obj();
+        h.set("case", "n_trees=100 batch=256")
+            .set("per_row_rows_per_sec", base)
+            .set("batched_parallel_rows_per_sec", par)
+            .set("speedup", par / base);
+        top.set("headline", h);
+        println!(
+            "headline (T=100, batch=256): per-row {base:.0} rows/s vs batched+parallel \
+             {par:.0} rows/s → {:.2}x",
+            par / base
+        );
+    }
+    let root_json =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_predict.json");
+    match std::fs::write(&root_json, top.to_pretty()) {
+        Ok(()) => println!("wrote {}", root_json.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", root_json.display()),
+    }
+    suite.save_json().ok();
+}

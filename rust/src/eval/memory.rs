@@ -2,6 +2,11 @@
 //! structure / decision statistics / leaf statistics, compare against a lean
 //! standard-RF model with the same T and d_max, and compute the paper's
 //! overhead ratio (data + DaRE) / (data + lean RF).
+//!
+//! Since the arena refactor (DESIGN.md §7) the structure column reflects the
+//! SoA hot plane's actual footprint (five 4-byte elements per slot, free
+//! slots included) rather than boxed-node pointers, so the overhead ratio is
+//! measured on what the process really allocates.
 
 use crate::baselines::simple::{BaselineForest, BaselineParams};
 use crate::data::dataset::Dataset;

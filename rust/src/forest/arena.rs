@@ -1,0 +1,923 @@
+//! Arena tree storage: a contiguous, id-indexed node store replacing the
+//! heap-boxed `Node` tree as the *live* representation inside [`crate::forest::tree::DareTree`]
+//! (DESIGN.md §7).
+//!
+//! Layout:
+//! - **Hot plane** ([`HotPlane`]) — five parallel SoA arrays holding exactly
+//!   what a prediction descent reads: split attribute, threshold, left/right
+//!   child ids, and the leaf value. A descent never touches anything else,
+//!   so the working set is cache-dense instead of one heap box per node.
+//! - **Cold plane** — side tables indexed by the same node id: per-node
+//!   `n`/`n_pos` counts and a [`Cold`] payload (leaf instance-id lists,
+//!   random-node branch counts, greedy-node `AttrStats` threshold tables).
+//!   Deletion walks read the hot plane for routing and the cold plane for
+//!   the cached statistics that make DaRE deletions cheap.
+//!
+//! Node ids are slots in these arrays. Freed slots (from subtree retrains
+//! and leaf collapses) go on a LIFO free list and are reused by later
+//! grafts, so arena size tracks the *peak* tree size, not churn. All
+//! allocation and free orders are deterministic functions of the operation
+//! sequence — no hashing, no threading — which keeps delete-then-retrain
+//! grafts reproducible (DESIGN.md §5 applies unchanged).
+//!
+//! The boxed [`Node`] representation remains the construction format and
+//! exactness oracle: trees are built by the (workspace) trainer as `Node`s
+//! and grafted in ([`ArenaTree::from_node`] / grafting on the update path),
+//! and `tests/workspace_exactness.rs` plus the churn tests assert arena
+//! trees stay `structural_eq` to the boxed implementation.
+
+use crate::data::dataset::{Dataset, InstanceId};
+use crate::forest::node::{GreedyNode, LeafNode, Node, NodeMemory, RandomNode, TreeShape};
+use crate::forest::stats::{AttrStats, ThresholdStats};
+use crate::forest::train::count_pos;
+use std::collections::VecDeque;
+
+/// Sentinel child id: a node whose `left` is `NIL` is a leaf; a slot whose
+/// `left` *and* cold payload say `Free` is on the free list.
+pub const NIL: u32 = u32::MAX;
+
+/// Leaf prediction from counts — must match [`LeafNode::value`] bit-exactly
+/// (the hot plane caches this so descents never divide).
+#[inline]
+pub(crate) fn leaf_value(n: u32, n_pos: u32) -> f32 {
+    if n == 0 {
+        0.5
+    } else {
+        n_pos as f32 / n as f32
+    }
+}
+
+/// The SoA arrays a prediction descent reads. All five are indexed by node
+/// id and always have the same length.
+#[derive(Clone, Debug, Default)]
+pub struct HotPlane {
+    /// Split attribute (unused for leaves).
+    pub attr: Vec<u32>,
+    /// Split threshold (unused for leaves).
+    pub thresh: Vec<f32>,
+    /// Left child id, or [`NIL`] for leaves/free slots.
+    pub left: Vec<u32>,
+    /// Right child id, or [`NIL`] for leaves/free slots.
+    pub right: Vec<u32>,
+    /// Cached leaf prediction (0.0 for decision nodes).
+    pub value: Vec<f32>,
+}
+
+/// Cold per-node payload: everything deletion needs beyond the hot plane.
+#[derive(Clone, Debug)]
+pub enum Cold {
+    /// Slot is on the free list.
+    Free,
+    Leaf {
+        ids: Vec<InstanceId>,
+    },
+    Random {
+        n_left: u32,
+        n_right: u32,
+    },
+    Greedy {
+        attrs: Vec<AttrStats>,
+        best_attr: usize,
+        best_thr: usize,
+    },
+}
+
+/// One DaRE tree in arena form.
+#[derive(Clone, Debug)]
+pub struct ArenaTree {
+    pub(crate) root: u32,
+    pub(crate) hot: HotPlane,
+    /// |D| at each node.
+    pub(crate) n: Vec<u32>,
+    /// |D_{·,1}| at each node.
+    pub(crate) n_pos: Vec<u32>,
+    pub(crate) cold: Vec<Cold>,
+    /// Freed slots, reused LIFO by later grafts.
+    pub(crate) free: Vec<u32>,
+    /// True while the layout is exactly the BFS order of a fresh
+    /// [`ArenaTree::from_node`] build (root at slot 0, children allocated in
+    /// contiguous pairs) — lets `runtime::tensorize` copy the hot plane
+    /// linearly. Any graft or free clears it.
+    pub(crate) bfs_compact: bool,
+}
+
+impl ArenaTree {
+    fn empty() -> ArenaTree {
+        ArenaTree {
+            root: NIL,
+            hot: HotPlane::default(),
+            n: Vec::new(),
+            n_pos: Vec::new(),
+            cold: Vec::new(),
+            free: Vec::new(),
+            bfs_compact: false,
+        }
+    }
+
+    /// Consume a boxed tree into a fresh arena in BFS order: the root lands
+    /// in slot 0 and children occupy contiguous pairs — the exact layout the
+    /// tensorized predict artifact uses.
+    pub fn from_node(root: Node) -> ArenaTree {
+        let mut t = ArenaTree::empty();
+        let slot = t.alloc();
+        t.root = slot;
+        t.graft_at(slot, root);
+        t.bfs_compact = true;
+        t
+    }
+
+    /// Root node id.
+    #[inline]
+    pub fn root(&self) -> u32 {
+        self.root
+    }
+
+    /// Total slots (live + free).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.cold.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.cold.is_empty()
+    }
+
+    /// Slots currently on the free list.
+    #[inline]
+    pub fn free_len(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Live (reachable) node count.
+    #[inline]
+    pub fn live_len(&self) -> usize {
+        self.len() - self.free_len()
+    }
+
+    /// Hot-plane accessor for the tensorizer.
+    #[inline]
+    pub fn hot(&self) -> &HotPlane {
+        &self.hot
+    }
+
+    /// See [`ArenaTree::bfs_compact`].
+    #[inline]
+    pub fn is_bfs_compact(&self) -> bool {
+        self.bfs_compact && self.root == 0 && self.free.is_empty()
+    }
+
+    #[inline]
+    pub fn is_leaf(&self, nid: u32) -> bool {
+        self.hot.left[nid as usize] == NIL
+    }
+
+    /// |D| at the root.
+    #[inline]
+    pub fn n_root(&self) -> u32 {
+        self.n[self.root as usize]
+    }
+
+    // --- slot management ---------------------------------------------------
+
+    /// Claim a slot: reuse the most recently freed one, else grow every
+    /// plane by one. Deterministic given the operation sequence.
+    pub(crate) fn alloc(&mut self) -> u32 {
+        if let Some(s) = self.free.pop() {
+            return s;
+        }
+        self.hot.attr.push(0);
+        self.hot.thresh.push(0.0);
+        self.hot.left.push(NIL);
+        self.hot.right.push(NIL);
+        self.hot.value.push(0.0);
+        self.n.push(0);
+        self.n_pos.push(0);
+        self.cold.push(Cold::Free);
+        (self.cold.len() - 1) as u32
+    }
+
+    /// Return `nid` and its whole subtree to the free list.
+    pub(crate) fn free_subtree(&mut self, nid: u32) {
+        let mut stack = vec![nid];
+        while let Some(s) = stack.pop() {
+            let si = s as usize;
+            if self.hot.left[si] != NIL {
+                stack.push(self.hot.left[si]);
+                stack.push(self.hot.right[si]);
+            }
+            self.hot.left[si] = NIL;
+            self.hot.right[si] = NIL;
+            self.hot.value[si] = 0.0;
+            self.n[si] = 0;
+            self.n_pos[si] = 0;
+            self.cold[si] = Cold::Free;
+            self.free.push(s);
+        }
+        self.bfs_compact = false;
+    }
+
+    /// Free both child subtrees of a decision node (keeping `nid` itself).
+    pub(crate) fn free_children(&mut self, nid: u32) {
+        let ni = nid as usize;
+        if self.hot.left[ni] == NIL {
+            return;
+        }
+        let l = self.hot.left[ni];
+        let r = self.hot.right[ni];
+        self.free_subtree(l);
+        self.free_subtree(r);
+        self.hot.left[ni] = NIL;
+        self.hot.right[ni] = NIL;
+    }
+
+    // --- slot writers ------------------------------------------------------
+
+    pub(crate) fn write_leaf(&mut self, slot: u32, n: u32, n_pos: u32, ids: Vec<InstanceId>) {
+        let si = slot as usize;
+        self.hot.attr[si] = 0;
+        self.hot.thresh[si] = 0.0;
+        self.hot.left[si] = NIL;
+        self.hot.right[si] = NIL;
+        self.hot.value[si] = leaf_value(n, n_pos);
+        self.n[si] = n;
+        self.n_pos[si] = n_pos;
+        self.cold[si] = Cold::Leaf { ids };
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn write_random(
+        &mut self,
+        slot: u32,
+        n: u32,
+        n_pos: u32,
+        attr: usize,
+        v: f32,
+        n_left: u32,
+        n_right: u32,
+        left: u32,
+        right: u32,
+    ) {
+        let si = slot as usize;
+        self.hot.attr[si] = attr as u32;
+        self.hot.thresh[si] = v;
+        self.hot.left[si] = left;
+        self.hot.right[si] = right;
+        self.hot.value[si] = 0.0;
+        self.n[si] = n;
+        self.n_pos[si] = n_pos;
+        self.cold[si] = Cold::Random { n_left, n_right };
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn write_greedy(
+        &mut self,
+        slot: u32,
+        n: u32,
+        n_pos: u32,
+        attrs: Vec<AttrStats>,
+        best_attr: usize,
+        best_thr: usize,
+        left: u32,
+        right: u32,
+    ) {
+        let si = slot as usize;
+        self.hot.attr[si] = attrs[best_attr].attr as u32;
+        self.hot.thresh[si] = attrs[best_attr].thresholds[best_thr].v;
+        self.hot.left[si] = left;
+        self.hot.right[si] = right;
+        self.hot.value[si] = 0.0;
+        self.n[si] = n;
+        self.n_pos[si] = n_pos;
+        self.cold[si] = Cold::Greedy {
+            attrs,
+            best_attr,
+            best_thr,
+        };
+    }
+
+    /// Refresh a greedy node's hot split after its `best_attr`/`best_thr`
+    /// moved (cold plane already updated).
+    pub(crate) fn refresh_greedy_split(&mut self, nid: u32) {
+        let ni = nid as usize;
+        let Cold::Greedy {
+            attrs,
+            best_attr,
+            best_thr,
+        } = &self.cold[ni]
+        else {
+            unreachable!("refresh_greedy_split on non-greedy node");
+        };
+        self.hot.attr[ni] = attrs[*best_attr].attr as u32;
+        self.hot.thresh[ni] = attrs[*best_attr].thresholds[*best_thr].v;
+    }
+
+    // --- grafting ----------------------------------------------------------
+
+    /// Write `node`'s subtree into the arena with `slot` as its root,
+    /// allocating descendant slots in BFS order (free-list first). The
+    /// previous children of `slot`, if any, must already have been freed.
+    pub(crate) fn graft_at(&mut self, slot: u32, node: Node) {
+        let mut queue: VecDeque<(Node, u32)> = VecDeque::new();
+        queue.push_back((node, slot));
+        while let Some((n, s)) = queue.pop_front() {
+            match n {
+                Node::Leaf(l) => {
+                    self.write_leaf(s, l.n, l.n_pos, l.ids);
+                }
+                Node::Random(r) => {
+                    let ls = self.alloc();
+                    let rs = self.alloc();
+                    self.write_random(s, r.n, r.n_pos, r.attr, r.v, r.n_left, r.n_right, ls, rs);
+                    queue.push_back((*r.left, ls));
+                    queue.push_back((*r.right, rs));
+                }
+                Node::Greedy(g) => {
+                    let ls = self.alloc();
+                    let rs = self.alloc();
+                    queue.push_back((*g.left, ls));
+                    queue.push_back((*g.right, rs));
+                    self.write_greedy(s, g.n, g.n_pos, g.attrs, g.best_attr, g.best_thr, ls, rs);
+                }
+            }
+        }
+        self.bfs_compact = false;
+    }
+
+    /// Allocate a fresh slot and graft `node` there; returns the slot.
+    pub(crate) fn graft_new(&mut self, node: Node) -> u32 {
+        let slot = self.alloc();
+        self.graft_at(slot, node);
+        slot
+    }
+
+    /// Replace the whole subtree at `nid` with `node`, keeping the id.
+    pub(crate) fn replace_node(&mut self, nid: u32, node: Node) {
+        self.free_children(nid);
+        self.graft_at(nid, node);
+    }
+
+    /// Collapse the subtree at `nid` into a leaf over `ids` (deletion
+    /// stopping criteria), keeping the id.
+    pub(crate) fn collapse_to_leaf(&mut self, nid: u32, data: &Dataset, ids: Vec<InstanceId>) {
+        self.free_children(nid);
+        let n_pos = count_pos(data, &ids);
+        self.write_leaf(nid, ids.len() as u32, n_pos, ids);
+    }
+
+    /// Replace both children of the decision node `nid` after its split
+    /// moved to `(attr, v)` — the greedy argmax-changed retrain path.
+    pub(crate) fn replace_children(&mut self, nid: u32, attr: usize, v: f32, left: Node, right: Node) {
+        self.free_children(nid);
+        let ls = self.graft_new(left);
+        let rs = self.graft_new(right);
+        let ni = nid as usize;
+        self.hot.attr[ni] = attr as u32;
+        self.hot.thresh[ni] = v;
+        self.hot.left[ni] = ls;
+        self.hot.right[ni] = rs;
+    }
+
+    // --- reads -------------------------------------------------------------
+
+    /// Positive-class probability for one feature row: a pure hot-plane
+    /// descent (two array reads + one compare per level).
+    #[inline]
+    pub fn predict(&self, row: &[f32]) -> f32 {
+        let mut i = self.root as usize;
+        loop {
+            let l = self.hot.left[i];
+            if l == NIL {
+                return self.hot.value[i];
+            }
+            i = if row[self.hot.attr[i] as usize] <= self.hot.thresh[i] {
+                l
+            } else {
+                self.hot.right[i]
+            } as usize;
+        }
+    }
+
+    /// Level-synchronous batched descent: advance every row of the block one
+    /// level per sweep, so the tree's upper levels stay hot in cache across
+    /// the whole block, then add each row's leaf value into `sums`.
+    /// `cursors` is caller-provided scratch (cleared here, reused across
+    /// trees). Accumulation order per row equals the per-row path's
+    /// tree-ordered sum, so forest probabilities are bit-identical.
+    pub fn predict_block_sum(&self, rows: &[Vec<f32>], cursors: &mut Vec<u32>, sums: &mut [f32]) {
+        debug_assert_eq!(rows.len(), sums.len());
+        cursors.clear();
+        cursors.resize(rows.len(), self.root);
+        loop {
+            let mut moved = false;
+            for (c, row) in cursors.iter_mut().zip(rows) {
+                let i = *c as usize;
+                let l = self.hot.left[i];
+                if l == NIL {
+                    continue;
+                }
+                *c = if row[self.hot.attr[i] as usize] <= self.hot.thresh[i] {
+                    l
+                } else {
+                    self.hot.right[i]
+                };
+                moved = true;
+            }
+            if !moved {
+                break;
+            }
+        }
+        for (c, s) in cursors.iter().zip(sums.iter_mut()) {
+            *s += self.hot.value[*c as usize];
+        }
+    }
+
+    /// Gather the instance ids at the leaves of the subtree rooted at `nid`
+    /// (left-to-right, matching [`Node::collect_ids`]), optionally excluding
+    /// one id.
+    pub fn collect_ids(&self, nid: u32, exclude: Option<InstanceId>, out: &mut Vec<InstanceId>) {
+        let ni = nid as usize;
+        if self.hot.left[ni] == NIL {
+            let Cold::Leaf { ids } = &self.cold[ni] else {
+                unreachable!("leaf-shaped slot without leaf payload");
+            };
+            match exclude {
+                Some(ex) => out.extend(ids.iter().copied().filter(|&i| i != ex)),
+                None => out.extend_from_slice(ids),
+            }
+            return;
+        }
+        self.collect_ids(self.hot.left[ni], exclude, out);
+        self.collect_ids(self.hot.right[ni], exclude, out);
+    }
+
+    /// Structural summary (node-kind counts + max depth).
+    pub fn shape(&self) -> TreeShape {
+        let mut s = TreeShape::default();
+        let mut stack = vec![(self.root, 0usize)];
+        while let Some((nid, depth)) = stack.pop() {
+            let ni = nid as usize;
+            s.max_depth = s.max_depth.max(depth);
+            match &self.cold[ni] {
+                Cold::Leaf { .. } => s.leaves += 1,
+                Cold::Random { .. } => {
+                    s.random_nodes += 1;
+                    stack.push((self.hot.left[ni], depth + 1));
+                    stack.push((self.hot.right[ni], depth + 1));
+                }
+                Cold::Greedy { .. } => {
+                    s.greedy_nodes += 1;
+                    stack.push((self.hot.left[ni], depth + 1));
+                    stack.push((self.hot.right[ni], depth + 1));
+                }
+                Cold::Free => unreachable!("free slot reachable from root"),
+            }
+        }
+        s
+    }
+
+    /// Memory accounting (Table 3 categories) over the arena's actual
+    /// layout: every slot (live or free) pays its five hot-plane elements
+    /// (20 B) plus the two count-plane elements (8 B); cold payloads are
+    /// attributed like the boxed accounting (leaf lists to `leaf_stats`,
+    /// branch counts and threshold tables to `decision_stats`).
+    pub fn memory(&self) -> NodeMemory {
+        use std::mem::size_of;
+        let hot_slot = 3 * size_of::<u32>() + 2 * size_of::<f32>();
+        let count_slot = 2 * size_of::<u32>();
+        let mut m = NodeMemory::default();
+        for c in &self.cold {
+            m.structure += hot_slot;
+            match c {
+                Cold::Free => m.structure += count_slot,
+                Cold::Leaf { ids } => {
+                    m.leaf_stats += count_slot + ids.capacity() * size_of::<InstanceId>();
+                }
+                Cold::Random { .. } => {
+                    m.decision_stats += count_slot + 2 * size_of::<u32>();
+                }
+                Cold::Greedy { attrs, .. } => {
+                    m.decision_stats += count_slot;
+                    for a in attrs {
+                        m.decision_stats += size_of::<usize>()
+                            + a.thresholds.capacity() * size_of::<ThresholdStats>();
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    // --- boxed-view interop ------------------------------------------------
+
+    /// Reconstruct the boxed view of the whole tree (oracle comparisons,
+    /// serialization).
+    pub fn to_node(&self) -> Node {
+        self.to_node_at(self.root)
+    }
+
+    fn to_node_at(&self, nid: u32) -> Node {
+        let ni = nid as usize;
+        match &self.cold[ni] {
+            Cold::Leaf { ids } => Node::Leaf(LeafNode {
+                n: self.n[ni],
+                n_pos: self.n_pos[ni],
+                ids: ids.clone(),
+            }),
+            Cold::Random { n_left, n_right } => Node::Random(RandomNode {
+                n: self.n[ni],
+                n_pos: self.n_pos[ni],
+                attr: self.hot.attr[ni] as usize,
+                v: self.hot.thresh[ni],
+                n_left: *n_left,
+                n_right: *n_right,
+                left: Box::new(self.to_node_at(self.hot.left[ni])),
+                right: Box::new(self.to_node_at(self.hot.right[ni])),
+            }),
+            Cold::Greedy {
+                attrs,
+                best_attr,
+                best_thr,
+            } => Node::Greedy(GreedyNode {
+                n: self.n[ni],
+                n_pos: self.n_pos[ni],
+                attrs: attrs.clone(),
+                best_attr: *best_attr,
+                best_thr: *best_thr,
+                left: Box::new(self.to_node_at(self.hot.left[ni])),
+                right: Box::new(self.to_node_at(self.hot.right[ni])),
+            }),
+            Cold::Free => unreachable!("to_node on a free slot"),
+        }
+    }
+
+    /// Structural equality against a boxed tree (same semantics as
+    /// [`crate::forest::tree::structural_eq`]: kinds, splits, counts, and
+    /// order-insensitive leaf id sets).
+    pub fn matches_node(&self, node: &Node) -> bool {
+        let mut scratch = IdScratch::default();
+        self.matches_node_at(self.root, node, &mut scratch)
+    }
+
+    fn matches_node_at(&self, nid: u32, node: &Node, s: &mut IdScratch) -> bool {
+        let ni = nid as usize;
+        match (&self.cold[ni], node) {
+            (Cold::Leaf { ids }, Node::Leaf(l)) => {
+                self.n[ni] == l.n && self.n_pos[ni] == l.n_pos && s.ids_eq(ids, &l.ids)
+            }
+            (Cold::Random { .. }, Node::Random(r)) => {
+                self.hot.attr[ni] as usize == r.attr
+                    && self.hot.thresh[ni] == r.v
+                    && self.n[ni] == r.n
+                    && self.n_pos[ni] == r.n_pos
+                    && self.matches_node_at(self.hot.left[ni], &r.left, s)
+                    && self.matches_node_at(self.hot.right[ni], &r.right, s)
+            }
+            (
+                Cold::Greedy {
+                    attrs,
+                    best_attr,
+                    best_thr,
+                },
+                Node::Greedy(g),
+            ) => {
+                attrs[*best_attr].attr == g.split_attr()
+                    && attrs[*best_attr].thresholds[*best_thr].v == g.split_v()
+                    && self.n[ni] == g.n
+                    && self.n_pos[ni] == g.n_pos
+                    && self.matches_node_at(self.hot.left[ni], &g.left, s)
+                    && self.matches_node_at(self.hot.right[ni], &g.right, s)
+            }
+            _ => false,
+        }
+    }
+
+    /// Structural equality between two arena trees (no reconstruction).
+    pub fn structural_matches(&self, other: &ArenaTree) -> bool {
+        let mut scratch = IdScratch::default();
+        self.matches_arena_at(self.root, other, other.root, &mut scratch)
+    }
+
+    fn matches_arena_at(&self, nid: u32, o: &ArenaTree, oid: u32, s: &mut IdScratch) -> bool {
+        let (ni, oi) = (nid as usize, oid as usize);
+        if self.n[ni] != o.n[oi] || self.n_pos[ni] != o.n_pos[oi] {
+            return false;
+        }
+        match (&self.cold[ni], &o.cold[oi]) {
+            (Cold::Leaf { ids: a }, Cold::Leaf { ids: b }) => s.ids_eq(a, b),
+            (Cold::Random { .. }, Cold::Random { .. })
+            | (Cold::Greedy { .. }, Cold::Greedy { .. }) => {
+                self.hot.attr[ni] == o.hot.attr[oi]
+                    && self.hot.thresh[ni] == o.hot.thresh[oi]
+                    && self.matches_arena_at(self.hot.left[ni], o, o.hot.left[oi], s)
+                    && self.matches_arena_at(self.hot.right[ni], o, o.hot.right[oi], s)
+            }
+            _ => false,
+        }
+    }
+
+    // --- consistency -------------------------------------------------------
+
+    /// Deep structural audit: every slot is either reachable exactly once
+    /// from the root or on the free list exactly once; hot and cold planes
+    /// agree on every node kind and split; counts are consistent between
+    /// parents and children; leaf values are fresh. Test-support (and cheap
+    /// enough for debug assertions after churn).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let len = self.len();
+        anyhow::ensure!(
+            (self.root as usize) < len,
+            "root {} out of bounds ({len} slots)",
+            self.root
+        );
+        let mut seen = vec![false; len];
+        for &f in &self.free {
+            let fi = f as usize;
+            anyhow::ensure!(fi < len, "free id {f} out of bounds");
+            anyhow::ensure!(!seen[fi], "slot {f} on the free list twice");
+            seen[fi] = true;
+            anyhow::ensure!(
+                matches!(self.cold[fi], Cold::Free),
+                "free slot {f} holds a live payload"
+            );
+            anyhow::ensure!(
+                self.hot.left[fi] == NIL && self.hot.right[fi] == NIL,
+                "free slot {f} has children"
+            );
+        }
+        let mut stack = vec![self.root];
+        let mut live = 0usize;
+        while let Some(nid) = stack.pop() {
+            let ni = nid as usize;
+            anyhow::ensure!(ni < len, "node id {nid} out of bounds");
+            anyhow::ensure!(!seen[ni], "slot {nid} reached twice (cycle or free-list overlap)");
+            seen[ni] = true;
+            live += 1;
+            match &self.cold[ni] {
+                Cold::Free => anyhow::bail!("free slot {nid} reachable from root"),
+                Cold::Leaf { ids } => {
+                    anyhow::ensure!(self.hot.left[ni] == NIL, "leaf {nid} has a left child");
+                    anyhow::ensure!(self.hot.right[ni] == NIL, "leaf {nid} has a right child");
+                    anyhow::ensure!(
+                        ids.len() == self.n[ni] as usize,
+                        "leaf {nid}: |ids| {} != n {}",
+                        ids.len(),
+                        self.n[ni]
+                    );
+                    anyhow::ensure!(
+                        self.hot.value[ni] == leaf_value(self.n[ni], self.n_pos[ni]),
+                        "leaf {nid}: stale hot value"
+                    );
+                }
+                Cold::Random { n_left, n_right } => {
+                    let (l, r) = (self.hot.left[ni], self.hot.right[ni]);
+                    anyhow::ensure!(l != NIL && r != NIL, "random node {nid} missing children");
+                    anyhow::ensure!(
+                        *n_left == self.n[l as usize] && *n_right == self.n[r as usize],
+                        "random node {nid}: branch counts disagree with children"
+                    );
+                    anyhow::ensure!(
+                        self.n[ni] == self.n[l as usize] + self.n[r as usize],
+                        "random node {nid}: n != n_l + n_r"
+                    );
+                    anyhow::ensure!(
+                        self.n_pos[ni] == self.n_pos[l as usize] + self.n_pos[r as usize],
+                        "random node {nid}: n_pos disagrees with children"
+                    );
+                    stack.push(l);
+                    stack.push(r);
+                }
+                Cold::Greedy {
+                    attrs,
+                    best_attr,
+                    best_thr,
+                } => {
+                    let (l, r) = (self.hot.left[ni], self.hot.right[ni]);
+                    anyhow::ensure!(l != NIL && r != NIL, "greedy node {nid} missing children");
+                    anyhow::ensure!(
+                        *best_attr < attrs.len() && *best_thr < attrs[*best_attr].thresholds.len(),
+                        "greedy node {nid}: best split out of range"
+                    );
+                    anyhow::ensure!(
+                        self.hot.attr[ni] as usize == attrs[*best_attr].attr
+                            && self.hot.thresh[ni] == attrs[*best_attr].thresholds[*best_thr].v,
+                        "greedy node {nid}: hot split diverged from cold plane"
+                    );
+                    anyhow::ensure!(
+                        self.n[ni] == self.n[l as usize] + self.n[r as usize]
+                            && self.n_pos[ni] == self.n_pos[l as usize] + self.n_pos[r as usize],
+                        "greedy node {nid}: counts disagree with children"
+                    );
+                    stack.push(l);
+                    stack.push(r);
+                }
+            }
+        }
+        anyhow::ensure!(
+            live + self.free.len() == len,
+            "leak: {live} live + {} free != {len} slots",
+            self.free.len()
+        );
+        Ok(())
+    }
+}
+
+/// Reusable sorted-id scratch for order-insensitive leaf comparisons: one
+/// pair of buffers serves every leaf of a whole tree comparison instead of
+/// two fresh allocations per leaf (tree.rs' `structural_eq` shares this).
+#[derive(Default)]
+pub(crate) struct IdScratch {
+    a: Vec<InstanceId>,
+    b: Vec<InstanceId>,
+}
+
+impl IdScratch {
+    /// Multiset equality of two id lists via the reused buffers.
+    pub(crate) fn ids_eq(&mut self, x: &[InstanceId], y: &[InstanceId]) -> bool {
+        if x.len() != y.len() {
+            return false;
+        }
+        self.a.clear();
+        self.a.extend_from_slice(x);
+        self.a.sort_unstable();
+        self.b.clear();
+        self.b.extend_from_slice(y);
+        self.b.sort_unstable();
+        self.a == self.b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::forest::params::{MaxFeatures, Params};
+    use crate::forest::train::{train, TrainCtx, ROOT_PATH};
+    use crate::forest::tree::structural_eq;
+
+    fn toy_data(n: usize, seed: u64) -> Dataset {
+        generate(
+            &SynthSpec {
+                n,
+                informative: 3,
+                redundant: 1,
+                noise: 2,
+                flip: 0.05,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    fn params(d_rmax: usize) -> Params {
+        Params {
+            n_trees: 1,
+            max_depth: 8,
+            k: 5,
+            d_rmax,
+            max_features: MaxFeatures::Sqrt,
+            ..Default::default()
+        }
+    }
+
+    fn boxed(data: &Dataset, p: &Params, tree_seed: u64) -> Node {
+        let ctx = TrainCtx {
+            data,
+            params: p,
+            tree_seed,
+        };
+        train(&ctx, data.live_ids(), 0, ROOT_PATH)
+    }
+
+    #[test]
+    fn from_node_roundtrips_structurally() {
+        let d = toy_data(300, 1);
+        for d_rmax in [0usize, 2] {
+            let p = params(d_rmax);
+            let node = boxed(&d, &p, 7);
+            let arena = ArenaTree::from_node(boxed(&d, &p, 7));
+            assert!(arena.matches_node(&node));
+            assert!(structural_eq(&arena.to_node(), &node));
+            arena.validate().unwrap();
+            assert!(arena.is_bfs_compact());
+            assert_eq!(arena.free_len(), 0);
+        }
+    }
+
+    #[test]
+    fn bfs_layout_matches_tensorizer_contract() {
+        // Fresh builds place the root at 0 and children in contiguous
+        // ascending pairs — what the tensorizer's linear copy relies on.
+        let d = toy_data(400, 2);
+        let arena = ArenaTree::from_node(boxed(&d, &params(1), 3));
+        assert_eq!(arena.root(), 0);
+        let mut next_expected = 1u32;
+        for i in 0..arena.len() {
+            let l = arena.hot().left[i];
+            if l == NIL {
+                continue;
+            }
+            assert_eq!(l, next_expected, "left child of {i} out of BFS order");
+            assert_eq!(arena.hot().right[i], next_expected + 1);
+            next_expected += 2;
+        }
+        assert_eq!(next_expected as usize, arena.len());
+    }
+
+    #[test]
+    fn predict_matches_boxed_descent() {
+        let d = toy_data(500, 3);
+        let node = boxed(&d, &params(2), 11);
+        let arena = ArenaTree::from_node(boxed(&d, &params(2), 11));
+        for id in d.live_ids().into_iter().take(120) {
+            let row = d.row(id);
+            assert_eq!(arena.predict(&row), node.predict(&row), "row {id}");
+        }
+    }
+
+    #[test]
+    fn block_descent_matches_per_row() {
+        let d = toy_data(400, 4);
+        let arena = ArenaTree::from_node(boxed(&d, &params(1), 5));
+        let rows: Vec<Vec<f32>> = (0..97u32).map(|i| d.row(i)).collect();
+        let mut sums = vec![0.0f32; rows.len()];
+        let mut cursors = Vec::new();
+        arena.predict_block_sum(&rows, &mut cursors, &mut sums);
+        for (row, s) in rows.iter().zip(&sums) {
+            assert_eq!(*s, arena.predict(row));
+        }
+        // accumulation: a second pass adds on top
+        arena.predict_block_sum(&rows, &mut cursors, &mut sums);
+        for (row, s) in rows.iter().zip(&sums) {
+            assert_eq!(*s, 2.0 * arena.predict(row));
+        }
+    }
+
+    #[test]
+    fn shape_and_memory_track_boxed_tree() {
+        let d = toy_data(350, 5);
+        let node = boxed(&d, &params(2), 9);
+        let arena = ArenaTree::from_node(boxed(&d, &params(2), 9));
+        assert_eq!(arena.shape(), node.shape());
+        let m = arena.memory();
+        assert!(m.structure > 0 && m.decision_stats > 0 && m.leaf_stats > 0);
+        assert_eq!(m.total(), m.structure + m.decision_stats + m.leaf_stats);
+        assert_eq!(
+            arena.live_len(),
+            node.shape().leaves + node.shape().decision_nodes()
+        );
+    }
+
+    #[test]
+    fn collect_ids_matches_boxed_order() {
+        let d = toy_data(250, 6);
+        let node = boxed(&d, &params(1), 13);
+        let arena = ArenaTree::from_node(boxed(&d, &params(1), 13));
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        node.collect_ids(None, &mut a);
+        arena.collect_ids(arena.root(), None, &mut b);
+        assert_eq!(a, b);
+        let ex = a[0];
+        a.clear();
+        b.clear();
+        node.collect_ids(Some(ex), &mut a);
+        arena.collect_ids(arena.root(), Some(ex), &mut b);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), arena.n_root() as usize - 1);
+    }
+
+    #[test]
+    fn free_and_regraft_reuses_slots() {
+        let d = toy_data(300, 7);
+        let mut arena = ArenaTree::from_node(boxed(&d, &params(0), 17));
+        let before_len = arena.len();
+        let root = arena.root();
+        // Replace the whole tree in place with a rebuilt copy: every slot
+        // the old children held must be recycled, not leaked.
+        arena.replace_node(root, boxed(&d, &params(0), 17));
+        arena.validate().unwrap();
+        assert_eq!(arena.len(), before_len, "regraft must reuse freed slots");
+        assert!(!arena.is_bfs_compact());
+        assert!(arena.matches_node(&boxed(&d, &params(0), 17)));
+    }
+
+    #[test]
+    fn structural_matches_between_arenas() {
+        let d = toy_data(200, 8);
+        let a = ArenaTree::from_node(boxed(&d, &params(1), 1));
+        let b = ArenaTree::from_node(boxed(&d, &params(1), 1));
+        let c = ArenaTree::from_node(boxed(&d, &params(1), 2));
+        assert!(a.structural_matches(&b));
+        assert!(!a.structural_matches(&c));
+    }
+
+    #[test]
+    fn id_scratch_multiset_semantics() {
+        let mut s = IdScratch::default();
+        assert!(s.ids_eq(&[3, 1, 2], &[1, 2, 3]));
+        assert!(!s.ids_eq(&[1, 2], &[1, 2, 3]));
+        assert!(!s.ids_eq(&[1, 1, 2], &[1, 2, 2]));
+        assert!(s.ids_eq(&[], &[]));
+    }
+}

@@ -1,0 +1,800 @@
+//! Deletion, addition and deletion-cost dry runs over [`ArenaTree`] storage —
+//! the arena port of `forest::delete` (paper Alg. 2 / §6), preserving its
+//! control flow, RNG stream consumption and retrain triggers exactly, so an
+//! arena tree evolves bit-identically (`structural_eq`) to the boxed
+//! implementation under any delete/add sequence. The boxed path stays in the
+//! crate as the oracle; the equivalence is enforced by this module's tests
+//! and `tests/arena_churn.rs`.
+//!
+//! Structure updates reuse the same primitives as the boxed path
+//! (`ThresholdStats::remove`/`add`, `resample_invalid`, `select_best`,
+//! `workspace::train_subtree`); subtree retrains are grafted into the arena
+//! in deterministic BFS order with freed slots recycled LIFO, so node
+//! allocation is a pure function of the operation sequence (DESIGN.md §7).
+
+use crate::data::dataset::InstanceId;
+use crate::forest::arena::{leaf_value, ArenaTree, Cold, NIL};
+use crate::forest::criterion::split_score;
+use crate::forest::delete::{delete_rng, DeleteReport, RetrainEvent};
+use crate::forest::stats::{enumerate_valid, resample_invalid, sample_thresholds, AttrStats};
+use crate::forest::train::{child_path, gather_pairs, partition, select_best, TrainCtx, ROOT_PATH};
+use crate::forest::workspace::train_subtree;
+
+/// Delete instance `id` from the arena tree (paper Alg. 2). `ctx.data` must
+/// still contain the instance; `epoch` is the tree's update counter feeding
+/// the Lemma-A.1 resampling streams.
+pub fn delete(
+    t: &mut ArenaTree,
+    ctx: &TrainCtx<'_>,
+    id: InstanceId,
+    epoch: u64,
+    report: &mut DeleteReport,
+) {
+    let root = t.root();
+    delete_at(t, ctx, root, id, 0, ROOT_PATH, epoch, report);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn delete_at(
+    t: &mut ArenaTree,
+    ctx: &TrainCtx<'_>,
+    nid: u32,
+    id: InstanceId,
+    depth: usize,
+    path: u64,
+    epoch: u64,
+    report: &mut DeleteReport,
+) {
+    let y = ctx.data.y(id);
+    let ni = nid as usize;
+
+    // ---- leaf: Alg. 2 lines 3–6 -----------------------------------------
+    if t.hot.left[ni] == NIL {
+        {
+            let Cold::Leaf { ids } = &mut t.cold[ni] else {
+                unreachable!("leaf-shaped slot without leaf payload");
+            };
+            let pos = ids
+                .iter()
+                .position(|&i| i == id)
+                .expect("deleting an instance absent from its leaf");
+            ids.swap_remove(pos);
+        }
+        let n_now = t.n[ni] - 1;
+        let pos_now = t.n_pos[ni] - y as u32;
+        t.n[ni] = n_now;
+        t.n_pos[ni] = pos_now;
+        t.hot.value[ni] = leaf_value(n_now, pos_now);
+        return;
+    }
+
+    // ---- decision node ----------------------------------------------------
+    let n_new = t.n[ni] - 1;
+    let pos_new = t.n_pos[ni] - y as u32;
+
+    // Collapse to a leaf when scratch training would stop here now.
+    if n_new < ctx.params.min_samples_split as u32 || pos_new == 0 || pos_new == n_new {
+        let mut ids = Vec::with_capacity(n_new as usize);
+        t.collect_ids(nid, Some(id), &mut ids);
+        report.retrain_events.push(RetrainEvent { depth, n: n_new });
+        t.collapse_to_leaf(nid, ctx.data, ids);
+        return;
+    }
+
+    if matches!(&t.cold[ni], Cold::Random { .. }) {
+        delete_random_at(t, ctx, nid, id, n_new, pos_new, depth, path, epoch, report);
+    } else {
+        delete_greedy_at(t, ctx, nid, id, y, n_new, pos_new, depth, path, epoch, report);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn delete_random_at(
+    t: &mut ArenaTree,
+    ctx: &TrainCtx<'_>,
+    nid: u32,
+    id: InstanceId,
+    n_new: u32,
+    pos_new: u32,
+    depth: usize,
+    path: u64,
+    epoch: u64,
+    report: &mut DeleteReport,
+) {
+    let ni = nid as usize;
+    // stage 1: update counts; decide whether the threshold fell out of range
+    let xa = ctx.data.x(id, t.hot.attr[ni] as usize);
+    let goes_left = xa <= t.hot.thresh[ni];
+    let needs_retrain = {
+        let Cold::Random { n_left, n_right } = &mut t.cold[ni] else {
+            unreachable!("delete_random_at on non-random node");
+        };
+        if goes_left {
+            *n_left -= 1;
+        } else {
+            *n_right -= 1;
+        }
+        *n_left == 0 || *n_right == 0
+    };
+    t.n[ni] = n_new;
+    t.n_pos[ni] = pos_new;
+
+    if needs_retrain {
+        // Threshold no longer inside [a_min, a_max): retrain this node with
+        // its path seed — identical to scratch training on the updated data
+        // (Alg. 2 lines 10–17, derandomized; DESIGN.md §5).
+        let mut ids = Vec::with_capacity(n_new as usize);
+        t.collect_ids(nid, Some(id), &mut ids);
+        report.retrain_events.push(RetrainEvent { depth, n: n_new });
+        let node = train_subtree(ctx, ids, depth, path);
+        t.replace_node(nid, node);
+        return;
+    }
+
+    let next = if goes_left {
+        t.hot.left[ni]
+    } else {
+        t.hot.right[ni]
+    };
+    delete_at(
+        t,
+        ctx,
+        next,
+        id,
+        depth + 1,
+        child_path(path, depth, !goes_left),
+        epoch,
+        report,
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn delete_greedy_at(
+    t: &mut ArenaTree,
+    ctx: &TrainCtx<'_>,
+    nid: u32,
+    id: InstanceId,
+    y: u8,
+    n_new: u32,
+    pos_new: u32,
+    depth: usize,
+    path: u64,
+    epoch: u64,
+    report: &mut DeleteReport,
+) {
+    let ni = nid as usize;
+    // stage 1: update node + threshold statistics (Alg. 2 line 8): O(p̃·k)
+    t.n[ni] = n_new;
+    t.n_pos[ni] = pos_new;
+    let (old_attr, old_v, any_invalid) = {
+        let Cold::Greedy {
+            attrs,
+            best_attr,
+            best_thr,
+        } = &mut t.cold[ni]
+        else {
+            unreachable!("delete_greedy_at on non-greedy node");
+        };
+        let old_attr = attrs[*best_attr].attr;
+        let old_v = attrs[*best_attr].thresholds[*best_thr].v;
+        let mut any_invalid = false;
+        for a in attrs.iter_mut() {
+            let xa = ctx.data.x(id, a.attr);
+            for th in a.thresholds.iter_mut() {
+                th.remove(xa, y);
+                any_invalid |= !th.is_valid();
+            }
+        }
+        (old_attr, old_v, any_invalid)
+    };
+
+    // stage 2: resample invalidated thresholds / attributes (Lemma A.1);
+    // requires gathering the node's data from its leaves (§3.1).
+    let mut gathered: Option<Vec<InstanceId>> = None;
+    if any_invalid {
+        let mut ids = Vec::with_capacity(n_new as usize);
+        t.collect_ids(nid, Some(id), &mut ids);
+
+        let made_leaf = {
+            let mut rng = delete_rng(ctx.tree_seed, path, epoch);
+            let Cold::Greedy { attrs, .. } = &mut t.cold[ni] else {
+                unreachable!()
+            };
+            let mut dead_slots: Vec<usize> = Vec::new();
+            for (slot, a) in attrs.iter_mut().enumerate() {
+                if a.thresholds.iter().all(|th| th.is_valid()) {
+                    continue;
+                }
+                let mut pairs = gather_pairs(ctx.data, &ids, a.attr);
+                let candidates = enumerate_valid(&mut pairs);
+                report.thresholds_resampled +=
+                    resample_invalid(&mut a.thresholds, &candidates, ctx.params.k, &mut rng)
+                        as u64;
+                if a.thresholds.is_empty() {
+                    dead_slots.push(slot);
+                }
+            }
+            // Attributes with no remaining valid thresholds are replaced by
+            // uniformly drawn valid attributes (§A.1).
+            if !dead_slots.is_empty() {
+                let in_use: Vec<usize> = attrs.iter().map(|a| a.attr).collect();
+                let p = ctx.data.n_features();
+                let mut pool: Vec<usize> = (0..p).filter(|a| !in_use.contains(a)).collect();
+                rng.shuffle(&mut pool);
+                let mut pool_iter = pool.into_iter();
+                for slot in dead_slots {
+                    for attr in pool_iter.by_ref() {
+                        let mut pairs = gather_pairs(ctx.data, &ids, attr);
+                        let candidates = enumerate_valid(&mut pairs);
+                        if candidates.is_empty() {
+                            continue;
+                        }
+                        attrs[slot] = AttrStats {
+                            attr,
+                            thresholds: sample_thresholds(candidates, ctx.params.k, &mut rng),
+                        };
+                        report.attrs_resampled += 1;
+                        break;
+                    }
+                }
+                attrs.retain(|a| !a.thresholds.is_empty());
+            }
+            attrs.is_empty()
+        };
+
+        if made_leaf {
+            // No valid split exists anywhere anymore: leaf.
+            report.retrain_events.push(RetrainEvent { depth, n: n_new });
+            t.collapse_to_leaf(nid, ctx.data, ids);
+            return;
+        }
+        gathered = Some(ids);
+    }
+
+    // stage 3: recompute scores from cached counts, select the optimum
+    // (Alg. 2 lines 23–24).
+    let (new_attr, new_v) = {
+        let Cold::Greedy {
+            attrs,
+            best_attr,
+            best_thr,
+        } = &mut t.cold[ni]
+        else {
+            unreachable!()
+        };
+        let (ba, bt) = select_best(n_new, pos_new, attrs, ctx.params).expect("attrs non-empty");
+        *best_attr = ba;
+        *best_thr = bt;
+        (attrs[ba].attr, attrs[ba].thresholds[bt].v)
+    };
+
+    if new_attr != old_attr || new_v != old_v {
+        // Optimal split changed: retrain both children on the new partition
+        // (Alg. 2 lines 25–27).
+        let ids = match gathered {
+            Some(ids) => ids,
+            None => {
+                let mut v = Vec::with_capacity(n_new as usize);
+                t.collect_ids(nid, Some(id), &mut v);
+                v
+            }
+        };
+        report.retrain_events.push(RetrainEvent { depth, n: n_new });
+        let (left_ids, right_ids) = partition(ctx.data, &ids, new_attr, new_v);
+        debug_assert!(!left_ids.is_empty() && !right_ids.is_empty());
+        let left = train_subtree(ctx, left_ids, depth + 1, child_path(path, depth, false));
+        let right = train_subtree(ctx, right_ids, depth + 1, child_path(path, depth, true));
+        t.replace_children(nid, new_attr, new_v, left, right);
+        return;
+    }
+
+    // stage 4: split unchanged — keep the hot plane aligned with the
+    // (possibly re-indexed) cold split and continue down the branch.
+    t.refresh_greedy_split(nid);
+    let xa = ctx.data.x(id, new_attr);
+    let goes_left = xa <= new_v;
+    let next = if goes_left {
+        t.hot.left[ni]
+    } else {
+        t.hot.right[ni]
+    };
+    delete_at(
+        t,
+        ctx,
+        next,
+        id,
+        depth + 1,
+        child_path(path, depth, !goes_left),
+        epoch,
+        report,
+    );
+}
+
+/// Non-mutating estimate of the retrain cost of deleting `id` — the arena
+/// port of `forest::delete::delete_cost` (worst-of-1000 adversary signal).
+pub fn delete_cost(t: &ArenaTree, ctx: &TrainCtx<'_>, id: InstanceId) -> u64 {
+    cost_at(t, ctx, t.root(), id)
+}
+
+fn cost_at(t: &ArenaTree, ctx: &TrainCtx<'_>, nid: u32, id: InstanceId) -> u64 {
+    let ni = nid as usize;
+    if t.hot.left[ni] == NIL {
+        return 0;
+    }
+    let y = ctx.data.y(id);
+    let n_new = t.n[ni] - 1;
+    let pos_new = t.n_pos[ni] - y as u32;
+    if n_new < ctx.params.min_samples_split as u32 || pos_new == 0 || pos_new == n_new {
+        return n_new as u64;
+    }
+    match &t.cold[ni] {
+        Cold::Random { n_left, n_right } => {
+            let xa = ctx.data.x(id, t.hot.attr[ni] as usize);
+            let goes_left = xa <= t.hot.thresh[ni];
+            let (nl, nr) = if goes_left {
+                (*n_left - 1, *n_right)
+            } else {
+                (*n_left, *n_right - 1)
+            };
+            if nl == 0 || nr == 0 {
+                return n_new as u64;
+            }
+            let next = if goes_left {
+                t.hot.left[ni]
+            } else {
+                t.hot.right[ni]
+            };
+            cost_at(t, ctx, next, id)
+        }
+        Cold::Greedy {
+            attrs,
+            best_attr,
+            best_thr,
+        } => {
+            let old_attr = attrs[*best_attr].attr;
+            let old_v = attrs[*best_attr].thresholds[*best_thr].v;
+            // Find the best split over decremented, still-valid thresholds.
+            let mut best: Option<(usize, f32, f64)> = None;
+            let mut chosen_invalid = false;
+            for a in attrs {
+                let xa = ctx.data.x(id, a.attr);
+                for th in &a.thresholds {
+                    let mut tt = *th;
+                    tt.remove(xa, y);
+                    let is_chosen = a.attr == old_attr && th.v == old_v;
+                    if !tt.is_valid() {
+                        if is_chosen {
+                            chosen_invalid = true;
+                        }
+                        continue;
+                    }
+                    let s = split_score(
+                        ctx.params.criterion,
+                        n_new,
+                        pos_new,
+                        tt.n_left,
+                        tt.n_left_pos,
+                    );
+                    match best {
+                        Some((_, _, bs)) if s >= bs => {}
+                        _ => best = Some((a.attr, th.v, s)),
+                    }
+                }
+            }
+            if chosen_invalid {
+                return n_new as u64; // pessimistic: resampling may move the split
+            }
+            match best {
+                Some((ba, bv, _)) if ba == old_attr && bv == old_v => {
+                    let xa = ctx.data.x(id, old_attr);
+                    let next = if xa <= old_v {
+                        t.hot.left[ni]
+                    } else {
+                        t.hot.right[ni]
+                    };
+                    cost_at(t, ctx, next, id)
+                }
+                _ => n_new as u64,
+            }
+        }
+        _ => unreachable!("decision-shaped slot without decision payload"),
+    }
+}
+
+/// Add an instance (already inserted into the dataset) to the arena tree —
+/// the §6 continual-learning extension, mirroring `forest::delete::add`.
+pub fn add(
+    t: &mut ArenaTree,
+    ctx: &TrainCtx<'_>,
+    id: InstanceId,
+    epoch: u64,
+    report: &mut DeleteReport,
+) {
+    let root = t.root();
+    add_at(t, ctx, root, id, 0, ROOT_PATH, epoch, report);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn add_at(
+    t: &mut ArenaTree,
+    ctx: &TrainCtx<'_>,
+    nid: u32,
+    id: InstanceId,
+    depth: usize,
+    path: u64,
+    epoch: u64,
+    report: &mut DeleteReport,
+) {
+    let y = ctx.data.y(id);
+    let ni = nid as usize;
+
+    // ---- leaf ----------------------------------------------------------
+    if t.hot.left[ni] == NIL {
+        {
+            let Cold::Leaf { ids } = &mut t.cold[ni] else {
+                unreachable!("leaf-shaped slot without leaf payload");
+            };
+            ids.push(id);
+        }
+        let n_now = t.n[ni] + 1;
+        let pos_now = t.n_pos[ni] + y as u32;
+        t.n[ni] = n_now;
+        t.n_pos[ni] = pos_now;
+        t.hot.value[ni] = leaf_value(n_now, pos_now);
+        // A leaf that scratch training would now split gets rebuilt (it may
+        // have stopped on purity / size before this addition).
+        let should_split = n_now >= ctx.params.min_samples_split as u32
+            && pos_now > 0
+            && pos_now < n_now
+            && depth < ctx.params.max_depth;
+        if should_split {
+            let ids = {
+                let Cold::Leaf { ids } = &mut t.cold[ni] else {
+                    unreachable!()
+                };
+                std::mem::take(ids)
+            };
+            report.retrain_events.push(RetrainEvent {
+                depth,
+                n: ids.len() as u32,
+            });
+            let node = train_subtree(ctx, ids, depth, path);
+            t.replace_node(nid, node);
+        }
+        return;
+    }
+
+    if matches!(&t.cold[ni], Cold::Random { .. }) {
+        let xa = ctx.data.x(id, t.hot.attr[ni] as usize);
+        let goes_left = xa <= t.hot.thresh[ni];
+        {
+            let Cold::Random { n_left, n_right } = &mut t.cold[ni] else {
+                unreachable!()
+            };
+            if goes_left {
+                *n_left += 1;
+            } else {
+                *n_right += 1;
+            }
+        }
+        t.n[ni] += 1;
+        t.n_pos[ni] += y as u32;
+        let next = if goes_left {
+            t.hot.left[ni]
+        } else {
+            t.hot.right[ni]
+        };
+        add_at(
+            t,
+            ctx,
+            next,
+            id,
+            depth + 1,
+            child_path(path, depth, !goes_left),
+            epoch,
+            report,
+        );
+        return;
+    }
+
+    // ---- greedy node ------------------------------------------------------
+    // stage 1: update stats; detect thresholds whose adjacency the new value
+    // breaks (x strictly between v_low and v_high).
+    let n_now = t.n[ni] + 1;
+    let pos_now = t.n_pos[ni] + y as u32;
+    t.n[ni] = n_now;
+    t.n_pos[ni] = pos_now;
+    let (old_attr, old_v, any_broken) = {
+        let Cold::Greedy {
+            attrs,
+            best_attr,
+            best_thr,
+        } = &mut t.cold[ni]
+        else {
+            unreachable!("add_at greedy on non-greedy node");
+        };
+        let old_attr = attrs[*best_attr].attr;
+        let old_v = attrs[*best_attr].thresholds[*best_thr].v;
+        let mut any_broken = false;
+        for a in attrs.iter_mut() {
+            let xa = ctx.data.x(id, a.attr);
+            for th in a.thresholds.iter_mut() {
+                if th.adjacency_broken(xa) {
+                    any_broken = true;
+                    th.n_low = 0; // force invalid so the resampler replaces it
+                } else {
+                    th.add(xa, y);
+                }
+            }
+        }
+        (old_attr, old_v, any_broken)
+    };
+
+    // stage 2: resample broken thresholds over the updated data.
+    if any_broken {
+        let mut ids = Vec::new();
+        t.collect_ids(nid, None, &mut ids);
+        ids.push(id); // leaves below don't know the new instance yet
+
+        let made_leafless = {
+            let mut rng = delete_rng(ctx.tree_seed, path, 0xADD ^ epoch);
+            let Cold::Greedy { attrs, .. } = &mut t.cold[ni] else {
+                unreachable!()
+            };
+            for a in attrs.iter_mut() {
+                if a.thresholds.iter().all(|th| th.is_valid()) {
+                    continue;
+                }
+                let mut pairs = gather_pairs(ctx.data, &ids, a.attr);
+                let candidates = enumerate_valid(&mut pairs);
+                report.thresholds_resampled +=
+                    resample_invalid(&mut a.thresholds, &candidates, ctx.params.k, &mut rng)
+                        as u64;
+            }
+            attrs.retain(|a| !a.thresholds.is_empty());
+            attrs.is_empty()
+        };
+        if made_leafless {
+            report.retrain_events.push(RetrainEvent {
+                depth,
+                n: ids.len() as u32,
+            });
+            let node = train_subtree(ctx, ids, depth, path);
+            t.replace_node(nid, node);
+            return;
+        }
+    }
+
+    // stage 3: re-select optimum; retrain children if it moved.
+    let (new_attr, new_v) = {
+        let Cold::Greedy {
+            attrs,
+            best_attr,
+            best_thr,
+        } = &mut t.cold[ni]
+        else {
+            unreachable!()
+        };
+        let (ba, bt) = select_best(n_now, pos_now, attrs, ctx.params).expect("attrs");
+        *best_attr = ba;
+        *best_thr = bt;
+        (attrs[ba].attr, attrs[ba].thresholds[bt].v)
+    };
+
+    if new_attr != old_attr || new_v != old_v {
+        let mut ids = Vec::new();
+        t.collect_ids(nid, None, &mut ids);
+        if !ids.contains(&id) {
+            ids.push(id);
+        }
+        report.retrain_events.push(RetrainEvent {
+            depth,
+            n: ids.len() as u32,
+        });
+        let (left_ids, right_ids) = partition(ctx.data, &ids, new_attr, new_v);
+        let left = train_subtree(ctx, left_ids, depth + 1, child_path(path, depth, false));
+        let right = train_subtree(ctx, right_ids, depth + 1, child_path(path, depth, true));
+        t.replace_children(nid, new_attr, new_v, left, right);
+        return;
+    }
+
+    // stage 4: split unchanged — re-align the hot split and recurse.
+    t.refresh_greedy_split(nid);
+    let xa = ctx.data.x(id, new_attr);
+    let goes_left = xa <= new_v;
+    let next = if goes_left {
+        t.hot.left[ni]
+    } else {
+        t.hot.right[ni]
+    };
+    add_at(
+        t,
+        ctx,
+        next,
+        id,
+        depth + 1,
+        child_path(path, depth, !goes_left),
+        epoch,
+        report,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::forest::delete as boxed;
+    use crate::forest::params::{MaxFeatures, Params};
+    use crate::forest::train::{train, TrainCtx, ROOT_PATH};
+    use crate::util::rng::Rng;
+
+    fn data(n: usize, seed: u64) -> Dataset {
+        generate(
+            &SynthSpec {
+                n,
+                informative: 3,
+                redundant: 1,
+                noise: 2,
+                flip: 0.1,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    fn params(d_rmax: usize, k: usize) -> Params {
+        Params {
+            max_depth: 8,
+            k,
+            d_rmax,
+            max_features: MaxFeatures::Sqrt,
+            ..Default::default()
+        }
+    }
+
+    /// The oracle harness: drive the boxed implementation and the arena with
+    /// the same operation/epoch sequence and assert `structural_eq` + arena
+    /// consistency throughout.
+    fn churn(d_rmax: usize, k: usize, data_seed: u64, tree_seed: u64, ops: usize) {
+        let mut d = data(260, data_seed);
+        let p = params(d_rmax, k);
+        let ctx_seed = tree_seed;
+        let mut boxed_root = {
+            let ctx = TrainCtx {
+                data: &d,
+                params: &p,
+                tree_seed: ctx_seed,
+            };
+            train(&ctx, d.live_ids(), 0, ROOT_PATH)
+        };
+        let mut arena = ArenaTree::from_node({
+            let ctx = TrainCtx {
+                data: &d,
+                params: &p,
+                tree_seed: ctx_seed,
+            };
+            train(&ctx, d.live_ids(), 0, ROOT_PATH)
+        });
+        let mut rng = Rng::new(data_seed ^ 0xC0FFEE);
+        for epoch in 0..ops as u64 {
+            let do_delete = d.n_alive() > 40 && rng.bernoulli(0.7);
+            if do_delete {
+                let live = d.live_ids();
+                let id = live[rng.index(live.len())];
+                let mut ra = DeleteReport::default();
+                let mut rb = DeleteReport::default();
+                {
+                    let ctx = TrainCtx {
+                        data: &d,
+                        params: &p,
+                        tree_seed: ctx_seed,
+                    };
+                    boxed::delete(&ctx, &mut boxed_root, id, 0, ROOT_PATH, epoch, &mut rb);
+                    delete(&mut arena, &ctx, id, epoch, &mut ra);
+                }
+                assert_eq!(ra.cost(), rb.cost(), "epoch {epoch}: report cost diverged");
+                assert_eq!(
+                    ra.thresholds_resampled, rb.thresholds_resampled,
+                    "epoch {epoch}: resample count diverged"
+                );
+                d.mark_removed(id);
+            } else {
+                let row: Vec<f32> = (0..d.n_features())
+                    .map(|_| rng.range_f32(-3.0, 3.0))
+                    .collect();
+                let y = rng.bernoulli(0.5) as u8;
+                let id = d.push_row(&row, y);
+                let mut ra = DeleteReport::default();
+                let mut rb = DeleteReport::default();
+                {
+                    let ctx = TrainCtx {
+                        data: &d,
+                        params: &p,
+                        tree_seed: ctx_seed,
+                    };
+                    boxed::add(&ctx, &mut boxed_root, id, 0, ROOT_PATH, epoch, &mut rb);
+                    add(&mut arena, &ctx, id, epoch, &mut ra);
+                }
+            }
+            arena.validate().unwrap_or_else(|e| {
+                panic!("arena inconsistent after epoch {epoch}: {e}")
+            });
+            assert!(
+                arena.matches_node(&boxed_root),
+                "arena diverged from boxed tree at epoch {epoch}"
+            );
+        }
+        assert_eq!(arena.n_root() as usize, d.n_alive());
+    }
+
+    #[test]
+    fn greedy_churn_matches_boxed() {
+        churn(0, 5, 1, 3, 120);
+    }
+
+    #[test]
+    fn random_layer_churn_matches_boxed() {
+        churn(3, 5, 2, 4, 120);
+    }
+
+    #[test]
+    fn exhaustive_k_churn_matches_boxed() {
+        churn(0, 10_000, 3, 9, 60);
+    }
+
+    #[test]
+    fn delete_cost_matches_boxed() {
+        let d = data(220, 5);
+        let p = params(2, 5);
+        let ctx = TrainCtx {
+            data: &d,
+            params: &p,
+            tree_seed: 13,
+        };
+        let root = train(&ctx, d.live_ids(), 0, ROOT_PATH);
+        let arena = ArenaTree::from_node(train(&ctx, d.live_ids(), 0, ROOT_PATH));
+        for id in d.live_ids().into_iter().take(80) {
+            assert_eq!(
+                delete_cost(&arena, &ctx, id),
+                boxed::delete_cost(&ctx, &root, id, 0),
+                "cost diverged for id {id}"
+            );
+        }
+        // dry runs must not mutate the arena
+        arena.validate().unwrap();
+        assert!(arena.matches_node(&root));
+    }
+
+    #[test]
+    fn delete_down_to_empty_leaf() {
+        let mut d = data(60, 6);
+        let p = params(1, 3);
+        let ctx_seed = 5u64;
+        let mut arena = ArenaTree::from_node({
+            let ctx = TrainCtx {
+                data: &d,
+                params: &p,
+                tree_seed: ctx_seed,
+            };
+            train(&ctx, d.live_ids(), 0, ROOT_PATH)
+        });
+        let ids = d.live_ids();
+        for (epoch, id) in ids.into_iter().enumerate() {
+            let ctx = TrainCtx {
+                data: &d,
+                params: &p,
+                tree_seed: ctx_seed,
+            };
+            let mut report = DeleteReport::default();
+            delete(&mut arena, &ctx, id, epoch as u64, &mut report);
+            d.mark_removed(id);
+            arena.validate().unwrap();
+        }
+        assert_eq!(arena.n_root(), 0);
+        assert!(arena.is_leaf(arena.root()));
+        assert_eq!(arena.predict(&[0.0; 6]), 0.5);
+        // everything except the root slot must be back on the free list
+        assert_eq!(arena.live_len(), 1);
+    }
+}

@@ -13,6 +13,11 @@
 //! - greedy node: invalidated thresholds/attributes are resampled per
 //!   Lemma A.1, scores are recomputed from the cached counts, and only a
 //!   *changed argmax* forces retraining the two children on the new split.
+//!
+//! Since the arena refactor (DESIGN.md §7) this boxed implementation is the
+//! *reference oracle*: live trees store their nodes in `forest::arena`, and
+//! `forest::arena_update` ports this exact control flow onto arena ids. The
+//! two are kept bit-identical by the churn equivalence tests.
 
 use crate::data::dataset::InstanceId;
 use crate::forest::criterion::split_score;
@@ -54,8 +59,10 @@ impl DeleteReport {
 }
 
 /// Per-deletion RNG for Lemma A.1 resampling; `epoch` is a per-tree update
-/// counter so successive deletions draw fresh randomness.
-fn delete_rng(tree_seed: u64, path: u64, epoch: u64) -> Rng {
+/// counter so successive deletions draw fresh randomness. Shared with the
+/// arena port (`forest::arena_update`), which must consume the identical
+/// stream to stay bit-exact with this reference implementation.
+pub(crate) fn delete_rng(tree_seed: u64, path: u64, epoch: u64) -> Rng {
     Rng::new(mix_seed(&[tree_seed, path, 0xDE1E_7E00, epoch]))
 }
 

@@ -10,6 +10,19 @@ use crate::forest::tree::DareTree;
 use crate::util::rng::mix_seed;
 use crate::util::threadpool::{scope_map, scope_map_mut};
 
+/// Row count at or above which [`DareForest::predict_proba_rows`] switches
+/// from the per-row loop to level-synchronous blocks (and, with
+/// `params.n_threads > 1`, fans blocks out over the threadpool). Below it
+/// the per-row path is used unchanged — single-row latency is unaffected.
+pub const PREDICT_BATCH_CUTOFF: usize = 32;
+
+/// Upper bound on rows per block in the batched prediction path; one block
+/// is one threadpool job and one cursor-array working set (~1 KB of
+/// cursors). With multiple threads the block size shrinks (never below
+/// [`PREDICT_BATCH_CUTOFF`]) so large batches split across the pool — see
+/// [`DareForest::predict_block_rows`].
+pub const PREDICT_BLOCK: usize = 256;
+
 /// Ensemble of DaRE trees plus the training database they index into.
 #[derive(Clone, Debug)]
 pub struct DareForest {
@@ -75,9 +88,9 @@ impl DareForest {
         anyhow::ensure!(!trees.is_empty(), "snapshot has no trees");
         for t in &trees {
             anyhow::ensure!(
-                t.root.n() as usize == data.n_alive(),
+                t.n() as usize == data.n_alive(),
                 "tree size {} != live instances {}",
-                t.root.n(),
+                t.n(),
                 data.n_alive()
             );
         }
@@ -211,16 +224,84 @@ impl DareForest {
     }
 
     /// Batch prediction over row-major features.
+    ///
+    /// Small batches take the plain per-row path. At
+    /// [`PREDICT_BATCH_CUTOFF`] rows and above, the batch is cut into
+    /// [`PREDICT_BLOCK`]-row blocks; each block walks every tree with the
+    /// level-synchronous arena descent (the tree's upper hot-plane levels
+    /// stay cached across the block), and blocks fan out over the
+    /// threadpool when `params.n_threads > 1`. Per-row accumulation order
+    /// is identical to `predict_proba`, so results are bit-equal on every
+    /// path.
     pub fn predict_proba_rows(&self, rows: &[Vec<f32>]) -> Vec<f32> {
-        rows.iter().map(|r| self.predict_proba(r)).collect()
+        if rows.len() < PREDICT_BATCH_CUTOFF {
+            return rows.iter().map(|r| self.predict_proba(r)).collect();
+        }
+        self.predict_chunked(rows, |block| self.predict_block(block))
     }
 
-    /// Predict every live instance of an external dataset.
+    /// Block size for an `n`-row batch: capped at [`PREDICT_BLOCK`], and
+    /// with multiple threads shrunk toward `n / n_threads` (but never below
+    /// [`PREDICT_BATCH_CUTOFF`], so tiny blocks don't drown the win in
+    /// dispatch overhead) — without this a 256-row batch would be a single
+    /// block and never fan out. Small multi-thread batches may therefore
+    /// still yield fewer blocks than threads. Blocking never changes
+    /// results: per-row sums are independent.
+    fn predict_block_rows(&self, n: usize) -> usize {
+        let threads = self.params.n_threads.max(1);
+        if threads == 1 {
+            return PREDICT_BLOCK;
+        }
+        let per_thread = (n + threads - 1) / threads;
+        per_thread.clamp(PREDICT_BATCH_CUTOFF, PREDICT_BLOCK)
+    }
+
+    /// Shared batched fan-out: cut `items` into [`Self::predict_block_rows`]
+    /// chunks, run `per_chunk` on each over the threadpool, and concatenate
+    /// in order. Both batch entry points route here so they can never
+    /// diverge on blocking policy.
+    fn predict_chunked<T, F>(&self, items: &[T], per_chunk: F) -> Vec<f32>
+    where
+        T: Sync,
+        F: Fn(&[T]) -> Vec<f32> + Sync,
+    {
+        let chunks: Vec<&[T]> = items.chunks(self.predict_block_rows(items.len())).collect();
+        let per_block = scope_map(&chunks, self.params.n_threads, |_, chunk| per_chunk(chunk));
+        let mut out = Vec::with_capacity(items.len());
+        for b in per_block {
+            out.extend(b);
+        }
+        out
+    }
+
+    /// One batched block: route all rows through each tree together, then
+    /// normalize by the tree count (same division as `predict_proba`).
+    fn predict_block(&self, block: &[Vec<f32>]) -> Vec<f32> {
+        let mut sums = vec![0.0f32; block.len()];
+        let mut cursors: Vec<u32> = Vec::with_capacity(block.len());
+        for t in &self.trees {
+            t.arena.predict_block_sum(block, &mut cursors, &mut sums);
+        }
+        let nt = self.trees.len() as f32;
+        for s in sums.iter_mut() {
+            *s /= nt;
+        }
+        sums
+    }
+
+    /// Predict every live instance of an external dataset. Takes the
+    /// batched path block-by-block: each threadpool job materializes only
+    /// its own block of rows, so peak extra memory is O(block · p) instead
+    /// of O(n_alive · p).
     pub fn predict_proba_dataset(&self, data: &Dataset) -> Vec<f32> {
-        data.live_ids()
-            .iter()
-            .map(|&i| self.predict_proba(&data.row(i)))
-            .collect()
+        let ids = data.live_ids();
+        if ids.len() < PREDICT_BATCH_CUTOFF {
+            return ids.iter().map(|&i| self.predict_proba(&data.row(i))).collect();
+        }
+        self.predict_chunked(&ids, |chunk| {
+            let rows: Vec<Vec<f32>> = chunk.iter().map(|&i| data.row(i)).collect();
+            self.predict_block(&rows)
+        })
     }
 
     /// Memory breakdown across all trees (paper Table 3).
@@ -295,7 +376,8 @@ mod tests {
         }
         assert_eq!(f.n_alive(), 250);
         for t in f.trees() {
-            assert_eq!(t.root.n() as usize, 250);
+            assert_eq!(t.n() as usize, 250);
+            t.arena.validate().unwrap();
         }
         // double-delete errors
         assert!(f.delete(ids[0]).is_err());
@@ -313,7 +395,7 @@ mod tests {
             f2.delete_seq(id).unwrap();
         }
         for (a, b) in f1.trees().iter().zip(f2.trees()) {
-            assert!(crate::forest::tree::structural_eq(&a.root, &b.root));
+            assert!(a.structural_matches(b));
         }
     }
 
@@ -335,7 +417,7 @@ mod tests {
         }
         assert_eq!(f1.n_alive(), f2.n_alive());
         for (a, b) in f1.trees().iter().zip(f2.trees()) {
-            assert!(crate::forest::tree::structural_eq(&a.root, &b.root));
+            assert!(a.structural_matches(b));
         }
     }
 
@@ -356,7 +438,7 @@ mod tests {
         let id = f.add(&vec![0.0; p], 1);
         assert_eq!(f.n_alive(), 151);
         for t in f.trees() {
-            assert_eq!(t.root.n(), 151);
+            assert_eq!(t.n(), 151);
         }
         // the added instance can be deleted again
         f.delete(id).unwrap();
@@ -374,7 +456,54 @@ mod tests {
         let f1 = DareForest::fit(train.clone(), &par, 21);
         let f2 = DareForest::fit(train, &seq, 21);
         for (a, b) in f1.trees().iter().zip(f2.trees()) {
-            assert!(crate::forest::tree::structural_eq(&a.root, &b.root));
+            assert!(a.structural_matches(b));
+        }
+    }
+
+    #[test]
+    fn batched_prediction_is_bit_exact_with_per_row() {
+        let all = data(600, 12);
+        let (train, test) = crate::data::split::train_test(&all, 0.5, 1);
+        // sequential batched path
+        let f_seq = DareForest::fit(train.clone(), &small_params(8), 31);
+        // parallel batched path (same trees: fit parallelism is structural-
+        // equality tested above; predict threading must not change values)
+        let par = Params {
+            n_threads: 4,
+            ..small_params(8)
+        };
+        let f_par = DareForest::fit(train, &par, 31);
+        let rows: Vec<Vec<f32>> = test.live_ids().iter().map(|&i| test.row(i)).collect();
+        assert!(rows.len() >= PREDICT_BATCH_CUTOFF);
+        let per_row: Vec<f32> = rows.iter().map(|r| f_seq.predict_proba(r)).collect();
+        let batched = f_seq.predict_proba_rows(&rows);
+        let parallel = f_par.predict_proba_rows(&rows);
+        assert_eq!(per_row, batched, "batched path must be bit-exact");
+        assert_eq!(per_row, parallel, "parallel path must be bit-exact");
+        // dataset-level entry point takes the same path
+        assert_eq!(f_seq.predict_proba_dataset(&test), per_row);
+        // small batches take the per-row route and agree trivially
+        let small = &rows[..PREDICT_BATCH_CUTOFF - 1];
+        assert_eq!(
+            f_seq.predict_proba_rows(small),
+            &per_row[..PREDICT_BATCH_CUTOFF - 1]
+        );
+    }
+
+    #[test]
+    fn batched_prediction_handles_ragged_tail_blocks() {
+        // A batch that is not a multiple of PREDICT_BLOCK exercises the
+        // chunked fan-out's tail handling.
+        let train = data(400, 13);
+        let f = DareForest::fit(train, &small_params(5), 17);
+        let n = PREDICT_BLOCK + 37;
+        let rows: Vec<Vec<f32>> = (0..n as u32)
+            .map(|i| f.data().row(i % f.data().n_total() as u32))
+            .collect();
+        let got = f.predict_proba_rows(&rows);
+        assert_eq!(got.len(), n);
+        for (r, g) in rows.iter().zip(&got) {
+            assert_eq!(*g, f.predict_proba(r));
         }
     }
 

@@ -2,6 +2,8 @@
 //! node statistics, random upper layers, threshold subsampling, and exact
 //! deletion.
 
+pub mod arena;
+pub mod arena_update;
 pub mod criterion;
 pub mod delete;
 pub mod forest;
@@ -13,6 +15,7 @@ pub mod train;
 pub mod tree;
 pub mod workspace;
 
+pub use arena::{ArenaTree, HotPlane};
 pub use delete::{DeleteReport, RetrainEvent};
 pub use forest::{DareForest, ForestDeleteReport};
 pub use node::{Node, NodeMemory, TreeShape};

@@ -1,5 +1,12 @@
 //! Tree node representation (paper §A.6): leaf, random decision, and greedy
 //! decision nodes, each with the cached statistics that make deletions cheap.
+//!
+//! Since the arena refactor (DESIGN.md §7) this boxed form is the
+//! *construction and oracle* representation: the trainer still builds boxed
+//! subtrees (which the arena grafts into its SoA planes), the reference
+//! deletion path in `forest::delete` mutates them, and the exactness tests
+//! compare arena trees against them. Live trees are stored in
+//! [`crate::forest::arena::ArenaTree`].
 
 use crate::data::dataset::InstanceId;
 use crate::forest::stats::AttrStats;

@@ -6,6 +6,7 @@
 //! self-contained with both.
 
 use crate::data::dataset::Dataset;
+use crate::forest::arena::{ArenaTree, Cold};
 use crate::forest::forest::DareForest;
 use crate::forest::node::{GreedyNode, LeafNode, Node, RandomNode};
 use crate::forest::params::{MaxFeatures, Params, SplitCriterion};
@@ -61,29 +62,36 @@ fn thr_from_json(v: &Value) -> anyhow::Result<ThresholdStats> {
     })
 }
 
-fn node_to_json(n: &Node) -> Value {
+/// Emit one arena node (and its subtree) in the boxed-tree JSON schema,
+/// walking the arena planes directly — no transient `Node` reconstruction,
+/// so snapshotting never deep-clones the model.
+fn arena_node_to_json(t: &ArenaTree, nid: u32) -> Value {
+    let ni = nid as usize;
     let mut o = Value::obj();
-    match n {
-        Node::Leaf(l) => {
+    match &t.cold[ni] {
+        Cold::Leaf { ids } => {
             o.set("t", "leaf")
-                .set("n", l.n)
-                .set("np", l.n_pos)
-                .set("ids", l.ids.clone());
+                .set("n", t.n[ni])
+                .set("np", t.n_pos[ni])
+                .set("ids", ids.clone());
         }
-        Node::Random(r) => {
+        Cold::Random { n_left, n_right } => {
             o.set("t", "rand")
-                .set("n", r.n)
-                .set("np", r.n_pos)
-                .set("a", r.attr)
-                .set("v", r.v)
-                .set("nl", r.n_left)
-                .set("nr", r.n_right)
-                .set("l", node_to_json(&r.left))
-                .set("r", node_to_json(&r.right));
+                .set("n", t.n[ni])
+                .set("np", t.n_pos[ni])
+                .set("a", t.hot.attr[ni] as usize)
+                .set("v", t.hot.thresh[ni])
+                .set("nl", *n_left)
+                .set("nr", *n_right)
+                .set("l", arena_node_to_json(t, t.hot.left[ni]))
+                .set("r", arena_node_to_json(t, t.hot.right[ni]));
         }
-        Node::Greedy(g) => {
-            let attrs: Vec<Value> = g
-                .attrs
+        Cold::Greedy {
+            attrs,
+            best_attr,
+            best_thr,
+        } => {
+            let attrs_json: Vec<Value> = attrs
                 .iter()
                 .map(|a| {
                     let mut ao = Value::obj();
@@ -95,14 +103,15 @@ fn node_to_json(n: &Node) -> Value {
                 })
                 .collect();
             o.set("t", "greedy")
-                .set("n", g.n)
-                .set("np", g.n_pos)
-                .set("attrs", Value::Arr(attrs))
-                .set("ba", g.best_attr)
-                .set("bt", g.best_thr)
-                .set("l", node_to_json(&g.left))
-                .set("r", node_to_json(&g.right));
+                .set("n", t.n[ni])
+                .set("np", t.n_pos[ni])
+                .set("attrs", Value::Arr(attrs_json))
+                .set("ba", *best_attr)
+                .set("bt", *best_thr)
+                .set("l", arena_node_to_json(t, t.hot.left[ni]))
+                .set("r", arena_node_to_json(t, t.hot.right[ni]));
         }
+        Cold::Free => unreachable!("serializing a free arena slot"),
     }
     o
 }
@@ -305,7 +314,10 @@ pub fn forest_to_json(f: &DareForest) -> String {
             let mut o = Value::obj();
             set_u64(&mut o, "seed", t.tree_seed);
             set_u64(&mut o, "epoch", t.epoch);
-            o.set("root", node_to_json(&t.root));
+            // The snapshot format stays the boxed-tree JSON schema; the
+            // emitter walks the arena in place (slot ids renumber on reload;
+            // structure, stats and predictions are preserved — see tests).
+            o.set("root", arena_node_to_json(&t.arena, t.arena.root()));
             o
         })
         .collect();
@@ -334,11 +346,11 @@ pub fn forest_from_json(s: &str) -> anyhow::Result<DareForest> {
         .ok_or_else(|| anyhow::anyhow!("trees missing"))?;
     let mut trees = Vec::with_capacity(trees_json.len());
     for t in trees_json {
-        trees.push(DareTree {
-            root: node_from_json(t.get("root").ok_or_else(|| anyhow::anyhow!("root"))?)?,
-            tree_seed: get_u64(t, "seed")?,
-            epoch: get_u64(t, "epoch").unwrap_or(0),
-        });
+        trees.push(DareTree::from_root(
+            node_from_json(t.get("root").ok_or_else(|| anyhow::anyhow!("root"))?)?,
+            get_u64(t, "seed")?,
+            get_u64(t, "epoch").unwrap_or(0),
+        ));
     }
     DareForest::from_parts(params, seed, trees, data)
 }
@@ -391,11 +403,37 @@ mod tests {
         assert_eq!(back.n_trees(), f.n_trees());
         assert_eq!(back.n_alive(), f.n_alive());
         for (a, b) in f.trees().iter().zip(back.trees()) {
-            assert!(structural_eq(&a.root, &b.root));
+            assert!(a.structural_matches(b));
+            assert!(structural_eq(&a.root_node(), &b.root_node()));
             assert_eq!(a.tree_seed, b.tree_seed);
+            b.arena.validate().unwrap();
         }
         let row = f.data().row(3);
         assert_eq!(f.predict_proba(&row), back.predict_proba(&row));
+    }
+
+    #[test]
+    fn roundtrip_after_churn_preserves_structure_and_predictions() {
+        // Deletions + additions leave the arenas non-BFS-compact with live
+        // free lists; the snapshot must still round-trip to structurally
+        // identical, fully-consistent trees with bit-equal predictions.
+        let mut f = forest();
+        let p = f.data().n_features();
+        for id in [0u32, 7, 12, 33, 48] {
+            f.delete(id).unwrap();
+        }
+        for i in 0..6 {
+            f.add(&vec![0.25 * i as f32; p], (i % 2) as u8);
+        }
+        let back = forest_from_json(&forest_to_json(&f)).unwrap();
+        assert_eq!(back.n_alive(), f.n_alive());
+        for (a, b) in f.trees().iter().zip(back.trees()) {
+            assert!(a.structural_matches(b));
+            assert_eq!(a.epoch, b.epoch);
+            b.arena.validate().unwrap();
+        }
+        let rows: Vec<Vec<f32>> = (0..60u32).map(|i| f.data().row(i)).collect();
+        assert_eq!(f.predict_proba_rows(&rows), back.predict_proba_rows(&rows));
     }
 
     #[test]

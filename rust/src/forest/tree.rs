@@ -1,16 +1,26 @@
 //! A single DaRE tree: the unit of training, deletion and prediction.
+//!
+//! Since the arena refactor (DESIGN.md §7) the tree's nodes live in an
+//! [`ArenaTree`] — an SoA hot plane for descents plus an id-indexed cold
+//! plane for the cached deletion statistics — instead of a `Box<Node>` web.
+//! Trees are still *built* as boxed [`Node`]s by the (workspace) trainer and
+//! grafted into the arena, which keeps the boxed path available as the
+//! bit-exactness oracle.
 
 use crate::data::dataset::{Dataset, InstanceId};
-use crate::forest::delete::{add, delete, delete_cost, DeleteReport};
+use crate::forest::arena::{ArenaTree, IdScratch};
+use crate::forest::arena_update;
+use crate::forest::delete::DeleteReport;
 use crate::forest::node::{Node, NodeMemory, TreeShape};
 use crate::forest::params::Params;
-use crate::forest::train::{TrainCtx, ROOT_PATH};
+use crate::forest::train::TrainCtx;
 use crate::forest::workspace::train_tree;
 
 /// One DaRE tree plus its seed and update counter.
 #[derive(Clone, Debug)]
 pub struct DareTree {
-    pub root: Node,
+    /// Arena node store (hot SoA plane + cold stats plane).
+    pub arena: ArenaTree,
     pub tree_seed: u64,
     /// Number of structural updates applied (deletions + additions); feeds
     /// the per-update resampling RNG (Lemma A.1 streams).
@@ -19,13 +29,35 @@ pub struct DareTree {
 
 impl DareTree {
     /// Train on the live instances of `data` (paper Alg. 1), via the
-    /// sort-free workspace (bit-exact with the plain path; DESIGN.md §6).
+    /// sort-free workspace (bit-exact with the plain path; DESIGN.md §6),
+    /// then graft the result into a fresh BFS-compact arena.
     pub fn fit(data: &Dataset, params: &Params, tree_seed: u64) -> Self {
         DareTree {
-            root: train_tree(data, params, tree_seed),
+            arena: ArenaTree::from_node(train_tree(data, params, tree_seed)),
             tree_seed,
             epoch: 0,
         }
+    }
+
+    /// Wrap an already-built boxed tree (deserialization, oracles).
+    pub fn from_root(root: Node, tree_seed: u64, epoch: u64) -> Self {
+        DareTree {
+            arena: ArenaTree::from_node(root),
+            tree_seed,
+            epoch,
+        }
+    }
+
+    /// Reconstruct the boxed view of the tree (oracle comparisons,
+    /// serialization). O(nodes); not for hot paths.
+    pub fn root_node(&self) -> Node {
+        self.arena.to_node()
+    }
+
+    /// |D| at the root.
+    #[inline]
+    pub fn n(&self) -> u32 {
+        self.arena.n_root()
     }
 
     /// Delete a (still-live) instance (paper Alg. 2).
@@ -36,7 +68,7 @@ impl DareTree {
             tree_seed: self.tree_seed,
         };
         let mut report = DeleteReport::default();
-        delete(&ctx, &mut self.root, id, 0, ROOT_PATH, self.epoch, &mut report);
+        arena_update::delete(&mut self.arena, &ctx, id, self.epoch, &mut report);
         self.epoch += 1;
         report
     }
@@ -49,7 +81,7 @@ impl DareTree {
             tree_seed: self.tree_seed,
         };
         let mut report = DeleteReport::default();
-        add(&ctx, &mut self.root, id, 0, ROOT_PATH, self.epoch, &mut report);
+        arena_update::add(&mut self.arena, &ctx, id, self.epoch, &mut report);
         self.epoch += 1;
         report
     }
@@ -61,53 +93,65 @@ impl DareTree {
             params,
             tree_seed: self.tree_seed,
         };
-        delete_cost(&ctx, &self.root, id, 0)
+        arena_update::delete_cost(&self.arena, &ctx, id)
     }
 
-    /// Positive-class probability for one feature row.
+    /// Positive-class probability for one feature row (hot-plane descent).
     #[inline]
     pub fn predict(&self, row: &[f32]) -> f32 {
-        self.root.predict(row)
+        self.arena.predict(row)
     }
 
     pub fn shape(&self) -> TreeShape {
-        self.root.shape()
+        self.arena.shape()
     }
 
     pub fn memory(&self) -> NodeMemory {
-        self.root.memory()
+        self.arena.memory()
+    }
+
+    /// Structural equality with another arena tree (same semantics as
+    /// [`structural_eq`], computed directly on the arenas).
+    pub fn structural_matches(&self, other: &DareTree) -> bool {
+        self.arena.structural_matches(&other.arena)
+    }
+
+    /// Structural equality against a boxed oracle tree.
+    pub fn matches_root(&self, root: &Node) -> bool {
+        self.arena.matches_node(root)
     }
 }
 
-/// Structural equality of two trees: same node kinds, splits, counts and
-/// leaf contents (id order-insensitive). Used by the exactness tests.
+/// Structural equality of two boxed trees: same node kinds, splits, counts
+/// and leaf contents (id order-insensitive). Used by the exactness tests.
+/// Leaf id lists are compared through one reused pair of sorted scratch
+/// buffers instead of two fresh clone+sort allocations per leaf, so grid
+/// tests stop churning the allocator.
 pub fn structural_eq(a: &Node, b: &Node) -> bool {
+    let mut scratch = IdScratch::default();
+    structural_eq_rec(a, b, &mut scratch)
+}
+
+fn structural_eq_rec(a: &Node, b: &Node, scratch: &mut IdScratch) -> bool {
     match (a, b) {
         (Node::Leaf(x), Node::Leaf(y)) => {
-            if x.n != y.n || x.n_pos != y.n_pos {
-                return false;
-            }
-            let mut xi = x.ids.clone();
-            let mut yi = y.ids.clone();
-            xi.sort_unstable();
-            yi.sort_unstable();
-            xi == yi
+            x.n == y.n && x.n_pos == y.n_pos && scratch.ids_eq(&x.ids, &y.ids)
         }
         (Node::Random(x), Node::Random(y)) => {
             x.attr == y.attr
                 && x.v == y.v
                 && x.n == y.n
                 && x.n_pos == y.n_pos
-                && structural_eq(&x.left, &y.left)
-                && structural_eq(&x.right, &y.right)
+                && structural_eq_rec(&x.left, &y.left, scratch)
+                && structural_eq_rec(&x.right, &y.right, scratch)
         }
         (Node::Greedy(x), Node::Greedy(y)) => {
             x.split_attr() == y.split_attr()
                 && x.split_v() == y.split_v()
                 && x.n == y.n
                 && x.n_pos == y.n_pos
-                && structural_eq(&x.left, &y.left)
-                && structural_eq(&x.right, &y.right)
+                && structural_eq_rec(&x.left, &y.left, scratch)
+                && structural_eq_rec(&x.right, &y.right, scratch)
         }
         _ => false,
     }
@@ -117,6 +161,7 @@ pub fn structural_eq(a: &Node, b: &Node) -> bool {
 mod tests {
     use super::*;
     use crate::data::synth::{generate, SynthSpec};
+    use crate::forest::train::{train, ROOT_PATH};
 
     fn data(n: usize) -> Dataset {
         generate(
@@ -141,14 +186,15 @@ mod tests {
             ..Default::default()
         };
         let mut tree = DareTree::fit(&d, &params, 1);
-        assert_eq!(tree.root.n() as usize, 300);
+        assert_eq!(tree.n() as usize, 300);
         let p0 = tree.predict(&d.row(0));
         assert!((0.0..=1.0).contains(&p0));
 
         let report = tree.delete(&d, &params, 0);
         d.mark_removed(0);
-        assert_eq!(tree.root.n() as usize, 299);
+        assert_eq!(tree.n() as usize, 299);
         assert_eq!(tree.epoch, 1);
+        tree.arena.validate().unwrap();
         let _ = report.cost();
     }
 
@@ -163,8 +209,39 @@ mod tests {
         let t1 = DareTree::fit(&d, &params, 1);
         let t2 = DareTree::fit(&d, &params, 1);
         let t3 = DareTree::fit(&d, &params, 2);
-        assert!(structural_eq(&t1.root, &t2.root));
-        assert!(!structural_eq(&t1.root, &t3.root));
+        assert!(t1.structural_matches(&t2));
+        assert!(!t1.structural_matches(&t3));
+        // boxed-view comparisons agree
+        assert!(structural_eq(&t1.root_node(), &t2.root_node()));
+        assert!(!structural_eq(&t1.root_node(), &t3.root_node()));
+    }
+
+    #[test]
+    fn arena_tree_matches_boxed_builder() {
+        // DareTree::fit must produce the same structure as the seed boxed
+        // trainer — the tentpole bit-exactness invariant at tree level.
+        let d = data(400);
+        let params = Params {
+            max_depth: 7,
+            k: 5,
+            d_rmax: 2,
+            ..Default::default()
+        };
+        for seed in [1u64, 2, 3] {
+            let tree = DareTree::fit(&d, &params, seed);
+            let ctx = TrainCtx {
+                data: &d,
+                params: &params,
+                tree_seed: seed,
+            };
+            let oracle = train(&ctx, d.live_ids(), 0, ROOT_PATH);
+            assert!(tree.matches_root(&oracle), "arena != boxed (seed {seed})");
+            // predictions agree bit-for-bit
+            for id in d.live_ids().into_iter().take(60) {
+                let row = d.row(id);
+                assert_eq!(tree.predict(&row), oracle.predict(&row));
+            }
+        }
     }
 
     #[test]

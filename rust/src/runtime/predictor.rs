@@ -5,7 +5,7 @@
 use crate::forest::forest::DareForest;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::pjrt::{Engine, Input, Literal, LoadedExe};
-use crate::runtime::tensorize::{predict_tensorized, tensorize, TensorForest};
+use crate::runtime::tensorize::{tensorize, TensorForest};
 
 /// PJRT-backed batch predictor over a tensorized forest snapshot.
 ///
@@ -108,9 +108,10 @@ impl PjrtPredictor {
         Ok(out)
     }
 
-    /// Native traversal of the same tensorized snapshot (parity oracle).
+    /// Native traversal of the same tensorized snapshot (parity oracle),
+    /// batched tree-at-a-time like the arena's block descent.
     pub fn predict_native(&self, rows: &[Vec<f32>]) -> Vec<f32> {
-        rows.iter().map(|r| predict_tensorized(&self.tf, r)).collect()
+        crate::runtime::tensorize::predict_tensorized_rows(&self.tf, rows)
     }
 }
 

@@ -1,9 +1,17 @@
-//! Tensorize a DaRE forest for the L2 predict graph: flatten each tree
-//! (BFS order) into fixed-size node arrays. Leaves self-loop; padded trees
-//! are value-0 single leaves (they add 0 to the sum the graph returns).
+//! Tensorize a DaRE forest for the L2 predict graph: flatten each tree into
+//! fixed-size node arrays. Leaves self-loop; padded trees are value-0 single
+//! leaves (they add 0 to the sum the graph returns).
+//!
+//! Since the arena refactor (DESIGN.md §7) this reads the per-tree SoA hot
+//! plane directly instead of traversing boxed nodes. A freshly trained tree
+//! is already stored in BFS order with root at slot 0 and children in
+//! contiguous pairs — exactly this artifact's layout — so tensorizing it is
+//! a linear copy with only the leaf self-loop fix-up. Trees that have been
+//! churned by deletions (free-list reuse breaks BFS order) fall back to a
+//! BFS remap over the same flat arrays — still no pointer chasing.
 
+use crate::forest::arena::{ArenaTree, NIL};
 use crate::forest::forest::DareForest;
-use crate::forest::node::Node;
 use crate::runtime::manifest::PredictArtifact;
 
 /// Flat forest arrays matching the predict artifact's (T, M) layout.
@@ -52,51 +60,62 @@ pub fn tensorize(forest: &DareForest, art: &PredictArtifact) -> anyhow::Result<T
         }
     }
     for (ti, tree) in forest.trees().iter().enumerate() {
-        let used = flatten_tree(&tree.root, ti, m, &mut tf)?;
+        flatten_tree(&tree.arena, ti, m, &mut tf)?;
         let max_d = tree.shape().max_depth;
         anyhow::ensure!(
             max_d <= art.depth,
             "tree depth {max_d} exceeds artifact unroll bound {}",
             art.depth
         );
-        let _ = used;
     }
     Ok(tf)
 }
 
-/// BFS-flatten one tree into slots `[ti*m .. ti*m+m)`. Returns nodes used.
-fn flatten_tree(root: &Node, ti: usize, m: usize, tf: &mut TensorForest) -> anyhow::Result<usize> {
+/// Flatten one arena tree into slots `[ti*m .. ti*m+m)`. Returns nodes used.
+fn flatten_tree(arena: &ArenaTree, ti: usize, m: usize, tf: &mut TensorForest) -> anyhow::Result<usize> {
     let base = ti * m;
-    let mut queue: std::collections::VecDeque<(&Node, usize)> = Default::default();
+    let hot = arena.hot();
+    if arena.is_bfs_compact() {
+        // Fresh build: the hot plane IS the artifact layout — linear copy,
+        // converting the leaf encoding (left == NIL) to self-loops.
+        let used = arena.len();
+        anyhow::ensure!(used <= m, "tree has {used} nodes, artifact supports {m} slots");
+        for i in 0..used {
+            let l = hot.left[i];
+            if l == NIL {
+                tf.value[base + i] = hot.value[i];
+                tf.left[base + i] = i as i32;
+                tf.right[base + i] = i as i32;
+            } else {
+                tf.attr[base + i] = hot.attr[i] as i32;
+                tf.thresh[base + i] = hot.thresh[i];
+                tf.left[base + i] = l as i32;
+                tf.right[base + i] = hot.right[i] as i32;
+            }
+        }
+        return Ok(used);
+    }
+    // Churned arena: BFS remap of node ids onto dense slots, reading only
+    // the flat hot-plane arrays.
+    let mut queue: std::collections::VecDeque<(u32, usize)> = Default::default();
     let mut next_free = 1usize;
-    queue.push_back((root, 0));
-    while let Some((node, slot)) = queue.pop_front() {
-        match node {
-            Node::Leaf(l) => {
-                tf.value[base + slot] = l.value();
-                tf.left[base + slot] = slot as i32;
-                tf.right[base + slot] = slot as i32;
-            }
-            Node::Random(r) => {
-                anyhow::ensure!(next_free + 1 < m, "tree exceeds {m} node slots");
-                tf.attr[base + slot] = r.attr as i32;
-                tf.thresh[base + slot] = r.v;
-                tf.left[base + slot] = next_free as i32;
-                tf.right[base + slot] = (next_free + 1) as i32;
-                queue.push_back((&r.left, next_free));
-                queue.push_back((&r.right, next_free + 1));
-                next_free += 2;
-            }
-            Node::Greedy(g) => {
-                anyhow::ensure!(next_free + 1 < m, "tree exceeds {m} node slots");
-                tf.attr[base + slot] = g.split_attr() as i32;
-                tf.thresh[base + slot] = g.split_v();
-                tf.left[base + slot] = next_free as i32;
-                tf.right[base + slot] = (next_free + 1) as i32;
-                queue.push_back((&g.left, next_free));
-                queue.push_back((&g.right, next_free + 1));
-                next_free += 2;
-            }
+    queue.push_back((arena.root(), 0));
+    while let Some((nid, slot)) = queue.pop_front() {
+        let ni = nid as usize;
+        let l = hot.left[ni];
+        if l == NIL {
+            tf.value[base + slot] = hot.value[ni];
+            tf.left[base + slot] = slot as i32;
+            tf.right[base + slot] = slot as i32;
+        } else {
+            anyhow::ensure!(next_free + 1 < m, "tree exceeds {m} node slots");
+            tf.attr[base + slot] = hot.attr[ni] as i32;
+            tf.thresh[base + slot] = hot.thresh[ni];
+            tf.left[base + slot] = next_free as i32;
+            tf.right[base + slot] = (next_free + 1) as i32;
+            queue.push_back((l, next_free));
+            queue.push_back((hot.right[ni], next_free + 1));
+            next_free += 2;
         }
     }
     Ok(next_free)
@@ -127,6 +146,40 @@ pub fn predict_tensorized(tf: &TensorForest, row: &[f32]) -> f32 {
         sum += tf.value[base + idx];
     }
     sum / tf.n_real_trees as f32
+}
+
+/// Batched native traversal: all rows advance through one tree before the
+/// next tree is touched, so the tree's upper slots stay cached — the
+/// tensorized twin of the arena's level-synchronous block descent.
+pub fn predict_tensorized_rows(tf: &TensorForest, rows: &[Vec<f32>]) -> Vec<f32> {
+    let m = tf.nodes;
+    let mut sums = vec![0.0f32; rows.len()];
+    for ti in 0..tf.trees {
+        let base = ti * m;
+        for (row, s) in rows.iter().zip(sums.iter_mut()) {
+            let mut idx = 0usize;
+            loop {
+                let l = tf.left[base + idx] as usize;
+                let r = tf.right[base + idx] as usize;
+                if l == idx && r == idx {
+                    break;
+                }
+                let a = tf.attr[base + idx] as usize;
+                let v = tf.thresh[base + idx];
+                idx = if row.get(a).copied().unwrap_or(0.0) <= v {
+                    l
+                } else {
+                    r
+                };
+            }
+            *s += tf.value[base + idx];
+        }
+    }
+    let nt = tf.n_real_trees as f32;
+    for s in sums.iter_mut() {
+        *s /= nt;
+    }
+    sums
 }
 
 #[cfg(test)]
@@ -185,6 +238,36 @@ mod tests {
                 (native - tens).abs() < 1e-6,
                 "id {id}: native {native} vs tensorized {tens}"
             );
+        }
+    }
+
+    #[test]
+    fn churned_forest_takes_bfs_remap_path_and_still_matches() {
+        let mut f = forest(4);
+        // deep churn: drain most of the data so leaf collapses and argmax
+        // moves are certain to have freed arena slots in every tree
+        for id in f.live_ids().into_iter().take(250) {
+            f.delete_seq(id).unwrap();
+        }
+        assert!(
+            f.trees().iter().any(|t| !t.arena.is_bfs_compact()),
+            "deletions should leave at least one non-compact arena"
+        );
+        let tf = tensorize(&f, &art()).unwrap();
+        for id in f.data().live_ids().iter().take(100) {
+            let row = f.data().row(*id);
+            assert!((f.predict_proba(&row) - predict_tensorized(&tf, &row)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn batched_tensorized_matches_per_row() {
+        let f = forest(3);
+        let tf = tensorize(&f, &art()).unwrap();
+        let rows: Vec<Vec<f32>> = (0..50u32).map(|i| f.data().row(i)).collect();
+        let batched = predict_tensorized_rows(&tf, &rows);
+        for (row, b) in rows.iter().zip(&batched) {
+            assert_eq!(*b, predict_tensorized(&tf, row));
         }
     }
 

@@ -94,7 +94,11 @@ fn full_exactness_forest_level() {
     // id space matches for structural comparison
     let scratch_same_ids = DareForest::fit(f.data().clone(), &params, 77);
     for (a, b) in f.trees().iter().zip(scratch_same_ids.trees()) {
-        assert!(structural_eq(&a.root, &b.root), "delete != scratch");
+        assert!(a.structural_matches(b), "delete != scratch");
+        assert!(
+            structural_eq(&a.root_node(), &b.root_node()),
+            "boxed views diverge"
+        );
     }
     // prediction parity with the compacted scratch model too
     for i in 0..50u32 {

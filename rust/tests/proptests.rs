@@ -120,8 +120,9 @@ fn prop_forest_invariants_under_random_deletion_streams() {
                 forest.delete_seq(id).unwrap();
             }
             for tree in forest.trees() {
-                assert_eq!(tree.root.n() as usize, forest.n_alive());
-                assert_node_invariants(&tree.root, forest.data());
+                assert_eq!(tree.n() as usize, forest.n_alive());
+                tree.arena.validate().unwrap();
+                assert_node_invariants(&tree.root_node(), forest.data());
             }
         },
     );
@@ -153,7 +154,8 @@ fn prop_forest_invariants_under_mixed_add_delete() {
                 }
             }
             for tree in forest.trees() {
-                assert_node_invariants(&tree.root, forest.data());
+                tree.arena.validate().unwrap();
+                assert_node_invariants(&tree.root_node(), forest.data());
             }
         },
     );
@@ -307,7 +309,7 @@ fn prop_coordinator_state_consistent_under_request_interleavings() {
                 let f = svc.forest().read().unwrap();
                 assert_eq!(f.n_alive() as i64, expected_alive);
                 for tree in f.trees() {
-                    assert_eq!(tree.root.n() as i64, expected_alive);
+                    assert_eq!(tree.n() as i64, expected_alive);
                 }
             }
         },

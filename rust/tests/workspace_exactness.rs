@@ -1,8 +1,10 @@
-//! Cross-check (ISSUE 1 acceptance): the sort-free workspace training path
-//! must be bit-exact — `structural_eq` — with the seed gather+sort path
-//! across seeds, d_rmax settings and split criteria, and deletion sequences
-//! (whose subtree retrains now run through the workspace) must still match
-//! retraining from scratch on the updated data.
+//! Cross-check (ISSUE 1 + ISSUE 2 acceptance): the sort-free workspace
+//! training path must be bit-exact — `structural_eq` — with the seed
+//! gather+sort path across seeds, d_rmax settings and split criteria, and
+//! **arena-built trees** (`DareTree::fit`, the live representation since the
+//! arena refactor) must match both across the same grid. Deletion sequences
+//! (whose subtree retrains run through the workspace and graft into the
+//! arena) must still match retraining from scratch on the updated data.
 
 use dare::data::dataset::Dataset;
 use dare::data::synth::{generate, SynthSpec};
@@ -55,6 +57,15 @@ fn workspace_matches_seed_path_across_grid() {
                         "workspace != seed path (data_seed={data_seed}, d_rmax={d_rmax}, \
                          criterion={criterion:?}, tree_seed={tree_seed})"
                     );
+                    // ISSUE 2: the arena-backed tree must match the boxed
+                    // builder across the same grid.
+                    let arena_tree = DareTree::fit(&data, &params, tree_seed);
+                    assert!(
+                        arena_tree.matches_root(&seed_tree),
+                        "arena != seed path (data_seed={data_seed}, d_rmax={d_rmax}, \
+                         criterion={criterion:?}, tree_seed={tree_seed})"
+                    );
+                    arena_tree.arena.validate().unwrap();
                 }
             }
         }
@@ -92,13 +103,14 @@ fn deletion_sequences_still_match_scratch_retrain() {
         let scratch_seed = train(&ctx, d.live_ids(), 0, ROOT_PATH);
         let scratch_ws = train_subtree(&ctx, d.live_ids(), 0, ROOT_PATH);
         assert!(
-            structural_eq(&tree.root, &scratch_seed),
+            tree.matches_root(&scratch_seed),
             "delete != scratch retrain (seed path) after epoch {epoch}"
         );
         assert!(
-            structural_eq(&tree.root, &scratch_ws),
+            tree.matches_root(&scratch_ws),
             "delete != scratch retrain (workspace path) after epoch {epoch}"
         );
+        tree.arena.validate().unwrap();
     }
 }
 
@@ -123,8 +135,9 @@ fn rdare_deletion_run_stays_consistent_with_workspace_retrains() {
         let id = live[rng.index(live.len())];
         tree.delete(&d, &params, id);
         d.mark_removed(id);
-        assert_eq!(tree.root.n() as usize, d.n_alive());
+        assert_eq!(tree.n() as usize, d.n_alive());
     }
+    tree.arena.validate().unwrap();
     // surviving tree still predicts sane probabilities
     for id in d.live_ids().into_iter().take(50) {
         let p = tree.predict(&d.row(id));
