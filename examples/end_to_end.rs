@@ -86,7 +86,7 @@ fn main() -> anyhow::Result<()> {
 
     // stream: delete 120 training instances in batches of 6, predicting the
     // test head between batches and tracking the metric trajectory.
-    let victims: Vec<u32> = svc.forest().read().unwrap().live_ids().into_iter().take(120).collect();
+    let victims: Vec<u32> = svc.sharded().live_ids().into_iter().take(120).collect();
     let probe_rows: Vec<Vec<f32>> = test.live_ids().iter().take(64).map(|&i| test.row(i)).collect();
     let probe_ys: Vec<u8> = test.live_ids().iter().take(64).map(|&i| test.y(i)).collect();
     let mut curve: Vec<(usize, f64)> = Vec::new();
@@ -128,14 +128,11 @@ fn main() -> anyhow::Result<()> {
     server.join().unwrap()?;
 
     // --- stage 4: closing check against a scratch model --------------------
-    let reduced = {
-        let f = svc.forest().read().unwrap();
-        f.data().compacted()
-    };
+    let reduced = svc.sharded().with_data(|d| d.compacted());
     let scratch = DareForest::fit(reduced, &gdare, 99);
     let probs = scratch.predict_proba_dataset(&test);
     let scratch_acc = info.metric.score(&probs, &test_ys);
-    let served = svc.forest().read().unwrap();
+    let served = svc.snapshot_forest();
     let probs = served.predict_proba_dataset(&test);
     let served_acc = info.metric.score(&probs, &test_ys);
     println!(

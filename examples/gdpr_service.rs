@@ -57,10 +57,7 @@ fn main() -> anyhow::Result<()> {
             Ok((deleted, batched))
         }));
     }
-    let p = {
-        let f = svc.forest().read().unwrap();
-        f.data().n_features()
-    };
+    let p = svc.n_features();
     for _ in 0..2 {
         handles.push(std::thread::spawn(move || -> anyhow::Result<(usize, usize)> {
             let mut client = Client::connect(addr)?;

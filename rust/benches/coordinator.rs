@@ -6,6 +6,8 @@ use dare::coordinator::{ServiceConfig, UnlearningService};
 use dare::data::synth::{generate, SynthSpec};
 use dare::forest::{DareForest, Params};
 use dare::util::json::parse;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 fn fresh_service(n: usize) -> std::sync::Arc<UnlearningService> {
@@ -49,7 +51,7 @@ fn main() {
     };
 
     let svc = fresh_service(4000);
-    let p = svc.forest().read().unwrap().data().n_features();
+    let p = svc.n_features();
     let row = vec!["0.25"; p].join(",");
     let predict_req = parse(&format!(r#"{{"op":"predict","rows":[[{row}]]}}"#)).unwrap();
     suite.run("predict request (native engine)", quick, || {
@@ -96,6 +98,34 @@ fn main() {
             base += 64;
         },
     );
+
+    // Sharded read path under write churn: predictions keep flowing while a
+    // background thread streams deletions — the scenario the per-shard locks
+    // exist for (before sharding, every predict waited on the global write
+    // lock for the whole retrain).
+    let svc_churn = fresh_service(4000);
+    let stop = Arc::new(AtomicBool::new(false));
+    let bg = {
+        let svc = Arc::clone(&svc_churn);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut id = 0u32;
+            while !stop.load(Ordering::Relaxed) {
+                let req = parse(&format!(r#"{{"op":"delete","ids":[{id}]}}"#)).unwrap();
+                std::hint::black_box(svc.handle(&req).get("ok"));
+                id += 1;
+            }
+        })
+    };
+    let p = svc_churn.n_features();
+    let row = vec!["0.25"; p].join(",");
+    let churn_req = parse(&format!(r#"{{"op":"predict","rows":[[{row}]]}}"#)).unwrap();
+    suite.run("predict request during delete churn (sharded)", quick, || {
+        let r = svc_churn.handle(&churn_req);
+        std::hint::black_box(r.get("ok"));
+    });
+    stop.store(true, Ordering::Relaxed);
+    bg.join().unwrap();
 
     suite.save_json().ok();
 }

@@ -1,15 +1,18 @@
 //! Deletion batcher: the coordinator's dynamic-batching stage.
 //!
-//! Deletions must serialize (they mutate the forest), but retraining a node
-//! at most once per *batch* (paper §A.7) makes grouped deletions cheaper
-//! than one-at-a-time processing. The batcher collects deletion requests
-//! that arrive within a short window (or up to a max batch size) and applies
-//! them under a single write lock.
+//! Deletions must serialize (every DaRE tree contains every instance, so a
+//! mutation touches all shards), but retraining a node at most once per
+//! *batch* (paper §A.7) makes grouped deletions cheaper than one-at-a-time
+//! processing. The batcher collects deletion requests that arrive within a
+//! short window (or up to a max batch size) and applies them back-to-back
+//! on the single mutation thread. Since the sharded store (DESIGN.md §8)
+//! each application fans out across shard locks internally — readers on
+//! other shards keep running while a batch is applied.
 
+use crate::coordinator::shards::ShardedForest;
 use crate::data::dataset::InstanceId;
-use crate::forest::forest::DareForest;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -39,7 +42,7 @@ impl DeletionBatcher {
     /// Spawn the mutation thread. `window` bounds how long the first request
     /// in a batch waits for company; `max_batch` bounds batch size.
     pub fn start(
-        forest: Arc<RwLock<DareForest>>,
+        forest: Arc<ShardedForest>,
         window: Duration,
         max_batch: usize,
     ) -> DeletionBatcher {
@@ -82,7 +85,7 @@ impl Drop for DeletionBatcher {
 }
 
 fn run_worker(
-    forest: Arc<RwLock<DareForest>>,
+    forest: Arc<ShardedForest>,
     rx: Receiver<Job>,
     window: Duration,
     max_batch: usize,
@@ -112,12 +115,14 @@ fn run_worker(
             }
         }
 
-        // apply the whole batch under one write lock
+        // Apply the whole batch back-to-back. Request order within a batch
+        // is arrival order, so the per-tree operation sequence — and hence
+        // every RNG stream — is identical to handling the requests one by
+        // one (DESIGN.md §6/§8).
         let batch_size = jobs.len();
-        let mut guard = forest.write().unwrap();
         for job in jobs {
             let requested = job.ids.len();
-            let (report, skipped) = guard.delete_batch(&job.ids);
+            let (report, skipped) = forest.delete_batch(&job.ids);
             let outcome = DeleteOutcome {
                 requested,
                 deleted: requested - skipped,
@@ -134,9 +139,10 @@ fn run_worker(
 mod tests {
     use super::*;
     use crate::data::synth::{generate, SynthSpec};
+    use crate::forest::forest::DareForest;
     use crate::forest::params::Params;
 
-    fn forest(n: usize) -> Arc<RwLock<DareForest>> {
+    fn forest(n: usize) -> Arc<ShardedForest> {
         let d = generate(
             &SynthSpec {
                 n,
@@ -148,16 +154,19 @@ mod tests {
             },
             5,
         );
-        Arc::new(RwLock::new(DareForest::fit(
-            d,
-            &Params {
-                n_trees: 3,
-                max_depth: 5,
-                k: 5,
-                ..Default::default()
-            },
-            9,
-        )))
+        Arc::new(ShardedForest::new(
+            DareForest::fit(
+                d,
+                &Params {
+                    n_trees: 3,
+                    max_depth: 5,
+                    k: 5,
+                    ..Default::default()
+                },
+                9,
+            ),
+            2,
+        ))
     }
 
     #[test]
@@ -167,7 +176,7 @@ mod tests {
         let out = b.delete(vec![0, 1, 2]).unwrap();
         assert_eq!(out.deleted, 3);
         assert_eq!(out.skipped, 0);
-        assert_eq!(f.read().unwrap().n_alive(), 147);
+        assert_eq!(f.n_alive(), 147);
     }
 
     #[test]
@@ -198,7 +207,8 @@ mod tests {
         let outcomes: Vec<DeleteOutcome> =
             handles.into_iter().map(|h| h.join().unwrap()).collect();
         assert_eq!(outcomes.iter().map(|o| o.deleted).sum::<usize>(), 16);
-        assert_eq!(f.read().unwrap().n_alive(), 284);
+        assert_eq!(f.n_alive(), 284);
+        f.validate().unwrap();
         // at least some requests should have shared a batch
         assert!(
             outcomes.iter().any(|o| o.batch_size > 1),

@@ -1,13 +1,16 @@
-//! L3 coordinator: the unlearning service around the DaRE forest — request
-//! router, deletion batcher (dynamic batching of GDPR deletion requests),
-//! per-operation telemetry, and a JSON-lines TCP protocol.
+//! L3 coordinator: the unlearning service around the DaRE forest — the
+//! sharded forest store (per-shard locks + mutation epochs, DESIGN.md §8),
+//! request router, deletion batcher (dynamic batching of GDPR deletion
+//! requests), per-operation telemetry, and a JSON-lines TCP protocol.
 
 pub mod batcher;
 pub mod protocol;
 pub mod service;
+pub mod shards;
 pub mod telemetry;
 
 pub use batcher::{DeleteOutcome, DeletionBatcher};
 pub use protocol::{serve, Client};
 pub use service::{ServiceConfig, UnlearningService};
+pub use shards::ShardedForest;
 pub use telemetry::Telemetry;

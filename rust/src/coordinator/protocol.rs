@@ -151,6 +151,10 @@ mod tests {
         let r = c.call(&parse(r#"{"op":"stats"}"#).unwrap()).unwrap();
         assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
         assert_eq!(r.get("n_alive").unwrap().as_u64(), Some(150));
+        // sharded store surfaces its shape over the wire
+        let n_shards = r.get("n_shards").unwrap().as_u64().unwrap();
+        assert!(n_shards >= 1);
+        assert_eq!(r.get("shards").unwrap().as_arr().unwrap().len() as u64, n_shards);
 
         let r = c.call(&parse(r#"{"op":"delete","ids":[1,2]}"#).unwrap()).unwrap();
         assert_eq!(r.get("deleted").unwrap().as_u64(), Some(2));

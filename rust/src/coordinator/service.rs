@@ -1,25 +1,29 @@
-//! The unlearning service: a request router over a DaRE forest.
+//! The unlearning service: a request router over a **sharded** DaRE forest
+//! (DESIGN.md §8).
 //!
 //! Requests (JSON objects) are dispatched to:
-//! - `predict` — read path: batched inference under a read lock, via the
-//!   PJRT predictor when the forest fits the compiled artifact (refreshing
-//!   the tensorized snapshot lazily after mutations), else native traversal;
+//! - `predict` — read path: per-shard partial sums reduced in global tree
+//!   order (never takes a write lock), via the PJRT predictor when the
+//!   forest fits the compiled artifact — the predictor's tensor snapshot is
+//!   refreshed lazily, re-tensorizing only shards whose epoch moved;
 //! - `delete` — write path: routed through the [`DeletionBatcher`] so
-//!   concurrent GDPR requests share a write lock / retrain batches;
+//!   concurrent GDPR requests share the mutation thread / retrain batches;
 //! - `add` — write path (continual learning §6);
-//! - `delete_cost` — the dry-run adversary signal;
-//! - `stats` — telemetry + model shape snapshot;
+//! - `delete_cost` — the dry-run adversary signal (read path);
+//! - `stats` — telemetry + model shape + per-shard epochs;
 //! - `save` — snapshot the model+data to disk;
 //! - `shutdown` — stop a `serve()` loop.
 //!
 //! Wire format: one JSON object per line over TCP (see `protocol`).
 
 use crate::coordinator::batcher::DeletionBatcher;
+use crate::coordinator::shards::ShardedForest;
 use crate::coordinator::telemetry::Telemetry;
 use crate::forest::forest::DareForest;
 use crate::runtime::{Engine, Manifest, PjrtPredictor};
 use crate::util::json::Value;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::util::threadpool::default_threads;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
@@ -33,6 +37,8 @@ pub struct ServiceConfig {
     /// Try to use the PJRT predictor (falls back to native when the forest
     /// exceeds the artifact shape or artifacts are missing).
     pub use_pjrt: bool,
+    /// Forest shard count; 0 means the threadpool width (DESIGN.md §8).
+    pub n_shards: usize,
 }
 
 impl Default for ServiceConfig {
@@ -41,27 +47,33 @@ impl Default for ServiceConfig {
             batch_window: Duration::from_millis(10),
             max_batch: 4096,
             use_pjrt: true,
+            n_shards: 0,
         }
     }
 }
 
 /// The unlearning service.
 pub struct UnlearningService {
-    forest: Arc<RwLock<DareForest>>,
+    sharded: Arc<ShardedForest>,
     batcher: DeletionBatcher,
     telemetry: Telemetry,
-    pjrt: Mutex<Option<PjrtPredictor>>,
+    /// RwLock, not Mutex: predicts over a current snapshot share the read
+    /// lock (the backend executable serializes internally), only refreshes
+    /// take the write lock.
+    pjrt: RwLock<Option<PjrtPredictor>>,
     manifest: Option<Manifest>,
-    /// Bumped on every mutation; predictor refreshes when stale.
-    version: AtomicU64,
-    pjrt_version: AtomicU64,
+    /// Per-shard epochs the PJRT tensor snapshot was last refreshed at —
+    /// only ever published after an epoch-validated (consistent) refresh;
+    /// compared against [`ShardedForest::shard_epochs`] so only mutated
+    /// shards are re-tensorized.
+    pjrt_epochs: Mutex<Vec<u64>>,
     shutdown: AtomicBool,
 }
 
 impl UnlearningService {
     pub fn new(forest: DareForest, cfg: ServiceConfig) -> Arc<Self> {
-        let forest = Arc::new(RwLock::new(forest));
-        let batcher = DeletionBatcher::start(Arc::clone(&forest), cfg.batch_window, cfg.max_batch);
+        // Build the PJRT predictor against the intact forest, then hand the
+        // trees over to the sharded store.
         let (pjrt, manifest) = if cfg.use_pjrt {
             match crate::runtime::manifest::locate_artifacts()
                 .ok_or_else(|| anyhow::anyhow!("artifacts not built"))
@@ -69,7 +81,7 @@ impl UnlearningService {
             {
                 Ok(m) => {
                     let p = Engine::global()
-                        .and_then(|e| PjrtPredictor::new(e, &m, &forest.read().unwrap()))
+                        .and_then(|e| PjrtPredictor::new(e, &m, &forest))
                         .ok();
                     (p, Some(m))
                 }
@@ -78,25 +90,47 @@ impl UnlearningService {
         } else {
             (None, None)
         };
+        let n_shards = if cfg.n_shards == 0 {
+            default_threads()
+        } else {
+            cfg.n_shards
+        };
+        let sharded = Arc::new(ShardedForest::new(forest, n_shards));
+        let batcher = DeletionBatcher::start(Arc::clone(&sharded), cfg.batch_window, cfg.max_batch);
+        let pjrt_epochs = sharded.shard_epochs();
         Arc::new(UnlearningService {
-            forest,
+            sharded,
             batcher,
             telemetry: Telemetry::new(),
-            pjrt: Mutex::new(pjrt),
+            pjrt: RwLock::new(pjrt),
             manifest,
-            version: AtomicU64::new(0),
-            pjrt_version: AtomicU64::new(0),
+            pjrt_epochs: Mutex::new(pjrt_epochs),
             shutdown: AtomicBool::new(false),
         })
     }
 
     /// Whether the PJRT predictor is active.
     pub fn pjrt_active(&self) -> bool {
-        self.pjrt.lock().unwrap().is_some()
+        self.pjrt.read().unwrap().is_some()
     }
 
-    pub fn forest(&self) -> &Arc<RwLock<DareForest>> {
-        &self.forest
+    /// The sharded forest store backing this service.
+    pub fn sharded(&self) -> &Arc<ShardedForest> {
+        &self.sharded
+    }
+
+    /// Clone a consistent [`DareForest`] view of the current model+data.
+    pub fn snapshot_forest(&self) -> DareForest {
+        self.sharded.snapshot()
+    }
+
+    /// Feature arity of the served model.
+    pub fn n_features(&self) -> usize {
+        self.sharded.n_features()
+    }
+
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
     }
 
     pub fn is_shutdown(&self) -> bool {
@@ -137,42 +171,116 @@ impl UnlearningService {
         }
     }
 
+    /// Whether the PJRT tensor snapshot matches the current (stable) shard
+    /// epochs. `pjrt_epochs` is only published after an epoch-validated
+    /// refresh, so equality implies both current and consistent.
+    fn pjrt_snapshot_current(&self) -> bool {
+        *self.pjrt_epochs.lock().unwrap() == self.sharded.shard_epochs()
+    }
+
+    /// Refresh the PJRT tensor snapshot for shards whose epoch moved since
+    /// the last refresh, epoch-validated like the native read path: the
+    /// epoch vector must be even and unchanged across the whole refresh,
+    /// else the per-shard reads could mix pre-/post-mutation trees into a
+    /// forest state that never existed. Returns true when the snapshot is
+    /// current and consistent (safe to serve); false means serve native
+    /// this request (`pjrt_epochs` stays unpublished, so every shard the
+    /// torn attempt touched is still marked dirty and re-tensorized next
+    /// round). Disables the predictor permanently when a refresh errors —
+    /// the forest outgrew the artifact.
+    fn refresh_pjrt(&self, pjrt_guard: &mut Option<PjrtPredictor>) -> bool {
+        if pjrt_guard.is_none() || self.manifest.is_none() {
+            return false;
+        }
+        let mut last = self.pjrt_epochs.lock().unwrap();
+        for _ in 0..2 {
+            let epochs = self.sharded.shard_epochs();
+            if epochs.iter().any(|e| e % 2 == 1) {
+                // A mutation is in flight (§8 seqlock): this request takes
+                // the native path, which waits it out consistently.
+                return false;
+            }
+            if epochs == *last {
+                return true;
+            }
+            let dirty: Vec<usize> =
+                (0..epochs.len()).filter(|&s| epochs[s] != last[s]).collect();
+            let refreshed = (|| -> anyhow::Result<()> {
+                let pred = pjrt_guard.as_mut().unwrap();
+                for &s in &dirty {
+                    self.sharded
+                        .with_shard_trees(s, |first, trees| pred.refresh_trees(first, trees))?;
+                }
+                pred.rebuild_literals()
+            })();
+            if refreshed.is_err() {
+                *pjrt_guard = None;
+                return false;
+            }
+            // Validate: if a mutation interleaved, the snapshot may be torn
+            // — do not publish; retry once, then fall back to native.
+            if self.sharded.shard_epochs() == epochs {
+                *last = epochs;
+                return true;
+            }
+        }
+        false
+    }
+
     fn op_predict(&self, req: &Value) -> Value {
         let Some(rows_json) = req.get("rows").and_then(Value::as_arr) else {
             return err_response("predict needs 'rows': [[f32,...],...]");
         };
+        let p = self.sharded.n_features();
         let mut rows: Vec<Vec<f32>> = Vec::with_capacity(rows_json.len());
         for r in rows_json {
             let Some(cells) = r.as_arr() else {
                 return err_response("rows must be arrays of numbers");
             };
+            // Arity is validated here because the arena descent indexes
+            // row[attr] unchecked — a short row from the wire must be a
+            // request error, not a panic in the handler thread.
+            if cells.len() != p {
+                return err_response(&format!(
+                    "row has {} features, model expects {p}",
+                    cells.len()
+                ));
+            }
             rows.push(cells.iter().map(|c| c.as_f64().unwrap_or(0.0) as f32).collect());
         }
+        self.telemetry.incr("predict_rows", rows.len() as u64);
 
-        // Fast path: PJRT batch predictor (refresh if the model mutated).
-        let version = self.version.load(Ordering::SeqCst);
-        let mut pjrt_guard = self.pjrt.lock().unwrap();
-        if let (Some(pred), Some(m)) = (pjrt_guard.as_mut(), self.manifest.as_ref()) {
-            let forest = self.forest.read().unwrap();
-            if self.pjrt_version.swap(version, Ordering::SeqCst) != version {
-                if pred.refresh(m, &forest).is_err() {
-                    *pjrt_guard = None; // forest outgrew the artifact: fall back
-                }
-            }
-            if let Some(pred) = pjrt_guard.as_ref() {
-                if let Ok(probs) = pred.predict(&rows) {
-                    let mut resp = ok_response();
-                    resp.set("probs", probs.iter().map(|p| *p as f64).collect::<Vec<f64>>());
-                    resp.set("engine", "pjrt");
-                    return resp;
+        // Fast path: PJRT predicts over a current snapshot share the read
+        // lock — concurrent predicts don't serialize on the service layer.
+        {
+            let pjrt = self.pjrt.read().unwrap();
+            if let Some(pred) = pjrt.as_ref() {
+                if self.pjrt_snapshot_current() {
+                    if let Ok(probs) = pred.predict(&rows) {
+                        return pjrt_response(&probs);
+                    }
                 }
             }
         }
-        drop(pjrt_guard);
+        // Slow path (model mutated since the last snapshot): take the write
+        // lock, refresh only the dirty shards, and serve if the refresh was
+        // epoch-consistent. The read guard is dropped in its own block
+        // before the write acquisition — same-thread read→write on one
+        // RwLock would deadlock.
+        let pjrt_present = { self.pjrt.read().unwrap().is_some() };
+        if pjrt_present {
+            let mut pjrt_guard = self.pjrt.write().unwrap();
+            if self.refresh_pjrt(&mut pjrt_guard) {
+                if let Some(pred) = pjrt_guard.as_ref() {
+                    if let Ok(probs) = pred.predict(&rows) {
+                        return pjrt_response(&probs);
+                    }
+                }
+            }
+        }
 
-        // Native path.
-        let forest = self.forest.read().unwrap();
-        let probs = forest.predict_proba_rows(&rows);
+        // Native path: per-shard partials, no write lock anywhere.
+        let probs = self.sharded.predict_proba_rows(&rows);
         let mut resp = ok_response();
         resp.set("probs", probs.iter().map(|p| *p as f64).collect::<Vec<f64>>());
         resp.set("engine", "native");
@@ -189,7 +297,13 @@ impl UnlearningService {
         }
         match self.batcher.delete(ids) {
             Ok(out) => {
-                self.version.fetch_add(1, Ordering::SeqCst);
+                // A no-op batch (all ids dead/duplicate) mutates nothing and
+                // moves no shard epoch — count only effective mutations so
+                // 'mutations' stays reconcilable with the epochs.
+                if out.deleted > 0 {
+                    self.telemetry.incr("mutations", 1);
+                }
+                self.telemetry.incr("deleted_ids", out.deleted as u64);
                 let mut resp = ok_response();
                 resp.set("deleted", out.deleted)
                     .set("skipped", out.skipped)
@@ -212,47 +326,50 @@ impl UnlearningService {
             return err_response("label must be 0 or 1");
         }
         let row: Vec<f32> = row_json.iter().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect();
-        let mut forest = self.forest.write().unwrap();
-        if row.len() != forest.data().n_features() {
-            return err_response(&format!(
-                "row has {} features, model expects {}",
-                row.len(),
-                forest.data().n_features()
-            ));
+        match self.sharded.add(&row, label as u8) {
+            Ok(id) => {
+                self.telemetry.incr("mutations", 1);
+                let mut resp = ok_response();
+                resp.set("id", id);
+                resp
+            }
+            Err(e) => err_response(&format!("{e}")),
         }
-        let id = forest.add(&row, label as u8);
-        drop(forest);
-        self.version.fetch_add(1, Ordering::SeqCst);
-        let mut resp = ok_response();
-        resp.set("id", id);
-        resp
     }
 
     fn op_delete_cost(&self, req: &Value) -> Value {
         let Some(id) = req.get("id").and_then(Value::as_u64) else {
             return err_response("delete_cost needs 'id'");
         };
-        let forest = self.forest.read().unwrap();
-        let id = id as u32;
-        if (id as usize) >= forest.data().n_total() || !forest.data().is_alive(id) {
-            return err_response("not a live instance");
+        match self.sharded.delete_cost(id as u32) {
+            Ok(cost) => {
+                let mut resp = ok_response();
+                resp.set("cost", cost);
+                resp
+            }
+            Err(_) => err_response("not a live instance"),
         }
-        let cost = forest.delete_cost(id);
-        let mut resp = ok_response();
-        resp.set("cost", cost);
-        resp
     }
 
     fn op_stats(&self) -> Value {
-        let forest = self.forest.read().unwrap();
-        let mem = forest.memory();
+        let mem = self.sharded.memory();
+        let epochs = self.sharded.shard_epochs();
+        let mut shards = Vec::with_capacity(epochs.len());
+        for (s, &epoch) in epochs.iter().enumerate() {
+            let trees = self.sharded.with_shard_trees(s, |_, ts| ts.len());
+            let mut o = Value::obj();
+            o.set("trees", trees).set("epoch", epoch);
+            shards.push(o);
+        }
         let mut resp = ok_response();
         resp.set("telemetry", self.telemetry.snapshot())
-            .set("n_alive", forest.n_alive())
-            .set("n_trees", forest.n_trees())
+            .set("n_alive", self.sharded.n_alive())
+            .set("n_trees", self.sharded.n_trees())
+            .set("n_shards", self.sharded.n_shards())
+            .set("shards", Value::Arr(shards))
             .set("pjrt_active", self.pjrt_active())
             .set("model_bytes", mem.total())
-            .set("data_bytes", forest.data_bytes());
+            .set("data_bytes", self.sharded.data_bytes());
         resp
     }
 
@@ -260,12 +377,19 @@ impl UnlearningService {
         let Some(path) = req.get("path").and_then(Value::as_str) else {
             return err_response("save needs 'path'");
         };
-        let forest = self.forest.read().unwrap();
-        match crate::forest::serialize::save(&forest, std::path::Path::new(path)) {
+        let snapshot = self.sharded.snapshot();
+        match crate::forest::serialize::save(&snapshot, std::path::Path::new(path)) {
             Ok(()) => ok_response(),
             Err(e) => err_response(&format!("{e}")),
         }
     }
+}
+
+fn pjrt_response(probs: &[f32]) -> Value {
+    let mut resp = ok_response();
+    resp.set("probs", probs.iter().map(|p| *p as f64).collect::<Vec<f64>>());
+    resp.set("engine", "pjrt");
+    resp
 }
 
 pub fn ok_response() -> Value {
@@ -287,7 +411,7 @@ mod tests {
     use crate::forest::params::Params;
     use crate::util::json::parse;
 
-    fn service() -> Arc<UnlearningService> {
+    fn service_with_shards(n_shards: usize) -> Arc<UnlearningService> {
         let d = generate(
             &SynthSpec {
                 n: 200,
@@ -314,9 +438,14 @@ mod tests {
             ServiceConfig {
                 batch_window: Duration::from_millis(1),
                 use_pjrt: false, // unit tests: native path (pjrt covered separately)
+                n_shards,
                 ..Default::default()
             },
         )
+    }
+
+    fn service() -> Arc<UnlearningService> {
+        service_with_shards(2)
     }
 
     fn req(s: &str) -> Value {
@@ -326,7 +455,7 @@ mod tests {
     #[test]
     fn predict_roundtrip() {
         let svc = service();
-        let p = svc.forest().read().unwrap().data().n_features();
+        let p = svc.n_features();
         let row: Vec<String> = vec!["0.1".into(); p];
         let r = svc.handle(&req(&format!(r#"{{"op":"predict","rows":[[{}]]}}"#, row.join(","))));
         assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
@@ -345,14 +474,26 @@ mod tests {
         assert_eq!(r.get("deleted").unwrap().as_u64(), Some(3));
         let s = svc.handle(&req(r#"{"op":"stats"}"#));
         assert_eq!(s.get("n_alive").unwrap().as_u64(), Some(197));
+        assert_eq!(s.get("n_shards").unwrap().as_u64(), Some(2));
         let tele = s.get("telemetry").unwrap().get("ops").unwrap();
         assert!(tele.get("delete").is_some());
+        // the mutation advanced every shard's epoch by exactly 2 (seqlock)
+        let shards = s.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 2);
+        for sh in shards {
+            assert_eq!(sh.get("epoch").unwrap().as_u64(), Some(2));
+            assert_eq!(sh.get("trees").unwrap().as_u64(), Some(2));
+        }
+        assert_eq!(
+            s.get("telemetry").unwrap().get("counters").unwrap().get("mutations").unwrap().as_u64(),
+            Some(1)
+        );
     }
 
     #[test]
     fn add_then_delete_roundtrip() {
         let svc = service();
-        let p = svc.forest().read().unwrap().data().n_features();
+        let p = svc.n_features();
         let row: Vec<String> = vec!["0.5".into(); p];
         let r = svc.handle(&req(&format!(
             r#"{{"op":"add","row":[{}],"label":1}}"#,
@@ -382,7 +523,9 @@ mod tests {
             r#"{"op":"predict"}"#,
             r#"{"op":"delete"}"#,
             r#"{"op":"add","row":[1.0],"label":5}"#,
-            r#"{"op":"add","row":[1.0],"label":1}"#, // wrong arity
+            r#"{"op":"add","row":[1.0],"label":1}"#,  // wrong arity
+            r#"{"op":"predict","rows":[[1.0]]}"#,     // wrong arity: error, not a panic
+            r#"{"op":"predict","rows":[[]]}"#,        // empty row
         ] {
             let r = svc.handle(&req(bad));
             assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{bad}");
@@ -399,20 +542,39 @@ mod tests {
     }
 
     #[test]
+    fn shard_count_does_not_change_results() {
+        // The same request stream against 1-, 2- and 4-shard services must
+        // produce bit-identical responses — sharding is pure routing.
+        let svcs: Vec<_> = [1usize, 2, 4].iter().map(|&s| service_with_shards(s)).collect();
+        let p = svcs[0].n_features();
+        let row = vec!["0.3"; p].join(",");
+        let reqs = [
+            format!(r#"{{"op":"delete","ids":[3,4,5]}}"#),
+            format!(r#"{{"op":"add","row":[{row}],"label":0}}"#),
+            format!(r#"{{"op":"predict","rows":[[{row}]]}}"#),
+            format!(r#"{{"op":"delete_cost","id":9}}"#),
+        ];
+        for rq in &reqs {
+            let rs: Vec<Value> = svcs.iter().map(|s| s.handle(&req(rq))).collect();
+            for r in &rs[1..] {
+                assert_eq!(r.to_string(), rs[0].to_string(), "request {rq} diverged");
+            }
+        }
+        for s in &svcs {
+            s.sharded().validate().unwrap();
+        }
+    }
+
+    #[test]
     fn predictions_change_after_unlearning_an_instance_class() {
         // Deleting all positives of a region should pull predictions down —
         // the service-level view of exact unlearning.
         let svc = service();
-        let (probe, pos_ids): (Vec<f32>, Vec<u32>) = {
-            let f = svc.forest().read().unwrap();
-            let d = f.data();
+        let (probe, pos_ids): (Vec<f32>, Vec<u32>) = svc.sharded().with_data(|d| {
             let pos: Vec<u32> = d.live_ids().into_iter().filter(|&i| d.y(i) == 1).collect();
             (d.row(pos[0]), pos)
-        };
-        let before = {
-            let f = svc.forest().read().unwrap();
-            f.predict_proba(&probe)
-        };
+        });
+        let before = svc.sharded().predict_proba(&probe);
         // delete 80% of positives
         let del: Vec<String> = pos_ids
             .iter()
@@ -420,10 +582,7 @@ mod tests {
             .map(|i| i.to_string())
             .collect();
         svc.handle(&req(&format!(r#"{{"op":"delete","ids":[{}]}}"#, del.join(","))));
-        let after = {
-            let f = svc.forest().read().unwrap();
-            f.predict_proba(&probe)
-        };
+        let after = svc.sharded().predict_proba(&probe);
         assert!(
             after < before + 1e-6,
             "removing positives should not raise positive probability ({before} -> {after})"

@@ -1,0 +1,599 @@
+//! Sharded forest ownership (DESIGN.md §8): the coordinator's store.
+//!
+//! The tree vector of a [`DareForest`] is partitioned into `S` contiguous
+//! shards. Each shard owns its tree subset behind its **own** `RwLock` and
+//! carries a mutation-epoch counter, so
+//!
+//! - reads (predict, delete_cost, stats) take per-shard *read* locks and
+//!   proceed concurrently with each other and with mutations of *other*
+//!   shards — no global forest lock exists anymore;
+//! - mutations fan out across shards and run concurrently with each other
+//!   *within* one logical operation (each shard worker holds only its own
+//!   write lock);
+//! - snapshot consumers (the PJRT predictor refresh) compare per-shard
+//!   epochs and re-tensorize only shards that actually mutated.
+//!
+//! **Bit-exactness with the unsharded path.** Nothing about the model
+//! changes: tree seeds stay keyed by *global* tree index
+//! ([`crate::forest::forest::tree_seed`]), per-tree update epochs live in
+//! the trees themselves, and every mutation applies the same per-tree
+//! operation sequence in the same order as `DareForest::delete_batch` /
+//! `add` (tree updates never read the liveness mask, see DESIGN.md §6), so
+//! all Lemma-A.1 RNG streams are identical. Prediction gathers per-shard,
+//! per-tree leaf-value partials and reduces them in global tree order —
+//! the exact f32 accumulation sequence of `DareForest::predict_proba` — so
+//! probabilities are bit-identical, not merely close. `tests/op_fuzz.rs`
+//! enforces all of this against the boxed oracle and the arena path.
+//!
+//! **Locking protocol.** Writers (delete/add) serialize on a store-level
+//! mutation mutex (they would contend on every shard anyway — each DaRE
+//! tree contains every instance) and bracket every mutation with a
+//! seqlock-style epoch protocol: each shard's epoch is bumped to *odd*
+//! before the first tree is touched and back to *even* after the dataset
+//! is updated, so one mutation advances every epoch by 2. Readers that
+//! must observe one consistent forest state (`predict_proba_rows`,
+//! `delete_cost`) read the epoch vector before and after, retry when it
+//! moved or was odd, and after a few failed attempts fall back to taking
+//! the mutation mutex. Deadlock is impossible: at most one thread (the
+//! mutation-mutex holder) ever acquires write locks, it never requests
+//! another lock while holding the dataset write lock, and readers hold at
+//! most one shard lock at a time.
+
+use crate::data::dataset::{Dataset, InstanceId};
+use crate::forest::delete::DeleteReport;
+use crate::forest::forest::{
+    accept_deletions, shard_ranges, DareForest, ForestDeleteReport, PREDICT_BATCH_CUTOFF,
+    PREDICT_BLOCK,
+};
+use crate::forest::node::NodeMemory;
+use crate::forest::params::Params;
+use crate::forest::tree::DareTree;
+use crate::util::threadpool::scope_map;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+
+/// Attempts at an optimistic (epoch-validated) read before falling back to
+/// the mutation mutex.
+const READ_RETRIES: usize = 4;
+
+/// One shard: a contiguous range of the forest's trees behind its own lock.
+struct Shard {
+    /// Trees with global indices `start..start + trees.len()`.
+    trees: RwLock<Vec<DareTree>>,
+    /// Global index of the first tree in this shard.
+    start: usize,
+    /// Seqlock epoch: odd while a mutation is in flight, +2 per mutation
+    /// that changed this shard's trees.
+    epoch: AtomicU64,
+}
+
+/// The coordinator's sharded forest store. See the module docs.
+pub struct ShardedForest {
+    params: Params,
+    seed: u64,
+    n_trees: usize,
+    data: RwLock<Dataset>,
+    shards: Vec<Shard>,
+    /// Serializes mutations (see module docs: every mutation touches every
+    /// shard, so writer concurrency buys nothing and interleaved writer
+    /// fan-outs could deadlock on the dataset lock).
+    mutation: Mutex<()>,
+}
+
+impl ShardedForest {
+    /// Partition `forest` into at most `n_shards` shards (capped at the
+    /// tree count so no shard is empty).
+    pub fn new(forest: DareForest, n_shards: usize) -> Self {
+        let (params, seed, mut trees, data) = forest.into_parts();
+        let n_trees = trees.len();
+        let ranges = shard_ranges(n_trees, n_shards);
+        let mut shards = Vec::with_capacity(ranges.len());
+        // split_off from the back so each shard keeps its contiguous range
+        for r in ranges.iter().rev() {
+            let tail = trees.split_off(r.start);
+            shards.push(Shard {
+                trees: RwLock::new(tail),
+                start: r.start,
+                epoch: AtomicU64::new(0),
+            });
+        }
+        shards.reverse();
+        ShardedForest {
+            params,
+            seed,
+            n_trees,
+            data: RwLock::new(data),
+            shards,
+            mutation: Mutex::new(()),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+    pub fn n_trees(&self) -> usize {
+        self.n_trees
+    }
+    pub fn params(&self) -> &Params {
+        &self.params
+    }
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Per-shard mutation epochs (index = shard id). Even = stable, odd =
+    /// a mutation is in flight; one mutation advances every epoch by 2.
+    /// Snapshot consumers diff this against their last-seen vector to find
+    /// dirty shards.
+    pub fn shard_epochs(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.epoch.load(Ordering::SeqCst)).collect()
+    }
+
+    /// Seqlock write-side: flip every epoch odd (mutation in flight).
+    /// Caller must hold the mutation mutex.
+    fn begin_mutation(&self) {
+        for s in &self.shards {
+            s.epoch.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Seqlock write-side: flip every epoch back to even (stable).
+    fn end_mutation(&self) {
+        for s in &self.shards {
+            s.epoch.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Seqlock read-side: run `f` and return its result only if the epoch
+    /// vector was even and unchanged across the run (i.e. `f` observed ONE
+    /// forest state, not a mix of pre-/post-mutation shards). After
+    /// [`READ_RETRIES`] failed attempts, serialize behind the mutation
+    /// mutex instead of spinning.
+    fn read_consistent<R>(&self, f: impl Fn() -> R) -> R {
+        for _ in 0..READ_RETRIES {
+            let before = self.shard_epochs();
+            if before.iter().any(|e| e % 2 == 1) {
+                std::thread::yield_now();
+                continue;
+            }
+            let r = f();
+            if self.shard_epochs() == before {
+                return r;
+            }
+        }
+        let _m = self.mutation.lock().unwrap();
+        f()
+    }
+
+    /// Run `f` against the training database under the read lock.
+    pub fn with_data<R>(&self, f: impl FnOnce(&Dataset) -> R) -> R {
+        f(&self.data.read().unwrap())
+    }
+
+    pub fn n_alive(&self) -> usize {
+        self.with_data(|d| d.n_alive())
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.with_data(|d| d.n_features())
+    }
+
+    pub fn live_ids(&self) -> Vec<InstanceId> {
+        self.with_data(|d| d.live_ids())
+    }
+
+    /// Bytes of the training database (Table 3 "Data" column).
+    pub fn data_bytes(&self) -> usize {
+        self.with_data(|d| d.memory_bytes())
+    }
+
+    /// Run `f` over one shard's trees under its read lock. `f` receives the
+    /// global index of the shard's first tree and the tree slice.
+    pub fn with_shard_trees<R>(&self, shard: usize, f: impl FnOnce(usize, &[DareTree]) -> R) -> R {
+        let s = &self.shards[shard];
+        let trees = s.trees.read().unwrap();
+        f(s.start, &trees)
+    }
+
+    /// Visit every tree in global index order (read locks, shard by shard).
+    pub fn for_each_tree(&self, mut f: impl FnMut(usize, &DareTree)) {
+        for s in &self.shards {
+            let trees = s.trees.read().unwrap();
+            for (k, t) in trees.iter().enumerate() {
+                f(s.start + k, t);
+            }
+        }
+    }
+
+    /// Batch deletion, bit-exact with [`DareForest::delete_batch`]: same
+    /// dedup/validation, same per-tree operation order and epochs, same
+    /// merged per-tree reports (gathered back into global tree order) —
+    /// only the locking and fan-out routing differ.
+    pub fn delete_batch(&self, ids: &[InstanceId]) -> (ForestDeleteReport, usize) {
+        let _m = self.mutation.lock().unwrap();
+        // Phase 1: validate and dedupe against the liveness mask (the
+        // helper shared with `DareForest::delete_batch`, so the two paths
+        // cannot diverge on accepted/skipped sets). No writer can
+        // interleave (mutation mutex), so the mask is stable until the
+        // mark-removed pass below.
+        let (accepted, skipped) = {
+            let d = self.data.read().unwrap();
+            accept_deletions(&d, ids)
+        };
+
+        // Phase 2: fan the whole accepted sequence out to every shard; each
+        // worker holds only its shard's write lock (plus a shared read lock
+        // on the immutable-row dataset). The seqlock bracket makes the
+        // in-flight state visible to optimistic readers. An all-skipped
+        // batch mutates nothing and must not move epochs.
+        if !accepted.is_empty() {
+            self.begin_mutation();
+        }
+        let per_shard: Vec<Vec<DeleteReport>> =
+            scope_map(&self.shards, self.shards.len(), |_, shard| {
+                let mut trees = shard.trees.write().unwrap();
+                let d = self.data.read().unwrap();
+                trees
+                    .iter_mut()
+                    .map(|t| {
+                        let mut merged = DeleteReport::default();
+                        for &id in &accepted {
+                            merged.merge(&t.delete(&d, &self.params, id));
+                        }
+                        merged
+                    })
+                    .collect()
+            });
+
+        // Phase 3: retire the instances and publish the new shard epochs.
+        if !accepted.is_empty() {
+            let mut d = self.data.write().unwrap();
+            for &id in &accepted {
+                d.mark_removed(id);
+            }
+            drop(d);
+            self.end_mutation();
+        }
+        let per_tree: Vec<DeleteReport> = per_shard.into_iter().flatten().collect();
+        (ForestDeleteReport { per_tree }, skipped)
+    }
+
+    /// Add a fresh training instance (§6), bit-exact with
+    /// [`DareForest::add`]. Returns an error (instead of the unsharded
+    /// path's assert) when the row arity is wrong.
+    pub fn add(&self, row: &[f32], label: u8) -> anyhow::Result<InstanceId> {
+        let _m = self.mutation.lock().unwrap();
+        // Validate before the seqlock bracket so a rejected request leaves
+        // the epochs untouched (n_features/label are immutable properties).
+        {
+            let d = self.data.read().unwrap();
+            anyhow::ensure!(
+                row.len() == d.n_features(),
+                "row has {} features, model expects {}",
+                row.len(),
+                d.n_features()
+            );
+        }
+        anyhow::ensure!(label <= 1, "label must be 0 or 1");
+        // The dataset row must exist before the trees index it, so the
+        // bracket opens before push_row — optimistic readers retry across
+        // the whole window.
+        self.begin_mutation();
+        let id = self.data.write().unwrap().push_row(row, label);
+        scope_map(&self.shards, self.shards.len(), |_, shard| {
+            let mut trees = shard.trees.write().unwrap();
+            let d = self.data.read().unwrap();
+            for t in trees.iter_mut() {
+                t.add(&d, &self.params, id);
+            }
+        });
+        self.end_mutation();
+        Ok(id)
+    }
+
+    /// Dry-run total retrain cost of deleting `id` across all trees.
+    /// Read locks only in the common case; the epoch-validated retry
+    /// guarantees the liveness check and every shard's costing observed
+    /// the same forest state (a concurrent deletion of `id` yields the
+    /// "not live" error, never a cost mixing pre-/post-delete shards).
+    pub fn delete_cost(&self, id: InstanceId) -> anyhow::Result<u64> {
+        self.read_consistent(|| {
+            {
+                let d = self.data.read().unwrap();
+                anyhow::ensure!(
+                    (id as usize) < d.n_total() && d.is_alive(id),
+                    "instance {id} is not a live training instance"
+                );
+            }
+            let per_shard = scope_map(&self.shards, self.shards.len(), |_, shard| {
+                let trees = shard.trees.read().unwrap();
+                let d = self.data.read().unwrap();
+                trees
+                    .iter()
+                    .map(|t| t.delete_cost(&d, &self.params, id))
+                    .sum::<u64>()
+            });
+            Ok(per_shard.into_iter().sum())
+        })
+    }
+
+    /// Positive-class probability for one row (bit-exact with
+    /// [`DareForest::predict_proba`]).
+    pub fn predict_proba(&self, row: &[f32]) -> f32 {
+        self.predict_proba_rows(std::slice::from_ref(&row.to_vec()))[0]
+    }
+
+    /// Batch prediction without any write lock: every shard computes its
+    /// trees' per-row leaf values (level-synchronous
+    /// [`crate::forest::arena::ArenaTree::predict_block_sum`] blocks at or
+    /// above [`PREDICT_BATCH_CUTOFF`] rows, scalar descents below), and the
+    /// partials are reduced in global tree order — the identical f32
+    /// accumulation sequence as [`DareForest::predict_proba_rows`], hence
+    /// bit-identical probabilities. The epoch-validated retry guarantees
+    /// all shards were read at one forest state (never a pre-/post-delete
+    /// mix).
+    ///
+    /// Parallelism note: the fan-out is one worker per shard (tree-level),
+    /// not per row block — size `n_shards` to the cores you want the read
+    /// path to use (the default, threadpool width, does this; only forests
+    /// with fewer trees than cores are narrower).
+    pub fn predict_proba_rows(&self, rows: &[Vec<f32>]) -> Vec<f32> {
+        let n_rows = rows.len();
+        if n_rows == 0 {
+            return Vec::new();
+        }
+        let partials: Vec<Vec<f32>> = self.read_consistent(|| {
+            // Per shard: a (trees_in_shard × n_rows) flat plane of leaf
+            // values. `predict_block_sum` accumulates into zeroed slices,
+            // which yields plain leaf values — the same reuse the forest's
+            // block path gets.
+            scope_map(&self.shards, self.shards.len(), |_, shard| {
+                let trees = shard.trees.read().unwrap();
+                let mut vals = vec![0.0f32; trees.len() * n_rows];
+                let mut cursors: Vec<u32> = Vec::new();
+                for (k, t) in trees.iter().enumerate() {
+                    let out = &mut vals[k * n_rows..(k + 1) * n_rows];
+                    if n_rows < PREDICT_BATCH_CUTOFF {
+                        for (o, row) in out.iter_mut().zip(rows) {
+                            *o = t.predict(row);
+                        }
+                    } else {
+                        for (b, chunk) in rows.chunks(PREDICT_BLOCK).enumerate() {
+                            let lo = b * PREDICT_BLOCK;
+                            t.arena.predict_block_sum(
+                                chunk,
+                                &mut cursors,
+                                &mut out[lo..lo + chunk.len()],
+                            );
+                        }
+                    }
+                }
+                vals
+            })
+        });
+        // Reduce in global tree order: shards hold contiguous ascending
+        // ranges, so folding shard-by-shard, tree-by-tree replays the
+        // unsharded per-row sum exactly.
+        let mut sums = vec![0.0f32; n_rows];
+        for vals in &partials {
+            for tree_vals in vals.chunks(n_rows) {
+                for (s, v) in sums.iter_mut().zip(tree_vals) {
+                    *s += *v;
+                }
+            }
+        }
+        let nt = self.n_trees as f32;
+        for s in sums.iter_mut() {
+            *s /= nt;
+        }
+        sums
+    }
+
+    /// Memory breakdown across all trees (paper Table 3).
+    pub fn memory(&self) -> NodeMemory {
+        let mut m = NodeMemory::default();
+        self.for_each_tree(|_, t| m.add(&t.memory()));
+        m
+    }
+
+    /// Clone a consistent [`DareForest`] view (serialization, oracles).
+    /// Takes the mutation mutex so trees and dataset cannot diverge
+    /// mid-snapshot.
+    pub fn snapshot(&self) -> DareForest {
+        let _m = self.mutation.lock().unwrap();
+        let mut trees = Vec::with_capacity(self.n_trees);
+        for s in &self.shards {
+            trees.extend(s.trees.read().unwrap().iter().cloned());
+        }
+        let data = self.data.read().unwrap().clone();
+        DareForest::from_parts(self.params.clone(), self.seed, trees, data)
+            .expect("sharded store is internally consistent")
+    }
+
+    /// Deep structural audit for the stress/fuzz harnesses: every shard's
+    /// arenas validate, every tree covers exactly the live instance set
+    /// (nothing lost, nothing duplicated), and tree sizes agree with the
+    /// database. Quiesces writers via the mutation mutex.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let _m = self.mutation.lock().unwrap();
+        let d = self.data.read().unwrap();
+        let expect = d.live_ids(); // ascending
+        let mut ids = Vec::with_capacity(expect.len());
+        for s in &self.shards {
+            let trees = s.trees.read().unwrap();
+            for (k, t) in trees.iter().enumerate() {
+                let gt = s.start + k;
+                t.arena.validate()?;
+                anyhow::ensure!(
+                    t.n() as usize == d.n_alive(),
+                    "tree {gt}: size {} != live instances {}",
+                    t.n(),
+                    d.n_alive()
+                );
+                ids.clear();
+                t.arena.collect_ids(t.arena.root(), None, &mut ids);
+                ids.sort_unstable();
+                anyhow::ensure!(
+                    ids == expect,
+                    "tree {gt}: instance set diverged from the live set \
+                     (lost or duplicated ids across shards)"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+
+    fn forest(n: usize, n_trees: usize, seed: u64) -> DareForest {
+        let d = generate(
+            &SynthSpec {
+                n,
+                informative: 3,
+                redundant: 1,
+                noise: 2,
+                flip: 0.05,
+                ..Default::default()
+            },
+            seed,
+        );
+        DareForest::fit(
+            d,
+            &Params {
+                n_trees,
+                max_depth: 6,
+                k: 5,
+                d_rmax: 1,
+                ..Default::default()
+            },
+            seed ^ 0x5A5A,
+        )
+    }
+
+    #[test]
+    fn sharded_delete_batch_is_bit_exact_with_unsharded() {
+        let mut plain = forest(240, 5, 3);
+        let sharded = ShardedForest::new(forest(240, 5, 3), 3);
+        assert_eq!(sharded.n_shards(), 3);
+        assert_eq!(sharded.n_trees(), 5);
+
+        let ids = [4u32, 9, 9, 77, 200, 999_999];
+        let (rs, skipped_s) = sharded.delete_batch(&ids);
+        let (rp, skipped_p) = plain.delete_batch(&ids);
+        assert_eq!(skipped_s, skipped_p);
+        assert_eq!(rs.per_tree.len(), rp.per_tree.len());
+        for (a, b) in rs.per_tree.iter().zip(&rp.per_tree) {
+            assert_eq!(a.retrain_events, b.retrain_events);
+            assert_eq!(a.thresholds_resampled, b.thresholds_resampled);
+            assert_eq!(a.attrs_resampled, b.attrs_resampled);
+        }
+        assert_eq!(sharded.n_alive(), plain.n_alive());
+        sharded.for_each_tree(|gt, t| {
+            assert!(
+                t.structural_matches(&plain.trees()[gt]),
+                "tree {gt} diverged from the unsharded path"
+            );
+        });
+        sharded.validate().unwrap();
+        // one mutation = +2 on every shard (odd while in flight, §8 seqlock)
+        assert!(sharded.shard_epochs().iter().all(|&e| e == 2));
+        // an all-skipped batch must not bump epochs
+        let (_, skipped) = sharded.delete_batch(&[999_999]);
+        assert_eq!(skipped, 1);
+        assert!(sharded.shard_epochs().iter().all(|&e| e == 2));
+    }
+
+    #[test]
+    fn sharded_add_and_delete_cost_match_unsharded() {
+        let mut plain = forest(200, 4, 7);
+        let sharded = ShardedForest::new(forest(200, 4, 7), 4);
+        let p = plain.data().n_features();
+        let row = vec![0.3f32; p];
+        let id_s = sharded.add(&row, 1).unwrap();
+        let id_p = plain.add(&row, 1);
+        assert_eq!(id_s, id_p);
+        sharded.for_each_tree(|gt, t| {
+            assert!(t.structural_matches(&plain.trees()[gt]));
+        });
+        for id in [0u32, 7, 55, id_s] {
+            assert_eq!(sharded.delete_cost(id).unwrap(), plain.delete_cost(id));
+        }
+        assert!(sharded.delete_cost(999_999).is_err());
+        // arity / label validation — rejected requests leave epochs stable
+        let before = sharded.shard_epochs();
+        assert!(sharded.add(&vec![0.0; p + 1], 0).is_err());
+        assert!(sharded.add(&row, 2).is_err());
+        assert_eq!(sharded.shard_epochs(), before);
+    }
+
+    #[test]
+    fn sharded_predictions_are_bit_exact() {
+        let plain = forest(300, 6, 11);
+        let sharded = ShardedForest::new(forest(300, 6, 11), 4);
+        // both the scalar (<cutoff) and the blocked (≥cutoff) path
+        let small: Vec<Vec<f32>> = (0..PREDICT_BATCH_CUTOFF as u32 - 1)
+            .map(|i| plain.data().row(i))
+            .collect();
+        let big: Vec<Vec<f32>> = (0..290u32).map(|i| plain.data().row(i)).collect();
+        assert_eq!(sharded.predict_proba_rows(&small), plain.predict_proba_rows(&small));
+        assert_eq!(sharded.predict_proba_rows(&big), plain.predict_proba_rows(&big));
+        assert_eq!(sharded.predict_proba(&big[0]), plain.predict_proba(&big[0]));
+        assert!(sharded.predict_proba_rows(&[]).is_empty());
+    }
+
+    #[test]
+    fn snapshot_reassembles_the_forest() {
+        let plain = forest(180, 5, 13);
+        let sharded = ShardedForest::new(forest(180, 5, 13), 2);
+        sharded.delete_batch(&[1, 2, 3]).0.cost();
+        let snap = sharded.snapshot();
+        assert_eq!(snap.n_trees(), 5);
+        assert_eq!(snap.n_alive(), 177);
+        assert_eq!(snap.seed(), plain.seed());
+        // snapshot trees are in global order and structurally live
+        for t in snap.trees() {
+            t.arena.validate().unwrap();
+        }
+        let rows: Vec<Vec<f32>> = (4..40u32).map(|i| snap.data().row(i)).collect();
+        assert_eq!(snap.predict_proba_rows(&rows), sharded.predict_proba_rows(&rows));
+    }
+
+    #[test]
+    fn more_shards_than_trees_caps_cleanly() {
+        let sharded = ShardedForest::new(forest(120, 2, 17), 8);
+        assert_eq!(sharded.n_shards(), 2);
+        sharded.delete_batch(&[0, 1]);
+        sharded.validate().unwrap();
+        assert!(sharded.memory().total() > 0);
+    }
+
+    #[test]
+    fn concurrent_readers_during_mutation() {
+        use std::sync::Arc;
+        let sharded = Arc::new(ShardedForest::new(forest(260, 4, 19), 4));
+        let probe: Vec<Vec<f32>> = (0..40u32).map(|i| sharded.with_data(|d| d.row(i))).collect();
+        let mut handles = Vec::new();
+        for _ in 0..3 {
+            let s = Arc::clone(&sharded);
+            let rows = probe.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..30 {
+                    let probs = s.predict_proba_rows(&rows);
+                    assert!(probs.iter().all(|p| (0.0..=1.0).contains(p)));
+                }
+            }));
+        }
+        for chunk in (0u32..60).collect::<Vec<_>>().chunks(5) {
+            sharded.delete_batch(chunk);
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        sharded.validate().unwrap();
+        assert_eq!(sharded.n_alive(), 200);
+    }
+}

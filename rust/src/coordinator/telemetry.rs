@@ -18,6 +18,9 @@ struct OpStats {
 #[derive(Default)]
 pub struct Telemetry {
     ops: Mutex<BTreeMap<String, OpStats>>,
+    /// Named monotonic counters (mutations applied, rows predicted, …) —
+    /// the stress harness cross-checks these against the ops it issued.
+    counters: Mutex<BTreeMap<String, u64>>,
     started: Option<Instant>,
 }
 
@@ -25,8 +28,20 @@ impl Telemetry {
     pub fn new() -> Self {
         Telemetry {
             ops: Mutex::new(BTreeMap::new()),
+            counters: Mutex::new(BTreeMap::new()),
             started: Some(Instant::now()),
         }
+    }
+
+    /// Add `delta` to the named counter.
+    pub fn incr(&self, name: &str, delta: u64) {
+        let mut c = self.counters.lock().unwrap();
+        *c.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Current value of a named counter (0 when never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
     }
 
     /// Record one operation with its latency; `ok` false counts an error.
@@ -67,6 +82,12 @@ impl Telemetry {
             per_op.set(name, o);
         }
         out.set("ops", per_op);
+        let counters = self.counters.lock().unwrap();
+        let mut cs = Value::obj();
+        for (name, v) in counters.iter() {
+            cs.set(name, *v);
+        }
+        out.set("counters", cs);
         out
     }
 }
@@ -107,6 +128,20 @@ mod tests {
                 .as_u64(),
             Some(1)
         );
+    }
+
+    #[test]
+    fn counters_accumulate_and_snapshot() {
+        let t = Telemetry::new();
+        assert_eq!(t.counter("mutations"), 0);
+        t.incr("mutations", 2);
+        t.incr("mutations", 3);
+        t.incr("predict_rows", 7);
+        assert_eq!(t.counter("mutations"), 5);
+        let snap = t.snapshot();
+        let cs = snap.get("counters").unwrap();
+        assert_eq!(cs.get("mutations").unwrap().as_u64(), Some(5));
+        assert_eq!(cs.get("predict_rows").unwrap().as_u64(), Some(7));
     }
 
     #[test]

@@ -59,12 +59,56 @@ impl ForestDeleteReport {
     }
 }
 
+/// Seed of tree `t` in a forest seeded with `forest_seed`. Public so the
+/// exactness harnesses (the boxed-oracle leg of `tests/op_fuzz.rs`) derive
+/// the identical per-tree streams instead of copying the constant.
+pub fn tree_seed(forest_seed: u64, t: usize) -> u64 {
+    mix_seed(&[forest_seed, t as u64, 0x7EEE])
+}
+
+/// Contiguous, near-even partition of `0..n_trees` into at most `n_shards`
+/// non-empty ranges (sizes differ by ≤ 1). Shard `s` owning a contiguous,
+/// ascending tree range is what lets the sharded coordinator reduce
+/// per-shard prediction partials in exact global tree order (DESIGN.md §8).
+pub fn shard_ranges(n_trees: usize, n_shards: usize) -> Vec<std::ops::Range<usize>> {
+    let s = n_shards.max(1).min(n_trees.max(1));
+    let base = n_trees / s;
+    let extra = n_trees % s;
+    let mut out = Vec::with_capacity(s);
+    let mut start = 0usize;
+    for i in 0..s {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Validate and dedupe a deletion batch against `data`'s liveness mask:
+/// returns the accepted ids (first occurrence of each live, in-range id, in
+/// request order) and the skipped count. Shared by
+/// [`DareForest::delete_batch`] and the sharded coordinator store so the
+/// two paths can never diverge on accepted/skipped sets.
+pub fn accept_deletions(data: &Dataset, ids: &[InstanceId]) -> (Vec<InstanceId>, usize) {
+    let mut seen = std::collections::BTreeSet::new();
+    let mut accepted: Vec<InstanceId> = Vec::with_capacity(ids.len());
+    let mut skipped = 0usize;
+    for &id in ids {
+        if !seen.insert(id) || (id as usize) >= data.n_total() || !data.is_alive(id) {
+            skipped += 1;
+        } else {
+            accepted.push(id);
+        }
+    }
+    (accepted, skipped)
+}
+
 impl DareForest {
     /// Train a forest on (a copy of) `data`'s live instances.
     pub fn fit(data: Dataset, params: &Params, seed: u64) -> Self {
         params.validate().expect("invalid params");
         let tree_seeds: Vec<u64> = (0..params.n_trees)
-            .map(|t| mix_seed(&[seed, t as u64, 0x7EEE]))
+            .map(|t| tree_seed(seed, t))
             .collect();
         let trees = scope_map(&tree_seeds, params.n_threads, |_, &ts| {
             DareTree::fit(&data, params, ts)
@@ -100,6 +144,13 @@ impl DareForest {
             trees,
             data,
         })
+    }
+
+    /// Deconstruct into `(params, seed, trees, data)` — the sharded
+    /// coordinator takes ownership of the tree vector and re-homes each
+    /// contiguous range with its shard (`coordinator::shards`).
+    pub fn into_parts(self) -> (Params, u64, Vec<DareTree>, Dataset) {
+        (self.params, self.seed, self.trees, self.data)
     }
 
     pub fn params(&self) -> &Params {
@@ -169,19 +220,7 @@ impl DareForest {
     pub fn delete_batch(&mut self, ids: &[InstanceId]) -> (ForestDeleteReport, usize) {
         // Validate and dedupe up front; liveness cannot change until the
         // mark-removed pass below, so the filter sees a consistent mask.
-        let mut seen = std::collections::BTreeSet::new();
-        let mut accepted: Vec<InstanceId> = Vec::with_capacity(ids.len());
-        let mut skipped = 0usize;
-        for &id in ids {
-            if !seen.insert(id)
-                || (id as usize) >= self.data.n_total()
-                || !self.data.is_alive(id)
-            {
-                skipped += 1;
-            } else {
-                accepted.push(id);
-            }
-        }
+        let (accepted, skipped) = accept_deletions(&self.data, ids);
         let data = &self.data;
         let params = &self.params;
         let per_tree = scope_map_mut(&mut self.trees, params.n_threads, |_, t| {
@@ -505,6 +544,38 @@ mod tests {
         for (r, g) in rows.iter().zip(&got) {
             assert_eq!(*g, f.predict_proba(r));
         }
+    }
+
+    #[test]
+    fn shard_ranges_partition_trees_contiguously() {
+        for (n_trees, n_shards) in [(10usize, 4usize), (4, 4), (3, 8), (16, 1), (1, 1), (7, 3)] {
+            let ranges = shard_ranges(n_trees, n_shards);
+            assert!(ranges.len() <= n_shards && !ranges.is_empty());
+            assert!(ranges.iter().all(|r| !r.is_empty()), "no empty shards");
+            // contiguous ascending cover of 0..n_trees
+            let mut next = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, next);
+                next = r.end;
+            }
+            assert_eq!(next, n_trees);
+            // near-even: sizes differ by at most one
+            let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+            let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(hi - lo <= 1, "uneven shards: {lens:?}");
+        }
+    }
+
+    #[test]
+    fn into_parts_roundtrips_through_from_parts() {
+        let train = data(150, 21);
+        let f = DareForest::fit(train, &small_params(3), 5);
+        let probe = f.data().row(3);
+        let before = f.predict_proba(&probe);
+        let (params, seed, trees, d) = f.into_parts();
+        let back = DareForest::from_parts(params, seed, trees, d).unwrap();
+        assert_eq!(back.predict_proba(&probe), before);
+        assert_eq!(back.seed(), 5);
     }
 
     #[test]

@@ -19,6 +19,8 @@ pub struct PjrtPredictor {
     forest_literals: Vec<SendLiteral>,
     batch: usize,
     features: usize,
+    /// Artifact unroll bound, re-checked on per-tree refreshes.
+    depth: usize,
 }
 
 /// The backend `Literal` wraps a raw pointer and is not marked Send;
@@ -42,6 +44,7 @@ impl PjrtPredictor {
             forest_literals,
             batch: art.batch,
             features: art.features,
+            depth: art.depth,
         })
     }
 
@@ -74,6 +77,30 @@ impl PjrtPredictor {
             &manifest.predict
         };
         self.tf = tensorize(forest, art)?;
+        self.forest_literals = Self::build_forest_literals(&self.tf)?;
+        Ok(())
+    }
+
+    /// Partial refresh (DESIGN.md §8): re-tensorize only `trees` — the tree
+    /// subset of one mutated shard, with global indices
+    /// `first..first + trees.len()` — in place. Call
+    /// [`PjrtPredictor::rebuild_literals`] once after refreshing every dirty
+    /// shard. On error the caller should discard the predictor (the forest
+    /// outgrew the artifact shape) and fall back to native prediction.
+    pub fn refresh_trees(
+        &mut self,
+        first: usize,
+        trees: &[crate::forest::tree::DareTree],
+    ) -> anyhow::Result<()> {
+        for (k, t) in trees.iter().enumerate() {
+            crate::runtime::tensorize::retensorize_tree(&mut self.tf, &t.arena, first + k, self.depth)?;
+        }
+        Ok(())
+    }
+
+    /// Upload the current tensor snapshot as fresh PJRT literals (one call
+    /// per refresh round, however many shards were dirty).
+    pub fn rebuild_literals(&mut self) -> anyhow::Result<()> {
         self.forest_literals = Self::build_forest_literals(&self.tf)?;
         Ok(())
     }

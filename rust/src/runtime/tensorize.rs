@@ -121,6 +121,40 @@ fn flatten_tree(arena: &ArenaTree, ti: usize, m: usize, tf: &mut TensorForest) -
     Ok(next_free)
 }
 
+/// Re-flatten one tree into an existing tensor snapshot, resetting its slot
+/// range to padded self-looping zero leaves first. This is the per-shard
+/// refresh path (DESIGN.md §8): after mutations, the predictor re-tensorizes
+/// only the trees of shards whose epoch moved instead of the whole forest.
+/// `depth_bound` is the artifact's unroll bound (`PredictArtifact::depth`).
+pub fn retensorize_tree(
+    tf: &mut TensorForest,
+    arena: &ArenaTree,
+    ti: usize,
+    depth_bound: usize,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        ti < tf.n_real_trees,
+        "tree index {ti} out of range ({} real trees)",
+        tf.n_real_trees
+    );
+    let m = tf.nodes;
+    let base = ti * m;
+    for ni in 0..m {
+        tf.attr[base + ni] = 0;
+        tf.thresh[base + ni] = 0.0;
+        tf.left[base + ni] = ni as i32;
+        tf.right[base + ni] = ni as i32;
+        tf.value[base + ni] = 0.0;
+    }
+    flatten_tree(arena, ti, m, tf)?;
+    let max_d = arena.shape().max_depth;
+    anyhow::ensure!(
+        max_d <= depth_bound,
+        "tree depth {max_d} exceeds artifact unroll bound {depth_bound}"
+    );
+    Ok(())
+}
+
 /// Pure-Rust traversal of the tensorized arrays — the parity oracle for the
 /// PJRT predictor and a fallback when artifacts are unavailable.
 pub fn predict_tensorized(tf: &TensorForest, row: &[f32]) -> f32 {
@@ -269,6 +303,30 @@ mod tests {
         for (row, b) in rows.iter().zip(&batched) {
             assert_eq!(*b, predict_tensorized(&tf, row));
         }
+    }
+
+    #[test]
+    fn retensorize_tree_matches_full_tensorize() {
+        let mut f = forest(4);
+        let a = art();
+        let mut tf = tensorize(&f, &a).unwrap();
+        // churn only some trees, then refresh exactly those slots in place
+        for id in f.live_ids().into_iter().take(120) {
+            f.delete_seq(id).unwrap();
+        }
+        for (ti, tree) in f.trees().iter().enumerate() {
+            retensorize_tree(&mut tf, &tree.arena, ti, a.depth).unwrap();
+        }
+        let full = tensorize(&f, &a).unwrap();
+        assert_eq!(tf.attr, full.attr);
+        assert_eq!(tf.thresh, full.thresh);
+        assert_eq!(tf.left, full.left);
+        assert_eq!(tf.right, full.right);
+        assert_eq!(tf.value, full.value);
+        // out-of-range tree index is rejected
+        assert!(retensorize_tree(&mut tf, &f.trees()[0].arena, 4, a.depth).is_err());
+        // an impossible depth bound is rejected
+        assert!(retensorize_tree(&mut tf, &f.trees()[0].arena, 0, 0).is_err());
     }
 
     #[test]

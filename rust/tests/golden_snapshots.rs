@@ -1,0 +1,147 @@
+//! ISSUE 3: golden snapshot fixtures — small serialized forests (fresh and
+//! post-churn) checked in under `tests/fixtures/`, deserialized and
+//! structurally compared on every run so serialization drift (or an RNG /
+//! split-decision regression that changes what deterministic recipes build)
+//! is caught without rebuilding old binaries. See `tests/fixtures/README.md`
+//! for the bootstrap protocol (first cargo-capable run writes the files).
+
+use dare::data::synth::{generate, SynthSpec};
+use dare::forest::{serialize, DareForest, Params};
+use std::path::PathBuf;
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
+/// Deterministic recipe: fixed synth data, params, forest seed.
+fn build_fresh() -> DareForest {
+    let data = generate(
+        &SynthSpec {
+            n: 160,
+            informative: 3,
+            redundant: 1,
+            noise: 2,
+            flip: 0.05,
+            ..Default::default()
+        },
+        42,
+    );
+    DareForest::fit(
+        data,
+        &Params {
+            n_trees: 3,
+            max_depth: 5,
+            k: 5,
+            d_rmax: 1,
+            ..Default::default()
+        },
+        7,
+    )
+}
+
+/// Fixed churn on top of the fresh recipe: deletions leave non-compact
+/// arenas with live free lists, additions exercise the §6 path — the
+/// snapshot schema has to carry all of it.
+fn build_churned() -> DareForest {
+    let mut f = build_fresh();
+    let p = f.data().n_features();
+    for id in [3u32, 17, 29, 41, 55, 80, 81] {
+        f.delete_seq(id).unwrap();
+    }
+    for i in 0..5u32 {
+        let row: Vec<f32> = (0..p).map(|j| 0.2 * i as f32 - 0.1 * j as f32).collect();
+        f.add(&row, (i % 2) as u8);
+    }
+    f
+}
+
+fn check_golden(name: &str, rebuilt: DareForest) {
+    let path = fixture_path(name);
+    let fresh_json = serialize::forest_to_json(&rebuilt);
+    if !path.exists() || std::env::var("DARE_UPDATE_FIXTURES").is_ok() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        // write-then-rename: tests run in parallel, and the churned fixture
+        // is also read by another test — never expose a half-written file
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, &fresh_json).unwrap();
+        std::fs::rename(&tmp, &path).unwrap();
+        eprintln!(
+            "bootstrapped golden fixture {} — commit it (see tests/fixtures/README.md)",
+            path.display()
+        );
+    }
+    let on_disk = std::fs::read_to_string(&path).unwrap();
+
+    // 1. The fixture still deserializes, into internally-consistent arenas.
+    let loaded = serialize::forest_from_json(&on_disk)
+        .unwrap_or_else(|e| panic!("{name}: fixture no longer deserializes: {e}"));
+    for t in loaded.trees() {
+        t.arena.validate().unwrap();
+    }
+
+    // 2. Determinism: the fixture is structurally identical to a forest
+    //    rebuilt from the same recipe, with bit-equal predictions.
+    assert_eq!(loaded.n_trees(), rebuilt.n_trees(), "{name}: tree count drifted");
+    assert_eq!(loaded.n_alive(), rebuilt.n_alive(), "{name}: live count drifted");
+    for (a, b) in loaded.trees().iter().zip(rebuilt.trees()) {
+        assert_eq!(a.tree_seed, b.tree_seed, "{name}: tree seed drifted");
+        assert_eq!(a.epoch, b.epoch, "{name}: epoch drifted");
+        assert!(
+            a.structural_matches(b),
+            "{name}: fixture structure diverged from the deterministic rebuild \
+             (an RNG stream or split decision changed)"
+        );
+    }
+    let rows: Vec<Vec<f32>> = (0..60u32).map(|i| rebuilt.data().row(i)).collect();
+    assert_eq!(
+        loaded.predict_proba_rows(&rows),
+        rebuilt.predict_proba_rows(&rows),
+        "{name}: predictions drifted"
+    );
+
+    // 3. Format stability, both directions: the rebuild serializes to the
+    //    fixture bytes, and re-serializing the loaded fixture is a no-op.
+    assert_eq!(
+        fresh_json, on_disk,
+        "{name}: snapshot serialization drifted (schema or emitter change); \
+         regenerate deliberately with DARE_UPDATE_FIXTURES=1 and note it"
+    );
+    assert_eq!(
+        serialize::forest_to_json(&loaded),
+        on_disk,
+        "{name}: load→save roundtrip is not byte-stable"
+    );
+}
+
+#[test]
+fn golden_fresh_snapshot() {
+    check_golden("forest_fresh.json", build_fresh());
+}
+
+#[test]
+fn golden_churned_snapshot() {
+    check_golden("forest_churned.json", build_churned());
+}
+
+#[test]
+fn churned_fixture_supports_further_unlearning() {
+    // The fixture isn't just readable — it must stay a *live* model: more
+    // deletions apply cleanly and keep the arenas consistent.
+    let path = fixture_path("forest_churned.json");
+    if !path.exists() {
+        // golden_churned_snapshot bootstraps it; don't double-bootstrap here.
+        eprintln!("fixture absent (first run); skipping");
+        return;
+    }
+    let mut f = serialize::load(&path).unwrap();
+    let live = f.live_ids();
+    for &id in live.iter().take(10) {
+        f.delete_seq(id).unwrap();
+    }
+    assert_eq!(f.n_alive(), live.len() - 10);
+    for t in f.trees() {
+        t.arena.validate().unwrap();
+    }
+}

@@ -124,7 +124,7 @@ fn snapshot_roundtrip_through_service() {
     );
     assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
     let restored = serialize::load(&path).unwrap();
-    assert_eq!(restored.n_alive(), svc.forest().read().unwrap().n_alive());
+    assert_eq!(restored.n_alive(), svc.sharded().n_alive());
     std::fs::remove_file(&path).ok();
 }
 

@@ -250,7 +250,7 @@ fn prop_coordinator_state_consistent_under_request_interleavings() {
         |rng, size| {
             let n = size + 20;
             let svc = service_with(n, rng);
-            let p = svc.forest().read().unwrap().data().n_features();
+            let p = svc.n_features();
             let mut expected_alive = n as i64;
             let mut deleted: std::collections::BTreeSet<u32> = Default::default();
             for _ in 0..25 {
@@ -306,11 +306,10 @@ fn prop_coordinator_state_consistent_under_request_interleavings() {
                     }
                 }
                 // global state invariant after every request
-                let f = svc.forest().read().unwrap();
-                assert_eq!(f.n_alive() as i64, expected_alive);
-                for tree in f.trees() {
+                assert_eq!(svc.sharded().n_alive() as i64, expected_alive);
+                svc.sharded().for_each_tree(|_, tree| {
                     assert_eq!(tree.n() as i64, expected_alive);
-                }
+                });
             }
         },
     );
@@ -359,8 +358,8 @@ fn prop_coordinator_batching_equivalent_to_sequential() {
                 svc_seq.handle(&parse(&format!(r#"{{"op":"delete","ids":[{id}]}}"#)).unwrap());
             }
 
-            let a = svc_batched.forest().read().unwrap().live_ids();
-            let b = svc_seq.forest().read().unwrap().live_ids();
+            let a = svc_batched.sharded().live_ids();
+            let b = svc_seq.sharded().live_ids();
             assert_eq!(a, b, "batched and sequential deletion must agree on state");
         },
     );
