@@ -6,7 +6,7 @@
 
 use dare::coordinator::{serve, Client, ServiceConfig, UnlearningService};
 use dare::data::registry::find;
-use dare::forest::{DareForest, Params};
+use dare::forest::{DareForest, LazyPolicy, Params};
 use dare::util::json::{parse, Value};
 use std::sync::Arc;
 use std::time::Duration;
@@ -18,14 +18,23 @@ fn main() -> anyhow::Result<()> {
     println!("training the served model ({} instances)...", data.n_total());
     let forest = DareForest::fit(data, &params, 17);
 
+    // Deferred unlearning (DESIGN.md §9): under `on_read`, a deletion
+    // returns after updating node statistics — the subtree retrains run
+    // when a query reads them (flush-on-read, bit-identical results) or
+    // when the background compactor drains them during idle ticks. Set
+    // DARE_LAZY_POLICY=eager|on_read|budgeted:<k> to experiment; deletion
+    // latency drops under churn while every served bit stays exact.
+    let lazy = LazyPolicy::from_env();
     let svc = UnlearningService::new(
         forest,
         ServiceConfig {
             batch_window: Duration::from_millis(25), // group concurrent requests
+            lazy,
             ..Default::default()
         },
     );
     println!("PJRT predictor active: {}", svc.pjrt_active());
+    println!("deferral policy: {}", svc.lazy_policy());
 
     let svc_srv = Arc::clone(&svc);
     let (tx, rx) = std::sync::mpsc::channel();
@@ -89,6 +98,12 @@ fn main() -> anyhow::Result<()> {
     println!(
         "n_alive = {}",
         stats.get("n_alive").and_then(Value::as_u64).unwrap_or(0)
+    );
+    println!(
+        "deferred retrains: {} total, {} still pending (policy {})",
+        stats.get("deferred_retrains").and_then(Value::as_u64).unwrap_or(0),
+        stats.get("dirty_subtrees").and_then(Value::as_u64).unwrap_or(0),
+        stats.get("lazy_policy").and_then(Value::as_str).unwrap_or("?"),
     );
     client.call(&parse(r#"{"op":"shutdown"}"#)?)?;
     server.join().unwrap()?;

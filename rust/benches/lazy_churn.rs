@@ -1,0 +1,108 @@
+//! Bench: deferred unlearning under churn (ISSUE 4 / DESIGN.md §9) —
+//! eager vs on_read vs budgeted across delete/predict interleaving ratios.
+//!
+//! Each case replays one seeded op stream (deletes + batched predicts at a
+//! fixed ratio) against a fresh forest clone under one policy. What to
+//! expect: `on_read` wins hardest on delete-heavy streams (retrains are
+//! deferred and mostly never read), `budgeted` sits between, and on
+//! read-heavy streams the three converge (flush-on-read does the eager
+//! work, shifted onto the first reader). Results are exact under every
+//! policy, so this bench measures *scheduling*, not model drift.
+//!
+//! Emits `BENCH_lazy.json` at the repo root (ns/iter per case).
+
+use dare::bench::{BenchConfig, Suite};
+use dare::data::synth::{generate, SynthSpec};
+use dare::forest::{DareForest, LazyPolicy, Params};
+use dare::util::rng::Rng;
+
+fn base_forest() -> DareForest {
+    let data = generate(
+        &SynthSpec {
+            n: 3000,
+            informative: 4,
+            redundant: 2,
+            noise: 6,
+            flip: 0.05,
+            ..Default::default()
+        },
+        9,
+    );
+    DareForest::fit(
+        data,
+        &Params {
+            n_trees: 10,
+            max_depth: 10,
+            k: 10,
+            ..Default::default()
+        },
+        21,
+    )
+}
+
+/// Replay `ops` operations at `deletes_per_predict : 1` (or `1 :
+/// predicts_per_delete`) against a clone of `base` under `policy`.
+fn churn(base: &DareForest, policy: LazyPolicy, deletes: usize, predicts: usize, ops: usize) {
+    let mut f = base.clone();
+    f.set_lazy_policy(policy);
+    let mut rng = Rng::new(0xC0FFEE ^ deletes as u64 ^ (predicts as u64) << 8);
+    let probe: Vec<Vec<f32>> = (0..48u32).map(|i| f.data().row(i)).collect();
+    let cycle = deletes + predicts;
+    for op in 0..ops {
+        if op % cycle < deletes {
+            let live = f.live_ids();
+            let id = live[rng.index(live.len())];
+            f.delete_seq(id).unwrap();
+        } else {
+            // flush-on-read entry point: a no-op flush under eager
+            std::hint::black_box(f.predict_proba_rows_flushed(&probe));
+        }
+    }
+    // Every policy ends at the same logical model; leave the backlog
+    // standing — draining it is the *next* stream's (or compactor's) cost,
+    // which is exactly the scheduling effect being measured.
+    std::hint::black_box(f.dirty_subtrees());
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut suite = Suite::new("lazy");
+    let base = base_forest();
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 5,
+        max_iters: 40,
+        target_seconds: 2.0,
+    };
+    let policies = [
+        ("eager", LazyPolicy::Eager),
+        ("on_read", LazyPolicy::OnRead),
+        ("budgeted4", LazyPolicy::Budgeted(4)),
+    ];
+    // (name, deletes, predicts) per cycle — delete-heavy to read-heavy
+    let mixes = [
+        ("del8_pred1", 8usize, 1usize),
+        ("del1_pred1", 1, 1),
+        ("del1_pred8", 1, 8),
+    ];
+    for (pname, policy) in policies {
+        for (mname, d, p) in mixes {
+            suite.run(&format!("churn_{mname}_{pname}"), cfg, || {
+                churn(&base, policy, d, p, 180);
+            });
+        }
+    }
+    // The drain itself, in isolation: mark 120 deletions, then flush-all.
+    suite.run("flush_all_after_120_marks", cfg, || {
+        let mut f = base.clone();
+        f.set_lazy_policy(LazyPolicy::OnRead);
+        let mut rng = Rng::new(7);
+        for _ in 0..120 {
+            let live = f.live_ids();
+            let id = live[rng.index(live.len())];
+            f.delete_seq(id).unwrap();
+        }
+        std::hint::black_box(f.flush_all());
+    });
+    suite.save_json_to("BENCH_lazy.json")?;
+    Ok(())
+}

@@ -22,7 +22,14 @@ pub struct DeleteOutcome {
     pub requested: usize,
     pub deleted: usize,
     pub skipped: usize,
+    /// Total retrain cost this request's deletions reported. Under a lazy
+    /// policy (DESIGN.md §9) the costs are identical to the eager path's
+    /// but the retrains themselves may still be pending — see `deferred`.
     pub retrain_cost: u64,
+    /// Subtree retrains this request deferred instead of executing inline
+    /// (0 under `LazyPolicy::Eager`; under `Budgeted` some may already have
+    /// been drained again by the per-batch budget before the reply).
+    pub deferred: usize,
     /// Requests that shared this batch (including this one).
     pub batch_size: usize,
 }
@@ -122,12 +129,17 @@ fn run_worker(
         let batch_size = jobs.len();
         for job in jobs {
             let requested = job.ids.len();
-            let (report, skipped) = forest.delete_batch(&job.ids);
+            // The deferral count is measured per tree inside the mutation
+            // (delete_batch_counted), so concurrent adds or compactor
+            // ticks can never skew it — and under Eager it is 0 with no
+            // extra counter sweep.
+            let (report, skipped, deferred) = forest.delete_batch_counted(&job.ids);
             let outcome = DeleteOutcome {
                 requested,
                 deleted: requested - skipped,
                 skipped,
                 retrain_cost: report.cost(),
+                deferred: deferred as usize,
                 batch_size,
             };
             let _ = job.reply.send(outcome);

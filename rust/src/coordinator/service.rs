@@ -20,11 +20,12 @@ use crate::coordinator::batcher::DeletionBatcher;
 use crate::coordinator::shards::ShardedForest;
 use crate::coordinator::telemetry::Telemetry;
 use crate::forest::forest::DareForest;
+use crate::forest::lazy::LazyPolicy;
 use crate::runtime::{Engine, Manifest, PjrtPredictor};
 use crate::util::json::Value;
 use crate::util::threadpool::default_threads;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex, RwLock, Weak};
 use std::time::Duration;
 
 /// Service configuration.
@@ -39,6 +40,16 @@ pub struct ServiceConfig {
     pub use_pjrt: bool,
     /// Forest shard count; 0 means the threadpool width (DESIGN.md §8).
     pub n_shards: usize,
+    /// When deferred retrains run (DESIGN.md §9). The default honors the
+    /// `DARE_LAZY_POLICY` environment variable (`eager` | `on_read` |
+    /// `budgeted:<k>`), falling back to eager — this is how the CI matrix
+    /// leg serves the whole tier-1 suite under `on_read`.
+    pub lazy: LazyPolicy,
+    /// How often the background compactor wakes to drain deferred retrains
+    /// (ignored under `LazyPolicy::Eager`).
+    pub compact_interval: Duration,
+    /// Deferred retrains the compactor executes per tree per tick.
+    pub compact_budget: usize,
 }
 
 impl Default for ServiceConfig {
@@ -48,6 +59,9 @@ impl Default for ServiceConfig {
             max_batch: 4096,
             use_pjrt: true,
             n_shards: 0,
+            lazy: LazyPolicy::from_env(),
+            compact_interval: Duration::from_millis(25),
+            compact_budget: 8,
         }
     }
 }
@@ -95,10 +109,10 @@ impl UnlearningService {
         } else {
             cfg.n_shards
         };
-        let sharded = Arc::new(ShardedForest::new(forest, n_shards));
+        let sharded = Arc::new(ShardedForest::new_with_policy(forest, n_shards, cfg.lazy));
         let batcher = DeletionBatcher::start(Arc::clone(&sharded), cfg.batch_window, cfg.max_batch);
         let pjrt_epochs = sharded.shard_epochs();
-        Arc::new(UnlearningService {
+        let svc = Arc::new(UnlearningService {
             sharded,
             batcher,
             telemetry: Telemetry::new(),
@@ -106,12 +120,21 @@ impl UnlearningService {
             manifest,
             pjrt_epochs: Mutex::new(pjrt_epochs),
             shutdown: AtomicBool::new(false),
-        })
+        });
+        if cfg.lazy.is_lazy() {
+            spawn_compactor(Arc::downgrade(&svc), cfg.compact_interval, cfg.compact_budget);
+        }
+        svc
     }
 
     /// Whether the PJRT predictor is active.
     pub fn pjrt_active(&self) -> bool {
         self.pjrt.read().unwrap().is_some()
+    }
+
+    /// The service's deferral policy (DESIGN.md §9).
+    pub fn lazy_policy(&self) -> LazyPolicy {
+        self.sharded.lazy_policy()
     }
 
     /// The sharded forest store backing this service.
@@ -200,6 +223,16 @@ impl UnlearningService {
                 // the native path, which waits it out consistently.
                 return false;
             }
+            // Lazy policy: a concurrent mutation may have *marked* pending
+            // subtrees since the caller's eligibility check — tensorizing
+            // those collapsed regions would serve non-eager bits. Pending
+            // counters publish under the shard write locks before the
+            // epochs go even, so re-checking here inside the epoch-
+            // validated window closes the race: a mark that lands after
+            // this check moves the epochs and fails the validation below.
+            if self.sharded.lazy_policy().is_lazy() && self.sharded.pending_retrains() > 0 {
+                return false;
+            }
             if epochs == *last {
                 return true;
             }
@@ -250,30 +283,41 @@ impl UnlearningService {
         }
         self.telemetry.incr("predict_rows", rows.len() as u64);
 
+        // Under a lazy policy the tensorized snapshot may contain pending
+        // (stale) subtrees that these rows never descend into — the epochs
+        // can't tell us which. PJRT serves only a fully-flushed model; with
+        // a backlog, this request takes the native path, which flushes
+        // exactly the subtrees it reads. The compactor drains the backlog
+        // and PJRT re-engages via the normal epoch diff.
+        let pjrt_eligible =
+            !self.sharded.lazy_policy().is_lazy() || self.sharded.pending_retrains() == 0;
+
         // Fast path: PJRT predicts over a current snapshot share the read
         // lock — concurrent predicts don't serialize on the service layer.
-        {
-            let pjrt = self.pjrt.read().unwrap();
-            if let Some(pred) = pjrt.as_ref() {
-                if self.pjrt_snapshot_current() {
-                    if let Ok(probs) = pred.predict(&rows) {
-                        return pjrt_response(&probs);
+        if pjrt_eligible {
+            {
+                let pjrt = self.pjrt.read().unwrap();
+                if let Some(pred) = pjrt.as_ref() {
+                    if self.pjrt_snapshot_current() {
+                        if let Ok(probs) = pred.predict(&rows) {
+                            return pjrt_response(&probs);
+                        }
                     }
                 }
             }
-        }
-        // Slow path (model mutated since the last snapshot): take the write
-        // lock, refresh only the dirty shards, and serve if the refresh was
-        // epoch-consistent. The read guard is dropped in its own block
-        // before the write acquisition — same-thread read→write on one
-        // RwLock would deadlock.
-        let pjrt_present = { self.pjrt.read().unwrap().is_some() };
-        if pjrt_present {
-            let mut pjrt_guard = self.pjrt.write().unwrap();
-            if self.refresh_pjrt(&mut pjrt_guard) {
-                if let Some(pred) = pjrt_guard.as_ref() {
-                    if let Ok(probs) = pred.predict(&rows) {
-                        return pjrt_response(&probs);
+            // Slow path (model mutated since the last snapshot): take the
+            // write lock, refresh only the dirty shards, and serve if the
+            // refresh was epoch-consistent. The read guard is dropped in
+            // its own block before the write acquisition — same-thread
+            // read→write on one RwLock would deadlock.
+            let pjrt_present = { self.pjrt.read().unwrap().is_some() };
+            if pjrt_present {
+                let mut pjrt_guard = self.pjrt.write().unwrap();
+                if self.refresh_pjrt(&mut pjrt_guard) {
+                    if let Some(pred) = pjrt_guard.as_ref() {
+                        if let Ok(probs) = pred.predict(&rows) {
+                            return pjrt_response(&probs);
+                        }
                     }
                 }
             }
@@ -304,10 +348,12 @@ impl UnlearningService {
                     self.telemetry.incr("mutations", 1);
                 }
                 self.telemetry.incr("deleted_ids", out.deleted as u64);
+                self.telemetry.incr("deferred_retrains", out.deferred as u64);
                 let mut resp = ok_response();
                 resp.set("deleted", out.deleted)
                     .set("skipped", out.skipped)
                     .set("retrain_cost", out.retrain_cost)
+                    .set("deferred", out.deferred)
                     .set("batch_size", out.batch_size);
                 resp
             }
@@ -361,6 +407,7 @@ impl UnlearningService {
             o.set("trees", trees).set("epoch", epoch);
             shards.push(o);
         }
+        let (deferred, flushed) = self.sharded.retrain_counters();
         let mut resp = ok_response();
         resp.set("telemetry", self.telemetry.snapshot())
             .set("n_alive", self.sharded.n_alive())
@@ -368,6 +415,10 @@ impl UnlearningService {
             .set("n_shards", self.sharded.n_shards())
             .set("shards", Value::Arr(shards))
             .set("pjrt_active", self.pjrt_active())
+            .set("lazy_policy", self.sharded.lazy_policy().to_string())
+            .set("dirty_subtrees", self.sharded.pending_retrains())
+            .set("deferred_retrains", deferred)
+            .set("flushed_retrains", flushed)
             .set("model_bytes", mem.total())
             .set("data_bytes", self.sharded.data_bytes());
         resp
@@ -383,6 +434,32 @@ impl UnlearningService {
             Err(e) => err_response(&format!("{e}")),
         }
     }
+}
+
+/// The background compactor (DESIGN.md §9): a detached thread that drains
+/// deferred retrains during idle ticks so the flush cost is paid off the
+/// request path. Holds only a `Weak` handle — dropping the last service
+/// `Arc` (or the shutdown op) stops it within one tick. Timing is
+/// nondeterministic and harmlessly so: retrains are path-seeded, so *when*
+/// a flush runs cannot change what it builds.
+fn spawn_compactor(svc: Weak<UnlearningService>, interval: Duration, budget: usize) {
+    let _ = std::thread::Builder::new()
+        .name("dare-compactor".into())
+        .spawn(move || loop {
+            std::thread::sleep(interval);
+            let Some(svc) = svc.upgrade() else {
+                return;
+            };
+            if svc.is_shutdown() {
+                return;
+            }
+            if svc.sharded.pending_retrains() > 0 {
+                let flushed = svc.sharded.compact(budget);
+                if flushed > 0 {
+                    svc.telemetry.incr("compacted_retrains", flushed);
+                }
+            }
+        });
 }
 
 fn pjrt_response(probs: &[f32]) -> Value {
@@ -477,11 +554,20 @@ mod tests {
         assert_eq!(s.get("n_shards").unwrap().as_u64(), Some(2));
         let tele = s.get("telemetry").unwrap().get("ops").unwrap();
         assert!(tele.get("delete").is_some());
-        // the mutation advanced every shard's epoch by exactly 2 (seqlock)
+        // the mutation advanced every shard's epoch by exactly 2 (seqlock);
+        // under the DARE_LAZY_POLICY=on_read matrix leg the background
+        // compactor may legitimately add further +2 bumps, so assert the
+        // invariant (even, moved) rather than the eager-exact value
+        let lazy = svc.lazy_policy().is_lazy();
         let shards = s.get("shards").unwrap().as_arr().unwrap();
         assert_eq!(shards.len(), 2);
         for sh in shards {
-            assert_eq!(sh.get("epoch").unwrap().as_u64(), Some(2));
+            let epoch = sh.get("epoch").unwrap().as_u64().unwrap();
+            if lazy {
+                assert!(epoch >= 2 && epoch % 2 == 0, "bad epoch {epoch}");
+            } else {
+                assert_eq!(epoch, 2);
+            }
             assert_eq!(sh.get("trees").unwrap().as_u64(), Some(2));
         }
         assert_eq!(
@@ -531,6 +617,98 @@ mod tests {
             assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{bad}");
             assert!(r.get("error").is_some());
         }
+    }
+
+    #[test]
+    fn lazy_service_defers_and_serves_exact_bits() {
+        use crate::forest::lazy::LazyPolicy;
+        // Two services over the same model: one eager, one on_read with a
+        // compactor too slow to interfere — every response must be
+        // bit-identical, and the lazy one must actually defer.
+        let mk = |lazy: LazyPolicy| {
+            let d = generate(
+                &SynthSpec {
+                    n: 220,
+                    informative: 3,
+                    redundant: 0,
+                    noise: 2,
+                    flip: 0.05,
+                    ..Default::default()
+                },
+                11,
+            );
+            let f = DareForest::fit(
+                d,
+                &Params {
+                    n_trees: 4,
+                    max_depth: 6,
+                    k: 5,
+                    ..Default::default()
+                },
+                13,
+            );
+            UnlearningService::new(
+                f,
+                ServiceConfig {
+                    batch_window: Duration::from_millis(1),
+                    use_pjrt: false,
+                    n_shards: 2,
+                    lazy,
+                    compact_interval: Duration::from_secs(3600),
+                    ..Default::default()
+                },
+            )
+        };
+        let eager = mk(LazyPolicy::Eager);
+        let lazy = mk(LazyPolicy::OnRead);
+        assert_eq!(lazy.lazy_policy(), LazyPolicy::OnRead);
+
+        let del = r#"{"op":"delete","ids":[1,2,3,5,8,13,21,34,55,89,100,110,120,130,140,144]}"#;
+        let re = eager.handle(&req(del));
+        let rl = lazy.handle(&req(del));
+        assert_eq!(re.get("deleted").unwrap().as_u64(), rl.get("deleted").unwrap().as_u64());
+        assert_eq!(
+            re.get("retrain_cost").unwrap().as_u64(),
+            rl.get("retrain_cost").unwrap().as_u64(),
+            "mark-phase reported cost must equal the eager cost"
+        );
+        assert_eq!(re.get("deferred").unwrap().as_u64(), Some(0));
+        let deferred = rl.get("deferred").unwrap().as_u64().unwrap();
+        assert!(deferred > 0, "16 deletions should defer at least one retrain");
+
+        // stats surfaces the backlog + cumulative counters
+        let s = lazy.handle(&req(r#"{"op":"stats"}"#));
+        assert_eq!(s.get("lazy_policy").unwrap().as_str(), Some("on_read"));
+        assert!(s.get("dirty_subtrees").unwrap().as_u64().unwrap() > 0);
+        assert!(s.get("deferred_retrains").unwrap().as_u64().unwrap() >= deferred);
+
+        // flush-on-read: served predictions are bit-identical to eager
+        let p = lazy.n_features();
+        let row = vec!["0.2"; p].join(",");
+        let pr = format!(r#"{{"op":"predict","rows":[[{row}]]}}"#);
+        assert_eq!(
+            lazy.handle(&req(&pr)).to_string(),
+            eager.handle(&req(&pr)).to_string()
+        );
+        // delete_cost is as-if-flushed
+        let dc = r#"{"op":"delete_cost","id":40}"#;
+        assert_eq!(
+            lazy.handle(&req(dc)).to_string(),
+            eager.handle(&req(dc)).to_string()
+        );
+
+        // an explicit full drain equalizes the stores completely
+        lazy.sharded().flush_all();
+        let s = lazy.handle(&req(r#"{"op":"stats"}"#));
+        assert_eq!(s.get("dirty_subtrees").unwrap().as_u64(), Some(0));
+        let eager_snap = eager.snapshot_forest();
+        lazy.sharded().for_each_tree(|gt, t| {
+            assert!(
+                t.structural_matches(&eager_snap.trees()[gt]),
+                "tree {gt} diverged after the drain"
+            );
+        });
+        lazy.sharded().validate().unwrap();
     }
 
     #[test]

@@ -45,6 +45,7 @@ use crate::forest::forest::{
     accept_deletions, shard_ranges, DareForest, ForestDeleteReport, PREDICT_BATCH_CUTOFF,
     PREDICT_BLOCK,
 };
+use crate::forest::lazy::LazyPolicy;
 use crate::forest::node::NodeMemory;
 use crate::forest::params::Params;
 use crate::forest::tree::DareTree;
@@ -63,8 +64,22 @@ struct Shard {
     /// Global index of the first tree in this shard.
     start: usize,
     /// Seqlock epoch: odd while a mutation is in flight, +2 per mutation
-    /// that changed this shard's trees.
+    /// that changed this shard's trees (flushes bump only the shards they
+    /// actually retrained, so PJRT re-tensorization stays dirty-shard-only).
     epoch: AtomicU64,
+    /// Deferred retrains currently pending in this shard's trees — the
+    /// fast-path signal read paths use to decide whether flushing is
+    /// needed. Updated under the shard write lock after every mutation or
+    /// flush.
+    pending: AtomicU64,
+}
+
+impl Shard {
+    /// Recompute `pending` from the trees; call with the write lock held.
+    fn refresh_pending(&self, trees: &[DareTree]) {
+        let p: u64 = trees.iter().map(|t| t.dirty_len() as u64).sum();
+        self.pending.store(p, Ordering::SeqCst);
+    }
 }
 
 /// The coordinator's sharded forest store. See the module docs.
@@ -74,6 +89,10 @@ pub struct ShardedForest {
     n_trees: usize,
     data: RwLock<Dataset>,
     shards: Vec<Shard>,
+    /// When deferred retrains run (DESIGN.md §9). Under a lazy policy the
+    /// read paths route through the mutation mutex so they can flush the
+    /// subtrees they descend into before serving.
+    lazy: LazyPolicy,
     /// Serializes mutations (see module docs: every mutation touches every
     /// shard, so writer concurrency buys nothing and interleaved writer
     /// fan-outs could deadlock on the dataset lock).
@@ -82,19 +101,35 @@ pub struct ShardedForest {
 
 impl ShardedForest {
     /// Partition `forest` into at most `n_shards` shards (capped at the
-    /// tree count so no shard is empty).
+    /// tree count so no shard is empty), retraining eagerly.
     pub fn new(forest: DareForest, n_shards: usize) -> Self {
+        Self::new_with_policy(forest, n_shards, LazyPolicy::Eager)
+    }
+
+    /// [`ShardedForest::new`] with an explicit deferral policy.
+    pub fn new_with_policy(forest: DareForest, n_shards: usize, lazy: LazyPolicy) -> Self {
         let (params, seed, mut trees, data) = forest.into_parts();
+        // Adopting dirty trees under an Eager policy would strand their
+        // pending retrains forever (no read path flushes under Eager):
+        // drain them now, exactly like `DareForest::set_lazy_policy` does
+        // on the lazy→eager transition. No-op on a clean forest.
+        if !lazy.is_lazy() {
+            for t in trees.iter_mut() {
+                t.flush_all(&data, &params);
+            }
+        }
         let n_trees = trees.len();
         let ranges = shard_ranges(n_trees, n_shards);
         let mut shards = Vec::with_capacity(ranges.len());
         // split_off from the back so each shard keeps its contiguous range
         for r in ranges.iter().rev() {
             let tail = trees.split_off(r.start);
+            let pending: u64 = tail.iter().map(|t| t.dirty_len() as u64).sum();
             shards.push(Shard {
                 trees: RwLock::new(tail),
                 start: r.start,
                 epoch: AtomicU64::new(0),
+                pending: AtomicU64::new(pending),
             });
         }
         shards.reverse();
@@ -104,8 +139,35 @@ impl ShardedForest {
             n_trees,
             data: RwLock::new(data),
             shards,
+            lazy,
             mutation: Mutex::new(()),
         }
+    }
+
+    /// The store's deferral policy.
+    pub fn lazy_policy(&self) -> LazyPolicy {
+        self.lazy
+    }
+
+    /// Deferred retrains currently pending across all shards (fast:
+    /// per-shard atomics, no locks).
+    pub fn pending_retrains(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.pending.load(Ordering::SeqCst))
+            .sum()
+    }
+
+    /// Cumulative (deferred, executed) retrain counters across all trees
+    /// (telemetry; takes shard read locks).
+    pub fn retrain_counters(&self) -> (u64, u64) {
+        let mut deferred = 0u64;
+        let mut flushed = 0u64;
+        self.for_each_tree(|_, t| {
+            deferred += t.deferred_retrains();
+            flushed += t.flushed_retrains();
+        });
+        (deferred, flushed)
     }
 
     pub fn n_shards(&self) -> usize {
@@ -165,6 +227,31 @@ impl ShardedForest {
         f()
     }
 
+    /// Lazy-policy steady-state read: run `f` only if the epoch vector was
+    /// even and unchanged across the run AND the deferred backlog was
+    /// empty *inside* the validated window. The in-window pending check is
+    /// sound because pending counters publish under the shard write locks
+    /// before a mutation's epochs go even — a concurrent mark either shows
+    /// up in the check or moves the epochs and fails the validation.
+    /// Returns `None` when the caller must take the flushing (mutex) path.
+    fn read_if_clean<R>(&self, f: impl Fn() -> R) -> Option<R> {
+        for _ in 0..READ_RETRIES {
+            let before = self.shard_epochs();
+            if before.iter().any(|e| e % 2 == 1) {
+                std::thread::yield_now();
+                continue;
+            }
+            if self.pending_retrains() != 0 {
+                return None;
+            }
+            let r = f();
+            if self.shard_epochs() == before {
+                return Some(r);
+            }
+        }
+        None
+    }
+
     /// Run `f` against the training database under the read lock.
     pub fn with_data<R>(&self, f: impl FnOnce(&Dataset) -> R) -> R {
         f(&self.data.read().unwrap())
@@ -210,6 +297,15 @@ impl ShardedForest {
     /// merged per-tree reports (gathered back into global tree order) —
     /// only the locking and fan-out routing differ.
     pub fn delete_batch(&self, ids: &[InstanceId]) -> (ForestDeleteReport, usize) {
+        let (report, skipped, _) = self.delete_batch_counted(ids);
+        (report, skipped)
+    }
+
+    /// [`ShardedForest::delete_batch`] plus the number of subtree retrains
+    /// THIS batch deferred (always 0 under `LazyPolicy::Eager`). Counted
+    /// per tree inside the mutation, so concurrent adds / compactor ticks
+    /// can never skew it — the batcher reports it per request.
+    pub fn delete_batch_counted(&self, ids: &[InstanceId]) -> (ForestDeleteReport, usize, u64) {
         let _m = self.mutation.lock().unwrap();
         // Phase 1: validate and dedupe against the liveness mask (the
         // helper shared with `DareForest::delete_batch`, so the two paths
@@ -221,41 +317,61 @@ impl ShardedForest {
             accept_deletions(&d, ids)
         };
 
+        // An all-skipped batch mutates nothing — no marks, no budgeted
+        // drain, no epoch movement (tree state may only change inside a
+        // seqlock bracket or an epoch-bumping flush; DESIGN.md §9).
+        if accepted.is_empty() {
+            let per_tree = vec![DeleteReport::default(); self.n_trees];
+            return (ForestDeleteReport { per_tree }, skipped, 0);
+        }
+
         // Phase 2: fan the whole accepted sequence out to every shard; each
         // worker holds only its shard's write lock (plus a shared read lock
         // on the immutable-row dataset). The seqlock bracket makes the
-        // in-flight state visible to optimistic readers. An all-skipped
-        // batch mutates nothing and must not move epochs.
-        if !accepted.is_empty() {
-            self.begin_mutation();
-        }
-        let per_shard: Vec<Vec<DeleteReport>> =
+        // in-flight state visible to optimistic readers.
+        self.begin_mutation();
+        let per_shard: Vec<(Vec<DeleteReport>, u64)> =
             scope_map(&self.shards, self.shards.len(), |_, shard| {
                 let mut trees = shard.trees.write().unwrap();
                 let d = self.data.read().unwrap();
-                trees
+                let mut deferred = 0u64;
+                let reports = trees
                     .iter_mut()
                     .map(|t| {
+                        let before = t.deferred_retrains();
                         let mut merged = DeleteReport::default();
                         for &id in &accepted {
-                            merged.merge(&t.delete(&d, &self.params, id));
+                            merged.merge(&match self.lazy {
+                                LazyPolicy::Eager => t.delete(&d, &self.params, id),
+                                _ => t.mark_delete(&d, &self.params, id),
+                            });
+                            // Budgeted: drain up to k per *deletion* —
+                            // the same schedule as the unsharded
+                            // `DareForest::apply_delete`, so the two
+                            // implementations of the policy cannot drift.
+                            if let LazyPolicy::Budgeted(k) = self.lazy {
+                                t.flush_budget(&d, &self.params, k);
+                            }
                         }
+                        deferred += t.deferred_retrains() - before;
                         merged
                     })
-                    .collect()
+                    .collect();
+                shard.refresh_pending(&trees);
+                (reports, deferred)
             });
 
         // Phase 3: retire the instances and publish the new shard epochs.
-        if !accepted.is_empty() {
+        {
             let mut d = self.data.write().unwrap();
             for &id in &accepted {
                 d.mark_removed(id);
             }
-            drop(d);
-            self.end_mutation();
         }
-        let per_tree: Vec<DeleteReport> = per_shard.into_iter().flatten().collect();
-        (ForestDeleteReport { per_tree }, skipped)
+        self.end_mutation();
+        let deferred: u64 = per_shard.iter().map(|(_, d)| d).sum();
+        let per_tree: Vec<DeleteReport> = per_shard.into_iter().flat_map(|(r, _)| r).collect();
+        (ForestDeleteReport { per_tree }, skipped, deferred)
     }
 
     /// Add a fresh training instance (§6), bit-exact with
@@ -284,8 +400,19 @@ impl ShardedForest {
             let mut trees = shard.trees.write().unwrap();
             let d = self.data.read().unwrap();
             for t in trees.iter_mut() {
-                t.add(&d, &self.params, id);
+                match self.lazy {
+                    LazyPolicy::Eager => {
+                        t.add(&d, &self.params, id);
+                    }
+                    _ => {
+                        t.mark_add(&d, &self.params, id);
+                    }
+                }
+                if let LazyPolicy::Budgeted(k) = self.lazy {
+                    t.flush_budget(&d, &self.params, k);
+                }
             }
+            shard.refresh_pending(&trees);
         });
         self.end_mutation();
         Ok(id)
@@ -296,8 +423,19 @@ impl ShardedForest {
     /// guarantees the liveness check and every shard's costing observed
     /// the same forest state (a concurrent deletion of `id` yields the
     /// "not live" error, never a cost mixing pre-/post-delete shards).
+    ///
+    /// Under a lazy policy the cost is computed **as-if-flushed**: the
+    /// query serializes on the mutation mutex, flushes the pending
+    /// subtrees on `id`'s path, and costs the materialized trees — the
+    /// value is bit-identical to the eager store's at this moment.
     pub fn delete_cost(&self, id: InstanceId) -> anyhow::Result<u64> {
-        self.read_consistent(|| {
+        if self.lazy.is_lazy() {
+            // Steady state (backlog drained): the lock-free §8 read path
+            // (see [`ShardedForest::read_if_clean`]).
+            if let Some(r) = self.read_if_clean(|| self.cost_eager(id)) {
+                return r;
+            }
+            let _m = self.mutation.lock().unwrap();
             {
                 let d = self.data.read().unwrap();
                 anyhow::ensure!(
@@ -306,15 +444,44 @@ impl ShardedForest {
                 );
             }
             let per_shard = scope_map(&self.shards, self.shards.len(), |_, shard| {
-                let trees = shard.trees.read().unwrap();
+                let mut trees = shard.trees.write().unwrap();
                 let d = self.data.read().unwrap();
-                trees
-                    .iter()
-                    .map(|t| t.delete_cost(&d, &self.params, id))
-                    .sum::<u64>()
+                let flushed_before: u64 = trees.iter().map(|t| t.flushed_retrains()).sum();
+                let cost: u64 = trees
+                    .iter_mut()
+                    .map(|t| t.delete_cost_flushed(&d, &self.params, id))
+                    .sum();
+                let flushed_after: u64 = trees.iter().map(|t| t.flushed_retrains()).sum();
+                if flushed_after != flushed_before {
+                    shard.refresh_pending(&trees);
+                    shard.epoch.fetch_add(2, Ordering::SeqCst);
+                }
+                cost
             });
-            Ok(per_shard.into_iter().sum())
-        })
+            return Ok(per_shard.into_iter().sum());
+        }
+        self.read_consistent(|| self.cost_eager(id))
+    }
+
+    /// One read-locked costing pass over fully-flushed trees (the §8 read
+    /// body); callers are responsible for consistency validation.
+    fn cost_eager(&self, id: InstanceId) -> anyhow::Result<u64> {
+        {
+            let d = self.data.read().unwrap();
+            anyhow::ensure!(
+                (id as usize) < d.n_total() && d.is_alive(id),
+                "instance {id} is not a live training instance"
+            );
+        }
+        let per_shard = scope_map(&self.shards, self.shards.len(), |_, shard| {
+            let trees = shard.trees.read().unwrap();
+            let d = self.data.read().unwrap();
+            trees
+                .iter()
+                .map(|t| t.delete_cost(&d, &self.params, id))
+                .sum::<u64>()
+        });
+        Ok(per_shard.into_iter().sum())
     }
 
     /// Positive-class probability for one row (bit-exact with
@@ -342,40 +509,62 @@ impl ShardedForest {
         if n_rows == 0 {
             return Vec::new();
         }
-        let partials: Vec<Vec<f32>> = self.read_consistent(|| {
-            // Per shard: a (trees_in_shard × n_rows) flat plane of leaf
-            // values. `predict_block_sum` accumulates into zeroed slices,
-            // which yields plain leaf values — the same reuse the forest's
-            // block path gets.
-            scope_map(&self.shards, self.shards.len(), |_, shard| {
-                let trees = shard.trees.read().unwrap();
-                let mut vals = vec![0.0f32; trees.len() * n_rows];
-                let mut cursors: Vec<u32> = Vec::new();
-                for (k, t) in trees.iter().enumerate() {
-                    let out = &mut vals[k * n_rows..(k + 1) * n_rows];
-                    if n_rows < PREDICT_BATCH_CUTOFF {
-                        for (o, row) in out.iter_mut().zip(rows) {
-                            *o = t.predict(row);
-                        }
-                    } else {
-                        for (b, chunk) in rows.chunks(PREDICT_BLOCK).enumerate() {
-                            let lo = b * PREDICT_BLOCK;
-                            t.arena.predict_block_sum(
-                                chunk,
-                                &mut cursors,
-                                &mut out[lo..lo + chunk.len()],
-                            );
-                        }
+        if self.lazy.is_lazy() {
+            // Steady state (compactor drained the backlog): the lock-free
+            // §8 read path (see [`ShardedForest::read_if_clean`]).
+            if let Some(partials) = self.read_if_clean(|| self.gather_partials(rows)) {
+                return self.reduce_partials(&partials, n_rows);
+            }
+            // Flush-on-read (DESIGN.md §9): serialize on the mutation
+            // mutex, materialize the pending subtrees every row descends
+            // into (bumping only the epochs of shards that actually
+            // flushed), then gather — the mutex excludes writers for the
+            // whole request, so no retry is needed.
+            let _m = self.mutation.lock().unwrap();
+            self.flush_rows_locked(rows);
+            let partials = self.gather_partials(rows);
+            return self.reduce_partials(&partials, n_rows);
+        }
+        let partials: Vec<Vec<f32>> = self.read_consistent(|| self.gather_partials(rows));
+        self.reduce_partials(&partials, n_rows)
+    }
+
+    /// Per shard: a (trees_in_shard × n_rows) flat plane of leaf values.
+    /// `predict_block_sum` accumulates into zeroed slices, which yields
+    /// plain leaf values — the same reuse the forest's block path gets.
+    fn gather_partials(&self, rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let n_rows = rows.len();
+        scope_map(&self.shards, self.shards.len(), |_, shard| {
+            let trees = shard.trees.read().unwrap();
+            let mut vals = vec![0.0f32; trees.len() * n_rows];
+            let mut cursors: Vec<u32> = Vec::new();
+            for (k, t) in trees.iter().enumerate() {
+                let out = &mut vals[k * n_rows..(k + 1) * n_rows];
+                if n_rows < PREDICT_BATCH_CUTOFF {
+                    for (o, row) in out.iter_mut().zip(rows) {
+                        *o = t.predict(row);
+                    }
+                } else {
+                    for (b, chunk) in rows.chunks(PREDICT_BLOCK).enumerate() {
+                        let lo = b * PREDICT_BLOCK;
+                        t.arena.predict_block_sum(
+                            chunk,
+                            &mut cursors,
+                            &mut out[lo..lo + chunk.len()],
+                        );
                     }
                 }
-                vals
-            })
-        });
-        // Reduce in global tree order: shards hold contiguous ascending
-        // ranges, so folding shard-by-shard, tree-by-tree replays the
-        // unsharded per-row sum exactly.
+            }
+            vals
+        })
+    }
+
+    /// Reduce in global tree order: shards hold contiguous ascending
+    /// ranges, so folding shard-by-shard, tree-by-tree replays the
+    /// unsharded per-row sum exactly.
+    fn reduce_partials(&self, partials: &[Vec<f32>], n_rows: usize) -> Vec<f32> {
         let mut sums = vec![0.0f32; n_rows];
-        for vals in &partials {
+        for vals in partials {
             for tree_vals in vals.chunks(n_rows) {
                 for (s, v) in sums.iter_mut().zip(tree_vals) {
                     *s += *v;
@@ -389,6 +578,76 @@ impl ShardedForest {
         sums
     }
 
+    /// Flush every pending subtree the given rows descend into, shard by
+    /// shard over the threadpool. Caller must hold the mutation mutex.
+    /// Shards that executed at least one retrain publish a new epoch (+2),
+    /// so the PJRT snapshot re-tensorizes exactly the flushed shards.
+    fn flush_rows_locked(&self, rows: &[Vec<f32>]) {
+        if self.pending_retrains() == 0 {
+            return;
+        }
+        scope_map(&self.shards, self.shards.len(), |_, shard| {
+            if shard.pending.load(Ordering::SeqCst) == 0 {
+                return;
+            }
+            let mut trees = shard.trees.write().unwrap();
+            let d = self.data.read().unwrap();
+            let mut flushed = 0u64;
+            for t in trees.iter_mut() {
+                let before = t.flushed_retrains();
+                for row in rows {
+                    t.flush_for_row(&d, &self.params, row);
+                }
+                flushed += t.flushed_retrains() - before;
+            }
+            if flushed > 0 {
+                shard.refresh_pending(&trees);
+                shard.epoch.fetch_add(2, Ordering::SeqCst);
+            }
+        });
+    }
+
+    /// Drain up to `k` deferred retrains per tree through the coordinator
+    /// threadpool (the background compactor's unit of work; also the
+    /// explicit `compact` escape hatch). Returns the number of retrains
+    /// executed. Flush order cannot change any result — retrains are
+    /// path-seeded (DESIGN.md §9) — so compaction timing is free to be
+    /// nondeterministic.
+    pub fn compact(&self, k: usize) -> u64 {
+        let _m = self.mutation.lock().unwrap();
+        self.compact_locked(k)
+    }
+
+    /// Execute every deferred retrain; afterwards the store serves the
+    /// same bits with or without the lazy pipeline. Returns the number of
+    /// retrains executed.
+    pub fn flush_all(&self) -> u64 {
+        self.compact(usize::MAX)
+    }
+
+    fn compact_locked(&self, k: usize) -> u64 {
+        if self.pending_retrains() == 0 {
+            return 0;
+        }
+        let flushed = scope_map(&self.shards, self.shards.len(), |_, shard| {
+            if shard.pending.load(Ordering::SeqCst) == 0 {
+                return 0u64;
+            }
+            let mut trees = shard.trees.write().unwrap();
+            let d = self.data.read().unwrap();
+            let mut fl = 0u64;
+            for t in trees.iter_mut() {
+                fl += t.flush_budget(&d, &self.params, k) as u64;
+            }
+            if fl > 0 {
+                shard.refresh_pending(&trees);
+                shard.epoch.fetch_add(2, Ordering::SeqCst);
+            }
+            fl
+        });
+        flushed.into_iter().sum()
+    }
+
     /// Memory breakdown across all trees (paper Table 3).
     pub fn memory(&self) -> NodeMemory {
         let mut m = NodeMemory::default();
@@ -398,9 +657,13 @@ impl ShardedForest {
 
     /// Clone a consistent [`DareForest`] view (serialization, oracles).
     /// Takes the mutation mutex so trees and dataset cannot diverge
-    /// mid-snapshot.
+    /// mid-snapshot. Under a lazy policy all deferred retrains are flushed
+    /// first: a snapshot is an external read of the *whole* model, so
+    /// as-if-flushed exactness demands the fixpoint — the returned forest
+    /// (and its serialized bytes) is identical to the eager store's.
     pub fn snapshot(&self) -> DareForest {
         let _m = self.mutation.lock().unwrap();
+        self.compact_locked(usize::MAX);
         let mut trees = Vec::with_capacity(self.n_trees);
         for s in &self.shards {
             trees.extend(s.trees.read().unwrap().iter().cloned());
@@ -411,9 +674,12 @@ impl ShardedForest {
     }
 
     /// Deep structural audit for the stress/fuzz harnesses: every shard's
-    /// arenas validate, every tree covers exactly the live instance set
-    /// (nothing lost, nothing duplicated), and tree sizes agree with the
-    /// database. Quiesces writers via the mutation mutex.
+    /// arenas validate (including the per-tree dirty sets — every entry a
+    /// live, flushable, leaf-shaped id), every tree covers exactly the
+    /// live instance set (nothing lost, nothing duplicated — pending-leaf
+    /// payloads are kept current by the flush-before-touch contract), and
+    /// tree sizes agree with the database. Quiesces writers via the
+    /// mutation mutex.
     pub fn validate(&self) -> anyhow::Result<()> {
         let _m = self.mutation.lock().unwrap();
         let d = self.data.read().unwrap();
@@ -421,9 +687,11 @@ impl ShardedForest {
         let mut ids = Vec::with_capacity(expect.len());
         for s in &self.shards {
             let trees = s.trees.read().unwrap();
+            let mut pending = 0u64;
             for (k, t) in trees.iter().enumerate() {
                 let gt = s.start + k;
-                t.arena.validate()?;
+                t.validate()?;
+                pending += t.dirty_len() as u64;
                 anyhow::ensure!(
                     t.n() as usize == d.n_alive(),
                     "tree {gt}: size {} != live instances {}",
@@ -439,6 +707,12 @@ impl ShardedForest {
                      (lost or duplicated ids across shards)"
                 );
             }
+            anyhow::ensure!(
+                pending == s.pending.load(Ordering::SeqCst),
+                "shard {}: pending counter {} disagrees with its trees ({pending})",
+                s.start,
+                s.pending.load(Ordering::SeqCst)
+            );
         }
         Ok(())
     }
@@ -569,6 +843,94 @@ mod tests {
         sharded.delete_batch(&[0, 1]);
         sharded.validate().unwrap();
         assert!(sharded.memory().total() > 0);
+    }
+
+    #[test]
+    fn lazy_store_serves_eager_bits_and_flushes_on_read() {
+        use crate::forest::lazy::LazyPolicy;
+        let mut eager = forest(260, 5, 23);
+        let lazy = ShardedForest::new_with_policy(forest(260, 5, 23), 3, LazyPolicy::OnRead);
+        assert_eq!(lazy.lazy_policy(), LazyPolicy::OnRead);
+
+        // Deletions mark; reports stay identical to the eager path.
+        let ids = [1u32, 8, 40, 90, 130];
+        let (rl, skipped_l) = lazy.delete_batch(&ids);
+        let (re, skipped_e) = eager.delete_batch(&ids);
+        assert_eq!(skipped_l, skipped_e);
+        for (a, b) in rl.per_tree.iter().zip(&re.per_tree) {
+            assert_eq!(a.retrain_events, b.retrain_events);
+            assert_eq!(a.thresholds_resampled, b.thresholds_resampled);
+        }
+        lazy.validate().unwrap();
+
+        // Served predictions and costs are bit-identical at query time.
+        let rows: Vec<Vec<f32>> = (0..60u32).map(|i| eager.data().row(i)).collect();
+        assert_eq!(lazy.predict_proba_rows(&rows), eager.predict_proba_rows(&rows));
+        for id in [3u32, 50, 77] {
+            assert_eq!(lazy.delete_cost(id).unwrap(), eager.delete_cost(id));
+        }
+
+        // Drain the rest; the snapshot equals the eager forest structurally.
+        lazy.flush_all();
+        assert_eq!(lazy.pending_retrains(), 0);
+        lazy.for_each_tree(|gt, t| {
+            assert!(
+                t.structural_matches(&eager.trees()[gt]),
+                "tree {gt} diverged after flush"
+            );
+        });
+        lazy.validate().unwrap();
+        let (deferred, flushed) = lazy.retrain_counters();
+        assert_eq!(deferred, flushed, "drained store must have no backlog");
+    }
+
+    #[test]
+    fn lazy_flush_bumps_only_flushed_shard_epochs() {
+        use crate::forest::lazy::LazyPolicy;
+        use std::sync::atomic::Ordering;
+        let lazy = ShardedForest::new_with_policy(forest(240, 4, 29), 4, LazyPolicy::OnRead);
+        // one mutation: every epoch moves by exactly 2 (seqlock bracket)
+        lazy.delete_batch(&(0u32..12).collect::<Vec<_>>());
+        assert!(lazy.shard_epochs().iter().all(|&e| e == 2));
+        let before = lazy.shard_epochs();
+        let pending_before: Vec<u64> = lazy
+            .shards
+            .iter()
+            .map(|s| s.pending.load(Ordering::SeqCst))
+            .collect();
+        // a full drain bumps exactly the shards that had a backlog
+        lazy.flush_all();
+        let after = lazy.shard_epochs();
+        for s in 0..lazy.n_shards() {
+            if pending_before[s] > 0 {
+                assert_eq!(after[s], before[s] + 2, "flushed shard {s} must republish");
+            } else {
+                assert_eq!(after[s], before[s], "clean shard {s} must not move");
+            }
+        }
+        // nothing pending → compact is a no-op and moves no epoch
+        assert_eq!(lazy.compact(8), 0);
+        assert_eq!(lazy.shard_epochs(), after);
+        lazy.validate().unwrap();
+    }
+
+    #[test]
+    fn budgeted_store_bounds_the_backlog() {
+        use crate::forest::lazy::LazyPolicy;
+        let lazy = ShardedForest::new_with_policy(forest(220, 4, 31), 2, LazyPolicy::Budgeted(1));
+        let mut eager = forest(220, 4, 31);
+        for chunk in (0u32..40).collect::<Vec<_>>().chunks(4) {
+            lazy.delete_batch(chunk);
+            eager.delete_batch(chunk);
+        }
+        lazy.validate().unwrap();
+        // the per-batch budget keeps draining; a final snapshot (which
+        // flushes) must match the eager trees exactly
+        let snap = lazy.snapshot();
+        assert_eq!(lazy.pending_retrains(), 0, "snapshot must flush the backlog");
+        for (a, b) in snap.trees().iter().zip(eager.trees()) {
+            assert!(a.structural_matches(b));
+        }
     }
 
     #[test]

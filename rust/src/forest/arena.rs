@@ -720,6 +720,32 @@ impl ArenaTree {
         );
         Ok(())
     }
+
+    /// Data-aware extension of [`ArenaTree::validate`]: every leaf's
+    /// `n_pos` must equal the positive-label count over its id list (so,
+    /// with the parent-sum checks of `validate`, every node's `n`/`n_pos`
+    /// equals the sum over the leaf id lists below it), and leaf ids must
+    /// index real rows. Used by the churn property tests.
+    pub fn validate_counts(&self, data: &Dataset) -> anyhow::Result<()> {
+        self.validate()?;
+        for (ni, c) in self.cold.iter().enumerate() {
+            if let Cold::Leaf { ids } = c {
+                for &id in ids {
+                    anyhow::ensure!(
+                        (id as usize) < data.n_total(),
+                        "leaf {ni}: id {id} out of range"
+                    );
+                }
+                let pos = count_pos(data, ids);
+                anyhow::ensure!(
+                    pos == self.n_pos[ni],
+                    "leaf {ni}: n_pos {} != label sum {pos} over its id list",
+                    self.n_pos[ni]
+                );
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Reusable sorted-id scratch for order-insensitive leaf comparisons: one

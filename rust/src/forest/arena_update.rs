@@ -11,6 +11,18 @@
 //! `workspace::train_subtree`); subtree retrains are grafted into the arena
 //! in deterministic BFS order with freed slots recycled LIFO, so node
 //! allocation is a pure function of the operation sequence (DESIGN.md §7).
+//!
+//! Since the lazy pipeline (DESIGN.md §9) the walks are parameterized by a
+//! [`RetrainSink`]: the *stats* half (count updates, threshold maintenance,
+//! Lemma-A.1 resampling, argmax re-selection) runs inline, while the
+//! *structural* half (every `train_subtree` rebuild) is routed through the
+//! sink. [`EagerSink`] trains in place — the historical behavior, used by
+//! the public [`delete`]/[`add`] wrappers — and `forest::lazy::LazySink`
+//! records the rebuild as a pending subtree to be flushed later. The hooks
+//! ([`RetrainSink::enter`], [`RetrainSink::before_collect`]) exist so the
+//! lazy sink can materialize pending regions *before* the walk inspects or
+//! gathers them, which keeps every observable the walk reads — structure,
+//! gathered id order, RNG draws — identical to the eager path.
 
 use crate::data::dataset::InstanceId;
 use crate::forest::arena::{leaf_value, ArenaTree, Cold, NIL};
@@ -19,6 +31,90 @@ use crate::forest::delete::{delete_rng, DeleteReport, RetrainEvent};
 use crate::forest::stats::{enumerate_valid, resample_invalid, sample_thresholds, AttrStats};
 use crate::forest::train::{child_path, gather_pairs, partition, select_best, TrainCtx, ROOT_PATH};
 use crate::forest::workspace::train_subtree;
+
+/// How the delete/add walks execute subtree rebuilds (the `train_subtree`
+/// halves of Alg. 2 / §6). Implementations must leave the arena in the
+/// state the eager path would observe at every hook return — that is the
+/// whole exactness contract of the lazy pipeline (DESIGN.md §9).
+pub(crate) trait RetrainSink {
+    /// Runs at the top of every node visit, before the node's kind is
+    /// inspected. The lazy sink flushes a pending subtree here so the walk
+    /// below always sees eager-accurate structure.
+    fn enter(&mut self, t: &mut ArenaTree, ctx: &TrainCtx<'_>, nid: u32);
+
+    /// Runs before the walk gathers a subtree's instance ids
+    /// (`collect_ids`). The lazy sink materializes pending descendants so
+    /// the gathered id *order* — which feeds `train_subtree` and leaf
+    /// payloads, and therefore serialized bytes — matches the eager path.
+    fn before_collect(&mut self, t: &mut ArenaTree, ctx: &TrainCtx<'_>, nid: u32);
+
+    /// Replace the subtree at `nid` with a retrain over `ids` (seeded by
+    /// `(ctx.tree_seed, path)`, so execution time cannot change the result).
+    fn retrain_node(
+        &mut self,
+        t: &mut ArenaTree,
+        ctx: &TrainCtx<'_>,
+        nid: u32,
+        ids: Vec<InstanceId>,
+        depth: usize,
+        path: u64,
+    );
+
+    /// Replace `nid`'s children after its split moved to `(attr, v)`:
+    /// retrain the two children on the given partition (child paths derived
+    /// from `path`/`depth` exactly as the eager code does).
+    #[allow(clippy::too_many_arguments)]
+    fn retrain_children(
+        &mut self,
+        t: &mut ArenaTree,
+        ctx: &TrainCtx<'_>,
+        nid: u32,
+        attr: usize,
+        v: f32,
+        left_ids: Vec<InstanceId>,
+        right_ids: Vec<InstanceId>,
+        depth: usize,
+        path: u64,
+    );
+}
+
+/// The historical in-place executor: every rebuild trains immediately.
+pub(crate) struct EagerSink;
+
+impl RetrainSink for EagerSink {
+    fn enter(&mut self, _t: &mut ArenaTree, _ctx: &TrainCtx<'_>, _nid: u32) {}
+    fn before_collect(&mut self, _t: &mut ArenaTree, _ctx: &TrainCtx<'_>, _nid: u32) {}
+
+    fn retrain_node(
+        &mut self,
+        t: &mut ArenaTree,
+        ctx: &TrainCtx<'_>,
+        nid: u32,
+        ids: Vec<InstanceId>,
+        depth: usize,
+        path: u64,
+    ) {
+        let node = train_subtree(ctx, ids, depth, path);
+        t.replace_node(nid, node);
+    }
+
+    fn retrain_children(
+        &mut self,
+        t: &mut ArenaTree,
+        ctx: &TrainCtx<'_>,
+        nid: u32,
+        attr: usize,
+        v: f32,
+        left_ids: Vec<InstanceId>,
+        right_ids: Vec<InstanceId>,
+        depth: usize,
+        path: u64,
+    ) {
+        let left = train_subtree(ctx, left_ids, depth + 1, child_path(path, depth, false));
+        let right = train_subtree(ctx, right_ids, depth + 1, child_path(path, depth, true));
+        t.replace_children(nid, attr, v, left, right);
+    }
+}
 
 /// Delete instance `id` from the arena tree (paper Alg. 2). `ctx.data` must
 /// still contain the instance; `epoch` is the tree's update counter feeding
@@ -30,12 +126,24 @@ pub fn delete(
     epoch: u64,
     report: &mut DeleteReport,
 ) {
+    delete_with(t, ctx, id, epoch, report, &mut EagerSink);
+}
+
+/// [`delete`] with an explicit executor (the lazy mark phase routes here).
+pub(crate) fn delete_with<S: RetrainSink>(
+    t: &mut ArenaTree,
+    ctx: &TrainCtx<'_>,
+    id: InstanceId,
+    epoch: u64,
+    report: &mut DeleteReport,
+    sink: &mut S,
+) {
     let root = t.root();
-    delete_at(t, ctx, root, id, 0, ROOT_PATH, epoch, report);
+    delete_at(t, ctx, root, id, 0, ROOT_PATH, epoch, report, sink);
 }
 
 #[allow(clippy::too_many_arguments)]
-fn delete_at(
+fn delete_at<S: RetrainSink>(
     t: &mut ArenaTree,
     ctx: &TrainCtx<'_>,
     nid: u32,
@@ -44,7 +152,9 @@ fn delete_at(
     path: u64,
     epoch: u64,
     report: &mut DeleteReport,
+    sink: &mut S,
 ) {
+    sink.enter(t, ctx, nid);
     let y = ctx.data.y(id);
     let ni = nid as usize;
 
@@ -74,6 +184,7 @@ fn delete_at(
 
     // Collapse to a leaf when scratch training would stop here now.
     if n_new < ctx.params.min_samples_split as u32 || pos_new == 0 || pos_new == n_new {
+        sink.before_collect(t, ctx, nid);
         let mut ids = Vec::with_capacity(n_new as usize);
         t.collect_ids(nid, Some(id), &mut ids);
         report.retrain_events.push(RetrainEvent { depth, n: n_new });
@@ -82,14 +193,16 @@ fn delete_at(
     }
 
     if matches!(&t.cold[ni], Cold::Random { .. }) {
-        delete_random_at(t, ctx, nid, id, n_new, pos_new, depth, path, epoch, report);
+        delete_random_at(t, ctx, nid, id, n_new, pos_new, depth, path, epoch, report, sink);
     } else {
-        delete_greedy_at(t, ctx, nid, id, y, n_new, pos_new, depth, path, epoch, report);
+        delete_greedy_at(
+            t, ctx, nid, id, y, n_new, pos_new, depth, path, epoch, report, sink,
+        );
     }
 }
 
 #[allow(clippy::too_many_arguments)]
-fn delete_random_at(
+fn delete_random_at<S: RetrainSink>(
     t: &mut ArenaTree,
     ctx: &TrainCtx<'_>,
     nid: u32,
@@ -100,6 +213,7 @@ fn delete_random_at(
     path: u64,
     epoch: u64,
     report: &mut DeleteReport,
+    sink: &mut S,
 ) {
     let ni = nid as usize;
     // stage 1: update counts; decide whether the threshold fell out of range
@@ -123,11 +237,11 @@ fn delete_random_at(
         // Threshold no longer inside [a_min, a_max): retrain this node with
         // its path seed — identical to scratch training on the updated data
         // (Alg. 2 lines 10–17, derandomized; DESIGN.md §5).
+        sink.before_collect(t, ctx, nid);
         let mut ids = Vec::with_capacity(n_new as usize);
         t.collect_ids(nid, Some(id), &mut ids);
         report.retrain_events.push(RetrainEvent { depth, n: n_new });
-        let node = train_subtree(ctx, ids, depth, path);
-        t.replace_node(nid, node);
+        sink.retrain_node(t, ctx, nid, ids, depth, path);
         return;
     }
 
@@ -145,11 +259,12 @@ fn delete_random_at(
         child_path(path, depth, !goes_left),
         epoch,
         report,
+        sink,
     );
 }
 
 #[allow(clippy::too_many_arguments)]
-fn delete_greedy_at(
+fn delete_greedy_at<S: RetrainSink>(
     t: &mut ArenaTree,
     ctx: &TrainCtx<'_>,
     nid: u32,
@@ -161,6 +276,7 @@ fn delete_greedy_at(
     path: u64,
     epoch: u64,
     report: &mut DeleteReport,
+    sink: &mut S,
 ) {
     let ni = nid as usize;
     // stage 1: update node + threshold statistics (Alg. 2 line 8): O(p̃·k)
@@ -192,6 +308,7 @@ fn delete_greedy_at(
     // requires gathering the node's data from its leaves (§3.1).
     let mut gathered: Option<Vec<InstanceId>> = None;
     if any_invalid {
+        sink.before_collect(t, ctx, nid);
         let mut ids = Vec::with_capacity(n_new as usize);
         t.collect_ids(nid, Some(id), &mut ids);
 
@@ -274,6 +391,7 @@ fn delete_greedy_at(
         let ids = match gathered {
             Some(ids) => ids,
             None => {
+                sink.before_collect(t, ctx, nid);
                 let mut v = Vec::with_capacity(n_new as usize);
                 t.collect_ids(nid, Some(id), &mut v);
                 v
@@ -282,9 +400,9 @@ fn delete_greedy_at(
         report.retrain_events.push(RetrainEvent { depth, n: n_new });
         let (left_ids, right_ids) = partition(ctx.data, &ids, new_attr, new_v);
         debug_assert!(!left_ids.is_empty() && !right_ids.is_empty());
-        let left = train_subtree(ctx, left_ids, depth + 1, child_path(path, depth, false));
-        let right = train_subtree(ctx, right_ids, depth + 1, child_path(path, depth, true));
-        t.replace_children(nid, new_attr, new_v, left, right);
+        sink.retrain_children(
+            t, ctx, nid, new_attr, new_v, left_ids, right_ids, depth, path,
+        );
         return;
     }
 
@@ -307,6 +425,7 @@ fn delete_greedy_at(
         child_path(path, depth, !goes_left),
         epoch,
         report,
+        sink,
     );
 }
 
@@ -410,12 +529,24 @@ pub fn add(
     epoch: u64,
     report: &mut DeleteReport,
 ) {
+    add_with(t, ctx, id, epoch, report, &mut EagerSink);
+}
+
+/// [`add`] with an explicit executor (the lazy mark phase routes here).
+pub(crate) fn add_with<S: RetrainSink>(
+    t: &mut ArenaTree,
+    ctx: &TrainCtx<'_>,
+    id: InstanceId,
+    epoch: u64,
+    report: &mut DeleteReport,
+    sink: &mut S,
+) {
     let root = t.root();
-    add_at(t, ctx, root, id, 0, ROOT_PATH, epoch, report);
+    add_at(t, ctx, root, id, 0, ROOT_PATH, epoch, report, sink);
 }
 
 #[allow(clippy::too_many_arguments)]
-fn add_at(
+fn add_at<S: RetrainSink>(
     t: &mut ArenaTree,
     ctx: &TrainCtx<'_>,
     nid: u32,
@@ -424,7 +555,9 @@ fn add_at(
     path: u64,
     epoch: u64,
     report: &mut DeleteReport,
+    sink: &mut S,
 ) {
+    sink.enter(t, ctx, nid);
     let y = ctx.data.y(id);
     let ni = nid as usize;
 
@@ -458,8 +591,7 @@ fn add_at(
                 depth,
                 n: ids.len() as u32,
             });
-            let node = train_subtree(ctx, ids, depth, path);
-            t.replace_node(nid, node);
+            sink.retrain_node(t, ctx, nid, ids, depth, path);
         }
         return;
     }
@@ -493,6 +625,7 @@ fn add_at(
             child_path(path, depth, !goes_left),
             epoch,
             report,
+            sink,
         );
         return;
     }
@@ -532,6 +665,7 @@ fn add_at(
 
     // stage 2: resample broken thresholds over the updated data.
     if any_broken {
+        sink.before_collect(t, ctx, nid);
         let mut ids = Vec::new();
         t.collect_ids(nid, None, &mut ids);
         ids.push(id); // leaves below don't know the new instance yet
@@ -559,8 +693,7 @@ fn add_at(
                 depth,
                 n: ids.len() as u32,
             });
-            let node = train_subtree(ctx, ids, depth, path);
-            t.replace_node(nid, node);
+            sink.retrain_node(t, ctx, nid, ids, depth, path);
             return;
         }
     }
@@ -582,6 +715,7 @@ fn add_at(
     };
 
     if new_attr != old_attr || new_v != old_v {
+        sink.before_collect(t, ctx, nid);
         let mut ids = Vec::new();
         t.collect_ids(nid, None, &mut ids);
         if !ids.contains(&id) {
@@ -592,9 +726,9 @@ fn add_at(
             n: ids.len() as u32,
         });
         let (left_ids, right_ids) = partition(ctx.data, &ids, new_attr, new_v);
-        let left = train_subtree(ctx, left_ids, depth + 1, child_path(path, depth, false));
-        let right = train_subtree(ctx, right_ids, depth + 1, child_path(path, depth, true));
-        t.replace_children(nid, new_attr, new_v, left, right);
+        sink.retrain_children(
+            t, ctx, nid, new_attr, new_v, left_ids, right_ids, depth, path,
+        );
         return;
     }
 
@@ -616,6 +750,7 @@ fn add_at(
         child_path(path, depth, !goes_left),
         epoch,
         report,
+        sink,
     );
 }
 

@@ -4,6 +4,7 @@
 
 use crate::data::dataset::{Dataset, InstanceId};
 use crate::forest::delete::DeleteReport;
+use crate::forest::lazy::LazyPolicy;
 use crate::forest::node::NodeMemory;
 use crate::forest::params::Params;
 use crate::forest::tree::DareTree;
@@ -30,6 +31,9 @@ pub struct DareForest {
     seed: u64,
     trees: Vec<DareTree>,
     data: Dataset,
+    /// When deferred retrains run (DESIGN.md §9). Runtime serving policy,
+    /// not a model hyperparameter: never serialized, `Eager` by default.
+    lazy: LazyPolicy,
 }
 
 /// Aggregate report for one forest-level deletion (all trees).
@@ -118,6 +122,7 @@ impl DareForest {
             seed,
             trees,
             data,
+            lazy: LazyPolicy::Eager,
         }
     }
 
@@ -143,6 +148,7 @@ impl DareForest {
             seed,
             trees,
             data,
+            lazy: LazyPolicy::Eager,
         })
     }
 
@@ -158,6 +164,20 @@ impl DareForest {
     }
     pub fn seed(&self) -> u64 {
         self.seed
+    }
+
+    /// Current deferral policy (DESIGN.md §9).
+    pub fn lazy_policy(&self) -> LazyPolicy {
+        self.lazy
+    }
+
+    /// Switch the deferral policy. Leaving a lazy policy flushes first so
+    /// the eager paths never see a dirty tree.
+    pub fn set_lazy_policy(&mut self, policy: LazyPolicy) {
+        if !policy.is_lazy() && self.dirty_subtrees() > 0 {
+            self.flush_all();
+        }
+        self.lazy = policy;
     }
     pub fn n_trees(&self) -> usize {
         self.trees.len()
@@ -177,8 +197,52 @@ impl DareForest {
         self.data.live_ids()
     }
 
+    /// Apply one tree-level mutation under the current policy: eager
+    /// retrain, mark-only, or mark + bounded drain. Shared by every
+    /// forest-level mutation so the policies cannot drift.
+    fn apply_delete(
+        lazy: LazyPolicy,
+        t: &mut DareTree,
+        data: &Dataset,
+        params: &Params,
+        id: InstanceId,
+    ) -> DeleteReport {
+        match lazy {
+            LazyPolicy::Eager => t.delete(data, params, id),
+            LazyPolicy::OnRead => t.mark_delete(data, params, id),
+            LazyPolicy::Budgeted(k) => {
+                let r = t.mark_delete(data, params, id);
+                t.flush_budget(data, params, k);
+                r
+            }
+        }
+    }
+
+    fn apply_add(
+        lazy: LazyPolicy,
+        t: &mut DareTree,
+        data: &Dataset,
+        params: &Params,
+        id: InstanceId,
+    ) {
+        match lazy {
+            LazyPolicy::Eager => {
+                t.add(data, params, id);
+            }
+            LazyPolicy::OnRead => {
+                t.mark_add(data, params, id);
+            }
+            LazyPolicy::Budgeted(k) => {
+                t.mark_add(data, params, id);
+                t.flush_budget(data, params, k);
+            }
+        }
+    }
+
     /// Exactly unlearn one training instance (paper Alg. 2 across all trees,
-    /// then remove it from the database).
+    /// then remove it from the database). Under a lazy policy the subtree
+    /// retrains are deferred (DESIGN.md §9); the reported costs are
+    /// identical either way.
     pub fn delete(&mut self, id: InstanceId) -> anyhow::Result<ForestDeleteReport> {
         anyhow::ensure!(
             (id as usize) < self.data.n_total() && self.data.is_alive(id),
@@ -186,8 +250,9 @@ impl DareForest {
         );
         let data = &self.data;
         let params = &self.params;
+        let lazy = self.lazy;
         let per_tree = scope_map_mut(&mut self.trees, params.n_threads, |_, t| {
-            t.delete(data, params, id)
+            Self::apply_delete(lazy, t, data, params, id)
         });
         self.data.mark_removed(id);
         Ok(ForestDeleteReport { per_tree })
@@ -201,7 +266,7 @@ impl DareForest {
         );
         let mut per_tree = Vec::with_capacity(self.trees.len());
         for t in self.trees.iter_mut() {
-            per_tree.push(t.delete(&self.data, &self.params, id));
+            per_tree.push(Self::apply_delete(self.lazy, t, &self.data, &self.params, id));
         }
         self.data.mark_removed(id);
         Ok(ForestDeleteReport { per_tree })
@@ -223,10 +288,11 @@ impl DareForest {
         let (accepted, skipped) = accept_deletions(&self.data, ids);
         let data = &self.data;
         let params = &self.params;
+        let lazy = self.lazy;
         let per_tree = scope_map_mut(&mut self.trees, params.n_threads, |_, t| {
             let mut merged = DeleteReport::default();
             for &id in &accepted {
-                merged.merge(&t.delete(data, params, id));
+                merged.merge(&Self::apply_delete(lazy, t, data, params, id));
             }
             merged
         });
@@ -241,14 +307,16 @@ impl DareForest {
         let id = self.data.push_row(row, label);
         let data = &self.data;
         let params = &self.params;
+        let lazy = self.lazy;
         scope_map_mut(&mut self.trees, params.n_threads, |_, t| {
-            t.add(data, params, id);
+            Self::apply_add(lazy, t, data, params, id);
         });
         id
     }
 
     /// Dry-run total retrain cost of deleting `id` across all trees — the
-    /// worst-of-1000 adversary's ranking signal.
+    /// worst-of-1000 adversary's ranking signal. Assumes fully flushed
+    /// trees; under a lazy policy use [`DareForest::delete_cost_flushed`].
     pub fn delete_cost(&self, id: InstanceId) -> u64 {
         self.trees
             .iter()
@@ -256,13 +324,106 @@ impl DareForest {
             .sum()
     }
 
+    /// As-if-flushed deletion cost: flush the pending subtrees on `id`'s
+    /// path in every tree, then cost the dry run — bit-identical to the
+    /// eager forest's [`DareForest::delete_cost`] at this moment.
+    pub fn delete_cost_flushed(&mut self, id: InstanceId) -> u64 {
+        let data = &self.data;
+        let params = &self.params;
+        let costs = scope_map_mut(&mut self.trees, params.n_threads, |_, t| {
+            t.delete_cost_flushed(data, params, id)
+        });
+        costs.into_iter().sum()
+    }
+
+    /// Serve a single-row prediction under a lazy policy: flush the pending
+    /// subtrees on the row's descent path in every tree, then predict —
+    /// bit-identical to the eager forest's value at this moment.
+    pub fn predict_proba_flushed(&mut self, row: &[f32]) -> f32 {
+        let data = &self.data;
+        let params = &self.params;
+        let sum: f32 = scope_map_mut(&mut self.trees, params.n_threads, |_, t| {
+            t.flush_for_row(data, params, row);
+            t.predict(row)
+        })
+        .into_iter()
+        .sum();
+        sum / self.trees.len() as f32
+    }
+
+    /// Batch prediction under a lazy policy: flush every row's path in
+    /// every tree, then take the normal batched read path. Values are
+    /// bit-identical to the eager forest's [`DareForest::predict_proba_rows`].
+    pub fn predict_proba_rows_flushed(&mut self, rows: &[Vec<f32>]) -> Vec<f32> {
+        if self.dirty_subtrees() > 0 {
+            let data = &self.data;
+            let params = &self.params;
+            scope_map_mut(&mut self.trees, params.n_threads, |_, t| {
+                for row in rows {
+                    t.flush_for_row(data, params, row);
+                }
+            });
+        }
+        self.predict_proba_rows(rows)
+    }
+
+    /// Execute every deferred retrain in every tree. Afterwards the forest
+    /// is bit-identical (structure, serialized bytes, predictions) to one
+    /// that ran the same op sequence eagerly (DESIGN.md §9). Returns the
+    /// number of retrains executed.
+    pub fn flush_all(&mut self) -> usize {
+        let data = &self.data;
+        let params = &self.params;
+        scope_map_mut(&mut self.trees, params.n_threads, |_, t| {
+            t.flush_all(data, params)
+        })
+        .into_iter()
+        .sum()
+    }
+
+    /// Execute up to `k` deferred retrains per tree (the compactor's unit
+    /// of work); returns the total executed.
+    pub fn compact(&mut self, k: usize) -> usize {
+        let data = &self.data;
+        let params = &self.params;
+        scope_map_mut(&mut self.trees, params.n_threads, |_, t| {
+            t.flush_budget(data, params, k)
+        })
+        .into_iter()
+        .sum()
+    }
+
+    /// Currently pending deferred retrains across all trees.
+    pub fn dirty_subtrees(&self) -> usize {
+        self.trees.iter().map(|t| t.dirty_len()).sum()
+    }
+
+    /// Cumulative retrains deferred across all trees (telemetry).
+    pub fn deferred_retrains(&self) -> u64 {
+        self.trees.iter().map(|t| t.deferred_retrains()).sum()
+    }
+
+    /// Cumulative deferred retrains executed across all trees (telemetry).
+    pub fn flushed_retrains(&self) -> u64 {
+        self.trees.iter().map(|t| t.flushed_retrains()).sum()
+    }
+
     /// Positive-class probability for one feature row (mean over trees).
+    ///
+    /// Contract under a lazy policy: `&self` cannot flush, so on a forest
+    /// with pending deferred retrains this descends into stale pending
+    /// leaves — use [`DareForest::predict_proba_flushed`] to serve
+    /// eager-exact values (the sharded coordinator does this routing
+    /// automatically; only direct library users must pick the right
+    /// entry point).
     pub fn predict_proba(&self, row: &[f32]) -> f32 {
         let s: f32 = self.trees.iter().map(|t| t.predict(row)).sum();
         s / self.trees.len() as f32
     }
 
-    /// Batch prediction over row-major features.
+    /// Batch prediction over row-major features. Same lazy-policy contract
+    /// as [`DareForest::predict_proba`]: on a dirty forest, use
+    /// [`DareForest::predict_proba_rows_flushed`].
     ///
     /// Small batches take the plain per-row path. At
     /// [`PREDICT_BATCH_CUTOFF`] rows and above, the batch is cut into

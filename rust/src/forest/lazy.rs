@@ -1,0 +1,412 @@
+//! Deferred (lazy) unlearning — the DynFrs-style serving lever over DaRE's
+//! eager deletion (DESIGN.md §9).
+//!
+//! Under churn, a deletion's cost is dominated by the subtree retrains it
+//! triggers at the moment of the request. This module splits the
+//! `arena_update` walks into **mark** and **flush** halves:
+//!
+//! - the *mark* half runs the complete eager control flow — count updates,
+//!   threshold maintenance, Lemma-A.1 resampling (consuming the identical
+//!   `delete_rng(tree_seed, path, epoch)` streams), argmax re-selection,
+//!   leaf collapses — but where the eager path would call `train_subtree`,
+//!   it instead collapses the region to a *pending leaf* holding the exact
+//!   instance-id vector the retrain would receive, and records the node in
+//!   a per-tree [`DirtySet`];
+//! - the *flush* half executes a recorded retrain:
+//!   `train_subtree(ctx, ids, depth, path)`. Retrains are seeded by
+//!   `(tree_seed, node_path)` only — never by wall-clock order or a shared
+//!   sequential stream — so a flush is a **pure function** of the pending
+//!   payload and *flush order cannot change the result*.
+//!
+//! **Exactness invariant.** At every hook boundary the lazy tree's
+//! observable state equals the eager tree's: a walk (mutation, prediction,
+//! or cost query) that is about to *enter* a pending region flushes it
+//! first ([`LazySink::enter`]), and a walk about to *gather* a subtree's
+//! ids flushes the subtree's pending descendants first
+//! ([`LazySink::before_collect`]) so the gathered order — which feeds
+//! retrain seeds and leaf payloads, and therefore serialized bytes — is
+//! identical. By induction every served prediction / `delete_cost` under
+//! `on_read` is bit-identical to the eager path at the moment of the query,
+//! and flushing everything yields a forest bit-identical (structure,
+//! serialized bytes, predictions) to eager — `tests/lazy_equivalence.rs`
+//! and the lazy leg of `tests/op_fuzz.rs` enforce both.
+//!
+//! Pending leaves are *valid* arena leaves (counts, payload, hot value all
+//! consistent), so `ArenaTree::validate` passes mid-deferral and ancestors'
+//! count invariants hold; only the [`DirtySet`] distinguishes them from
+//! final leaves.
+
+use crate::data::dataset::{Dataset, InstanceId};
+use crate::forest::arena::{ArenaTree, Cold, NIL};
+use crate::forest::arena_update::RetrainSink;
+use crate::forest::train::{child_path, TrainCtx};
+use crate::forest::workspace::train_subtree;
+use std::collections::BTreeMap;
+
+/// When deferred retrains are executed, relative to the mutation that
+/// triggered them. Threaded through `DareForest`, the sharded coordinator
+/// store, and `ServiceConfig`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LazyPolicy {
+    /// Retrain at the moment of the mutation (the paper's semantics; the
+    /// historical behavior and the default).
+    #[default]
+    Eager,
+    /// Defer every retrain; flush only what a prediction / `delete_cost`
+    /// query descends into (plus whatever the background compactor drains).
+    OnRead,
+    /// Like `OnRead`, but each mutation also flushes up to `k` pending
+    /// subtrees per tree before returning — bounds the dirty backlog while
+    /// keeping the request off the worst-case retrain path.
+    Budgeted(usize),
+}
+
+impl LazyPolicy {
+    /// Parse `"eager" | "on_read" | "budgeted:<k>"` (case-insensitive).
+    pub fn parse(s: &str) -> Option<LazyPolicy> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "eager" => Some(LazyPolicy::Eager),
+            "on_read" | "onread" | "lazy" => Some(LazyPolicy::OnRead),
+            _ => s
+                .strip_prefix("budgeted:")
+                .and_then(|k| k.parse::<usize>().ok())
+                .map(LazyPolicy::Budgeted),
+        }
+    }
+
+    /// Policy from the `DARE_LAZY_POLICY` environment variable, falling
+    /// back to `Eager`. This is how the CI matrix leg runs the whole suite
+    /// with `on_read` as the service default.
+    pub fn from_env() -> LazyPolicy {
+        std::env::var("DARE_LAZY_POLICY")
+            .ok()
+            .and_then(|s| LazyPolicy::parse(&s))
+            .unwrap_or(LazyPolicy::Eager)
+    }
+
+    /// Is any deferral active?
+    #[inline]
+    pub fn is_lazy(&self) -> bool {
+        !matches!(self, LazyPolicy::Eager)
+    }
+}
+
+impl std::fmt::Display for LazyPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LazyPolicy::Eager => write!(f, "eager"),
+            LazyPolicy::OnRead => write!(f, "on_read"),
+            LazyPolicy::Budgeted(k) => write!(f, "budgeted:{k}"),
+        }
+    }
+}
+
+/// One deferred retrain: the subtree at the recorded arena node must be
+/// rebuilt as `train_subtree(ctx, <pending leaf payload>, depth, path)`.
+/// The id vector itself lives in the node's `Cold::Leaf` payload so
+/// ancestors' `collect_ids` and the arena audit see a consistent tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PendingRetrain {
+    pub depth: usize,
+    pub path: u64,
+}
+
+/// Per-tree record of deferred retrains, keyed by arena node id. Ordered
+/// (BTreeMap) so budgeted/compactor drains are deterministic functions of
+/// the operation sequence.
+#[derive(Clone, Debug, Default)]
+pub struct DirtySet {
+    pending: BTreeMap<u32, PendingRetrain>,
+    /// Cumulative retrains deferred (telemetry: `deferred_retrains`).
+    deferred: u64,
+    /// Cumulative deferred retrains executed (telemetry: `flushed_retrains`).
+    flushed: u64,
+}
+
+impl DirtySet {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    #[inline]
+    pub fn contains(&self, nid: u32) -> bool {
+        self.pending.contains_key(&nid)
+    }
+
+    #[inline]
+    pub fn deferred_total(&self) -> u64 {
+        self.deferred
+    }
+
+    #[inline]
+    pub fn flushed_total(&self) -> u64 {
+        self.flushed
+    }
+
+    /// Iterate the pending node ids (ascending).
+    pub fn ids(&self) -> impl Iterator<Item = u32> + '_ {
+        self.pending.keys().copied()
+    }
+
+    /// Record a deferred retrain: collapse the subtree at `nid` into a
+    /// pending leaf over `ids` and remember `(depth, path)`. The freed
+    /// descendants are guaranteed pending-free by the walk contract (every
+    /// defer site gathers — and therefore flushes — the subtree first).
+    fn defer(
+        &mut self,
+        t: &mut ArenaTree,
+        data: &Dataset,
+        nid: u32,
+        ids: Vec<InstanceId>,
+        depth: usize,
+        path: u64,
+    ) {
+        // Reuse the eager collapse primitive so pending-leaf construction
+        // can never drift from the leaves the bit-exactness tests compare.
+        t.collapse_to_leaf(nid, data, ids);
+        self.record(nid, depth, path);
+    }
+
+    /// Single point of dirty-set bookkeeping: every deferral — whole-node
+    /// or fresh child slot — goes through here, so the backlog invariant
+    /// (`len == deferred − flushed`) and the double-defer guard live once.
+    fn record(&mut self, nid: u32, depth: usize, path: u64) {
+        let prev = self.pending.insert(nid, PendingRetrain { depth, path });
+        debug_assert!(prev.is_none(), "node {nid} deferred twice without a flush");
+        self.deferred += 1;
+    }
+
+    /// Execute one deferred retrain (no-op when `nid` is not pending).
+    /// Pure in the pending payload: `train_subtree` is seeded by
+    /// `(ctx.tree_seed, path)`, so *when* this runs cannot change what it
+    /// builds.
+    pub fn flush(&mut self, t: &mut ArenaTree, ctx: &TrainCtx<'_>, nid: u32) {
+        let Some(p) = self.pending.remove(&nid) else {
+            return;
+        };
+        let ids = {
+            let Cold::Leaf { ids } = &mut t.cold[nid as usize] else {
+                unreachable!("pending node {nid} lost its leaf payload");
+            };
+            std::mem::take(ids)
+        };
+        let node = train_subtree(ctx, ids, p.depth, p.path);
+        t.replace_node(nid, node);
+        self.flushed += 1;
+    }
+
+    /// Flush every pending node inside the subtree rooted at `nid`
+    /// (including `nid` itself). Freshly flushed regions are fully trained
+    /// and never contain further pendings, so the walk skips into them.
+    pub fn flush_subtree(&mut self, t: &mut ArenaTree, ctx: &TrainCtx<'_>, nid: u32) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let mut stack = vec![nid];
+        while let Some(s) = stack.pop() {
+            if self.pending.contains_key(&s) {
+                self.flush(t, ctx, s);
+                continue;
+            }
+            let si = s as usize;
+            if t.hot.left[si] != NIL {
+                stack.push(t.hot.left[si]);
+                stack.push(t.hot.right[si]);
+            }
+            if self.pending.is_empty() {
+                return;
+            }
+        }
+    }
+
+    /// Flush every pending node in the tree (ascending node-id order; order
+    /// is irrelevant to the result — see [`DirtySet::flush`]).
+    pub fn flush_all(&mut self, t: &mut ArenaTree, ctx: &TrainCtx<'_>) -> usize {
+        self.flush_budget(t, ctx, usize::MAX)
+    }
+
+    /// Flush up to `k` pending nodes; returns how many were executed.
+    pub fn flush_budget(&mut self, t: &mut ArenaTree, ctx: &TrainCtx<'_>, k: usize) -> usize {
+        let mut n = 0usize;
+        while n < k {
+            let Some((&nid, _)) = self.pending.iter().next() else {
+                break;
+            };
+            self.flush(t, ctx, nid);
+            n += 1;
+        }
+        n
+    }
+
+    /// Shared descent-with-flush: walk the hot plane from the root routed
+    /// by `feature(attr)` (the same `x ≤ v` predicate as every descent in
+    /// the crate), flushing each pending node before stepping through it.
+    fn flush_along(
+        &mut self,
+        t: &mut ArenaTree,
+        ctx: &TrainCtx<'_>,
+        feature: impl Fn(usize) -> f32,
+    ) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let mut i = t.root();
+        loop {
+            if self.pending.contains_key(&i) {
+                self.flush(t, ctx, i);
+            }
+            let ii = i as usize;
+            let l = t.hot.left[ii];
+            if l == NIL {
+                return;
+            }
+            i = if feature(t.hot.attr[ii] as usize) <= t.hot.thresh[ii] {
+                l
+            } else {
+                t.hot.right[ii]
+            };
+        }
+    }
+
+    /// Flush the pending nodes a descent of `row` passes through, so a
+    /// subsequent hot-plane prediction of `row` is bit-identical to the
+    /// eager path ("flush just that subtree before serving").
+    pub fn flush_for_row(&mut self, t: &mut ArenaTree, ctx: &TrainCtx<'_>, row: &[f32]) {
+        self.flush_along(t, ctx, |attr| row[attr]);
+    }
+
+    /// Like [`DirtySet::flush_for_row`], routed by a training instance's
+    /// stored feature values (the `delete_cost` as-if-flushed fix).
+    pub fn flush_for_instance(&mut self, t: &mut ArenaTree, ctx: &TrainCtx<'_>, id: InstanceId) {
+        let data = ctx.data;
+        self.flush_along(t, ctx, move |attr| data.x(id, attr));
+    }
+
+    /// Audit the dirty set against the arena: every entry must name an
+    /// in-bounds, live (non-free), leaf-shaped slot. Nesting is impossible
+    /// by construction (pending nodes have no children), and
+    /// `ArenaTree::validate` guarantees every non-free slot is reachable
+    /// exactly once — together: every dirty entry is a live, flushable id.
+    pub fn validate(&self, t: &ArenaTree) -> anyhow::Result<()> {
+        for &nid in self.pending.keys() {
+            let ni = nid as usize;
+            anyhow::ensure!(ni < t.len(), "dirty entry {nid} out of bounds");
+            anyhow::ensure!(
+                !matches!(t.cold[ni], Cold::Free),
+                "dirty entry {nid} names a freed slot"
+            );
+            anyhow::ensure!(
+                matches!(t.cold[ni], Cold::Leaf { .. }) && t.hot.left[ni] == NIL,
+                "dirty entry {nid} is not a pending (leaf-shaped) node"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// The deferring executor for `arena_update::{delete_with, add_with}`: the
+/// mark half of the pipeline. See the module docs for the invariants.
+pub(crate) struct LazySink<'d> {
+    pub dirty: &'d mut DirtySet,
+}
+
+impl RetrainSink for LazySink<'_> {
+    /// A walk about to inspect a pending node materializes it first, so the
+    /// control flow below is driven by eager-accurate structure.
+    fn enter(&mut self, t: &mut ArenaTree, ctx: &TrainCtx<'_>, nid: u32) {
+        if self.dirty.contains(nid) {
+            self.dirty.flush(t, ctx, nid);
+        }
+    }
+
+    /// A walk about to gather a subtree's ids materializes its pending
+    /// descendants first: the gathered *order* feeds retrain inputs and
+    /// leaf payloads, so it must match the eager tree's leaf order.
+    fn before_collect(&mut self, t: &mut ArenaTree, ctx: &TrainCtx<'_>, nid: u32) {
+        self.dirty.flush_subtree(t, ctx, nid);
+    }
+
+    fn retrain_node(
+        &mut self,
+        t: &mut ArenaTree,
+        ctx: &TrainCtx<'_>,
+        nid: u32,
+        ids: Vec<InstanceId>,
+        depth: usize,
+        path: u64,
+    ) {
+        self.dirty.defer(t, ctx.data, nid, ids, depth, path);
+    }
+
+    fn retrain_children(
+        &mut self,
+        t: &mut ArenaTree,
+        ctx: &TrainCtx<'_>,
+        nid: u32,
+        attr: usize,
+        v: f32,
+        left_ids: Vec<InstanceId>,
+        right_ids: Vec<InstanceId>,
+        depth: usize,
+        path: u64,
+    ) {
+        // The split itself moved eagerly (stage 3 already updated the cold
+        // plane's argmax); only the two child rebuilds are deferred. Slot
+        // allocation differs from the eager graft order, but nothing
+        // observable depends on slot ids (serialization, equality and
+        // predictions all walk child pointers).
+        t.free_children(nid);
+        let ls = t.alloc();
+        t.collapse_to_leaf(ls, ctx.data, left_ids);
+        let rs = t.alloc();
+        t.collapse_to_leaf(rs, ctx.data, right_ids);
+        let ni = nid as usize;
+        t.hot.attr[ni] = attr as u32;
+        t.hot.thresh[ni] = v;
+        t.hot.left[ni] = ls;
+        t.hot.right[ni] = rs;
+        self.dirty.record(ls, depth + 1, child_path(path, depth, false));
+        self.dirty.record(rs, depth + 1, child_path(path, depth, true));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parsing_and_display() {
+        assert_eq!(LazyPolicy::parse("eager"), Some(LazyPolicy::Eager));
+        assert_eq!(LazyPolicy::parse("on_read"), Some(LazyPolicy::OnRead));
+        assert_eq!(LazyPolicy::parse("ON_READ"), Some(LazyPolicy::OnRead));
+        assert_eq!(LazyPolicy::parse("budgeted:4"), Some(LazyPolicy::Budgeted(4)));
+        assert_eq!(LazyPolicy::parse("nope"), None);
+        assert_eq!(LazyPolicy::parse("budgeted:x"), None);
+        assert_eq!(LazyPolicy::Budgeted(3).to_string(), "budgeted:3");
+        assert_eq!(
+            LazyPolicy::parse(&LazyPolicy::OnRead.to_string()),
+            Some(LazyPolicy::OnRead)
+        );
+        assert!(!LazyPolicy::Eager.is_lazy());
+        assert!(LazyPolicy::OnRead.is_lazy());
+        assert!(LazyPolicy::Budgeted(0).is_lazy());
+        assert_eq!(LazyPolicy::default(), LazyPolicy::Eager);
+    }
+
+    #[test]
+    fn dirty_set_counters_start_clean() {
+        let d = DirtySet::default();
+        assert!(d.is_empty());
+        assert_eq!(d.len(), 0);
+        assert_eq!(d.deferred_total(), 0);
+        assert_eq!(d.flushed_total(), 0);
+        assert!(!d.contains(0));
+    }
+}

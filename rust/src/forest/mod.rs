@@ -7,6 +7,7 @@ pub mod arena_update;
 pub mod criterion;
 pub mod delete;
 pub mod forest;
+pub mod lazy;
 pub mod node;
 pub mod params;
 pub mod serialize;
@@ -18,6 +19,7 @@ pub mod workspace;
 pub use arena::{ArenaTree, HotPlane};
 pub use delete::{DeleteReport, RetrainEvent};
 pub use forest::{DareForest, ForestDeleteReport};
+pub use lazy::{DirtySet, LazyPolicy};
 pub use node::{Node, NodeMemory, TreeShape};
 pub use params::{MaxFeatures, Params, SplitCriterion};
 pub use tree::{structural_eq, DareTree};

@@ -306,7 +306,18 @@ fn dataset_from_json(v: &Value) -> anyhow::Result<Dataset> {
 }
 
 /// Serialize a forest (model + params + database) to a JSON string.
+///
+/// Refuses a forest with pending deferred retrains (DESIGN.md §9): baking
+/// a pending leaf into a snapshot would silently freeze a non-eager model
+/// (the dirty set is not part of the schema), so callers must
+/// `flush_all()` first — the sharded store's `snapshot()` does this
+/// automatically.
 pub fn forest_to_json(f: &DareForest) -> String {
+    assert_eq!(
+        f.dirty_subtrees(),
+        0,
+        "serializing a forest with pending deferred retrains — call flush_all() first"
+    );
     let trees: Vec<Value> = f
         .trees()
         .iter()

@@ -11,6 +11,7 @@ use crate::data::dataset::{Dataset, InstanceId};
 use crate::forest::arena::{ArenaTree, IdScratch};
 use crate::forest::arena_update;
 use crate::forest::delete::DeleteReport;
+use crate::forest::lazy::{DirtySet, LazySink};
 use crate::forest::node::{Node, NodeMemory, TreeShape};
 use crate::forest::params::Params;
 use crate::forest::train::TrainCtx;
@@ -25,6 +26,9 @@ pub struct DareTree {
     /// Number of structural updates applied (deletions + additions); feeds
     /// the per-update resampling RNG (Lemma A.1 streams).
     pub epoch: u64,
+    /// Deferred subtree retrains (empty under `LazyPolicy::Eager`;
+    /// DESIGN.md §9).
+    pub dirty: DirtySet,
 }
 
 impl DareTree {
@@ -36,6 +40,7 @@ impl DareTree {
             arena: ArenaTree::from_node(train_tree(data, params, tree_seed)),
             tree_seed,
             epoch: 0,
+            dirty: DirtySet::default(),
         }
     }
 
@@ -45,6 +50,7 @@ impl DareTree {
             arena: ArenaTree::from_node(root),
             tree_seed,
             epoch,
+            dirty: DirtySet::default(),
         }
     }
 
@@ -60,8 +66,11 @@ impl DareTree {
         self.arena.n_root()
     }
 
-    /// Delete a (still-live) instance (paper Alg. 2).
+    /// Delete a (still-live) instance (paper Alg. 2), retraining eagerly.
+    /// The tree must be fully flushed (`dirty` empty) — the forest-level
+    /// policy routing guarantees this.
     pub fn delete(&mut self, data: &Dataset, params: &Params, id: InstanceId) -> DeleteReport {
+        debug_assert!(self.dirty.is_empty(), "eager delete on a dirty tree");
         let ctx = TrainCtx {
             data,
             params,
@@ -73,8 +82,34 @@ impl DareTree {
         report
     }
 
-    /// Add an instance already pushed into `data` (§6).
+    /// Lazy delete (DESIGN.md §9): the mark half. Statistics update exactly
+    /// as [`DareTree::delete`] would (same epoch, same Lemma-A.1 RNG
+    /// streams), but subtree retrains are deferred into `self.dirty`; the
+    /// walk flushes any pending region it must pass through or gather, so
+    /// the returned report is identical to the eager one.
+    pub fn mark_delete(
+        &mut self,
+        data: &Dataset,
+        params: &Params,
+        id: InstanceId,
+    ) -> DeleteReport {
+        let ctx = TrainCtx {
+            data,
+            params,
+            tree_seed: self.tree_seed,
+        };
+        let mut report = DeleteReport::default();
+        let mut sink = LazySink {
+            dirty: &mut self.dirty,
+        };
+        arena_update::delete_with(&mut self.arena, &ctx, id, self.epoch, &mut report, &mut sink);
+        self.epoch += 1;
+        report
+    }
+
+    /// Add an instance already pushed into `data` (§6), retraining eagerly.
     pub fn add(&mut self, data: &Dataset, params: &Params, id: InstanceId) -> DeleteReport {
+        debug_assert!(self.dirty.is_empty(), "eager add on a dirty tree");
         let ctx = TrainCtx {
             data,
             params,
@@ -86,7 +121,26 @@ impl DareTree {
         report
     }
 
-    /// Dry-run retrain cost of deleting `id` (adversary signal; no mutation).
+    /// Lazy add: the mark half of [`DareTree::add`] (see
+    /// [`DareTree::mark_delete`]).
+    pub fn mark_add(&mut self, data: &Dataset, params: &Params, id: InstanceId) -> DeleteReport {
+        let ctx = TrainCtx {
+            data,
+            params,
+            tree_seed: self.tree_seed,
+        };
+        let mut report = DeleteReport::default();
+        let mut sink = LazySink {
+            dirty: &mut self.dirty,
+        };
+        arena_update::add_with(&mut self.arena, &ctx, id, self.epoch, &mut report, &mut sink);
+        self.epoch += 1;
+        report
+    }
+
+    /// Dry-run retrain cost of deleting `id` (adversary signal; no
+    /// mutation). On a dirty tree the descended path may contain pending
+    /// subtrees — use [`DareTree::delete_cost_flushed`] there.
     pub fn delete_cost(&self, data: &Dataset, params: &Params, id: InstanceId) -> u64 {
         let ctx = TrainCtx {
             data,
@@ -94,6 +148,79 @@ impl DareTree {
             tree_seed: self.tree_seed,
         };
         arena_update::delete_cost(&self.arena, &ctx, id)
+    }
+
+    /// As-if-flushed deletion cost: materialize the pending subtrees on
+    /// `id`'s path, then run the dry-run — bit-identical to the eager
+    /// tree's `delete_cost` at this moment.
+    pub fn delete_cost_flushed(
+        &mut self,
+        data: &Dataset,
+        params: &Params,
+        id: InstanceId,
+    ) -> u64 {
+        let ctx = TrainCtx {
+            data,
+            params,
+            tree_seed: self.tree_seed,
+        };
+        self.dirty.flush_for_instance(&mut self.arena, &ctx, id);
+        arena_update::delete_cost(&self.arena, &ctx, id)
+    }
+
+    /// Flush the pending subtrees a descent of `row` passes through, so a
+    /// following [`DareTree::predict`] serves the eager-exact value.
+    pub fn flush_for_row(&mut self, data: &Dataset, params: &Params, row: &[f32]) {
+        let ctx = TrainCtx {
+            data,
+            params,
+            tree_seed: self.tree_seed,
+        };
+        self.dirty.flush_for_row(&mut self.arena, &ctx, row);
+    }
+
+    /// Execute up to `k` deferred retrains; returns how many ran.
+    pub fn flush_budget(&mut self, data: &Dataset, params: &Params, k: usize) -> usize {
+        let ctx = TrainCtx {
+            data,
+            params,
+            tree_seed: self.tree_seed,
+        };
+        self.dirty.flush_budget(&mut self.arena, &ctx, k)
+    }
+
+    /// Execute every deferred retrain; afterwards the tree is bit-identical
+    /// to its eager twin (structure, bytes, predictions).
+    pub fn flush_all(&mut self, data: &Dataset, params: &Params) -> usize {
+        let ctx = TrainCtx {
+            data,
+            params,
+            tree_seed: self.tree_seed,
+        };
+        self.dirty.flush_all(&mut self.arena, &ctx)
+    }
+
+    /// Pending deferred retrains.
+    #[inline]
+    pub fn dirty_len(&self) -> usize {
+        self.dirty.len()
+    }
+
+    /// Cumulative retrains deferred / executed (telemetry).
+    #[inline]
+    pub fn deferred_retrains(&self) -> u64 {
+        self.dirty.deferred_total()
+    }
+    #[inline]
+    pub fn flushed_retrains(&self) -> u64 {
+        self.dirty.flushed_total()
+    }
+
+    /// Full consistency audit: the arena invariants plus the dirty set
+    /// (every entry live, leaf-shaped, flushable).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.arena.validate()?;
+        self.dirty.validate(&self.arena)
     }
 
     /// Positive-class probability for one feature row (hot-plane descent).

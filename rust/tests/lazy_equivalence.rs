@@ -1,0 +1,246 @@
+//! ISSUE 4: deferred-unlearning exactness — the lazy pipeline's contract
+//! (DESIGN.md §9) as an executable grid over seeds × d_rmax × criteria ×
+//! policies:
+//!
+//! 1. **Flush-all fixpoint**: after any seeded op sequence, flushing every
+//!    deferred retrain yields a forest bit-identical to the eager oracle —
+//!    per-tree structure, serialized snapshot *bytes*, and predictions.
+//! 2. **Serve-time exactness**: every prediction and `delete_cost` served
+//!    under `on_read`/`budgeted` (flush-on-read) equals the eager forest's
+//!    value at the moment of the query — f32/u64 `==`, no tolerances.
+//! 3. **Flush-order invariance**: retrains are path-seeded, so draining
+//!    the dirty set in different orders (row-path flushes vs. budgeted
+//!    drains vs. flush-all) lands on byte-identical forests.
+//!
+//! The sharded-store and service layers are covered by `op_fuzz`'s lazy
+//! leg and the coordinator tests; this grid pins the forest-level core.
+
+use dare::data::dataset::Dataset;
+use dare::forest::serialize::forest_to_json;
+use dare::forest::{DareForest, LazyPolicy, MaxFeatures, Params, SplitCriterion};
+use dare::util::prop::{gen_feature_column, gen_labels};
+use dare::util::rng::{mix_seed, Rng};
+
+fn random_dataset(rng: &mut Rng, n: usize, p: usize) -> Dataset {
+    let cols: Vec<Vec<f32>> = (0..p)
+        .map(|_| gen_feature_column(rng, n, 0.3, 4.0))
+        .collect();
+    let labels = gen_labels(rng, n, 0.25 + 0.5 * rng.f64());
+    Dataset::from_columns(cols, labels)
+}
+
+fn grid_params(d_rmax: usize, criterion: SplitCriterion) -> Params {
+    Params {
+        n_trees: 2,
+        max_depth: 6,
+        k: 4,
+        d_rmax,
+        criterion,
+        max_features: MaxFeatures::Sqrt,
+        ..Default::default()
+    }
+}
+
+/// Drive an eager forest and a lazy forest through the same seeded op
+/// sequence, asserting serve-time exactness along the way, then flush and
+/// assert the bit-identical fixpoint.
+fn run_case(seed: u64, d_rmax: usize, criterion: SplitCriterion, policy: LazyPolicy) {
+    let mut rng = Rng::new(mix_seed(&[seed, 0x1A2_1]));
+    let n = 110 + rng.index(60);
+    let p = 4 + rng.index(2);
+    let data = random_dataset(&mut rng, n, p);
+    let params = grid_params(d_rmax, criterion);
+    let forest_seed = rng.next_u64();
+
+    let mut eager = DareForest::fit(data.clone(), &params, forest_seed);
+    let mut lazy = DareForest::fit(data, &params, forest_seed);
+    lazy.set_lazy_policy(policy);
+    assert_eq!(lazy.lazy_policy(), policy);
+
+    let ops = 30 + rng.index(12);
+    for op in 0..ops {
+        match rng.index(8) {
+            0..=4 if eager.n_alive() > 20 => {
+                let live = eager.live_ids();
+                let id = live[rng.index(live.len())];
+                let re = eager.delete_seq(id).unwrap();
+                let rl = lazy.delete_seq(id).unwrap();
+                // The mark phase reports the identical retrain events and
+                // resample counts even though the work is deferred.
+                for (a, b) in re.per_tree.iter().zip(&rl.per_tree) {
+                    assert_eq!(a.retrain_events, b.retrain_events, "op {op}: events");
+                    assert_eq!(
+                        a.thresholds_resampled, b.thresholds_resampled,
+                        "op {op}: resamples"
+                    );
+                }
+                assert_eq!(re.cost(), rl.cost(), "op {op}: reported cost");
+            }
+            5 => {
+                let row: Vec<f32> = (0..p).map(|_| rng.range_f32(-4.0, 4.0)).collect();
+                let label = rng.bernoulli(0.5) as u8;
+                assert_eq!(eager.add(&row, label), lazy.add(&row, label), "op {op}: add id");
+            }
+            6 => {
+                // Serve-time cost exactness (as-if-flushed).
+                let live = eager.live_ids();
+                let id = live[rng.index(live.len())];
+                assert_eq!(
+                    lazy.delete_cost_flushed(id),
+                    eager.delete_cost(id),
+                    "op {op}: served delete_cost diverged from eager"
+                );
+            }
+            _ => {
+                // Serve-time prediction exactness (flush-on-read), mixing
+                // live rows and random probes.
+                let live = eager.live_ids();
+                let rows: Vec<Vec<f32>> = (0..1 + rng.index(12))
+                    .map(|_| {
+                        if rng.bernoulli(0.5) {
+                            eager.data().row(live[rng.index(live.len())])
+                        } else {
+                            (0..p).map(|_| rng.range_f32(-5.0, 5.0)).collect()
+                        }
+                    })
+                    .collect();
+                assert_eq!(
+                    lazy.predict_proba_rows_flushed(&rows),
+                    eager.predict_proba_rows(&rows),
+                    "op {op}: served predictions diverged from eager"
+                );
+            }
+        }
+        for t in lazy.trees() {
+            t.validate().unwrap_or_else(|e| panic!("op {op}: lazy tree invalid: {e}"));
+        }
+        assert_eq!(lazy.n_alive(), eager.n_alive(), "op {op}: live counts");
+    }
+
+    // The fixpoint: flush everything → bit-identical to the eager path.
+    let flushed = lazy.flush_all();
+    assert_eq!(lazy.dirty_subtrees(), 0);
+    assert!(
+        lazy.flushed_retrains() >= flushed as u64,
+        "flush accounting went backwards"
+    );
+    for (a, b) in eager.trees().iter().zip(lazy.trees()) {
+        assert!(
+            a.structural_matches(b),
+            "seed {seed} d_rmax {d_rmax} {criterion:?} {policy:?}: structure diverged"
+        );
+        assert_eq!(a.epoch, b.epoch, "epoch counters diverged");
+    }
+    assert_eq!(
+        forest_to_json(&eager),
+        forest_to_json(&lazy),
+        "seed {seed} d_rmax {d_rmax} {criterion:?} {policy:?}: serialized bytes diverged"
+    );
+    let probe: Vec<Vec<f32>> = eager
+        .live_ids()
+        .iter()
+        .take(40)
+        .map(|&i| eager.data().row(i))
+        .collect();
+    assert_eq!(eager.predict_proba_rows(&probe), lazy.predict_proba_rows(&probe));
+}
+
+#[test]
+fn lazy_flush_all_is_bit_identical_to_eager_across_the_grid() {
+    for seed in [1u64, 2, 3] {
+        for d_rmax in [0usize, 2] {
+            for criterion in [SplitCriterion::Gini, SplitCriterion::Entropy] {
+                for policy in [LazyPolicy::OnRead, LazyPolicy::Budgeted(2)] {
+                    run_case(seed, d_rmax, criterion, policy);
+                }
+            }
+        }
+    }
+}
+
+/// Flush order cannot change the result: drain the same dirty state three
+/// different ways (flush-all, budgeted trickle, read-path row flushes then
+/// flush-all) and require byte-identical forests.
+#[test]
+fn flush_order_is_irrelevant() {
+    let mut rng = Rng::new(0xF1_005);
+    let data = random_dataset(&mut rng, 160, 5);
+    let params = grid_params(1, SplitCriterion::Gini);
+
+    let build_marked = |policy: LazyPolicy| {
+        let mut f = DareForest::fit(data.clone(), &params, 99);
+        f.set_lazy_policy(policy);
+        let mut r = Rng::new(0xBEEF);
+        for _ in 0..25 {
+            let live = f.live_ids();
+            let id = live[r.index(live.len())];
+            f.delete_seq(id).unwrap();
+        }
+        f
+    };
+
+    let mut a = build_marked(LazyPolicy::OnRead);
+    let mut b = build_marked(LazyPolicy::OnRead);
+    let mut c = build_marked(LazyPolicy::OnRead);
+    assert_eq!(a.dirty_subtrees(), b.dirty_subtrees());
+
+    // (a) one shot
+    a.flush_all();
+    // (b) budgeted trickle, one retrain at a time
+    while b.dirty_subtrees() > 0 {
+        b.compact(1);
+    }
+    // (c) read-driven: flush along live-row paths first, then finish
+    let rows: Vec<Vec<f32>> = c.live_ids().iter().take(30).map(|&i| c.data().row(i)).collect();
+    c.predict_proba_rows_flushed(&rows);
+    c.flush_all();
+
+    let ja = forest_to_json(&a);
+    assert_eq!(ja, forest_to_json(&b), "budgeted drain diverged from flush-all");
+    assert_eq!(ja, forest_to_json(&c), "read-driven drain diverged from flush-all");
+}
+
+/// The deferral counters tell a coherent story: marks raise
+/// `dirty_subtrees`/`deferred_retrains`, reads and flushes lower the
+/// backlog, and eager mode never defers.
+#[test]
+fn deferral_counters_track_the_backlog() {
+    let mut rng = Rng::new(0xC0DE);
+    let data = random_dataset(&mut rng, 150, 5);
+    let params = grid_params(0, SplitCriterion::Gini);
+
+    let mut eager = DareForest::fit(data.clone(), &params, 7);
+    let mut lazy = DareForest::fit(data, &params, 7);
+    lazy.set_lazy_policy(LazyPolicy::OnRead);
+
+    for _ in 0..40 {
+        let live = eager.live_ids();
+        let id = live[rng.index(live.len())];
+        eager.delete_seq(id).unwrap();
+        lazy.delete_seq(id).unwrap();
+    }
+    assert_eq!(eager.dirty_subtrees(), 0, "eager mode must never defer");
+    assert_eq!(eager.deferred_retrains(), 0);
+    assert!(
+        lazy.deferred_retrains() > 0,
+        "30 deletions should defer at least one retrain"
+    );
+    assert_eq!(
+        lazy.dirty_subtrees() as u64,
+        lazy.deferred_retrains() - lazy.flushed_retrains(),
+        "backlog must equal deferred minus flushed"
+    );
+    let backlog = lazy.dirty_subtrees();
+    let drained = lazy.flush_all();
+    assert_eq!(drained, backlog);
+    assert_eq!(lazy.dirty_subtrees(), 0);
+    assert_eq!(lazy.deferred_retrains(), lazy.flushed_retrains());
+    // Switching back to eager on a clean forest keeps everything exact.
+    lazy.set_lazy_policy(LazyPolicy::Eager);
+    let live = lazy.live_ids();
+    lazy.delete_seq(live[0]).unwrap();
+    eager.delete_seq(live[0]).unwrap();
+    for (a, b) in eager.trees().iter().zip(lazy.trees()) {
+        assert!(a.structural_matches(b));
+    }
+}

@@ -5,14 +5,19 @@
 //!
 //! Two legs:
 //!
-//! 1. **Three-way differential** (≥ 20 seeds, env-overridable): every op is
+//! 1. **Four-way differential** (≥ 20 seeds, env-overridable): every op is
 //!    applied through (a) the boxed oracle path (`forest::delete` over
 //!    `Node` trees, per-tree seeds/epochs replicated from `DareForest`),
-//!    (b) the arena path (`DareForest`), and (c) the sharded coordinator
-//!    store (`coordinator::shards::ShardedForest`). After every mutation all
-//!    three must agree bit-exactly: tree structures, `DeleteReport`s,
-//!    deletion-cost dry runs, live counts, and predicted probabilities
-//!    (f32 `==`, not tolerances).
+//!    (b) the arena path (`DareForest`), (c) the sharded coordinator
+//!    store (`coordinator::shards::ShardedForest`), and (d) a **lazy**
+//!    `DareForest` (`LazyPolicy::OnRead` or `Budgeted`, per seed). After
+//!    every mutation legs (a)–(c) must agree bit-exactly: tree structures,
+//!    `DeleteReport`s, deletion-cost dry runs, live counts, and predicted
+//!    probabilities (f32 `==`, not tolerances). The lazy leg must agree on
+//!    every *served* value (reports, as-if-flushed costs, flush-on-read
+//!    predictions) at the moment of the query, and on full structure +
+//!    serialized bytes whenever its dirty set drains — the fuzz alphabet
+//!    includes explicit `flush` / `compact` ops to exercise exactly that.
 //! 2. **Scratch-retrain exactness** (the paper's theorem): in the
 //!    exhaustive regime (k ≥ all candidates, all attributes, no random
 //!    layer — where threshold *sampling* is degenerate and the theorem is
@@ -33,8 +38,9 @@ use dare::data::dataset::Dataset;
 use dare::forest::delete as boxed;
 use dare::forest::delete::DeleteReport;
 use dare::forest::forest::tree_seed;
+use dare::forest::serialize::forest_to_json;
 use dare::forest::train::{train, TrainCtx, ROOT_PATH};
-use dare::forest::{DareForest, MaxFeatures, Node, Params};
+use dare::forest::{DareForest, LazyPolicy, MaxFeatures, Node, Params};
 use dare::util::prop::{gen_feature_column, gen_labels};
 use dare::util::rng::{mix_seed, Rng};
 
@@ -68,10 +74,19 @@ struct Harness {
     arena: DareForest,
     /// (c) the sharded coordinator store.
     sharded: ShardedForest,
+    /// (d) the deferred pipeline (DESIGN.md §9): marks on mutation,
+    /// flushes on read / explicit flush ops.
+    lazy: DareForest,
 }
 
 impl Harness {
-    fn new(data: Dataset, params: Params, forest_seed: u64, n_shards: usize) -> Harness {
+    fn new(
+        data: Dataset,
+        params: Params,
+        forest_seed: u64,
+        n_shards: usize,
+        policy: LazyPolicy,
+    ) -> Harness {
         let tree_seeds: Vec<u64> = (0..params.n_trees)
             .map(|t| tree_seed(forest_seed, t))
             .collect();
@@ -89,6 +104,8 @@ impl Harness {
         let arena = DareForest::fit(data.clone(), &params, forest_seed);
         let sharded =
             ShardedForest::new(DareForest::fit(data.clone(), &params, forest_seed), n_shards);
+        let mut lazy = DareForest::fit(data.clone(), &params, forest_seed);
+        lazy.set_lazy_policy(policy);
         let epochs = vec![0u64; boxed_trees.len()];
         Harness {
             params,
@@ -98,6 +115,7 @@ impl Harness {
             epochs,
             arena,
             sharded,
+            lazy,
         }
     }
 
@@ -105,11 +123,15 @@ impl Harness {
         self.boxed_data.n_alive()
     }
 
-    /// All three tree sets must be structurally identical, and the live
-    /// counts must agree everywhere.
+    /// All three eager tree sets must be structurally identical, the live
+    /// counts must agree everywhere, and the lazy leg must stay internally
+    /// consistent (arena + dirty-set audit). The lazy leg's *structure* is
+    /// asserted only when its dirty set is empty — mid-deferral its pending
+    /// leaves intentionally differ from the eager trees.
     fn check_structure(&self, when: &str) {
         assert_eq!(self.arena.n_alive(), self.boxed_data.n_alive(), "{when}: arena n_alive");
         assert_eq!(self.sharded.n_alive(), self.boxed_data.n_alive(), "{when}: sharded n_alive");
+        assert_eq!(self.lazy.n_alive(), self.boxed_data.n_alive(), "{when}: lazy n_alive");
         for (t, node) in self.boxed_trees.iter().enumerate() {
             assert!(
                 self.arena.trees()[t].matches_root(node),
@@ -122,6 +144,29 @@ impl Harness {
                 "{when}: sharded tree {gt} diverged from the arena path"
             );
         });
+        for (t, tree) in self.lazy.trees().iter().enumerate() {
+            tree.validate()
+                .unwrap_or_else(|e| panic!("{when}: lazy tree {t} inconsistent: {e}"));
+        }
+        if self.lazy.dirty_subtrees() == 0 {
+            self.check_lazy_flushed(when);
+        }
+    }
+
+    /// With an empty dirty set the lazy leg must be bit-identical to the
+    /// eager path: structure AND serialized bytes.
+    fn check_lazy_flushed(&self, when: &str) {
+        for (t, node) in self.boxed_trees.iter().enumerate() {
+            assert!(
+                self.lazy.trees()[t].matches_root(node),
+                "{when}: flushed lazy tree {t} diverged from the boxed oracle"
+            );
+        }
+        assert_eq!(
+            forest_to_json(&self.lazy),
+            forest_to_json(&self.arena),
+            "{when}: flushed lazy forest serialized differently from the eager path"
+        );
     }
 
     fn delete(&mut self, id: u32) {
@@ -143,12 +188,17 @@ impl Harness {
         let ra = self.arena.delete_seq(id).unwrap();
         // (c) sharded (a single-id batch is one deletion)
         let (rs, skipped) = self.sharded.delete_batch(&[id]);
+        // (d) lazy: the mark phase must report the identical retrain
+        // events/costs even though the retrains themselves are deferred.
+        let rl = self.lazy.delete_seq(id).unwrap();
         assert_eq!(skipped, 0, "live id must not be skipped");
         assert_eq!(ra.per_tree.len(), boxed_reports.len());
         assert_eq!(rs.per_tree.len(), boxed_reports.len());
+        assert_eq!(rl.per_tree.len(), boxed_reports.len());
         for (t, rb) in boxed_reports.iter().enumerate() {
             assert_reports_eq(rb, &ra.per_tree[t], &format!("delete {id}, tree {t} (arena)"));
             assert_reports_eq(rb, &rs.per_tree[t], &format!("delete {id}, tree {t} (sharded)"));
+            assert_reports_eq(rb, &rl.per_tree[t], &format!("delete {id}, tree {t} (lazy)"));
         }
         self.check_structure(&format!("after delete {id}"));
     }
@@ -166,15 +216,17 @@ impl Harness {
             boxed::add(&ctx, &mut self.boxed_trees[t], id, 0, ROOT_PATH, self.epochs[t], &mut r);
             self.epochs[t] += 1;
         }
-        // (b) arena, (c) sharded
+        // (b) arena, (c) sharded, (d) lazy
         let id_a = self.arena.add(row, label);
         let id_s = self.sharded.add(row, label).unwrap();
+        let id_l = self.lazy.add(row, label);
         assert_eq!(id, id_a, "arena assigned a different instance id");
         assert_eq!(id, id_s, "sharded store assigned a different instance id");
+        assert_eq!(id, id_l, "lazy forest assigned a different instance id");
         self.check_structure(&format!("after add {id}"));
     }
 
-    fn check_delete_cost(&self, id: u32) {
+    fn check_delete_cost(&mut self, id: u32) {
         let c_boxed: u64 = (0..self.boxed_trees.len())
             .map(|t| {
                 let ctx = TrainCtx {
@@ -191,9 +243,15 @@ impl Harness {
             c_boxed,
             "delete_cost {id} (sharded)"
         );
+        // lazy: as-if-flushed — must serve the eager value at query time
+        assert_eq!(
+            self.lazy.delete_cost_flushed(id),
+            c_boxed,
+            "delete_cost {id} (lazy, as-if-flushed)"
+        );
     }
 
-    fn check_predict(&self, rows: &[Vec<f32>]) {
+    fn check_predict(&mut self, rows: &[Vec<f32>]) {
         let nt = self.boxed_trees.len() as f32;
         let expected: Vec<f32> = rows
             .iter()
@@ -204,8 +262,10 @@ impl Harness {
             .collect();
         let a = self.arena.predict_proba_rows(rows);
         let s = self.sharded.predict_proba_rows(rows);
+        let l = self.lazy.predict_proba_rows_flushed(rows);
         assert_eq!(expected, a, "arena predictions diverged from the boxed oracle");
         assert_eq!(a, s, "sharded predictions diverged from the arena path");
+        assert_eq!(a, l, "lazy flush-on-read predictions diverged from the eager path");
     }
 }
 
@@ -234,12 +294,19 @@ fn run_case(seed: u64) {
         ..Default::default()
     };
     let n_shards = 1 + rng.index(4);
-    let mut h = Harness::new(data, params, rng.next_u64(), n_shards);
+    // Alternate lazy policies across the pinned seed list so both deferral
+    // modes fuzz under every parameter mix.
+    let policy = if seed % 2 == 0 {
+        LazyPolicy::OnRead
+    } else {
+        LazyPolicy::Budgeted(1 + (seed as usize % 3))
+    };
+    let mut h = Harness::new(data, params, rng.next_u64(), n_shards, policy);
     h.check_structure("fresh");
 
     let ops = 14 + rng.index(8);
     for op in 0..ops {
-        match rng.index(10) {
+        match rng.index(12) {
             0..=4 if h.n_alive() > 12 => {
                 let live = h.boxed_data.live_ids();
                 let id = live[rng.index(live.len())];
@@ -255,6 +322,21 @@ fn run_case(seed: u64) {
                 let live = h.boxed_data.live_ids();
                 let id = live[rng.index(live.len())];
                 h.check_delete_cost(id);
+            }
+            9 => {
+                // Explicit full flush: afterwards the lazy leg must be
+                // bit-identical to the eager path (structure AND bytes).
+                h.lazy.flush_all();
+                assert_eq!(h.lazy.dirty_subtrees(), 0);
+                h.check_lazy_flushed(&format!("after flush (op {op})"));
+            }
+            10 => {
+                // Partial compaction: a bounded drain must keep the trees
+                // internally consistent, never change logical state.
+                h.lazy.compact(1 + rng.index(2));
+                for t in h.lazy.trees() {
+                    t.validate().unwrap();
+                }
             }
             _ => {
                 // Mix live rows and random probes; sizes straddle the
@@ -281,6 +363,10 @@ fn run_case(seed: u64) {
             });
         }
     }
+    // End of sequence: drain the lazy leg completely — flush-all after ANY
+    // op sequence must reproduce the eager forest bit for bit.
+    h.lazy.flush_all();
+    h.check_lazy_flushed("after final flush");
 }
 
 #[test]
@@ -314,7 +400,9 @@ fn random_deletion_sequences_match_scratch_retrain_exhaustively() {
         };
         let forest_seed = rng.next_u64();
         let mut arena = DareForest::fit(data.clone(), &params, forest_seed);
-        let sharded = ShardedForest::new(DareForest::fit(data, &params, forest_seed), 2);
+        let sharded = ShardedForest::new(DareForest::fit(data.clone(), &params, forest_seed), 2);
+        let mut lazy = DareForest::fit(data, &params, forest_seed);
+        lazy.set_lazy_policy(LazyPolicy::OnRead);
         let deletions = 10 + rng.index(6);
         for step in 0..deletions {
             if arena.n_alive() <= 15 {
@@ -325,6 +413,7 @@ fn random_deletion_sequences_match_scratch_retrain_exhaustively() {
             arena.delete_seq(id).unwrap();
             let (_, skipped) = sharded.delete_batch(&[id]);
             assert_eq!(skipped, 0);
+            lazy.delete_seq(id).unwrap();
 
             for (t, tree) in arena.trees().iter().enumerate() {
                 let ctx = TrainCtx {
@@ -347,5 +436,14 @@ fn random_deletion_sequences_match_scratch_retrain_exhaustively() {
             });
         }
         sharded.validate().unwrap();
+        // Lazy leg: deferring every retrain and flushing at the end must
+        // land on the same scratch-identical forest.
+        lazy.flush_all();
+        for (t, tree) in lazy.trees().iter().enumerate() {
+            assert!(
+                tree.structural_matches(&arena.trees()[t]),
+                "seed {seed}: flushed lazy tree {t} != eager tree"
+            );
+        }
     }
 }

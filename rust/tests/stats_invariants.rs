@@ -1,0 +1,149 @@
+//! ISSUE 4: structural property tests over churn — for any seeded op
+//! sequence under any deferral policy, every tree must satisfy:
+//!
+//! - **Count soundness**: each arena node's `n`/`n_pos` equals the size /
+//!   positive-label sum over the leaf id lists below it
+//!   (`ArenaTree::validate_counts`: leaf-level label sums, plus the
+//!   parent-child sum checks of `validate`).
+//! - **Leak-freedom**: live slots + free-list slots partition the arena
+//!   exactly (no slot leaked, none reachable twice).
+//! - **Dirty-set soundness**: every deferred-retrain entry names a live,
+//!   leaf-shaped, flushable node (`DareTree::validate`), and the backlog
+//!   arithmetic (`dirty == deferred - flushed`) holds.
+//! - **Coverage**: the union of each tree's leaves is exactly the live
+//!   instance set — deferral must never lose or duplicate an instance.
+
+use dare::data::dataset::Dataset;
+use dare::forest::{DareForest, LazyPolicy, MaxFeatures, Params};
+use dare::util::prop::{gen_feature_column, gen_labels};
+use dare::util::rng::{mix_seed, Rng};
+
+fn random_dataset(rng: &mut Rng, n: usize, p: usize) -> Dataset {
+    let cols: Vec<Vec<f32>> = (0..p)
+        .map(|_| gen_feature_column(rng, n, 0.25, 3.5))
+        .collect();
+    let labels = gen_labels(rng, n, 0.3 + 0.4 * rng.f64());
+    Dataset::from_columns(cols, labels)
+}
+
+fn check_forest(f: &DareForest, when: &str) {
+    let mut live = f.data().live_ids();
+    live.sort_unstable();
+    for (t, tree) in f.trees().iter().enumerate() {
+        // arena + dirty-set audit
+        tree.validate()
+            .unwrap_or_else(|e| panic!("{when}: tree {t} invalid: {e}"));
+        // leaf-level label sums against the dataset
+        tree.arena
+            .validate_counts(f.data())
+            .unwrap_or_else(|e| panic!("{when}: tree {t} count audit failed: {e}"));
+        // root count == live instances
+        assert_eq!(
+            tree.n() as usize,
+            f.n_alive(),
+            "{when}: tree {t} root count != live instances"
+        );
+        // leaf union == live set (order-insensitive)
+        let mut ids = Vec::with_capacity(live.len());
+        tree.arena.collect_ids(tree.arena.root(), None, &mut ids);
+        ids.sort_unstable();
+        assert_eq!(ids, live, "{when}: tree {t} lost or duplicated instances");
+        // backlog arithmetic
+        assert_eq!(
+            tree.dirty_len() as u64,
+            tree.deferred_retrains() - tree.flushed_retrains(),
+            "{when}: tree {t} backlog != deferred - flushed"
+        );
+    }
+}
+
+fn churn_case(seed: u64, policy: LazyPolicy) {
+    let mut rng = Rng::new(mix_seed(&[seed, 0x57A7_5]));
+    let n = 120 + rng.index(80);
+    let p = 4 + rng.index(3);
+    let data = random_dataset(&mut rng, n, p);
+    let params = Params {
+        n_trees: 3,
+        max_depth: 7,
+        k: 4,
+        d_rmax: rng.index(3),
+        max_features: MaxFeatures::Sqrt,
+        ..Default::default()
+    };
+    let mut f = DareForest::fit(data, &params, rng.next_u64());
+    f.set_lazy_policy(policy);
+    check_forest(&f, "fresh");
+
+    for op in 0..45 {
+        match rng.index(10) {
+            0..=5 if f.n_alive() > 25 => {
+                let live = f.live_ids();
+                let id = live[rng.index(live.len())];
+                f.delete_seq(id).unwrap();
+            }
+            6..=7 | 0..=5 => {
+                let row: Vec<f32> = (0..p).map(|_| rng.range_f32(-4.0, 4.0)).collect();
+                f.add(&row, rng.bernoulli(0.5) as u8);
+            }
+            8 => {
+                // reads flush lazily — invariants must survive the mix
+                let live = f.live_ids();
+                let rows: Vec<Vec<f32>> = live
+                    .iter()
+                    .take(5)
+                    .map(|&i| f.data().row(i))
+                    .collect();
+                f.predict_proba_rows_flushed(&rows);
+            }
+            _ => {
+                f.compact(1);
+            }
+        }
+        if op % 9 == 0 {
+            check_forest(&f, &format!("seed {seed} {policy:?} op {op}"));
+        }
+    }
+    check_forest(&f, &format!("seed {seed} {policy:?} end"));
+    f.flush_all();
+    check_forest(&f, &format!("seed {seed} {policy:?} flushed"));
+    assert_eq!(f.dirty_subtrees(), 0);
+}
+
+#[test]
+fn invariants_hold_under_churn_for_every_policy() {
+    for seed in [1u64, 2, 3, 4] {
+        for policy in [
+            LazyPolicy::Eager,
+            LazyPolicy::OnRead,
+            LazyPolicy::Budgeted(2),
+        ] {
+            churn_case(seed, policy);
+        }
+    }
+}
+
+/// Deleting everything down to (near) nothing and flushing must leave
+/// minimal, leak-free, fully-consistent trees.
+#[test]
+fn drain_to_empty_stays_consistent() {
+    let mut rng = Rng::new(77);
+    let data = random_dataset(&mut rng, 80, 4);
+    let params = Params {
+        n_trees: 2,
+        max_depth: 6,
+        k: 3,
+        ..Default::default()
+    };
+    let mut f = DareForest::fit(data, &params, 5);
+    f.set_lazy_policy(LazyPolicy::OnRead);
+    while f.n_alive() > 1 {
+        let live = f.live_ids();
+        f.delete_seq(live[0]).unwrap();
+    }
+    check_forest(&f, "drained");
+    f.flush_all();
+    check_forest(&f, "drained+flushed");
+    for tree in f.trees() {
+        assert_eq!(tree.n(), 1);
+    }
+}

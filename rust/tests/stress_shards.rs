@@ -200,11 +200,27 @@ fn concurrent_churn_leaves_every_shard_consistent() {
     // exactly the live id set (ShardedForest::validate checks both).
     svc.sharded().validate().unwrap();
 
-    // every shard mutated at least once and epochs agree across shards
-    // (every mutation touches every shard; seqlock: one mutation = +2, and
-    // a quiesced store must read even)
+    // every shard mutated at least once and a quiesced store reads even
+    // epochs (seqlock). Exact per-shard agreement (+2 per mutation) holds
+    // only under eager mode: under a lazy policy (the DARE_LAZY_POLICY
+    // matrix leg) flush-on-read and the compactor legitimately add +2
+    // bumps to exactly the shards they retrained, so epochs may diverge
+    // upward — but never below the mutation count and never odd.
     let epochs = svc.sharded().shard_epochs();
-    assert!(epochs.iter().all(|&e| e == epochs[0] && e > 0), "epochs {epochs:?}");
-    assert_eq!(epochs[0] % 2, 0, "store must be epoch-stable after quiescence");
-    assert_eq!(epochs[0], 2 * mutations, "per-shard epoch must count mutations");
+    assert!(epochs.iter().all(|&e| e > 0), "epochs {epochs:?}");
+    assert!(
+        epochs.iter().all(|&e| e % 2 == 0),
+        "store must be epoch-stable after quiescence: {epochs:?}"
+    );
+    if svc.lazy_policy().is_lazy() {
+        assert!(
+            epochs.iter().all(|&e| e >= 2 * mutations),
+            "lazy epochs can only add flush bumps on top of mutations: {epochs:?}"
+        );
+    } else {
+        assert!(
+            epochs.iter().all(|&e| e == 2 * mutations),
+            "per-shard epoch must count mutations: {epochs:?}"
+        );
+    }
 }
