@@ -1,14 +1,19 @@
 //! Continual learning (paper §6): a streaming workload that *adds* new
 //! observations and *removes* stale ones, keeping the model current without
-//! ever retraining from scratch.
+//! ever retraining from scratch. The streamed model is then installed in
+//! the serving registry and inspected through the typed wire client
+//! (`Client::stats` / `Client::add` / `Client::delete_cost`, DESIGN.md §10).
 //!
 //!     cargo run --release --offline --example continual_learning
 
+use dare::coordinator::{serve, Client, ServiceConfig, UnlearningService, DEFAULT_MODEL};
 use dare::data::registry::find;
 use dare::data::split::train_test;
 use dare::forest::{DareForest, Params};
+use dare::util::json::Value;
 use dare::util::rng::Rng;
 use dare::util::timer::Stopwatch;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let info = find("synthetic").expect("corpus dataset");
@@ -79,5 +84,35 @@ fn main() -> anyhow::Result<()> {
     // the model must stay healthy through the stream
     assert!(acc_end > acc0 - 0.08, "accuracy collapsed during streaming");
     println!("continual-learning stream complete");
+
+    // --- serve the streamed model and keep streaming over the wire ----------
+    let svc = UnlearningService::new(forest, ServiceConfig::default());
+    let svc_srv = Arc::clone(&svc);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let server = std::thread::spawn(move || {
+        serve(svc_srv, "127.0.0.1:0", 2, move |a| {
+            tx.send(a).unwrap();
+        })
+    });
+    let addr = rx.recv()?;
+    let mut client = Client::connect(addr)?;
+    // one more window slide, now through the typed client
+    let src = rng.index(pool.n_total());
+    let fresh = client.add(DEFAULT_MODEL, &pool.row(src as u32), pool.y(src as u32))?;
+    let oldest = window.pop_front().expect("window is non-empty");
+    println!(
+        "wire slide: +{fresh}, -{oldest} (dry-run cost {} instances)",
+        client.delete_cost(DEFAULT_MODEL, oldest)?
+    );
+    client.delete(DEFAULT_MODEL, &[oldest])?;
+    let stats = client.stats(DEFAULT_MODEL)?;
+    println!(
+        "served window: {} live instances across {} trees ({} shards)",
+        stats.get("n_alive").and_then(Value::as_u64).unwrap_or(0),
+        stats.get("n_trees").and_then(Value::as_u64).unwrap_or(0),
+        stats.get("n_shards").and_then(Value::as_u64).unwrap_or(0),
+    );
+    client.shutdown()?;
+    server.join().unwrap()?;
     Ok(())
 }

@@ -1,15 +1,19 @@
 //! Dataset cleaning (paper §6 "Dataset Cleaning"): poison a fraction of the
 //! training labels, watch the model degrade, then *unlearn* exactly the
 //! poisoned instances — without retraining from scratch — and watch the
-//! metric recover.
+//! metric recover. The cleanup itself is filed as ONE batched deletion
+//! through the typed wire client (`Client::delete`, DESIGN.md §10), the
+//! way a production incident-response job would do it.
 //!
 //!     cargo run --release --offline --example data_cleaning
 
+use dare::coordinator::{serve, Client, ServiceConfig, UnlearningService, DEFAULT_MODEL};
 use dare::data::registry::find;
 use dare::data::split::train_test;
 use dare::forest::{DareForest, Params};
 use dare::util::rng::Rng;
 use dare::util::timer::time;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let info = find("twitter").expect("corpus dataset");
@@ -47,8 +51,8 @@ fn main() -> anyhow::Result<()> {
         .metric
         .score(&clean.predict_proba_dataset(&test), &test_ys);
 
-    // --- poisoned model ------------------------------------------------------
-    let (mut forest, fit_secs) = time(|| DareForest::fit(poisoned_train, &params, 21));
+    // --- poisoned model, served ----------------------------------------------
+    let (forest, fit_secs) = time(|| DareForest::fit(poisoned_train, &params, 21));
     let poisoned_score = info
         .metric
         .score(&forest.predict_proba_dataset(&test), &test_ys);
@@ -56,20 +60,34 @@ fn main() -> anyhow::Result<()> {
         "clean {m}: {clean_score:.4} | poisoned ({n_poison} labels flipped) {m}: {poisoned_score:.4} | fit {fit_secs:.2}s",
         m = info.metric.name()
     );
-
-    // --- unlearn the poison ---------------------------------------------------
-    let (_, del_secs) = time(|| {
-        for &id in &poisoned_ids {
-            forest.delete(id).expect("poisoned id is live");
-        }
+    let svc = UnlearningService::new(forest, ServiceConfig::default());
+    let svc_srv = Arc::clone(&svc);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let server = std::thread::spawn(move || {
+        serve(svc_srv, "127.0.0.1:0", 2, move |a| {
+            tx.send(a).unwrap();
+        })
     });
+    let addr = rx.recv()?;
+
+    // --- unlearn the poison: one typed batched wire request ------------------
+    let mut client = Client::connect(addr)?;
+    let (out, del_secs) = time(|| client.delete(DEFAULT_MODEL, &poisoned_ids));
+    let out = out?;
+    println!(
+        "unlearned {} poisoned instances in {del_secs:.2}s ({:.1}ms each; retrain cost {} instances)",
+        out.deleted,
+        1000.0 * del_secs / out.deleted.max(1) as f64,
+        out.retrain_cost
+    );
+    client.shutdown()?;
+    server.join().unwrap()?;
+
+    // the served model after cleanup (snapshot flushes any deferred work)
+    let cleaned = svc.snapshot_forest();
     let cleaned_score = info
         .metric
-        .score(&forest.predict_proba_dataset(&test), &test_ys);
-    println!(
-        "unlearned {n_poison} poisoned instances in {del_secs:.2}s ({:.1}ms each)",
-        1000.0 * del_secs / n_poison.max(1) as f64
-    );
+        .score(&cleaned.predict_proba_dataset(&test), &test_ys);
     println!(
         "{m} after cleaning: {cleaned_score:.4} (clean model {clean_score:.4}, poisoned {poisoned_score:.4})",
         m = info.metric.name()

@@ -7,19 +7,19 @@
 //!   3. train G-DaRE and R-DaRE; evaluate through the PJRT predictor
 //!      (L1/L2 artifacts) when the model fits the compiled shape;
 //!   4. start the coordinator and stream GDPR deletion requests through the
-//!      JSON-lines TCP protocol, interleaved with predict requests;
+//!      typed v1 wire client (DESIGN.md §10), interleaved with predicts;
 //!   5. report the speedup vs naive retraining, the R-DaRE error delta, and
 //!      the service telemetry.
 //!
 //!     make artifacts && cargo run --release --offline --example end_to_end
 
-use dare::coordinator::{serve, Client, ServiceConfig, UnlearningService};
+use dare::coordinator::{serve, Client, ServiceConfig, UnlearningService, DEFAULT_MODEL};
 use dare::data::registry::find;
 use dare::data::split::train_test;
 use dare::eval::adversary::Adversary;
 use dare::eval::speedup::{measure, SpeedupConfig};
 use dare::forest::{DareForest, Params};
-use dare::util::json::{parse, Value};
+use dare::util::json::Value;
 use dare::util::timer::time;
 
 fn main() -> anyhow::Result<()> {
@@ -91,22 +91,11 @@ fn main() -> anyhow::Result<()> {
     let probe_ys: Vec<u8> = test.live_ids().iter().take(64).map(|&i| test.y(i)).collect();
     let mut curve: Vec<(usize, f64)> = Vec::new();
     for (i, chunk) in victims.chunks(6).enumerate() {
-        let ids: Vec<String> = chunk.iter().map(|c| c.to_string()).collect();
-        let resp = client.call(&parse(&format!(r#"{{"op":"delete","ids":[{}]}}"#, ids.join(",")))?)
-            .map_err(|e| anyhow::anyhow!("delete failed: {e}"))?;
-        anyhow::ensure!(resp.get("ok").and_then(Value::as_bool) == Some(true));
+        let out = client.delete(DEFAULT_MODEL, chunk)?;
+        anyhow::ensure!(out.deleted == chunk.len(), "a victim id was already gone");
         if i % 5 == 0 {
-            let rows_json: Vec<String> = probe_rows
-                .iter()
-                .map(|r| format!("[{}]", r.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")))
-                .collect();
-            let resp = client.call(&parse(&format!(r#"{{"op":"predict","rows":[{}]}}"#, rows_json.join(",")))?)?;
-            let probs: Vec<f32> = resp
-                .get("probs")
-                .and_then(Value::as_arr)
-                .map(|a| a.iter().filter_map(Value::as_f64).map(|p| p as f32).collect())
-                .unwrap_or_default();
-            let acc = dare::metrics::accuracy(&probs, &probe_ys);
+            let pred = client.predict(DEFAULT_MODEL, &probe_rows)?;
+            let acc = dare::metrics::accuracy(&pred.probs, &probe_ys);
             curve.push(((i + 1) * 6, acc));
         }
     }
@@ -115,7 +104,7 @@ fn main() -> anyhow::Result<()> {
         println!("  after {deleted:>4} deletions: probe acc {acc:.4}");
     }
 
-    let stats = client.call(&parse(r#"{"op":"stats"}"#)?)?;
+    let stats = client.stats(DEFAULT_MODEL)?;
     println!(
         "service telemetry: {}",
         stats.get("telemetry").map(Value::to_string).unwrap_or_default()
@@ -124,7 +113,7 @@ fn main() -> anyhow::Result<()> {
         "live instances now: {}",
         stats.get("n_alive").and_then(Value::as_u64).unwrap_or(0)
     );
-    client.call(&parse(r#"{"op":"shutdown"}"#)?)?;
+    client.shutdown()?;
     server.join().unwrap()?;
 
     // --- stage 4: closing check against a scratch model --------------------

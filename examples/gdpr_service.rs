@@ -1,13 +1,14 @@
 //! GDPR deletion service demo: run the coordinator, then simulate a fleet
 //! of clients filing right-to-be-forgotten requests concurrently while
-//! others query predictions — the vLLM-router-style serving view of DaRE.
+//! others query predictions — the vLLM-router-style serving view of DaRE,
+//! driven entirely through the typed v1 client (`Client::delete` /
+//! `Client::predict` / `Client::stats`, DESIGN.md §10).
 //!
 //!     make artifacts && cargo run --release --offline --example gdpr_service
 
-use dare::coordinator::{serve, Client, ServiceConfig, UnlearningService};
+use dare::coordinator::{serve, Client, ServiceConfig, UnlearningService, DEFAULT_MODEL};
 use dare::data::registry::find;
 use dare::forest::{DareForest, LazyPolicy, Params};
-use dare::util::json::{parse, Value};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -55,12 +56,13 @@ fn main() -> anyhow::Result<()> {
             let mut batched = 0;
             for r in 0..10u32 {
                 let id = 100 + c * 40 + r;
-                let resp = client.call(&parse(&format!(r#"{{"op":"delete","ids":[{id}]}}"#)).unwrap())?;
-                if resp.get("ok").and_then(Value::as_bool) == Some(true) {
-                    deleted += resp.get("deleted").and_then(Value::as_u64).unwrap_or(0) as usize;
-                    if resp.get("batch_size").and_then(Value::as_u64).unwrap_or(1) > 1 {
-                        batched += 1;
-                    }
+                // typed right-to-be-forgotten request: the outcome says how
+                // many ids landed and whether the server's batcher grouped
+                // this request with concurrent ones
+                let out = client.delete(DEFAULT_MODEL, &[id])?;
+                deleted += out.deleted;
+                if out.batch_size > 1 {
+                    batched += 1;
                 }
             }
             Ok((deleted, batched))
@@ -70,11 +72,11 @@ fn main() -> anyhow::Result<()> {
     for _ in 0..2 {
         handles.push(std::thread::spawn(move || -> anyhow::Result<(usize, usize)> {
             let mut client = Client::connect(addr)?;
-            let row = vec!["0.0"; p].join(",");
+            let row = vec![0.0f32; p];
             let mut ok = 0;
             for _ in 0..20 {
-                let resp = client.call(&parse(&format!(r#"{{"op":"predict","rows":[[{row}]]}}"#)).unwrap())?;
-                if resp.get("ok").and_then(Value::as_bool) == Some(true) {
+                let pred = client.predict(DEFAULT_MODEL, &[row.clone()])?;
+                if pred.probs.len() == 1 {
                     ok += 1;
                 }
             }
@@ -92,20 +94,20 @@ fn main() -> anyhow::Result<()> {
     println!("fleet done: {total_deleted} instances deleted; {total_batched} requests shared a batch");
 
     let mut client = Client::connect(addr)?;
-    let stats = client.call(&parse(r#"{"op":"stats"}"#)?)?;
+    let stats = client.stats(DEFAULT_MODEL)?;
     let tele = stats.get("telemetry").unwrap();
     println!("telemetry snapshot:\n{}", tele.to_pretty());
     println!(
         "n_alive = {}",
-        stats.get("n_alive").and_then(Value::as_u64).unwrap_or(0)
+        stats.get("n_alive").and_then(dare::util::json::Value::as_u64).unwrap_or(0)
     );
     println!(
         "deferred retrains: {} total, {} still pending (policy {})",
-        stats.get("deferred_retrains").and_then(Value::as_u64).unwrap_or(0),
-        stats.get("dirty_subtrees").and_then(Value::as_u64).unwrap_or(0),
-        stats.get("lazy_policy").and_then(Value::as_str).unwrap_or("?"),
+        stats.get("deferred_retrains").and_then(dare::util::json::Value::as_u64).unwrap_or(0),
+        stats.get("dirty_subtrees").and_then(dare::util::json::Value::as_u64).unwrap_or(0),
+        stats.get("lazy_policy").and_then(dare::util::json::Value::as_str).unwrap_or("?"),
     );
-    client.call(&parse(r#"{"op":"shutdown"}"#)?)?;
+    client.shutdown()?;
     server.join().unwrap()?;
     println!("service stopped cleanly");
     Ok(())

@@ -1,0 +1,121 @@
+//! Multi-tenant serving: several models behind ONE coordinator, managed
+//! over the typed, versioned wire API (DESIGN.md §10) — per-tenant GDPR
+//! deletion with hard isolation, lifecycle ops (`create` / `save` /
+//! `drop` / `load`) and per-model stats, all through the typed client.
+//!
+//!     cargo run --release --offline --example multi_tenant
+
+use dare::coordinator::{
+    serve, ApiError, Client, CreateSpec, ServiceConfig, UnlearningService,
+};
+use dare::data::synth::{generate, SynthSpec};
+use dare::forest::{DareForest, Params};
+use std::sync::Arc;
+
+fn tenant_forest(n: usize, seed: u64) -> DareForest {
+    let data = generate(
+        &SynthSpec {
+            n,
+            informative: 4,
+            redundant: 1,
+            noise: 2,
+            flip: 0.05,
+            ..Default::default()
+        },
+        seed,
+    );
+    DareForest::fit(
+        data,
+        &Params {
+            n_trees: 10,
+            max_depth: 8,
+            k: 10,
+            n_threads: 4,
+            ..Default::default()
+        },
+        seed ^ 0xDA2E,
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    // Two tenants at startup; a third is created over the wire below.
+    println!("training two tenant models...");
+    let svc = UnlearningService::with_models(
+        vec![
+            ("eu-prod".to_string(), tenant_forest(1200, 7)),
+            ("us-prod".to_string(), tenant_forest(900, 8)),
+        ],
+        ServiceConfig::default(),
+    );
+    let svc_srv = Arc::clone(&svc);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let server = std::thread::spawn(move || {
+        serve(svc_srv, "127.0.0.1:0", 4, move |a| {
+            tx.send(a).unwrap();
+        })
+    });
+    let addr = rx.recv()?;
+    println!("registry service up at {addr}");
+    let mut client = Client::connect(addr)?;
+
+    // --- lifecycle: create a third tenant from a corpus dataset ref ---------
+    client.create(
+        "staging",
+        CreateSpec {
+            dataset: "twitter".to_string(),
+            scale_div: 2000,
+            seed: 5,
+            n_trees: Some(5),
+            max_depth: Some(6),
+            k: Some(5),
+            ..Default::default()
+        },
+    )?;
+    println!("tenants:");
+    for m in client.list()? {
+        println!(
+            "  {:<10} {} trees, {} live instances, {} shards, policy {}",
+            m.name, m.n_trees, m.n_alive, m.n_shards, m.lazy_policy
+        );
+    }
+
+    // --- isolation: a GDPR purge in us-prod cannot move eu-prod -------------
+    let eu_probe = vec![0.1f32; svc.registry().get("eu-prod")?.n_features()];
+    let before = client.predict("eu-prod", &[eu_probe.clone()])?;
+    let purged = client.delete("us-prod", &(100..160u32).collect::<Vec<_>>())?;
+    let after = client.predict("eu-prod", &[eu_probe])?;
+    assert_eq!(before, after, "tenant isolation violated");
+    println!(
+        "us-prod purge: {} erased (retrain cost {}); eu-prod prediction bit-identical {:.6} == {:.6}",
+        purged.deleted, purged.retrain_cost, before.probs[0], after.probs[0]
+    );
+
+    // --- per-tenant stats ----------------------------------------------------
+    let stats = client.stats("us-prod")?;
+    println!(
+        "us-prod after purge: {} live instances",
+        stats.get("n_alive").and_then(dare::util::json::Value::as_u64).unwrap_or(0)
+    );
+
+    // --- save / drop / load: park the staging tenant and bring it back ------
+    let path = std::env::temp_dir().join("dare_multi_tenant_staging.json");
+    client.save("staging", &path.display().to_string())?;
+    client.drop_model("staging")?;
+    match client.stats("staging") {
+        Err(ApiError::UnknownModel(name)) => {
+            println!("dropped tenant '{name}' is gone (typed unknown_model error)")
+        }
+        other => anyhow::bail!("expected UnknownModel, got {other:?}"),
+    }
+    client.load("staging", &path.display().to_string())?;
+    println!(
+        "staging restored: {} tenants registered",
+        client.list()?.len()
+    );
+    std::fs::remove_file(&path).ok();
+
+    client.shutdown()?;
+    server.join().unwrap()?;
+    println!("multi-tenant service stopped cleanly");
+    Ok(())
+}

@@ -1,12 +1,16 @@
 //! Quickstart: train a DaRE forest, unlearn some instances, verify the
-//! model stays accurate, save/load a snapshot.
+//! model stays accurate, save/load a snapshot — then serve the model over
+//! the typed, versioned wire API and file a deletion through the typed
+//! client (`Client::delete` / `Client::predict`, DESIGN.md §10).
 //!
 //!     cargo run --release --offline --example quickstart
 
+use dare::coordinator::{serve, Client, ServiceConfig, UnlearningService, DEFAULT_MODEL};
 use dare::data::registry::find;
 use dare::data::split::train_test;
 use dare::forest::{serialize, DareForest, Params};
 use dare::util::timer::time;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     // 1. A corpus dataset (1/200th of the paper's Surgical; see DESIGN.md §2).
@@ -53,5 +57,35 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(loaded.n_alive(), forest.n_alive());
     println!("snapshot saved + reloaded: {} live instances", loaded.n_alive());
     std::fs::remove_file(&path).ok();
+
+    // 6. Serve it: the reloaded model becomes the registry's "default"
+    //    model behind the versioned wire API (v0 requests still work; the
+    //    typed client speaks v1 and returns typed outcomes/errors).
+    let probe = loaded.data().row(loaded.live_ids()[0]);
+    let next_victims: Vec<u32> = loaded.live_ids().into_iter().skip(50).take(5).collect();
+    let svc = UnlearningService::new(loaded, ServiceConfig::default());
+    let svc_srv = Arc::clone(&svc);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let server = std::thread::spawn(move || {
+        serve(svc_srv, "127.0.0.1:0", 2, move |a| {
+            tx.send(a).unwrap();
+        })
+    });
+    let addr = rx.recv()?;
+    let mut client = Client::connect(addr)?;
+    let pred = client.predict(DEFAULT_MODEL, &[probe])?;
+    println!(
+        "served prediction p(+) = {:.4} (engine {})",
+        pred.probs[0], pred.engine
+    );
+    // a GDPR request over the wire: typed outcome, no JSON assembly
+    let out = client.delete(DEFAULT_MODEL, &next_victims)?;
+    println!(
+        "wire deletion: {} removed, retrain cost {} instances (batch of {})",
+        out.deleted, out.retrain_cost, out.batch_size
+    );
+    client.shutdown()?;
+    server.join().unwrap()?;
+    println!("service stopped cleanly");
     Ok(())
 }

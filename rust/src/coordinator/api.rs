@@ -1,0 +1,768 @@
+//! The typed, versioned wire API (DESIGN.md §10).
+//!
+//! Every request on the wire is one JSON object; this module is the codec
+//! between that object and the typed [`Request`] / [`Response`] enums the
+//! service dispatches on, so decode → dispatch → encode are three
+//! separately testable layers (the string-matching that used to live
+//! inline in `service::handle` is gone).
+//!
+//! **Versioning.** A request carries `"v"` (wire version) and `"model"`
+//! (registry name). Both are optional: a request with no `"v"` key is a
+//! *v0* request — the pre-registry wire format — and routes to the
+//! [`DEFAULT_MODEL`]. A v0 request and its v1 equivalent addressed to
+//! `"default"` produce byte-identical response payloads (enforced by
+//! `tests/api_compat.rs`). Versions above [`WIRE_VERSION`] are rejected
+//! with a `bad_request` error, which doubles as the negotiation signal: a
+//! client probes with its preferred version and falls back on rejection.
+//!
+//! **Errors.** Failures are a closed taxonomy ([`ApiError`]); each variant
+//! carries a stable machine-readable `code` on the wire:
+//! `{"ok":false,"error":{"code":...,"msg":...},"error_msg":...}`. The
+//! `"error"` key now holds the structured object (previously it held a
+//! free-form string); the top-level `"error_msg"` string carries that old
+//! message verbatim, so a v0 caller that displayed the string needs only
+//! a key rename — v0 callers that merely test `"error"`'s presence or
+//! `"ok"` keep working unchanged. Integer payloads (seeds, budgets) are
+//! JSON numbers and therefore exact only up to 2^53.
+
+use crate::coordinator::batcher::DeleteOutcome;
+use crate::data::dataset::InstanceId;
+use crate::util::json::Value;
+use std::fmt;
+
+/// Highest wire version this build speaks.
+pub const WIRE_VERSION: u64 = 1;
+
+/// The model un-namespaced (v0) requests route to.
+pub const DEFAULT_MODEL: &str = "default";
+
+// ---------------------------------------------------------------------------
+// Error taxonomy
+// ---------------------------------------------------------------------------
+
+/// Every way a request can fail, with a stable wire `code` per variant.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ApiError {
+    /// Malformed or unsupported request (bad JSON shape, unknown op,
+    /// unsupported wire version, unknown dataset, duplicate model name).
+    BadRequest(String),
+    /// The addressed model is not in the registry.
+    UnknownModel(String),
+    /// A row's feature count does not match the model's arity.
+    ArityMismatch { got: usize, want: usize },
+    /// The instance id is not a live training instance.
+    UnknownId(InstanceId),
+    /// The service is draining after a `shutdown` request.
+    ShuttingDown,
+    /// Client-side only: the transport failed (IO, unparseable response).
+    /// Never emitted by the server.
+    Transport(String),
+}
+
+impl ApiError {
+    /// The stable machine-readable code serialized on the wire.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ApiError::BadRequest(_) => "bad_request",
+            ApiError::UnknownModel(_) => "unknown_model",
+            ApiError::ArityMismatch { .. } => "arity_mismatch",
+            ApiError::UnknownId(_) => "unknown_id",
+            ApiError::ShuttingDown => "shutting_down",
+            ApiError::Transport(_) => "transport",
+        }
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApiError::BadRequest(m) | ApiError::Transport(m) => write!(f, "{m}"),
+            ApiError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
+            ApiError::ArityMismatch { got, want } => {
+                write!(f, "row has {got} features, model expects {want}")
+            }
+            ApiError::UnknownId(id) => {
+                write!(f, "instance {id} is not a live training instance")
+            }
+            ApiError::ShuttingDown => write!(f, "service is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+/// A decoded request: wire version, target model, operation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    /// Wire version the caller spoke (0 = legacy un-namespaced).
+    pub v: u64,
+    /// Registry name the operation addresses ([`DEFAULT_MODEL`] when the
+    /// wire object had no `"model"` key).
+    pub model: String,
+    pub op: Op,
+}
+
+/// The operation set: per-model data-plane ops plus registry lifecycle.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    // -- data plane (addressed to `Request::model`) --
+    Predict { rows: Vec<Vec<f32>> },
+    Delete { ids: Vec<InstanceId> },
+    Add { row: Vec<f32>, label: u8 },
+    DeleteCost { id: InstanceId },
+    Stats,
+    /// Execute every deferred retrain of the model (DESIGN.md §9).
+    Flush,
+    /// Drain up to `budget` deferred retrains per tree.
+    Compact { budget: usize },
+    Save { path: String },
+    // -- lifecycle (registry) --
+    /// Train a new model named `Request::model` from a corpus dataset ref.
+    Create(CreateSpec),
+    /// Install a snapshot from disk as `Request::model`.
+    Load { path: String },
+    /// Remove `Request::model` from the registry.
+    DropModel,
+    /// Summaries of every registered model.
+    List,
+    Shutdown,
+}
+
+/// Parameters for `create`: a corpus dataset reference plus optional
+/// hyperparameter overrides (paper-tuned defaults otherwise).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CreateSpec {
+    pub dataset: String,
+    /// Generate the dataset at 1/`scale_div` of the paper's size.
+    pub scale_div: usize,
+    /// Dataset + training seed (JSON number: exact up to 2^53).
+    pub seed: u64,
+    pub n_trees: Option<usize>,
+    pub max_depth: Option<usize>,
+    pub k: Option<usize>,
+    pub d_rmax: Option<usize>,
+}
+
+impl Default for CreateSpec {
+    fn default() -> Self {
+        CreateSpec {
+            dataset: String::new(),
+            scale_div: 500,
+            seed: 1,
+            n_trees: None,
+            max_depth: None,
+            k: None,
+            d_rmax: None,
+        }
+    }
+}
+
+fn bad(msg: &str) -> ApiError {
+    ApiError::BadRequest(msg.to_string())
+}
+
+/// A JSON number that is a non-negative integer within `max`, else `None`.
+fn as_uint(v: &Value, max: f64) -> Option<u64> {
+    v.as_f64()
+        .filter(|n| *n >= 0.0 && n.fract() == 0.0 && *n <= max)
+        .map(|n| n as u64)
+}
+
+fn req_uint(req: &Value, key: &str, missing: &str) -> Result<u64, ApiError> {
+    req.get(key)
+        .and_then(|v| as_uint(v, 9e15))
+        .ok_or_else(|| bad(missing))
+}
+
+fn opt_uint(req: &Value, key: &str) -> Result<Option<u64>, ApiError> {
+    match req.get(key) {
+        None => Ok(None),
+        Some(v) => as_uint(v, 9e15)
+            .map(Some)
+            .ok_or_else(|| bad(&format!("'{key}' must be a non-negative integer"))),
+    }
+}
+
+fn req_str(req: &Value, key: &str, missing: &str) -> Result<String, ApiError> {
+    req.get(key)
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| bad(missing))
+}
+
+fn num_rows(req: &Value, key: &str, missing: &str) -> Result<Vec<Vec<f32>>, ApiError> {
+    let rows_json = req.get(key).and_then(Value::as_arr).ok_or_else(|| bad(missing))?;
+    let mut rows = Vec::with_capacity(rows_json.len());
+    for r in rows_json {
+        let cells = r.as_arr().ok_or_else(|| bad("rows must be arrays of numbers"))?;
+        rows.push(num_row(cells)?);
+    }
+    Ok(rows)
+}
+
+fn num_row(cells: &[Value]) -> Result<Vec<f32>, ApiError> {
+    cells
+        .iter()
+        .map(|c| c.as_f64().map(|x| x as f32).ok_or_else(|| bad("row cells must be numbers")))
+        .collect()
+}
+
+/// Decode one wire object into a typed [`Request`].
+pub fn decode(req: &Value) -> Result<Request, ApiError> {
+    if !matches!(req, Value::Obj(_)) {
+        return Err(bad("request must be a JSON object"));
+    }
+    let v = match req.get("v") {
+        None => 0,
+        Some(x) => as_uint(x, 9e15).ok_or_else(|| bad("'v' must be a non-negative integer"))?,
+    };
+    if v > WIRE_VERSION {
+        return Err(bad(&format!(
+            "unsupported wire version {v} (this server speaks 0..={WIRE_VERSION})"
+        )));
+    }
+    let model = match req.get("model") {
+        None => DEFAULT_MODEL.to_string(),
+        Some(m) => m.as_str().ok_or_else(|| bad("'model' must be a string"))?.to_string(),
+    };
+    let op_name = req
+        .get("op")
+        .and_then(Value::as_str)
+        .ok_or_else(|| bad("request needs 'op'"))?;
+    let op = match op_name {
+        "predict" => Op::Predict {
+            rows: num_rows(req, "rows", "predict needs 'rows': [[f32,...],...]")?,
+        },
+        "delete" => {
+            let ids_json = req
+                .get("ids")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| bad("delete needs 'ids': [u32,...]"))?;
+            let ids = ids_json
+                .iter()
+                .map(|x| {
+                    as_uint(x, u32::MAX as f64)
+                        .map(|n| n as InstanceId)
+                        .ok_or_else(|| bad("ids must be non-negative integers"))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            Op::Delete { ids }
+        }
+        "add" => {
+            let row_json = req
+                .get("row")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| bad("add needs 'row': [f32,...]"))?;
+            let row = num_row(row_json)?;
+            let label = req
+                .get("label")
+                .and_then(|x| as_uint(x, 9e15))
+                .ok_or_else(|| bad("add needs 'label': 0|1"))?;
+            if label > 1 {
+                return Err(bad("label must be 0 or 1"));
+            }
+            Op::Add {
+                row,
+                label: label as u8,
+            }
+        }
+        "delete_cost" => Op::DeleteCost {
+            id: req
+                .get("id")
+                .and_then(|x| as_uint(x, u32::MAX as f64))
+                .ok_or_else(|| bad("delete_cost needs 'id'"))? as InstanceId,
+        },
+        "stats" => Op::Stats,
+        "flush" => Op::Flush,
+        "compact" => Op::Compact {
+            budget: opt_uint(req, "budget")?.unwrap_or(1) as usize,
+        },
+        "save" => Op::Save {
+            path: req_str(req, "path", "save needs 'path'")?,
+        },
+        "load" => Op::Load {
+            path: req_str(req, "path", "load needs 'path'")?,
+        },
+        "create" => Op::Create(CreateSpec {
+            dataset: req_str(req, "dataset", "create needs 'dataset'")?,
+            scale_div: opt_uint(req, "scale")?.unwrap_or(500) as usize,
+            seed: match req.get("seed") {
+                None => 1,
+                Some(_) => req_uint(req, "seed", "'seed' must be a non-negative integer")?,
+            },
+            n_trees: opt_uint(req, "trees")?.map(|n| n as usize),
+            max_depth: opt_uint(req, "depth")?.map(|n| n as usize),
+            k: opt_uint(req, "k")?.map(|n| n as usize),
+            d_rmax: opt_uint(req, "drmax")?.map(|n| n as usize),
+        }),
+        "drop" => Op::DropModel,
+        "list" => Op::List,
+        "shutdown" => Op::Shutdown,
+        other => return Err(bad(&format!("unknown op '{other}'"))),
+    };
+    Ok(Request { v, model, op })
+}
+
+/// Encode a typed [`Request`] as its wire object. v0 requests stay
+/// un-namespaced (no `"v"`; `"model"` only when non-default), so the
+/// typed client can also speak the legacy format. `decode ∘ encode = id`
+/// (property-tested below).
+pub fn encode_request(r: &Request) -> Value {
+    let mut o = Value::obj();
+    if r.v >= 1 {
+        o.set("v", r.v).set("model", r.model.as_str());
+    } else if r.model != DEFAULT_MODEL {
+        o.set("model", r.model.as_str());
+    }
+    match &r.op {
+        Op::Predict { rows } => {
+            o.set("op", "predict").set(
+                "rows",
+                Value::Arr(
+                    rows.iter()
+                        .map(|row| {
+                            Value::Arr(row.iter().map(|&x| Value::Num(x as f64)).collect())
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        Op::Delete { ids } => {
+            o.set("op", "delete").set("ids", ids.clone());
+        }
+        Op::Add { row, label } => {
+            o.set("op", "add")
+                .set("row", Value::Arr(row.iter().map(|&x| Value::Num(x as f64)).collect()))
+                .set("label", *label as u64);
+        }
+        Op::DeleteCost { id } => {
+            o.set("op", "delete_cost").set("id", *id);
+        }
+        Op::Stats => {
+            o.set("op", "stats");
+        }
+        Op::Flush => {
+            o.set("op", "flush");
+        }
+        Op::Compact { budget } => {
+            o.set("op", "compact").set("budget", *budget);
+        }
+        Op::Save { path } => {
+            o.set("op", "save").set("path", path.as_str());
+        }
+        Op::Load { path } => {
+            o.set("op", "load").set("path", path.as_str());
+        }
+        Op::Create(spec) => {
+            o.set("op", "create")
+                .set("dataset", spec.dataset.as_str())
+                .set("scale", spec.scale_div)
+                .set("seed", spec.seed);
+            if let Some(t) = spec.n_trees {
+                o.set("trees", t);
+            }
+            if let Some(d) = spec.max_depth {
+                o.set("depth", d);
+            }
+            if let Some(k) = spec.k {
+                o.set("k", k);
+            }
+            if let Some(r) = spec.d_rmax {
+                o.set("drmax", r);
+            }
+        }
+        Op::DropModel => {
+            o.set("op", "drop");
+        }
+        Op::List => {
+            o.set("op", "list");
+        }
+        Op::Shutdown => {
+            o.set("op", "shutdown");
+        }
+    }
+    o
+}
+
+// ---------------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------------
+
+/// One registered model's summary (the `list` op / `Client::list`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSummary {
+    pub name: String,
+    pub n_trees: usize,
+    pub n_alive: usize,
+    pub n_shards: usize,
+    pub lazy_policy: String,
+    pub dirty_subtrees: u64,
+    pub pjrt_active: bool,
+}
+
+impl ModelSummary {
+    pub fn to_wire(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("name", self.name.as_str())
+            .set("n_trees", self.n_trees)
+            .set("n_alive", self.n_alive)
+            .set("n_shards", self.n_shards)
+            .set("lazy_policy", self.lazy_policy.as_str())
+            .set("dirty_subtrees", self.dirty_subtrees)
+            .set("pjrt_active", self.pjrt_active);
+        o
+    }
+
+    pub fn from_wire(v: &Value) -> ModelSummary {
+        ModelSummary {
+            name: v.get("name").and_then(Value::as_str).unwrap_or("?").to_string(),
+            n_trees: v.get("n_trees").and_then(Value::as_usize).unwrap_or(0),
+            n_alive: v.get("n_alive").and_then(Value::as_usize).unwrap_or(0),
+            n_shards: v.get("n_shards").and_then(Value::as_usize).unwrap_or(0),
+            lazy_policy: v
+                .get("lazy_policy")
+                .and_then(Value::as_str)
+                .unwrap_or("?")
+                .to_string(),
+            dirty_subtrees: v.get("dirty_subtrees").and_then(Value::as_u64).unwrap_or(0),
+            pjrt_active: v.get("pjrt_active").and_then(Value::as_bool).unwrap_or(false),
+        }
+    }
+}
+
+/// A typed response, encoded by [`encode_response`].
+#[derive(Clone, Debug)]
+pub enum Response {
+    /// Bare success (`save`, `shutdown`).
+    Ok,
+    Predict { probs: Vec<f32>, engine: &'static str },
+    Delete(DeleteOutcome),
+    Add { id: InstanceId },
+    DeleteCost { cost: u64 },
+    /// The complete `stats` payload (already includes `"ok":true` — built
+    /// by `registry::Model::stats`, passed through verbatim).
+    Stats(Value),
+    /// `flush` / `compact`: retrains executed by this request.
+    Flushed { flushed: u64 },
+    /// `create` / `load`: the model is registered and serving.
+    ModelReady { model: String, n_trees: usize, n_alive: usize },
+    Dropped { model: String },
+    List { models: Vec<ModelSummary> },
+    Err(ApiError),
+}
+
+/// The error payload: structured object plus the v0 string alias.
+pub fn err_value(e: &ApiError) -> Value {
+    let msg = e.to_string();
+    let mut eo = Value::obj();
+    eo.set("code", e.code()).set("msg", msg.as_str());
+    match e {
+        ApiError::UnknownModel(m) => {
+            eo.set("model", m.as_str());
+        }
+        ApiError::ArityMismatch { got, want } => {
+            eo.set("got", *got).set("want", *want);
+        }
+        ApiError::UnknownId(id) => {
+            eo.set("id", *id);
+        }
+        _ => {}
+    }
+    let mut o = Value::obj();
+    o.set("ok", false).set("error", eo).set("error_msg", msg);
+    o
+}
+
+/// Parse the typed error back out of a failed (`"ok":false`) response.
+/// Falls back to `BadRequest` when the error object carries an unknown
+/// code, and tolerates pre-v1 servers that sent a bare string.
+pub fn error_from_wire(resp: &Value) -> ApiError {
+    let Some(e) = resp.get("error") else {
+        return ApiError::Transport("server returned ok=false without an error".to_string());
+    };
+    if let Some(msg) = e.as_str() {
+        return ApiError::BadRequest(msg.to_string());
+    }
+    let msg = e.get("msg").and_then(Value::as_str).unwrap_or("").to_string();
+    match e.get("code").and_then(Value::as_str).unwrap_or("") {
+        "unknown_model" => ApiError::UnknownModel(
+            e.get("model").and_then(Value::as_str).unwrap_or("?").to_string(),
+        ),
+        "arity_mismatch" => ApiError::ArityMismatch {
+            got: e.get("got").and_then(Value::as_usize).unwrap_or(0),
+            want: e.get("want").and_then(Value::as_usize).unwrap_or(0),
+        },
+        "unknown_id" => {
+            ApiError::UnknownId(e.get("id").and_then(Value::as_u64).unwrap_or(0) as InstanceId)
+        }
+        "shutting_down" => ApiError::ShuttingDown,
+        "transport" => ApiError::Transport(msg),
+        _ => ApiError::BadRequest(msg),
+    }
+}
+
+/// Encode a typed [`Response`] as its wire object. Field names and number
+/// encodings are byte-for-byte the pre-registry (v0) payloads for every
+/// data-plane op — `tests/api_compat.rs` pins this.
+pub fn encode_response(r: &Response) -> Value {
+    if let Response::Err(e) = r {
+        return err_value(e);
+    }
+    if let Response::Stats(v) = r {
+        return v.clone();
+    }
+    let mut o = Value::obj();
+    o.set("ok", true);
+    match r {
+        Response::Ok => {}
+        Response::Predict { probs, engine } => {
+            o.set("probs", probs.iter().map(|p| *p as f64).collect::<Vec<f64>>())
+                .set("engine", *engine);
+        }
+        Response::Delete(out) => {
+            o.set("deleted", out.deleted)
+                .set("skipped", out.skipped)
+                .set("retrain_cost", out.retrain_cost)
+                .set("deferred", out.deferred)
+                .set("batch_size", out.batch_size);
+        }
+        Response::Add { id } => {
+            o.set("id", *id);
+        }
+        Response::DeleteCost { cost } => {
+            o.set("cost", *cost);
+        }
+        Response::Flushed { flushed } => {
+            o.set("flushed", *flushed);
+        }
+        Response::ModelReady {
+            model,
+            n_trees,
+            n_alive,
+        } => {
+            o.set("model", model.as_str()).set("n_trees", *n_trees).set("n_alive", *n_alive);
+        }
+        Response::Dropped { model } => {
+            o.set("model", model.as_str());
+        }
+        Response::List { models } => {
+            o.set("models", Value::Arr(models.iter().map(ModelSummary::to_wire).collect()));
+        }
+        Response::Stats(_) | Response::Err(_) => unreachable!("handled above"),
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+    use crate::util::prop::{check, Config};
+    use crate::util::rng::Rng;
+
+    fn gen_name(rng: &mut Rng) -> String {
+        // include JSON-hostile characters so the codec's escaping is in
+        // the property, not just happy-path ASCII
+        let pool: Vec<char> = "abcXYZ0189_-./ é\"\\\n\t".chars().collect();
+        (0..1 + rng.index(12)).map(|_| pool[rng.index(pool.len())]).collect()
+    }
+
+    fn gen_row(rng: &mut Rng) -> Vec<f32> {
+        (0..1 + rng.index(5)).map(|_| rng.range_f32(-8.0, 8.0)).collect()
+    }
+
+    fn opt_usize(rng: &mut Rng, max: usize) -> Option<usize> {
+        if rng.bernoulli(0.5) {
+            Some(rng.index(max))
+        } else {
+            None
+        }
+    }
+
+    fn gen_request(rng: &mut Rng) -> Request {
+        let v = rng.index(2) as u64;
+        let model = if v == 0 && rng.bernoulli(0.5) {
+            DEFAULT_MODEL.to_string()
+        } else {
+            gen_name(rng)
+        };
+        let op = match rng.index(13) {
+            0 => Op::Predict {
+                rows: (0..rng.index(4)).map(|_| gen_row(rng)).collect(),
+            },
+            1 => Op::Delete {
+                ids: (0..rng.index(6)).map(|_| rng.index(10_000) as u32).collect(),
+            },
+            2 => Op::Add {
+                row: gen_row(rng),
+                label: rng.index(2) as u8,
+            },
+            3 => Op::DeleteCost {
+                id: rng.index(10_000) as u32,
+            },
+            4 => Op::Stats,
+            5 => Op::Flush,
+            6 => Op::Compact {
+                budget: rng.index(64),
+            },
+            7 => Op::Save {
+                path: gen_name(rng),
+            },
+            8 => Op::Load {
+                path: gen_name(rng),
+            },
+            9 => Op::Create(CreateSpec {
+                dataset: gen_name(rng),
+                scale_div: 1 + rng.index(1000),
+                seed: rng.next_u64() % (1u64 << 53),
+                n_trees: opt_usize(rng, 200),
+                max_depth: opt_usize(rng, 30),
+                k: opt_usize(rng, 100),
+                d_rmax: opt_usize(rng, 6),
+            }),
+            10 => Op::DropModel,
+            11 => Op::List,
+            _ => Op::Shutdown,
+        };
+        Request { v, model, op }
+    }
+
+    #[test]
+    fn codec_roundtrip_property() {
+        // encode ∘ (serialize → parse) ∘ decode = id over generated
+        // requests — the wire bytes themselves are in the loop.
+        check(
+            "api codec roundtrip",
+            Config {
+                cases: 300,
+                ..Default::default()
+            },
+            |rng| {
+                let req = gen_request(rng);
+                let wire = encode_request(&req).to_string();
+                let back = decode(&parse(&wire).unwrap())
+                    .unwrap_or_else(|e| panic!("decode failed on {wire}: {e}"));
+                assert_eq!(req, back, "roundtrip diverged through {wire}");
+            },
+        );
+    }
+
+    #[test]
+    fn v0_requests_stay_unnamespaced() {
+        let r = Request {
+            v: 0,
+            model: DEFAULT_MODEL.to_string(),
+            op: Op::Stats,
+        };
+        assert_eq!(encode_request(&r).to_string(), r#"{"op":"stats"}"#);
+        // and decode restores the implicit routing
+        assert_eq!(decode(&parse(r#"{"op":"stats"}"#).unwrap()).unwrap(), r);
+    }
+
+    #[test]
+    fn decode_rejects_malformed_inputs_with_bad_request() {
+        for (src, expect) in [
+            (r#"[1,2]"#, "request must be a JSON object"),
+            (r#"{"v":"one","op":"stats"}"#, "'v' must be a non-negative integer"),
+            (r#"{"v":1.5,"op":"stats"}"#, "'v' must be a non-negative integer"),
+            (r#"{"v":99,"op":"stats"}"#, "unsupported wire version"),
+            (r#"{"model":7,"op":"stats"}"#, "'model' must be a string"),
+            (r#"{}"#, "request needs 'op'"),
+            (r#"{"op":"frobnicate"}"#, "unknown op"),
+            (r#"{"op":"predict"}"#, "predict needs 'rows'"),
+            (r#"{"op":"predict","rows":[7]}"#, "rows must be arrays of numbers"),
+            (r#"{"op":"predict","rows":[["x"]]}"#, "row cells must be numbers"),
+            (r#"{"op":"delete"}"#, "delete needs 'ids'"),
+            (r#"{"op":"delete","ids":[-1]}"#, "ids must be non-negative integers"),
+            (r#"{"op":"delete","ids":[1.5]}"#, "ids must be non-negative integers"),
+            (r#"{"op":"add","row":[1.0]}"#, "add needs 'label'"),
+            (r#"{"op":"add","row":[1.0],"label":5}"#, "label must be 0 or 1"),
+            (r#"{"op":"add","label":1}"#, "add needs 'row'"),
+            (r#"{"op":"delete_cost"}"#, "delete_cost needs 'id'"),
+            (r#"{"op":"save"}"#, "save needs 'path'"),
+            (r#"{"op":"load"}"#, "load needs 'path'"),
+            (r#"{"op":"create"}"#, "create needs 'dataset'"),
+            (r#"{"op":"compact","budget":-2}"#, "'budget' must be a non-negative integer"),
+        ] {
+            match decode(&parse(src).unwrap()) {
+                Err(ApiError::BadRequest(msg)) => {
+                    assert!(msg.contains(expect), "{src}: got '{msg}', want '{expect}'")
+                }
+                other => panic!("{src}: expected BadRequest, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn error_wire_roundtrip_every_variant() {
+        for e in [
+            ApiError::BadRequest("nope".to_string()),
+            ApiError::UnknownModel("ghost".to_string()),
+            ApiError::ArityMismatch { got: 1, want: 5 },
+            ApiError::UnknownId(42),
+            ApiError::ShuttingDown,
+            ApiError::Transport("pipe broke".to_string()),
+        ] {
+            let v = err_value(&e);
+            assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false));
+            let eo = v.get("error").unwrap();
+            assert_eq!(eo.get("code").and_then(Value::as_str), Some(e.code()));
+            // the v0 alias mirrors the structured message exactly
+            assert_eq!(
+                v.get("error_msg").and_then(Value::as_str),
+                Some(e.to_string().as_str())
+            );
+            // and the bytes parse back into the same typed variant
+            let back = error_from_wire(&parse(&v.to_string()).unwrap());
+            assert_eq!(back, e);
+        }
+    }
+
+    #[test]
+    fn data_plane_response_payloads_keep_v0_field_names() {
+        let r = encode_response(&Response::Predict {
+            probs: vec![0.5],
+            engine: "native",
+        });
+        assert_eq!(r.to_string(), r#"{"engine":"native","ok":true,"probs":[0.5]}"#);
+        let r = encode_response(&Response::Delete(DeleteOutcome {
+            requested: 3,
+            deleted: 2,
+            skipped: 1,
+            retrain_cost: 40,
+            deferred: 0,
+            batch_size: 1,
+        }));
+        assert_eq!(
+            r.to_string(),
+            r#"{"batch_size":1,"deferred":0,"deleted":2,"ok":true,"retrain_cost":40,"skipped":1}"#
+        );
+        assert_eq!(
+            encode_response(&Response::Add { id: 7 }).to_string(),
+            r#"{"id":7,"ok":true}"#
+        );
+        assert_eq!(
+            encode_response(&Response::DeleteCost { cost: 11 }).to_string(),
+            r#"{"cost":11,"ok":true}"#
+        );
+        assert_eq!(encode_response(&Response::Ok).to_string(), r#"{"ok":true}"#);
+    }
+
+    #[test]
+    fn model_summary_wire_roundtrip() {
+        let s = ModelSummary {
+            name: "eu-prod".to_string(),
+            n_trees: 10,
+            n_alive: 900,
+            n_shards: 4,
+            lazy_policy: "on_read".to_string(),
+            dirty_subtrees: 3,
+            pjrt_active: false,
+        };
+        assert_eq!(ModelSummary::from_wire(&parse(&s.to_wire().to_string()).unwrap()), s);
+    }
+}

@@ -1,13 +1,18 @@
-//! Deletion batcher: the coordinator's dynamic-batching stage.
+//! Deletion batcher: the coordinator's dynamic-batching stage. Each
+//! registry model owns its own batcher (DESIGN.md §10), so one tenant's
+//! deletion stream never queues behind another's.
 //!
-//! Deletions must serialize (every DaRE tree contains every instance, so a
-//! mutation touches all shards), but retraining a node at most once per
-//! *batch* (paper §A.7) makes grouped deletions cheaper than one-at-a-time
-//! processing. The batcher collects deletion requests that arrive within a
-//! short window (or up to a max batch size) and applies them back-to-back
-//! on the single mutation thread. Since the sharded store (DESIGN.md §8)
-//! each application fans out across shard locks internally — readers on
-//! other shards keep running while a batch is applied.
+//! Deletions must serialize within a model (every DaRE tree contains every
+//! instance, so a mutation touches all shards), but retraining a node at
+//! most once per *batch* (paper §A.7) makes grouped deletions cheaper than
+//! one-at-a-time processing. The batcher collects deletion requests that
+//! arrive within a short window (or up to a max batch size) and applies
+//! them back-to-back on the model's single mutation thread. Since the
+//! sharded store (DESIGN.md §8) each application fans out across shard
+//! locks internally — readers on other shards keep running while a batch
+//! is applied. The worker stops when the batcher drops, i.e. when the last
+//! handle to its model goes away (`drop` op or service teardown); a
+//! request caught in that window surfaces as `ApiError::ShuttingDown`.
 
 use crate::coordinator::shards::ShardedForest;
 use crate::data::dataset::InstanceId;

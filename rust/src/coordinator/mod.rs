@@ -1,16 +1,25 @@
 //! L3 coordinator: the unlearning service around the DaRE forest — the
-//! sharded forest store (per-shard locks + mutation epochs, DESIGN.md §8),
-//! request router, deletion batcher (dynamic batching of GDPR deletion
-//! requests), per-operation telemetry, and a JSON-lines TCP protocol.
+//! typed, versioned wire API (`api`, DESIGN.md §10) over a multi-tenant
+//! model registry (`registry`), where each served model owns its sharded
+//! forest store (per-shard locks + mutation epochs, DESIGN.md §8), a
+//! deletion batcher (dynamic batching of GDPR deletion requests), and
+//! per-model telemetry; plus a JSON-lines TCP protocol with a typed
+//! client.
 
+pub mod api;
 pub mod batcher;
 pub mod protocol;
+pub mod registry;
 pub mod service;
 pub mod shards;
 pub mod telemetry;
 
+pub use api::{
+    ApiError, CreateSpec, ModelSummary, Op, Request, Response, DEFAULT_MODEL, WIRE_VERSION,
+};
 pub use batcher::{DeleteOutcome, DeletionBatcher};
-pub use protocol::{serve, Client};
+pub use protocol::{serve, Client, Prediction};
+pub use registry::{Model, ModelRegistry};
 pub use service::{ServiceConfig, UnlearningService};
 pub use shards::ShardedForest;
 pub use telemetry::Telemetry;

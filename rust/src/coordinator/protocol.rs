@@ -1,10 +1,20 @@
 //! Wire protocol: JSON-lines over TCP.
 //!
-//! Each request is one JSON object on one line; the service answers with one
-//! JSON object on one line. `serve` runs the accept loop with a worker pool;
-//! `Client` is the matching blocking client used by examples and tests.
+//! Each request is one JSON object on one line; the service answers with
+//! one JSON object on one line (the v1 schema, DESIGN.md §10). `serve`
+//! runs the accept loop with a worker pool; [`Client`] is the matching
+//! blocking client. The typed methods (`predict`, `delete`, `create`, …)
+//! speak v1 and return `Result<_, ApiError>` — transport failures surface
+//! as [`ApiError::Transport`], server-side failures as the decoded wire
+//! variant. `call` remains the raw escape hatch (and still speaks v0 when
+//! given un-namespaced objects).
 
-use crate::coordinator::service::{err_response, UnlearningService};
+use crate::coordinator::api::{
+    self, ApiError, CreateSpec, ModelSummary, Op, Request, Response, WIRE_VERSION,
+};
+use crate::coordinator::batcher::DeleteOutcome;
+use crate::coordinator::service::UnlearningService;
+use crate::data::dataset::InstanceId;
 use crate::util::json::{parse, Value};
 use crate::util::threadpool::ThreadPool;
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -56,7 +66,9 @@ fn handle_connection(svc: &UnlearningService, stream: TcpStream) -> anyhow::Resu
         }
         let resp = match parse(&line) {
             Ok(req) => svc.handle(&req),
-            Err(e) => err_response(&format!("bad request: {e}")),
+            Err(e) => api::encode_response(&Response::Err(ApiError::BadRequest(format!(
+                "bad request: {e}"
+            )))),
         };
         writer.write_all(resp.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
@@ -68,7 +80,15 @@ fn handle_connection(svc: &UnlearningService, stream: TcpStream) -> anyhow::Resu
     Ok(())
 }
 
-/// Blocking JSON-lines client.
+/// A successful `predict` response: probabilities plus the engine that
+/// served them (`"pjrt"` or `"native"`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Prediction {
+    pub probs: Vec<f32>,
+    pub engine: String,
+}
+
+/// Blocking JSON-lines client with typed v1 methods.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
@@ -84,7 +104,7 @@ impl Client {
         })
     }
 
-    /// Send one request and read one response.
+    /// Send one raw request object and read one response (any version).
     pub fn call(&mut self, req: &Value) -> anyhow::Result<Value> {
         self.writer.write_all(req.to_string().as_bytes())?;
         self.writer.write_all(b"\n")?;
@@ -93,6 +113,148 @@ impl Client {
         self.reader.read_line(&mut line)?;
         anyhow::ensure!(!line.is_empty(), "server closed connection");
         parse(&line).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+
+    /// Send one typed v1 request; decode failure outcomes into [`ApiError`].
+    fn request(&mut self, model: &str, op: Op) -> Result<Value, ApiError> {
+        let wire = api::encode_request(&Request {
+            v: WIRE_VERSION,
+            model: model.to_string(),
+            op,
+        });
+        let resp = self.call(&wire).map_err(|e| ApiError::Transport(format!("{e}")))?;
+        if resp.get("ok").and_then(Value::as_bool) == Some(true) {
+            Ok(resp)
+        } else {
+            Err(api::error_from_wire(&resp))
+        }
+    }
+
+    fn field_u64(resp: &Value, key: &str) -> Result<u64, ApiError> {
+        resp.get(key)
+            .and_then(Value::as_u64)
+            .ok_or_else(|| ApiError::Transport(format!("response missing '{key}'")))
+    }
+
+    /// Positive-class probabilities for `rows` from `model`.
+    pub fn predict(&mut self, model: &str, rows: &[Vec<f32>]) -> Result<Prediction, ApiError> {
+        let resp = self.request(
+            model,
+            Op::Predict {
+                rows: rows.to_vec(),
+            },
+        )?;
+        let probs = resp
+            .get("probs")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| ApiError::Transport("response missing 'probs'".to_string()))?
+            .iter()
+            .map(|p| p.as_f64().unwrap_or(0.0) as f32)
+            .collect();
+        Ok(Prediction {
+            probs,
+            engine: resp.get("engine").and_then(Value::as_str).unwrap_or("?").to_string(),
+        })
+    }
+
+    /// Unlearn `ids` from `model` (grouped with concurrent requests by the
+    /// server's deletion batcher).
+    pub fn delete(&mut self, model: &str, ids: &[InstanceId]) -> Result<DeleteOutcome, ApiError> {
+        let resp = self.request(model, Op::Delete { ids: ids.to_vec() })?;
+        let deleted = Self::field_u64(&resp, "deleted")? as usize;
+        let skipped = Self::field_u64(&resp, "skipped")? as usize;
+        Ok(DeleteOutcome {
+            requested: deleted + skipped,
+            deleted,
+            skipped,
+            retrain_cost: Self::field_u64(&resp, "retrain_cost")?,
+            deferred: Self::field_u64(&resp, "deferred")? as usize,
+            batch_size: Self::field_u64(&resp, "batch_size")? as usize,
+        })
+    }
+
+    /// Add one training instance to `model`; returns its id.
+    pub fn add(&mut self, model: &str, row: &[f32], label: u8) -> Result<InstanceId, ApiError> {
+        let resp = self.request(
+            model,
+            Op::Add {
+                row: row.to_vec(),
+                label,
+            },
+        )?;
+        Ok(Self::field_u64(&resp, "id")? as InstanceId)
+    }
+
+    /// Dry-run retrain cost of deleting `id` from `model`.
+    pub fn delete_cost(&mut self, model: &str, id: InstanceId) -> Result<u64, ApiError> {
+        let resp = self.request(model, Op::DeleteCost { id })?;
+        Self::field_u64(&resp, "cost")
+    }
+
+    /// The model's full stats payload (telemetry, shards, backlog, bytes).
+    pub fn stats(&mut self, model: &str) -> Result<Value, ApiError> {
+        self.request(model, Op::Stats)
+    }
+
+    /// Execute every deferred retrain of `model`; returns how many ran.
+    pub fn flush(&mut self, model: &str) -> Result<u64, ApiError> {
+        let resp = self.request(model, Op::Flush)?;
+        Self::field_u64(&resp, "flushed")
+    }
+
+    /// Drain up to `budget` deferred retrains per tree of `model`.
+    pub fn compact(&mut self, model: &str, budget: usize) -> Result<u64, ApiError> {
+        let resp = self.request(model, Op::Compact { budget })?;
+        Self::field_u64(&resp, "flushed")
+    }
+
+    /// Snapshot `model` (with its training database) to a server-side path.
+    pub fn save(&mut self, model: &str, path: &str) -> Result<(), ApiError> {
+        self.request(
+            model,
+            Op::Save {
+                path: path.to_string(),
+            },
+        )
+        .map(|_| ())
+    }
+
+    /// Install a server-side snapshot as a new model named `model`.
+    pub fn load(&mut self, model: &str, path: &str) -> Result<(), ApiError> {
+        self.request(
+            model,
+            Op::Load {
+                path: path.to_string(),
+            },
+        )
+        .map(|_| ())
+    }
+
+    /// Train and register a new model named `model` from a corpus dataset.
+    pub fn create(&mut self, model: &str, spec: CreateSpec) -> Result<(), ApiError> {
+        self.request(model, Op::Create(spec)).map(|_| ())
+    }
+
+    /// Unregister `model`.
+    pub fn drop_model(&mut self, model: &str) -> Result<(), ApiError> {
+        self.request(model, Op::DropModel).map(|_| ())
+    }
+
+    /// Summaries of every registered model.
+    pub fn list(&mut self) -> Result<Vec<ModelSummary>, ApiError> {
+        let resp = self.request(api::DEFAULT_MODEL, Op::List)?;
+        Ok(resp
+            .get("models")
+            .and_then(Value::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .map(ModelSummary::from_wire)
+            .collect())
+    }
+
+    /// Stop the server's accept loop.
+    pub fn shutdown(&mut self) -> Result<(), ApiError> {
+        self.request(api::DEFAULT_MODEL, Op::Shutdown).map(|_| ())
     }
 }
 
@@ -148,23 +310,44 @@ mod tests {
         let (addr, handle) = spawn_server();
         let mut c = Client::connect(addr).unwrap();
 
-        let r = c.call(&parse(r#"{"op":"stats"}"#).unwrap()).unwrap();
-        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        // typed stats
+        let r = c.stats("default").unwrap();
         assert_eq!(r.get("n_alive").unwrap().as_u64(), Some(150));
         // sharded store surfaces its shape over the wire
         let n_shards = r.get("n_shards").unwrap().as_u64().unwrap();
         assert!(n_shards >= 1);
         assert_eq!(r.get("shards").unwrap().as_arr().unwrap().len() as u64, n_shards);
 
-        let r = c.call(&parse(r#"{"op":"delete","ids":[1,2]}"#).unwrap()).unwrap();
-        assert_eq!(r.get("deleted").unwrap().as_u64(), Some(2));
+        // typed delete
+        let out = c.delete("default", &[1, 2]).unwrap();
+        assert_eq!(out.deleted, 2);
+        assert_eq!(out.skipped, 0);
 
-        // malformed request gets an error response, connection stays up
-        let r = c.call(&parse(r#"{"op":"bogus"}"#).unwrap()).unwrap();
-        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        // a raw v0 request still works over the same connection
+        let r = c.call(&parse(r#"{"op":"stats"}"#).unwrap()).unwrap();
+        assert_eq!(r.get("n_alive").unwrap().as_u64(), Some(148));
 
-        let r = c.call(&parse(r#"{"op":"shutdown"}"#).unwrap()).unwrap();
-        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        // typed errors cross the wire intact
+        match c.call(&parse(r#"{"op":"bogus"}"#).unwrap()) {
+            Ok(r) => {
+                assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+                assert_eq!(
+                    r.get("error").unwrap().get("code").unwrap().as_str(),
+                    Some("bad_request")
+                );
+            }
+            Err(e) => panic!("raw call should surface the error object: {e}"),
+        }
+        match c.delete_cost("default", 999_999) {
+            Err(ApiError::UnknownId(id)) => assert_eq!(id, 999_999),
+            other => panic!("expected UnknownId, got {other:?}"),
+        }
+        match c.stats("ghost") {
+            Err(ApiError::UnknownModel(m)) => assert_eq!(m, "ghost"),
+            other => panic!("expected UnknownModel, got {other:?}"),
+        }
+
+        c.shutdown().unwrap();
         handle.join().unwrap();
     }
 
@@ -175,18 +358,17 @@ mod tests {
         for i in 0..4u32 {
             handles.push(std::thread::spawn(move || {
                 let mut c = Client::connect(addr).unwrap();
-                let req = parse(&format!(r#"{{"op":"delete","ids":[{}]}}"#, 10 + i)).unwrap();
-                let r = c.call(&req).unwrap();
-                assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+                let out = c.delete("default", &[10 + i]).unwrap();
+                assert_eq!(out.deleted, 1);
             }));
         }
         for h in handles {
             h.join().unwrap();
         }
         let mut c = Client::connect(addr).unwrap();
-        let r = c.call(&parse(r#"{"op":"stats"}"#).unwrap()).unwrap();
+        let r = c.stats("default").unwrap();
         assert_eq!(r.get("n_alive").unwrap().as_u64(), Some(146));
-        c.call(&parse(r#"{"op":"shutdown"}"#).unwrap()).unwrap();
+        c.shutdown().unwrap();
         handle.join().unwrap();
     }
 }

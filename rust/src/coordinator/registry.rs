@@ -1,0 +1,524 @@
+//! The multi-tenant model registry (DESIGN.md §10).
+//!
+//! [`Model`] bundles everything one served model owns: its sharded forest
+//! store (DESIGN.md §8), deletion batcher, per-model telemetry, and the
+//! PJRT predictor snapshot state. [`ModelRegistry`] is the concurrent
+//! name → model map the service dispatches into.
+//!
+//! **Locking story.** The registry's `RwLock` guards only the name→`Arc`
+//! mapping and is never held across model work: data-plane dispatch clones
+//! the `Arc` out under the read lock and releases it before touching any
+//! per-model lock, so a slow retrain in one tenant can never block
+//! `create` / `drop` / `list` or another tenant's traffic — and lifecycle
+//! ops only ever contend on the map itself. `drop` removes the entry;
+//! in-flight requests on already-resolved handles finish safely and the
+//! model's batcher thread stops when the last `Arc` drops.
+
+use crate::coordinator::api::{ApiError, ModelSummary};
+use crate::coordinator::batcher::{DeleteOutcome, DeletionBatcher};
+use crate::coordinator::service::ServiceConfig;
+use crate::coordinator::shards::ShardedForest;
+use crate::coordinator::telemetry::Telemetry;
+use crate::data::dataset::InstanceId;
+use crate::forest::forest::DareForest;
+use crate::forest::lazy::LazyPolicy;
+use crate::runtime::{Engine, Manifest, PjrtPredictor};
+use crate::util::json::Value;
+use crate::util::threadpool::default_threads;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+/// One served model: sharded store + batcher + telemetry + PJRT state.
+pub struct Model {
+    name: String,
+    sharded: Arc<ShardedForest>,
+    batcher: DeletionBatcher,
+    telemetry: Arc<Telemetry>,
+    /// RwLock, not Mutex: predicts over a current snapshot share the read
+    /// lock (the backend executable serializes internally), only refreshes
+    /// take the write lock.
+    pjrt: RwLock<Option<PjrtPredictor>>,
+    manifest: Option<Manifest>,
+    /// Per-shard epochs the PJRT tensor snapshot was last refreshed at —
+    /// only ever published after an epoch-validated (consistent) refresh;
+    /// compared against [`ShardedForest::shard_epochs`] so only mutated
+    /// shards are re-tensorized.
+    pjrt_epochs: Mutex<Vec<u64>>,
+}
+
+impl Model {
+    /// Build a served model from a trained forest under the service's
+    /// config (shard count, deferral policy, batching window).
+    pub fn new(name: &str, forest: DareForest, cfg: &ServiceConfig) -> Arc<Model> {
+        // Build the PJRT predictor against the intact forest, then hand the
+        // trees over to the sharded store.
+        let (pjrt, manifest) = if cfg.use_pjrt {
+            match crate::runtime::manifest::locate_artifacts()
+                .ok_or_else(|| anyhow::anyhow!("artifacts not built"))
+                .and_then(|dir| Manifest::load(&dir))
+            {
+                Ok(m) => {
+                    let p = Engine::global()
+                        .and_then(|e| PjrtPredictor::new(e, &m, &forest))
+                        .ok();
+                    (p, Some(m))
+                }
+                Err(_) => (None, None),
+            }
+        } else {
+            (None, None)
+        };
+        let n_shards = if cfg.n_shards == 0 {
+            default_threads()
+        } else {
+            cfg.n_shards
+        };
+        let sharded = Arc::new(ShardedForest::new_with_policy(forest, n_shards, cfg.lazy));
+        let batcher = DeletionBatcher::start(Arc::clone(&sharded), cfg.batch_window, cfg.max_batch);
+        let pjrt_epochs = sharded.shard_epochs();
+        Arc::new(Model {
+            name: name.to_string(),
+            sharded,
+            batcher,
+            telemetry: Arc::new(Telemetry::new()),
+            pjrt: RwLock::new(pjrt),
+            manifest,
+            pjrt_epochs: Mutex::new(pjrt_epochs),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The sharded forest store backing this model.
+    pub fn sharded(&self) -> &Arc<ShardedForest> {
+        &self.sharded
+    }
+
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
+    }
+
+    pub fn telemetry_arc(&self) -> Arc<Telemetry> {
+        Arc::clone(&self.telemetry)
+    }
+
+    /// Whether the PJRT predictor is active for this model.
+    pub fn pjrt_active(&self) -> bool {
+        self.pjrt.read().unwrap().is_some()
+    }
+
+    /// The model's deferral policy (DESIGN.md §9).
+    pub fn lazy_policy(&self) -> LazyPolicy {
+        self.sharded.lazy_policy()
+    }
+
+    /// Feature arity of the served model.
+    pub fn n_features(&self) -> usize {
+        self.sharded.n_features()
+    }
+
+    /// Clone a consistent [`DareForest`] view of the current model+data.
+    pub fn snapshot_forest(&self) -> DareForest {
+        self.sharded.snapshot()
+    }
+
+    // -- data-plane operations (typed; the service encodes the results) --
+
+    /// Batch prediction: positive-class probability per row. PJRT when the
+    /// tensor snapshot is current and consistent, native otherwise; the
+    /// returned tag says which engine served.
+    pub fn predict(&self, rows: &[Vec<f32>]) -> Result<(Vec<f32>, &'static str), ApiError> {
+        // Arity is validated here because the arena descent indexes
+        // row[attr] unchecked — a short row from the wire must be a
+        // request error, not a panic in the handler thread.
+        let want = self.sharded.n_features();
+        for r in rows {
+            if r.len() != want {
+                return Err(ApiError::ArityMismatch {
+                    got: r.len(),
+                    want,
+                });
+            }
+        }
+        self.telemetry.incr("predict_rows", rows.len() as u64);
+
+        // Under a lazy policy the tensorized snapshot may contain pending
+        // (stale) subtrees that these rows never descend into — the epochs
+        // can't tell us which. PJRT serves only a fully-flushed model; with
+        // a backlog, this request takes the native path, which flushes
+        // exactly the subtrees it reads. The compactor drains the backlog
+        // and PJRT re-engages via the normal epoch diff.
+        let pjrt_eligible =
+            !self.sharded.lazy_policy().is_lazy() || self.sharded.pending_retrains() == 0;
+
+        if pjrt_eligible {
+            // Fast path: PJRT predicts over a current snapshot share the
+            // read lock — concurrent predicts don't serialize here.
+            {
+                let pjrt = self.pjrt.read().unwrap();
+                if let Some(pred) = pjrt.as_ref() {
+                    if self.pjrt_snapshot_current() {
+                        if let Ok(probs) = pred.predict(rows) {
+                            return Ok((probs, "pjrt"));
+                        }
+                    }
+                }
+            }
+            // Slow path (model mutated since the last snapshot): take the
+            // write lock, refresh only the dirty shards, and serve if the
+            // refresh was epoch-consistent. The read guard is dropped in
+            // its own block before the write acquisition — same-thread
+            // read→write on one RwLock would deadlock.
+            let pjrt_present = { self.pjrt.read().unwrap().is_some() };
+            if pjrt_present {
+                let mut pjrt_guard = self.pjrt.write().unwrap();
+                if self.refresh_pjrt(&mut pjrt_guard) {
+                    if let Some(pred) = pjrt_guard.as_ref() {
+                        if let Ok(probs) = pred.predict(rows) {
+                            return Ok((probs, "pjrt"));
+                        }
+                    }
+                }
+            }
+        }
+
+        // Native path: per-shard partials, no write lock anywhere.
+        Ok((self.sharded.predict_proba_rows(rows), "native"))
+    }
+
+    /// Route a deletion request through the model's batcher.
+    pub fn delete(&self, ids: Vec<InstanceId>) -> Result<DeleteOutcome, ApiError> {
+        match self.batcher.delete(ids) {
+            Ok(out) => {
+                // A no-op batch (all ids dead/duplicate) mutates nothing
+                // and moves no shard epoch — count only effective
+                // mutations so 'mutations' stays reconcilable with the
+                // epochs.
+                if out.deleted > 0 {
+                    self.telemetry.incr("mutations", 1);
+                }
+                self.telemetry.incr("deleted_ids", out.deleted as u64);
+                self.telemetry.incr("deferred_retrains", out.deferred as u64);
+                Ok(out)
+            }
+            // The batcher only errors when its worker stopped — i.e. the
+            // model is being torn down.
+            Err(_) => Err(ApiError::ShuttingDown),
+        }
+    }
+
+    /// Add a fresh training instance (§6); returns its id.
+    pub fn add(&self, row: &[f32], label: u8) -> Result<InstanceId, ApiError> {
+        let want = self.sharded.n_features();
+        if row.len() != want {
+            return Err(ApiError::ArityMismatch {
+                got: row.len(),
+                want,
+            });
+        }
+        match self.sharded.add(row, label) {
+            Ok(id) => {
+                self.telemetry.incr("mutations", 1);
+                Ok(id)
+            }
+            Err(e) => Err(ApiError::BadRequest(format!("{e}"))),
+        }
+    }
+
+    /// Dry-run total retrain cost of deleting `id`.
+    pub fn delete_cost(&self, id: InstanceId) -> Result<u64, ApiError> {
+        self.sharded.delete_cost(id).map_err(|_| ApiError::UnknownId(id))
+    }
+
+    /// The complete `stats` payload (includes `"ok":true`).
+    pub fn stats(&self) -> Value {
+        let mem = self.sharded.memory();
+        let epochs = self.sharded.shard_epochs();
+        let mut shards = Vec::with_capacity(epochs.len());
+        for (s, &epoch) in epochs.iter().enumerate() {
+            let trees = self.sharded.with_shard_trees(s, |_, ts| ts.len());
+            let mut o = Value::obj();
+            o.set("trees", trees).set("epoch", epoch);
+            shards.push(o);
+        }
+        let (deferred, flushed) = self.sharded.retrain_counters();
+        let mut resp = Value::obj();
+        resp.set("ok", true)
+            .set("model", self.name.as_str())
+            .set("telemetry", self.telemetry.snapshot())
+            .set("n_alive", self.sharded.n_alive())
+            .set("n_trees", self.sharded.n_trees())
+            .set("n_shards", self.sharded.n_shards())
+            .set("shards", Value::Arr(shards))
+            .set("pjrt_active", self.pjrt_active())
+            .set("lazy_policy", self.sharded.lazy_policy().to_string())
+            .set("dirty_subtrees", self.sharded.pending_retrains())
+            .set("deferred_retrains", deferred)
+            .set("flushed_retrains", flushed)
+            .set("model_bytes", mem.total())
+            .set("data_bytes", self.sharded.data_bytes());
+        resp
+    }
+
+    /// Snapshot the model+data to disk (flushes deferred retrains first —
+    /// see [`ShardedForest::snapshot`]).
+    pub fn save(&self, path: &str) -> Result<(), ApiError> {
+        let snapshot = self.sharded.snapshot();
+        crate::forest::serialize::save(&snapshot, std::path::Path::new(path))
+            .map_err(|e| ApiError::BadRequest(format!("{e}")))
+    }
+
+    /// Execute every deferred retrain; returns how many ran.
+    pub fn flush(&self) -> u64 {
+        self.sharded.flush_all()
+    }
+
+    /// Drain up to `budget` deferred retrains per tree.
+    pub fn compact(&self, budget: usize) -> u64 {
+        self.sharded.compact(budget)
+    }
+
+    /// The `list` summary line for this model.
+    pub fn summary(&self) -> ModelSummary {
+        ModelSummary {
+            name: self.name.clone(),
+            n_trees: self.sharded.n_trees(),
+            n_alive: self.sharded.n_alive(),
+            n_shards: self.sharded.n_shards(),
+            lazy_policy: self.sharded.lazy_policy().to_string(),
+            dirty_subtrees: self.sharded.pending_retrains(),
+            pjrt_active: self.pjrt_active(),
+        }
+    }
+
+    /// Whether the PJRT tensor snapshot matches the current (stable) shard
+    /// epochs. `pjrt_epochs` is only published after an epoch-validated
+    /// refresh, so equality implies both current and consistent.
+    fn pjrt_snapshot_current(&self) -> bool {
+        *self.pjrt_epochs.lock().unwrap() == self.sharded.shard_epochs()
+    }
+
+    /// Refresh the PJRT tensor snapshot for shards whose epoch moved since
+    /// the last refresh, epoch-validated like the native read path: the
+    /// epoch vector must be even and unchanged across the whole refresh,
+    /// else the per-shard reads could mix pre-/post-mutation trees into a
+    /// forest state that never existed. Returns true when the snapshot is
+    /// current and consistent (safe to serve); false means serve native
+    /// this request (`pjrt_epochs` stays unpublished, so every shard the
+    /// torn attempt touched is still marked dirty and re-tensorized next
+    /// round). Disables the predictor permanently when a refresh errors —
+    /// the forest outgrew the artifact.
+    fn refresh_pjrt(&self, pjrt_guard: &mut Option<PjrtPredictor>) -> bool {
+        if pjrt_guard.is_none() || self.manifest.is_none() {
+            return false;
+        }
+        let mut last = self.pjrt_epochs.lock().unwrap();
+        for _ in 0..2 {
+            let epochs = self.sharded.shard_epochs();
+            if epochs.iter().any(|e| e % 2 == 1) {
+                // A mutation is in flight (§8 seqlock): this request takes
+                // the native path, which waits it out consistently.
+                return false;
+            }
+            // Lazy policy: a concurrent mutation may have *marked* pending
+            // subtrees since the caller's eligibility check — tensorizing
+            // those collapsed regions would serve non-eager bits. Pending
+            // counters publish under the shard write locks before the
+            // epochs go even, so re-checking here inside the epoch-
+            // validated window closes the race: a mark that lands after
+            // this check moves the epochs and fails the validation below.
+            if self.sharded.lazy_policy().is_lazy() && self.sharded.pending_retrains() > 0 {
+                return false;
+            }
+            if epochs == *last {
+                return true;
+            }
+            let dirty: Vec<usize> =
+                (0..epochs.len()).filter(|&s| epochs[s] != last[s]).collect();
+            let refreshed = (|| -> anyhow::Result<()> {
+                let pred = pjrt_guard.as_mut().unwrap();
+                for &s in &dirty {
+                    self.sharded
+                        .with_shard_trees(s, |first, trees| pred.refresh_trees(first, trees))?;
+                }
+                pred.rebuild_literals()
+            })();
+            if refreshed.is_err() {
+                *pjrt_guard = None;
+                return false;
+            }
+            // Validate: if a mutation interleaved, the snapshot may be torn
+            // — do not publish; retry once, then fall back to native.
+            if self.sharded.shard_epochs() == epochs {
+                *last = epochs;
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// The concurrent name → model map. See the module docs for the locking
+/// contract.
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: RwLock<BTreeMap<String, Arc<Model>>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        ModelRegistry {
+            models: RwLock::new(BTreeMap::new()),
+        }
+    }
+
+    /// Resolve a name to its model handle.
+    pub fn get(&self, name: &str) -> Result<Arc<Model>, ApiError> {
+        self.models
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| ApiError::UnknownModel(name.to_string()))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.models.read().unwrap().contains_key(name)
+    }
+
+    /// Register a model under its name; rejects duplicates.
+    pub fn insert(&self, model: Arc<Model>) -> Result<(), ApiError> {
+        let mut m = self.models.write().unwrap();
+        if m.contains_key(model.name()) {
+            return Err(ApiError::BadRequest(format!(
+                "model '{}' already exists",
+                model.name()
+            )));
+        }
+        m.insert(model.name().to_string(), model);
+        Ok(())
+    }
+
+    /// Unregister and return the model.
+    pub fn remove(&self, name: &str) -> Result<Arc<Model>, ApiError> {
+        self.models
+            .write()
+            .unwrap()
+            .remove(name)
+            .ok_or_else(|| ApiError::UnknownModel(name.to_string()))
+    }
+
+    /// All registered models in name order (the map lock is released
+    /// before the returned handles are used).
+    pub fn models(&self) -> Vec<Arc<Model>> {
+        self.models.read().unwrap().values().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.read().unwrap().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::forest::params::Params;
+
+    fn forest(seed: u64) -> DareForest {
+        let d = generate(
+            &SynthSpec {
+                n: 160,
+                informative: 3,
+                redundant: 0,
+                noise: 2,
+                flip: 0.05,
+                ..Default::default()
+            },
+            seed,
+        );
+        DareForest::fit(
+            d,
+            &Params {
+                n_trees: 3,
+                max_depth: 5,
+                k: 5,
+                ..Default::default()
+            },
+            seed ^ 0x17,
+        )
+    }
+
+    fn cfg() -> ServiceConfig {
+        ServiceConfig {
+            use_pjrt: false,
+            n_shards: 2,
+            batch_window: std::time::Duration::from_millis(1),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn registry_resolves_inserts_and_drops() {
+        let reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        assert!(matches!(reg.get("a"), Err(ApiError::UnknownModel(n)) if n == "a"));
+        reg.insert(Model::new("a", forest(1), &cfg())).unwrap();
+        reg.insert(Model::new("b", forest(2), &cfg())).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert!(reg.contains("a"));
+        // duplicate names rejected with a typed error
+        let dup = Model::new("a", forest(3), &cfg());
+        assert!(matches!(reg.insert(dup), Err(ApiError::BadRequest(_))));
+        // listing is name-ordered
+        let names: Vec<String> =
+            reg.models().iter().map(|m| m.name().to_string()).collect();
+        assert_eq!(names, vec!["a".to_string(), "b".to_string()]);
+        let dropped = reg.remove("a").unwrap();
+        assert_eq!(dropped.name(), "a");
+        assert!(!reg.contains("a"));
+        assert!(matches!(reg.remove("a"), Err(ApiError::UnknownModel(_))));
+    }
+
+    #[test]
+    fn models_are_isolated_stores() {
+        let reg = ModelRegistry::new();
+        reg.insert(Model::new("a", forest(5), &cfg())).unwrap();
+        reg.insert(Model::new("b", forest(5), &cfg())).unwrap();
+        let a = reg.get("a").unwrap();
+        let b = reg.get("b").unwrap();
+        let probe = a.sharded().with_data(|d| d.row(0));
+        let before = b.predict(&[probe.clone()]).unwrap();
+        // a mutation in 'a' must not move 'b' at all
+        let out = a.delete(vec![0, 1, 2]).unwrap();
+        assert_eq!(out.deleted, 3);
+        assert_eq!(b.predict(&[probe]).unwrap(), before);
+        assert_eq!(b.sharded().n_alive(), 160);
+        assert_eq!(a.sharded().n_alive(), 157);
+        // per-model telemetry: only 'a' recorded the mutation
+        assert_eq!(a.telemetry().counter("mutations"), 1);
+        assert_eq!(b.telemetry().counter("mutations"), 0);
+    }
+
+    #[test]
+    fn typed_errors_from_model_ops() {
+        let m = Model::new("m", forest(9), &cfg());
+        let p = m.n_features();
+        assert!(matches!(
+            m.predict(&[vec![0.0; p + 1]]),
+            Err(ApiError::ArityMismatch { want, .. }) if want == p
+        ));
+        assert!(matches!(
+            m.add(&[0.0], 1),
+            Err(ApiError::ArityMismatch { got: 1, .. })
+        ));
+        assert_eq!(m.delete_cost(999_999), Err(ApiError::UnknownId(999_999)));
+        assert!(m.delete_cost(5).is_ok());
+    }
+}

@@ -1,34 +1,39 @@
-//! The unlearning service: a request router over a **sharded** DaRE forest
-//! (DESIGN.md §8).
+//! The unlearning service: the typed, versioned wire API (DESIGN.md §10)
+//! over a multi-tenant [`ModelRegistry`].
 //!
-//! Requests (JSON objects) are dispatched to:
-//! - `predict` — read path: per-shard partial sums reduced in global tree
-//!   order (never takes a write lock), via the PJRT predictor when the
-//!   forest fits the compiled artifact — the predictor's tensor snapshot is
-//!   refreshed lazily, re-tensorizing only shards whose epoch moved;
-//! - `delete` — write path: routed through the [`DeletionBatcher`] so
-//!   concurrent GDPR requests share the mutation thread / retrain batches;
-//! - `add` — write path (continual learning §6);
-//! - `delete_cost` — the dry-run adversary signal (read path);
-//! - `stats` — telemetry + model shape + per-shard epochs;
-//! - `save` — snapshot the model+data to disk;
-//! - `shutdown` — stop a `serve()` loop.
+//! A request travels through three separately testable layers:
 //!
-//! Wire format: one JSON object per line over TCP (see `protocol`).
+//! 1. **decode** — [`api::decode`] turns the wire JSON into a typed
+//!    [`Request`] (version check, model routing, payload validation);
+//! 2. **dispatch** — [`UnlearningService::dispatch`] resolves the model in
+//!    the registry and runs the typed operation;
+//! 3. **encode** — [`api::encode_response`] serializes the typed
+//!    [`Response`] (data-plane payloads are byte-identical to the
+//!    pre-registry v0 wire format).
+//!
+//! Data-plane ops (`predict` / `delete` / `add` / `delete_cost` / `stats`
+//! / `flush` / `compact` / `save`) address one model; lifecycle ops
+//! (`create` / `load` / `drop` / `list`) manage the registry itself.
+//! Un-namespaced v0 requests route to the `"default"` model, which
+//! [`UnlearningService::new`] installs — so the single-model surface keeps
+//! working unchanged. Wire format: one JSON object per line over TCP (see
+//! `protocol`).
 
-use crate::coordinator::batcher::DeletionBatcher;
+use crate::coordinator::api::{self, ApiError, CreateSpec, Op, Request, Response, DEFAULT_MODEL};
+use crate::coordinator::registry::{Model, ModelRegistry};
 use crate::coordinator::shards::ShardedForest;
 use crate::coordinator::telemetry::Telemetry;
 use crate::forest::forest::DareForest;
 use crate::forest::lazy::LazyPolicy;
-use crate::runtime::{Engine, Manifest, PjrtPredictor};
+use crate::forest::params::Params;
 use crate::util::json::Value;
 use crate::util::threadpool::default_threads;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex, RwLock, Weak};
+use std::sync::{Arc, Weak};
 use std::time::Duration;
 
-/// Service configuration.
+/// Service configuration; also the template every `create`/`load`ed model
+/// inherits (shard count, deferral policy, batching window).
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
     /// Batching window for deletion requests.
@@ -46,7 +51,7 @@ pub struct ServiceConfig {
     /// leg serves the whole tier-1 suite under `on_read`.
     pub lazy: LazyPolicy,
     /// How often the background compactor wakes to drain deferred retrains
-    /// (ignored under `LazyPolicy::Eager`).
+    /// (a no-op sweep when no model has a backlog).
     pub compact_interval: Duration,
     /// Deferred retrains the compactor executes per tree per tick.
     pub compact_budget: usize,
@@ -66,382 +71,258 @@ impl Default for ServiceConfig {
     }
 }
 
-/// The unlearning service.
+/// The unlearning service: a [`ModelRegistry`] behind the typed wire API.
 pub struct UnlearningService {
-    sharded: Arc<ShardedForest>,
-    batcher: DeletionBatcher,
-    telemetry: Telemetry,
-    /// RwLock, not Mutex: predicts over a current snapshot share the read
-    /// lock (the backend executable serializes internally), only refreshes
-    /// take the write lock.
-    pjrt: RwLock<Option<PjrtPredictor>>,
-    manifest: Option<Manifest>,
-    /// Per-shard epochs the PJRT tensor snapshot was last refreshed at —
-    /// only ever published after an epoch-validated (consistent) refresh;
-    /// compared against [`ShardedForest::shard_epochs`] so only mutated
-    /// shards are re-tensorized.
-    pjrt_epochs: Mutex<Vec<u64>>,
+    registry: ModelRegistry,
+    cfg: ServiceConfig,
     shutdown: AtomicBool,
 }
 
 impl UnlearningService {
+    /// Single-model service: installs `forest` as the `"default"` model
+    /// (the target of un-namespaced v0 requests).
     pub fn new(forest: DareForest, cfg: ServiceConfig) -> Arc<Self> {
-        // Build the PJRT predictor against the intact forest, then hand the
-        // trees over to the sharded store.
-        let (pjrt, manifest) = if cfg.use_pjrt {
-            match crate::runtime::manifest::locate_artifacts()
-                .ok_or_else(|| anyhow::anyhow!("artifacts not built"))
-                .and_then(|dir| Manifest::load(&dir))
-            {
-                Ok(m) => {
-                    let p = Engine::global()
-                        .and_then(|e| PjrtPredictor::new(e, &m, &forest))
-                        .ok();
-                    (p, Some(m))
-                }
-                Err(_) => (None, None),
-            }
-        } else {
-            (None, None)
-        };
-        let n_shards = if cfg.n_shards == 0 {
-            default_threads()
-        } else {
-            cfg.n_shards
-        };
-        let sharded = Arc::new(ShardedForest::new_with_policy(forest, n_shards, cfg.lazy));
-        let batcher = DeletionBatcher::start(Arc::clone(&sharded), cfg.batch_window, cfg.max_batch);
-        let pjrt_epochs = sharded.shard_epochs();
+        Self::with_models(vec![(DEFAULT_MODEL.to_string(), forest)], cfg)
+    }
+
+    /// Multi-tenant service: install each named forest. Names must be
+    /// unique; v0 requests only reach a model literally named `"default"`.
+    pub fn with_models(models: Vec<(String, DareForest)>, cfg: ServiceConfig) -> Arc<Self> {
+        let registry = ModelRegistry::new();
+        for (name, forest) in models {
+            registry
+                .insert(Model::new(&name, forest, &cfg))
+                .expect("duplicate model name at startup");
+        }
         let svc = Arc::new(UnlearningService {
-            sharded,
-            batcher,
-            telemetry: Telemetry::new(),
-            pjrt: RwLock::new(pjrt),
-            manifest,
-            pjrt_epochs: Mutex::new(pjrt_epochs),
+            registry,
+            cfg: cfg.clone(),
             shutdown: AtomicBool::new(false),
         });
-        if cfg.lazy.is_lazy() {
-            spawn_compactor(Arc::downgrade(&svc), cfg.compact_interval, cfg.compact_budget);
-        }
+        spawn_compactor(Arc::downgrade(&svc), cfg.compact_interval, cfg.compact_budget);
         svc
     }
 
-    /// Whether the PJRT predictor is active.
+    /// The model registry (name → served model).
+    pub fn registry(&self) -> &ModelRegistry {
+        &self.registry
+    }
+
+    /// The `"default"` model's handle. Panics when it was dropped — the
+    /// single-model accessors below exist for that model only.
+    pub fn default_model(&self) -> Arc<Model> {
+        self.registry
+            .get(DEFAULT_MODEL)
+            .expect("service has no 'default' model")
+    }
+
+    /// Whether the PJRT predictor is active (default model).
     pub fn pjrt_active(&self) -> bool {
-        self.pjrt.read().unwrap().is_some()
+        self.default_model().pjrt_active()
     }
 
-    /// The service's deferral policy (DESIGN.md §9).
+    /// The default model's deferral policy (DESIGN.md §9).
     pub fn lazy_policy(&self) -> LazyPolicy {
-        self.sharded.lazy_policy()
+        self.default_model().lazy_policy()
     }
 
-    /// The sharded forest store backing this service.
-    pub fn sharded(&self) -> &Arc<ShardedForest> {
-        &self.sharded
+    /// The sharded forest store backing the default model.
+    pub fn sharded(&self) -> Arc<ShardedForest> {
+        Arc::clone(self.default_model().sharded())
     }
 
-    /// Clone a consistent [`DareForest`] view of the current model+data.
+    /// Clone a consistent [`DareForest`] view of the default model.
     pub fn snapshot_forest(&self) -> DareForest {
-        self.sharded.snapshot()
+        self.default_model().snapshot_forest()
     }
 
-    /// Feature arity of the served model.
+    /// Feature arity of the default model.
     pub fn n_features(&self) -> usize {
-        self.sharded.n_features()
+        self.default_model().n_features()
     }
 
-    pub fn telemetry(&self) -> &Telemetry {
-        &self.telemetry
+    /// The default model's telemetry registry.
+    pub fn telemetry(&self) -> Arc<Telemetry> {
+        self.default_model().telemetry_arc()
     }
 
     pub fn is_shutdown(&self) -> bool {
         self.shutdown.load(Ordering::SeqCst)
     }
 
-    /// Handle one request object, returning the response object.
+    /// Handle one wire object: decode → dispatch → encode.
     pub fn handle(&self, req: &Value) -> Value {
-        let op = req.get("op").and_then(Value::as_str).unwrap_or("");
-        match op {
-            "predict" => self.telemetry.timed("predict", || {
-                let r = self.op_predict(req);
-                let ok = r.get("ok").and_then(Value::as_bool) == Some(true);
-                (r, ok)
-            }),
-            "delete" => self.telemetry.timed("delete", || {
-                let r = self.op_delete(req);
-                let ok = r.get("ok").and_then(Value::as_bool) == Some(true);
-                (r, ok)
-            }),
-            "add" => self.telemetry.timed("add", || {
-                let r = self.op_add(req);
-                let ok = r.get("ok").and_then(Value::as_bool) == Some(true);
-                (r, ok)
-            }),
-            "delete_cost" => self.telemetry.timed("delete_cost", || {
-                let r = self.op_delete_cost(req);
-                let ok = r.get("ok").and_then(Value::as_bool) == Some(true);
-                (r, ok)
-            }),
-            "stats" => self.op_stats(),
-            "save" => self.op_save(req),
-            "shutdown" => {
+        let resp = match api::decode(req) {
+            Ok(r) => self.dispatch(r),
+            Err(e) => Response::Err(e),
+        };
+        api::encode_response(&resp)
+    }
+
+    /// Run one typed request against the registry.
+    pub fn dispatch(&self, req: Request) -> Response {
+        if self.is_shutdown() && !matches!(req.op, Op::Shutdown) {
+            return Response::Err(ApiError::ShuttingDown);
+        }
+        match req.op {
+            Op::Shutdown => {
                 self.shutdown.store(true, Ordering::SeqCst);
-                ok_response()
+                Response::Ok
             }
-            _ => err_response(&format!("unknown op '{op}'")),
+            Op::List => Response::List {
+                models: self.registry.models().iter().map(|m| m.summary()).collect(),
+            },
+            Op::Create(spec) => self.op_create(&req.model, &spec),
+            Op::Load { path } => self.op_load(&req.model, &path),
+            Op::DropModel => match self.registry.remove(&req.model) {
+                Ok(m) => Response::Dropped {
+                    model: m.name().to_string(),
+                },
+                Err(e) => Response::Err(e),
+            },
+            // Data-plane: resolve the model (the registry lock is released
+            // inside `get`, before any per-model lock is touched).
+            op => match self.registry.get(&req.model) {
+                Ok(model) => dispatch_model(&model, op),
+                Err(e) => Response::Err(e),
+            },
         }
     }
 
-    /// Whether the PJRT tensor snapshot matches the current (stable) shard
-    /// epochs. `pjrt_epochs` is only published after an epoch-validated
-    /// refresh, so equality implies both current and consistent.
-    fn pjrt_snapshot_current(&self) -> bool {
-        *self.pjrt_epochs.lock().unwrap() == self.sharded.shard_epochs()
-    }
-
-    /// Refresh the PJRT tensor snapshot for shards whose epoch moved since
-    /// the last refresh, epoch-validated like the native read path: the
-    /// epoch vector must be even and unchanged across the whole refresh,
-    /// else the per-shard reads could mix pre-/post-mutation trees into a
-    /// forest state that never existed. Returns true when the snapshot is
-    /// current and consistent (safe to serve); false means serve native
-    /// this request (`pjrt_epochs` stays unpublished, so every shard the
-    /// torn attempt touched is still marked dirty and re-tensorized next
-    /// round). Disables the predictor permanently when a refresh errors —
-    /// the forest outgrew the artifact.
-    fn refresh_pjrt(&self, pjrt_guard: &mut Option<PjrtPredictor>) -> bool {
-        if pjrt_guard.is_none() || self.manifest.is_none() {
-            return false;
+    /// `create`: train a fresh model from a corpus dataset reference with
+    /// the paper-tuned hyperparameters (plus any explicit overrides) and
+    /// register it under `name`.
+    fn op_create(&self, name: &str, spec: &CreateSpec) -> Response {
+        if let Err(e) = validate_name(name) {
+            return Response::Err(e);
         }
-        let mut last = self.pjrt_epochs.lock().unwrap();
-        for _ in 0..2 {
-            let epochs = self.sharded.shard_epochs();
-            if epochs.iter().any(|e| e % 2 == 1) {
-                // A mutation is in flight (§8 seqlock): this request takes
-                // the native path, which waits it out consistently.
-                return false;
-            }
-            // Lazy policy: a concurrent mutation may have *marked* pending
-            // subtrees since the caller's eligibility check — tensorizing
-            // those collapsed regions would serve non-eager bits. Pending
-            // counters publish under the shard write locks before the
-            // epochs go even, so re-checking here inside the epoch-
-            // validated window closes the race: a mark that lands after
-            // this check moves the epochs and fails the validation below.
-            if self.sharded.lazy_policy().is_lazy() && self.sharded.pending_retrains() > 0 {
-                return false;
-            }
-            if epochs == *last {
-                return true;
-            }
-            let dirty: Vec<usize> =
-                (0..epochs.len()).filter(|&s| epochs[s] != last[s]).collect();
-            let refreshed = (|| -> anyhow::Result<()> {
-                let pred = pjrt_guard.as_mut().unwrap();
-                for &s in &dirty {
-                    self.sharded
-                        .with_shard_trees(s, |first, trees| pred.refresh_trees(first, trees))?;
-                }
-                pred.rebuild_literals()
-            })();
-            if refreshed.is_err() {
-                *pjrt_guard = None;
-                return false;
-            }
-            // Validate: if a mutation interleaved, the snapshot may be torn
-            // — do not publish; retry once, then fall back to native.
-            if self.sharded.shard_epochs() == epochs {
-                *last = epochs;
-                return true;
-            }
+        // Reject duplicates before the (expensive) training run; the
+        // insert below re-checks under the write lock, so a racing create
+        // still resolves to exactly one winner.
+        if self.registry.contains(name) {
+            return Response::Err(ApiError::BadRequest(format!(
+                "model '{name}' already exists"
+            )));
         }
-        false
-    }
-
-    fn op_predict(&self, req: &Value) -> Value {
-        let Some(rows_json) = req.get("rows").and_then(Value::as_arr) else {
-            return err_response("predict needs 'rows': [[f32,...],...]");
+        let Some(info) = crate::data::registry::find(&spec.dataset) else {
+            return Response::Err(ApiError::BadRequest(format!(
+                "unknown dataset '{}'",
+                spec.dataset
+            )));
         };
-        let p = self.sharded.n_features();
-        let mut rows: Vec<Vec<f32>> = Vec::with_capacity(rows_json.len());
-        for r in rows_json {
-            let Some(cells) = r.as_arr() else {
-                return err_response("rows must be arrays of numbers");
-            };
-            // Arity is validated here because the arena descent indexes
-            // row[attr] unchecked — a short row from the wire must be a
-            // request error, not a panic in the handler thread.
-            if cells.len() != p {
-                return err_response(&format!(
-                    "row has {} features, model expects {p}",
-                    cells.len()
-                ));
-            }
-            rows.push(cells.iter().map(|c| c.as_f64().unwrap_or(0.0) as f32).collect());
+        let mut params = Params::from_paper(&info.gini, spec.d_rmax.unwrap_or(0));
+        if let Some(t) = spec.n_trees {
+            params.n_trees = t;
         }
-        self.telemetry.incr("predict_rows", rows.len() as u64);
-
-        // Under a lazy policy the tensorized snapshot may contain pending
-        // (stale) subtrees that these rows never descend into — the epochs
-        // can't tell us which. PJRT serves only a fully-flushed model; with
-        // a backlog, this request takes the native path, which flushes
-        // exactly the subtrees it reads. The compactor drains the backlog
-        // and PJRT re-engages via the normal epoch diff.
-        let pjrt_eligible =
-            !self.sharded.lazy_policy().is_lazy() || self.sharded.pending_retrains() == 0;
-
-        // Fast path: PJRT predicts over a current snapshot share the read
-        // lock — concurrent predicts don't serialize on the service layer.
-        if pjrt_eligible {
-            {
-                let pjrt = self.pjrt.read().unwrap();
-                if let Some(pred) = pjrt.as_ref() {
-                    if self.pjrt_snapshot_current() {
-                        if let Ok(probs) = pred.predict(&rows) {
-                            return pjrt_response(&probs);
-                        }
-                    }
-                }
-            }
-            // Slow path (model mutated since the last snapshot): take the
-            // write lock, refresh only the dirty shards, and serve if the
-            // refresh was epoch-consistent. The read guard is dropped in
-            // its own block before the write acquisition — same-thread
-            // read→write on one RwLock would deadlock.
-            let pjrt_present = { self.pjrt.read().unwrap().is_some() };
-            if pjrt_present {
-                let mut pjrt_guard = self.pjrt.write().unwrap();
-                if self.refresh_pjrt(&mut pjrt_guard) {
-                    if let Some(pred) = pjrt_guard.as_ref() {
-                        if let Ok(probs) = pred.predict(&rows) {
-                            return pjrt_response(&probs);
-                        }
-                    }
-                }
-            }
+        if let Some(d) = spec.max_depth {
+            params.max_depth = d;
         }
-
-        // Native path: per-shard partials, no write lock anywhere.
-        let probs = self.sharded.predict_proba_rows(&rows);
-        let mut resp = ok_response();
-        resp.set("probs", probs.iter().map(|p| *p as f64).collect::<Vec<f64>>());
-        resp.set("engine", "native");
-        resp
+        if let Some(k) = spec.k {
+            params.k = k;
+        }
+        params.n_threads = default_threads();
+        // Wire-supplied hyperparameters must come back as a typed error,
+        // never reach the `validate().expect()` panic inside `fit` (and a
+        // rejected request shouldn't pay for dataset generation).
+        if let Err(e) = params.validate() {
+            return Response::Err(ApiError::BadRequest(format!("{e}")));
+        }
+        let data = info.generate(spec.scale_div, spec.seed);
+        let forest = DareForest::fit(data, &params, spec.seed);
+        self.install(name, forest)
     }
 
-    fn op_delete(&self, req: &Value) -> Value {
-        let Some(ids_json) = req.get("ids").and_then(Value::as_arr) else {
-            return err_response("delete needs 'ids': [u32,...]");
-        };
-        let ids: Vec<u32> = ids_json.iter().filter_map(|v| v.as_u64()).map(|v| v as u32).collect();
-        if ids.len() != ids_json.len() {
-            return err_response("ids must be non-negative integers");
+    /// `load`: install a serialized snapshot as a new registry model.
+    fn op_load(&self, name: &str, path: &str) -> Response {
+        if let Err(e) = validate_name(name) {
+            return Response::Err(e);
         }
-        match self.batcher.delete(ids) {
-            Ok(out) => {
-                // A no-op batch (all ids dead/duplicate) mutates nothing and
-                // moves no shard epoch — count only effective mutations so
-                // 'mutations' stays reconcilable with the epochs.
-                if out.deleted > 0 {
-                    self.telemetry.incr("mutations", 1);
-                }
-                self.telemetry.incr("deleted_ids", out.deleted as u64);
-                self.telemetry.incr("deferred_retrains", out.deferred as u64);
-                let mut resp = ok_response();
-                resp.set("deleted", out.deleted)
-                    .set("skipped", out.skipped)
-                    .set("retrain_cost", out.retrain_cost)
-                    .set("deferred", out.deferred)
-                    .set("batch_size", out.batch_size);
-                resp
-            }
-            Err(e) => err_response(&format!("{e}")),
+        if self.registry.contains(name) {
+            return Response::Err(ApiError::BadRequest(format!(
+                "model '{name}' already exists"
+            )));
+        }
+        match crate::forest::serialize::load(std::path::Path::new(path)) {
+            Ok(forest) => self.install(name, forest),
+            Err(e) => Response::Err(ApiError::BadRequest(format!("{e}"))),
         }
     }
 
-    fn op_add(&self, req: &Value) -> Value {
-        let Some(row_json) = req.get("row").and_then(Value::as_arr) else {
-            return err_response("add needs 'row': [f32,...]");
-        };
-        let Some(label) = req.get("label").and_then(Value::as_u64) else {
-            return err_response("add needs 'label': 0|1");
-        };
-        if label > 1 {
-            return err_response("label must be 0 or 1");
-        }
-        let row: Vec<f32> = row_json.iter().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect();
-        match self.sharded.add(&row, label as u8) {
-            Ok(id) => {
-                self.telemetry.incr("mutations", 1);
-                let mut resp = ok_response();
-                resp.set("id", id);
-                resp
-            }
-            Err(e) => err_response(&format!("{e}")),
-        }
-    }
-
-    fn op_delete_cost(&self, req: &Value) -> Value {
-        let Some(id) = req.get("id").and_then(Value::as_u64) else {
-            return err_response("delete_cost needs 'id'");
-        };
-        match self.sharded.delete_cost(id as u32) {
-            Ok(cost) => {
-                let mut resp = ok_response();
-                resp.set("cost", cost);
-                resp
-            }
-            Err(_) => err_response("not a live instance"),
-        }
-    }
-
-    fn op_stats(&self) -> Value {
-        let mem = self.sharded.memory();
-        let epochs = self.sharded.shard_epochs();
-        let mut shards = Vec::with_capacity(epochs.len());
-        for (s, &epoch) in epochs.iter().enumerate() {
-            let trees = self.sharded.with_shard_trees(s, |_, ts| ts.len());
-            let mut o = Value::obj();
-            o.set("trees", trees).set("epoch", epoch);
-            shards.push(o);
-        }
-        let (deferred, flushed) = self.sharded.retrain_counters();
-        let mut resp = ok_response();
-        resp.set("telemetry", self.telemetry.snapshot())
-            .set("n_alive", self.sharded.n_alive())
-            .set("n_trees", self.sharded.n_trees())
-            .set("n_shards", self.sharded.n_shards())
-            .set("shards", Value::Arr(shards))
-            .set("pjrt_active", self.pjrt_active())
-            .set("lazy_policy", self.sharded.lazy_policy().to_string())
-            .set("dirty_subtrees", self.sharded.pending_retrains())
-            .set("deferred_retrains", deferred)
-            .set("flushed_retrains", flushed)
-            .set("model_bytes", mem.total())
-            .set("data_bytes", self.sharded.data_bytes());
-        resp
-    }
-
-    fn op_save(&self, req: &Value) -> Value {
-        let Some(path) = req.get("path").and_then(Value::as_str) else {
-            return err_response("save needs 'path'");
-        };
-        let snapshot = self.sharded.snapshot();
-        match crate::forest::serialize::save(&snapshot, std::path::Path::new(path)) {
-            Ok(()) => ok_response(),
-            Err(e) => err_response(&format!("{e}")),
+    fn install(&self, name: &str, forest: DareForest) -> Response {
+        let model = Model::new(name, forest, &self.cfg);
+        let n_trees = model.sharded().n_trees();
+        let n_alive = model.sharded().n_alive();
+        match self.registry.insert(model) {
+            Ok(()) => Response::ModelReady {
+                model: name.to_string(),
+                n_trees,
+                n_alive,
+            },
+            Err(e) => Response::Err(e),
         }
     }
 }
 
-/// The background compactor (DESIGN.md §9): a detached thread that drains
-/// deferred retrains during idle ticks so the flush cost is paid off the
-/// request path. Holds only a `Weak` handle — dropping the last service
-/// `Arc` (or the shutdown op) stops it within one tick. Timing is
-/// nondeterministic and harmlessly so: retrains are path-seeded, so *when*
-/// a flush runs cannot change what it builds.
+fn validate_name(name: &str) -> Result<(), ApiError> {
+    if name.is_empty() || name.len() > 128 {
+        return Err(ApiError::BadRequest(
+            "model name must be 1..=128 bytes".to_string(),
+        ));
+    }
+    Ok(())
+}
+
+/// Run one data-plane op against a resolved model, recording latency and
+/// outcome in the model's telemetry for the four high-traffic ops.
+fn dispatch_model(model: &Model, op: Op) -> Response {
+    match op {
+        Op::Predict { rows } => model.telemetry().timed("predict", || {
+            match model.predict(&rows) {
+                Ok((probs, engine)) => (Response::Predict { probs, engine }, true),
+                Err(e) => (Response::Err(e), false),
+            }
+        }),
+        Op::Delete { ids } => model.telemetry().timed("delete", || {
+            match model.delete(ids) {
+                Ok(out) => (Response::Delete(out), true),
+                Err(e) => (Response::Err(e), false),
+            }
+        }),
+        Op::Add { row, label } => model.telemetry().timed("add", || {
+            match model.add(&row, label) {
+                Ok(id) => (Response::Add { id }, true),
+                Err(e) => (Response::Err(e), false),
+            }
+        }),
+        Op::DeleteCost { id } => model.telemetry().timed("delete_cost", || {
+            match model.delete_cost(id) {
+                Ok(cost) => (Response::DeleteCost { cost }, true),
+                Err(e) => (Response::Err(e), false),
+            }
+        }),
+        Op::Stats => Response::Stats(model.stats()),
+        Op::Flush => Response::Flushed {
+            flushed: model.flush(),
+        },
+        Op::Compact { budget } => Response::Flushed {
+            flushed: model.compact(budget),
+        },
+        Op::Save { path } => match model.save(&path) {
+            Ok(()) => Response::Ok,
+            Err(e) => Response::Err(e),
+        },
+        Op::Shutdown | Op::List | Op::Create(_) | Op::Load { .. } | Op::DropModel => {
+            unreachable!("control-plane op routed to a model")
+        }
+    }
+}
+
+/// The background compactor (DESIGN.md §9): a detached thread that sweeps
+/// every registered model and drains deferred retrains during idle ticks,
+/// so the flush cost is paid off the request path. Holds only a `Weak`
+/// handle — dropping the last service `Arc` (or the shutdown op) stops it
+/// within one tick. Timing is nondeterministic and harmlessly so: retrains
+/// are path-seeded, so *when* a flush runs cannot change what it builds.
 fn spawn_compactor(svc: Weak<UnlearningService>, interval: Duration, budget: usize) {
     let _ = std::thread::Builder::new()
         .name("dare-compactor".into())
@@ -453,32 +334,15 @@ fn spawn_compactor(svc: Weak<UnlearningService>, interval: Duration, budget: usi
             if svc.is_shutdown() {
                 return;
             }
-            if svc.sharded.pending_retrains() > 0 {
-                let flushed = svc.sharded.compact(budget);
-                if flushed > 0 {
-                    svc.telemetry.incr("compacted_retrains", flushed);
+            for model in svc.registry.models() {
+                if model.lazy_policy().is_lazy() && model.sharded().pending_retrains() > 0 {
+                    let flushed = model.sharded().compact(budget);
+                    if flushed > 0 {
+                        model.telemetry().incr("compacted_retrains", flushed);
+                    }
                 }
             }
         });
-}
-
-fn pjrt_response(probs: &[f32]) -> Value {
-    let mut resp = ok_response();
-    resp.set("probs", probs.iter().map(|p| *p as f64).collect::<Vec<f64>>());
-    resp.set("engine", "pjrt");
-    resp
-}
-
-pub fn ok_response() -> Value {
-    let mut v = Value::obj();
-    v.set("ok", true);
-    v
-}
-
-pub fn err_response(msg: &str) -> Value {
-    let mut v = Value::obj();
-    v.set("ok", false).set("error", msg);
-    v
 }
 
 #[cfg(test)]
@@ -552,6 +416,7 @@ mod tests {
         let s = svc.handle(&req(r#"{"op":"stats"}"#));
         assert_eq!(s.get("n_alive").unwrap().as_u64(), Some(197));
         assert_eq!(s.get("n_shards").unwrap().as_u64(), Some(2));
+        assert_eq!(s.get("model").unwrap().as_str(), Some(DEFAULT_MODEL));
         let tele = s.get("telemetry").unwrap().get("ops").unwrap();
         assert!(tele.get("delete").is_some());
         // the mutation advanced every shard's epoch by exactly 2 (seqlock);
@@ -599,6 +464,10 @@ mod tests {
         assert!(r.get("cost").unwrap().as_u64().is_some());
         let bad = svc.handle(&req(r#"{"op":"delete_cost","id":999999}"#));
         assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(
+            bad.get("error").unwrap().get("code").unwrap().as_str(),
+            Some("unknown_id")
+        );
     }
 
     #[test]
@@ -612,11 +481,82 @@ mod tests {
             r#"{"op":"add","row":[1.0],"label":1}"#,  // wrong arity
             r#"{"op":"predict","rows":[[1.0]]}"#,     // wrong arity: error, not a panic
             r#"{"op":"predict","rows":[[]]}"#,        // empty row
+            r#"{"v":1,"model":"ghost","op":"stats"}"#, // unknown model
         ] {
             let r = svc.handle(&req(bad));
             assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{bad}");
-            assert!(r.get("error").is_some());
+            // structured error object + the v0 string alias
+            let eo = r.get("error").unwrap();
+            assert!(eo.get("code").unwrap().as_str().is_some(), "{bad}");
+            assert_eq!(
+                r.get("error_msg").unwrap().as_str(),
+                eo.get("msg").unwrap().as_str(),
+                "{bad}"
+            );
         }
+    }
+
+    #[test]
+    fn lifecycle_ops_manage_the_registry() {
+        let svc = service();
+        // list: the default model is registered
+        let r = svc.handle(&req(r#"{"v":1,"op":"list"}"#));
+        let models = r.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(models.len(), 1);
+        assert_eq!(models[0].get("name").unwrap().as_str(), Some(DEFAULT_MODEL));
+
+        // save the default model, load it back under a new name
+        let path = std::env::temp_dir().join("dare_service_lifecycle.json");
+        let r = svc.handle(&req(&format!(
+            r#"{{"op":"save","path":"{}"}}"#,
+            path.display()
+        )));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        let r = svc.handle(&req(&format!(
+            r#"{{"v":1,"model":"replica","op":"load","path":"{}"}}"#,
+            path.display()
+        )));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        assert_eq!(r.get("model").unwrap().as_str(), Some("replica"));
+        assert_eq!(svc.registry().len(), 2);
+
+        // the replica serves byte-identical predictions
+        let p = svc.n_features();
+        let row = vec!["0.4"; p].join(",");
+        let a = svc.handle(&req(&format!(r#"{{"op":"predict","rows":[[{row}]]}}"#)));
+        let b = svc.handle(&req(&format!(
+            r#"{{"v":1,"model":"replica","op":"predict","rows":[[{row}]]}}"#
+        )));
+        assert_eq!(a.to_string(), b.to_string());
+
+        // deleting in the replica leaves the default model untouched
+        let r = svc.handle(&req(r#"{"v":1,"model":"replica","op":"delete","ids":[0,1]}"#));
+        assert_eq!(r.get("deleted").unwrap().as_u64(), Some(2));
+        assert_eq!(svc.sharded().n_alive(), 200);
+        let b2 = svc.handle(&req(&format!(
+            r#"{{"v":1,"model":"{DEFAULT_MODEL}","op":"predict","rows":[[{row}]]}}"#
+        )));
+        assert_eq!(a.to_string(), b2.to_string());
+
+        // duplicate load is a typed bad_request
+        let r = svc.handle(&req(&format!(
+            r#"{{"v":1,"model":"replica","op":"load","path":"{}"}}"#,
+            path.display()
+        )));
+        assert_eq!(
+            r.get("error").unwrap().get("code").unwrap().as_str(),
+            Some("bad_request")
+        );
+
+        // drop; addressing the dropped model is unknown_model
+        let r = svc.handle(&req(r#"{"v":1,"model":"replica","op":"drop"}"#));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        let r = svc.handle(&req(r#"{"v":1,"model":"replica","op":"stats"}"#));
+        assert_eq!(
+            r.get("error").unwrap().get("code").unwrap().as_str(),
+            Some("unknown_model")
+        );
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]
@@ -697,8 +637,9 @@ mod tests {
             eager.handle(&req(dc)).to_string()
         );
 
-        // an explicit full drain equalizes the stores completely
-        lazy.sharded().flush_all();
+        // an explicit wire-level drain equalizes the stores completely
+        let fl = lazy.handle(&req(r#"{"op":"flush"}"#));
+        assert_eq!(fl.get("ok").unwrap().as_bool(), Some(true));
         let s = lazy.handle(&req(r#"{"op":"stats"}"#));
         assert_eq!(s.get("dirty_subtrees").unwrap().as_u64(), Some(0));
         let eager_snap = eager.snapshot_forest();
@@ -712,11 +653,21 @@ mod tests {
     }
 
     #[test]
-    fn shutdown_flag() {
+    fn shutdown_flag_and_shutting_down_errors() {
         let svc = service();
         assert!(!svc.is_shutdown());
         svc.handle(&req(r#"{"op":"shutdown"}"#));
         assert!(svc.is_shutdown());
+        // every further op is refused with the typed code
+        let r = svc.handle(&req(r#"{"op":"stats"}"#));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(
+            r.get("error").unwrap().get("code").unwrap().as_str(),
+            Some("shutting_down")
+        );
+        // shutdown itself stays idempotent
+        let r = svc.handle(&req(r#"{"op":"shutdown"}"#));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
     }
 
     #[test]

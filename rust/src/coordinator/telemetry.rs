@@ -44,6 +44,16 @@ impl Telemetry {
         self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
     }
 
+    /// Count of operations recorded under `op` (0 when never seen).
+    pub fn op_count(&self, op: &str) -> u64 {
+        self.ops.lock().unwrap().get(op).map(|s| s.count).unwrap_or(0)
+    }
+
+    /// Errors recorded under `op` (0 when never seen).
+    pub fn op_errors(&self, op: &str) -> u64 {
+        self.ops.lock().unwrap().get(op).map(|s| s.errors).unwrap_or(0)
+    }
+
     /// Record one operation with its latency; `ok` false counts an error.
     pub fn record(&self, op: &str, seconds: f64, ok: bool) {
         let mut ops = self.ops.lock().unwrap();
@@ -128,6 +138,17 @@ mod tests {
                 .as_u64(),
             Some(1)
         );
+    }
+
+    #[test]
+    fn op_count_and_errors_accessors() {
+        let t = Telemetry::new();
+        assert_eq!(t.op_count("delete"), 0);
+        t.record("delete", 0.01, true);
+        t.record("delete", 0.01, false);
+        assert_eq!(t.op_count("delete"), 2);
+        assert_eq!(t.op_errors("delete"), 1);
+        assert_eq!(t.op_errors("predict"), 0);
     }
 
     #[test]

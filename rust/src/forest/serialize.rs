@@ -14,6 +14,10 @@ use crate::forest::stats::{AttrStats, ThresholdStats};
 use crate::forest::tree::DareTree;
 use crate::util::json::{parse, Value};
 
+/// Snapshot schema identifier; bumped only on incompatible layout changes
+/// (the wire API's `load` op rejects snapshots with a different tag).
+pub const SNAPSHOT_FORMAT: &str = "dare-forest-v1";
+
 /// u64 values (seeds) exceed f64's exact-integer range; encode as strings.
 fn set_u64(o: &mut Value, key: &str, v: u64) {
     o.set(key, v.to_string());
@@ -333,7 +337,7 @@ pub fn forest_to_json(f: &DareForest) -> String {
         })
         .collect();
     let mut o = Value::obj();
-    o.set("format", "dare-forest-v1");
+    o.set("format", SNAPSHOT_FORMAT);
     set_u64(&mut o, "seed", f.seed());
     o.set("params", params_to_json(f.params()))
         .set("trees", Value::Arr(trees))
@@ -345,8 +349,8 @@ pub fn forest_to_json(f: &DareForest) -> String {
 pub fn forest_from_json(s: &str) -> anyhow::Result<DareForest> {
     let v = parse(s).map_err(|e| anyhow::anyhow!("{e}"))?;
     anyhow::ensure!(
-        v.get("format").and_then(|x| x.as_str()) == Some("dare-forest-v1"),
-        "unknown snapshot format"
+        v.get("format").and_then(|x| x.as_str()) == Some(SNAPSHOT_FORMAT),
+        "unknown snapshot format (expected '{SNAPSHOT_FORMAT}')"
     );
     let params = params_from_json(v.get("params").ok_or_else(|| anyhow::anyhow!("params"))?)?;
     let seed = get_u64(&v, "seed")?;

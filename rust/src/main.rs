@@ -24,7 +24,7 @@ use std::path::Path;
 const VALUE_KEYS: &[&str] = &[
     "dataset", "scale", "trees", "depth", "k", "drmax", "criterion", "seed", "threads", "save",
     "load", "csv", "ids", "addr", "workers", "repeats", "deletions", "worst-of", "datasets",
-    "out-dir", "max-trees", "ks", "grid", "folds", "tolerances", "label", "n",
+    "out-dir", "max-trees", "ks", "grid", "folds", "tolerances", "label", "n", "model",
 ];
 
 fn main() {
@@ -62,7 +62,8 @@ COMMANDS
   delete     --load model.json --ids 1,2,3 [--save out.json]
   predict    --load model.json --csv data.csv
   serve      --load model.json|--dataset <name> [--addr 127.0.0.1:7878]
-             [--workers W]
+             [--workers W] [--model NAME]   (NAME defaults to 'default';
+             further models can be created/loaded over the wire)
   tune       --dataset <name> [--scale N] [--grid paper|small] [--folds F]
   reproduce  <fig1|fig2|fig3|table2|table3|table5|table6|table7|table9|all>
              [--scale N] [--repeats R] [--deletions D] [--worst-of C]
@@ -198,11 +199,22 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         println!("no --load given; training a fresh model first...");
         DareForest::fit(data, &params, args.u64("seed", 1))
     };
-    let svc = UnlearningService::new(forest, ServiceConfig::default());
+    let name = args.get_or("model", dare::coordinator::DEFAULT_MODEL);
+    let svc = UnlearningService::with_models(
+        vec![(name.to_string(), forest)],
+        ServiceConfig::default(),
+    );
     let addr = args.get_or("addr", "127.0.0.1:7878");
-    println!("dare unlearning service (pjrt={})", svc.pjrt_active());
+    println!(
+        "dare unlearning service (wire v{}, model '{name}', pjrt={})",
+        dare::coordinator::WIRE_VERSION,
+        svc.registry().get(name).map(|m| m.pjrt_active()).unwrap_or(false)
+    );
     serve(svc, addr, args.usize("workers", 4), |bound| {
-        println!("listening on {bound} (JSON-lines; send {{\"op\":\"shutdown\"}} to stop)");
+        println!(
+            "listening on {bound} (JSON-lines; v1 requests carry \
+             {{\"v\":1,\"model\":...}}; send {{\"op\":\"shutdown\"}} to stop)"
+        );
     })
 }
 

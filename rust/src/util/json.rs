@@ -37,6 +37,13 @@ impl Value {
             _ => None,
         }
     }
+    /// Remove a key from an object; `None` on non-objects / missing keys.
+    pub fn remove(&mut self, key: &str) -> Option<Value> {
+        match self {
+            Value::Obj(m) => m.remove(key),
+            _ => None,
+        }
+    }
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(n) => Some(*n),

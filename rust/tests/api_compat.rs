@@ -1,0 +1,252 @@
+//! ISSUE 5: the wire-compat contract of the typed, versioned API.
+//!
+//! 1. **v0 ⇄ v1 byte identity** — a v0 request (no `"v"`/`"model"` keys)
+//!    and its v1 equivalent addressed to `"default"` must produce
+//!    byte-identical response payloads across all data-plane ops (stats is
+//!    compared with its time-varying `telemetry` sub-object stripped).
+//! 2. **Error taxonomy** — one malformed input per `ApiError` variant,
+//!    asserting the stable machine-readable `code` plus the `error_msg`
+//!    string alias v0 callers read.
+//! 3. **Lifecycle** — create/list/save/drop/load through the wire, with
+//!    the reloaded model serving byte-identical predictions.
+
+use dare::coordinator::{ServiceConfig, UnlearningService, DEFAULT_MODEL};
+use dare::data::synth::{generate, SynthSpec};
+use dare::forest::{DareForest, Params};
+use dare::util::json::{parse, Value};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn fresh_service() -> Arc<UnlearningService> {
+    let d = generate(
+        &SynthSpec {
+            n: 180,
+            informative: 3,
+            redundant: 0,
+            noise: 2,
+            flip: 0.05,
+            ..Default::default()
+        },
+        41,
+    );
+    let f = DareForest::fit(
+        d,
+        &Params {
+            n_trees: 4,
+            max_depth: 5,
+            k: 5,
+            d_rmax: 1,
+            ..Default::default()
+        },
+        43,
+    );
+    UnlearningService::new(
+        f,
+        ServiceConfig {
+            batch_window: Duration::from_millis(1),
+            use_pjrt: false,
+            n_shards: 2,
+            // keep the background compactor out of the byte comparisons
+            compact_interval: Duration::from_secs(3600),
+            ..Default::default()
+        },
+    )
+}
+
+fn req(s: &str) -> Value {
+    parse(s).unwrap()
+}
+
+#[test]
+fn v0_and_v1_produce_byte_identical_data_plane_responses() {
+    // Two identically-seeded services; one driven with v0 requests, the
+    // other with the v1 equivalents addressed to "default". Every response
+    // pair must serialize to the same bytes.
+    let v0 = fresh_service();
+    let v1 = fresh_service();
+    let p = v0.n_features();
+    let row = vec!["0.3"; p].join(",");
+    let short = vec!["0.3"; p.saturating_sub(1)].join(",");
+
+    let pairs = [
+        // predict (single + batch)
+        format!(r#"{{"op":"predict","rows":[[{row}]]}}"#),
+        format!(r#"{{"op":"predict","rows":[[{row}],[{row}]]}}"#),
+        // delete: live ids, dead ids, mixed
+        r#"{"op":"delete","ids":[1,2,3]}"#.to_string(),
+        r#"{"op":"delete","ids":[1,4]}"#.to_string(),
+        // add
+        format!(r#"{{"op":"add","row":[{row}],"label":1}}"#),
+        // delete_cost: live + dead (typed error path)
+        r#"{"op":"delete_cost","id":9}"#.to_string(),
+        r#"{"op":"delete_cost","id":999999}"#.to_string(),
+        // arity error path
+        format!(r#"{{"op":"predict","rows":[[{short}]]}}"#),
+        // lazy-pipeline data-plane ops (no-ops under eager; same marks
+        // under the DARE_LAZY_POLICY matrix leg)
+        r#"{"op":"compact","budget":2}"#.to_string(),
+        r#"{"op":"flush"}"#.to_string(),
+    ];
+    for v0_req in &pairs {
+        let v1_req = {
+            let mut o = parse(v0_req).unwrap();
+            o.set("v", 1u64).set("model", DEFAULT_MODEL);
+            o
+        };
+        let r0 = v0.handle(&req(v0_req));
+        let r1 = v1.handle(&v1_req);
+        assert_eq!(
+            r0.to_string(),
+            r1.to_string(),
+            "v0/v1 responses diverged for {v0_req}"
+        );
+    }
+
+    // stats: identical up to the time-varying telemetry sub-object
+    let mut s0 = v0.handle(&req(r#"{"op":"stats"}"#));
+    let mut s1 = v1.handle(&req(&format!(
+        r#"{{"v":1,"model":"{DEFAULT_MODEL}","op":"stats"}}"#
+    )));
+    assert!(s0.remove("telemetry").is_some());
+    assert!(s1.remove("telemetry").is_some());
+    assert_eq!(s0.to_string(), s1.to_string(), "stats payloads diverged");
+
+    // save: both snapshots must be byte-identical on disk
+    let p0 = std::env::temp_dir().join("dare_api_compat_v0.json");
+    let p1 = std::env::temp_dir().join("dare_api_compat_v1.json");
+    let r0 = v0.handle(&req(&format!(r#"{{"op":"save","path":"{}"}}"#, p0.display())));
+    let r1 = v1.handle(&req(&format!(
+        r#"{{"v":1,"model":"{DEFAULT_MODEL}","op":"save","path":"{}"}}"#,
+        p1.display()
+    )));
+    assert_eq!(r0.to_string(), r1.to_string());
+    assert_eq!(
+        std::fs::read_to_string(&p0).unwrap(),
+        std::fs::read_to_string(&p1).unwrap(),
+        "the two wire paths snapshotted different models"
+    );
+    std::fs::remove_file(&p0).ok();
+    std::fs::remove_file(&p1).ok();
+
+    v0.sharded().validate().unwrap();
+    v1.sharded().validate().unwrap();
+}
+
+#[test]
+fn every_api_error_variant_has_a_stable_wire_code() {
+    let svc = fresh_service();
+    let p = svc.n_features();
+    let short = vec!["0.1"; p - 1].join(",");
+    let cases: Vec<(String, &str)> = vec![
+        // BadRequest: unknown op, missing payload, unsupported version
+        (r#"{"op":"frobnicate"}"#.to_string(), "bad_request"),
+        (r#"{"op":"predict"}"#.to_string(), "bad_request"),
+        (r#"{"v":99,"op":"stats"}"#.to_string(), "bad_request"),
+        // UnknownModel
+        (r#"{"v":1,"model":"ghost","op":"stats"}"#.to_string(), "unknown_model"),
+        // ArityMismatch (predict + add)
+        (format!(r#"{{"op":"predict","rows":[[{short}]]}}"#), "arity_mismatch"),
+        (format!(r#"{{"op":"add","row":[{short}],"label":0}}"#), "arity_mismatch"),
+        // UnknownId
+        (r#"{"op":"delete_cost","id":444444}"#.to_string(), "unknown_id"),
+    ];
+    for (request, code) in &cases {
+        let r = svc.handle(&req(request));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{request}");
+        let eo = r.get("error").unwrap();
+        assert_eq!(
+            eo.get("code").unwrap().as_str(),
+            Some(*code),
+            "wrong code for {request}"
+        );
+        // the v0 alias mirrors the structured message
+        assert_eq!(
+            r.get("error_msg").unwrap().as_str(),
+            eo.get("msg").unwrap().as_str(),
+            "{request}"
+        );
+    }
+    // ArityMismatch carries the structured got/want fields
+    let r = svc.handle(&req(&format!(r#"{{"op":"predict","rows":[[{short}]]}}"#)));
+    let eo = r.get("error").unwrap();
+    assert_eq!(eo.get("got").unwrap().as_usize(), Some(p - 1));
+    assert_eq!(eo.get("want").unwrap().as_usize(), Some(p));
+
+    // ShuttingDown: every op after shutdown is refused with the code
+    svc.handle(&req(r#"{"op":"shutdown"}"#));
+    let r = svc.handle(&req(r#"{"op":"stats"}"#));
+    assert_eq!(
+        r.get("error").unwrap().get("code").unwrap().as_str(),
+        Some("shutting_down")
+    );
+}
+
+#[test]
+fn lifecycle_create_save_drop_load_roundtrip() {
+    let svc = fresh_service();
+    // create a small second tenant from a corpus dataset reference
+    let r = svc.handle(&req(
+        r#"{"v":1,"model":"tenant","op":"create","dataset":"twitter","scale":2000,"seed":5,"trees":3,"depth":5,"k":5}"#,
+    ));
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+    assert_eq!(r.get("model").unwrap().as_str(), Some("tenant"));
+    assert_eq!(r.get("n_trees").unwrap().as_u64(), Some(3));
+
+    // list shows both models with their shapes
+    let r = svc.handle(&req(r#"{"v":1,"op":"list"}"#));
+    let models = r.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(models.len(), 2);
+    let names: Vec<&str> = models.iter().filter_map(|m| m.get("name").and_then(Value::as_str)).collect();
+    assert_eq!(names, vec![DEFAULT_MODEL, "tenant"]);
+
+    // unknown dataset is a typed bad_request, and the registry is unchanged
+    let r = svc.handle(&req(
+        r#"{"v":1,"model":"x","op":"create","dataset":"no_such_corpus"}"#,
+    ));
+    assert_eq!(
+        r.get("error").unwrap().get("code").unwrap().as_str(),
+        Some("bad_request")
+    );
+    // invalid hyperparameters are a typed bad_request, not a handler panic
+    for bad in [
+        r#"{"v":1,"model":"x","op":"create","dataset":"twitter","trees":0}"#,
+        r#"{"v":1,"model":"x","op":"create","dataset":"twitter","depth":3,"drmax":5}"#,
+    ] {
+        let r = svc.handle(&req(bad));
+        assert_eq!(
+            r.get("error").unwrap().get("code").unwrap().as_str(),
+            Some("bad_request"),
+            "{bad}"
+        );
+    }
+    assert_eq!(svc.registry().len(), 2);
+
+    // mutate the tenant, snapshot it, capture a prediction
+    svc.handle(&req(r#"{"v":1,"model":"tenant","op":"delete","ids":[0,1,2,3]}"#));
+    let tenant_p = svc.registry().get("tenant").unwrap().n_features();
+    let probe = vec!["0.25"; tenant_p].join(",");
+    let before = svc.handle(&req(&format!(
+        r#"{{"v":1,"model":"tenant","op":"predict","rows":[[{probe}]]}}"#
+    )));
+    let path = std::env::temp_dir().join("dare_api_compat_lifecycle.json");
+    let r = svc.handle(&req(&format!(
+        r#"{{"v":1,"model":"tenant","op":"save","path":"{}"}}"#,
+        path.display()
+    )));
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+
+    // drop, reload under a different name: byte-identical predictions
+    svc.handle(&req(r#"{"v":1,"model":"tenant","op":"drop"}"#));
+    assert_eq!(svc.registry().len(), 1);
+    let r = svc.handle(&req(&format!(
+        r#"{{"v":1,"model":"tenant2","op":"load","path":"{}"}}"#,
+        path.display()
+    )));
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+    let after = svc.handle(&req(&format!(
+        r#"{{"v":1,"model":"tenant2","op":"predict","rows":[[{probe}]]}}"#
+    )));
+    assert_eq!(before.to_string(), after.to_string());
+    svc.registry().get("tenant2").unwrap().sharded().validate().unwrap();
+    std::fs::remove_file(&path).ok();
+}

@@ -146,26 +146,35 @@ fn service_over_tcp_full_flow() {
     let addr = rx.recv().unwrap();
     let mut c = Client::connect(addr).unwrap();
 
-    // predict a test row
-    let row: Vec<String> = test.row(0).iter().map(|v| v.to_string()).collect();
-    let r = c
-        .call(&parse(&format!(r#"{{"op":"predict","rows":[[{}]]}}"#, row.join(","))).unwrap())
-        .unwrap();
-    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    // typed client: predict a test row
+    let row = test.row(0);
+    let pred = c.predict("default", &[row.clone()]).unwrap();
+    assert_eq!(pred.probs.len(), 1);
+    assert!((0.0..=1.0).contains(&pred.probs[0]));
 
-    // delete, add, cost, stats
-    let r = c.call(&parse(r#"{"op":"delete","ids":[7,8]}"#).unwrap()).unwrap();
-    assert_eq!(r.get("deleted").unwrap().as_u64(), Some(2));
-    let r = c
-        .call(&parse(&format!(r#"{{"op":"add","row":[{}],"label":1}}"#, row.join(","))).unwrap())
-        .unwrap();
-    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
-    let r = c.call(&parse(r#"{"op":"delete_cost","id":20}"#).unwrap()).unwrap();
-    assert!(r.get("cost").unwrap().as_u64().is_some());
-    let r = c.call(&parse(r#"{"op":"stats"}"#).unwrap()).unwrap();
+    // delete, add, cost, stats — all through the typed v1 surface
+    let out = c.delete("default", &[7, 8]).unwrap();
+    assert_eq!(out.deleted, 2);
+    let id = c.add("default", &row, 1).unwrap();
+    assert!(id as usize >= 7, "fresh id appended after the training set");
+    let _cost = c.delete_cost("default", 20).unwrap();
+    let r = c.stats("default").unwrap();
     assert!(r.get("telemetry").is_some());
 
-    c.call(&parse(r#"{"op":"shutdown"}"#).unwrap()).unwrap();
+    // typed errors cross the wire as their taxonomy variants
+    assert!(matches!(
+        c.delete_cost("default", 99_999_999),
+        Err(dare::coordinator::ApiError::UnknownId(_))
+    ));
+    assert!(matches!(
+        c.predict("nope", &[row]),
+        Err(dare::coordinator::ApiError::UnknownModel(_))
+    ));
+    // and a raw v0 request is still served on the same connection
+    let r = c.call(&parse(r#"{"op":"stats"}"#).unwrap()).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+
+    c.shutdown().unwrap();
     server.join().unwrap();
 }
 

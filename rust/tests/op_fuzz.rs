@@ -3,7 +3,7 @@
 //! `add` / `delete` / `delete_cost` / `predict`, instead of a handful of
 //! fixed grids.
 //!
-//! Two legs:
+//! Three legs:
 //!
 //! 1. **Four-way differential** (≥ 20 seeds, env-overridable): every op is
 //!    applied through (a) the boxed oracle path (`forest::delete` over
@@ -29,11 +29,17 @@
 //!    would also see — additions are *oracle-exact* (boxed reference), not
 //!    scratch-exact, and the paper's unlearning theorem covers deletion.
 //!
+//! 3. **Registry differential** (ISSUE 5): two tenants behind one
+//!    `UnlearningService`, driven through the versioned wire surface in
+//!    lockstep with standalone `ShardedForest` oracles — responses
+//!    byte-identical, tenants fully isolated (see the test's doc comment).
+//!
 //! Seeds come from `DARE_FUZZ_SEEDS` (comma-separated) when set — CI pins a
 //! fixed list — else a built-in 22-seed default. No external fuzzing deps:
 //! seeded `util::rng` streams, same style as `proptests.rs`.
 
-use dare::coordinator::ShardedForest;
+use dare::coordinator::api::{encode_response, Response};
+use dare::coordinator::{ServiceConfig, ShardedForest, UnlearningService};
 use dare::data::dataset::Dataset;
 use dare::forest::delete as boxed;
 use dare::forest::delete::DeleteReport;
@@ -375,6 +381,220 @@ fn op_sequences_are_bit_exact_across_boxed_arena_and_sharded() {
         // A failing seed is fully reproducible: re-run with
         // DARE_FUZZ_SEEDS=<seed>.
         run_case(seed);
+    }
+}
+
+/// ISSUE 5: the registry differential — two models served by ONE
+/// `UnlearningService` are driven through the versioned wire surface
+/// (`handle`: decode → dispatch → encode) with interleaved mutations and
+/// reads, in lockstep with two standalone `ShardedForest` oracles. Every
+/// wire response must be byte-identical to the oracle-derived payload
+/// (probabilities f32-exact, reports field-exact), and the tenants must be
+/// fully isolated: a fixed probe's prediction bytes on one model are
+/// unchanged by any mutation of the other. Runs under the ambient
+/// `DARE_LAZY_POLICY` (the oracles adopt the same policy), so the CI
+/// matrix fuzzes the registry in both deferral modes.
+#[test]
+fn registry_two_model_interleavings_match_standalone_stores() {
+    use dare::util::json::parse;
+    for seed in [3u64, 11, 19, 42] {
+        let mut rng = Rng::new(mix_seed(&[seed, 0x0A21]));
+        let policy = dare::forest::LazyPolicy::from_env();
+        let mk = |rng: &mut Rng| {
+            let n = 60 + rng.index(60);
+            let p = 3 + rng.index(3);
+            let data = random_dataset(rng, n, p);
+            let max_depth = 4 + rng.index(2);
+            let params = Params {
+                n_trees: 2 + rng.index(2),
+                max_depth,
+                k: 2 + rng.index(5),
+                d_rmax: rng.index(2).min(max_depth),
+                ..Default::default()
+            };
+            let fseed = rng.next_u64();
+            (data, params, fseed)
+        };
+        let (da, pa, sa) = mk(&mut rng);
+        let (db, pb, sb) = mk(&mut rng);
+        // one service, two tenants; oracles mirror forest + policy exactly
+        // (shard counts are free — sharding is bit-exact routing)
+        let svc = UnlearningService::with_models(
+            vec![
+                ("alpha".to_string(), DareForest::fit(da.clone(), &pa, sa)),
+                ("beta".to_string(), DareForest::fit(db.clone(), &pb, sb)),
+            ],
+            ServiceConfig {
+                batch_window: std::time::Duration::from_millis(1),
+                use_pjrt: false,
+                n_shards: 2,
+                lazy: policy,
+                // the compactor's nondeterministic timing must not race the
+                // byte comparisons below
+                compact_interval: std::time::Duration::from_secs(3600),
+                ..Default::default()
+            },
+        );
+        let oracles = [
+            ShardedForest::new_with_policy(DareForest::fit(da, &pa, sa), 3, policy),
+            ShardedForest::new_with_policy(DareForest::fit(db, &pb, sb), 1, policy),
+        ];
+        let names = ["alpha", "beta"];
+
+        // fixed probe per tenant; served bytes must only move when THAT
+        // tenant mutates
+        let probes: Vec<String> = oracles
+            .iter()
+            .map(|o| {
+                let row: Vec<String> =
+                    o.with_data(|d| d.row(0)).iter().map(|v| v.to_string()).collect();
+                row.join(",")
+            })
+            .collect();
+        let probe_req = |m: usize| {
+            parse(&format!(
+                r#"{{"v":1,"model":"{}","op":"predict","rows":[[{}]]}}"#,
+                names[m], probes[m]
+            ))
+            .unwrap()
+        };
+        let mut probe_bytes: Vec<String> =
+            (0..2).map(|m| svc.handle(&probe_req(m)).to_string()).collect();
+
+        for _op in 0..24 {
+            let m = rng.index(2);
+            let other = 1 - m;
+            let oracle = &oracles[m];
+            match rng.index(8) {
+                0..=2 if oracle.n_alive() > 12 => {
+                    let live = oracle.live_ids();
+                    let id = live[rng.index(live.len())];
+                    let actual = svc.handle(
+                        &parse(&format!(
+                            r#"{{"v":1,"model":"{}","op":"delete","ids":[{id}]}}"#,
+                            names[m]
+                        ))
+                        .unwrap(),
+                    );
+                    let (report, skipped, deferred) = oracle.delete_batch_counted(&[id]);
+                    let expected = encode_response(&Response::Delete(dare::coordinator::DeleteOutcome {
+                        requested: 1,
+                        deleted: 1 - skipped,
+                        skipped,
+                        retrain_cost: report.cost(),
+                        deferred: deferred as usize,
+                        batch_size: 1,
+                    }));
+                    assert_eq!(
+                        actual.to_string(),
+                        expected.to_string(),
+                        "seed {seed}: delete response diverged on {}",
+                        names[m]
+                    );
+                    // the untouched tenant's served bytes are unchanged
+                    assert_eq!(
+                        svc.handle(&probe_req(other)).to_string(),
+                        probe_bytes[other],
+                        "seed {seed}: mutating {} moved {}'s prediction",
+                        names[m],
+                        names[other]
+                    );
+                    probe_bytes[m] = svc.handle(&probe_req(m)).to_string();
+                }
+                3..=4 => {
+                    let p = oracle.n_features();
+                    let row: Vec<f32> =
+                        (0..p).map(|_| rng.range_f32(-4.0, 4.0)).collect();
+                    let row_s: Vec<String> = row.iter().map(|v| v.to_string()).collect();
+                    let actual = svc.handle(
+                        &parse(&format!(
+                            r#"{{"v":1,"model":"{}","op":"add","row":[{}],"label":1}}"#,
+                            names[m],
+                            row_s.join(",")
+                        ))
+                        .unwrap(),
+                    );
+                    let id = oracle.add(&row, 1).unwrap();
+                    let expected = encode_response(&Response::Add { id });
+                    assert_eq!(actual.to_string(), expected.to_string(), "seed {seed}: add diverged");
+                    assert_eq!(
+                        svc.handle(&probe_req(other)).to_string(),
+                        probe_bytes[other],
+                        "seed {seed}: adding to {} moved {}'s prediction",
+                        names[m],
+                        names[other]
+                    );
+                    probe_bytes[m] = svc.handle(&probe_req(m)).to_string();
+                }
+                5 => {
+                    let live = oracle.live_ids();
+                    let id = live[rng.index(live.len())];
+                    let actual = svc.handle(
+                        &parse(&format!(
+                            r#"{{"v":1,"model":"{}","op":"delete_cost","id":{id}}}"#,
+                            names[m]
+                        ))
+                        .unwrap(),
+                    );
+                    let expected = encode_response(&Response::DeleteCost {
+                        cost: oracle.delete_cost(id).unwrap(),
+                    });
+                    assert_eq!(actual.to_string(), expected.to_string(), "seed {seed}: cost diverged");
+                }
+                _ => {
+                    let p = oracle.n_features();
+                    let n_rows = 1 + rng.index(8);
+                    let rows: Vec<Vec<f32>> = (0..n_rows)
+                        .map(|_| (0..p).map(|_| rng.range_f32(-5.0, 5.0)).collect())
+                        .collect();
+                    let rows_s: Vec<String> = rows
+                        .iter()
+                        .map(|r| {
+                            format!(
+                                "[{}]",
+                                r.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
+                            )
+                        })
+                        .collect();
+                    let actual = svc.handle(
+                        &parse(&format!(
+                            r#"{{"v":1,"model":"{}","op":"predict","rows":[{}]}}"#,
+                            names[m],
+                            rows_s.join(",")
+                        ))
+                        .unwrap(),
+                    );
+                    let expected = encode_response(&Response::Predict {
+                        probs: oracle.predict_proba_rows(&rows),
+                        engine: "native",
+                    });
+                    assert_eq!(
+                        actual.to_string(),
+                        expected.to_string(),
+                        "seed {seed}: predict diverged on {}",
+                        names[m]
+                    );
+                }
+            }
+        }
+
+        // final audit: each tenant's trees are structurally identical to
+        // its standalone oracle, and both stores validate
+        for (m, oracle) in oracles.iter().enumerate() {
+            let model = svc.registry().get(names[m]).unwrap();
+            let snap = oracle.snapshot();
+            model.sharded().snapshot().trees().iter().zip(snap.trees()).enumerate().for_each(
+                |(t, (a, b))| {
+                    assert!(
+                        a.structural_matches(b),
+                        "seed {seed}: {} tree {t} diverged from its oracle",
+                        names[m]
+                    );
+                },
+            );
+            model.sharded().validate().unwrap();
+            oracle.validate().unwrap();
+        }
     }
 }
 

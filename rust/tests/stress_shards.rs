@@ -10,8 +10,11 @@
 //!   live count matches `initial - deleted + added`.
 //!
 //! ≥ 1000 mixed ops (acceptance floor) across 6 threads, all through the
-//! JSON `handle()` surface so the batcher, router and telemetry are all in
-//! the loop.
+//! JSON `handle()` surface so the decode/dispatch/encode layers, batcher,
+//! registry and telemetry are all in the loop. ISSUE 5 adds a second
+//! registry tenant hammered concurrently over the v1 wire: its counters
+//! reconcile per-model, and the default tenant's live count proves the
+//! tenants never bleed into each other.
 
 use dare::coordinator::{ServiceConfig, UnlearningService};
 use dare::data::synth::{generate, SynthSpec};
@@ -22,6 +25,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 const N: usize = 600;
+/// Second tenant's dataset size (its deleter uses ids 0..TENANT2_DELETES).
+const N2: usize = 300;
+const TENANT2_DELETES: usize = 100;
 const OPS_PER_THREAD: usize = 200;
 
 fn service() -> Arc<UnlearningService> {
@@ -47,8 +53,31 @@ fn service() -> Arc<UnlearningService> {
         },
         23,
     );
-    UnlearningService::new(
-        f,
+    // a second tenant with a *different* arity, so any cross-tenant
+    // misrouting of a data-plane op would fail loudly (arity_mismatch)
+    let d2 = generate(
+        &SynthSpec {
+            n: N2,
+            informative: 3,
+            redundant: 0,
+            noise: 1,
+            flip: 0.05,
+            ..Default::default()
+        },
+        31,
+    );
+    let f2 = DareForest::fit(
+        d2,
+        &Params {
+            n_trees: 4,
+            max_depth: 5,
+            k: 5,
+            ..Default::default()
+        },
+        37,
+    );
+    UnlearningService::with_models(
+        vec![("default".to_string(), f), ("tenant2".to_string(), f2)],
         ServiceConfig {
             batch_window: Duration::from_millis(2),
             use_pjrt: false,
@@ -152,6 +181,40 @@ fn concurrent_churn_leaves_every_shard_consistent() {
             }
         }));
     }
+    // 1 second-tenant thread over the v1 wire: deletes its own disjoint id
+    // pool and predicts at its own (different) arity, concurrently with
+    // all the traffic above.
+    {
+        let svc = Arc::clone(&svc);
+        let p2 = svc.registry().get("tenant2").unwrap().n_features();
+        handles.push(std::thread::spawn(move || {
+            for r in 0..OPS_PER_THREAD {
+                if r % 2 == 0 {
+                    let id = r / 2; // 0..TENANT2_DELETES, each live exactly once
+                    let req = parse(&format!(
+                        r#"{{"v":1,"model":"tenant2","op":"delete","ids":[{id}]}}"#
+                    ))
+                    .unwrap();
+                    let resp = svc.handle(&req);
+                    assert_eq!(
+                        resp.get("ok").and_then(Value::as_bool),
+                        Some(true),
+                        "tenant2 delete {id}"
+                    );
+                    assert_eq!(resp.get("deleted").and_then(Value::as_u64), Some(1));
+                } else {
+                    let v = 0.04 * (r % 30) as f32 - 0.5;
+                    let row = vec![format!("{v}"); p2].join(",");
+                    let req = parse(&format!(
+                        r#"{{"v":1,"model":"tenant2","op":"predict","rows":[[{row}]]}}"#
+                    ))
+                    .unwrap();
+                    let resp = svc.handle(&req);
+                    assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true));
+                }
+            }
+        }));
+    }
 
     for h in handles {
         h.join().unwrap();
@@ -195,6 +258,19 @@ fn concurrent_churn_leaves_every_shard_consistent() {
         Some(expect_alive),
         "live count drifted"
     );
+
+    // --- second tenant reconciliation: per-model telemetry counted its own
+    // ops (and only its own), its live set shrank by exactly its deleter's
+    // pool, and its store audits clean — while the default tenant's live
+    // count above already proved tenant2's churn never reached it.
+    let tenant2 = svc.registry().get("tenant2").unwrap();
+    assert_eq!(tenant2.telemetry().op_count("delete"), TENANT2_DELETES as u64);
+    assert_eq!(tenant2.telemetry().op_count("predict"), (OPS_PER_THREAD - TENANT2_DELETES) as u64);
+    assert_eq!(tenant2.telemetry().op_errors("delete"), 0);
+    assert_eq!(tenant2.telemetry().op_errors("predict"), 0);
+    assert_eq!(tenant2.telemetry().counter("mutations"), TENANT2_DELETES as u64);
+    assert_eq!(tenant2.sharded().n_alive(), N2 - TENANT2_DELETES);
+    tenant2.sharded().validate().unwrap();
 
     // --- structural audit: every shard validate()-clean, every tree covers
     // exactly the live id set (ShardedForest::validate checks both).
