@@ -2,7 +2,11 @@
 //! of clients filing right-to-be-forgotten requests concurrently while
 //! others query predictions — the vLLM-router-style serving view of DaRE,
 //! driven entirely through the typed v1 client (`Client::delete` /
-//! `Client::predict` / `Client::stats`, DESIGN.md §10).
+//! `Client::predict` / `Client::stats`, DESIGN.md §10). The service runs
+//! durably (DESIGN.md §11): every deletion is journaled to a write-ahead
+//! log before it's acked, and each one can be receipted with a signed
+//! deletion certificate (`Client::certify` / `Client::verify_cert`) that
+//! stays verifiable for the lifetime of the signing key.
 //!
 //!     make artifacts && cargo run --release --offline --example gdpr_service
 
@@ -26,11 +30,19 @@ fn main() -> anyhow::Result<()> {
     // DARE_LAZY_POLICY=eager|on_read|budgeted:<k> to experiment; deletion
     // latency drops under churn while every served bit stays exact.
     let lazy = LazyPolicy::from_env();
+    // Event-sourced durability (DESIGN.md §11): with `wal_dir` set, every
+    // mutation is appended + fsync'd to a per-model op log before it's
+    // acked; a crashed process replays the log on restart and lands on the
+    // byte-identical forest. The demo uses a throwaway dir.
+    let wal_root = std::env::temp_dir().join(format!("dare-gdpr-demo-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&wal_root);
     let svc = UnlearningService::new(
         forest,
         ServiceConfig {
             batch_window: Duration::from_millis(25), // group concurrent requests
             lazy,
+            wal_dir: Some(wal_root.clone()),
+            cert_key: Some("gdpr-demo-signing-key".to_string()),
             ..Default::default()
         },
     );
@@ -107,8 +119,33 @@ fn main() -> anyhow::Result<()> {
         stats.get("dirty_subtrees").and_then(dare::util::json::Value::as_u64).unwrap_or(0),
         stats.get("lazy_policy").and_then(dare::util::json::Value::as_str).unwrap_or("?"),
     );
+    println!(
+        "durable: {} (wal epoch {})",
+        stats.get("durable").and_then(dare::util::json::Value::as_bool).unwrap_or(false),
+        stats.get("wal_epoch").and_then(dare::util::json::Value::as_u64).unwrap_or(0),
+    );
+
+    // --- signed deletion certificate for one of the fleet's deletions -------
+    // `certify` receipts an already-deleted instance: the HMAC covers
+    // {model, id, wal epoch, snapshot hash}, so the data subject (or an
+    // auditor) can later ask any holder of the key to `verify_cert` it —
+    // including after the model itself is gone.
+    let cert = client.certify(DEFAULT_MODEL, 100)?;
+    println!(
+        "deletion certificate: instance {} @ epoch {} (snapshot {}…, hmac {}…)",
+        cert.instance_id,
+        cert.epoch,
+        &cert.snapshot_hash[..12],
+        &cert.hmac[..12],
+    );
+    println!("certificate verifies: {}", client.verify_cert(&cert)?);
+    let mut forged = cert.clone();
+    forged.instance_id = 101;
+    println!("forged certificate verifies: {}", client.verify_cert(&forged)?);
+
     client.shutdown()?;
     server.join().unwrap()?;
+    let _ = std::fs::remove_dir_all(&wal_root);
     println!("service stopped cleanly");
     Ok(())
 }

@@ -120,6 +120,11 @@ pub enum Op {
     /// Drain up to `budget` deferred retrains per tree.
     Compact { budget: usize },
     Save { path: String },
+    /// Issue a signed deletion certificate for a removed instance
+    /// (requires the model to have durability enabled — DESIGN.md §11).
+    Certify { id: InstanceId },
+    /// Check a certificate's HMAC signature against this server's key.
+    VerifyCert { cert: Certificate },
     // -- lifecycle (registry) --
     /// Train a new model named `Request::model` from a corpus dataset ref.
     Create(CreateSpec),
@@ -158,6 +163,50 @@ impl Default for CreateSpec {
             k: None,
             d_rmax: None,
         }
+    }
+}
+
+/// A signed deletion certificate: an auditable, operator-verifiable record
+/// that `instance_id` was removed from `model` at write-ahead-log epoch
+/// `epoch`, when the model's durable snapshot state hashed to
+/// `snapshot_hash`. `hmac` is HMAC-SHA256 over the canonical byte string
+/// `model \0 instance_id \0 epoch \0 snapshot_hash` under the server's
+/// certificate key (`coordinator::wal::sign_certificate`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Certificate {
+    pub model: String,
+    pub instance_id: InstanceId,
+    /// WAL epoch of the delete record that removed the instance (exact on
+    /// the wire up to 2^53 — epochs count mutating ops, far below that).
+    pub epoch: u64,
+    /// Hex SHA-256 of the model's serialized snapshot at certification time.
+    pub snapshot_hash: String,
+    /// Hex HMAC-SHA256 signature.
+    pub hmac: String,
+}
+
+impl Certificate {
+    pub fn to_wire(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("model", self.model.as_str())
+            .set("instance_id", self.instance_id)
+            .set("epoch", self.epoch)
+            .set("snapshot_hash", self.snapshot_hash.as_str())
+            .set("hmac", self.hmac.as_str());
+        o
+    }
+
+    pub fn from_wire(v: &Value) -> Result<Certificate, ApiError> {
+        Ok(Certificate {
+            model: req_str(v, "model", "cert needs 'model'")?,
+            instance_id: v
+                .get("instance_id")
+                .and_then(|x| as_uint(x, u32::MAX as f64))
+                .ok_or_else(|| bad("cert needs 'instance_id'"))? as InstanceId,
+            epoch: req_uint(v, "epoch", "cert needs 'epoch'")?,
+            snapshot_hash: req_str(v, "snapshot_hash", "cert needs 'snapshot_hash'")?,
+            hmac: req_str(v, "hmac", "cert needs 'hmac'")?,
+        })
     }
 }
 
@@ -284,6 +333,19 @@ pub fn decode(req: &Value) -> Result<Request, ApiError> {
         "save" => Op::Save {
             path: req_str(req, "path", "save needs 'path'")?,
         },
+        "certify" => Op::Certify {
+            id: req
+                .get("id")
+                .and_then(|x| as_uint(x, u32::MAX as f64))
+                .ok_or_else(|| bad("certify needs 'id'"))? as InstanceId,
+        },
+        "verify_cert" => Op::VerifyCert {
+            cert: Certificate::from_wire(
+                req.get("cert")
+                    .filter(|c| matches!(c, Value::Obj(_)))
+                    .ok_or_else(|| bad("verify_cert needs 'cert': {...}"))?,
+            )?,
+        },
         "load" => Op::Load {
             path: req_str(req, "path", "load needs 'path'")?,
         },
@@ -353,6 +415,12 @@ pub fn encode_request(r: &Request) -> Value {
         }
         Op::Save { path } => {
             o.set("op", "save").set("path", path.as_str());
+        }
+        Op::Certify { id } => {
+            o.set("op", "certify").set("id", *id);
+        }
+        Op::VerifyCert { cert } => {
+            o.set("op", "verify_cert").set("cert", cert.to_wire());
         }
         Op::Load { path } => {
             o.set("op", "load").set("path", path.as_str());
@@ -448,6 +516,10 @@ pub enum Response {
     Stats(Value),
     /// `flush` / `compact`: retrains executed by this request.
     Flushed { flushed: u64 },
+    /// `certify`: the signed deletion certificate.
+    Certified(Certificate),
+    /// `verify_cert`: signature check result.
+    CertCheck { valid: bool },
     /// `create` / `load`: the model is registered and serving.
     ModelReady { model: String, n_trees: usize, n_alive: usize },
     Dropped { model: String },
@@ -539,6 +611,12 @@ pub fn encode_response(r: &Response) -> Value {
         Response::Flushed { flushed } => {
             o.set("flushed", *flushed);
         }
+        Response::Certified(cert) => {
+            o.set("cert", cert.to_wire());
+        }
+        Response::CertCheck { valid } => {
+            o.set("valid", *valid);
+        }
         Response::ModelReady {
             model,
             n_trees,
@@ -590,7 +668,7 @@ mod tests {
         } else {
             gen_name(rng)
         };
-        let op = match rng.index(13) {
+        let op = match rng.index(15) {
             0 => Op::Predict {
                 rows: (0..rng.index(4)).map(|_| gen_row(rng)).collect(),
             },
@@ -626,6 +704,18 @@ mod tests {
             }),
             10 => Op::DropModel,
             11 => Op::List,
+            12 => Op::Certify {
+                id: rng.index(10_000) as u32,
+            },
+            13 => Op::VerifyCert {
+                cert: Certificate {
+                    model: gen_name(rng),
+                    instance_id: rng.index(10_000) as u32,
+                    epoch: rng.next_u64() % (1u64 << 53),
+                    snapshot_hash: gen_name(rng),
+                    hmac: gen_name(rng),
+                },
+            },
             _ => Op::Shutdown,
         };
         Request { v, model, op }
@@ -687,6 +777,15 @@ mod tests {
             (r#"{"op":"load"}"#, "load needs 'path'"),
             (r#"{"op":"create"}"#, "create needs 'dataset'"),
             (r#"{"op":"compact","budget":-2}"#, "'budget' must be a non-negative integer"),
+            (r#"{"op":"certify"}"#, "certify needs 'id'"),
+            (r#"{"op":"certify","id":-3}"#, "certify needs 'id'"),
+            (r#"{"op":"verify_cert"}"#, "verify_cert needs 'cert'"),
+            (r#"{"op":"verify_cert","cert":"sig"}"#, "verify_cert needs 'cert'"),
+            (r#"{"op":"verify_cert","cert":{"model":"m"}}"#, "cert needs 'instance_id'"),
+            (
+                r#"{"op":"verify_cert","cert":{"model":"m","instance_id":1,"epoch":2,"hmac":"ab"}}"#,
+                "cert needs 'snapshot_hash'",
+            ),
         ] {
             match decode(&parse(src).unwrap()) {
                 Err(ApiError::BadRequest(msg)) => {
@@ -750,6 +849,30 @@ mod tests {
             r#"{"cost":11,"ok":true}"#
         );
         assert_eq!(encode_response(&Response::Ok).to_string(), r#"{"ok":true}"#);
+    }
+
+    #[test]
+    fn certificate_wire_roundtrip_and_response_shape() {
+        let cert = Certificate {
+            model: "eu-prod".to_string(),
+            instance_id: 42,
+            epoch: 17,
+            snapshot_hash: "ab12".to_string(),
+            hmac: "cd34".to_string(),
+        };
+        let back = Certificate::from_wire(&parse(&cert.to_wire().to_string()).unwrap()).unwrap();
+        assert_eq!(back, cert);
+        assert_eq!(
+            encode_response(&Response::Certified(cert)).to_string(),
+            concat!(
+                r#"{"cert":{"epoch":17,"hmac":"cd34","instance_id":42,"#,
+                r#""model":"eu-prod","snapshot_hash":"ab12"},"ok":true}"#
+            )
+        );
+        assert_eq!(
+            encode_response(&Response::CertCheck { valid: true }).to_string(),
+            r#"{"ok":true,"valid":true}"#
+        );
     }
 
     #[test]

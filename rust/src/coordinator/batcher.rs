@@ -14,7 +14,9 @@
 //! handle to its model goes away (`drop` op or service teardown); a
 //! request caught in that window surfaces as `ApiError::ShuttingDown`.
 
+use crate::coordinator::api::Op;
 use crate::coordinator::shards::ShardedForest;
+use crate::coordinator::wal::Wal;
 use crate::data::dataset::InstanceId;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -58,10 +60,21 @@ impl DeletionBatcher {
         window: Duration,
         max_batch: usize,
     ) -> DeletionBatcher {
+        Self::start_with_wal(forest, window, max_batch, None)
+    }
+
+    /// Like [`DeletionBatcher::start`], journaling every applied deletion
+    /// job to the model's write-ahead log first (DESIGN.md §11).
+    pub fn start_with_wal(
+        forest: Arc<ShardedForest>,
+        window: Duration,
+        max_batch: usize,
+        wal: Option<Arc<Wal>>,
+    ) -> DeletionBatcher {
         let (tx, rx) = channel::<Job>();
         let worker = std::thread::Builder::new()
             .name("dare-batcher".into())
-            .spawn(move || run_worker(forest, rx, window, max_batch))
+            .spawn(move || run_worker(forest, rx, window, max_batch, wal))
             .expect("spawn batcher");
         DeletionBatcher {
             tx,
@@ -101,6 +114,7 @@ fn run_worker(
     rx: Receiver<Job>,
     window: Duration,
     max_batch: usize,
+    wal: Option<Arc<Wal>>,
 ) {
     loop {
         // block for the first job
@@ -138,7 +152,32 @@ fn run_worker(
             // (delete_batch_counted), so concurrent adds or compactor
             // ticks can never skew it — and under Eager it is 0 with no
             // extra counter sweep.
-            let (report, skipped, deferred) = forest.delete_batch_counted(&job.ids);
+            //
+            // With a WAL, each job is journaled (+fsync'd) immediately
+            // before its application, under the WAL mutex — log order is
+            // apply order, and the ack below never precedes durability. A
+            // job whose append fails is *not* applied; dropping its reply
+            // sender surfaces as a service-level error to that client.
+            let applied = match &wal {
+                None => Some(forest.delete_batch_counted(&job.ids)),
+                Some(w) => match w.logged(
+                    Op::Delete {
+                        ids: job.ids.clone(),
+                    },
+                    || forest.delete_batch_counted(&job.ids),
+                    || forest.snapshot(),
+                ) {
+                    Ok(r) => Some(r),
+                    Err(e) => {
+                        eprintln!("dare-batcher: wal append failed; refusing delete: {e}");
+                        None
+                    }
+                },
+            };
+            let Some((report, skipped, deferred)) = applied else {
+                drop(job.reply);
+                continue;
+            };
             let outcome = DeleteOutcome {
                 requested,
                 deleted: requested - skipped,

@@ -4,7 +4,9 @@
 //! forest store (per-shard locks + mutation epochs, DESIGN.md §8), a
 //! deletion batcher (dynamic batching of GDPR deletion requests), and
 //! per-model telemetry; plus a JSON-lines TCP protocol with a typed
-//! client.
+//! client, and an event-sourced durability layer (`wal`, DESIGN.md §11):
+//! write-ahead op log, crash recovery by replay, and signed deletion
+//! certificates.
 
 pub mod api;
 pub mod batcher;
@@ -13,9 +15,11 @@ pub mod registry;
 pub mod service;
 pub mod shards;
 pub mod telemetry;
+pub mod wal;
 
 pub use api::{
-    ApiError, CreateSpec, ModelSummary, Op, Request, Response, DEFAULT_MODEL, WIRE_VERSION,
+    ApiError, Certificate, CreateSpec, ModelSummary, Op, Request, Response, DEFAULT_MODEL,
+    WIRE_VERSION,
 };
 pub use batcher::{DeleteOutcome, DeletionBatcher};
 pub use protocol::{serve, Client, Prediction};
@@ -23,3 +27,4 @@ pub use registry::{Model, ModelRegistry};
 pub use service::{ServiceConfig, UnlearningService};
 pub use shards::ShardedForest;
 pub use telemetry::Telemetry;
+pub use wal::{FsyncPolicy, Wal};

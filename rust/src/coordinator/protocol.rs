@@ -10,7 +10,7 @@
 //! given un-namespaced objects).
 
 use crate::coordinator::api::{
-    self, ApiError, CreateSpec, ModelSummary, Op, Request, Response, WIRE_VERSION,
+    self, ApiError, Certificate, CreateSpec, ModelSummary, Op, Request, Response, WIRE_VERSION,
 };
 use crate::coordinator::batcher::DeleteOutcome;
 use crate::coordinator::service::UnlearningService;
@@ -240,6 +240,29 @@ impl Client {
         self.request(model, Op::DropModel).map(|_| ())
     }
 
+    /// Request a signed deletion certificate for an already-deleted
+    /// instance of `model` (requires the server to run with a WAL dir).
+    pub fn certify(&mut self, model: &str, id: InstanceId) -> Result<Certificate, ApiError> {
+        let resp = self.request(model, Op::Certify { id })?;
+        let cert = resp
+            .get("cert")
+            .ok_or_else(|| ApiError::Transport("response missing 'cert'".to_string()))?;
+        Certificate::from_wire(cert)
+            .map_err(|e| ApiError::Transport(format!("malformed cert in response: {e}")))
+    }
+
+    /// Check a deletion certificate against the server's signing key.
+    /// Model-independent: works even after the certified model is dropped.
+    pub fn verify_cert(&mut self, cert: &Certificate) -> Result<bool, ApiError> {
+        let resp = self.request(
+            api::DEFAULT_MODEL,
+            Op::VerifyCert { cert: cert.clone() },
+        )?;
+        resp.get("valid")
+            .and_then(Value::as_bool)
+            .ok_or_else(|| ApiError::Transport("response missing 'valid'".to_string()))
+    }
+
     /// Summaries of every registered model.
     pub fn list(&mut self) -> Result<Vec<ModelSummary>, ApiError> {
         let resp = self.request(api::DEFAULT_MODEL, Op::List)?;
@@ -349,6 +372,70 @@ mod tests {
 
         c.shutdown().unwrap();
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn certify_and_verify_over_tcp() {
+        let root = std::env::temp_dir().join(format!("dare-proto-wal-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let d = generate(
+            &SynthSpec {
+                n: 120,
+                informative: 3,
+                redundant: 0,
+                noise: 1,
+                flip: 0.05,
+                ..Default::default()
+            },
+            4,
+        );
+        let f = DareForest::fit(
+            d,
+            &Params {
+                n_trees: 3,
+                max_depth: 5,
+                k: 5,
+                ..Default::default()
+            },
+            6,
+        );
+        let svc = UnlearningService::new(
+            f,
+            ServiceConfig {
+                use_pjrt: false,
+                wal_dir: Some(root.clone()),
+                cert_key: Some("tcp-test-key".to_string()),
+                ..Default::default()
+            },
+        );
+        let (tx, rx) = std::sync::mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            serve(svc, "127.0.0.1:0", 2, move |addr| {
+                tx.send(addr).unwrap();
+            })
+            .unwrap();
+        });
+        let addr = rx.recv().unwrap();
+        let mut c = Client::connect(addr).unwrap();
+
+        // live instance: typed bad_request before deletion...
+        match c.certify("default", 7) {
+            Err(ApiError::BadRequest(_)) => {}
+            other => panic!("expected BadRequest for a live instance, got {other:?}"),
+        }
+        // ...then a verifiable certificate after
+        c.delete("default", &[7]).unwrap();
+        let cert = c.certify("default", 7).unwrap();
+        assert_eq!(cert.instance_id, 7);
+        assert_eq!(cert.model, "default");
+        assert!(c.verify_cert(&cert).unwrap());
+        let mut forged = cert.clone();
+        forged.epoch += 1;
+        assert!(!c.verify_cert(&forged).unwrap());
+
+        c.shutdown().unwrap();
+        handle.join().unwrap();
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

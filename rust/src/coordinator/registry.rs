@@ -14,11 +14,12 @@
 //! in-flight requests on already-resolved handles finish safely and the
 //! model's batcher thread stops when the last `Arc` drops.
 
-use crate::coordinator::api::{ApiError, ModelSummary};
+use crate::coordinator::api::{ApiError, Certificate, ModelSummary, Op};
 use crate::coordinator::batcher::{DeleteOutcome, DeletionBatcher};
 use crate::coordinator::service::ServiceConfig;
 use crate::coordinator::shards::ShardedForest;
 use crate::coordinator::telemetry::Telemetry;
+use crate::coordinator::wal::Wal;
 use crate::data::dataset::InstanceId;
 use crate::forest::forest::DareForest;
 use crate::forest::lazy::LazyPolicy;
@@ -44,12 +45,28 @@ pub struct Model {
     /// compared against [`ShardedForest::shard_epochs`] so only mutated
     /// shards are re-tensorized.
     pjrt_epochs: Mutex<Vec<u64>>,
+    /// Write-ahead log (DESIGN.md §11); `None` = in-memory-only model.
+    /// Adds journal through it here; deletes journal inside the batcher
+    /// worker (the same `Arc`), so every mutating op is logged before it
+    /// is applied or acked.
+    wal: Option<Arc<Wal>>,
 }
 
 impl Model {
     /// Build a served model from a trained forest under the service's
     /// config (shard count, deferral policy, batching window).
     pub fn new(name: &str, forest: DareForest, cfg: &ServiceConfig) -> Arc<Model> {
+        Self::new_with_wal(name, forest, cfg, None)
+    }
+
+    /// Like [`Model::new`], with an optional write-ahead log: every
+    /// mutating op on the model is journaled before it is applied.
+    pub fn new_with_wal(
+        name: &str,
+        forest: DareForest,
+        cfg: &ServiceConfig,
+        wal: Option<Arc<Wal>>,
+    ) -> Arc<Model> {
         // Build the PJRT predictor against the intact forest, then hand the
         // trees over to the sharded store.
         let (pjrt, manifest) = if cfg.use_pjrt {
@@ -74,7 +91,12 @@ impl Model {
             cfg.n_shards
         };
         let sharded = Arc::new(ShardedForest::new_with_policy(forest, n_shards, cfg.lazy));
-        let batcher = DeletionBatcher::start(Arc::clone(&sharded), cfg.batch_window, cfg.max_batch);
+        let batcher = DeletionBatcher::start_with_wal(
+            Arc::clone(&sharded),
+            cfg.batch_window,
+            cfg.max_batch,
+            wal.clone(),
+        );
         let pjrt_epochs = sharded.shard_epochs();
         Arc::new(Model {
             name: name.to_string(),
@@ -84,6 +106,7 @@ impl Model {
             pjrt: RwLock::new(pjrt),
             manifest,
             pjrt_epochs: Mutex::new(pjrt_epochs),
+            wal,
         })
     }
 
@@ -102,6 +125,11 @@ impl Model {
 
     pub fn telemetry_arc(&self) -> Arc<Telemetry> {
         Arc::clone(&self.telemetry)
+    }
+
+    /// The model's write-ahead log, when durability is enabled.
+    pub fn wal(&self) -> Option<&Arc<Wal>> {
+        self.wal.as_ref()
     }
 
     /// Whether the PJRT predictor is active for this model.
@@ -209,7 +237,10 @@ impl Model {
         }
     }
 
-    /// Add a fresh training instance (§6); returns its id.
+    /// Add a fresh training instance (§6); returns its id. With a WAL the
+    /// op is journaled (+fsync'd) before it is applied — validation
+    /// happens first, so only ops that will deterministically succeed on
+    /// replay reach the log.
     pub fn add(&self, row: &[f32], label: u8) -> Result<InstanceId, ApiError> {
         let want = self.sharded.n_features();
         if row.len() != want {
@@ -218,7 +249,25 @@ impl Model {
                 want,
             });
         }
-        match self.sharded.add(row, label) {
+        let applied = match &self.wal {
+            None => self.sharded.add(row, label),
+            Some(wal) => {
+                match wal.logged(
+                    Op::Add {
+                        row: row.to_vec(),
+                        label,
+                    },
+                    || self.sharded.add(row, label),
+                    || self.sharded.snapshot(),
+                ) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        return Err(ApiError::BadRequest(format!("durability failure: {e}")))
+                    }
+                }
+            }
+        };
+        match applied {
             Ok(id) => {
                 self.telemetry.incr("mutations", 1);
                 Ok(id)
@@ -230,6 +279,37 @@ impl Model {
     /// Dry-run total retrain cost of deleting `id`.
     pub fn delete_cost(&self, id: InstanceId) -> Result<u64, ApiError> {
         self.sharded.delete_cost(id).map_err(|_| ApiError::UnknownId(id))
+    }
+
+    /// Issue a signed deletion certificate for a removed instance
+    /// (DESIGN.md §11). Requires durability: without a log there is no
+    /// epoch to anchor the claim to. The id must reference a known, dead
+    /// instance — dead ids are never resurrected (adds mint fresh ids),
+    /// so the certified statement holds for every later epoch too.
+    pub fn certify(&self, id: InstanceId) -> Result<Certificate, ApiError> {
+        let Some(wal) = &self.wal else {
+            return Err(ApiError::BadRequest(
+                "certify requires durability (start the service with a WAL dir)".to_string(),
+            ));
+        };
+        let alive = self.sharded.with_data(|d| {
+            if (id as usize) < d.n_total() {
+                Some(d.is_alive(id))
+            } else {
+                None
+            }
+        });
+        match alive {
+            None => return Err(ApiError::UnknownId(id)),
+            Some(true) => {
+                return Err(ApiError::BadRequest(format!(
+                    "instance {id} is still live — certify only deleted instances"
+                )))
+            }
+            Some(false) => {}
+        }
+        self.telemetry.incr("certificates", 1);
+        Ok(wal.certify(id, || self.sharded.snapshot()))
     }
 
     /// The complete `stats` payload (includes `"ok":true`).
@@ -249,6 +329,7 @@ impl Model {
             .set("model", self.name.as_str())
             .set("telemetry", self.telemetry.snapshot())
             .set("n_alive", self.sharded.n_alive())
+            .set("n_features", self.sharded.n_features())
             .set("n_trees", self.sharded.n_trees())
             .set("n_shards", self.sharded.n_shards())
             .set("shards", Value::Arr(shards))
@@ -259,6 +340,12 @@ impl Model {
             .set("flushed_retrains", flushed)
             .set("model_bytes", mem.total())
             .set("data_bytes", self.sharded.data_bytes());
+        resp.set("durable", self.wal.is_some());
+        if let Some(wal) = &self.wal {
+            // u64 epochs stay exact as JSON numbers far past any real op
+            // count; the snapshot schema's string encoding is for seeds.
+            resp.set("wal_epoch", wal.epoch());
+        }
         resp
     }
 

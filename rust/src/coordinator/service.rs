@@ -23,11 +23,13 @@ use crate::coordinator::api::{self, ApiError, CreateSpec, Op, Request, Response,
 use crate::coordinator::registry::{Model, ModelRegistry};
 use crate::coordinator::shards::ShardedForest;
 use crate::coordinator::telemetry::Telemetry;
+use crate::coordinator::wal::{self, FsyncPolicy, Wal};
 use crate::forest::forest::DareForest;
 use crate::forest::lazy::LazyPolicy;
 use crate::forest::params::Params;
 use crate::util::json::Value;
 use crate::util::threadpool::default_threads;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Weak};
 use std::time::Duration;
@@ -55,6 +57,20 @@ pub struct ServiceConfig {
     pub compact_interval: Duration,
     /// Deferred retrains the compactor executes per tree per tick.
     pub compact_budget: usize,
+    /// Durability root (DESIGN.md §11): when set, every model owns a
+    /// write-ahead-log directory under it, mutating ops are journaled
+    /// before they are acked, and startup recovers every model found on
+    /// disk. `None` (the default) keeps the historical in-memory-only
+    /// behavior.
+    pub wal_dir: Option<PathBuf>,
+    /// When appended WAL records are fsync'd.
+    pub wal_fsync: FsyncPolicy,
+    /// Snapshot + truncate each model's log after this many logged ops
+    /// (0 = never snapshot; the log grows until restart).
+    pub wal_snapshot_every: u64,
+    /// Certificate HMAC key; `None` falls back to `DARE_HMAC_KEY`, then
+    /// the insecure dev default (see [`wal::resolve_key`]).
+    pub cert_key: Option<String>,
 }
 
 impl Default for ServiceConfig {
@@ -67,6 +83,10 @@ impl Default for ServiceConfig {
             lazy: LazyPolicy::from_env(),
             compact_interval: Duration::from_millis(25),
             compact_budget: 8,
+            wal_dir: None,
+            wal_fsync: FsyncPolicy::EveryOp,
+            wal_snapshot_every: 256,
+            cert_key: None,
         }
     }
 }
@@ -75,6 +95,9 @@ impl Default for ServiceConfig {
 pub struct UnlearningService {
     registry: ModelRegistry,
     cfg: ServiceConfig,
+    /// Resolved certificate HMAC key (config → `DARE_HMAC_KEY` → dev
+    /// default); shared by every model's WAL and by `verify_cert`.
+    cert_key: Vec<u8>,
     shutdown: AtomicBool,
 }
 
@@ -87,16 +110,73 @@ impl UnlearningService {
 
     /// Multi-tenant service: install each named forest. Names must be
     /// unique; v0 requests only reach a model literally named `"default"`.
+    ///
+    /// With `cfg.wal_dir` set, startup first *recovers* every model found
+    /// under the durability root (snapshot + valid log prefix — see
+    /// DESIGN.md §11); disk state wins over a passed-in forest of the same
+    /// name, because the durable state may carry acked mutations the
+    /// caller's freshly-trained forest does not. Remaining passed-in
+    /// models get fresh WAL directories. A model directory that fails to
+    /// recover is left untouched on disk and *not* served (its name stays
+    /// free for an operator to investigate), never silently reset.
     pub fn with_models(models: Vec<(String, DareForest)>, cfg: ServiceConfig) -> Arc<Self> {
         let registry = ModelRegistry::new();
+        let cert_key = wal::resolve_key(cfg.cert_key.as_deref());
+        let mut recovered: Vec<String> = Vec::new();
+        if let Some(root) = &cfg.wal_dir {
+            std::fs::create_dir_all(root).expect("create wal root");
+            for dir in Wal::scan(root) {
+                match Wal::recover(
+                    root,
+                    &dir,
+                    cfg.wal_fsync,
+                    cfg.wal_snapshot_every,
+                    cert_key.clone(),
+                ) {
+                    Ok(mut rec) => {
+                        rec.wal.set_model(&rec.name);
+                        let model = Model::new_with_wal(
+                            &rec.name,
+                            rec.forest,
+                            &cfg,
+                            Some(Arc::new(rec.wal)),
+                        );
+                        recovered.push(rec.name.clone());
+                        registry
+                            .insert(model)
+                            .expect("duplicate recovered model name");
+                    }
+                    Err(e) => {
+                        eprintln!("wal: cannot recover '{dir}' (not serving it): {e}");
+                    }
+                }
+            }
+        }
         for (name, forest) in models {
+            if recovered.iter().any(|r| r == &name) {
+                continue; // durable state wins
+            }
+            let wal = cfg.wal_dir.as_ref().map(|root| {
+                Arc::new(
+                    Wal::create(
+                        root,
+                        &name,
+                        &forest,
+                        cfg.wal_fsync,
+                        cfg.wal_snapshot_every,
+                        cert_key.clone(),
+                    )
+                    .expect("initialize wal"),
+                )
+            });
             registry
-                .insert(Model::new(&name, forest, &cfg))
+                .insert(Model::new_with_wal(&name, forest, &cfg, wal))
                 .expect("duplicate model name at startup");
         }
         let svc = Arc::new(UnlearningService {
             registry,
             cfg: cfg.clone(),
+            cert_key,
             shutdown: AtomicBool::new(false),
         });
         spawn_compactor(Arc::downgrade(&svc), cfg.compact_interval, cfg.compact_budget);
@@ -175,10 +255,23 @@ impl UnlearningService {
             Op::Create(spec) => self.op_create(&req.model, &spec),
             Op::Load { path } => self.op_load(&req.model, &path),
             Op::DropModel => match self.registry.remove(&req.model) {
-                Ok(m) => Response::Dropped {
-                    model: m.name().to_string(),
-                },
+                Ok(m) => {
+                    // Durability follows the registry: a dropped tenant
+                    // must not resurrect on restart (that would un-honor
+                    // every deletion it ever acked).
+                    if let Some(root) = &self.cfg.wal_dir {
+                        wal::Wal::remove_dir(root, m.name());
+                    }
+                    Response::Dropped {
+                        model: m.name().to_string(),
+                    }
+                }
                 Err(e) => Response::Err(e),
+            },
+            // Signature checks are model-independent (a cert for a since-
+            // dropped model must still verify): handle before resolution.
+            Op::VerifyCert { cert } => Response::CertCheck {
+                valid: wal::verify_certificate(&self.cert_key, &cert),
             },
             // Data-plane: resolve the model (the registry lock is released
             // inside `get`, before any per-model lock is touched).
@@ -249,7 +342,25 @@ impl UnlearningService {
     }
 
     fn install(&self, name: &str, forest: DareForest) -> Response {
-        let model = Model::new(name, forest, &self.cfg);
+        let wal = match &self.cfg.wal_dir {
+            Some(root) => match Wal::create(
+                root,
+                name,
+                &forest,
+                self.cfg.wal_fsync,
+                self.cfg.wal_snapshot_every,
+                self.cert_key.clone(),
+            ) {
+                Ok(w) => Some(Arc::new(w)),
+                Err(e) => {
+                    return Response::Err(ApiError::BadRequest(format!(
+                        "cannot initialize durability for '{name}': {e}"
+                    )))
+                }
+            },
+            None => None,
+        };
+        let model = Model::new_with_wal(name, forest, &self.cfg, wal);
         let n_trees = model.sharded().n_trees();
         let n_alive = model.sharded().n_alive();
         match self.registry.insert(model) {
@@ -311,7 +422,16 @@ fn dispatch_model(model: &Model, op: Op) -> Response {
             Ok(()) => Response::Ok,
             Err(e) => Response::Err(e),
         },
-        Op::Shutdown | Op::List | Op::Create(_) | Op::Load { .. } | Op::DropModel => {
+        Op::Certify { id } => match model.certify(id) {
+            Ok(cert) => Response::Certified(cert),
+            Err(e) => Response::Err(e),
+        },
+        Op::Shutdown
+        | Op::List
+        | Op::Create(_)
+        | Op::Load { .. }
+        | Op::DropModel
+        | Op::VerifyCert { .. } => {
             unreachable!("control-plane op routed to a model")
         }
     }
@@ -650,6 +770,115 @@ mod tests {
             );
         });
         lazy.sharded().validate().unwrap();
+    }
+
+    #[test]
+    fn durable_service_recovers_and_certifies() {
+        let root = std::env::temp_dir().join(format!("dare-svc-wal-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let wal_cfg = || ServiceConfig {
+            batch_window: Duration::from_millis(1),
+            use_pjrt: false,
+            n_shards: 2,
+            wal_dir: Some(root.clone()),
+            wal_snapshot_every: 4,
+            cert_key: Some("test-key".to_string()),
+            ..Default::default()
+        };
+        let d = generate(
+            &SynthSpec {
+                n: 180,
+                informative: 3,
+                redundant: 0,
+                noise: 2,
+                flip: 0.05,
+                ..Default::default()
+            },
+            21,
+        );
+        let f = DareForest::fit(
+            d,
+            &Params {
+                n_trees: 3,
+                max_depth: 5,
+                k: 5,
+                ..Default::default()
+            },
+            23,
+        );
+
+        // Session 1: mutate, certify a deletion, remember the state.
+        let svc = UnlearningService::new(f.clone(), wal_cfg());
+        let p = svc.n_features();
+        let row = vec!["0.3"; p].join(",");
+        svc.handle(&req(r#"{"op":"delete","ids":[0,5,9]}"#));
+        svc.handle(&req(&format!(r#"{{"op":"add","row":[{row}],"label":1}}"#)));
+        svc.handle(&req(r#"{"op":"delete","ids":[12,14]}"#));
+
+        // certify before deletion → typed bad_request; after → a cert
+        let r = svc.handle(&req(r#"{"op":"certify","id":30}"#));
+        assert_eq!(
+            r.get("error").unwrap().get("code").unwrap().as_str(),
+            Some("bad_request")
+        );
+        let r = svc.handle(&req(r#"{"op":"certify","id":999999}"#));
+        assert_eq!(
+            r.get("error").unwrap().get("code").unwrap().as_str(),
+            Some("unknown_id")
+        );
+        let r = svc.handle(&req(r#"{"op":"certify","id":5}"#));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        let cert = r.get("cert").unwrap().clone();
+        assert_eq!(cert.get("instance_id").unwrap().as_u64(), Some(5));
+        assert_eq!(cert.get("epoch").unwrap().as_u64(), Some(3));
+
+        let state_before = crate::forest::serialize::forest_to_json(&svc.snapshot_forest());
+        let pr = format!(r#"{{"op":"predict","rows":[[{row}]]}}"#);
+        let pred_before = svc.handle(&req(&pr)).to_string();
+        drop(svc); // "crash" (any un-fsync'd tail is already durable: EveryOp)
+
+        // Session 2: no forests passed in — everything comes off disk.
+        let svc2 = UnlearningService::with_models(Vec::new(), wal_cfg());
+        assert_eq!(svc2.registry().len(), 1);
+        let state_after = crate::forest::serialize::forest_to_json(&svc2.snapshot_forest());
+        assert_eq!(state_before, state_after, "recovered state must be byte-identical");
+        assert_eq!(svc2.handle(&req(&pr)).to_string(), pred_before);
+        // stats report durability + the recovered epoch
+        let s = svc2.handle(&req(r#"{"op":"stats"}"#));
+        assert_eq!(s.get("durable").unwrap().as_bool(), Some(true));
+        assert_eq!(s.get("wal_epoch").unwrap().as_u64(), Some(3));
+        // the pre-crash deletion is still absent and its cert verifies
+        let r = svc2.handle(&req(r#"{"op":"delete_cost","id":5}"#));
+        assert_eq!(
+            r.get("error").unwrap().get("code").unwrap().as_str(),
+            Some("unknown_id"),
+            "deleted instance resurrected after recovery"
+        );
+        let vr = svc2.handle(&req(&format!(
+            r#"{{"op":"verify_cert","cert":{cert}}}"#,
+            cert = cert.to_string()
+        )));
+        assert_eq!(vr.get("valid").unwrap().as_bool(), Some(true));
+        // a tampered cert does not verify
+        let mut bad = cert.clone();
+        bad.set("instance_id", 6u64);
+        let vr = svc2.handle(&req(&format!(r#"{{"op":"verify_cert","cert":{bad}}}"#, bad = bad.to_string())));
+        assert_eq!(vr.get("valid").unwrap().as_bool(), Some(false));
+
+        // a passed-in forest for a recovered name is ignored (disk wins)
+        drop(svc2);
+        let svc3 = UnlearningService::new(f, wal_cfg());
+        assert_eq!(
+            crate::forest::serialize::forest_to_json(&svc3.snapshot_forest()),
+            state_before,
+            "durable state must win over the passed-in forest"
+        );
+        // drop removes the durability dir; restart serves nothing
+        svc3.handle(&req(&format!(r#"{{"v":1,"model":"{DEFAULT_MODEL}","op":"drop"}}"#)));
+        drop(svc3);
+        let svc4 = UnlearningService::with_models(Vec::new(), wal_cfg());
+        assert_eq!(svc4.registry().len(), 0, "dropped model resurrected");
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

@@ -1,0 +1,809 @@
+//! Event-sourced durability for served models (DESIGN.md §11): a per-model
+//! write-ahead op log, periodic snapshots with log truncation, crash
+//! recovery by replay, and signed deletion certificates.
+//!
+//! **Layout.** Each durable model owns one directory under the service's
+//! WAL root:
+//!
+//! ```text
+//! <wal_root>/<dir_name(model)>/
+//!     name.txt        exact model name (the directory name is sanitized)
+//!     snapshot.json   forest snapshot + "wal_epoch" (the epoch it captures)
+//!     wal.log         header + framed op records past that epoch
+//! ```
+//!
+//! **Log format.** The log opens with a 16-byte header — the magic
+//! `DAREWAL1` then the base epoch as u64 LE — followed by records:
+//!
+//! ```text
+//! [u32 LE payload_len][u32 LE crc32(payload)][payload]
+//! payload = [u64 LE epoch][v1 wire-codec request JSON]
+//! ```
+//!
+//! Records reuse the PR-5 wire codec ([`api::encode_request`]) verbatim, so
+//! the log is greppable JSON and replay is the same decode path the server
+//! already property-tests. Epochs are assigned under the WAL mutex and
+//! increase by exactly 1 per record; within one log file they form the
+//! contiguous range `base+1 ..= base+n`.
+//!
+//! **Durability contract.** Every mutating op goes through [`Wal::logged`],
+//! which holds the WAL mutex across *append (+fsync per policy) → apply*.
+//! The client ack happens after `logged` returns, so an acked op is always
+//! on disk before it is visible — and log order equals apply order, which
+//! is what makes replay byte-exact (retrains are path-seeded pure functions
+//! of the op sequence; see DESIGN.md §6/§9). Flush/compact are *not*
+//! logged: they change no logical state, and flush-order invariance means
+//! replaying eagerly reproduces the bits of any live policy after a drain.
+//!
+//! **Recovery** ([`Wal::recover`]) loads the snapshot, then replays the
+//! longest valid prefix of the log: reading stops at the first record with
+//! a short frame, an insane length, a CRC mismatch, or a non-consecutive
+//! epoch; the file is truncated to that prefix so a torn tail can never
+//! corrupt later appends. Records with `epoch <= snapshot.wal_epoch` are
+//! skipped — that filter is what makes the snapshot-then-truncate dance
+//! crash-safe at every intermediate point.
+
+use crate::coordinator::api::{self, Certificate, Op, Request, WIRE_VERSION};
+use crate::data::dataset::InstanceId;
+use crate::forest::forest::DareForest;
+use crate::forest::serialize::{forest_from_json, forest_to_json};
+use crate::util::fsio::{atomic_write, fsync_dir};
+use crate::util::hash::{crc32, ct_eq, hmac_sha256, sha256, to_hex};
+use crate::util::json::{parse, Value};
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+const MAGIC: &[u8; 8] = b"DAREWAL1";
+const HEADER_LEN: u64 = 16;
+/// Upper bound on one record's payload; anything larger is treated as
+/// corruption (the largest real op is a bulk delete, far below this).
+const MAX_RECORD: u32 = 256 * 1024 * 1024;
+
+pub const SNAPSHOT_FILE: &str = "snapshot.json";
+pub const LOG_FILE: &str = "wal.log";
+pub const NAME_FILE: &str = "name.txt";
+
+/// The development-default certificate key, used when neither the config
+/// nor `DARE_HMAC_KEY` provides one. It is public by construction —
+/// certificates signed with it prove nothing; production deployments must
+/// set a real key.
+pub const DEV_CERT_KEY: &str = "dare-dev-insecure-cert-key";
+
+/// Resolve the certificate HMAC key: explicit config, then the
+/// `DARE_HMAC_KEY` environment variable, then the (insecure) dev default.
+pub fn resolve_key(explicit: Option<&str>) -> Vec<u8> {
+    match explicit {
+        Some(k) => k.as_bytes().to_vec(),
+        None => std::env::var("DARE_HMAC_KEY")
+            .map(String::into_bytes)
+            .unwrap_or_else(|_| DEV_CERT_KEY.as_bytes().to_vec()),
+    }
+}
+
+/// When appended records are fsync'd.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// fsync before every ack (full durability; the default).
+    EveryOp,
+    /// fsync every Nth record — up to N-1 acked ops can be lost to a
+    /// *power* failure (never to a process crash: the OS still has the
+    /// writes).
+    EveryN(u32),
+    /// fsync when this much time has passed since the last sync.
+    Interval(Duration),
+}
+
+impl FsyncPolicy {
+    /// Parse `"every_op" | "every:<n>" | "interval_ms:<ms>"`.
+    pub fn parse(s: &str) -> Option<FsyncPolicy> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "every_op" | "everyop" | "always" => Some(FsyncPolicy::EveryOp),
+            _ => {
+                if let Some(n) = s.strip_prefix("every:") {
+                    n.parse::<u32>().ok().filter(|n| *n > 0).map(FsyncPolicy::EveryN)
+                } else if let Some(ms) = s.strip_prefix("interval_ms:") {
+                    ms.parse::<u64>().ok().map(|ms| FsyncPolicy::Interval(Duration::from_millis(ms)))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for FsyncPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FsyncPolicy::EveryOp => write!(f, "every_op"),
+            FsyncPolicy::EveryN(n) => write!(f, "every:{n}"),
+            FsyncPolicy::Interval(d) => write!(f, "interval_ms:{}", d.as_millis()),
+        }
+    }
+}
+
+/// Map a model name to its directory name: names are user-supplied
+/// (1..=128 arbitrary bytes), so the printable-safe characters survive and
+/// everything else becomes `_`, with a crc32 suffix disambiguating names
+/// that sanitize identically. The exact name round-trips via `name.txt`.
+pub fn dir_name(model: &str) -> String {
+    let safe: String = model
+        .chars()
+        .take(40)
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') { c } else { '_' })
+        .collect();
+    format!("{safe}-{:08x}", crc32(model.as_bytes()))
+}
+
+fn header_bytes(base_epoch: u64) -> Vec<u8> {
+    let mut h = Vec::with_capacity(HEADER_LEN as usize);
+    h.extend_from_slice(MAGIC);
+    h.extend_from_slice(&base_epoch.to_le_bytes());
+    h
+}
+
+fn record_bytes(epoch: u64, json: &[u8]) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(8 + json.len());
+    payload.extend_from_slice(&epoch.to_le_bytes());
+    payload.extend_from_slice(json);
+    let mut rec = Vec::with_capacity(8 + payload.len());
+    rec.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    rec.extend_from_slice(&crc32(&payload).to_le_bytes());
+    rec.extend_from_slice(&payload);
+    rec
+}
+
+/// One decoded log record.
+#[derive(Clone, Debug)]
+pub struct LogRecord {
+    pub epoch: u64,
+    pub request: Request,
+}
+
+/// Parse the longest valid prefix of raw log bytes. Returns the records
+/// and the byte length of that prefix (header included). Never errors:
+/// any malformed tail — short frame, oversized length, CRC mismatch,
+/// unparseable JSON, undecodable request, non-consecutive epoch — simply
+/// ends the prefix. A bad header yields an empty log (prefix 0).
+pub fn read_valid_prefix(bytes: &[u8]) -> (Vec<LogRecord>, u64, u64) {
+    if bytes.len() < HEADER_LEN as usize || &bytes[..8] != MAGIC {
+        return (Vec::new(), 0, 0);
+    }
+    let base_epoch = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let mut records = Vec::new();
+    let mut off = HEADER_LEN as usize;
+    let mut epoch = base_epoch;
+    loop {
+        if bytes.len() - off < 8 {
+            break;
+        }
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+        let crc = u32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap());
+        if len < 9 || len > MAX_RECORD || bytes.len() - off - 8 < len as usize {
+            break;
+        }
+        let payload = &bytes[off + 8..off + 8 + len as usize];
+        if crc32(payload) != crc {
+            break;
+        }
+        let rec_epoch = u64::from_le_bytes(payload[..8].try_into().unwrap());
+        if rec_epoch != epoch + 1 {
+            break;
+        }
+        let Ok(json) = std::str::from_utf8(&payload[8..]) else {
+            break;
+        };
+        let Ok(value) = parse(json) else {
+            break;
+        };
+        let Ok(request) = api::decode(&value) else {
+            break;
+        };
+        records.push(LogRecord {
+            epoch: rec_epoch,
+            request,
+        });
+        epoch = rec_epoch;
+        off += 8 + len as usize;
+    }
+    (records, off as u64, base_epoch)
+}
+
+/// Apply one logged op to a forest during replay. Only `add` and `delete`
+/// ever reach the log; both are deterministic given the op sequence
+/// (dead-id deletes skip identically). Anything else in a decodable record
+/// means the log was produced by something other than `Wal::logged`.
+fn apply_record(forest: &mut DareForest, req: &Request) -> anyhow::Result<()> {
+    match &req.op {
+        Op::Delete { ids } => {
+            forest.delete_batch(ids);
+            Ok(())
+        }
+        Op::Add { row, label } => {
+            anyhow::ensure!(
+                row.len() == forest.data().n_features(),
+                "logged add has arity {} but the model expects {}",
+                row.len(),
+                forest.data().n_features()
+            );
+            forest.add(row, *label);
+            Ok(())
+        }
+        other => anyhow::bail!("unexpected op in wal: {other:?}"),
+    }
+}
+
+/// Canonical byte string a certificate's HMAC covers.
+fn cert_message(c: &Certificate) -> Vec<u8> {
+    format!(
+        "{}\0{}\0{}\0{}",
+        c.model, c.instance_id, c.epoch, c.snapshot_hash
+    )
+    .into_bytes()
+}
+
+/// Sign `cert` (fills `hmac`) with the server key.
+pub fn sign_certificate(key: &[u8], cert: &mut Certificate) {
+    cert.hmac = to_hex(&hmac_sha256(key, &cert_message(cert)));
+}
+
+/// Check a certificate's signature (constant-time compare).
+pub fn verify_certificate(key: &[u8], cert: &Certificate) -> bool {
+    let expect = to_hex(&hmac_sha256(key, &cert_message(cert)));
+    ct_eq(expect.as_bytes(), cert.hmac.as_bytes())
+}
+
+struct WalState {
+    file: File,
+    /// Epoch of the last durably-logged record.
+    epoch: u64,
+    since_sync: u64,
+    last_sync: Instant,
+    since_snapshot: u64,
+    /// `(epoch, hex sha256 of the canonical forest snapshot at that
+    /// epoch)` — certify requests at an unchanged epoch reuse it.
+    cert_cache: Option<(u64, String)>,
+    /// Set after an append/fsync error: the on-disk tail is unknown, so
+    /// further appends could land after garbage and be silently dropped by
+    /// the next recovery. All mutations are refused until restart.
+    failed: bool,
+}
+
+/// One model's write-ahead log. All mutating ops funnel through
+/// [`Wal::logged`]; the interior mutex makes log order equal apply order.
+pub struct Wal {
+    dir: PathBuf,
+    model: String,
+    fsync: FsyncPolicy,
+    /// Snapshot + truncate after this many logged ops (0 = never).
+    snapshot_every: u64,
+    key: Vec<u8>,
+    state: Mutex<WalState>,
+}
+
+/// What [`Wal::recover`] found on disk.
+pub struct Recovered {
+    pub name: String,
+    pub forest: DareForest,
+    pub wal: Wal,
+    /// Log records replayed on top of the snapshot.
+    pub replayed: u64,
+}
+
+impl Wal {
+    /// Create a fresh durable model directory: exact name, epoch-0
+    /// snapshot of `forest`, empty log. The forest must be fully flushed
+    /// (fresh `fit`/`load` results are).
+    pub fn create(
+        root: &Path,
+        model: &str,
+        forest: &DareForest,
+        fsync: FsyncPolicy,
+        snapshot_every: u64,
+        key: Vec<u8>,
+    ) -> anyhow::Result<Wal> {
+        let dir = root.join(dir_name(model));
+        std::fs::create_dir_all(&dir)?;
+        atomic_write(&dir.join(NAME_FILE), model.as_bytes())?;
+        let json = forest_to_json(forest);
+        let hash = to_hex(&sha256(json.as_bytes()));
+        write_snapshot_file(&dir, &json, 0)?;
+        atomic_write(&dir.join(LOG_FILE), &header_bytes(0))?;
+        fsync_dir(root)?;
+        let file = OpenOptions::new().append(true).open(dir.join(LOG_FILE))?;
+        Ok(Wal {
+            dir,
+            model: model.to_string(),
+            fsync,
+            snapshot_every,
+            key,
+            state: Mutex::new(WalState {
+                file,
+                epoch: 0,
+                since_sync: 0,
+                last_sync: Instant::now(),
+                since_snapshot: 0,
+                cert_cache: Some((0, hash)),
+                failed: false,
+            }),
+        })
+    }
+
+    /// Recover a model directory written by a previous process: load the
+    /// snapshot, replay the valid log prefix past its epoch, truncate any
+    /// torn tail, and reopen the log for append. Errors (unreadable or
+    /// invalid snapshot) are structured; corruption in the *log* is never
+    /// an error — the valid-prefix rule absorbs it.
+    pub fn recover(
+        root: &Path,
+        dir: &str,
+        fsync: FsyncPolicy,
+        snapshot_every: u64,
+        key: Vec<u8>,
+    ) -> anyhow::Result<Recovered> {
+        let dir = root.join(dir);
+        let name = std::fs::read_to_string(dir.join(NAME_FILE))
+            .map_err(|e| anyhow::anyhow!("unreadable {NAME_FILE}: {e}"))?;
+        let snap_str = std::fs::read_to_string(dir.join(SNAPSHOT_FILE))
+            .map_err(|e| anyhow::anyhow!("unreadable {SNAPSHOT_FILE}: {e}"))?;
+        let snap_epoch = snapshot_epoch(&snap_str)?;
+        let mut forest = forest_from_json(&snap_str)
+            .map_err(|e| anyhow::anyhow!("invalid {SNAPSHOT_FILE}: {e}"))?;
+
+        let mut log_bytes = Vec::new();
+        match File::open(dir.join(LOG_FILE)) {
+            Ok(mut f) => {
+                f.read_to_end(&mut log_bytes)?;
+            }
+            // A missing log (crash between snapshot and log reset in an
+            // older layout, or manual cleanup) is an empty log.
+            Err(_) => {}
+        }
+        let (records, valid_len, _base) = read_valid_prefix(&log_bytes);
+        let mut replayed = 0u64;
+        let mut epoch = snap_epoch;
+        for rec in &records {
+            if rec.epoch <= snap_epoch {
+                continue;
+            }
+            apply_record(&mut forest, &rec.request)?;
+            epoch = rec.epoch;
+            replayed += 1;
+        }
+
+        // Drop the torn tail (or recreate a missing/headerless log), then
+        // reopen for append.
+        if valid_len == 0 {
+            atomic_write(&dir.join(LOG_FILE), &header_bytes(epoch))?;
+        } else if (log_bytes.len() as u64) > valid_len {
+            let f = OpenOptions::new().write(true).open(dir.join(LOG_FILE))?;
+            f.set_len(valid_len)?;
+            f.sync_all()?;
+        }
+        let file = OpenOptions::new().append(true).open(dir.join(LOG_FILE))?;
+
+        let json = forest_to_json(&forest);
+        let hash = to_hex(&sha256(json.as_bytes()));
+        Ok(Recovered {
+            name,
+            forest,
+            replayed,
+            wal: Wal {
+                dir,
+                model: String::new(), // set by the caller via set_model
+                fsync,
+                snapshot_every,
+                key,
+                state: Mutex::new(WalState {
+                    file,
+                    epoch,
+                    since_sync: 0,
+                    last_sync: Instant::now(),
+                    since_snapshot: replayed,
+                    cert_cache: Some((epoch, hash)),
+                    failed: false,
+                }),
+            },
+        })
+    }
+
+    /// Set the model name records are stamped with (recovery constructs
+    /// the `Wal` before the name is adopted by the registry).
+    pub fn set_model(&mut self, name: &str) {
+        self.model = name.to_string();
+    }
+
+    /// List model directories under a WAL root (anything containing a
+    /// snapshot file; temp droppings and stray files are ignored).
+    pub fn scan(root: &Path) -> Vec<String> {
+        let Ok(rd) = std::fs::read_dir(root) else {
+            return Vec::new();
+        };
+        let mut dirs: Vec<String> = rd
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().join(SNAPSHOT_FILE).is_file())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .collect();
+        dirs.sort();
+        dirs
+    }
+
+    /// Epoch of the last durably-logged op.
+    pub fn epoch(&self) -> u64 {
+        self.state.lock().unwrap().epoch
+    }
+
+    /// Remove a model's durability directory (the `drop` op: resurrecting
+    /// a dropped tenant on restart would be the opposite of unlearning).
+    pub fn remove_dir(root: &Path, model: &str) {
+        let _ = std::fs::remove_dir_all(root.join(dir_name(model)));
+        let _ = fsync_dir(root);
+    }
+
+    /// The durability gate every mutating op passes through: append the
+    /// record (+fsync per policy), then run `apply`, all under the WAL
+    /// mutex — so the log's record order is exactly the store's apply
+    /// order, which replay then reproduces. After `snapshot_every` logged
+    /// ops, `snap` is invoked (still under the mutex: the logical state
+    /// cannot move) to write a fresh snapshot and truncate the log.
+    ///
+    /// An `Err` means nothing was applied and the op must not be acked;
+    /// the WAL also latches into a failed state (see `WalState::failed`).
+    pub fn logged<R>(
+        &self,
+        op: Op,
+        apply: impl FnOnce() -> R,
+        snap: impl FnOnce() -> DareForest,
+    ) -> io::Result<R> {
+        let mut st = self.state.lock().unwrap();
+        if st.failed {
+            return Err(io::Error::new(
+                io::ErrorKind::Other,
+                "wal is in a failed state; restart to recover",
+            ));
+        }
+        let epoch = st.epoch + 1;
+        let req = Request {
+            v: WIRE_VERSION,
+            model: self.model.clone(),
+            op,
+        };
+        let json = api::encode_request(&req).to_string();
+        let append = (|| -> io::Result<()> {
+            st.file.write_all(&record_bytes(epoch, json.as_bytes()))?;
+            st.since_sync += 1;
+            let due = match self.fsync {
+                FsyncPolicy::EveryOp => true,
+                FsyncPolicy::EveryN(n) => st.since_sync >= n as u64,
+                FsyncPolicy::Interval(d) => st.last_sync.elapsed() >= d,
+            };
+            if due {
+                st.file.sync_data()?;
+                st.since_sync = 0;
+                st.last_sync = Instant::now();
+            }
+            Ok(())
+        })();
+        if let Err(e) = append {
+            st.failed = true;
+            return Err(e);
+        }
+        st.epoch = epoch;
+        let out = apply();
+        st.since_snapshot += 1;
+        if self.snapshot_every > 0 && st.since_snapshot >= self.snapshot_every {
+            // Snapshot failure is not fatal: the log still holds every op,
+            // so recovery just replays a longer suffix.
+            if let Err(e) = self.write_snapshot_locked(&mut st, &snap()) {
+                eprintln!("wal[{}]: snapshot failed (log kept): {e}", self.model);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Snapshot the current state and truncate the log, outside the
+    /// normal `snapshot_every` cadence (used by tests and shutdown paths).
+    pub fn checkpoint(&self, forest: &DareForest) -> anyhow::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        self.write_snapshot_locked(&mut st, forest)
+    }
+
+    fn write_snapshot_locked(&self, st: &mut WalState, forest: &DareForest) -> anyhow::Result<()> {
+        let json = forest_to_json(forest);
+        let hash = to_hex(&sha256(json.as_bytes()));
+        write_snapshot_file(&self.dir, &json, st.epoch)?;
+        // The snapshot is durable; any crash from here on replays zero or
+        // more pre-snapshot records, all filtered by the epoch rule.
+        atomic_write(&self.dir.join(LOG_FILE), &header_bytes(st.epoch))?;
+        st.file = OpenOptions::new().append(true).open(self.dir.join(LOG_FILE))?;
+        st.since_snapshot = 0;
+        st.since_sync = 0;
+        st.cert_cache = Some((st.epoch, hash));
+        Ok(())
+    }
+
+    /// Issue a signed deletion certificate for `id` at the current epoch.
+    /// The caller has verified `id` is a dead instance; dead ids are never
+    /// resurrected (adds always mint fresh ids), so the statement stays
+    /// true for every later epoch too. `snap` supplies the flushed state
+    /// for the snapshot hash; it runs under the WAL mutex (no mutation can
+    /// interleave) and is cached per epoch.
+    pub fn certify(&self, id: InstanceId, snap: impl FnOnce() -> DareForest) -> Certificate {
+        let mut st = self.state.lock().unwrap();
+        let epoch = st.epoch;
+        let hash = match &st.cert_cache {
+            Some((e, h)) if *e == epoch => h.clone(),
+            _ => {
+                let h = to_hex(&sha256(forest_to_json(&snap()).as_bytes()));
+                st.cert_cache = Some((epoch, h.clone()));
+                h
+            }
+        };
+        let mut cert = Certificate {
+            model: self.model.clone(),
+            instance_id: id,
+            epoch,
+            snapshot_hash: hash,
+            hmac: String::new(),
+        };
+        sign_certificate(&self.key, &mut cert);
+        cert
+    }
+
+    /// Verify a certificate against this WAL's key.
+    pub fn verify(&self, cert: &Certificate) -> bool {
+        verify_certificate(&self.key, cert)
+    }
+}
+
+/// Read `wal_epoch` out of a snapshot file's JSON (stored as a string,
+/// like every u64 in the snapshot schema; absent means 0).
+fn snapshot_epoch(snap_str: &str) -> anyhow::Result<u64> {
+    let v = parse(snap_str).map_err(|e| anyhow::anyhow!("invalid {SNAPSHOT_FILE}: {e}"))?;
+    match v.get("wal_epoch") {
+        None => Ok(0),
+        Some(Value::Str(s)) => s
+            .parse::<u64>()
+            .map_err(|e| anyhow::anyhow!("bad wal_epoch: {e}")),
+        Some(Value::Num(n)) => Ok(*n as u64),
+        Some(_) => anyhow::bail!("bad wal_epoch type"),
+    }
+}
+
+/// Write `snapshot.json` = the forest snapshot plus its WAL epoch,
+/// atomically. The epoch is spliced as an extra top-level key;
+/// `forest_from_json` ignores unknown keys, so the file remains a valid
+/// `load`able snapshot.
+fn write_snapshot_file(dir: &Path, forest_json: &str, epoch: u64) -> anyhow::Result<()> {
+    let mut v = parse(forest_json).map_err(|e| anyhow::anyhow!("{e}"))?;
+    v.set("wal_epoch", epoch.to_string());
+    atomic_write(&dir.join(SNAPSHOT_FILE), v.to_string().as_bytes())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::forest::params::Params;
+
+    fn forest(seed: u64) -> DareForest {
+        let d = generate(
+            &SynthSpec {
+                n: 80,
+                informative: 3,
+                redundant: 0,
+                noise: 1,
+                flip: 0.05,
+                ..Default::default()
+            },
+            seed,
+        );
+        DareForest::fit(
+            d,
+            &Params {
+                n_trees: 2,
+                max_depth: 4,
+                k: 4,
+                ..Default::default()
+            },
+            seed ^ 0x2a,
+        )
+    }
+
+    fn temp_root(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("dare-wal-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn fsync_policy_parse_roundtrip() {
+        for p in [
+            FsyncPolicy::EveryOp,
+            FsyncPolicy::EveryN(16),
+            FsyncPolicy::Interval(Duration::from_millis(250)),
+        ] {
+            assert_eq!(FsyncPolicy::parse(&p.to_string()), Some(p));
+        }
+        assert_eq!(FsyncPolicy::parse("always"), Some(FsyncPolicy::EveryOp));
+        assert_eq!(FsyncPolicy::parse("every:0"), None);
+        assert_eq!(FsyncPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn dir_name_is_safe_and_distinct() {
+        let a = dir_name("eu/prod model");
+        assert!(a.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-')));
+        // names that sanitize identically stay distinct via the crc suffix
+        assert_ne!(dir_name("a/b"), dir_name("a_b"));
+        assert_eq!(dir_name("m"), dir_name("m"));
+    }
+
+    #[test]
+    fn framing_roundtrip_and_valid_prefix() {
+        let req = Request {
+            v: 1,
+            model: "m".to_string(),
+            op: Op::Delete { ids: vec![1, 2, 3] },
+        };
+        let json = api::encode_request(&req).to_string();
+        let mut bytes = header_bytes(5);
+        bytes.extend_from_slice(&record_bytes(6, json.as_bytes()));
+        bytes.extend_from_slice(&record_bytes(7, json.as_bytes()));
+        let full_len = bytes.len() as u64;
+        let (recs, len, base) = read_valid_prefix(&bytes);
+        assert_eq!((recs.len(), len, base), (2, full_len, 5));
+        assert_eq!(recs[0].epoch, 6);
+        assert_eq!(recs[1].request, req);
+
+        // torn tail: every truncation keeps a valid prefix
+        let one_rec_len = HEADER_LEN + 8 + 8 + json.len() as u64;
+        for cut in 0..bytes.len() {
+            let (recs, len, _) = read_valid_prefix(&bytes[..cut]);
+            let expect = if (cut as u64) >= one_rec_len * 2 - HEADER_LEN {
+                2
+            } else if (cut as u64) >= one_rec_len {
+                1
+            } else {
+                0
+            };
+            assert_eq!(recs.len(), expect, "cut at {cut}");
+            assert!(len <= cut as u64);
+        }
+
+        // epoch gap ends the prefix
+        let mut gap = header_bytes(5);
+        gap.extend_from_slice(&record_bytes(6, json.as_bytes()));
+        gap.extend_from_slice(&record_bytes(8, json.as_bytes()));
+        let (recs, _, _) = read_valid_prefix(&gap);
+        assert_eq!(recs.len(), 1);
+
+        // corrupt crc ends the prefix
+        let mut bad = bytes.clone();
+        let flip = bad.len() - 3;
+        bad[flip] ^= 0xff;
+        let (recs, _, _) = read_valid_prefix(&bad);
+        assert_eq!(recs.len(), 1);
+
+        // bad header: empty log
+        let (recs, len, _) = read_valid_prefix(b"NOTAWAL!garbage");
+        assert_eq!((recs.len(), len), (0, 0));
+    }
+
+    #[test]
+    fn create_log_recover_roundtrip() {
+        let root = temp_root("roundtrip");
+        let f = forest(3);
+        let p = f.data().n_features();
+        let wal = Wal::create(&root, "m", &f, FsyncPolicy::EveryOp, 0, b"k".to_vec()).unwrap();
+
+        // live side: apply + log the same ops
+        let mut live = f.clone();
+        wal.logged(
+            Op::Delete { ids: vec![0, 3, 5] },
+            || live.delete_batch(&[0, 3, 5]),
+            || unreachable!("snapshot_every=0"),
+        )
+        .unwrap();
+        wal.logged(
+            Op::Add { row: vec![0.5; p], label: 1 },
+            || live.add(&vec![0.5; p], 1),
+            || unreachable!(),
+        )
+        .unwrap();
+        wal.logged(
+            Op::Delete { ids: vec![3, 7] }, // 3 already dead: skip must replay identically
+            || live.delete_batch(&[3, 7]),
+            || unreachable!(),
+        )
+        .unwrap();
+        assert_eq!(wal.epoch(), 3);
+        drop(wal);
+
+        let rec = Wal::recover(&root, &dir_name("m"), FsyncPolicy::EveryOp, 0, b"k".to_vec()).unwrap();
+        assert_eq!(rec.name, "m");
+        assert_eq!(rec.replayed, 3);
+        assert_eq!(rec.wal.epoch(), 3);
+        assert_eq!(forest_to_json(&rec.forest), forest_to_json(&live));
+    }
+
+    #[test]
+    fn snapshot_truncates_log_and_recovery_uses_epoch_filter() {
+        let root = temp_root("snap");
+        let f = forest(9);
+        // snapshot every 2 ops
+        let wal = Wal::create(&root, "m", &f, FsyncPolicy::EveryOp, 2, b"k".to_vec()).unwrap();
+        let live = std::cell::RefCell::new(f.clone());
+        for (i, ids) in [vec![0u32], vec![1], vec![2]].into_iter().enumerate() {
+            wal.logged(
+                Op::Delete { ids: ids.clone() },
+                || live.borrow_mut().delete_batch(&ids),
+                || live.borrow().clone(),
+            )
+            .unwrap();
+            let _ = i;
+        }
+        // after 3 ops with snapshot_every=2: snapshot at epoch 2, log holds
+        // only the epoch-3 record
+        let dir = root.join(dir_name("m"));
+        let log = std::fs::read(dir.join(LOG_FILE)).unwrap();
+        let (recs, _, base) = read_valid_prefix(&log);
+        assert_eq!(base, 2);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].epoch, 3);
+        assert_eq!(snapshot_epoch(&std::fs::read_to_string(dir.join(SNAPSHOT_FILE)).unwrap()).unwrap(), 2);
+        drop(wal);
+
+        let rec = Wal::recover(&root, &dir_name("m"), FsyncPolicy::EveryOp, 2, b"k".to_vec()).unwrap();
+        assert_eq!(rec.replayed, 1);
+        assert_eq!(forest_to_json(&rec.forest), forest_to_json(&live.borrow()));
+    }
+
+    #[test]
+    fn certificates_sign_and_verify() {
+        let root = temp_root("cert");
+        let f = forest(5);
+        let mut wal =
+            Wal::create(&root, "m", &f, FsyncPolicy::EveryOp, 0, b"secret".to_vec()).unwrap();
+        wal.set_model("m");
+        let mut live = f.clone();
+        wal.logged(Op::Delete { ids: vec![4] }, || live.delete_batch(&[4]), || unreachable!())
+            .unwrap();
+        let cert = wal.certify(4, || live.clone());
+        assert_eq!(cert.epoch, 1);
+        assert_eq!(cert.model, "m");
+        assert_eq!(cert.snapshot_hash.len(), 64);
+        assert!(wal.verify(&cert));
+        assert!(verify_certificate(b"secret", &cert));
+        // any tampering breaks the signature
+        for tamper in [
+            Certificate { instance_id: 5, ..cert.clone() },
+            Certificate { epoch: 2, ..cert.clone() },
+            Certificate { model: "m2".to_string(), ..cert.clone() },
+            Certificate { snapshot_hash: format!("0{}", &cert.snapshot_hash[1..]), ..cert.clone() },
+        ] {
+            assert!(!verify_certificate(b"secret", &tamper), "{tamper:?}");
+        }
+        assert!(!verify_certificate(b"wrong-key", &cert));
+        // the cached hash matches a fresh hash of the live state
+        assert_eq!(
+            cert.snapshot_hash,
+            to_hex(&sha256(forest_to_json(&live).as_bytes()))
+        );
+    }
+
+    #[test]
+    fn scan_ignores_stray_files() {
+        let root = temp_root("scan");
+        let f = forest(1);
+        Wal::create(&root, "a", &f, FsyncPolicy::EveryOp, 0, b"k".to_vec()).unwrap();
+        std::fs::write(root.join("stray.txt"), b"junk").unwrap();
+        std::fs::create_dir_all(root.join("empty-dir")).unwrap();
+        assert_eq!(Wal::scan(&root), vec![dir_name("a")]);
+    }
+}

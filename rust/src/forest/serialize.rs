@@ -120,7 +120,11 @@ fn arena_node_to_json(t: &ArenaTree, nid: u32) -> Value {
     o
 }
 
-fn node_from_json(v: &Value) -> anyhow::Result<Node> {
+/// `n_total` bounds leaf instance ids: a snapshot whose leaves point past
+/// the serialized dataset would index out of bounds on the first retrain,
+/// so it is rejected up front (the wire `load` op surfaces this as a
+/// structured `bad_request`).
+fn node_from_json(v: &Value, n_total: u32) -> anyhow::Result<Node> {
     let t = v
         .get("t")
         .and_then(|x| x.as_str())
@@ -139,8 +143,17 @@ fn node_from_json(v: &Value) -> anyhow::Result<Node> {
                 .and_then(|x| x.as_arr())
                 .ok_or_else(|| anyhow::anyhow!("leaf ids missing"))?
                 .iter()
-                .map(|x| x.as_u64().unwrap_or(0) as u32)
-                .collect();
+                .map(|x| {
+                    let id = x
+                        .as_u64()
+                        .ok_or_else(|| anyhow::anyhow!("non-numeric leaf id"))?;
+                    anyhow::ensure!(
+                        id < n_total as u64,
+                        "leaf id {id} out of range (dataset has {n_total} rows)"
+                    );
+                    Ok(id as u32)
+                })
+                .collect::<anyhow::Result<Vec<u32>>>()?;
             Ok(Node::Leaf(LeafNode {
                 n: num("n")?,
                 n_pos: num("np")?,
@@ -156,9 +169,11 @@ fn node_from_json(v: &Value) -> anyhow::Result<Node> {
             n_right: num("nr")?,
             left: Box::new(node_from_json(
                 v.get("l").ok_or_else(|| anyhow::anyhow!("left missing"))?,
+                n_total,
             )?),
             right: Box::new(node_from_json(
                 v.get("r").ok_or_else(|| anyhow::anyhow!("right missing"))?,
+                n_total,
             )?),
         })),
         "greedy" => {
@@ -192,9 +207,11 @@ fn node_from_json(v: &Value) -> anyhow::Result<Node> {
                 best_thr: num("bt")? as usize,
                 left: Box::new(node_from_json(
                     v.get("l").ok_or_else(|| anyhow::anyhow!("left missing"))?,
+                    n_total,
                 )?),
                 right: Box::new(node_from_json(
                     v.get("r").ok_or_else(|| anyhow::anyhow!("right missing"))?,
+                    n_total,
                 )?),
             }))
         }
@@ -283,6 +300,7 @@ fn dataset_from_json(v: &Value) -> anyhow::Result<Dataset> {
         .get("cols")
         .and_then(|x| x.as_arr())
         .ok_or_else(|| anyhow::anyhow!("dataset cols missing"))?;
+    anyhow::ensure!(!cols_json.is_empty(), "dataset has no feature columns");
     let cols: Vec<Vec<f32>> = cols_json
         .iter()
         .map(|c| {
@@ -291,15 +309,41 @@ fn dataset_from_json(v: &Value) -> anyhow::Result<Dataset> {
                 .ok_or_else(|| anyhow::anyhow!("bad column"))
         })
         .collect::<anyhow::Result<_>>()?;
+    // `Dataset::from_columns` asserts rectangularity; validate here so a
+    // hand-edited or truncated snapshot surfaces a structured error rather
+    // than a panic inside the data layer.
+    let n = cols[0].len();
+    anyhow::ensure!(n > 0, "dataset has no rows");
+    for (j, c) in cols.iter().enumerate() {
+        anyhow::ensure!(
+            c.len() == n,
+            "ragged dataset: column {j} has {} rows, column 0 has {n}",
+            c.len()
+        );
+    }
     let labels: Vec<u8> = v
         .get("labels")
         .and_then(|x| x.as_arr())
         .ok_or_else(|| anyhow::anyhow!("labels missing"))?
         .iter()
-        .map(|x| x.as_u64().unwrap_or(0) as u8)
-        .collect();
+        .map(|x| match x.as_u64() {
+            Some(l @ (0 | 1)) => Ok(l as u8),
+            Some(l) => anyhow::bail!("label {l} out of range (binary labels only)"),
+            None => anyhow::bail!("non-numeric label"),
+        })
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(
+        labels.len() == n,
+        "label count {} != row count {n}",
+        labels.len()
+    );
     let mut d = Dataset::from_columns(cols, labels);
     if let Some(alive) = v.get("alive").and_then(|x| x.as_arr()) {
+        anyhow::ensure!(
+            alive.len() == n,
+            "alive mask length {} != row count {n}",
+            alive.len()
+        );
         for (i, a) in alive.iter().enumerate() {
             if a.as_bool() == Some(false) {
                 d.mark_removed(i as u32);
@@ -362,7 +406,10 @@ pub fn forest_from_json(s: &str) -> anyhow::Result<DareForest> {
     let mut trees = Vec::with_capacity(trees_json.len());
     for t in trees_json {
         trees.push(DareTree::from_root(
-            node_from_json(t.get("root").ok_or_else(|| anyhow::anyhow!("root"))?)?,
+            node_from_json(
+                t.get("root").ok_or_else(|| anyhow::anyhow!("root"))?,
+                data.n_total() as u32,
+            )?,
             get_u64(t, "seed")?,
             get_u64(t, "epoch").unwrap_or(0),
         ));
@@ -370,9 +417,12 @@ pub fn forest_from_json(s: &str) -> anyhow::Result<DareForest> {
     DareForest::from_parts(params, seed, trees, data)
 }
 
-/// Save to a file.
+/// Save to a file, crash-safely: the snapshot is written to a temp file,
+/// fsync'd, renamed over `path`, and the parent directory fsync'd — a crash
+/// at any instant leaves either the old snapshot or the new one, never a
+/// torn file (DESIGN.md §11).
 pub fn save(f: &DareForest, path: &std::path::Path) -> anyhow::Result<()> {
-    std::fs::write(path, forest_to_json(f))?;
+    crate::util::fsio::atomic_write(path, forest_to_json(f).as_bytes())?;
     Ok(())
 }
 
@@ -468,6 +518,50 @@ mod tests {
         assert!(forest_from_json("{}").is_err());
         assert!(forest_from_json("not json").is_err());
         assert!(forest_from_json(r#"{"format":"other"}"#).is_err());
+    }
+
+    /// A snapshot that parses as JSON but violates arity or value-range
+    /// invariants must come back as a structured `Err`, never a panic —
+    /// the wire `load` op forwards these messages as `bad_request`.
+    #[test]
+    fn rejects_malformed_snapshots_without_panicking() {
+        let good = forest_to_json(&forest());
+        let v = parse(&good).unwrap();
+
+        // Ragged dataset: drop one entry from column 0.
+        let mut ragged = v.clone();
+        if let Some(Value::Arr(cols)) = ragged.get_mut("data").and_then(|d| d.get_mut("cols")) {
+            if let Value::Arr(c0) = &mut cols[0] {
+                c0.pop();
+            }
+        }
+        let err = forest_from_json(&ragged.to_string()).unwrap_err().to_string();
+        assert!(err.contains("ragged"), "got: {err}");
+
+        // Non-binary label.
+        let mut bad_label = v.clone();
+        if let Some(Value::Arr(ls)) = bad_label.get_mut("data").and_then(|d| d.get_mut("labels")) {
+            ls[0] = Value::Num(7.0);
+        }
+        let err = forest_from_json(&bad_label.to_string()).unwrap_err().to_string();
+        assert!(err.contains("label"), "got: {err}");
+
+        // Wrong-length alive mask.
+        let mut bad_alive = v.clone();
+        if let Some(Value::Arr(a)) = bad_alive.get_mut("data").and_then(|d| d.get_mut("alive")) {
+            a.pop();
+        }
+        let err = forest_from_json(&bad_alive.to_string()).unwrap_err().to_string();
+        assert!(err.contains("alive mask"), "got: {err}");
+
+        // Leaf id pointing past the dataset.
+        let huge = good.replacen("\"ids\":[", "\"ids\":[999999,", 1);
+        let err = forest_from_json(&huge).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "got: {err}");
+
+        // Params failing their own validation (zero trees).
+        let zero_trees = good.replace("\"n_trees\":3", "\"n_trees\":0");
+        assert!(forest_from_json(&zero_trees).is_err());
     }
 
     #[test]

@@ -25,6 +25,7 @@ const VALUE_KEYS: &[&str] = &[
     "dataset", "scale", "trees", "depth", "k", "drmax", "criterion", "seed", "threads", "save",
     "load", "csv", "ids", "addr", "workers", "repeats", "deletions", "worst-of", "datasets",
     "out-dir", "max-trees", "ks", "grid", "folds", "tolerances", "label", "n", "model",
+    "wal-dir", "fsync", "snapshot-every", "hmac-key",
 ];
 
 fn main() {
@@ -64,6 +65,10 @@ COMMANDS
   serve      --load model.json|--dataset <name> [--addr 127.0.0.1:7878]
              [--workers W] [--model NAME]   (NAME defaults to 'default';
              further models can be created/loaded over the wire)
+             durability: [--wal-dir DIR] [--fsync every_op|every:<n>|interval_ms:<ms>]
+             [--snapshot-every N] [--hmac-key KEY]  (write-ahead log +
+             crash recovery + signed deletion certificates; with --wal-dir,
+             journaled state wins over --load for already-served names)
   tune       --dataset <name> [--scale N] [--grid paper|small] [--folds F]
   reproduce  <fig1|fig2|fig3|table2|table3|table5|table6|table7|table9|all>
              [--scale N] [--repeats R] [--deletions D] [--worst-of C]
@@ -192,6 +197,21 @@ fn cmd_predict(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = ServiceConfig::default();
+    if let Some(dir) = args.get("wal-dir") {
+        cfg.wal_dir = Some(dir.into());
+    }
+    if let Some(policy) = args.get("fsync") {
+        cfg.wal_fsync = dare::coordinator::FsyncPolicy::parse(policy).ok_or_else(|| {
+            anyhow::anyhow!("--fsync: expected every_op | every:<n> | interval_ms:<ms>, got '{policy}'")
+        })?;
+    }
+    cfg.wal_snapshot_every = args.u64("snapshot-every", cfg.wal_snapshot_every);
+    cfg.cert_key = args.get("hmac-key").map(str::to_string);
+    let name = args.get_or("model", dare::coordinator::DEFAULT_MODEL);
+    // With a WAL dir, durable on-disk state wins over --load/--dataset for
+    // any model name it already covers (DESIGN.md §11) — the flags only
+    // seed models that have no journal yet.
     let forest = if let Some(path) = args.get("load") {
         serialize::load(Path::new(path))?
     } else {
@@ -199,14 +219,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         println!("no --load given; training a fresh model first...");
         DareForest::fit(data, &params, args.u64("seed", 1))
     };
-    let name = args.get_or("model", dare::coordinator::DEFAULT_MODEL);
-    let svc = UnlearningService::with_models(
-        vec![(name.to_string(), forest)],
-        ServiceConfig::default(),
-    );
+    let durable = cfg.wal_dir.is_some();
+    let svc = UnlearningService::with_models(vec![(name.to_string(), forest)], cfg);
     let addr = args.get_or("addr", "127.0.0.1:7878");
     println!(
-        "dare unlearning service (wire v{}, model '{name}', pjrt={})",
+        "dare unlearning service (wire v{}, model '{name}', pjrt={}, durable={durable})",
         dare::coordinator::WIRE_VERSION,
         svc.registry().get(name).map(|m| m.pjrt_active()).unwrap_or(false)
     );

@@ -1,0 +1,88 @@
+//! Crash-safe filesystem helpers shared by the forest snapshot writer and
+//! the coordinator write-ahead log.
+//!
+//! The invariant all callers rely on: after `atomic_write(path, bytes)`
+//! returns, either the old contents of `path` or the new `bytes` survive a
+//! crash at any instant — never a prefix, never an empty file. That takes
+//! three steps: write + fsync a temp file in the same directory, rename it
+//! over the target (atomic within a filesystem), then fsync the parent
+//! directory so the rename itself is durable.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, Write};
+use std::path::Path;
+
+/// fsync a directory so a rename/create/unlink inside it is durable.
+/// On platforms where opening a directory for read fails (non-POSIX),
+/// degrade to a no-op rather than an error.
+pub fn fsync_dir(dir: &Path) -> io::Result<()> {
+    match File::open(dir) {
+        Ok(d) => d.sync_all(),
+        Err(_) => Ok(()),
+    }
+}
+
+/// Atomically replace `path` with `bytes` (temp file + fsync + rename +
+/// parent-dir fsync). The temp file lives next to the target (same
+/// filesystem, so the rename is atomic) and is named `.<file>.tmp`;
+/// recovery scans ignore such names.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "atomic_write: no file name"))?;
+    let tmp = path.with_file_name(format!(".{}.tmp", file_name.to_string_lossy()));
+    {
+        let mut f = OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    if let Some(dir) = dir {
+        fsync_dir(dir)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("dare-fsio-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn atomic_write_creates_and_replaces() {
+        let dir = temp_dir("replace");
+        let path = dir.join("snap.json");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second, longer contents").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second, longer contents");
+        // No temp droppings left behind.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn atomic_write_rejects_bare_root() {
+        let err = atomic_write(Path::new("/"), b"x");
+        assert!(err.is_err());
+    }
+}

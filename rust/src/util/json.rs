@@ -37,6 +37,12 @@ impl Value {
             _ => None,
         }
     }
+    pub fn get_mut(&mut self, key: &str) -> Option<&mut Value> {
+        match self {
+            Value::Obj(m) => m.get_mut(key),
+            _ => None,
+        }
+    }
     /// Remove a key from an object; `None` on non-objects / missing keys.
     pub fn remove(&mut self, key: &str) -> Option<Value> {
         match self {

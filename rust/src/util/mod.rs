@@ -3,6 +3,8 @@
 //! and text-table rendering for the experiment harness.
 
 pub mod cli;
+pub mod fsio;
+pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;

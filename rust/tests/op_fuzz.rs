@@ -598,6 +598,166 @@ fn registry_two_model_interleavings_match_standalone_stores() {
     }
 }
 
+/// ISSUE 6: the durability differential (DESIGN.md §11). Every fuzzed op
+/// sequence is journaled through a [`Wal`] while a live forest — running
+/// under the ambient `DARE_LAZY_POLICY`, so the CI matrix covers both
+/// deferral modes — applies it; a fresh `Wal::recover` must then land on
+/// the byte-identical serialized forest and f32-identical predictions.
+/// Replay is *eager* (snapshots are canonical flushed state, and logged
+/// deletes re-apply through the eager `delete_batch` path), so this is the
+/// PR-4 flush-order-invariance argument executed end-to-end through the
+/// on-disk log: eager replay of the journal ≡ live-then-flush. A small
+/// `snapshot_every` makes the snapshot + log-truncation dance fire
+/// mid-sequence, fuzzing the epoch-filtered replay path; `EveryN` fsync
+/// plus a mid-sequence recovery probe check that recovery is correct at
+/// interior points, not just at rest.
+#[test]
+fn wal_replay_lands_on_the_live_forest_bit_for_bit() {
+    use dare::coordinator::api::Op;
+    use dare::coordinator::wal::{dir_name, Wal};
+    use dare::coordinator::FsyncPolicy;
+    use std::cell::RefCell;
+
+    let root = std::env::temp_dir().join(format!("dare-fuzz-wal-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let policy = LazyPolicy::from_env();
+
+    for seed in fuzz_seeds() {
+        let mut rng = Rng::new(mix_seed(&[seed, 0x3A17]));
+        let n = 60 + rng.index(60);
+        let p = 3 + rng.index(3);
+        let data = random_dataset(&mut rng, n, p);
+        let max_depth = 4 + rng.index(2);
+        let params = Params {
+            n_trees: 2 + rng.index(2),
+            max_depth,
+            k: 2 + rng.index(5),
+            d_rmax: rng.index(2).min(max_depth),
+            ..Default::default()
+        };
+        let mut live = DareForest::fit(data, &params, rng.next_u64());
+        live.set_lazy_policy(policy);
+        let live = RefCell::new(live);
+        // Canonical flushed state for snapshots (fresh fits are flushed;
+        // later snapshots flush a clone so the live leg's dirty set — the
+        // thing under test — is never perturbed).
+        let flushed = || {
+            let mut c = live.borrow().clone();
+            c.flush_all();
+            c
+        };
+        let model = format!("fuzz-{seed}");
+        let wal = Wal::create(
+            &root,
+            &model,
+            &live.borrow(),
+            FsyncPolicy::EveryN(3),
+            4, // snapshot + truncate mid-sequence
+            b"fuzz-key".to_vec(),
+        )
+        .unwrap();
+
+        let ops = 12 + rng.index(8);
+        let probe_at = rng.index(ops);
+        for op in 0..ops {
+            match rng.index(8) {
+                0..=3 if live.borrow().n_alive() > 12 => {
+                    let live_ids = live.borrow().live_ids();
+                    let mut ids = vec![live_ids[rng.index(live_ids.len())]];
+                    if rng.bernoulli(0.2) {
+                        // journaled jobs may carry dead ids; replay must
+                        // skip them exactly like the live path did
+                        ids.push(live_ids[rng.index(live_ids.len())]);
+                    }
+                    wal.logged(
+                        Op::Delete { ids: ids.clone() },
+                        || live.borrow_mut().delete_batch(&ids),
+                        &flushed,
+                    )
+                    .unwrap();
+                }
+                4..=5 | 0..=3 => {
+                    let row: Vec<f32> = (0..live.borrow().data().n_features())
+                        .map(|_| rng.range_f32(-4.0, 4.0))
+                        .collect();
+                    let label = rng.bernoulli(0.5) as u8;
+                    wal.logged(
+                        Op::Add {
+                            row: row.clone(),
+                            label,
+                        },
+                        || live.borrow_mut().add(&row, label),
+                        &flushed,
+                    )
+                    .unwrap();
+                }
+                6 => {
+                    // an explicit checkpoint truncates the log outside the
+                    // snapshot_every cadence
+                    wal.checkpoint(&flushed()).unwrap();
+                }
+                _ => {
+                    // reads don't journal; drain part of the backlog so the
+                    // dirty set's shape varies across the sequence
+                    live.borrow_mut().compact(1 + rng.index(2));
+                }
+            }
+            if op == probe_at {
+                // crash-recover at an interior point: replaying the log as
+                // written so far must reproduce the flushed live state
+                let rec = Wal::recover(
+                    &root,
+                    &dir_name(&model),
+                    FsyncPolicy::EveryOp,
+                    0,
+                    b"fuzz-key".to_vec(),
+                )
+                .unwrap_or_else(|e| panic!("seed {seed}, op {op}: recovery failed: {e}"));
+                assert_eq!(
+                    forest_to_json(&rec.forest),
+                    forest_to_json(&flushed()),
+                    "seed {seed}, op {op}: mid-sequence recovery diverged from the live leg"
+                );
+            }
+        }
+
+        // End of sequence: recovery must land on the live forest bit for bit.
+        let final_epoch = wal.epoch();
+        drop(wal);
+        live.borrow_mut().flush_all();
+        let expect = forest_to_json(&live.borrow());
+        let rec = Wal::recover(
+            &root,
+            &dir_name(&model),
+            FsyncPolicy::EveryOp,
+            0,
+            b"fuzz-key".to_vec(),
+        )
+        .unwrap_or_else(|e| panic!("seed {seed}: final recovery failed: {e}"));
+        assert_eq!(rec.name, model);
+        assert_eq!(rec.wal.epoch(), final_epoch, "seed {seed}: recovered epoch diverged");
+        assert_eq!(
+            forest_to_json(&rec.forest),
+            expect,
+            "seed {seed}: recovered forest is not byte-identical to the live leg"
+        );
+        let probes: Vec<Vec<f32>> = (0..6)
+            .map(|_| {
+                (0..live.borrow().data().n_features())
+                    .map(|_| rng.range_f32(-5.0, 5.0))
+                    .collect()
+            })
+            .collect();
+        assert_eq!(
+            rec.forest.predict_proba_rows(&probes),
+            live.borrow().predict_proba_rows(&probes),
+            "seed {seed}: recovered predictions diverged"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
 /// The paper's exactness theorem, executable: in the exhaustive regime
 /// every deletion leaves every tree identical to retraining from scratch
 /// on the surviving instances — through the arena path AND the sharded
