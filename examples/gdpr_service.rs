@@ -6,11 +6,17 @@
 //! durably (DESIGN.md §11): every deletion is journaled to a write-ahead
 //! log before it's acked, and each one can be receipted with a signed
 //! deletion certificate (`Client::certify` / `Client::verify_cert`) that
-//! stays verifiable for the lifetime of the signing key.
+//! stays verifiable for the lifetime of the signing key. A read-only
+//! follower then bootstraps from the leader and tails its log
+//! (DESIGN.md §12): the leader's certificate verifies on it, and it
+//! refuses mutations with a redirect to the leader.
 //!
 //!     make artifacts && cargo run --release --offline --example gdpr_service
 
-use dare::coordinator::{serve, Client, ServiceConfig, UnlearningService, DEFAULT_MODEL};
+use dare::coordinator::{
+    bootstrap_follower, serve, ApiError, Client, ReplicationConfig, ServiceConfig,
+    UnlearningService, DEFAULT_MODEL,
+};
 use dare::data::registry::find;
 use dare::forest::{DareForest, LazyPolicy, Params};
 use std::sync::Arc;
@@ -142,6 +148,71 @@ fn main() -> anyhow::Result<()> {
     let mut forged = cert.clone();
     forged.instance_id = 101;
     println!("forged certificate verifies: {}", client.verify_cert(&forged)?);
+
+    // --- read-only follower tailing the leader's WAL (DESIGN.md §12) --------
+    // A second service bootstraps every model from the leader's snapshot
+    // and tails its op log over the wire. After catch-up it serves the
+    // same bytes the leader does: leader-minted certificates verify on it
+    // (shared signing key), reads answer at its replicated epoch, and
+    // mutations are refused with the stable `read_only` code plus a
+    // redirect to the leader.
+    let follower_root =
+        std::env::temp_dir().join(format!("dare-gdpr-follower-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&follower_root);
+    let fsvc = UnlearningService::with_models(
+        Vec::new(),
+        ServiceConfig {
+            wal_dir: Some(follower_root.clone()),
+            cert_key: Some("gdpr-demo-signing-key".to_string()),
+            ..Default::default()
+        },
+    );
+    let rcfg = ReplicationConfig {
+        leader: addr.to_string(),
+        poll_interval: Duration::from_millis(20),
+        ..Default::default()
+    };
+    let followed = bootstrap_follower(&fsvc, &rcfg)?;
+    println!("follower bootstrapped from {addr}: models [{}]", followed.join(", "));
+
+    let fsvc_srv = Arc::clone(&fsvc);
+    let (ftx, frx) = std::sync::mpsc::channel();
+    let fserver = std::thread::spawn(move || {
+        serve(fsvc_srv, "127.0.0.1:0", 4, move |a| {
+            ftx.send(a).unwrap();
+        })
+    });
+    let faddr = frx.recv()?;
+    let mut fclient = Client::connect(faddr)?;
+    loop {
+        let fstats = fclient.stats(DEFAULT_MODEL)?;
+        let lag = fstats
+            .get("replication_lag_epochs")
+            .and_then(dare::util::json::Value::as_u64)
+            .unwrap_or(u64::MAX);
+        if lag == 0 {
+            println!(
+                "follower caught up at {faddr}: role {}, wal epoch {}",
+                fstats.get("role").and_then(dare::util::json::Value::as_str).unwrap_or("?"),
+                fstats.get("wal_epoch").and_then(dare::util::json::Value::as_u64).unwrap_or(0),
+            );
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    println!(
+        "leader-minted certificate verifies on the follower: {}",
+        fclient.verify_cert(&cert)?
+    );
+    match fclient.delete(DEFAULT_MODEL, &[200]) {
+        Err(ApiError::ReadOnly { leader }) => {
+            println!("follower refuses deletion (read_only): redirect to leader at {leader}");
+        }
+        other => anyhow::bail!("expected a read_only refusal from the follower, got {other:?}"),
+    }
+    fclient.shutdown()?;
+    fserver.join().unwrap()?;
+    let _ = std::fs::remove_dir_all(&follower_root);
 
     client.shutdown()?;
     server.join().unwrap()?;

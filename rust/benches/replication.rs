@@ -1,0 +1,191 @@
+//! Bench: log-shipping replication (ISSUE 7 / DESIGN.md §12) — follower
+//! catch-up throughput and the leader-side window cut.
+//!
+//! Cases:
+//!   * `catchup_*` — a follower bootstrapped at epoch 0 tails a prepared
+//!     1000-record leader journal to the head through
+//!     `read_records_after` + `apply_shipped`, at small vs large pull
+//!     windows, with and without its own journal (fsync every op). The
+//!     windowed cases measure the whole shipping path minus the socket;
+//!     the journaled case adds the follower's own durability cost.
+//!   * `pull_window_*` — the leader-side cut alone: parse the log file
+//!     and slice a window (what one `pull_log` costs the leader).
+//!
+//! Emits `BENCH_replication.json` at the repo root (ns/iter per case).
+
+use dare::bench::{BenchConfig, Suite};
+use dare::coordinator::api::{Op, Request};
+use dare::coordinator::wal::{LogRecord, Wal};
+use dare::coordinator::{FsyncPolicy, Model, ReplicaState, ReplicationConfig, ServiceConfig};
+use dare::data::synth::{generate, SynthSpec};
+use dare::forest::{DareForest, Params};
+use dare::util::rng::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const MODEL: &str = "bench";
+const OPS: u64 = 1000;
+
+fn base_forest() -> DareForest {
+    let data = generate(
+        &SynthSpec {
+            n: 4000,
+            informative: 4,
+            redundant: 2,
+            noise: 6,
+            flip: 0.05,
+            ..Default::default()
+        },
+        9,
+    );
+    DareForest::fit(
+        data,
+        &Params {
+            n_trees: 10,
+            max_depth: 10,
+            k: 10,
+            ..Default::default()
+        },
+        21,
+    )
+}
+
+fn temp_root(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("dare-bench-repl-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Journal a deterministic 1000-op mutation stream on the leader;
+/// `snapshot_every: 0` keeps every record addressable for the pulls.
+fn build_leader(root: &PathBuf, base: &DareForest) -> Wal {
+    let mut live = base.clone();
+    let wal =
+        Wal::create(root, MODEL, &live, FsyncPolicy::EveryOp, 0, b"bench-key".to_vec()).unwrap();
+    let p = live.data().n_features();
+    let mut rng = Rng::new(0xBEEF);
+    for i in 0..OPS {
+        if i % 3 == 2 {
+            let row: Vec<f32> = (0..p).map(|_| rng.range_f32(-3.0, 3.0)).collect();
+            wal.logged(Op::Add { row: row.clone(), label: (i % 2) as u8 }, || {
+                live.add(&row, (i % 2) as u8);
+            }, || {
+                unreachable!("snapshot_every is 0")
+            })
+            .unwrap();
+        } else {
+            let ids = live.live_ids();
+            let id = ids[rng.index(ids.len())];
+            wal.logged(Op::Delete { ids: vec![id] }, || {
+                live.delete_batch(&[id]);
+            }, || {
+                unreachable!("snapshot_every is 0")
+            })
+            .unwrap();
+        }
+    }
+    wal
+}
+
+/// Tail the whole prepared journal into a fresh follower model.
+fn catch_up(leader: &Wal, base: &DareForest, follower_wal: Option<Arc<Wal>>, window: usize) {
+    let cfg = ServiceConfig { use_pjrt: false, n_shards: 2, ..Default::default() };
+    let model = Model::new_with_wal(MODEL, base.clone(), &cfg, follower_wal);
+    let rep = ReplicaState::new(
+        ReplicationConfig {
+            leader: "127.0.0.1:1".to_string(), // tailed in-process, never dialed
+            spawn_tailers: false,
+            ..Default::default()
+        },
+        0,
+    );
+    model.attach_replica(Arc::clone(&rep));
+    loop {
+        let batch = leader.read_records_after(rep.applied_epoch(), window);
+        rep.note_leader_epoch(batch.leader_epoch);
+        if batch.records.is_empty() {
+            break;
+        }
+        for rec in &batch.records {
+            rep.apply_shipped(&model, rec).unwrap();
+        }
+    }
+    assert_eq!(rep.applied_epoch(), OPS);
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut suite = Suite::new("replication");
+    let base = base_forest();
+    let leader_root = temp_root("leader");
+    let leader = build_leader(&leader_root, &base);
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_iters: 20,
+        target_seconds: 3.0,
+    };
+
+    // In-memory follower: pure shipping + apply cost per window size.
+    for window in [64usize, 512] {
+        suite.run(&format!("catchup_1000_records_window{window}"), cfg, || {
+            catch_up(&leader, &base, None, window);
+        });
+    }
+
+    // Journaled follower: add the local durability cost (fsync every op —
+    // the same ack-after-durability contract the leader honors).
+    let follower_root = temp_root("follower");
+    let mut round = 0u32;
+    suite.run("catchup_1000_records_journaled", cfg, || {
+        round += 1;
+        let name = format!("{MODEL}-{round}");
+        let wal = Wal::create_at(
+            &follower_root,
+            &name,
+            &base,
+            0,
+            FsyncPolicy::EveryOp,
+            0,
+            b"bench-key".to_vec(),
+        )
+        .unwrap();
+        catch_up(&leader, &base, Some(Arc::new(wal)), 512);
+        Wal::remove_dir(&follower_root, &name);
+    });
+
+    // Leader-side cut: what one pull_log costs (parse + slice the log).
+    for (name, after) in [("pull_window_cold_start", 0u64), ("pull_window_near_head", OPS - 64)] {
+        suite.run(name, cfg, || {
+            let batch = leader.read_records_after(after, 64);
+            assert!(!batch.snapshot_needed);
+            std::hint::black_box(batch.records.len());
+        });
+    }
+
+    // The wire framing itself: encode a shipped record the way pull_log
+    // responses do (per-record JSON encode dominates the response path).
+    let rec = LogRecord {
+        epoch: 1,
+        request: Request {
+            v: 1,
+            model: MODEL.to_string(),
+            op: Op::Delete { ids: vec![1, 2, 3] },
+        },
+    };
+    suite.run(
+        "encode_shipped_record",
+        BenchConfig { target_seconds: 1.0, ..Default::default() },
+        || {
+            std::hint::black_box(
+                dare::coordinator::api::encode_request(&rec.request).to_string(),
+            );
+        },
+    );
+
+    drop(leader);
+    let _ = std::fs::remove_dir_all(&leader_root);
+    let _ = std::fs::remove_dir_all(&follower_root);
+    suite.save_json_to("BENCH_replication.json")?;
+    Ok(())
+}

@@ -54,9 +54,12 @@ pub enum ApiError {
     UnknownId(InstanceId),
     /// The service is draining after a `shutdown` request.
     ShuttingDown,
-    /// Client-side only: the transport failed (IO, unparseable response).
-    /// Never emitted by the server.
-    Transport(String),
+    /// The addressed model is a read-serving follower (DESIGN.md §12):
+    /// mutations must go to `leader` instead.
+    ReadOnly { leader: String },
+    /// Client-side only: the transport failed (IO, unparseable response)
+    /// after `attempts` tries. Never emitted by the server.
+    Transport { msg: String, attempts: u32 },
 }
 
 impl ApiError {
@@ -68,7 +71,8 @@ impl ApiError {
             ApiError::ArityMismatch { .. } => "arity_mismatch",
             ApiError::UnknownId(_) => "unknown_id",
             ApiError::ShuttingDown => "shutting_down",
-            ApiError::Transport(_) => "transport",
+            ApiError::ReadOnly { .. } => "read_only",
+            ApiError::Transport { .. } => "transport",
         }
     }
 }
@@ -76,7 +80,11 @@ impl ApiError {
 impl fmt::Display for ApiError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            ApiError::BadRequest(m) | ApiError::Transport(m) => write!(f, "{m}"),
+            ApiError::BadRequest(m) => write!(f, "{m}"),
+            ApiError::Transport { msg, .. } => write!(f, "{msg}"),
+            ApiError::ReadOnly { leader } => {
+                write!(f, "model is a read-only follower; send mutations to {leader}")
+            }
             ApiError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
             ApiError::ArityMismatch { got, want } => {
                 write!(f, "row has {got} features, model expects {want}")
@@ -125,6 +133,15 @@ pub enum Op {
     Certify { id: InstanceId },
     /// Check a certificate's HMAC signature against this server's key.
     VerifyCert { cert: Certificate },
+    // -- replication (DESIGN.md §12) --
+    /// The model's canonical snapshot plus the WAL epoch it captures
+    /// (follower bootstrap; requires durability on the leader).
+    PullSnapshot,
+    /// Up to `max_records` write-ahead log records with
+    /// `epoch > after_epoch` (follower catch-up).
+    PullLog { after_epoch: u64, max_records: usize },
+    /// Drain catch-up and flip a follower model into a writable leader.
+    Promote,
     // -- lifecycle (registry) --
     /// Train a new model named `Request::model` from a corpus dataset ref.
     Create(CreateSpec),
@@ -361,6 +378,12 @@ pub fn decode(req: &Value) -> Result<Request, ApiError> {
             k: opt_uint(req, "k")?.map(|n| n as usize),
             d_rmax: opt_uint(req, "drmax")?.map(|n| n as usize),
         }),
+        "pull_snapshot" => Op::PullSnapshot,
+        "pull_log" => Op::PullLog {
+            after_epoch: req_uint(req, "after_epoch", "pull_log needs 'after_epoch'")?,
+            max_records: opt_uint(req, "max_records")?.unwrap_or(256) as usize,
+        },
+        "promote" => Op::Promote,
         "drop" => Op::DropModel,
         "list" => Op::List,
         "shutdown" => Op::Shutdown,
@@ -443,6 +466,20 @@ pub fn encode_request(r: &Request) -> Value {
                 o.set("drmax", r);
             }
         }
+        Op::PullSnapshot => {
+            o.set("op", "pull_snapshot");
+        }
+        Op::PullLog {
+            after_epoch,
+            max_records,
+        } => {
+            o.set("op", "pull_log")
+                .set("after_epoch", *after_epoch)
+                .set("max_records", *max_records);
+        }
+        Op::Promote => {
+            o.set("op", "promote");
+        }
         Op::DropModel => {
             o.set("op", "drop");
         }
@@ -524,6 +561,23 @@ pub enum Response {
     ModelReady { model: String, n_trees: usize, n_alive: usize },
     Dropped { model: String },
     List { models: Vec<ModelSummary> },
+    /// `pull_snapshot`: the canonical forest JSON (as a string payload)
+    /// and the WAL epoch it captures (DESIGN.md §12).
+    Snapshot { wal_epoch: u64, snapshot: String },
+    /// `pull_log`: shipped `(epoch, request)` records past the asked-for
+    /// epoch, plus where the leader's log stands. `snapshot_needed` means
+    /// the window was truncated into a snapshot — re-bootstrap.
+    LogWindow {
+        records: Vec<(u64, Request)>,
+        leader_epoch: u64,
+        base_epoch: u64,
+        snapshot_needed: bool,
+    },
+    /// `promote`: the model is now a writable leader at this epoch.
+    Promoted { model: String, epoch: u64 },
+    /// A follower read served beyond the staleness bound: the inner
+    /// response, annotated `"stale":true` on the wire (DESIGN.md §12).
+    Stale(Box<Response>),
     Err(ApiError),
 }
 
@@ -542,6 +596,12 @@ pub fn err_value(e: &ApiError) -> Value {
         ApiError::UnknownId(id) => {
             eo.set("id", *id);
         }
+        ApiError::ReadOnly { leader } => {
+            eo.set("leader", leader.as_str());
+        }
+        ApiError::Transport { attempts, .. } => {
+            eo.set("attempts", *attempts as u64);
+        }
         _ => {}
     }
     let mut o = Value::obj();
@@ -554,7 +614,10 @@ pub fn err_value(e: &ApiError) -> Value {
 /// code, and tolerates pre-v1 servers that sent a bare string.
 pub fn error_from_wire(resp: &Value) -> ApiError {
     let Some(e) = resp.get("error") else {
-        return ApiError::Transport("server returned ok=false without an error".to_string());
+        return ApiError::Transport {
+            msg: "server returned ok=false without an error".to_string(),
+            attempts: 1,
+        };
     };
     if let Some(msg) = e.as_str() {
         return ApiError::BadRequest(msg.to_string());
@@ -572,7 +635,13 @@ pub fn error_from_wire(resp: &Value) -> ApiError {
             ApiError::UnknownId(e.get("id").and_then(Value::as_u64).unwrap_or(0) as InstanceId)
         }
         "shutting_down" => ApiError::ShuttingDown,
-        "transport" => ApiError::Transport(msg),
+        "read_only" => ApiError::ReadOnly {
+            leader: e.get("leader").and_then(Value::as_str).unwrap_or("").to_string(),
+        },
+        "transport" => ApiError::Transport {
+            msg,
+            attempts: e.get("attempts").and_then(Value::as_u64).unwrap_or(1) as u32,
+        },
         _ => ApiError::BadRequest(msg),
     }
 }
@@ -586,6 +655,11 @@ pub fn encode_response(r: &Response) -> Value {
     }
     if let Response::Stats(v) = r {
         return v.clone();
+    }
+    if let Response::Stale(inner) = r {
+        let mut v = encode_response(inner);
+        v.set("stale", true);
+        return v;
     }
     let mut o = Value::obj();
     o.set("ok", true);
@@ -630,7 +704,38 @@ pub fn encode_response(r: &Response) -> Value {
         Response::List { models } => {
             o.set("models", Value::Arr(models.iter().map(ModelSummary::to_wire).collect()));
         }
-        Response::Stats(_) | Response::Err(_) => unreachable!("handled above"),
+        Response::Snapshot { wal_epoch, snapshot } => {
+            o.set("wal_epoch", *wal_epoch).set("snapshot", snapshot.as_str());
+        }
+        Response::LogWindow {
+            records,
+            leader_epoch,
+            base_epoch,
+            snapshot_needed,
+        } => {
+            o.set(
+                "records",
+                Value::Arr(
+                    records
+                        .iter()
+                        .map(|(epoch, request)| {
+                            let mut rec = Value::obj();
+                            rec.set("epoch", *epoch).set("request", encode_request(request));
+                            rec
+                        })
+                        .collect(),
+                ),
+            )
+            .set("leader_epoch", *leader_epoch)
+            .set("base_epoch", *base_epoch)
+            .set("snapshot_needed", *snapshot_needed);
+        }
+        Response::Promoted { model, epoch } => {
+            o.set("model", model.as_str()).set("epoch", *epoch);
+        }
+        Response::Stats(_) | Response::Err(_) | Response::Stale(_) => {
+            unreachable!("handled above")
+        }
     }
     o
 }
@@ -668,7 +773,7 @@ mod tests {
         } else {
             gen_name(rng)
         };
-        let op = match rng.index(15) {
+        let op = match rng.index(18) {
             0 => Op::Predict {
                 rows: (0..rng.index(4)).map(|_| gen_row(rng)).collect(),
             },
@@ -716,6 +821,12 @@ mod tests {
                     hmac: gen_name(rng),
                 },
             },
+            14 => Op::PullSnapshot,
+            15 => Op::PullLog {
+                after_epoch: rng.next_u64() % (1u64 << 53),
+                max_records: 1 + rng.index(1024),
+            },
+            16 => Op::Promote,
             _ => Op::Shutdown,
         };
         Request { v, model, op }
@@ -777,6 +888,12 @@ mod tests {
             (r#"{"op":"load"}"#, "load needs 'path'"),
             (r#"{"op":"create"}"#, "create needs 'dataset'"),
             (r#"{"op":"compact","budget":-2}"#, "'budget' must be a non-negative integer"),
+            (r#"{"op":"pull_log"}"#, "pull_log needs 'after_epoch'"),
+            (r#"{"op":"pull_log","after_epoch":-1}"#, "pull_log needs 'after_epoch'"),
+            (
+                r#"{"op":"pull_log","after_epoch":3,"max_records":-2}"#,
+                "'max_records' must be a non-negative integer",
+            ),
             (r#"{"op":"certify"}"#, "certify needs 'id'"),
             (r#"{"op":"certify","id":-3}"#, "certify needs 'id'"),
             (r#"{"op":"verify_cert"}"#, "verify_cert needs 'cert'"),
@@ -804,7 +921,13 @@ mod tests {
             ApiError::ArityMismatch { got: 1, want: 5 },
             ApiError::UnknownId(42),
             ApiError::ShuttingDown,
-            ApiError::Transport("pipe broke".to_string()),
+            ApiError::ReadOnly {
+                leader: "10.0.0.1:7878".to_string(),
+            },
+            ApiError::Transport {
+                msg: "pipe broke".to_string(),
+                attempts: 3,
+            },
         ] {
             let v = err_value(&e);
             assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false));
@@ -872,6 +995,56 @@ mod tests {
         assert_eq!(
             encode_response(&Response::CertCheck { valid: true }).to_string(),
             r#"{"ok":true,"valid":true}"#
+        );
+    }
+
+    #[test]
+    fn replication_response_shapes() {
+        assert_eq!(
+            encode_response(&Response::Snapshot {
+                wal_epoch: 4,
+                snapshot: r#"{"t":1}"#.to_string(),
+            })
+            .to_string(),
+            r#"{"ok":true,"snapshot":"{\"t\":1}","wal_epoch":4}"#
+        );
+        let window = Response::LogWindow {
+            records: vec![(
+                5,
+                Request {
+                    v: 1,
+                    model: "m".to_string(),
+                    op: Op::Delete { ids: vec![7] },
+                },
+            )],
+            leader_epoch: 9,
+            base_epoch: 2,
+            snapshot_needed: false,
+        };
+        assert_eq!(
+            encode_response(&window).to_string(),
+            concat!(
+                r#"{"base_epoch":2,"leader_epoch":9,"ok":true,"records":"#,
+                r#"[{"epoch":5,"request":{"ids":[7],"model":"m","op":"delete","v":1}}],"#,
+                r#""snapshot_needed":false}"#
+            )
+        );
+        assert_eq!(
+            encode_response(&Response::Promoted {
+                model: "m".to_string(),
+                epoch: 9,
+            })
+            .to_string(),
+            r#"{"epoch":9,"model":"m","ok":true}"#
+        );
+        // staleness annotation wraps the inner payload without renaming it
+        let stale = Response::Stale(Box::new(Response::Predict {
+            probs: vec![0.5],
+            engine: "native",
+        }));
+        assert_eq!(
+            encode_response(&stale).to_string(),
+            r#"{"engine":"native","ok":true,"probs":[0.5],"stale":true}"#
         );
     }
 

@@ -4,14 +4,17 @@
 //! forest store (per-shard locks + mutation epochs, DESIGN.md §8), a
 //! deletion batcher (dynamic batching of GDPR deletion requests), and
 //! per-model telemetry; plus a JSON-lines TCP protocol with a typed
-//! client, and an event-sourced durability layer (`wal`, DESIGN.md §11):
+//! client, an event-sourced durability layer (`wal`, DESIGN.md §11):
 //! write-ahead op log, crash recovery by replay, and signed deletion
-//! certificates.
+//! certificates; and log-shipping replication (`replica`, DESIGN.md §12):
+//! WAL-tailing read-only followers with epoch-consistent catch-up,
+//! staleness annotation, and failover by promotion.
 
 pub mod api;
 pub mod batcher;
 pub mod protocol;
 pub mod registry;
+pub mod replica;
 pub mod service;
 pub mod shards;
 pub mod telemetry;
@@ -22,9 +25,10 @@ pub use api::{
     WIRE_VERSION,
 };
 pub use batcher::{DeleteOutcome, DeletionBatcher};
-pub use protocol::{serve, Client, Prediction};
+pub use protocol::{serve, Client, ClientConfig, Prediction};
 pub use registry::{Model, ModelRegistry};
+pub use replica::{bootstrap_follower, Applied, ReplicaState, ReplicationConfig};
 pub use service::{ServiceConfig, UnlearningService};
 pub use shards::ShardedForest;
 pub use telemetry::Telemetry;
-pub use wal::{FsyncPolicy, Wal};
+pub use wal::{FsyncPolicy, LogRecord, PullBatch, Wal};

@@ -5,22 +5,33 @@
 //! runs the accept loop with a worker pool; [`Client`] is the matching
 //! blocking client. The typed methods (`predict`, `delete`, `create`, …)
 //! speak v1 and return `Result<_, ApiError>` — transport failures surface
-//! as [`ApiError::Transport`], server-side failures as the decoded wire
-//! variant. `call` remains the raw escape hatch (and still speaks v0 when
-//! given un-namespaced objects).
+//! as [`ApiError::Transport`] (carrying the attempt count), server-side
+//! failures as the decoded wire variant. `call` remains the raw escape
+//! hatch (and still speaks v0 when given un-namespaced objects).
+//!
+//! The client is governed by a [`ClientConfig`]: connect/read/write
+//! timeouts, plus bounded retry with exponential backoff and jitter.
+//! Retries apply **only to idempotent ops** (`predict`, `stats`, `list`,
+//! `delete_cost`, `verify_cert`, and the replication pulls) — retrying a
+//! `delete`/`add` whose first ack was lost could double-apply it. Any IO
+//! error tears the connection down; the next attempt reconnects. This is
+//! the one retry implementation in the repo — the replica catch-up loop
+//! (DESIGN.md §12) drives it rather than rolling its own.
 
 use crate::coordinator::api::{
     self, ApiError, Certificate, CreateSpec, ModelSummary, Op, Request, Response, WIRE_VERSION,
 };
 use crate::coordinator::batcher::DeleteOutcome;
 use crate::coordinator::service::UnlearningService;
+use crate::coordinator::wal::{LogRecord, PullBatch};
 use crate::data::dataset::InstanceId;
 use crate::util::json::{parse, Value};
+use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 use std::io::{BufRead, BufReader, BufWriter, Write};
-use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
 /// Serve the JSON-lines protocol until a `shutdown` request arrives.
 /// Returns the bound local address via the callback before blocking.
@@ -88,17 +99,108 @@ pub struct Prediction {
     pub engine: String,
 }
 
-/// Blocking JSON-lines client with typed v1 methods.
-pub struct Client {
+/// Client-side transport policy: per-attempt timeouts plus bounded retry
+/// with exponential backoff + jitter (idempotent ops only — see the
+/// module docs).
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    /// Per-address TCP connect timeout. Zero disables the bound.
+    pub connect_timeout: Duration,
+    /// Read/write timeout on an established connection. Zero disables.
+    pub io_timeout: Duration,
+    /// Extra attempts after the first failure (idempotent ops only).
+    pub retries: u32,
+    /// First retry delay; doubled per retry, with ±50% jitter so a fleet
+    /// of clients doesn't hammer a recovering server in lockstep.
+    pub backoff: Duration,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            connect_timeout: Duration::from_secs(2),
+            io_timeout: Duration::from_secs(10),
+            retries: 2,
+            backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+struct Conn {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
 }
 
+/// Blocking JSON-lines client with typed v1 methods. Reconnects lazily
+/// after transport errors; see [`ClientConfig`] for the retry policy.
+pub struct Client {
+    addrs: Vec<SocketAddr>,
+    cfg: ClientConfig,
+    conn: Option<Conn>,
+    /// Jitter source for retry backoff — seeded from the clock; retry
+    /// timing is the one place determinism is *not* wanted.
+    rng: Rng,
+}
+
 impl Client {
+    /// Connect with the default [`ClientConfig`].
     pub fn connect<A: ToSocketAddrs>(addr: A) -> anyhow::Result<Client> {
-        let stream = TcpStream::connect(addr)?;
+        Self::connect_with(addr, ClientConfig::default())
+    }
+
+    /// Connect with an explicit transport policy. The address is resolved
+    /// once up front; reconnects reuse the resolved list.
+    pub fn connect_with<A: ToSocketAddrs>(addr: A, cfg: ClientConfig) -> anyhow::Result<Client> {
+        let addrs: Vec<SocketAddr> = addr.to_socket_addrs()?.collect();
+        anyhow::ensure!(!addrs.is_empty(), "address resolved to no endpoints");
+        let seed = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x5eed);
+        let mut client = Client {
+            addrs,
+            cfg,
+            conn: None,
+            rng: Rng::new(seed ^ (u64::from(std::process::id()) << 32)),
+        };
+        client.ensure_conn()?;
+        Ok(client)
+    }
+
+    fn ensure_conn(&mut self) -> std::io::Result<()> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        let mut last: Option<std::io::Error> = None;
+        for addr in self.addrs.clone() {
+            match self.open(addr) {
+                Ok(conn) => {
+                    self.conn = Some(conn);
+                    return Ok(());
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::AddrNotAvailable, "no endpoint to connect to")
+        }))
+    }
+
+    fn open(&self, addr: SocketAddr) -> std::io::Result<Conn> {
+        let stream = if self.cfg.connect_timeout.is_zero() {
+            TcpStream::connect(addr)?
+        } else {
+            TcpStream::connect_timeout(&addr, self.cfg.connect_timeout)?
+        };
         stream.set_nodelay(true)?;
-        Ok(Client {
+        let io = if self.cfg.io_timeout.is_zero() {
+            None
+        } else {
+            Some(self.cfg.io_timeout)
+        };
+        stream.set_read_timeout(io)?;
+        stream.set_write_timeout(io)?;
+        Ok(Conn {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
         })
@@ -106,39 +208,100 @@ impl Client {
 
     /// Send one raw request object and read one response (any version).
     pub fn call(&mut self, req: &Value) -> anyhow::Result<Value> {
-        self.writer.write_all(req.to_string().as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        self.writer.flush()?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        anyhow::ensure!(!line.is_empty(), "server closed connection");
-        parse(&line).map_err(|e| anyhow::anyhow!("{e}"))
+        self.call_once(req).map_err(|e| anyhow::anyhow!("{e}"))
     }
 
-    /// Send one typed v1 request; decode failure outcomes into [`ApiError`].
+    /// One write+read exchange. Any failure tears down the connection so
+    /// the next attempt starts from a clean reconnect.
+    fn call_once(&mut self, req: &Value) -> std::io::Result<Value> {
+        let out = self.exchange_io(req);
+        if out.is_err() {
+            self.conn = None;
+        }
+        out
+    }
+
+    fn exchange_io(&mut self, req: &Value) -> std::io::Result<Value> {
+        self.ensure_conn()?;
+        let conn = self.conn.as_mut().expect("ensure_conn established it");
+        conn.writer.write_all(req.to_string().as_bytes())?;
+        conn.writer.write_all(b"\n")?;
+        conn.writer.flush()?;
+        let mut line = String::new();
+        conn.reader.read_line(&mut line)?;
+        if line.is_empty() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed connection",
+            ));
+        }
+        parse(&line).map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, format!("unparseable response: {e}"))
+        })
+    }
+
+    /// Send one typed v1 request; decode failure outcomes into
+    /// [`ApiError`]. Single attempt: mutations must not be replayed.
     fn request(&mut self, model: &str, op: Op) -> Result<Value, ApiError> {
+        self.send(model, op, 1)
+    }
+
+    /// Like [`Client::request`] with the configured retry budget — only
+    /// for idempotent ops, where re-asking after a lost ack is safe.
+    fn request_retrying(&mut self, model: &str, op: Op) -> Result<Value, ApiError> {
+        let attempts = 1 + self.cfg.retries;
+        self.send(model, op, attempts)
+    }
+
+    fn send(&mut self, model: &str, op: Op, max_attempts: u32) -> Result<Value, ApiError> {
         let wire = api::encode_request(&Request {
             v: WIRE_VERSION,
             model: model.to_string(),
             op,
         });
-        let resp = self.call(&wire).map_err(|e| ApiError::Transport(format!("{e}")))?;
-        if resp.get("ok").and_then(Value::as_bool) == Some(true) {
-            Ok(resp)
-        } else {
-            Err(api::error_from_wire(&resp))
+        let mut delay = self.cfg.backoff;
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            match self.call_once(&wire) {
+                Ok(resp) => {
+                    return if resp.get("ok").and_then(Value::as_bool) == Some(true) {
+                        Ok(resp)
+                    } else {
+                        Err(api::error_from_wire(&resp))
+                    };
+                }
+                Err(e) => {
+                    if attempt >= max_attempts.max(1) {
+                        return Err(ApiError::Transport {
+                            msg: format!("{e}"),
+                            attempts: attempt,
+                        });
+                    }
+                    // exponential backoff with ±50% jitter
+                    std::thread::sleep(delay.mul_f64(0.5 + self.rng.f64()));
+                    delay = delay.saturating_mul(2);
+                }
+            }
+        }
+    }
+
+    fn proto_err(msg: impl Into<String>) -> ApiError {
+        ApiError::Transport {
+            msg: msg.into(),
+            attempts: 1,
         }
     }
 
     fn field_u64(resp: &Value, key: &str) -> Result<u64, ApiError> {
         resp.get(key)
             .and_then(Value::as_u64)
-            .ok_or_else(|| ApiError::Transport(format!("response missing '{key}'")))
+            .ok_or_else(|| Self::proto_err(format!("response missing '{key}'")))
     }
 
     /// Positive-class probabilities for `rows` from `model`.
     pub fn predict(&mut self, model: &str, rows: &[Vec<f32>]) -> Result<Prediction, ApiError> {
-        let resp = self.request(
+        let resp = self.request_retrying(
             model,
             Op::Predict {
                 rows: rows.to_vec(),
@@ -147,7 +310,7 @@ impl Client {
         let probs = resp
             .get("probs")
             .and_then(Value::as_arr)
-            .ok_or_else(|| ApiError::Transport("response missing 'probs'".to_string()))?
+            .ok_or_else(|| Self::proto_err("response missing 'probs'"))?
             .iter()
             .map(|p| p.as_f64().unwrap_or(0.0) as f32)
             .collect();
@@ -187,13 +350,13 @@ impl Client {
 
     /// Dry-run retrain cost of deleting `id` from `model`.
     pub fn delete_cost(&mut self, model: &str, id: InstanceId) -> Result<u64, ApiError> {
-        let resp = self.request(model, Op::DeleteCost { id })?;
+        let resp = self.request_retrying(model, Op::DeleteCost { id })?;
         Self::field_u64(&resp, "cost")
     }
 
     /// The model's full stats payload (telemetry, shards, backlog, bytes).
     pub fn stats(&mut self, model: &str) -> Result<Value, ApiError> {
-        self.request(model, Op::Stats)
+        self.request_retrying(model, Op::Stats)
     }
 
     /// Execute every deferred retrain of `model`; returns how many ran.
@@ -246,26 +409,26 @@ impl Client {
         let resp = self.request(model, Op::Certify { id })?;
         let cert = resp
             .get("cert")
-            .ok_or_else(|| ApiError::Transport("response missing 'cert'".to_string()))?;
+            .ok_or_else(|| Self::proto_err("response missing 'cert'"))?;
         Certificate::from_wire(cert)
-            .map_err(|e| ApiError::Transport(format!("malformed cert in response: {e}")))
+            .map_err(|e| Self::proto_err(format!("malformed cert in response: {e}")))
     }
 
     /// Check a deletion certificate against the server's signing key.
     /// Model-independent: works even after the certified model is dropped.
     pub fn verify_cert(&mut self, cert: &Certificate) -> Result<bool, ApiError> {
-        let resp = self.request(
+        let resp = self.request_retrying(
             api::DEFAULT_MODEL,
             Op::VerifyCert { cert: cert.clone() },
         )?;
         resp.get("valid")
             .and_then(Value::as_bool)
-            .ok_or_else(|| ApiError::Transport("response missing 'valid'".to_string()))
+            .ok_or_else(|| Self::proto_err("response missing 'valid'"))
     }
 
     /// Summaries of every registered model.
     pub fn list(&mut self) -> Result<Vec<ModelSummary>, ApiError> {
-        let resp = self.request(api::DEFAULT_MODEL, Op::List)?;
+        let resp = self.request_retrying(api::DEFAULT_MODEL, Op::List)?;
         Ok(resp
             .get("models")
             .and_then(Value::as_arr)
@@ -273,6 +436,65 @@ impl Client {
             .iter()
             .map(ModelSummary::from_wire)
             .collect())
+    }
+
+    /// Replication bootstrap (DESIGN.md §12): `model`'s canonical
+    /// snapshot JSON and the WAL epoch it captures.
+    pub fn pull_snapshot(&mut self, model: &str) -> Result<(u64, String), ApiError> {
+        let resp = self.request_retrying(model, Op::PullSnapshot)?;
+        let epoch = Self::field_u64(&resp, "wal_epoch")?;
+        let snapshot = resp
+            .get("snapshot")
+            .and_then(Value::as_str)
+            .ok_or_else(|| Self::proto_err("response missing 'snapshot'"))?
+            .to_string();
+        Ok((epoch, snapshot))
+    }
+
+    /// Replication catch-up: up to `max_records` log records of `model`
+    /// with `epoch > after_epoch`, plus where the leader's log stands.
+    pub fn pull_log(
+        &mut self,
+        model: &str,
+        after_epoch: u64,
+        max_records: usize,
+    ) -> Result<PullBatch, ApiError> {
+        let resp = self.request_retrying(
+            model,
+            Op::PullLog {
+                after_epoch,
+                max_records,
+            },
+        )?;
+        let mut records = Vec::new();
+        for rec in resp.get("records").and_then(Value::as_arr).unwrap_or(&[]) {
+            let epoch = rec
+                .get("epoch")
+                .and_then(Value::as_u64)
+                .ok_or_else(|| Self::proto_err("log record missing 'epoch'"))?;
+            let request = rec
+                .get("request")
+                .ok_or_else(|| Self::proto_err("log record missing 'request'"))
+                .and_then(api::decode)?;
+            records.push(LogRecord { epoch, request });
+        }
+        Ok(PullBatch {
+            records,
+            leader_epoch: Self::field_u64(&resp, "leader_epoch")?,
+            base_epoch: Self::field_u64(&resp, "base_epoch")?,
+            snapshot_needed: resp
+                .get("snapshot_needed")
+                .and_then(Value::as_bool)
+                .unwrap_or(false),
+        })
+    }
+
+    /// Drain catch-up and flip a follower `model` into a writable leader;
+    /// returns the epoch it promoted at. Never retried: promotion is a
+    /// topology change, not an idempotent read.
+    pub fn promote(&mut self, model: &str) -> Result<u64, ApiError> {
+        let resp = self.request(model, Op::Promote)?;
+        Self::field_u64(&resp, "epoch")
     }
 
     /// Stop the server's accept loop.
@@ -436,6 +658,42 @@ mod tests {
         c.shutdown().unwrap();
         handle.join().unwrap();
         let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn idempotent_ops_retry_and_surface_attempt_counts() {
+        // a one-shot fake server: accepts a single connection, reads the
+        // request, then closes without answering
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let fake = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut buf = [0u8; 512];
+            use std::io::Read;
+            let _ = s.read(&mut buf);
+            // dropping both tears the endpoint down: retries get refused
+        });
+        let mut c = Client::connect_with(
+            addr,
+            ClientConfig {
+                connect_timeout: Duration::from_millis(500),
+                io_timeout: Duration::from_millis(500),
+                retries: 2,
+                backoff: Duration::from_millis(1),
+            },
+        )
+        .unwrap();
+        // idempotent op: all 1 + retries attempts are consumed
+        match c.stats("default") {
+            Err(ApiError::Transport { attempts, .. }) => assert_eq!(attempts, 3),
+            other => panic!("expected Transport after retries, got {other:?}"),
+        }
+        fake.join().unwrap();
+        // mutation: fails on the first transport error, no silent replay
+        match c.delete("default", &[1]) {
+            Err(ApiError::Transport { attempts, .. }) => assert_eq!(attempts, 1),
+            other => panic!("expected single-attempt Transport, got {other:?}"),
+        }
     }
 
     #[test]

@@ -16,6 +16,7 @@
 
 use crate::coordinator::api::{ApiError, Certificate, ModelSummary, Op};
 use crate::coordinator::batcher::{DeleteOutcome, DeletionBatcher};
+use crate::coordinator::replica::ReplicaState;
 use crate::coordinator::service::ServiceConfig;
 use crate::coordinator::shards::ShardedForest;
 use crate::coordinator::telemetry::Telemetry;
@@ -50,6 +51,10 @@ pub struct Model {
     /// worker (the same `Arc`), so every mutating op is logged before it
     /// is applied or acked.
     wal: Option<Arc<Wal>>,
+    /// Replication state (DESIGN.md §12); `Some` makes this model a
+    /// read-only follower until promoted. Attached after construction by
+    /// `replica::bootstrap_follower`.
+    replica: Mutex<Option<Arc<ReplicaState>>>,
 }
 
 impl Model {
@@ -107,6 +112,7 @@ impl Model {
             manifest,
             pjrt_epochs: Mutex::new(pjrt_epochs),
             wal,
+            replica: Mutex::new(None),
         })
     }
 
@@ -130,6 +136,27 @@ impl Model {
     /// The model's write-ahead log, when durability is enabled.
     pub fn wal(&self) -> Option<&Arc<Wal>> {
         self.wal.as_ref()
+    }
+
+    /// Attach replication state: the model becomes a read-only follower
+    /// until promoted (DESIGN.md §12).
+    pub fn attach_replica(&self, rep: Arc<ReplicaState>) {
+        *self.replica.lock().unwrap() = Some(rep);
+    }
+
+    /// The model's replication state, when it is (or was) a follower.
+    pub fn replica(&self) -> Option<Arc<ReplicaState>> {
+        self.replica.lock().unwrap().clone()
+    }
+
+    /// Whether the model currently rejects mutations (unpromoted follower).
+    pub fn is_follower(&self) -> bool {
+        self.replica().map(|r| r.is_follower()).unwrap_or(false)
+    }
+
+    /// The leader this follower redirects mutations to, if any.
+    pub fn leader_addr(&self) -> Option<String> {
+        self.replica().filter(|r| r.is_follower()).map(|r| r.leader())
     }
 
     /// Whether the PJRT predictor is active for this model.
@@ -345,6 +372,19 @@ impl Model {
             // u64 epochs stay exact as JSON numbers far past any real op
             // count; the snapshot schema's string encoding is for seeds.
             resp.set("wal_epoch", wal.epoch());
+        }
+        match self.replica() {
+            None => {
+                resp.set("role", "leader");
+            }
+            Some(rep) => {
+                resp.set("role", rep.role());
+                if rep.is_follower() {
+                    resp.set("replication_lag_epochs", rep.lag_epochs())
+                        .set("leader_reachable", rep.leader_reachable())
+                        .set("leader", rep.leader().as_str());
+                }
+            }
         }
         resp
     }

@@ -1,0 +1,414 @@
+//! Log-shipping replication (DESIGN.md §12): read-serving followers that
+//! bootstrap from a leader snapshot (`pull_snapshot`) and tail its
+//! write-ahead log (`pull_log`) over the wire.
+//!
+//! **Exactness.** DaRE removal is exact and replay is deterministic
+//! (retrains are path-seeded pure functions of the op sequence —
+//! DESIGN.md §6/§9/§11), so a follower that has applied the leader's log
+//! through epoch E is *bit-identical* to the leader at epoch E: same
+//! forest structure, same serialized JSON, same predictions. The op-fuzz
+//! differential harness enforces this directly.
+//!
+//! **The epoch-chain dedup rule.** The WAL's epochs increase by exactly 1
+//! per record, so a follower needs no other bookkeeping: a shipped record
+//! with `epoch <= applied` is a duplicate (leader resend, reconnect
+//! overlap) and is skipped; `epoch == applied + 1` extends the chain;
+//! anything further ahead is a gap and is refused. Applies run under one
+//! lock in log order — the same log-order-equals-apply-order discipline
+//! as recovery — and each accepted record is journaled to the follower's
+//! *own* WAL before it is applied, so a follower restart recovers locally
+//! without re-pulling history.
+//!
+//! **Graceful degradation.** A follower that cannot reach its leader
+//! keeps serving the read plane; once its lag exceeds a configured bound
+//! (or the leader has been unreachable too long to even measure lag),
+//! read responses are annotated `"stale":true` rather than refused.
+//! [`promote`] drains catch-up and flips the model into a writable
+//! leader — the failover path.
+
+use crate::coordinator::api::{ApiError, Op};
+use crate::coordinator::protocol::{Client, ClientConfig};
+use crate::coordinator::registry::Model;
+use crate::coordinator::service::UnlearningService;
+use crate::coordinator::wal::LogRecord;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::{Duration, Instant};
+
+/// How a follower tails its leader.
+#[derive(Clone, Debug)]
+pub struct ReplicationConfig {
+    /// Leader address (`host:port`).
+    pub leader: String,
+    /// Sleep between catch-up rounds once caught up (or after an error).
+    pub poll_interval: Duration,
+    /// Max records per `pull_log` round.
+    pub max_records: usize,
+    /// Annotate reads `"stale":true` once the applied epoch trails the
+    /// last observed leader epoch by more than this.
+    pub stale_after_epochs: u64,
+    /// Also annotate stale once the leader has been unreachable this long
+    /// — lag cannot be observed across a partition.
+    pub stale_after_unreachable: Duration,
+    /// Transport policy for catch-up connections: the same one
+    /// timeout/retry/backoff implementation every typed client uses.
+    pub client: ClientConfig,
+    /// Spawn a background tailer thread per model. Tests turn this off
+    /// and drive [`ReplicaState::sync_once`] deterministically.
+    pub spawn_tailers: bool,
+}
+
+impl Default for ReplicationConfig {
+    fn default() -> Self {
+        ReplicationConfig {
+            leader: String::new(),
+            poll_interval: Duration::from_millis(100),
+            max_records: 512,
+            stale_after_epochs: 64,
+            stale_after_unreachable: Duration::from_secs(5),
+            client: ClientConfig::default(),
+            spawn_tailers: true,
+        }
+    }
+}
+
+/// Outcome of offering one shipped record to a follower.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Applied {
+    /// The record extended the epoch chain: journaled and applied.
+    Ok,
+    /// `epoch <= applied`: already have it — skipped without touching
+    /// any state (the epoch-chain dedup rule).
+    Duplicate,
+}
+
+/// Per-model replication state, attached to a follower's [`Model`].
+pub struct ReplicaState {
+    cfg: ReplicationConfig,
+    /// Current leader address; updatable so failover can re-point
+    /// surviving followers at a promoted peer.
+    leader: Mutex<String>,
+    /// Epoch of the last record applied locally (mirrors the follower's
+    /// own WAL epoch when it has one).
+    applied_epoch: AtomicU64,
+    /// Last leader epoch observed via `pull_log`.
+    leader_epoch: AtomicU64,
+    reachable: AtomicBool,
+    /// When the leader became unreachable (`None` while reachable).
+    unreachable_since: Mutex<Option<Instant>>,
+    /// A promoted follower is a writable leader; tailers exit.
+    promoted: AtomicBool,
+    stopped: AtomicBool,
+    /// Serializes catch-up rounds (background tailer vs promote's drain
+    /// vs test-driven syncs): log order equals apply order, exactly as
+    /// in recovery.
+    sync: Mutex<()>,
+}
+
+impl ReplicaState {
+    /// State for a follower whose local journal stands at `applied_epoch`.
+    pub fn new(cfg: ReplicationConfig, applied_epoch: u64) -> Arc<ReplicaState> {
+        Arc::new(ReplicaState {
+            leader: Mutex::new(cfg.leader.clone()),
+            applied_epoch: AtomicU64::new(applied_epoch),
+            leader_epoch: AtomicU64::new(applied_epoch),
+            reachable: AtomicBool::new(true),
+            unreachable_since: Mutex::new(None),
+            promoted: AtomicBool::new(false),
+            stopped: AtomicBool::new(false),
+            sync: Mutex::new(()),
+            cfg,
+        })
+    }
+
+    /// Whether the model still rejects mutations.
+    pub fn is_follower(&self) -> bool {
+        !self.promoted.load(Ordering::SeqCst)
+    }
+
+    /// `"follower"` until promoted, then `"leader"` (the `stats` field).
+    pub fn role(&self) -> &'static str {
+        if self.is_follower() {
+            "follower"
+        } else {
+            "leader"
+        }
+    }
+
+    pub fn leader(&self) -> String {
+        self.leader.lock().unwrap().clone()
+    }
+
+    /// Re-point the follower at a new leader address (failover).
+    pub fn set_leader(&self, addr: &str) {
+        *self.leader.lock().unwrap() = addr.to_string();
+    }
+
+    pub fn applied_epoch(&self) -> u64 {
+        self.applied_epoch.load(Ordering::SeqCst)
+    }
+
+    pub fn leader_reachable(&self) -> bool {
+        self.reachable.load(Ordering::SeqCst)
+    }
+
+    /// Epochs the follower trails the last observed leader epoch by.
+    pub fn lag_epochs(&self) -> u64 {
+        self.leader_epoch.load(Ordering::SeqCst).saturating_sub(self.applied_epoch())
+    }
+
+    /// Record a leader epoch observed out-of-band (never moves backward;
+    /// `sync_once` calls this itself).
+    pub fn note_leader_epoch(&self, epoch: u64) {
+        let cur = self.leader_epoch.load(Ordering::SeqCst);
+        self.leader_epoch.store(epoch.max(cur), Ordering::SeqCst);
+    }
+
+    /// Whether reads should be annotated stale: observed lag beyond the
+    /// bound, or the leader unreachable for longer than the grace window
+    /// (during a partition the lag itself cannot be observed).
+    pub fn is_stale(&self) -> bool {
+        if !self.is_follower() {
+            return false;
+        }
+        if self.lag_epochs() > self.cfg.stale_after_epochs {
+            return true;
+        }
+        if !self.leader_reachable() {
+            if let Some(since) = *self.unreachable_since.lock().unwrap() {
+                return since.elapsed() > self.cfg.stale_after_unreachable;
+            }
+        }
+        false
+    }
+
+    fn mark_reachable(&self, up: bool) {
+        self.reachable.store(up, Ordering::SeqCst);
+        let mut since = self.unreachable_since.lock().unwrap();
+        if up {
+            *since = None;
+        } else if since.is_none() {
+            *since = Some(Instant::now());
+        }
+    }
+
+    /// Offer one shipped record under the epoch-chain rule (see module
+    /// docs): duplicates are skipped, gaps refused, and the successor
+    /// record is journaled to the follower's own WAL *before* it is
+    /// applied — the same ack-after-durability contract the leader
+    /// honors. Callers serialize rounds via [`ReplicaState::sync_once`];
+    /// records must be offered in log order.
+    pub fn apply_shipped(&self, model: &Model, rec: &LogRecord) -> anyhow::Result<Applied> {
+        let local = self.applied_epoch();
+        if rec.epoch <= local {
+            return Ok(Applied::Duplicate);
+        }
+        anyhow::ensure!(
+            rec.epoch == local + 1,
+            "epoch gap in shipped log: have {local}, got {} (resync needed)",
+            rec.epoch
+        );
+        anyhow::ensure!(
+            rec.request.model == model.name(),
+            "shipped record for model '{}' offered to '{}'",
+            rec.request.model,
+            model.name()
+        );
+        let sharded = model.sharded();
+        match &rec.request.op {
+            Op::Delete { ids } => {
+                let ids = ids.clone();
+                self.journal(model, rec, move || {
+                    sharded.delete_batch(&ids);
+                })?;
+            }
+            Op::Add { row, label } => {
+                anyhow::ensure!(
+                    row.len() == sharded.n_features(),
+                    "shipped add has arity {} but the model expects {}",
+                    row.len(),
+                    sharded.n_features()
+                );
+                let (row, label) = (row.clone(), *label);
+                self.journal(model, rec, move || {
+                    let _ = sharded.add(&row, label);
+                })?;
+            }
+            other => anyhow::bail!("non-mutating op in shipped log: {other:?}"),
+        }
+        self.applied_epoch.store(rec.epoch, Ordering::SeqCst);
+        model.telemetry().incr("replicated_ops", 1);
+        Ok(Applied::Ok)
+    }
+
+    /// Journal + apply one accepted record. The follower's WAL assigns
+    /// `its epoch + 1` to the append; the chain check in `apply_shipped`
+    /// keeps that equal to the leader's record epoch, and the wire codec
+    /// is deterministic — so leader and follower logs hold byte-identical
+    /// records. Without a WAL (in-memory follower) the record is applied
+    /// directly.
+    fn journal(&self, model: &Model, rec: &LogRecord, apply: impl FnOnce()) -> anyhow::Result<()> {
+        match model.wal() {
+            None => {
+                apply();
+                Ok(())
+            }
+            Some(wal) => {
+                anyhow::ensure!(
+                    wal.epoch() + 1 == rec.epoch,
+                    "follower wal at epoch {} cannot journal shipped record {}",
+                    wal.epoch(),
+                    rec.epoch
+                );
+                let sharded = Arc::clone(model.sharded());
+                wal.logged(rec.request.op.clone(), apply, move || sharded.snapshot())?;
+                Ok(())
+            }
+        }
+    }
+
+    /// One catch-up round: pull a window past the applied epoch from the
+    /// current leader and apply it in order. Returns how many records
+    /// were applied (0 = caught up). Any failure — transport, an epoch
+    /// gap, or the leader having truncated past us (`snapshot_needed`,
+    /// which requires an operator re-bootstrap: wipe the follower's
+    /// journal dir and restart) — marks the leader unreachable for
+    /// staleness accounting; the follower keeps serving either way.
+    pub fn sync_once(&self, model: &Model) -> anyhow::Result<usize> {
+        let _round = self.sync.lock().unwrap();
+        let leader = self.leader();
+        let outcome = (|| -> anyhow::Result<usize> {
+            let mut client = Client::connect_with(leader.as_str(), self.cfg.client.clone())?;
+            let batch = client
+                .pull_log(model.name(), self.applied_epoch(), self.cfg.max_records)
+                .map_err(|e| anyhow::anyhow!("pull_log from {leader}: {e}"))?;
+            self.note_leader_epoch(batch.leader_epoch);
+            anyhow::ensure!(
+                !batch.snapshot_needed,
+                "leader truncated its log past epoch {} (base {}): wipe the \
+                 follower journal for '{}' and re-bootstrap",
+                self.applied_epoch(),
+                batch.base_epoch,
+                model.name()
+            );
+            let mut applied = 0;
+            for rec in &batch.records {
+                if self.apply_shipped(model, rec)? == Applied::Ok {
+                    applied += 1;
+                }
+            }
+            Ok(applied)
+        })();
+        self.mark_reachable(outcome.is_ok());
+        outcome
+    }
+}
+
+/// Spawn the background catch-up loop for one follower model. Holds only
+/// a `Weak` handle, so dropping the model (or its registry) stops the
+/// thread within one round — the same lifecycle discipline as the
+/// service compactor.
+pub fn spawn_tailer(model: Weak<Model>) {
+    let _ = std::thread::Builder::new().name("dare-replica".to_string()).spawn(move || loop {
+        let Some(m) = model.upgrade() else { return };
+        let Some(rep) = m.replica() else { return };
+        if rep.stopped.load(Ordering::SeqCst) || !rep.is_follower() {
+            return;
+        }
+        let poll = rep.cfg.poll_interval;
+        match rep.sync_once(&m) {
+            // applied something: more may be waiting, pull again now
+            Ok(n) if n > 0 => {}
+            // caught up or unreachable: back off (drop the strong handle
+            // first so the model can be freed while we sleep)
+            _ => {
+                drop(rep);
+                drop(m);
+                std::thread::sleep(poll);
+            }
+        }
+    });
+}
+
+/// Bootstrap `svc` as a read-serving follower of `cfg.leader`: list the
+/// leader's models and, for each durable one, either resume the local
+/// journal (a follower restart recovers locally, no snapshot transfer)
+/// or pull a snapshot and install it at the snapshot's epoch. Returns
+/// the model names now following. Leader models without durability have
+/// no epoch chain to ship and are skipped with a warning.
+pub fn bootstrap_follower(
+    svc: &Arc<UnlearningService>,
+    cfg: &ReplicationConfig,
+) -> anyhow::Result<Vec<String>> {
+    let mut client = Client::connect_with(cfg.leader.as_str(), cfg.client.clone())
+        .map_err(|e| anyhow::anyhow!("cannot reach leader {}: {e}", cfg.leader))?;
+    let summaries = client.list().map_err(|e| anyhow::anyhow!("list on {}: {e}", cfg.leader))?;
+    let mut following = Vec::new();
+    for s in &summaries {
+        match follow_model(svc, cfg, &mut client, &s.name) {
+            Ok(()) => following.push(s.name.clone()),
+            Err(e) => eprintln!("replica: not following '{}': {e}", s.name),
+        }
+    }
+    Ok(following)
+}
+
+fn follow_model(
+    svc: &Arc<UnlearningService>,
+    cfg: &ReplicationConfig,
+    client: &mut Client,
+    name: &str,
+) -> anyhow::Result<()> {
+    let (model, applied) = match svc.registry().get(name) {
+        // Already recovered from the follower's own journal at startup:
+        // resume tailing from the local epoch.
+        Ok(m) => {
+            anyhow::ensure!(m.replica().is_none(), "already following '{name}'");
+            let wal = m
+                .wal()
+                .ok_or_else(|| anyhow::anyhow!("local model '{name}' has no journal to resume from"))?;
+            let epoch = wal.epoch();
+            (m, epoch)
+        }
+        Err(_) => {
+            let (epoch, snapshot) = client
+                .pull_snapshot(name)
+                .map_err(|e| anyhow::anyhow!("pull_snapshot: {e}"))?;
+            let m = svc
+                .install_snapshot(name, &snapshot, epoch)
+                .map_err(|e| anyhow::anyhow!("install: {e}"))?;
+            (m, epoch)
+        }
+    };
+    let rep = ReplicaState::new(cfg.clone(), applied);
+    model.attach_replica(rep);
+    if cfg.spawn_tailers {
+        spawn_tailer(Arc::downgrade(&model));
+    }
+    Ok(())
+}
+
+/// Drain catch-up and flip a follower model into a writable leader (the
+/// `promote` op). Pull rounds repeat until one applies nothing new; if
+/// the leader cannot be reached at all, promotion proceeds with what has
+/// already been replicated — that *is* the failover case. Returns the
+/// epoch the model promoted at; its own WAL continues the same chain, so
+/// subsequent mutations journal and replay cleanly.
+pub fn promote(model: &Model) -> Result<u64, ApiError> {
+    let Some(rep) = model.replica() else {
+        return Err(ApiError::BadRequest("promote: model is not a follower".to_string()));
+    };
+    if !rep.is_follower() {
+        return Err(ApiError::BadRequest("promote: model is already a leader".to_string()));
+    }
+    loop {
+        match rep.sync_once(model) {
+            Ok(0) => break,    // one full round with nothing new: drained
+            Ok(_) => continue, // still catching up
+            Err(_) => break,   // leader gone — promote with what we have
+        }
+    }
+    rep.promoted.store(true, Ordering::SeqCst);
+    rep.stopped.store(true, Ordering::SeqCst);
+    Ok(rep.applied_epoch())
+}

@@ -372,6 +372,48 @@ impl UnlearningService {
             Err(e) => Response::Err(e),
         }
     }
+
+    /// Install a follower-bootstrapped model (DESIGN.md §12): `snapshot`
+    /// is the leader's canonical forest JSON cut at WAL epoch `epoch`.
+    /// With durability enabled, the local journal is created *at that
+    /// epoch* ([`Wal::create_at`]), so a follower restart recovers
+    /// locally and resumes tailing without re-pulling history. Returns
+    /// the model handle so the caller can attach replication state.
+    pub fn install_snapshot(
+        &self,
+        name: &str,
+        snapshot: &str,
+        epoch: u64,
+    ) -> Result<Arc<Model>, ApiError> {
+        validate_name(name)?;
+        if self.registry.contains(name) {
+            return Err(ApiError::BadRequest(format!("model '{name}' already exists")));
+        }
+        let forest = crate::forest::serialize::forest_from_json(snapshot)
+            .map_err(|e| ApiError::BadRequest(format!("invalid snapshot from leader: {e}")))?;
+        let wal = match &self.cfg.wal_dir {
+            Some(root) => match Wal::create_at(
+                root,
+                name,
+                &forest,
+                epoch,
+                self.cfg.wal_fsync,
+                self.cfg.wal_snapshot_every,
+                self.cert_key.clone(),
+            ) {
+                Ok(w) => Some(Arc::new(w)),
+                Err(e) => {
+                    return Err(ApiError::BadRequest(format!(
+                        "cannot initialize durability for '{name}': {e}"
+                    )))
+                }
+            },
+            None => None,
+        };
+        let model = Model::new_with_wal(name, forest, &self.cfg, wal);
+        self.registry.insert(Arc::clone(&model))?;
+        Ok(model)
+    }
 }
 
 fn validate_name(name: &str) -> Result<(), ApiError> {
@@ -385,7 +427,29 @@ fn validate_name(name: &str) -> Result<(), ApiError> {
 
 /// Run one data-plane op against a resolved model, recording latency and
 /// outcome in the model's telemetry for the four high-traffic ops.
+///
+/// Followers (DESIGN.md §12) serve the read plane only: mutations bounce
+/// with [`ApiError::ReadOnly`] naming the leader, and read responses are
+/// wrapped in [`Response::Stale`] once the replica has fallen behind its
+/// staleness bound — annotated, never refused (graceful degradation).
 fn dispatch_model(model: &Model, op: Op) -> Response {
+    if let Op::Delete { .. } | Op::Add { .. } | Op::Certify { .. } = op {
+        if model.is_follower() {
+            return Response::Err(ApiError::ReadOnly {
+                leader: model.leader_addr().unwrap_or_default(),
+            });
+        }
+    }
+    let annotate_stale = matches!(op, Op::Predict { .. } | Op::DeleteCost { .. })
+        && model.replica().map_or(false, |r| r.is_follower() && r.is_stale());
+    let resp = dispatch_model_inner(model, op);
+    if annotate_stale && !matches!(resp, Response::Err(_)) {
+        return Response::Stale(Box::new(resp));
+    }
+    resp
+}
+
+fn dispatch_model_inner(model: &Model, op: Op) -> Response {
     match op {
         Op::Predict { rows } => model.telemetry().timed("predict", || {
             match model.predict(&rows) {
@@ -424,6 +488,45 @@ fn dispatch_model(model: &Model, op: Op) -> Response {
         },
         Op::Certify { id } => match model.certify(id) {
             Ok(cert) => Response::Certified(cert),
+            Err(e) => Response::Err(e),
+        },
+        // -- replication, leader side (DESIGN.md §12) --
+        Op::PullSnapshot => match model.wal() {
+            Some(wal) => {
+                let (wal_epoch, snapshot) =
+                    wal.snapshot_with_epoch(|| model.snapshot_forest());
+                Response::Snapshot { wal_epoch, snapshot }
+            }
+            None => Response::Err(ApiError::BadRequest(
+                "replication requires durability (start the leader with a WAL dir)".to_string(),
+            )),
+        },
+        Op::PullLog {
+            after_epoch,
+            max_records,
+        } => match model.wal() {
+            Some(wal) => {
+                let batch = wal.read_records_after(after_epoch, max_records);
+                Response::LogWindow {
+                    records: batch
+                        .records
+                        .into_iter()
+                        .map(|r| (r.epoch, r.request))
+                        .collect(),
+                    leader_epoch: batch.leader_epoch,
+                    base_epoch: batch.base_epoch,
+                    snapshot_needed: batch.snapshot_needed,
+                }
+            }
+            None => Response::Err(ApiError::BadRequest(
+                "replication requires durability (start the leader with a WAL dir)".to_string(),
+            )),
+        },
+        Op::Promote => match crate::coordinator::replica::promote(model) {
+            Ok(epoch) => Response::Promoted {
+                model: model.name().to_string(),
+                epoch,
+            },
             Err(e) => Response::Err(e),
         },
         Op::Shutdown
@@ -945,5 +1048,96 @@ mod tests {
             after < before + 1e-6,
             "removing positives should not raise positive probability ({before} -> {after})"
         );
+    }
+
+    #[test]
+    fn follower_models_reject_mutations_and_annotate_stale_reads() {
+        use crate::coordinator::replica::{ReplicaState, ReplicationConfig};
+        let svc = service();
+        let model = svc.registry().get(DEFAULT_MODEL).unwrap();
+        // Nothing listens on port 1, so every leader contact fails fast —
+        // this pins the graceful-degradation path, not a live tail.
+        let rep = ReplicaState::new(
+            ReplicationConfig {
+                leader: "127.0.0.1:1".to_string(),
+                stale_after_epochs: 0,
+                ..Default::default()
+            },
+            0,
+        );
+        model.attach_replica(Arc::clone(&rep));
+
+        // Mutations bounce with the read_only wire code naming the leader.
+        for rq in [
+            r#"{"op":"delete","ids":[1]}"#.to_string(),
+            {
+                let row = vec!["0.2"; svc.n_features()].join(",");
+                format!(r#"{{"op":"add","row":[{row}],"label":1}}"#)
+            },
+            r#"{"op":"certify","id":3}"#.to_string(),
+        ] {
+            let r = svc.handle(&req(&rq));
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{rq}");
+            let err = r.get("error").unwrap();
+            assert_eq!(err.get("code").unwrap().as_str(), Some("read_only"), "{rq}");
+            assert_eq!(err.get("leader").unwrap().as_str(), Some("127.0.0.1:1"));
+        }
+
+        // Stats grow the replication gauges.
+        let s = svc.handle(&req(r#"{"op":"stats"}"#));
+        assert_eq!(s.get("role").unwrap().as_str(), Some("follower"));
+        assert_eq!(s.get("replication_lag_epochs").unwrap().as_u64(), Some(0));
+        assert_eq!(s.get("leader").unwrap().as_str(), Some("127.0.0.1:1"));
+        assert!(s.get("leader_reachable").is_some());
+
+        // In-sync follower: reads serve unannotated.
+        let row = vec!["0.2"; svc.n_features()].join(",");
+        let predict = format!(r#"{{"op":"predict","rows":[[{row}]]}}"#);
+        let r = svc.handle(&req(&predict));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        assert!(r.get("stale").is_none());
+
+        // Behind the (zero) staleness bound: still served, but annotated.
+        rep.note_leader_epoch(5);
+        let r = svc.handle(&req(&predict));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(r.get("stale").unwrap().as_bool(), Some(true));
+        let r = svc.handle(&req(r#"{"op":"delete_cost","id":5}"#));
+        assert_eq!(r.get("stale").unwrap().as_bool(), Some(true));
+
+        // Promote: the drain hits the unreachable leader, fails over, and
+        // flips the model writable.
+        let r = svc.handle(&req(r#"{"op":"promote"}"#));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(r.get("model").unwrap().as_str(), Some(DEFAULT_MODEL));
+        let s = svc.handle(&req(r#"{"op":"stats"}"#));
+        assert_eq!(s.get("role").unwrap().as_str(), Some("leader"));
+        assert!(s.get("replication_lag_epochs").is_none());
+        let r = svc.handle(&req(r#"{"op":"delete","ids":[1]}"#));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+
+        // Promoting a model that is already a leader is a bad request.
+        let r = svc.handle(&req(r#"{"op":"promote"}"#));
+        assert_eq!(
+            r.get("error").unwrap().get("code").unwrap().as_str(),
+            Some("bad_request")
+        );
+    }
+
+    #[test]
+    fn pull_ops_require_durability() {
+        let svc = service(); // no wal_dir
+        for rq in [
+            r#"{"op":"pull_snapshot"}"#,
+            r#"{"op":"pull_log","after_epoch":0}"#,
+        ] {
+            let r = svc.handle(&req(rq));
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{rq}");
+            assert_eq!(
+                r.get("error").unwrap().get("code").unwrap().as_str(),
+                Some("bad_request"),
+                "{rq}"
+            );
+        }
     }
 }

@@ -163,6 +163,24 @@ pub struct LogRecord {
     pub request: Request,
 }
 
+/// A window of log records cut for replication (`pull_log`, DESIGN.md §12).
+#[derive(Clone, Debug)]
+pub struct PullBatch {
+    /// Records with `epoch > after_epoch`, in log (= apply) order.
+    pub records: Vec<LogRecord>,
+    /// Epoch of the leader's last durably-logged op when the window was
+    /// cut; always ≥ the last record's epoch, so `leader_epoch - applied`
+    /// is a sound lag measure on the follower.
+    pub leader_epoch: u64,
+    /// Base epoch of the on-disk log. Records at or below it live only in
+    /// the snapshot.
+    pub base_epoch: u64,
+    /// True when `after_epoch < base_epoch`: the requested records were
+    /// truncated into a snapshot, so tailing cannot continue — the
+    /// follower must re-bootstrap from `pull_snapshot`.
+    pub snapshot_needed: bool,
+}
+
 /// Parse the longest valid prefix of raw log bytes. Returns the records
 /// and the byte length of that prefix (header included). Never errors:
 /// any malformed tail — short frame, oversized length, CRC mismatch,
@@ -305,13 +323,29 @@ impl Wal {
         snapshot_every: u64,
         key: Vec<u8>,
     ) -> anyhow::Result<Wal> {
+        Self::create_at(root, model, forest, 0, fsync, snapshot_every, key)
+    }
+
+    /// Like [`Wal::create`] but with the log based at `base_epoch`: a
+    /// follower bootstrapping from a leader snapshot cut at epoch E
+    /// journals onward from E, not from zero, so its local log holds the
+    /// same `(epoch, record)` chain as the leader's (DESIGN.md §12).
+    pub fn create_at(
+        root: &Path,
+        model: &str,
+        forest: &DareForest,
+        base_epoch: u64,
+        fsync: FsyncPolicy,
+        snapshot_every: u64,
+        key: Vec<u8>,
+    ) -> anyhow::Result<Wal> {
         let dir = root.join(dir_name(model));
         std::fs::create_dir_all(&dir)?;
         atomic_write(&dir.join(NAME_FILE), model.as_bytes())?;
         let json = forest_to_json(forest);
         let hash = to_hex(&sha256(json.as_bytes()));
-        write_snapshot_file(&dir, &json, 0)?;
-        atomic_write(&dir.join(LOG_FILE), &header_bytes(0))?;
+        write_snapshot_file(&dir, &json, base_epoch)?;
+        atomic_write(&dir.join(LOG_FILE), &header_bytes(base_epoch))?;
         fsync_dir(root)?;
         let file = OpenOptions::new().append(true).open(dir.join(LOG_FILE))?;
         Ok(Wal {
@@ -322,11 +356,11 @@ impl Wal {
             key,
             state: Mutex::new(WalState {
                 file,
-                epoch: 0,
+                epoch: base_epoch,
                 since_sync: 0,
                 last_sync: Instant::now(),
                 since_snapshot: 0,
-                cert_cache: Some((0, hash)),
+                cert_cache: Some((base_epoch, hash)),
                 failed: false,
             }),
         })
@@ -434,6 +468,58 @@ impl Wal {
     /// Epoch of the last durably-logged op.
     pub fn epoch(&self) -> u64 {
         self.state.lock().unwrap().epoch
+    }
+
+    /// The leader side of `pull_log` (DESIGN.md §12): records with
+    /// `epoch > after_epoch`, capped at `max` (min 1). Reads the log file
+    /// *without* the state mutex — appends never block on replication. A
+    /// concurrently-appended torn tail is absorbed by the valid-prefix
+    /// rule (the follower just asks again), and a concurrent
+    /// snapshot+truncate swaps the file atomically, which the next call
+    /// reports as `snapshot_needed` if it outran the follower. The
+    /// leader's epoch is read *after* the file, so it bounds every
+    /// returned record.
+    pub fn read_records_after(&self, after_epoch: u64, max: usize) -> PullBatch {
+        let mut bytes = Vec::new();
+        if let Ok(mut f) = File::open(self.dir.join(LOG_FILE)) {
+            let _ = f.read_to_end(&mut bytes);
+        }
+        let (records, _valid_len, base_epoch) = read_valid_prefix(&bytes);
+        let leader_epoch = self.epoch();
+        if after_epoch < base_epoch {
+            return PullBatch {
+                records: Vec::new(),
+                leader_epoch,
+                base_epoch,
+                snapshot_needed: true,
+            };
+        }
+        PullBatch {
+            records: records
+                .into_iter()
+                .filter(|r| r.epoch > after_epoch)
+                .take(max.max(1))
+                .collect(),
+            leader_epoch,
+            base_epoch,
+            snapshot_needed: false,
+        }
+    }
+
+    /// The leader side of `pull_snapshot`: serialize `snap()` under the
+    /// WAL mutex, so the returned `(epoch, json)` pair is cut at a single
+    /// point in the op order — no mutation can land between reading the
+    /// epoch and hashing the state. The hash also primes the certify
+    /// cache for this epoch. The JSON carries no `wal_epoch` key; a
+    /// bootstrapping follower splices its own via [`Wal::create_at`].
+    pub fn snapshot_with_epoch(&self, snap: impl FnOnce() -> DareForest) -> (u64, String) {
+        let mut st = self.state.lock().unwrap();
+        let epoch = st.epoch;
+        let json = forest_to_json(&snap());
+        if !matches!(&st.cert_cache, Some((e, _)) if *e == epoch) {
+            st.cert_cache = Some((epoch, to_hex(&sha256(json.as_bytes()))));
+        }
+        (epoch, json)
     }
 
     /// Remove a model's durability directory (the `drop` op: resurrecting
@@ -795,6 +881,66 @@ mod tests {
             cert.snapshot_hash,
             to_hex(&sha256(forest_to_json(&live).as_bytes()))
         );
+    }
+
+    #[test]
+    fn pull_windows_filter_by_epoch_and_follow_truncation() {
+        let root = temp_root("pull");
+        let f = forest(11);
+        let wal = Wal::create(&root, "m", &f, FsyncPolicy::EveryOp, 0, b"k".to_vec()).unwrap();
+        let live = std::cell::RefCell::new(f.clone());
+        for ids in [vec![0u32], vec![1], vec![2], vec![3]] {
+            wal.logged(
+                Op::Delete { ids: ids.clone() },
+                || live.borrow_mut().delete_batch(&ids),
+                || live.borrow().clone(),
+            )
+            .unwrap();
+        }
+
+        // the full window, then epoch filtering + the max cap
+        let w = wal.read_records_after(0, 100);
+        assert_eq!((w.leader_epoch, w.base_epoch, w.snapshot_needed), (4, 0, false));
+        assert_eq!(w.records.len(), 4);
+        assert_eq!(w.records[0].epoch, 1);
+        let w = wal.read_records_after(2, 1);
+        assert_eq!(w.records.len(), 1);
+        assert_eq!(w.records[0].epoch, 3);
+        // caught up: empty window, no snapshot demand
+        assert!(wal.read_records_after(4, 8).records.is_empty());
+
+        // snapshot + truncate: pre-base epochs now need a re-bootstrap
+        wal.checkpoint(&live.borrow()).unwrap();
+        let w = wal.read_records_after(1, 8);
+        assert!(w.snapshot_needed);
+        assert_eq!(w.base_epoch, 4);
+        let w = wal.read_records_after(4, 8);
+        assert!(!w.snapshot_needed);
+        assert!(w.records.is_empty());
+
+        // snapshot_with_epoch cuts at the current epoch, canonical bytes
+        let (epoch, json) = wal.snapshot_with_epoch(|| live.borrow().clone());
+        assert_eq!(epoch, 4);
+        assert_eq!(json, forest_to_json(&live.borrow()));
+
+        // a follower journal based at that epoch recovers to the same state
+        let froot = temp_root("pull-follower");
+        let fwal = Wal::create_at(
+            &froot,
+            "m",
+            &forest_from_json(&json).unwrap(),
+            epoch,
+            FsyncPolicy::EveryOp,
+            0,
+            b"k".to_vec(),
+        )
+        .unwrap();
+        assert_eq!(fwal.epoch(), 4);
+        drop(fwal);
+        let rec = Wal::recover(&froot, &dir_name("m"), FsyncPolicy::EveryOp, 0, b"k".to_vec()).unwrap();
+        assert_eq!(rec.wal.epoch(), 4);
+        assert_eq!(rec.replayed, 0);
+        assert_eq!(forest_to_json(&rec.forest), json);
     }
 
     #[test]

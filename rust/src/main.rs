@@ -4,13 +4,17 @@
 //!   train      train a forest on a corpus dataset or CSV, optionally save
 //!   delete     unlearn instances from a saved model
 //!   predict    score a CSV with a saved model
-//!   serve      run the unlearning service (JSON-lines over TCP)
+//!   serve      run the unlearning service (JSON-lines over TCP); with
+//!              --follow it runs as a read-only WAL-tailing follower
+//!   promote    flip a follower model into a writable leader (failover)
 //!   tune       run the paper's hyperparameter tuning protocol
 //!   reproduce  regenerate a paper table/figure (fig1 fig2 fig3 table2
 //!              table3 table5 table6 table7 table9 | all)
 //!   datasets   list the 14-dataset corpus
 
-use dare::coordinator::{serve, ServiceConfig, UnlearningService};
+use dare::coordinator::{
+    bootstrap_follower, serve, Client, ReplicationConfig, ServiceConfig, UnlearningService,
+};
 use dare::data::registry::{corpus, find};
 use dare::data::split::train_test;
 use dare::eval::tuner::Grid;
@@ -25,7 +29,8 @@ const VALUE_KEYS: &[&str] = &[
     "dataset", "scale", "trees", "depth", "k", "drmax", "criterion", "seed", "threads", "save",
     "load", "csv", "ids", "addr", "workers", "repeats", "deletions", "worst-of", "datasets",
     "out-dir", "max-trees", "ks", "grid", "folds", "tolerances", "label", "n", "model",
-    "wal-dir", "fsync", "snapshot-every", "hmac-key",
+    "wal-dir", "fsync", "snapshot-every", "hmac-key", "follow", "poll-ms", "pull-batch",
+    "stale-after", "retries", "connect-timeout-ms", "io-timeout-ms",
 ];
 
 fn main() {
@@ -37,6 +42,7 @@ fn main() {
         "delete" => cmd_delete(&args),
         "predict" => cmd_predict(&args),
         "serve" => cmd_serve(&args),
+        "promote" => cmd_promote(&args),
         "tune" => cmd_tune(&args),
         "reproduce" => cmd_reproduce(&args),
         "datasets" => cmd_datasets(),
@@ -69,6 +75,12 @@ COMMANDS
              [--snapshot-every N] [--hmac-key KEY]  (write-ahead log +
              crash recovery + signed deletion certificates; with --wal-dir,
              journaled state wins over --load for already-served names)
+             replication: --follow LEADER_ADDR runs a read-only follower
+             that bootstraps from the leader's snapshot and tails its WAL
+             [--poll-ms MS] [--pull-batch N] [--stale-after EPOCHS]
+             [--retries R] [--connect-timeout-ms MS] [--io-timeout-ms MS]
+  promote    --addr <follower> [--model NAME]  flip a follower model into
+             a writable leader (drains catch-up first; failover)
   tune       --dataset <name> [--scale N] [--grid paper|small] [--folds F]
   reproduce  <fig1|fig2|fig3|table2|table3|table5|table6|table7|table9|all>
              [--scale N] [--repeats R] [--deletions D] [--worst-of C]
@@ -208,6 +220,43 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     cfg.wal_snapshot_every = args.u64("snapshot-every", cfg.wal_snapshot_every);
     cfg.cert_key = args.get("hmac-key").map(str::to_string);
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    let workers = args.usize("workers", 4);
+
+    // Follower mode (DESIGN.md §12): no local training — every served model
+    // bootstraps from the leader's snapshot and then tails its WAL.
+    if let Some(leader) = args.get("follow") {
+        let durable = cfg.wal_dir.is_some();
+        let mut rcfg = ReplicationConfig {
+            leader: leader.to_string(),
+            ..Default::default()
+        };
+        rcfg.poll_interval = args.duration_ms("poll-ms", rcfg.poll_interval);
+        rcfg.max_records = args.usize("pull-batch", rcfg.max_records);
+        rcfg.stale_after_epochs = args.u64("stale-after", rcfg.stale_after_epochs);
+        rcfg.client.retries = args.u64("retries", u64::from(rcfg.client.retries)) as u32;
+        rcfg.client.connect_timeout =
+            args.duration_ms("connect-timeout-ms", rcfg.client.connect_timeout);
+        rcfg.client.io_timeout = args.duration_ms("io-timeout-ms", rcfg.client.io_timeout);
+        let svc = UnlearningService::with_models(Vec::new(), cfg);
+        let followed = bootstrap_follower(&svc, &rcfg)?;
+        anyhow::ensure!(
+            !followed.is_empty(),
+            "leader {leader} serves no models to follow"
+        );
+        println!(
+            "dare read-only follower (wire v{}, leader {leader}, models [{}], durable={durable})",
+            dare::coordinator::WIRE_VERSION,
+            followed.join(", ")
+        );
+        return serve(svc, addr, workers, |bound| {
+            println!(
+                "listening on {bound} (JSON-lines; read-only follower — \
+                 mutations answer read_only; send {{\"op\":\"promote\"}} to fail over)"
+            );
+        });
+    }
+
     let name = args.get_or("model", dare::coordinator::DEFAULT_MODEL);
     // With a WAL dir, durable on-disk state wins over --load/--dataset for
     // any model name it already covers (DESIGN.md §11) — the flags only
@@ -221,18 +270,28 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     };
     let durable = cfg.wal_dir.is_some();
     let svc = UnlearningService::with_models(vec![(name.to_string(), forest)], cfg);
-    let addr = args.get_or("addr", "127.0.0.1:7878");
     println!(
         "dare unlearning service (wire v{}, model '{name}', pjrt={}, durable={durable})",
         dare::coordinator::WIRE_VERSION,
         svc.registry().get(name).map(|m| m.pjrt_active()).unwrap_or(false)
     );
-    serve(svc, addr, args.usize("workers", 4), |bound| {
+    serve(svc, addr, workers, |bound| {
         println!(
             "listening on {bound} (JSON-lines; v1 requests carry \
              {{\"v\":1,\"model\":...}}; send {{\"op\":\"shutdown\"}} to stop)"
         );
     })
+}
+
+fn cmd_promote(args: &Args) -> anyhow::Result<()> {
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("--addr <follower addr> required"))?;
+    let model = args.get_or("model", dare::coordinator::DEFAULT_MODEL);
+    let mut client = Client::connect(addr)?;
+    let epoch = client.promote(model)?;
+    println!("promoted '{model}' on {addr}: now a writable leader at wal epoch {epoch}");
+    Ok(())
 }
 
 fn cmd_tune(args: &Args) -> anyhow::Result<()> {

@@ -108,6 +108,16 @@ impl Args {
         self.get(name)
             .map(|s| s.split(',').map(|t| t.trim().to_string()).collect())
     }
+    /// A duration given in whole milliseconds, e.g. `--poll-ms 250`.
+    pub fn duration_ms(&self, name: &str, default: std::time::Duration) -> std::time::Duration {
+        self.get(name)
+            .map(|s| {
+                std::time::Duration::from_millis(s.parse::<u64>().unwrap_or_else(|_| {
+                    panic!("--{name} expects milliseconds as an integer, got '{s}'")
+                }))
+            })
+            .unwrap_or(default)
+    }
 }
 
 #[cfg(test)]
@@ -152,5 +162,20 @@ mod tests {
     fn bad_integer_panics() {
         let a = parse(args(&["--trees", "abc"]), &["trees"]);
         a.usize("trees", 0);
+    }
+
+    #[test]
+    fn durations_in_milliseconds() {
+        use std::time::Duration;
+        let a = parse(args(&["--poll-ms", "250"]), &["poll-ms"]);
+        assert_eq!(a.duration_ms("poll-ms", Duration::from_secs(9)), Duration::from_millis(250));
+        assert_eq!(a.duration_ms("io-ms", Duration::from_secs(9)), Duration::from_secs(9));
+    }
+
+    #[test]
+    #[should_panic(expected = "expects milliseconds")]
+    fn bad_duration_panics() {
+        let a = parse(args(&["--poll-ms", "fast"]), &["poll-ms"]);
+        a.duration_ms("poll-ms", std::time::Duration::ZERO);
     }
 }

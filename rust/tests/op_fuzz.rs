@@ -827,3 +827,210 @@ fn random_deletion_sequences_match_scratch_retrain_exhaustively() {
         }
     }
 }
+
+/// ISSUE 7: the replication differential (DESIGN.md §12). The same fuzzed
+/// op sequences as the WAL leg, but now a *follower* tails the leader's
+/// journal through `read_records_after` + `apply_shipped` at random
+/// cadences — sometimes per-op, sometimes lagging far enough behind a
+/// truncating leader that it is told `snapshot_needed` and must
+/// re-bootstrap from a fresh snapshot. Whenever the follower is caught
+/// up, it must be byte-identical to what `Wal::recover` reconstructs from
+/// the leader's journal at the same epoch: same serialized forest, same
+/// predictions, and a local journal that itself recovers to that state.
+/// Overlapping windows are re-offered on purpose: the epoch-chain rule
+/// must dedup them without perturbing anything.
+#[test]
+fn follower_tailing_the_leader_matches_recovery_bit_for_bit() {
+    use dare::coordinator::api::Op;
+    use dare::coordinator::wal::{dir_name, Wal};
+    use dare::coordinator::{FsyncPolicy, ReplicaState, ReplicationConfig};
+    use std::cell::RefCell;
+
+    let leader_root = std::env::temp_dir().join(format!("dare-fuzz-repl-l-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&leader_root);
+    std::fs::create_dir_all(&leader_root).unwrap();
+    let policy = LazyPolicy::from_env();
+
+    for seed in fuzz_seeds() {
+        // Per-seed follower root: service startup recovers every model dir
+        // under its durability root, so roots must not accumulate.
+        let follower_root =
+            std::env::temp_dir().join(format!("dare-fuzz-repl-f-{}-{seed}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&follower_root);
+        std::fs::create_dir_all(&follower_root).unwrap();
+        let mut rng = Rng::new(mix_seed(&[seed, 0x7E91]));
+        let n = 60 + rng.index(60);
+        let p = 3 + rng.index(3);
+        let data = random_dataset(&mut rng, n, p);
+        let max_depth = 4 + rng.index(2);
+        let params = Params {
+            n_trees: 2 + rng.index(2),
+            max_depth,
+            k: 2 + rng.index(5),
+            d_rmax: rng.index(2).min(max_depth),
+            ..Default::default()
+        };
+        let mut live = DareForest::fit(data, &params, rng.next_u64());
+        live.set_lazy_policy(policy);
+        let live = RefCell::new(live);
+        let flushed = || {
+            let mut c = live.borrow().clone();
+            c.flush_all();
+            c
+        };
+        let model_name = format!("repl-{seed}");
+        // A small snapshot_every makes the leader truncate mid-sequence, so
+        // lagging followers hit the snapshot_needed path and re-bootstrap.
+        let leader_wal = Wal::create(
+            &leader_root,
+            &model_name,
+            &live.borrow(),
+            FsyncPolicy::EveryN(3),
+            5,
+            b"fuzz-key".to_vec(),
+        )
+        .unwrap();
+
+        // The follower lives in a real service so shipped records flow
+        // through the same Model/ShardedForest/WAL plumbing as production.
+        let fsvc = UnlearningService::with_models(
+            Vec::new(),
+            ServiceConfig {
+                use_pjrt: false,
+                n_shards: 1 + rng.index(3),
+                wal_dir: Some(follower_root.clone()),
+                wal_snapshot_every: 0,
+                cert_key: Some("fuzz-key".to_string()),
+                ..Default::default()
+            },
+        );
+        let never = ReplicationConfig {
+            leader: "127.0.0.1:1".to_string(), // tailed by hand, never dialed
+            spawn_tailers: false,
+            ..Default::default()
+        };
+        // Bootstrap generation 0 from the leader's epoch-0 snapshot. Each
+        // re-bootstrap after a truncation installs a new generation.
+        let mut generation = 0u32;
+        let (e0, snap0) = leader_wal.snapshot_with_epoch(&flushed);
+        let gen_name = |g: u32| format!("{model_name}.g{g}");
+        let mut fmodel = fsvc.install_snapshot(&gen_name(0), &snap0, e0).unwrap();
+        let mut rep = ReplicaState::new(never.clone(), e0);
+        fmodel.attach_replica(std::sync::Arc::clone(&rep));
+
+        let ops = 12 + rng.index(8);
+        for op in 0..ops {
+            // Mutate the leader (journaled, exactly like the service does).
+            if rng.bernoulli(0.6) && live.borrow().n_alive() > 12 {
+                let live_ids = live.borrow().live_ids();
+                let ids = vec![live_ids[rng.index(live_ids.len())]];
+                leader_wal
+                    .logged(
+                        Op::Delete { ids: ids.clone() },
+                        || live.borrow_mut().delete_batch(&ids),
+                        &flushed,
+                    )
+                    .unwrap();
+            } else {
+                let row: Vec<f32> = (0..live.borrow().data().n_features())
+                    .map(|_| rng.range_f32(-4.0, 4.0))
+                    .collect();
+                let label = rng.bernoulli(0.5) as u8;
+                leader_wal
+                    .logged(
+                        Op::Add { row: row.clone(), label },
+                        || live.borrow_mut().add(&row, label),
+                        &flushed,
+                    )
+                    .unwrap();
+            }
+
+            // Tail at a random cadence, with randomly sized (and sometimes
+            // deliberately overlapping) pull windows.
+            if rng.bernoulli(0.6) || op == ops - 1 {
+                loop {
+                    let from = if rng.bernoulli(0.25) {
+                        rep.applied_epoch().saturating_sub(2) // overlap: dedup must absorb it
+                    } else {
+                        rep.applied_epoch()
+                    };
+                    let batch = leader_wal.read_records_after(from, 1 + rng.index(4));
+                    rep.note_leader_epoch(batch.leader_epoch);
+                    if batch.snapshot_needed {
+                        // The leader truncated past us: re-bootstrap from a
+                        // fresh snapshot, exactly like a cold follower.
+                        generation += 1;
+                        let (e, snap) = leader_wal.snapshot_with_epoch(&flushed);
+                        // shipped records must point at the follower model
+                        fmodel = fsvc.install_snapshot(&gen_name(generation), &snap, e).unwrap();
+                        rep = ReplicaState::new(never.clone(), e);
+                        fmodel.attach_replica(std::sync::Arc::clone(&rep));
+                        continue;
+                    }
+                    if batch.records.is_empty() {
+                        break;
+                    }
+                    for rec in &batch.records {
+                        // records carry the leader's model name; re-target
+                        // the follower's generation-suffixed registry entry
+                        let mut rec = rec.clone();
+                        rec.request.model = gen_name(generation);
+                        rep.apply_shipped(&fmodel, &rec).unwrap_or_else(|e| {
+                            panic!("seed {seed}, op {op}: apply_shipped failed: {e}")
+                        });
+                    }
+                    if rep.applied_epoch() >= batch.leader_epoch {
+                        break;
+                    }
+                }
+                assert_eq!(rep.lag_epochs(), 0, "seed {seed}, op {op}: tail did not drain");
+            }
+        }
+
+        // Caught up: the follower must be byte-identical to leader recovery
+        // at the same epoch.
+        let final_epoch = leader_wal.epoch();
+        assert_eq!(rep.applied_epoch(), final_epoch, "seed {seed}: final tail incomplete");
+        drop(leader_wal);
+        let rec = Wal::recover(
+            &leader_root,
+            &dir_name(&model_name),
+            FsyncPolicy::EveryOp,
+            0,
+            b"fuzz-key".to_vec(),
+        )
+        .unwrap_or_else(|e| panic!("seed {seed}: leader recovery failed: {e}"));
+        let expect = forest_to_json(&rec.forest);
+        assert_eq!(
+            forest_to_json(&fmodel.snapshot_forest()),
+            expect,
+            "seed {seed}: follower diverged from leader recovery at epoch {final_epoch}"
+        );
+        let probes: Vec<Vec<f32>> = (0..6)
+            .map(|_| {
+                (0..live.borrow().data().n_features())
+                    .map(|_| rng.range_f32(-5.0, 5.0))
+                    .collect()
+            })
+            .collect();
+        assert_eq!(
+            fmodel.sharded().predict_proba_rows(&probes),
+            rec.forest.predict_proba_rows(&probes),
+            "seed {seed}: follower predictions diverged"
+        );
+        // ...and the follower's own journal recovers to the same bytes, so
+        // a follower restart needs no history re-pull.
+        let frec = Wal::recover(
+            &follower_root,
+            &dir_name(&gen_name(generation)),
+            FsyncPolicy::EveryOp,
+            0,
+            b"fuzz-key".to_vec(),
+        )
+        .unwrap_or_else(|e| panic!("seed {seed}: follower recovery failed: {e}"));
+        assert_eq!(forest_to_json(&frec.forest), expect, "seed {seed}: follower journal diverged");
+        assert_eq!(frec.wal.epoch(), final_epoch);
+        let _ = std::fs::remove_dir_all(&follower_root);
+    }
+    let _ = std::fs::remove_dir_all(&leader_root);
+}
