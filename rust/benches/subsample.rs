@@ -1,0 +1,104 @@
+//! Bench: Occ(q) subsampled ownership (ISSUE 8 / DESIGN.md §13) — delete
+//! and mixed add/delete throughput at q ∈ {0.1, 0.3, 1.0} × T ∈ {10, 100}.
+//!
+//! Each case replays one seeded op stream against a clone of a pre-fit
+//! forest. What to expect: deletion cost scales ~linearly with q (a tree
+//! skips every op for instances it does not own — no statistics walk, no
+//! epoch bump), so q=0.1 deletes should run close to 10× the q=1.0
+//! throughput at equal T, and the gap compounds with T. Results stay
+//! *exact* at every q — q trades per-tree data mass (capacity), not
+//! correctness — which the mean-leaf-count proxy printed per grid point
+//! makes visible: leaves per tree shrink roughly with q.
+//!
+//! Emits `BENCH_subsample.json` at the repo root (ns/iter per case).
+
+use dare::bench::{BenchConfig, Suite};
+use dare::data::synth::{generate, SynthSpec};
+use dare::forest::{DareForest, Params};
+use dare::util::rng::Rng;
+
+fn base_forest(n_trees: usize, q: f64) -> DareForest {
+    let data = generate(
+        &SynthSpec {
+            n: 3000,
+            informative: 4,
+            redundant: 2,
+            noise: 6,
+            flip: 0.05,
+            ..Default::default()
+        },
+        9,
+    );
+    DareForest::fit(
+        data,
+        &Params {
+            n_trees,
+            max_depth: 8,
+            k: 5,
+            ..Default::default()
+        }
+        .with_subsample(q),
+        21,
+    )
+}
+
+/// Delete `count` seeded live ids from a clone of `base`.
+fn delete_stream(base: &DareForest, count: usize, seed: u64) {
+    let mut f = base.clone();
+    let mut rng = Rng::new(seed);
+    for _ in 0..count {
+        let live = f.live_ids();
+        let id = live[rng.index(live.len())];
+        std::hint::black_box(f.delete_seq(id).unwrap());
+    }
+}
+
+/// Alternate adds and deletes (the add side re-tags ownership per tree
+/// with probability q, so both mutation paths exercise the gate).
+fn mixed_stream(base: &DareForest, count: usize, seed: u64) {
+    let mut f = base.clone();
+    let mut rng = Rng::new(seed);
+    let p = f.data().n_features();
+    for op in 0..count {
+        if op % 2 == 0 {
+            let live = f.live_ids();
+            let id = live[rng.index(live.len())];
+            std::hint::black_box(f.delete_seq(id).unwrap());
+        } else {
+            let row: Vec<f32> = (0..p).map(|_| rng.range_f32(-4.0, 4.0)).collect();
+            std::hint::black_box(f.add(&row, rng.bernoulli(0.5) as u8));
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut suite = Suite::new("subsample");
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 5,
+        max_iters: 40,
+        target_seconds: 2.0,
+    };
+    for n_trees in [10usize, 100] {
+        for q in [0.1, 0.3, 1.0] {
+            let base = base_forest(n_trees, q);
+            // Predict-accuracy proxy: per-tree capacity at this q. Exactness
+            // is invariant in q; what q trades away is data mass per tree.
+            let mean_leaves = base
+                .trees()
+                .iter()
+                .map(|t| t.shape().leaves as f64)
+                .sum::<f64>()
+                / n_trees as f64;
+            println!("proxy t{n_trees}_q{q}: mean leaves/tree = {mean_leaves:.1}");
+            suite.run(&format!("delete60_t{n_trees}_q{q}"), cfg, || {
+                delete_stream(&base, 60, 0xDE1 ^ n_trees as u64);
+            });
+            suite.run(&format!("mixed60_t{n_trees}_q{q}"), cfg, || {
+                mixed_stream(&base, 60, 0xADD ^ n_trees as u64);
+            });
+        }
+    }
+    suite.save_json_to("BENCH_subsample.json")?;
+    Ok(())
+}

@@ -167,6 +167,9 @@ pub struct CreateSpec {
     pub max_depth: Option<usize>,
     pub k: Option<usize>,
     pub d_rmax: Option<usize>,
+    /// Occ(q) subsample fraction in (0, 1] (DESIGN.md §13); omitted ⇒ full
+    /// ownership (q = 1.0).
+    pub q: Option<f64>,
 }
 
 impl Default for CreateSpec {
@@ -179,6 +182,7 @@ impl Default for CreateSpec {
             max_depth: None,
             k: None,
             d_rmax: None,
+            q: None,
         }
     }
 }
@@ -377,6 +381,14 @@ pub fn decode(req: &Value) -> Result<Request, ApiError> {
             max_depth: opt_uint(req, "depth")?.map(|n| n as usize),
             k: opt_uint(req, "k")?.map(|n| n as usize),
             d_rmax: opt_uint(req, "drmax")?.map(|n| n as usize),
+            q: match req.get("q") {
+                None => None,
+                Some(v) => Some(
+                    v.as_f64()
+                        .filter(|q| *q > 0.0 && *q <= 1.0)
+                        .ok_or_else(|| bad("'q' must be a number in (0, 1]"))?,
+                ),
+            },
         }),
         "pull_snapshot" => Op::PullSnapshot,
         "pull_log" => Op::PullLog {
@@ -464,6 +476,9 @@ pub fn encode_request(r: &Request) -> Value {
             }
             if let Some(r) = spec.d_rmax {
                 o.set("drmax", r);
+            }
+            if let Some(q) = spec.q {
+                o.set("q", q);
             }
         }
         Op::PullSnapshot => {
@@ -806,6 +821,13 @@ mod tests {
                 max_depth: opt_usize(rng, 30),
                 k: opt_usize(rng, 100),
                 d_rmax: opt_usize(rng, 6),
+                // exactly-representable fractions so the JSON roundtrip is
+                // bit-exact (the codec carries f64 through shortest-repr)
+                q: if rng.bernoulli(0.5) {
+                    Some([0.25, 0.5, 0.75, 1.0][rng.index(4)])
+                } else {
+                    None
+                },
             }),
             10 => Op::DropModel,
             11 => Op::List,
@@ -887,6 +909,9 @@ mod tests {
             (r#"{"op":"save"}"#, "save needs 'path'"),
             (r#"{"op":"load"}"#, "load needs 'path'"),
             (r#"{"op":"create"}"#, "create needs 'dataset'"),
+            (r#"{"op":"create","dataset":"surgical","q":0}"#, "'q' must be a number in (0, 1]"),
+            (r#"{"op":"create","dataset":"surgical","q":1.5}"#, "'q' must be a number in (0, 1]"),
+            (r#"{"op":"create","dataset":"surgical","q":"x"}"#, "'q' must be a number in (0, 1]"),
             (r#"{"op":"compact","budget":-2}"#, "'budget' must be a non-negative integer"),
             (r#"{"op":"pull_log"}"#, "pull_log needs 'after_epoch'"),
             (r#"{"op":"pull_log","after_epoch":-1}"#, "pull_log needs 'after_epoch'"),

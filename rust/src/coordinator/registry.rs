@@ -367,6 +367,22 @@ impl Model {
             .set("flushed_retrains", flushed)
             .set("model_bytes", mem.total())
             .set("data_bytes", self.sharded.data_bytes());
+        // Occ(q) ownership telemetry (DESIGN.md §13): the subsample
+        // fraction, (tree, instance) mutation pairs skipped because the
+        // tree never owned the instance, and the per-tree owned counts
+        // (all equal to n_alive at q=1.0).
+        resp.set("subsample_q", self.sharded.subsample_q())
+            .set("unowned_skips", self.sharded.unowned_skips())
+            .set(
+                "owned_per_tree",
+                Value::Arr(
+                    self.sharded
+                        .ownership_counts()
+                        .into_iter()
+                        .map(Value::from)
+                        .collect(),
+                ),
+            );
         resp.set("durable", self.wal.is_some());
         if let Some(wal) = &self.wal {
             // u64 epochs stay exact as JSON numbers far past any real op

@@ -313,6 +313,11 @@ impl UnlearningService {
         if let Some(k) = spec.k {
             params.k = k;
         }
+        if let Some(q) = spec.q {
+            // Occ(q) subsampling (DESIGN.md §13); the decoder already
+            // bounds q to (0, 1], validate() re-checks below.
+            params.q = q;
+        }
         params.n_threads = default_threads();
         // Wire-supplied hyperparameters must come back as a typed error,
         // never reach the `validate().expect()` panic inside `fit` (and a

@@ -28,9 +28,14 @@
 //! **Locking protocol.** Writers (delete/add) serialize on a store-level
 //! mutation mutex (they would contend on every shard anyway — each DaRE
 //! tree contains every instance) and bracket every mutation with a
-//! seqlock-style epoch protocol: each shard's epoch is bumped to *odd*
-//! before the first tree is touched and back to *even* after the dataset
-//! is updated, so one mutation advances every epoch by 2. Readers that
+//! seqlock-style epoch protocol: each *touched* shard's epoch is bumped to
+//! *odd* before the first tree is touched and back to *even* after the
+//! dataset is updated, so one mutation advances every touched epoch by 2.
+//! At q=1.0 every shard is touched by every mutation; under Occ(q)
+//! subsampling (DESIGN.md §13) only shards containing a tree that owns one
+//! of the mutated instances move — untouched shards' trees provably cannot
+//! change, so leaving their epochs still keeps optimistic readers and PJRT
+//! snapshot diffing correct *and* cache-friendly. Readers that
 //! must observe one consistent forest state (`predict_proba_rows`,
 //! `delete_cost`) read the epoch vector before and after, retry when it
 //! moved or was odd, and after a few failed attempts fall back to taking
@@ -42,7 +47,7 @@
 use crate::data::dataset::{Dataset, InstanceId};
 use crate::forest::delete::DeleteReport;
 use crate::forest::forest::{
-    accept_deletions, shard_ranges, DareForest, ForestDeleteReport, PREDICT_BATCH_CUTOFF,
+    accept_deletions, owns, shard_ranges, DareForest, ForestDeleteReport, PREDICT_BATCH_CUTOFF,
     PREDICT_BLOCK,
 };
 use crate::forest::lazy::LazyPolicy;
@@ -59,13 +64,17 @@ const READ_RETRIES: usize = 4;
 
 /// One shard: a contiguous range of the forest's trees behind its own lock.
 struct Shard {
-    /// Trees with global indices `start..start + trees.len()`.
+    /// Trees with global indices `start..start + len`.
     trees: RwLock<Vec<DareTree>>,
     /// Global index of the first tree in this shard.
     start: usize,
+    /// Tree count (fixed at construction) — readable without the lock, so
+    /// mutation routing can size skipped-shard reports lock-free.
+    len: usize,
     /// Seqlock epoch: odd while a mutation is in flight, +2 per mutation
     /// that changed this shard's trees (flushes bump only the shards they
-    /// actually retrained, so PJRT re-tensorization stays dirty-shard-only).
+    /// actually retrained, and Occ(q) mutations bump only shards with an
+    /// owning tree, so PJRT re-tensorization stays dirty-shard-only).
     epoch: AtomicU64,
     /// Deferred retrains currently pending in this shard's trees — the
     /// fast-path signal read paths use to decide whether flushing is
@@ -97,6 +106,13 @@ pub struct ShardedForest {
     /// shard, so writer concurrency buys nothing and interleaved writer
     /// fan-outs could deadlock on the dataset lock).
     mutation: Mutex<()>,
+    /// Per-tree seeds in global order — the Occ(q) ownership predicate's
+    /// key (DESIGN.md §13), cached at construction so mutation routing can
+    /// compute touched-shard masks without taking any shard lock.
+    seeds: Vec<u64>,
+    /// Cumulative (tree, instance) mutation pairs skipped because the tree
+    /// does not own the instance (stats telemetry; always 0 at q=1.0).
+    skipped_unowned: AtomicU64,
 }
 
 impl ShardedForest {
@@ -119,6 +135,7 @@ impl ShardedForest {
             }
         }
         let n_trees = trees.len();
+        let seeds: Vec<u64> = trees.iter().map(|t| t.tree_seed).collect();
         let ranges = shard_ranges(n_trees, n_shards);
         let mut shards = Vec::with_capacity(ranges.len());
         // split_off from the back so each shard keeps its contiguous range
@@ -126,6 +143,7 @@ impl ShardedForest {
             let tail = trees.split_off(r.start);
             let pending: u64 = tail.iter().map(|t| t.dirty_len() as u64).sum();
             shards.push(Shard {
+                len: tail.len(),
                 trees: RwLock::new(tail),
                 start: r.start,
                 epoch: AtomicU64::new(0),
@@ -141,6 +159,8 @@ impl ShardedForest {
             shards,
             lazy,
             mutation: Mutex::new(()),
+            seeds,
+            skipped_unowned: AtomicU64::new(0),
         }
     }
 
@@ -183,26 +203,89 @@ impl ShardedForest {
         self.seed
     }
 
+    /// Occ(q) subsample fraction (1.0 = full ownership, the default).
+    pub fn subsample_q(&self) -> f64 {
+        self.params.q
+    }
+
+    /// Cumulative (tree, instance) mutation pairs skipped by non-ownership
+    /// (stats telemetry; fast — a single atomic, no locks).
+    pub fn unowned_skips(&self) -> u64 {
+        self.skipped_unowned.load(Ordering::SeqCst)
+    }
+
+    /// Per-tree owned live-instance counts in global tree order (every
+    /// entry equals `n_alive` at q=1.0). Computed from the cached seed
+    /// vector and the liveness mask — no shard locks.
+    pub fn ownership_counts(&self) -> Vec<u64> {
+        let live = self.live_ids();
+        if !self.params.subsampled() {
+            return vec![live.len() as u64; self.n_trees];
+        }
+        self.seeds
+            .iter()
+            .map(|&ts| {
+                live.iter()
+                    .filter(|&&id| owns(ts, id, self.params.q))
+                    .count() as u64
+            })
+            .collect()
+    }
+
     /// Per-shard mutation epochs (index = shard id). Even = stable, odd =
-    /// a mutation is in flight; one mutation advances every epoch by 2.
-    /// Snapshot consumers diff this against their last-seen vector to find
-    /// dirty shards.
+    /// a mutation is in flight; one mutation advances every *touched*
+    /// shard's epoch by 2 (all shards at q=1.0, owning shards only under
+    /// Occ(q)). Snapshot consumers diff this against their last-seen
+    /// vector to find dirty shards.
     pub fn shard_epochs(&self) -> Vec<u64> {
         self.shards.iter().map(|s| s.epoch.load(Ordering::SeqCst)).collect()
     }
 
-    /// Seqlock write-side: flip every epoch odd (mutation in flight).
-    /// Caller must hold the mutation mutex.
-    fn begin_mutation(&self) {
-        for s in &self.shards {
-            s.epoch.fetch_add(1, Ordering::SeqCst);
+    /// Shard routing for a mutation over `ids`: shard `s` is touched iff
+    /// any of its trees owns any of the ids (Occ(q), DESIGN.md §13) — at
+    /// q=1.0 this is the all-true mask with zero hashing, so the fan-out is
+    /// byte-identical to the pre-Occ(q) store. Also returns the number of
+    /// (tree, id) pairs the mutation will skip by non-ownership.
+    fn touched_shards(&self, ids: &[InstanceId]) -> (Vec<bool>, u64) {
+        if !self.params.subsampled() {
+            return (vec![true; self.shards.len()], 0);
+        }
+        let q = self.params.q;
+        let mut mask = vec![false; self.shards.len()];
+        let mut skipped = 0u64;
+        for (si, s) in self.shards.iter().enumerate() {
+            for gt in s.start..s.start + s.len {
+                for &id in ids {
+                    if owns(self.seeds[gt], id, q) {
+                        mask[si] = true;
+                    } else {
+                        skipped += 1;
+                    }
+                }
+            }
+        }
+        (mask, skipped)
+    }
+
+    /// Seqlock write-side: flip the touched shards' epochs odd (mutation in
+    /// flight). Caller must hold the mutation mutex. Untouched shards'
+    /// epochs never move: their trees provably cannot change (every
+    /// per-tree op gates on the same ownership predicate that built the
+    /// mask), so PJRT snapshot consumers keep them cached.
+    fn begin_mutation_masked(&self, touched: &[bool]) {
+        for (s, &t) in self.shards.iter().zip(touched) {
+            if t {
+                s.epoch.fetch_add(1, Ordering::SeqCst);
+            }
         }
     }
 
-    /// Seqlock write-side: flip every epoch back to even (stable).
-    fn end_mutation(&self) {
-        for s in &self.shards {
-            s.epoch.fetch_add(1, Ordering::SeqCst);
+    /// Seqlock write-side: flip the touched shards' epochs back to even.
+    fn end_mutation_masked(&self, touched: &[bool]) {
+        for (s, &t) in self.shards.iter().zip(touched) {
+            if t {
+                s.epoch.fetch_add(1, Ordering::SeqCst);
+            }
         }
     }
 
@@ -325,13 +408,20 @@ impl ShardedForest {
             return (ForestDeleteReport { per_tree }, skipped, 0);
         }
 
-        // Phase 2: fan the whole accepted sequence out to every shard; each
-        // worker holds only its shard's write lock (plus a shared read lock
-        // on the immutable-row dataset). The seqlock bracket makes the
-        // in-flight state visible to optimistic readers.
-        self.begin_mutation();
+        // Phase 2: fan the accepted sequence out to the shards that own any
+        // of it; each worker holds only its shard's write lock (plus a
+        // shared read lock on the immutable-row dataset). The seqlock
+        // bracket makes the in-flight state visible to optimistic readers.
+        let (touched, unowned) = self.touched_shards(&accepted);
+        self.skipped_unowned.fetch_add(unowned, Ordering::SeqCst);
+        self.begin_mutation_masked(&touched);
         let per_shard: Vec<(Vec<DeleteReport>, u64)> =
-            scope_map(&self.shards, self.shards.len(), |_, shard| {
+            scope_map(&self.shards, self.shards.len(), |si, shard| {
+                // Occ(q): shards with no owning tree are skipped wholesale —
+                // no lock, no epoch movement, default (empty) reports.
+                if !touched[si] {
+                    return (vec![DeleteReport::default(); shard.len], 0);
+                }
                 let mut trees = shard.trees.write().unwrap();
                 let d = self.data.read().unwrap();
                 let mut deferred = 0u64;
@@ -341,6 +431,14 @@ impl ShardedForest {
                         let before = t.deferred_retrains();
                         let mut merged = DeleteReport::default();
                         for &id in &accepted {
+                            // A tree that never owned `id` skips the whole
+                            // op — no statistics walk, no mark, and no
+                            // budgeted drain (the unsharded `apply_delete`
+                            // gates in the same place, so the two budget
+                            // schedules cannot drift).
+                            if !owns(t.tree_seed, id, self.params.q) {
+                                continue;
+                            }
                             merged.merge(&match self.lazy {
                                 LazyPolicy::Eager => t.delete(&d, &self.params, id),
                                 _ => t.mark_delete(&d, &self.params, id),
@@ -362,13 +460,16 @@ impl ShardedForest {
             });
 
         // Phase 3: retire the instances and publish the new shard epochs.
+        // Instances leave the corpus even when no tree owned them (liveness
+        // is global); a zero-owner batch therefore moves no epochs — safe,
+        // because non-owning trees contribute no state or cost for the ids.
         {
             let mut d = self.data.write().unwrap();
             for &id in &accepted {
                 d.mark_removed(id);
             }
         }
-        self.end_mutation();
+        self.end_mutation_masked(&touched);
         let deferred: u64 = per_shard.iter().map(|(_, d)| d).sum();
         let per_tree: Vec<DeleteReport> = per_shard.into_iter().flat_map(|(r, _)| r).collect();
         (ForestDeleteReport { per_tree }, skipped, deferred)
@@ -391,15 +492,32 @@ impl ShardedForest {
             );
         }
         anyhow::ensure!(label <= 1, "label must be 0 or 1");
+        // Prospective id: `push_row` assigns sequential ids, so the new
+        // row's id is known before the bracket opens (the mutation mutex
+        // keeps n_total stable here) — needed to route the fan-out to
+        // owning shards only under Occ(q).
+        let id = { self.data.read().unwrap().n_total() as InstanceId };
+        let (touched, unowned) = self.touched_shards(std::slice::from_ref(&id));
+        self.skipped_unowned.fetch_add(unowned, Ordering::SeqCst);
         // The dataset row must exist before the trees index it, so the
         // bracket opens before push_row — optimistic readers retry across
         // the whole window.
-        self.begin_mutation();
-        let id = self.data.write().unwrap().push_row(row, label);
-        scope_map(&self.shards, self.shards.len(), |_, shard| {
+        self.begin_mutation_masked(&touched);
+        let pushed = self.data.write().unwrap().push_row(row, label);
+        debug_assert_eq!(pushed, id, "push_row ids must be sequential");
+        scope_map(&self.shards, self.shards.len(), |si, shard| {
+            if !touched[si] {
+                return;
+            }
             let mut trees = shard.trees.write().unwrap();
             let d = self.data.read().unwrap();
             for t in trees.iter_mut() {
+                // Occ(q): the instance joins each tree with probability q
+                // (same gate, including the budgeted-drain skip, as the
+                // unsharded `apply_add`).
+                if !owns(t.tree_seed, id, self.params.q) {
+                    continue;
+                }
                 match self.lazy {
                     LazyPolicy::Eager => {
                         t.add(&d, &self.params, id);
@@ -414,7 +532,7 @@ impl ShardedForest {
             }
             shard.refresh_pending(&trees);
         });
-        self.end_mutation();
+        self.end_mutation_masked(&touched);
         Ok(id)
     }
 
@@ -449,7 +567,15 @@ impl ShardedForest {
                 let flushed_before: u64 = trees.iter().map(|t| t.flushed_retrains()).sum();
                 let cost: u64 = trees
                     .iter_mut()
-                    .map(|t| t.delete_cost_flushed(&d, &self.params, id))
+                    .map(|t| {
+                        // Occ(q): a non-owning tree is costless for `id`
+                        // and must not flush — its backlog is unrelated.
+                        if owns(t.tree_seed, id, self.params.q) {
+                            t.delete_cost_flushed(&d, &self.params, id)
+                        } else {
+                            0
+                        }
+                    })
                     .sum();
                 let flushed_after: u64 = trees.iter().map(|t| t.flushed_retrains()).sum();
                 if flushed_after != flushed_before {
@@ -478,6 +604,7 @@ impl ShardedForest {
             let d = self.data.read().unwrap();
             trees
                 .iter()
+                .filter(|t| owns(t.tree_seed, id, self.params.q))
                 .map(|t| t.delete_cost(&d, &self.params, id))
                 .sum::<u64>()
         });
@@ -683,8 +810,8 @@ impl ShardedForest {
     pub fn validate(&self) -> anyhow::Result<()> {
         let _m = self.mutation.lock().unwrap();
         let d = self.data.read().unwrap();
-        let expect = d.live_ids(); // ascending
-        let mut ids = Vec::with_capacity(expect.len());
+        let live = d.live_ids(); // ascending
+        let mut ids = Vec::with_capacity(live.len());
         for s in &self.shards {
             let trees = s.trees.read().unwrap();
             let mut pending = 0u64;
@@ -692,19 +819,33 @@ impl ShardedForest {
                 let gt = s.start + k;
                 t.validate()?;
                 pending += t.dirty_len() as u64;
+                // Occ(q): each tree covers exactly the owned fraction of
+                // the live set (the whole set at q=1.0 — `owns`
+                // short-circuits without hashing).
+                let owned: Vec<InstanceId>;
+                let expect: &[InstanceId] = if self.params.subsampled() {
+                    owned = live
+                        .iter()
+                        .copied()
+                        .filter(|&i| owns(t.tree_seed, i, self.params.q))
+                        .collect();
+                    &owned
+                } else {
+                    &live
+                };
                 anyhow::ensure!(
-                    t.n() as usize == d.n_alive(),
-                    "tree {gt}: size {} != live instances {}",
+                    t.n() as usize == expect.len(),
+                    "tree {gt}: size {} != owned live instances {}",
                     t.n(),
-                    d.n_alive()
+                    expect.len()
                 );
                 ids.clear();
                 t.arena.collect_ids(t.arena.root(), None, &mut ids);
                 ids.sort_unstable();
                 anyhow::ensure!(
                     ids == expect,
-                    "tree {gt}: instance set diverged from the live set \
-                     (lost or duplicated ids across shards)"
+                    "tree {gt}: instance set diverged from its owned live \
+                     set (lost or duplicated ids across shards)"
                 );
             }
             anyhow::ensure!(
@@ -931,6 +1072,161 @@ mod tests {
         for (a, b) in snap.trees().iter().zip(eager.trees()) {
             assert!(a.structural_matches(b));
         }
+    }
+
+    fn subsampled_forest(n: usize, n_trees: usize, seed: u64, q: f64) -> DareForest {
+        let d = generate(
+            &SynthSpec {
+                n,
+                informative: 3,
+                redundant: 1,
+                noise: 2,
+                flip: 0.05,
+                ..Default::default()
+            },
+            seed,
+        );
+        DareForest::fit(
+            d,
+            &Params {
+                n_trees,
+                max_depth: 6,
+                k: 5,
+                d_rmax: 1,
+                ..Default::default()
+            }
+            .with_subsample(q),
+            seed ^ 0x5A5A,
+        )
+    }
+
+    #[test]
+    fn subsampled_store_is_bit_exact_and_routes_to_owning_shards_only() {
+        let q = 0.35;
+        let mut plain = subsampled_forest(240, 6, 41, q);
+        let sharded = ShardedForest::new(subsampled_forest(240, 6, 41, q), 3);
+        assert_eq!(sharded.subsample_q(), q);
+        let counts: Vec<u64> = plain.ownership_counts().iter().map(|&c| c as u64).collect();
+        assert_eq!(sharded.ownership_counts(), counts);
+        sharded.validate().unwrap();
+
+        // Mixed batch (owned in places, dead/oob): reports, skips, trees
+        // and costs must match the unsharded subsampled path bit-for-bit.
+        let ids = [4u32, 9, 77, 200, 999_999];
+        let (rs, skipped_s) = sharded.delete_batch(&ids);
+        let (rp, skipped_p) = plain.delete_batch(&ids);
+        assert_eq!(skipped_s, skipped_p);
+        assert_eq!(rs.per_tree.len(), rp.per_tree.len());
+        for (a, b) in rs.per_tree.iter().zip(&rp.per_tree) {
+            assert_eq!(a.retrain_events, b.retrain_events);
+            assert_eq!(a.thresholds_resampled, b.thresholds_resampled);
+        }
+        sharded.for_each_tree(|gt, t| {
+            assert!(t.structural_matches(&plain.trees()[gt]), "tree {gt} diverged");
+        });
+        sharded.validate().unwrap();
+        assert!(
+            sharded.unowned_skips() > 0,
+            "a q=0.35 batch over 6 trees must skip some (tree, id) pairs"
+        );
+        for id in [0u32, 7, 55, 120] {
+            assert_eq!(sharded.delete_cost(id).unwrap(), plain.delete_cost(id));
+        }
+        let rows: Vec<Vec<f32>> = (0..50u32).map(|i| plain.data().row(i)).collect();
+        assert_eq!(sharded.predict_proba_rows(&rows), plain.predict_proba_rows(&rows));
+
+        // Epoch routing: find a live id with mixed shard ownership and
+        // check that deleting it republishes exactly the owning shards.
+        // Ownership is a pure function of (tree_seed, id), so the expected
+        // routing is computable out-of-band.
+        let owner_mask = |id: InstanceId| -> Vec<bool> {
+            (0..sharded.n_shards())
+                .map(|si| {
+                    sharded.with_shard_trees(si, |_, trees| {
+                        trees.iter().any(|t| owns(t.tree_seed, id, q))
+                    })
+                })
+                .collect()
+        };
+        let target = (100u32..200)
+            .find(|&id| {
+                plain.data().is_alive(id) && {
+                    let m = owner_mask(id);
+                    m.iter().any(|&x| x) && m.iter().any(|&x| !x)
+                }
+            })
+            .expect("some live id must have mixed shard routing at q=0.35");
+        let expect_touch = owner_mask(target);
+        let before = sharded.shard_epochs();
+        sharded.delete_batch(&[target]);
+        plain.delete_batch(&[target]);
+        let after = sharded.shard_epochs();
+        for si in 0..sharded.n_shards() {
+            if expect_touch[si] {
+                assert_eq!(after[si], before[si] + 2, "owning shard {si} must republish");
+            } else {
+                assert_eq!(after[si], before[si], "non-owning shard {si} must not move");
+            }
+        }
+        sharded.for_each_tree(|gt, t| {
+            assert!(t.structural_matches(&plain.trees()[gt]));
+        });
+
+        // Adds route the same way: epochs move only on shards owning the
+        // prospective id, and the trees match the unsharded path.
+        let p = plain.data().n_features();
+        let row = vec![0.3f32; p];
+        let before = sharded.shard_epochs();
+        let id_s = sharded.add(&row, 1).unwrap();
+        let id_p = plain.add(&row, 1);
+        assert_eq!(id_s, id_p);
+        let expect_touch = owner_mask(id_s);
+        let after = sharded.shard_epochs();
+        for si in 0..sharded.n_shards() {
+            let want = before[si] + if expect_touch[si] { 2 } else { 0 };
+            assert_eq!(after[si], want, "add routed shard {si} wrong");
+        }
+        sharded.for_each_tree(|gt, t| {
+            assert!(t.structural_matches(&plain.trees()[gt]));
+        });
+        sharded.validate().unwrap();
+
+        // Snapshot (→ from_parts) revalidates ownership and round-trips.
+        let snap = sharded.snapshot();
+        assert_eq!(snap.params().q, q);
+        for (a, b) in snap.trees().iter().zip(plain.trees()) {
+            assert!(a.structural_matches(b));
+        }
+    }
+
+    #[test]
+    fn lazy_subsampled_store_drains_to_eager_bits() {
+        use crate::forest::lazy::LazyPolicy;
+        let q = 0.3;
+        let mut eager = subsampled_forest(220, 5, 43, q);
+        let lazy =
+            ShardedForest::new_with_policy(subsampled_forest(220, 5, 43, q), 2, LazyPolicy::OnRead);
+        let (rl, skipped_l) = lazy.delete_batch(&[1, 8, 40, 90]);
+        let (re, skipped_e) = eager.delete_batch(&[1, 8, 40, 90]);
+        assert_eq!(skipped_l, skipped_e);
+        for (a, b) in rl.per_tree.iter().zip(&re.per_tree) {
+            assert_eq!(a.retrain_events, b.retrain_events);
+        }
+        let p = eager.data().n_features();
+        let id_l = lazy.add(&vec![0.4; p], 1).unwrap();
+        let id_e = eager.add(&vec![0.4; p], 1);
+        assert_eq!(id_l, id_e);
+        for id in [3u32, 50, 77] {
+            assert_eq!(lazy.delete_cost(id).unwrap(), eager.delete_cost(id));
+        }
+        lazy.flush_all();
+        lazy.for_each_tree(|gt, t| {
+            assert!(
+                t.structural_matches(&eager.trees()[gt]),
+                "tree {gt} diverged after flush"
+            );
+        });
+        lazy.validate().unwrap();
     }
 
     #[test]

@@ -23,6 +23,14 @@
 //! lazy sink can materialize pending regions *before* the walk inspects or
 //! gathers them, which keeps every observable the walk reads — structure,
 //! gathered id order, RNG draws — identical to the eager path.
+//!
+//! Under Occ(q) subsampling (DESIGN.md §13) these walks are only ever
+//! entered for instances the tree *owns*: the ownership gate lives one
+//! layer up (`forest::forest::owns`, consulted by `DareForest` and the
+//! sharded store before dispatching), so within this module a tree's
+//! instance universe is its owned id set and nothing here changes — the
+//! same property that lets a q<1 tree be differentially tested against a
+//! from-scratch oracle trained on exactly its owned ids.
 
 use crate::data::dataset::InstanceId;
 use crate::forest::arena::{leaf_value, ArenaTree, Cold, NIL};

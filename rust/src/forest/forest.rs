@@ -70,6 +70,39 @@ pub fn tree_seed(forest_seed: u64, t: usize) -> u64 {
     mix_seed(&[forest_seed, t as u64, 0x7EEE])
 }
 
+/// Salt of the per-tree *ownership* stream (Occ(q) subsampling, DESIGN.md
+/// §13). Distinct from every split/resample stream salt, so ownership draws
+/// never perturb the training or Lemma-A.1 RNG sequences.
+const OWNERSHIP_SALT: u64 = 0x0CC5;
+
+/// Does the tree seeded `tree_seed` own instance `id` at subsample fraction
+/// `q` (paper-external: DynFrs Occ(q))? One draw from a dedicated
+/// counter-based stream keyed `(tree_seed, id, OWNERSHIP_SALT)` — a pure
+/// function of the tree seed and the instance id, so ownership needs no
+/// stored state: save/load, WAL replay and log-shipped followers all
+/// recompute the identical sets (DESIGN.md §13). `q >= 1.0` short-circuits
+/// without hashing — full ownership, the pre-Occ(q) behavior, bit for bit.
+#[inline]
+pub fn owns(tree_seed: u64, id: InstanceId, q: f64) -> bool {
+    if q >= 1.0 {
+        return true;
+    }
+    // Saturating f64→u64 cast: deterministic on every platform, and the
+    // comparison is strict-less-than so q→0⁺ owns (almost) nothing.
+    let threshold = (q * (u64::MAX as f64)) as u64;
+    mix_seed(&[tree_seed, id as u64, OWNERSHIP_SALT]) < threshold
+}
+
+/// The live instances owned by the tree seeded `tree_seed` — ascending id
+/// order, exactly the id set `DareTree::fit` trains on at fraction `q`.
+pub fn owned_live_ids(data: &Dataset, tree_seed: u64, q: f64) -> Vec<InstanceId> {
+    let mut ids = data.live_ids();
+    if q < 1.0 {
+        ids.retain(|&id| owns(tree_seed, id, q));
+    }
+    ids
+}
+
 /// Contiguous, near-even partition of `0..n_trees` into at most `n_shards`
 /// non-empty ranges (sizes differ by ≤ 1). Shard `s` owning a contiguous,
 /// ascending tree range is what lets the sharded coordinator reduce
@@ -135,13 +168,46 @@ impl DareForest {
     ) -> anyhow::Result<Self> {
         params.validate()?;
         anyhow::ensure!(!trees.is_empty(), "snapshot has no trees");
-        for t in &trees {
-            anyhow::ensure!(
-                t.n() as usize == data.n_alive(),
-                "tree size {} != live instances {}",
-                t.n(),
-                data.n_alive()
-            );
+        if params.subsampled() {
+            // Occ(q): every tree must hold exactly the live instances the
+            // ownership predicate assigns it — the id sets are re-derivable
+            // from (tree_seed, q), so a snapshot whose leaves disagree is
+            // corrupt (or was written under a different q) and is rejected
+            // up front rather than diverging on the first mutation.
+            let live = data.live_ids();
+            let mut ids = Vec::with_capacity(live.len());
+            for (i, t) in trees.iter().enumerate() {
+                let expect: Vec<InstanceId> = live
+                    .iter()
+                    .copied()
+                    .filter(|&id| owns(t.tree_seed, id, params.q))
+                    .collect();
+                anyhow::ensure!(
+                    t.n() as usize == expect.len(),
+                    "tree {i}: size {} != owned live instances {} (q={})",
+                    t.n(),
+                    expect.len(),
+                    params.q
+                );
+                ids.clear();
+                t.arena.collect_ids(t.arena.root(), None, &mut ids);
+                ids.sort_unstable();
+                anyhow::ensure!(
+                    ids == expect,
+                    "tree {i}: leaf id set disagrees with the Occ(q={}) \
+                     ownership predicate",
+                    params.q
+                );
+            }
+        } else {
+            for t in &trees {
+                anyhow::ensure!(
+                    t.n() as usize == data.n_alive(),
+                    "tree size {} != live instances {}",
+                    t.n(),
+                    data.n_alive()
+                );
+            }
         }
         Ok(DareForest {
             params,
@@ -200,6 +266,12 @@ impl DareForest {
     /// Apply one tree-level mutation under the current policy: eager
     /// retrain, mark-only, or mark + bounded drain. Shared by every
     /// forest-level mutation so the policies cannot drift.
+    ///
+    /// Occ(q) gate: a tree that does not own `id` is skipped *entirely* —
+    /// no statistics walk, no mark, no budgeted drain, no epoch bump — so
+    /// its state (and Lemma-A.1 stream position) is exactly that of a
+    /// single tree which never saw the op. The returned default report
+    /// keeps `per_tree` at forest arity.
     fn apply_delete(
         lazy: LazyPolicy,
         t: &mut DareTree,
@@ -207,6 +279,9 @@ impl DareForest {
         params: &Params,
         id: InstanceId,
     ) -> DeleteReport {
+        if !owns(t.tree_seed, id, params.q) {
+            return DeleteReport::default();
+        }
         match lazy {
             LazyPolicy::Eager => t.delete(data, params, id),
             LazyPolicy::OnRead => t.mark_delete(data, params, id),
@@ -225,6 +300,14 @@ impl DareForest {
         params: &Params,
         id: InstanceId,
     ) {
+        // Occ(q): the new instance joins each tree with probability q —
+        // the same stateless predicate the fit and delete paths consult.
+        // Under a lazy policy an *owned* add lands in the tree's DirtySet
+        // exactly like a deferred delete (mark_add); unowned trees skip
+        // the op wholesale.
+        if !owns(t.tree_seed, id, params.q) {
+            return;
+        }
         match lazy {
             LazyPolicy::Eager => {
                 t.add(data, params, id);
@@ -320,6 +403,7 @@ impl DareForest {
     pub fn delete_cost(&self, id: InstanceId) -> u64 {
         self.trees
             .iter()
+            .filter(|t| owns(t.tree_seed, id, self.params.q))
             .map(|t| t.delete_cost(&self.data, &self.params, id))
             .sum()
     }
@@ -331,6 +415,11 @@ impl DareForest {
         let data = &self.data;
         let params = &self.params;
         let costs = scope_map_mut(&mut self.trees, params.n_threads, |_, t| {
+            // Non-owning trees cost 0 by definition (deleting an instance
+            // a tree never saw is a no-op), so nothing needs flushing.
+            if !owns(t.tree_seed, id, params.q) {
+                return 0;
+            }
             t.delete_cost_flushed(data, params, id)
         });
         costs.into_iter().sum()
@@ -522,6 +611,19 @@ impl DareForest {
     pub fn mean_decision_nodes(&self) -> f64 {
         let total: usize = self.trees.iter().map(|t| t.shape().decision_nodes()).sum();
         total as f64 / self.trees.len() as f64
+    }
+
+    /// Per-tree owned-live-instance counts (Occ(q) telemetry; all equal to
+    /// `n_alive` at q = 1.0). One pass over the live set per tree.
+    pub fn ownership_counts(&self) -> Vec<usize> {
+        if !self.params.subsampled() {
+            return vec![self.data.n_alive(); self.trees.len()];
+        }
+        let live = self.data.live_ids();
+        self.trees
+            .iter()
+            .map(|t| live.iter().filter(|&&id| owns(t.tree_seed, id, self.params.q)).count())
+            .collect()
     }
 }
 
@@ -747,6 +849,97 @@ mod tests {
         assert!(f2.memory().total() > f1.memory().total());
         assert!(f1.data_bytes() > 0);
         assert!(f1.mean_decision_nodes() > 0.0);
+    }
+
+    #[test]
+    fn ownership_predicate_is_pure_and_calibrated() {
+        // Pure: same (seed, id, q) → same answer; q=1.0 owns everything
+        // without consuming a draw (short-circuit).
+        for id in 0..200u32 {
+            assert!(owns(42, id, 1.0));
+            assert_eq!(owns(42, id, 0.3), owns(42, id, 0.3));
+        }
+        // Monotone in q: an id owned at q must be owned at every q' > q
+        // (same hash, larger threshold).
+        for id in 0..500u32 {
+            if owns(7, id, 0.2) {
+                assert!(owns(7, id, 0.6), "ownership must be monotone in q");
+            }
+        }
+        // Calibrated: the owned fraction of a large id range is ~q.
+        for q in [0.1f64, 0.3, 0.7] {
+            let owned = (0..20_000u32).filter(|&id| owns(99, id, q)).count();
+            let frac = owned as f64 / 20_000.0;
+            assert!(
+                (frac - q).abs() < 0.02,
+                "owned fraction {frac} far from q={q}"
+            );
+        }
+    }
+
+    #[test]
+    fn subsampled_trees_own_disjoint_work() {
+        let train = data(300, 44);
+        let params = Params {
+            q: 0.4,
+            ..small_params(6)
+        };
+        let mut f = DareForest::fit(train, &params, 23);
+        // Every tree's size equals its owned-live count.
+        let counts = f.ownership_counts();
+        for (t, tree) in f.trees().iter().enumerate() {
+            assert_eq!(tree.n() as usize, counts[t]);
+        }
+        // Deleting an instance bumps epochs only on owning trees.
+        let id = f.live_ids()[0];
+        let owners: Vec<bool> =
+            f.trees().iter().map(|t| owns(t.tree_seed, id, 0.4)).collect();
+        let before: Vec<u64> = f.trees().iter().map(|t| t.epoch).collect();
+        let r = f.delete_seq(id).unwrap();
+        assert_eq!(r.per_tree.len(), 6);
+        for (t, tree) in f.trees().iter().enumerate() {
+            if owners[t] {
+                assert_eq!(tree.epoch, before[t] + 1, "owner {t} must retrain");
+            } else {
+                assert_eq!(tree.epoch, before[t], "non-owner {t} must not move");
+                assert_eq!(r.per_tree[t].retrain_events.len(), 0);
+                assert_eq!(r.per_tree[t].thresholds_resampled, 0);
+            }
+        }
+        // Adds join each owning tree only.
+        let p = f.data().n_features();
+        let new_id = f.add(&vec![0.1; p], 1);
+        for tree in f.trees() {
+            let expect = owned_live_ids(f.data(), tree.tree_seed, 0.4).len();
+            assert_eq!(tree.n() as usize, expect);
+            tree.validate().unwrap();
+            let _ = new_id;
+        }
+        // Unowned-everywhere cost is 0 even though the id is live.
+        if let Some(&orphan) = f
+            .live_ids()
+            .iter()
+            .find(|&&i| f.trees().iter().all(|t| !owns(t.tree_seed, i, 0.4)))
+        {
+            assert_eq!(f.delete_cost(orphan), 0);
+        }
+    }
+
+    #[test]
+    fn q1_fit_is_identical_to_default_fit() {
+        let train = data(200, 55);
+        let f_default = DareForest::fit(train.clone(), &small_params(4), 9);
+        let f_q1 = DareForest::fit(
+            train,
+            &Params {
+                q: 1.0,
+                ..small_params(4)
+            },
+            9,
+        );
+        for (a, b) in f_default.trees().iter().zip(f_q1.trees()) {
+            assert!(a.structural_matches(b), "q=1.0 must not change any stream");
+        }
     }
 
     #[test]

@@ -35,6 +35,15 @@
 //! consistent), so `ArenaTree::validate` passes mid-deferral and ancestors'
 //! count invariants hold; only the [`DirtySet`] distinguishes them from
 //! final leaves.
+//!
+//! **Occ(q) add-tagging (DESIGN.md §13).** Under subsampled ownership the
+//! forest layer gates every mutation on `owns(tree_seed, id, q)` *before*
+//! these hooks run: a non-owning tree never marks, never accrues dirty
+//! entries for the op, and never spends budgeted drain on it. An *owned*
+//! add under a lazy policy lands here as a pending subtree exactly like a
+//! deferred delete (`mark_add`), so the DynFrs compounding — most trees
+//! skip the op outright, owning trees defer it — needs no new machinery in
+//! this module; the per-tree dirty sets only ever hold owned work.
 
 use crate::data::dataset::{Dataset, InstanceId};
 use crate::forest::arena::{ArenaTree, Cold, NIL};

@@ -18,7 +18,7 @@ pub mod workspace;
 
 pub use arena::{ArenaTree, HotPlane};
 pub use delete::{DeleteReport, RetrainEvent};
-pub use forest::{DareForest, ForestDeleteReport};
+pub use forest::{owned_live_ids, owns, DareForest, ForestDeleteReport};
 pub use lazy::{DirtySet, LazyPolicy};
 pub use node::{Node, NodeMemory, TreeShape};
 pub use params::{MaxFeatures, Params, SplitCriterion};

@@ -63,6 +63,13 @@ pub struct Params {
     /// Worker threads for per-tree parallelism (1 ⇒ sequential, matching the
     /// paper's single-threaded timing protocol).
     pub n_threads: usize,
+    /// Occ(q) subsample fraction (DynFrs, arXiv 2410.01588; DESIGN.md §13):
+    /// each tree *owns* every instance independently with probability `q`,
+    /// trains on exactly its owned ids, and skips mutations of instances it
+    /// does not own. `1.0` (the default) is full ownership — every code
+    /// path, RNG stream and serialized byte is identical to the pre-Occ(q)
+    /// forest. Must be in (0, 1].
+    pub q: f64,
 }
 
 impl Default for Params {
@@ -76,6 +83,7 @@ impl Default for Params {
             max_features: MaxFeatures::Sqrt,
             min_samples_split: 2,
             n_threads: 1,
+            q: 1.0,
         }
     }
 }
@@ -113,6 +121,19 @@ impl Params {
         self
     }
 
+    /// Occ(q) subsampling: own each instance with probability `q`.
+    pub fn with_subsample(mut self, q: f64) -> Self {
+        self.q = q;
+        self
+    }
+
+    /// Whether per-tree ownership is a strict subset of the corpus (the
+    /// ownership predicate short-circuits to `true` when this is false).
+    #[inline]
+    pub fn subsampled(&self) -> bool {
+        self.q < 1.0
+    }
+
     /// Sanity-check invariants; call before fitting.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.n_trees >= 1, "n_trees must be >= 1");
@@ -125,6 +146,11 @@ impl Params {
             self.max_depth
         );
         anyhow::ensure!(self.min_samples_split >= 2, "min_samples_split must be >= 2");
+        anyhow::ensure!(
+            self.q > 0.0 && self.q <= 1.0 && self.q.is_finite(),
+            "subsample fraction q ({}) must be in (0, 1]",
+            self.q
+        );
         Ok(())
     }
 }
@@ -167,6 +193,16 @@ mod tests {
             ..Default::default()
         };
         assert!(bad2.validate().is_err());
+        for q in [0.0, -0.1, 1.5, f64::NAN] {
+            let bad_q = Params {
+                q,
+                ..Default::default()
+            };
+            assert!(bad_q.validate().is_err(), "q={q} must be rejected");
+        }
+        assert!(Params::default().with_subsample(0.3).validate().is_ok());
+        assert!(!Params::default().subsampled());
+        assert!(Params::default().with_subsample(0.3).subsampled());
     }
 
     #[test]

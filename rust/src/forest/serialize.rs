@@ -18,6 +18,13 @@ use crate::util::json::{parse, Value};
 /// (the wire API's `load` op rejects snapshots with a different tag).
 pub const SNAPSHOT_FORMAT: &str = "dare-forest-v1";
 
+/// Schema tag for Occ(q)-subsampled forests (DESIGN.md §13). A q<1 snapshot
+/// carries a `q` params key that a v1 reader would silently drop — and with
+/// it the ownership gating that makes per-tree instance sets a strict subset
+/// of the corpus — so subsampled snapshots get their own tag, while q=1.0
+/// forests keep emitting byte-identical v1 snapshots.
+pub const SNAPSHOT_FORMAT_V2: &str = "dare-forest-v2";
+
 /// u64 values (seeds) exceed f64's exact-integer range; encode as strings.
 fn set_u64(o: &mut Value, key: &str, v: u64) {
     o.set(key, v.to_string());
@@ -242,6 +249,11 @@ fn params_to_json(p: &Params) -> Value {
         )
         .set("min_samples_split", p.min_samples_split)
         .set("n_threads", p.n_threads);
+    // Emitted only when subsampled: q=1.0 snapshots must stay byte-identical
+    // to the pre-Occ(q) format (acceptance bar for DESIGN.md §13).
+    if p.subsampled() {
+        o.set("q", p.q);
+    }
     o
 }
 
@@ -270,6 +282,9 @@ fn params_from_json(v: &Value) -> anyhow::Result<Params> {
         max_features: mf,
         min_samples_split: get("min_samples_split")?,
         n_threads: get("n_threads").unwrap_or(1),
+        // Absent in every v1 snapshot (full ownership); `from_parts` then
+        // revalidates the declared q against each tree's leaf id sets.
+        q: v.get("q").and_then(|x| x.as_f64()).unwrap_or(1.0),
     })
 }
 
@@ -381,7 +396,14 @@ pub fn forest_to_json(f: &DareForest) -> String {
         })
         .collect();
     let mut o = Value::obj();
-    o.set("format", SNAPSHOT_FORMAT);
+    o.set(
+        "format",
+        if f.params().subsampled() {
+            SNAPSHOT_FORMAT_V2
+        } else {
+            SNAPSHOT_FORMAT
+        },
+    );
     set_u64(&mut o, "seed", f.seed());
     o.set("params", params_to_json(f.params()))
         .set("trees", Value::Arr(trees))
@@ -392,9 +414,10 @@ pub fn forest_to_json(f: &DareForest) -> String {
 /// Deserialize a forest from JSON produced by [`forest_to_json`].
 pub fn forest_from_json(s: &str) -> anyhow::Result<DareForest> {
     let v = parse(s).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let format = v.get("format").and_then(|x| x.as_str());
     anyhow::ensure!(
-        v.get("format").and_then(|x| x.as_str()) == Some(SNAPSHOT_FORMAT),
-        "unknown snapshot format (expected '{SNAPSHOT_FORMAT}')"
+        format == Some(SNAPSHOT_FORMAT) || format == Some(SNAPSHOT_FORMAT_V2),
+        "unknown snapshot format (expected '{SNAPSHOT_FORMAT}' or '{SNAPSHOT_FORMAT_V2}')"
     );
     let params = params_from_json(v.get("params").ok_or_else(|| anyhow::anyhow!("params"))?)?;
     let seed = get_u64(&v, "seed")?;
@@ -562,6 +585,58 @@ mod tests {
         // Params failing their own validation (zero trees).
         let zero_trees = good.replace("\"n_trees\":3", "\"n_trees\":0");
         assert!(forest_from_json(&zero_trees).is_err());
+    }
+
+    #[test]
+    fn full_ownership_snapshots_keep_the_v1_format_byte_for_byte() {
+        // q=1.0 must serialize exactly as before Occ(q) existed: v1 tag,
+        // no "q" key anywhere in the params object.
+        let json = forest_to_json(&forest());
+        assert!(json.contains("\"format\":\"dare-forest-v1\""), "got: {json}");
+        assert!(!json.contains("\"q\":"), "q key leaked into a v1 snapshot");
+    }
+
+    #[test]
+    fn subsampled_roundtrip_preserves_ownership() {
+        let data = generate(
+            &SynthSpec {
+                n: 150,
+                informative: 3,
+                redundant: 0,
+                noise: 2,
+                flip: 0.05,
+                ..Default::default()
+            },
+            5,
+        );
+        let params = Params {
+            n_trees: 4,
+            max_depth: 5,
+            k: 5,
+            ..Default::default()
+        }
+        .with_subsample(0.4);
+        let mut f = DareForest::fit(data, &params, 77);
+        f.delete(3).unwrap();
+        let p = f.data().n_features();
+        f.add(&vec![0.5; p], 1);
+
+        let json = forest_to_json(&f);
+        assert!(json.contains("\"format\":\"dare-forest-v2\""), "got tag: {json}");
+        assert!(json.contains("\"q\":0.4"), "q missing from params");
+        // The loader runs `from_parts`' ownership validation: every tree's
+        // leaf id set must equal {live} ∩ owns(tree_seed, ·, q).
+        let back = forest_from_json(&json).unwrap();
+        assert_eq!(back.params().q, 0.4);
+        for (a, b) in f.trees().iter().zip(back.trees()) {
+            assert!(a.structural_matches(b));
+        }
+        let rows: Vec<Vec<f32>> = (0..20u32).map(|i| f.data().row(i)).collect();
+        assert_eq!(f.predict_proba_rows(&rows), back.predict_proba_rows(&rows));
+
+        // Tampering with the declared q breaks the predicate check.
+        let lying = json.replace("\"q\":0.4", "\"q\":0.9");
+        assert!(forest_from_json(&lying).is_err(), "wrong q must be rejected");
     }
 
     #[test]

@@ -14,8 +14,9 @@ use crate::forest::delete::DeleteReport;
 use crate::forest::lazy::{DirtySet, LazySink};
 use crate::forest::node::{Node, NodeMemory, TreeShape};
 use crate::forest::params::Params;
-use crate::forest::train::TrainCtx;
-use crate::forest::workspace::train_tree;
+use crate::forest::forest::owned_live_ids;
+use crate::forest::train::{TrainCtx, ROOT_PATH};
+use crate::forest::workspace::{train_subtree, train_tree};
 
 /// One DaRE tree plus its seed and update counter.
 #[derive(Clone, Debug)]
@@ -35,9 +36,25 @@ impl DareTree {
     /// Train on the live instances of `data` (paper Alg. 1), via the
     /// sort-free workspace (bit-exact with the plain path; DESIGN.md §6),
     /// then graft the result into a fresh BFS-compact arena.
+    ///
+    /// Under Occ(q) subsampling (`params.q < 1.0`; DESIGN.md §13) the tree
+    /// trains on exactly its *owned* live ids — the stateless per-tree
+    /// ownership predicate keyed by `tree_seed`. At q = 1.0 the owned set
+    /// is the live set and this is byte-identical to the pre-Occ(q) path
+    /// (same `train_tree` call, no ownership draws).
     pub fn fit(data: &Dataset, params: &Params, tree_seed: u64) -> Self {
+        let root = if params.subsampled() {
+            let ctx = TrainCtx {
+                data,
+                params,
+                tree_seed,
+            };
+            train_subtree(&ctx, owned_live_ids(data, tree_seed, params.q), 0, ROOT_PATH)
+        } else {
+            train_tree(data, params, tree_seed)
+        };
         DareTree {
-            arena: ArenaTree::from_node(train_tree(data, params, tree_seed)),
+            arena: ArenaTree::from_node(root),
             tree_seed,
             epoch: 0,
             dirty: DirtySet::default(),

@@ -250,3 +250,66 @@ fn lifecycle_create_save_drop_load_roundtrip() {
     svc.registry().get("tenant2").unwrap().sharded().validate().unwrap();
     std::fs::remove_file(&path).ok();
 }
+
+/// ISSUE 8: a subsampled tenant end to end through the wire — create with
+/// `"q"`, stats surfaces the ownership fields, mutations route through the
+/// Occ(q) gates, and a save/load roundtrip (the v2 snapshot format)
+/// serves byte-identical predictions.
+#[test]
+fn lifecycle_of_a_subsampled_tenant_over_the_wire() {
+    let svc = fresh_service();
+    let r = svc.handle(&req(
+        r#"{"v":1,"model":"occ","op":"create","dataset":"twitter","scale":2000,"seed":5,"trees":4,"depth":5,"k":5,"q":0.25}"#,
+    ));
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+
+    // stats reports the subsample fraction and per-tree ownership mass
+    let r = svc.handle(&req(r#"{"v":1,"model":"occ","op":"stats"}"#));
+    assert_eq!(r.get("subsample_q").unwrap().as_f64(), Some(0.25));
+    let owned = r.get("owned_per_tree").unwrap().as_arr().unwrap();
+    assert_eq!(owned.len(), 4);
+    let mean = owned.iter().filter_map(Value::as_f64).sum::<f64>() / 4.0;
+    let n_alive = r.get("n_alive").unwrap().as_f64().unwrap();
+    assert!(
+        (mean / n_alive - 0.25).abs() < 0.05,
+        "mean owned fraction {} strays from q=0.25",
+        mean / n_alive
+    );
+
+    // mutations route through the ownership gates; skips are observable
+    svc.handle(&req(r#"{"v":1,"model":"occ","op":"delete","ids":[0,1,2,3,4,5,6,7]}"#));
+    let r = svc.handle(&req(r#"{"v":1,"model":"occ","op":"stats"}"#));
+    assert!(
+        r.get("unowned_skips").unwrap().as_u64().unwrap() > 0,
+        "8 deletions at q=0.25 over 4 trees must skip some (tree, id) pairs"
+    );
+
+    // save/load roundtrip (v2 snapshot): byte-identical predictions and a
+    // store that still validates against the ownership predicate
+    let occ_p = svc.registry().get("occ").unwrap().n_features();
+    let probe = vec!["0.25"; occ_p].join(",");
+    let before = svc.handle(&req(&format!(
+        r#"{{"v":1,"model":"occ","op":"predict","rows":[[{probe}]]}}"#
+    )));
+    let path = std::env::temp_dir().join("dare_api_compat_subsampled.json");
+    svc.handle(&req(&format!(
+        r#"{{"v":1,"model":"occ","op":"save","path":"{}"}}"#,
+        path.display()
+    )));
+    let saved = std::fs::read_to_string(&path).unwrap();
+    assert!(saved.contains("dare-forest-v2"), "q<1 snapshots use the v2 tag");
+    svc.handle(&req(r#"{"v":1,"model":"occ","op":"drop"}"#));
+    let r = svc.handle(&req(&format!(
+        r#"{{"v":1,"model":"occ2","op":"load","path":"{}"}}"#,
+        path.display()
+    )));
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+    let after = svc.handle(&req(&format!(
+        r#"{{"v":1,"model":"occ2","op":"predict","rows":[[{probe}]]}}"#
+    )));
+    assert_eq!(before.to_string(), after.to_string());
+    let m = svc.registry().get("occ2").unwrap();
+    assert_eq!(m.sharded().subsample_q(), 0.25);
+    m.sharded().validate().unwrap();
+    std::fs::remove_file(&path).ok();
+}

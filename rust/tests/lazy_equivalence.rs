@@ -200,6 +200,71 @@ fn flush_order_is_irrelevant() {
     assert_eq!(ja, forest_to_json(&c), "read-driven drain diverged from flush-all");
 }
 
+/// ISSUE 8: Occ(q) add-tagging (DESIGN.md §13). Under a lazy policy an
+/// *add* owned by a tree lands as pending subtree work in the dirty set —
+/// non-owning trees record nothing at all — and draining that backlog, in
+/// any order, must land on the same bytes as applying every add eagerly.
+/// Grid: q ∈ {0.3, 1.0} × {OnRead, Budgeted(2)} × three drain orders
+/// (flush-all, single-step compaction, read-driven then flush-all).
+#[test]
+fn lazy_add_tagging_drains_to_eager_bytes_across_q() {
+    for q in [0.3, 1.0] {
+        for policy in [LazyPolicy::OnRead, LazyPolicy::Budgeted(2)] {
+            let mut rng = Rng::new(mix_seed(&[0xADD, q.to_bits()]));
+            let data = random_dataset(&mut rng, 140, 5);
+            let params = grid_params(1, SplitCriterion::Gini).with_subsample(q);
+
+            // Add-heavy sequence: 18 adds interleaved with 6 deletes. Each
+            // forest replays it from a fresh rng with the same seed, so all
+            // legs see the identical op stream.
+            let drive = |f: &mut DareForest| {
+                let mut ops = Rng::new(0x0CC_ADD);
+                for i in 0..24 {
+                    if i % 4 == 3 {
+                        let live = f.live_ids();
+                        let id = live[ops.index(live.len())];
+                        f.delete_seq(id).unwrap();
+                    } else {
+                        let row: Vec<f32> = (0..5).map(|_| ops.range_f32(-4.0, 4.0)).collect();
+                        f.add(&row, ops.bernoulli(0.5) as u8);
+                    }
+                }
+            };
+
+            let mut eager = DareForest::fit(data.clone(), &params, 55);
+            drive(&mut eager);
+
+            let build = || {
+                let mut f = DareForest::fit(data.clone(), &params, 55);
+                f.set_lazy_policy(policy);
+                drive(&mut f);
+                f
+            };
+            let mut a = build();
+            let mut b = build();
+            let mut c = build();
+            a.flush_all();
+            while b.compact(1) > 0 {}
+            let rows: Vec<Vec<f32>> =
+                (0..25u32).map(|i| c.data().row(i)).collect();
+            c.predict_proba_rows_flushed(&rows);
+            c.flush_all();
+
+            let je = forest_to_json(&eager);
+            for (name, f) in [("flush-all", &a), ("compact(1)", &b), ("read-driven", &c)] {
+                assert_eq!(
+                    je,
+                    forest_to_json(f),
+                    "q={q} {policy:?}: {name} drain diverged from the eager path"
+                );
+                for t in f.trees() {
+                    t.validate().unwrap();
+                }
+            }
+        }
+    }
+}
+
 /// The deferral counters tell a coherent story: marks raise
 /// `dirty_subtrees`/`deferred_retrains`, reads and flushes lower the
 /// backlog, and eager mode never defers.

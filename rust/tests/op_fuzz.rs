@@ -46,7 +46,7 @@ use dare::forest::delete::DeleteReport;
 use dare::forest::forest::tree_seed;
 use dare::forest::serialize::forest_to_json;
 use dare::forest::train::{train, TrainCtx, ROOT_PATH};
-use dare::forest::{DareForest, LazyPolicy, MaxFeatures, Node, Params};
+use dare::forest::{owned_live_ids, owns, DareForest, LazyPolicy, MaxFeatures, Node, Params};
 use dare::util::prop::{gen_feature_column, gen_labels};
 use dare::util::rng::{mix_seed, Rng};
 
@@ -104,7 +104,10 @@ impl Harness {
                     params: &params,
                     tree_seed: ts,
                 };
-                train(&ctx, data.live_ids(), 0, ROOT_PATH)
+                // Occ(q): each oracle trains from scratch on exactly its
+                // owned ids (the full live set at q=1.0 — `owned_live_ids`
+                // is the identity there, preserving the original leg).
+                train(&ctx, owned_live_ids(&data, ts, params.q), 0, ROOT_PATH)
             })
             .collect();
         let arena = DareForest::fit(data.clone(), &params, forest_seed);
@@ -179,6 +182,14 @@ impl Harness {
         // (a) boxed oracle
         let mut boxed_reports = Vec::with_capacity(self.boxed_trees.len());
         for t in 0..self.boxed_trees.len() {
+            // Occ(q): a non-owning oracle never sees the op — and,
+            // critically, does not advance its epoch, exactly like the
+            // gated production paths, so the Lemma-A.1 RNG streams of all
+            // later owned deletions stay aligned.
+            if !owns(self.tree_seeds[t], id, self.params.q) {
+                boxed_reports.push(DeleteReport::default());
+                continue;
+            }
             let ctx = TrainCtx {
                 data: &self.boxed_data,
                 params: &self.params,
@@ -213,6 +224,11 @@ impl Harness {
         // (a) boxed oracle
         let id = self.boxed_data.push_row(row, label);
         for t in 0..self.boxed_trees.len() {
+            // Occ(q): the instance joins each oracle with probability q —
+            // the same stateless predicate the production add paths gate on.
+            if !owns(self.tree_seeds[t], id, self.params.q) {
+                continue;
+            }
             let ctx = TrainCtx {
                 data: &self.boxed_data,
                 params: &self.params,
@@ -235,6 +251,10 @@ impl Harness {
     fn check_delete_cost(&mut self, id: u32) {
         let c_boxed: u64 = (0..self.boxed_trees.len())
             .map(|t| {
+                // Occ(q): non-owning trees are costless for `id`.
+                if !owns(self.tree_seeds[t], id, self.params.q) {
+                    return 0;
+                }
                 let ctx = TrainCtx {
                     data: &self.boxed_data,
                     params: &self.params,
@@ -287,6 +307,14 @@ fn fuzz_seeds() -> Vec<u64> {
 }
 
 fn run_case(seed: u64) {
+    run_case_at_q(seed, 1.0);
+}
+
+/// One fuzzed interleaving at subsample fraction `q`. The rng stream does
+/// not depend on `q`, so every q runs the *same* dataset and op sequence —
+/// only ownership differs — and `q = 1.0` is literally the original case
+/// (`with_subsample(1.0)` leaves `Params` at its default).
+fn run_case_at_q(seed: u64, q: f64) {
     let mut rng = Rng::new(mix_seed(&[seed, 0xF0_22]));
     let n = 70 + rng.index(80);
     let p = 3 + rng.index(3);
@@ -298,7 +326,8 @@ fn run_case(seed: u64) {
         k: 2 + rng.index(6),
         d_rmax: rng.index(3).min(max_depth),
         ..Default::default()
-    };
+    }
+    .with_subsample(q);
     let n_shards = 1 + rng.index(4);
     // Alternate lazy policies across the pinned seed list so both deferral
     // modes fuzz under every parameter mix.
@@ -365,7 +394,7 @@ fn run_case(seed: u64) {
         }
         if op == ops - 1 {
             h.sharded.validate().unwrap_or_else(|e| {
-                panic!("seed {seed}: sharded store inconsistent after final op: {e}")
+                panic!("seed {seed} q {q}: sharded store inconsistent after final op: {e}")
             });
         }
     }
@@ -382,6 +411,59 @@ fn op_sequences_are_bit_exact_across_boxed_arena_and_sharded() {
         // DARE_FUZZ_SEEDS=<seed>.
         run_case(seed);
     }
+}
+
+/// ISSUE 8: the Occ(q) subsampling leg. The same fuzzed interleavings run
+/// at q ∈ {0.1, 0.3, 1.0} against T independent single-tree oracles, each
+/// trained from scratch on exactly its owned ids and gated per op on the
+/// same stateless ownership predicate the production paths consult — a
+/// non-owning oracle never sees the op and never advances its epoch. Every
+/// structure, DeleteReport, cost, and prediction must stay bit-equal across
+/// all four legs (boxed / arena / sharded / lazy), and q=1.0 re-runs the
+/// exact original path (pinned byte-identical below).
+#[test]
+fn subsampled_op_sequences_match_per_tree_owned_oracles() {
+    for seed in fuzz_seeds() {
+        for q in [0.1, 0.3, 1.0] {
+            run_case_at_q(seed, q);
+        }
+    }
+}
+
+/// `with_subsample(1.0)` is not "almost" the default path — it IS the
+/// default path: fits, deletions, adds, and the serialized forest are
+/// byte-identical to a forest built from untouched default `Params`.
+#[test]
+fn q1_subsampled_path_is_byte_identical_to_the_default_path() {
+    let mut rng = Rng::new(mix_seed(&[7, 0x0CC5]));
+    let data = random_dataset(&mut rng, 120, 4);
+    let base = Params {
+        n_trees: 3,
+        max_depth: 5,
+        k: 4,
+        d_rmax: 1,
+        ..Default::default()
+    };
+    let mut a = DareForest::fit(data.clone(), &base, 99);
+    let mut b = DareForest::fit(data, &base.clone().with_subsample(1.0), 99);
+    for id in [3u32, 40, 77] {
+        let ra = a.delete(id).unwrap();
+        let rb = b.delete(id).unwrap();
+        assert_eq!(ra.cost(), rb.cost());
+        for (x, y) in ra.per_tree.iter().zip(&rb.per_tree) {
+            assert_reports_eq(x, y, "q=1.0 delete");
+        }
+    }
+    let p = a.data().n_features();
+    for i in 0..3 {
+        let row = vec![0.3 * i as f32; p];
+        assert_eq!(a.add(&row, (i % 2) as u8), b.add(&row, (i % 2) as u8));
+    }
+    assert_eq!(
+        forest_to_json(&a),
+        forest_to_json(&b),
+        "q=1.0 must serialize byte-identically to the default path"
+    );
 }
 
 /// ISSUE 5: the registry differential — two models served by ONE

@@ -1,0 +1,254 @@
+//! ISSUE 8: Occ(q) ownership invariants (DESIGN.md §13) as seeded property
+//! tests over the stateless predicate `owns(tree_seed, id, q)`:
+//!
+//! 1. **Binomial mass** — each instance is owned by a Binomial(T, q)
+//!    number of trees (tolerance-banded means, per-tree calibration, and
+//!    monotonicity in q).
+//! 2. **Non-owner isolation** — deleting an instance leaves every
+//!    non-owning tree's arena untouched: epoch unchanged, serialized bytes
+//!    unchanged.
+//! 3. **Persistence** — ownership survives save/load (the loader
+//!    revalidates every tree's leaf id set against the predicate) and lazy
+//!    flush-order permutations (drain orders land on byte-identical
+//!    forests).
+//! 4. **Zero-cost unowned ids** — `delete_cost` of an instance owned by no
+//!    tree is exactly 0, on both the forest and the sharded store, and
+//!    deleting it moves no tree epoch and no shard epoch.
+
+use dare::coordinator::ShardedForest;
+use dare::data::dataset::{Dataset, InstanceId};
+use dare::forest::forest::tree_seed;
+use dare::forest::serialize::{forest_to_json, load, save};
+use dare::forest::{owned_live_ids, owns, DareForest, LazyPolicy, Params};
+use dare::util::json::parse;
+use dare::util::prop::{gen_feature_column, gen_labels};
+use dare::util::rng::{mix_seed, Rng};
+
+fn random_dataset(rng: &mut Rng, n: usize, p: usize) -> Dataset {
+    let cols: Vec<Vec<f32>> = (0..p)
+        .map(|_| gen_feature_column(rng, n, 0.3, 4.0))
+        .collect();
+    let labels = gen_labels(rng, n, 0.25 + 0.5 * rng.f64());
+    Dataset::from_columns(cols, labels)
+}
+
+fn params(n_trees: usize, q: f64) -> Params {
+    Params {
+        n_trees,
+        max_depth: 6,
+        k: 5,
+        ..Default::default()
+    }
+    .with_subsample(q)
+}
+
+#[test]
+fn ownership_mass_is_binomial_in_the_tree_count() {
+    const T: usize = 40;
+    const IDS: u32 = 2_000;
+    let seeds: Vec<u64> = (0..T).map(|t| tree_seed(0xB10_0D, t)).collect();
+    for q in [0.1, 0.3, 0.5] {
+        // Mean owners per instance ≈ qT (Binomial mean; se of the sample
+        // mean over 2000 ids is ~0.07 trees, the band is ±0.5).
+        let mut total_owned = 0usize;
+        for id in 0..IDS {
+            total_owned += seeds.iter().filter(|&&ts| owns(ts, id, q)).count();
+        }
+        let mean = total_owned as f64 / IDS as f64;
+        assert!(
+            (mean - q * T as f64).abs() < 0.5,
+            "q={q}: mean owners/instance {mean} strays from {}",
+            q * T as f64
+        );
+        // Per-tree calibration: each tree owns ≈ q of the corpus
+        // (2000 draws → se ≈ 0.011 at q=0.5; band ±0.05).
+        for &ts in &seeds {
+            let frac = (0..IDS).filter(|&id| owns(ts, id, q)).count() as f64 / IDS as f64;
+            assert!(
+                (frac - q).abs() < 0.05,
+                "tree seed {ts}: owned fraction {frac} strays from q={q}"
+            );
+        }
+    }
+    // Monotone in q (shared hash, growing threshold): an owner at q stays
+    // an owner at every larger q, and q=1.0 owns everything.
+    for id in 0..200u32 {
+        for &ts in seeds.iter().take(5) {
+            let mut prev = false;
+            for q in [0.1, 0.3, 0.5, 0.9, 1.0] {
+                let now = owns(ts, id, q);
+                assert!(now || !prev, "ownership must be monotone in q");
+                prev = now;
+            }
+            assert!(owns(ts, id, 1.0));
+        }
+    }
+}
+
+/// Per-tree JSON objects of a serialized forest (epoch + full structure),
+/// so byte-level "untouched" is checkable tree by tree.
+fn tree_bytes(f: &DareForest) -> Vec<String> {
+    let v = parse(&forest_to_json(f)).unwrap();
+    v.get("trees")
+        .and_then(|t| t.as_arr())
+        .unwrap()
+        .iter()
+        .map(|t| t.to_string())
+        .collect()
+}
+
+#[test]
+fn deleting_an_instance_leaves_non_owning_trees_untouched() {
+    let q = 0.3;
+    let mut rng = Rng::new(mix_seed(&[0x0CC, 1]));
+    let data = random_dataset(&mut rng, 160, 5);
+    let mut f = DareForest::fit(data, &params(8, q), 9001);
+
+    // Pick a live id with mixed ownership so both branches are exercised.
+    let target = (0..160u32)
+        .find(|&id| {
+            let owners = f.trees().iter().filter(|t| owns(t.tree_seed, id, q)).count();
+            owners > 0 && owners < f.n_trees()
+        })
+        .expect("some id must have mixed ownership at q=0.3 over 8 trees");
+    let owners: Vec<bool> = f
+        .trees()
+        .iter()
+        .map(|t| owns(t.tree_seed, target, q))
+        .collect();
+
+    let epochs_before: Vec<u64> = f.trees().iter().map(|t| t.epoch).collect();
+    let bytes_before = tree_bytes(&f);
+    let report = f.delete(target).unwrap().per_tree;
+    let bytes_after = tree_bytes(&f);
+
+    assert_eq!(report.len(), f.n_trees(), "report arity must stay T");
+    for (t, owned) in owners.iter().enumerate() {
+        if *owned {
+            assert_eq!(
+                f.trees()[t].epoch,
+                epochs_before[t] + 1,
+                "owning tree {t} must advance its epoch"
+            );
+        } else {
+            assert_eq!(
+                f.trees()[t].epoch, epochs_before[t],
+                "non-owning tree {t} must not move its epoch"
+            );
+            assert_eq!(
+                bytes_after[t], bytes_before[t],
+                "non-owning tree {t} must serialize to identical bytes"
+            );
+            assert!(
+                report[t].retrain_events.is_empty() && report[t].cost() == 0,
+                "non-owning tree {t} must report an empty delete"
+            );
+        }
+    }
+    for t in f.trees() {
+        t.validate().unwrap();
+        assert_eq!(
+            t.n() as usize,
+            owned_live_ids(f.data(), t.tree_seed, q).len(),
+            "tree invariant: n == |live ∩ owned|"
+        );
+    }
+}
+
+#[test]
+fn ownership_survives_save_load_and_flush_order_permutations() {
+    let q = 0.3;
+    let build = || {
+        let mut rng = Rng::new(mix_seed(&[0x0CC, 2]));
+        let data = random_dataset(&mut rng, 150, 5);
+        let mut f = DareForest::fit(data, &params(6, q), 4242);
+        f.set_lazy_policy(LazyPolicy::OnRead);
+        f
+    };
+    let mut a = build();
+    let mut b = build();
+    let mut c = build();
+    let ops: Vec<u32> = vec![3, 17, 44, 90, 120, 31, 66];
+    for f in [&mut a, &mut b, &mut c] {
+        for &id in &ops {
+            f.delete(id).unwrap();
+        }
+        let p = f.data().n_features();
+        for i in 0..4 {
+            f.add(&vec![0.2 * i as f32; p], (i % 2) as u8);
+        }
+    }
+    // Three drain orders: one-shot, single-step compaction loop, and
+    // read-driven flushing first.
+    a.flush_all();
+    while b.compact(1) > 0 {}
+    let rows: Vec<Vec<f32>> = (0..30u32).map(|i| c.data().row(i)).collect();
+    c.predict_proba_rows_flushed(&rows);
+    c.flush_all();
+    let ja = forest_to_json(&a);
+    assert_eq!(ja, forest_to_json(&b), "compact(1) drain order diverged");
+    assert_eq!(ja, forest_to_json(&c), "read-driven drain order diverged");
+
+    // Save/load: the loader revalidates every tree's leaf id set against
+    // the ownership predicate, and the counts and bytes survive.
+    let tmp = std::env::temp_dir().join("dare_ownership_invariants.json");
+    save(&a, &tmp).unwrap();
+    let back = load(&tmp).unwrap();
+    std::fs::remove_file(&tmp).ok();
+    assert_eq!(back.params().q, q);
+    assert_eq!(back.ownership_counts(), a.ownership_counts());
+    for (t, back_t) in a.trees().iter().zip(back.trees()) {
+        assert!(t.structural_matches(back_t));
+    }
+    // The persisted ownership sets are exactly what the predicate derives.
+    for t in back.trees() {
+        let expect = owned_live_ids(back.data(), t.tree_seed, q);
+        assert_eq!(t.n() as usize, expect.len());
+    }
+}
+
+#[test]
+fn unowned_everywhere_id_costs_zero_and_moves_nothing() {
+    let q = 0.1;
+    let mut rng = Rng::new(mix_seed(&[0x0CC, 3]));
+    let data = random_dataset(&mut rng, 140, 5);
+    let p = params(3, q);
+    let mut f = DareForest::fit(data.clone(), &p, 77);
+    let orphan: InstanceId = (0..140u32)
+        .find(|&id| f.trees().iter().all(|t| !owns(t.tree_seed, id, q)))
+        .expect("q=0.1 over 3 trees leaves ~73% of ids unowned everywhere");
+
+    assert_eq!(f.delete_cost(orphan), 0, "unowned-everywhere id must cost 0");
+    let epochs_before: Vec<u64> = f.trees().iter().map(|t| t.epoch).collect();
+    let report = f.delete(orphan).unwrap();
+    assert_eq!(report.cost(), 0);
+    assert_eq!(report.retrain_events(), 0);
+    let epochs_after: Vec<u64> = f.trees().iter().map(|t| t.epoch).collect();
+    assert_eq!(epochs_before, epochs_after, "no tree may move for an orphan");
+    assert!(!f.data().is_alive(orphan), "the instance still leaves the corpus");
+    for t in f.trees() {
+        t.validate().unwrap();
+    }
+
+    // Sharded store: same zero cost, and a zero-owner delete moves no
+    // shard epoch (the fan-out routes to owning shards only).
+    let sharded = ShardedForest::new(DareForest::fit(data, &p, 77), 2);
+    let orphan2 = (0..140u32)
+        .find(|&id| {
+            sharded.with_data(|d| d.is_alive(id))
+                && {
+                    let mut unowned = true;
+                    sharded.for_each_tree(|_, t| unowned &= !owns(t.tree_seed, id, q));
+                    unowned
+                }
+        })
+        .unwrap();
+    assert_eq!(sharded.delete_cost(orphan2).unwrap(), 0);
+    let before = sharded.shard_epochs();
+    let (rep, skipped) = sharded.delete_batch(&[orphan2]);
+    assert_eq!(skipped, 0, "the id is live — accepted, just unowned");
+    assert!(rep.per_tree.iter().all(|r| r.cost() == 0));
+    assert_eq!(sharded.shard_epochs(), before, "no shard may republish");
+    assert_eq!(sharded.n_alive(), 139);
+    sharded.validate().unwrap();
+}
