@@ -1,0 +1,58 @@
+//! Bench: scripted workload scenarios (DESIGN.md §14) — the four canonical
+//! scenarios (adversarial churn, poison-purge, sliding-window drift,
+//! zipf multi-tenant) compiled at `DARE_SCENARIO_SCALE` and replayed
+//! against the full coordinator stack under the ambient `DARE_LAZY_POLICY`.
+//!
+//! Unlike the other benches this one measures *per-op latency
+//! distributions*, not ns/iter: every wire round-trip through
+//! `UnlearningService::handle` lands in a log-spaced `util::histogram`,
+//! and the report carries p50/p95/p99/max per scenario × op type. Each
+//! replay is also cross-checked (differential oracle byte-equality,
+//! scratch-retrain where applicable, telemetry coherence), so a BENCH run
+//! doubles as a correctness pass — numbers from a run that diverged from
+//! its oracle never get written.
+//!
+//! Emits `BENCH_scenarios.json` at the repo root.
+
+use dare::exp::scenarios::{
+    cross_check, replay, report_json, save_report, scenario_json, scenario_scale, Scenario,
+};
+
+fn main() -> anyhow::Result<()> {
+    let scale = scenario_scale();
+    let mut entries = Vec::new();
+    for sc in Scenario::canonical(scale) {
+        let compiled = sc.compile();
+        let r = replay(&compiled);
+        cross_check(&compiled, &r);
+        let entry = scenario_json(&compiled, &r);
+        let n_ops: u64 = entry.get("ops_total").and_then(|v| v.as_u64()).unwrap_or(0);
+        println!(
+            "{:<18} scale={} ops={} wall={:.3}s",
+            compiled.name, scale, n_ops, r.wall_s
+        );
+        for (op, h) in &r.per_op {
+            println!(
+                "  {:<12} n={:<6} p50={:.6}s p95={:.6}s p99={:.6}s max={:.6}s",
+                op,
+                h.count(),
+                h.p50(),
+                h.p95(),
+                h.p99(),
+                h.max()
+            );
+        }
+        entries.push(entry);
+    }
+    let report = report_json(scale, entries);
+    // Anchor on the manifest so the report lands at the repo root (next to
+    // the other BENCH_*.json files and inside CI's artifact glob) no matter
+    // where cargo set the working directory.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .join("BENCH_scenarios.json");
+    save_report(&out, &report)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

@@ -1,6 +1,8 @@
 //! Service telemetry: per-operation counters and streaming latency stats
-//! (Welford — no per-request samples retained).
+//! (Welford for exact moments plus a fixed-bucket log-spaced histogram for
+//! tail quantiles — no per-request samples retained).
 
+use crate::util::histogram::Histogram;
 use crate::util::json::Value;
 use crate::util::stats::Welford;
 use std::collections::BTreeMap;
@@ -12,6 +14,9 @@ struct OpStats {
     count: u64,
     errors: u64,
     latency: Welford,
+    /// Same samples as `latency`, bucketed — the stats surface the scenario
+    /// harness exports p50/p95/p99 from (`util::histogram`).
+    hist: Histogram,
 }
 
 /// Thread-safe telemetry registry.
@@ -63,6 +68,14 @@ impl Telemetry {
             s.errors += 1;
         }
         s.latency.push(seconds);
+        s.hist.record(seconds);
+    }
+
+    /// Bucketed latency distribution recorded under `op` (None when the op
+    /// was never seen). Cloned out so callers can merge across tenants
+    /// without holding the lock.
+    pub fn op_histogram(&self, op: &str) -> Option<Histogram> {
+        self.ops.lock().unwrap().get(op).map(|s| s.hist.clone())
     }
 
     /// Time a closure and record it under `op`.
@@ -88,7 +101,10 @@ impl Telemetry {
                 .set("latency_mean_s", s.latency.mean())
                 .set("latency_std_s", s.latency.std())
                 .set("latency_min_s", s.latency.min())
-                .set("latency_max_s", s.latency.max());
+                .set("latency_max_s", s.latency.max())
+                .set("latency_p50_s", s.hist.p50())
+                .set("latency_p95_s", s.hist.p95())
+                .set("latency_p99_s", s.hist.p99());
             per_op.set(name, o);
         }
         out.set("ops", per_op);
@@ -138,6 +154,24 @@ mod tests {
                 .as_u64(),
             Some(1)
         );
+    }
+
+    #[test]
+    fn histogram_tracks_every_recorded_sample() {
+        let t = Telemetry::new();
+        for i in 0..50 {
+            t.record("predict", 1e-4 * (1 + i % 7) as f64, true);
+        }
+        // Coherence: the histogram sees exactly the ops the Welford saw.
+        let h = t.op_histogram("predict").unwrap();
+        assert_eq!(h.count(), t.op_count("predict"));
+        assert!(t.op_histogram("delete").is_none());
+        let snap = t.snapshot();
+        let p = snap.get("ops").unwrap().get("predict").unwrap();
+        let p50 = p.get("latency_p50_s").unwrap().as_f64().unwrap();
+        let p99 = p.get("latency_p99_s").unwrap().as_f64().unwrap();
+        let max = p.get("latency_max_s").unwrap().as_f64().unwrap();
+        assert!(p50 > 0.0 && p50 <= p99 && p99 <= max + 1e-12);
     }
 
     #[test]

@@ -46,6 +46,25 @@ impl Adversary {
             }
         }
     }
+
+    /// Resolve a full deletion schedule of up to `count` targets against a
+    /// clone of `base`, deleting as it goes (worst-of-c re-ranks against the
+    /// *current* forest, exactly like a live adversary). A pure function of
+    /// `(base, self, rng stream)` — same seed, same order — which is what
+    /// lets the scenario harness compile adversarial scripts into a
+    /// deterministic op stream (DESIGN.md §14).
+    pub fn schedule(&self, base: &DareForest, count: usize, rng: &mut Rng) -> Vec<InstanceId> {
+        let mut f = base.clone();
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            let Some(id) = self.next_target(&f, rng) else {
+                break;
+            };
+            f.delete_seq(id).expect("adversary picked a live id");
+            out.push(id);
+        }
+        out
+    }
 }
 
 impl std::str::FromStr for Adversary {
@@ -119,6 +138,62 @@ mod tests {
         assert!(
             worst_sum >= rand_sum,
             "worst-of adversary should find costlier deletions ({worst_sum} vs {rand_sum})"
+        );
+    }
+
+    #[test]
+    fn same_seed_gives_identical_worst_of_schedules() {
+        // Determinism contract (DESIGN.md §14): the deletion order is a pure
+        // function of (forest, adversary, seed) — replaying the seed grid
+        // must reproduce the schedule element-for-element, and a different
+        // seed stream must be free to diverge.
+        let f = forest(150);
+        for seed in [1u64, 2, 3, 5, 8] {
+            let a = Adversary::WorstOf(16).schedule(&f, 12, &mut Rng::new(seed));
+            let b = Adversary::WorstOf(16).schedule(&f, 12, &mut Rng::new(seed));
+            assert_eq!(a, b, "seed {seed}: schedule must be deterministic");
+            assert_eq!(a.len(), 12);
+            // Schedules never repeat a target (each pick is deleted).
+            let mut sorted = a.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), a.len(), "seed {seed}: duplicate target");
+            let r = Adversary::Random.schedule(&f, 12, &mut Rng::new(seed));
+            assert_eq!(r, Adversary::Random.schedule(&f, 12, &mut Rng::new(seed)));
+        }
+    }
+
+    #[test]
+    fn worst_of_schedule_cost_dominates_random_across_seed_grid() {
+        // Ranking: along the *evolving* forest (each pick deleted before the
+        // next), the worst-of-c order's summed dry-run cost must dominate
+        // the random adversary's on every seed of the pinned grid.
+        let base = forest(200);
+        let cost_of = |order: &[InstanceId]| -> u64 {
+            let mut f = base.clone();
+            let mut total = 0u64;
+            for &id in order {
+                total += f.delete_cost(id);
+                f.delete_seq(id).unwrap();
+            }
+            total
+        };
+        let mut grid_worst = 0u64;
+        let mut grid_rand = 0u64;
+        for seed in [1u64, 2, 3, 5, 8] {
+            let worst = Adversary::WorstOf(32).schedule(&base, 10, &mut Rng::new(seed));
+            let rand = Adversary::Random.schedule(&base, 10, &mut Rng::new(seed ^ 0x9E37));
+            let (wc, rc) = (cost_of(&worst), cost_of(&rand));
+            assert!(
+                wc >= rc,
+                "seed {seed}: worst-of-32 sum {wc} fell below random {rc}"
+            );
+            grid_worst += wc;
+            grid_rand += rc;
+        }
+        assert!(
+            grid_worst > grid_rand,
+            "worst-of must strictly dominate over the whole grid ({grid_worst} vs {grid_rand})"
         );
     }
 

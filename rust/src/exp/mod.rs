@@ -11,11 +11,18 @@
 //! | table5  | Table 5 — predictive performance comparison      |
 //! | table6  | Table 6 (Gini) / Table 8 (entropy) — tuning      |
 //! | table7  | Table 7 — training time                          |
+//!
+//! `scenarios` is not a paper artifact: it is the scripted-workload
+//! harness (adversarial churn, poison-purge, drift replay, multi-tenant
+//! zipf) that replays op scripts against the full coordinator stack with
+//! latency histograms and oracle cross-checks (DESIGN.md §14). It backs
+//! `benches/scenarios.rs` and the CI scenarios job.
 
 pub mod common;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;
+pub mod scenarios;
 pub mod table2;
 pub mod table3;
 pub mod table5;

@@ -1,0 +1,1082 @@
+//! Scenario harness: scripted unlearning workloads replayed against the
+//! full coordinator stack, with per-op latency histograms and oracle
+//! cross-checks (DESIGN.md §14).
+//!
+//! A [`Scenario`] is `(kind, scale, seed)`. [`Scenario::compile`] expands it
+//! into a [`CompiledScenario`]: a concrete, fully-resolved op stream
+//! (every delete target, added row, probe batch and tenant route pinned)
+//! plus one *differential oracle* per tenant — a plain eager [`DareForest`]
+//! that the compiler drove through the identical logical ops. Compilation
+//! is a pure function of the spec: no clocks, no ambient randomness, only
+//! the seeded [`Rng`] stream — so the op stream is byte-stable across
+//! processes and machines (the determinism contract, DESIGN.md §14).
+//!
+//! [`replay`] then drives the op stream through the real serving path —
+//! [`UnlearningService::handle`] over the versioned wire codec, through the
+//! registry, deletion batcher, sharded store, the ambient
+//! `DARE_LAZY_POLICY`, and Occ(q) ownership — timing every request into
+//! per-tenant, per-op-type [`Histogram`]s. [`cross_check`] closes the loop:
+//!
+//! 1. **Differential oracle** (every scenario): each tenant's final flushed
+//!    snapshot must serialize byte-identical to its compile-time oracle,
+//!    and a fixed probe batch must predict f32-identical.
+//! 2. **Scratch-retrain oracle** ([`Check::ScratchRetrain`], attached where
+//!    the paper's exactness theorem applies — delete-only histories and
+//!    fully-purged add histories, compiled in the exhaustive regime): every
+//!    final tree must equal a from-scratch train on its owned surviving
+//!    ids.
+//! 3. **Telemetry coherence** (every scenario): per-op counts, error
+//!    counts, histogram counts and mutation counters reported by the
+//!    service must reconcile exactly with the ops the driver issued.
+//!
+//! The four canonical scenarios ship as [`Scenario::canonical`]:
+//! worst-case adversarial churn (paper §5, reusing
+//! [`Adversary::WorstOf`]), poison-then-purge (flipped-label injection,
+//! batched purge, bit-exact accuracy recovery), sliding-window continual
+//! learning under distribution drift, and a zipf-routed multi-tenant mix
+//! with one Occ(q)-subsampled tenant. `benches/scenarios.rs` replays them
+//! at `DARE_SCENARIO_SCALE` and emits `BENCH_scenarios.json`.
+
+use crate::coordinator::api::{encode_request, Op, Request, WIRE_VERSION};
+use crate::coordinator::{ServiceConfig, UnlearningService};
+use crate::data::dataset::InstanceId;
+use crate::data::split::train_test;
+use crate::data::synth::{generate, SynthSpec};
+use crate::eval::adversary::Adversary;
+use crate::forest::serialize::forest_to_json;
+use crate::forest::train::{train, TrainCtx, ROOT_PATH};
+use crate::forest::{owned_live_ids, DareForest, LazyPolicy, MaxFeatures, Params};
+use crate::metrics::accuracy;
+use crate::util::histogram::Histogram;
+use crate::util::json::Value;
+use crate::util::rng::{mix_seed, Rng};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Workload scale knob: corpus sizes and op counts derive from this.
+/// CI's scenarios job pins `DARE_SCENARIO_SCALE=2000`; the default keeps
+/// local test runs fast. Clamped below at 64 so every script stays
+/// well-formed.
+pub fn scenario_scale() -> usize {
+    std::env::var("DARE_SCENARIO_SCALE")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(400)
+        .max(64)
+}
+
+// ---------------------------------------------------------------------------
+// Spec
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// Worst-case deletion churn: `worst_of_<c>` adversarial targets
+    /// (paper §5) against a single tenant, delete-only, exhaustive regime.
+    AdversarialChurn,
+    /// Flipped-label injection followed by a batched purge of exactly the
+    /// injected ids; accuracy on a held-out split must recover bit-exactly.
+    PoisonPurge,
+    /// Sliding-window continual learning: add a drifting batch, retire the
+    /// oldest, keep the window size fixed.
+    SlidingWindow,
+    /// Zipf-routed traffic across four tenants (one Occ(q)-subsampled),
+    /// predict-heavy with interleaved mutations.
+    MultiTenantZipf,
+    /// Randomized spec for the op-fuzz replay leg: 1–2 small tenants, a
+    /// random mix over the whole op vocabulary.
+    Fuzz,
+}
+
+/// A scenario spec — the unit the harness compiles and replays.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Scenario {
+    pub kind: ScenarioKind,
+    pub scale: usize,
+    pub seed: u64,
+}
+
+impl Scenario {
+    pub fn name(&self) -> &'static str {
+        match self.kind {
+            ScenarioKind::AdversarialChurn => "adversarial_churn",
+            ScenarioKind::PoisonPurge => "poison_purge",
+            ScenarioKind::SlidingWindow => "sliding_window",
+            ScenarioKind::MultiTenantZipf => "multi_tenant_zipf",
+            ScenarioKind::Fuzz => "fuzz",
+        }
+    }
+
+    /// The four canonical scenarios at `scale`, with their pinned seeds.
+    pub fn canonical(scale: usize) -> Vec<Scenario> {
+        [
+            ScenarioKind::AdversarialChurn,
+            ScenarioKind::PoisonPurge,
+            ScenarioKind::SlidingWindow,
+            ScenarioKind::MultiTenantZipf,
+        ]
+        .iter()
+        .enumerate()
+        .map(|(i, &kind)| Scenario {
+            kind,
+            scale,
+            seed: 0xD0_5CE0 + i as u64,
+        })
+        .collect()
+    }
+
+    /// Expand the spec into a concrete op stream + per-tenant oracles.
+    pub fn compile(&self) -> CompiledScenario {
+        let mut c = Compiler::new(mix_seed(&[self.seed, 0x5CEA]));
+        match self.kind {
+            ScenarioKind::AdversarialChurn => compile_adversarial_churn(&mut c, self.scale),
+            ScenarioKind::PoisonPurge => compile_poison_purge(&mut c, self.scale, self.seed),
+            ScenarioKind::SlidingWindow => compile_sliding_window(&mut c, self.scale, self.seed),
+            ScenarioKind::MultiTenantZipf => compile_multi_tenant_zipf(&mut c, self.scale),
+            ScenarioKind::Fuzz => compile_fuzz(&mut c, self.scale),
+        }
+        c.finish(self.name(), self.seed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compiled form
+// ---------------------------------------------------------------------------
+
+/// One fully-resolved op against one tenant. Pure data — `PartialEq` is
+/// what the determinism tests compare.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScenarioOp {
+    Predict { tenant: usize, rows: Vec<Vec<f32>> },
+    Delete { tenant: usize, ids: Vec<InstanceId> },
+    Add { tenant: usize, row: Vec<f32>, label: u8 },
+    DeleteCost { tenant: usize, id: InstanceId },
+    Flush { tenant: usize },
+    Compact { tenant: usize, budget: usize },
+    Stats { tenant: usize },
+}
+
+impl ScenarioOp {
+    pub fn tenant(&self) -> usize {
+        match *self {
+            ScenarioOp::Predict { tenant, .. }
+            | ScenarioOp::Delete { tenant, .. }
+            | ScenarioOp::Add { tenant, .. }
+            | ScenarioOp::DeleteCost { tenant, .. }
+            | ScenarioOp::Flush { tenant }
+            | ScenarioOp::Compact { tenant, .. }
+            | ScenarioOp::Stats { tenant } => tenant,
+        }
+    }
+
+    /// Histogram key; also the wire op name for the four timed data-plane
+    /// ops, so telemetry coherence can compare counts key-for-key.
+    pub fn op_type(&self) -> &'static str {
+        match self {
+            ScenarioOp::Predict { .. } => "predict",
+            ScenarioOp::Delete { .. } => "delete",
+            ScenarioOp::Add { .. } => "add",
+            ScenarioOp::DeleteCost { .. } => "delete_cost",
+            ScenarioOp::Flush { .. } => "flush",
+            ScenarioOp::Compact { .. } => "compact",
+            ScenarioOp::Stats { .. } => "stats",
+        }
+    }
+
+    fn to_wire(&self) -> Op {
+        match self {
+            ScenarioOp::Predict { rows, .. } => Op::Predict { rows: rows.clone() },
+            ScenarioOp::Delete { ids, .. } => Op::Delete { ids: ids.clone() },
+            ScenarioOp::Add { row, label, .. } => Op::Add {
+                row: row.clone(),
+                label: *label,
+            },
+            ScenarioOp::DeleteCost { id, .. } => Op::DeleteCost { id: *id },
+            ScenarioOp::Flush { .. } => Op::Flush,
+            ScenarioOp::Compact { budget, .. } => Op::Compact { budget: *budget },
+            ScenarioOp::Stats { .. } => Op::Stats,
+        }
+    }
+}
+
+/// One tenant: its pre-script trained forest (what the service boots
+/// from), its post-script differential oracle, and a fixed probe batch.
+pub struct Tenant {
+    pub name: String,
+    pub initial: DareForest,
+    pub oracle: DareForest,
+    pub probes: Vec<Vec<f32>>,
+}
+
+/// Scenario-specific assertions attached at compile time and executed by
+/// [`cross_check`] (the oracle cross-check rule, DESIGN.md §14).
+pub enum Check {
+    /// Every final tree must equal a from-scratch train on its owned
+    /// surviving ids. Sound only for exhaustive-regime scripts whose
+    /// history is delete-only or whose every added id was purged — the §6
+    /// add path is oracle-exact, not scratch-exact (see op_fuzz leg 2).
+    ScratchRetrain { tenant: usize },
+    /// Held-out accuracy after the purge must equal the pre-poison
+    /// baseline bit-for-bit (purging every injected id in the exhaustive
+    /// regime restores the forest structurally, so this is exact, not
+    /// approximate). `poisoned_acc` is carried for reporting.
+    AccuracyRecovery {
+        tenant: usize,
+        test_rows: Vec<Vec<f32>>,
+        test_labels: Vec<u8>,
+        baseline_acc: f64,
+        poisoned_acc: f64,
+    },
+}
+
+pub struct CompiledScenario {
+    pub name: String,
+    pub seed: u64,
+    pub tenants: Vec<Tenant>,
+    pub ops: Vec<ScenarioOp>,
+    pub checks: Vec<Check>,
+}
+
+// ---------------------------------------------------------------------------
+// Compiler
+// ---------------------------------------------------------------------------
+
+/// Compile-time state: the seeded stream plus every tenant's evolving
+/// eager oracle. Builders append ops AND apply their logical effect to the
+/// oracle in the same breath, so the two cannot drift.
+struct Compiler {
+    rng: Rng,
+    tenants: Vec<Tenant>,
+    ops: Vec<ScenarioOp>,
+    checks: Vec<Check>,
+}
+
+impl Compiler {
+    fn new(seed: u64) -> Compiler {
+        Compiler {
+            rng: Rng::new(seed),
+            tenants: Vec::new(),
+            ops: Vec::new(),
+            checks: Vec::new(),
+        }
+    }
+
+    /// Train a tenant and register it. The oracle is pinned to the eager
+    /// policy regardless of the ambient `DARE_LAZY_POLICY`: flush-order
+    /// invariance (DESIGN.md §9) makes the service's flushed snapshot
+    /// byte-identical to the eager evolution under every policy, which is
+    /// exactly what makes one compile-time oracle serve the whole matrix.
+    fn tenant(
+        &mut self,
+        name: &str,
+        data: crate::data::dataset::Dataset,
+        params: &Params,
+        forest_seed: u64,
+    ) -> usize {
+        let mut oracle = DareForest::fit(data, params, forest_seed);
+        oracle.set_lazy_policy(LazyPolicy::Eager);
+        let p = oracle.data().n_features();
+        let mut probes: Vec<Vec<f32>> = (0..6)
+            .map(|_| (0..p).map(|_| self.rng.range_f32(-4.0, 4.0)).collect())
+            .collect();
+        // A couple of real corpus rows so probes hit populated leaves.
+        for id in oracle.live_ids().iter().take(2) {
+            probes.push(oracle.data().row(*id));
+        }
+        self.tenants.push(Tenant {
+            name: name.to_string(),
+            initial: oracle.clone(),
+            oracle,
+            probes,
+        });
+        self.tenants.len() - 1
+    }
+
+    fn predict(&mut self, tenant: usize, rows: Vec<Vec<f32>>) {
+        self.ops.push(ScenarioOp::Predict { tenant, rows });
+    }
+
+    fn predict_probe(&mut self, tenant: usize) {
+        let rows = self.tenants[tenant].probes.clone();
+        self.predict(tenant, rows);
+    }
+
+    fn delete(&mut self, tenant: usize, ids: Vec<InstanceId>) {
+        self.tenants[tenant].oracle.delete_batch(&ids);
+        self.ops.push(ScenarioOp::Delete { tenant, ids });
+    }
+
+    fn add(&mut self, tenant: usize, row: Vec<f32>, label: u8) -> InstanceId {
+        let id = self.tenants[tenant].oracle.add(&row, label);
+        self.ops.push(ScenarioOp::Add { tenant, row, label });
+        id
+    }
+
+    fn delete_cost(&mut self, tenant: usize, id: InstanceId) {
+        self.ops.push(ScenarioOp::DeleteCost { tenant, id });
+    }
+
+    fn flush(&mut self, tenant: usize) {
+        self.ops.push(ScenarioOp::Flush { tenant });
+    }
+
+    fn compact(&mut self, tenant: usize, budget: usize) {
+        self.ops.push(ScenarioOp::Compact { tenant, budget });
+    }
+
+    fn stats(&mut self, tenant: usize) {
+        self.ops.push(ScenarioOp::Stats { tenant });
+    }
+
+    /// Every script ends with a flush + stats per tenant: the final state
+    /// the cross-check sees is the fully-drained one, and the last stats
+    /// op exercises the histogram export surface.
+    fn finish(mut self, name: &str, seed: u64) -> CompiledScenario {
+        for t in 0..self.tenants.len() {
+            self.flush(t);
+            self.stats(t);
+        }
+        CompiledScenario {
+            name: name.to_string(),
+            seed,
+            tenants: self.tenants,
+            ops: self.ops,
+            checks: self.checks,
+        }
+    }
+}
+
+/// Exhaustive-regime params (k ≥ all candidates, all attributes, no random
+/// layer): the regime where the paper's deletion theorem is a structural
+/// identity, making the scratch-retrain oracle applicable.
+fn exhaustive_params(n_trees: usize) -> Params {
+    Params {
+        n_trees,
+        max_depth: 6,
+        k: 10_000,
+        d_rmax: 0,
+        max_features: MaxFeatures::All,
+        ..Default::default()
+    }
+}
+
+/// Compact synthetic spec (p = 10) so CI-scale corpora stay cheap.
+fn spec(n: usize) -> SynthSpec {
+    SynthSpec {
+        n,
+        informative: 4,
+        redundant: 2,
+        noise: 4,
+        flip: 0.05,
+        ..Default::default()
+    }
+}
+
+fn random_row(rng: &mut Rng, p: usize) -> Vec<f32> {
+    (0..p).map(|_| rng.range_f32(-4.0, 4.0)).collect()
+}
+
+/// Zipf-distributed index in `0..n` with exponent `s` (rank 0 hottest).
+fn zipf(rng: &mut Rng, n: usize, s: f64) -> usize {
+    let total: f64 = (1..=n).map(|k| (k as f64).powf(-s)).sum();
+    let mut u = rng.f64() * total;
+    for k in 0..n {
+        let w = ((k + 1) as f64).powf(-s);
+        if u < w {
+            return k;
+        }
+        u -= w;
+    }
+    n - 1
+}
+
+// ---------------------------------------------------------------------------
+// Canonical scenario builders
+// ---------------------------------------------------------------------------
+
+/// Paper §5 worst-case churn: delete 10% of the corpus in worst-of-16
+/// order, re-ranked against the evolving forest, with probe predicts and
+/// cost/stats reads interleaved. Delete-only + exhaustive regime ⇒ the
+/// scratch-retrain oracle applies after every deletion, so it is attached.
+fn compile_adversarial_churn(c: &mut Compiler, scale: usize) {
+    let n = scale;
+    let fseed = c.rng.next_u64();
+    let data = generate(&spec(n), c.rng.next_u64());
+    let t = c.tenant("churn", data, &exhaustive_params(4), fseed);
+    let adversary = Adversary::WorstOf(16);
+    let deletions = (n / 10).max(16);
+    for step in 0..deletions {
+        let id = {
+            let Compiler { rng, tenants, .. } = c;
+            adversary.next_target(&tenants[t].oracle, rng)
+        };
+        let Some(id) = id else { break };
+        c.delete(t, vec![id]);
+        if step % 8 == 4 {
+            c.predict_probe(t);
+        }
+        if step % 25 == 12 {
+            if let Some(&probe) = c.tenants[t].oracle.live_ids().first() {
+                c.delete_cost(t, probe);
+            }
+            c.stats(t);
+        }
+    }
+    c.checks.push(Check::ScratchRetrain { tenant: t });
+}
+
+/// Random-Relabeling-style poisoning response: train clean, measure
+/// held-out accuracy, inject 20% flipped-label rows, purge exactly those
+/// ids in batched deletes, and require the held-out accuracy to land back
+/// on the baseline bit-for-bit. Exhaustive regime: purging every injected
+/// id restores the forest structurally (adds are self-inverse under their
+/// own deletion — DESIGN.md §14), so both the scratch-retrain and the
+/// exact-recovery checks attach.
+fn compile_poison_purge(c: &mut Compiler, scale: usize, seed: u64) {
+    let n = scale;
+    let full = generate(&spec(n + n / 4), mix_seed(&[seed, 0xF00D]));
+    let (train_d, test_d) = train_test(&full, 0.8, mix_seed(&[seed, 0x5917]));
+    let test_rows: Vec<Vec<f32>> =
+        (0..test_d.n_total() as InstanceId).map(|i| test_d.row(i)).collect();
+    let test_labels: Vec<u8> = test_d.labels().to_vec();
+    let fseed = c.rng.next_u64();
+    let t = c.tenant("poison", train_d, &exhaustive_params(4), fseed);
+    let baseline_acc = accuracy(
+        &c.tenants[t].oracle.predict_proba_rows(&test_rows),
+        &test_labels,
+    );
+
+    // Inject: plausible rows with deliberately flipped labels.
+    let n_poison = (n / 5).max(8);
+    let poison_src = generate(&spec(n_poison), mix_seed(&[seed, 0xBAD]));
+    let mut poison_ids = Vec::with_capacity(n_poison);
+    for i in 0..poison_src.n_total() as InstanceId {
+        let row = poison_src.row(i);
+        let flipped = 1 - poison_src.y(i);
+        poison_ids.push(c.add(t, row, flipped));
+        if i % 16 == 7 {
+            c.predict_probe(t);
+        }
+    }
+    c.stats(t);
+    let poisoned_acc = accuracy(
+        &c.tenants[t].oracle.predict_proba_rows(&test_rows),
+        &test_labels,
+    );
+
+    // Purge: batched wire deletes over exactly the injected ids.
+    for chunk in poison_ids.chunks(16) {
+        c.delete(t, chunk.to_vec());
+    }
+    c.predict_probe(t);
+    c.checks.push(Check::ScratchRetrain { tenant: t });
+    c.checks.push(Check::AccuracyRecovery {
+        tenant: t,
+        test_rows,
+        test_labels,
+        baseline_acc,
+        poisoned_acc,
+    });
+}
+
+/// Continual learning under drift: a fixed-size window slides over a
+/// stream whose class separation and positive rate drift per step — each
+/// step adds a fresh batch row-by-row, retires the oldest batch in one
+/// wire delete, and reads predictions/costs. Adds make scratch-retrain
+/// inapplicable; the differential oracle + telemetry coherence carry the
+/// correctness load here.
+fn compile_sliding_window(c: &mut Compiler, scale: usize, seed: u64) {
+    let window = (scale / 2).max(48);
+    let fseed = c.rng.next_u64();
+    let data = generate(&spec(window), mix_seed(&[seed, 0x71DE]));
+    let params = Params {
+        n_trees: 6,
+        max_depth: 6,
+        k: 8,
+        d_rmax: 1,
+        ..Default::default()
+    };
+    let t = c.tenant("window", data, &params, fseed);
+    let mut fifo: Vec<InstanceId> = c.tenants[t].oracle.live_ids();
+    let steps = 6;
+    let batch = (window / 8).max(4);
+    for step in 0..steps {
+        // Drifting source: separation tightens, positives thin out.
+        let drift = SynthSpec {
+            class_sep: 1.0 + 0.15 * step as f64,
+            pos_fraction: (0.5 - 0.04 * step as f64).max(0.2),
+            ..spec(batch)
+        };
+        let fresh = generate(&drift, mix_seed(&[seed, 0xD21F, step as u64]));
+        for i in 0..fresh.n_total() as InstanceId {
+            let id = c.add(t, fresh.row(i), fresh.y(i));
+            fifo.push(id);
+        }
+        let old: Vec<InstanceId> = fifo.drain(..batch.min(fifo.len())).collect();
+        c.delete(t, old);
+        c.predict_probe(t);
+        if step % 2 == 1 {
+            if let Some(&oldest) = fifo.first() {
+                c.delete_cost(t, oldest);
+            }
+            c.compact(t, 4);
+            c.stats(t);
+        }
+    }
+}
+
+/// Zipf-routed multi-tenant mix: four tenants of descending size — one
+/// Occ(q)-subsampled (DESIGN.md §13) — served by one registry, with
+/// traffic routed by a zipf(1.2) draw per op and a predict-heavy mix.
+fn compile_multi_tenant_zipf(c: &mut Compiler, scale: usize) {
+    let sizes = [scale / 2, scale / 3, scale / 4, scale / 6];
+    let mut tenants = Vec::new();
+    for (i, &n) in sizes.iter().enumerate() {
+        let mut params = Params {
+            n_trees: 3 + i % 2,
+            max_depth: 5,
+            k: 4 + i,
+            d_rmax: 1,
+            ..Default::default()
+        };
+        if i == 2 {
+            params = params.with_subsample(0.35);
+        }
+        let fseed = c.rng.next_u64();
+        let data = generate(&spec(n.max(48)), c.rng.next_u64());
+        tenants.push(c.tenant(&format!("t{i}"), data, &params, fseed));
+    }
+    let ops = (scale / 2).max(64);
+    for k in 0..ops {
+        let t = tenants[zipf(&mut c.rng, tenants.len(), 1.2)];
+        let p = c.tenants[t].oracle.data().n_features();
+        match c.rng.index(10) {
+            0..=4 => {
+                let rows: Vec<Vec<f32>> =
+                    (0..1 + c.rng.index(6)).map(|_| random_row(&mut c.rng, p)).collect();
+                c.predict(t, rows);
+            }
+            5..=6 => {
+                let live = c.tenants[t].oracle.live_ids();
+                if live.len() > 24 {
+                    let m = 1 + c.rng.index(3);
+                    let ids: Vec<InstanceId> = (0..m)
+                        .map(|_| live[c.rng.index(live.len())])
+                        .collect();
+                    c.delete(t, ids);
+                }
+            }
+            7 => {
+                let row = random_row(&mut c.rng, p);
+                let label = (c.rng.index(2)) as u8;
+                c.add(t, row, label);
+            }
+            8 => {
+                let live = c.tenants[t].oracle.live_ids();
+                if !live.is_empty() {
+                    let id = live[c.rng.index(live.len())];
+                    c.delete_cost(t, id);
+                }
+            }
+            _ => c.stats(t),
+        }
+        if k % 40 == 21 {
+            c.flush(t);
+        }
+    }
+}
+
+/// Randomized spec for the op-fuzz replay leg: everything small, every op
+/// kind reachable, targets resolved against the oracle so dead-id deletes
+/// (skip-path) occur but cost reads stay live.
+fn compile_fuzz(c: &mut Compiler, scale: usize) {
+    let n_tenants = 1 + c.rng.index(2);
+    let mut tenants = Vec::new();
+    for i in 0..n_tenants {
+        let n = 48 + c.rng.index(scale.min(120));
+        let max_depth = 4 + c.rng.index(2);
+        let mut params = Params {
+            n_trees: 2 + c.rng.index(2),
+            max_depth,
+            k: 2 + c.rng.index(5),
+            d_rmax: c.rng.index(2).min(max_depth),
+            ..Default::default()
+        };
+        if c.rng.bernoulli(0.3) {
+            params = params.with_subsample(0.3 + 0.4 * c.rng.f64());
+        }
+        let fseed = c.rng.next_u64();
+        let data = generate(&spec(n), c.rng.next_u64());
+        tenants.push(c.tenant(&format!("fuzz{i}"), data, &params, fseed));
+    }
+    let adversary = if c.rng.bernoulli(0.5) {
+        Adversary::WorstOf(8)
+    } else {
+        Adversary::Random
+    };
+    for _ in 0..30 + c.rng.index(20) {
+        let t = tenants[c.rng.index(tenants.len())];
+        let p = c.tenants[t].oracle.data().n_features();
+        match c.rng.index(12) {
+            0..=2 if c.tenants[t].oracle.n_alive() > 16 => {
+                let id = {
+                    let Compiler { rng, tenants, .. } = c;
+                    adversary.next_target(&tenants[t].oracle, rng)
+                };
+                if let Some(id) = id {
+                    c.delete(t, vec![id]);
+                }
+            }
+            3 => {
+                // Dead/out-of-band ids exercise the accept/skip path.
+                let id = c.rng.next_below(1 << 20) as InstanceId;
+                c.delete(t, vec![id]);
+            }
+            4..=5 => {
+                let row = random_row(&mut c.rng, p);
+                let label = c.rng.index(2) as u8;
+                c.add(t, row, label);
+            }
+            6..=8 => {
+                let rows: Vec<Vec<f32>> =
+                    (0..1 + c.rng.index(5)).map(|_| random_row(&mut c.rng, p)).collect();
+                c.predict(t, rows);
+            }
+            9 => {
+                let live = c.tenants[t].oracle.live_ids();
+                if !live.is_empty() {
+                    let id = live[c.rng.index(live.len())];
+                    c.delete_cost(t, id);
+                }
+            }
+            10 => {
+                if c.rng.bernoulli(0.5) {
+                    c.flush(t);
+                } else {
+                    c.compact(t, 1 + c.rng.index(4));
+                }
+            }
+            _ => c.stats(t),
+        }
+    }
+    // Every fuzz script ends with a probe predict per tenant: guarantees
+    // the differential probe check has a final data point (and that the
+    // report always carries a `predict` histogram entry, which the
+    // BENCH_scenarios.json schema pin relies on).
+    for &t in &tenants {
+        c.predict_probe(t);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replay
+// ---------------------------------------------------------------------------
+
+/// Service configuration for scenario replay: native predict only, a short
+/// batch window (single-threaded replay ⇒ one request per batch), and the
+/// background compactor parked so the only state transitions are the
+/// scripted ops (byte-determinism across replays). The lazy policy comes
+/// from the ambient `DARE_LAZY_POLICY`, which is how the CI matrix runs
+/// the same scripts through both deferral modes.
+pub fn replay_config() -> ServiceConfig {
+    ServiceConfig {
+        batch_window: Duration::from_millis(1),
+        use_pjrt: false,
+        n_shards: 2,
+        lazy: LazyPolicy::from_env(),
+        compact_interval: Duration::from_secs(3600),
+        ..Default::default()
+    }
+}
+
+/// Everything a replay produced: the live service (for cross-checking),
+/// per-op-type latency histograms (merged across tenants, plus the
+/// per-tenant split), and the issued-op ledger telemetry is reconciled
+/// against.
+pub struct Replayed {
+    pub svc: Arc<UnlearningService>,
+    /// Per-op-type latency, merged across tenants via `Histogram::merge`.
+    pub per_op: BTreeMap<String, Histogram>,
+    /// (tenant index, op type) → latency histogram.
+    pub per_tenant_op: BTreeMap<(usize, String), Histogram>,
+    /// (tenant index, op type) → ops issued.
+    pub issued: BTreeMap<(usize, String), u64>,
+    /// Per tenant: total rows sent through predict ops.
+    pub predict_rows: Vec<u64>,
+    /// Per tenant: total ids the service reported deleted.
+    pub deleted_ids: Vec<u64>,
+    /// Wall-clock seconds for the whole op stream.
+    pub wall_s: f64,
+}
+
+impl Replayed {
+    /// Op counts derived from the merged histograms — the latency-free
+    /// projection the determinism tests compare.
+    pub fn op_counts(&self) -> BTreeMap<String, u64> {
+        self.per_op.iter().map(|(k, h)| (k.clone(), h.count())).collect()
+    }
+
+    /// Final flushed snapshot bytes per tenant (compile order).
+    pub fn final_snapshots(&self, c: &CompiledScenario) -> Vec<String> {
+        c.tenants
+            .iter()
+            .map(|t| {
+                let model = self.svc.registry().get(&t.name).expect("tenant registered");
+                forest_to_json(&model.sharded().snapshot())
+            })
+            .collect()
+    }
+}
+
+/// Drive the compiled op stream through `UnlearningService::handle`,
+/// timing every wire round-trip. Panics on any non-`ok` response — a
+/// scenario script is valid by construction, so an error is a harness or
+/// service bug, never data.
+pub fn replay(c: &CompiledScenario) -> Replayed {
+    let svc = UnlearningService::with_models(
+        c.tenants.iter().map(|t| (t.name.clone(), t.initial.clone())).collect(),
+        replay_config(),
+    );
+    let mut per_tenant_op: BTreeMap<(usize, String), Histogram> = BTreeMap::new();
+    let mut issued: BTreeMap<(usize, String), u64> = BTreeMap::new();
+    let mut predict_rows = vec![0u64; c.tenants.len()];
+    let mut deleted_ids = vec![0u64; c.tenants.len()];
+    let t_start = Instant::now();
+    for op in &c.ops {
+        let tenant = op.tenant();
+        let wire = encode_request(&Request {
+            v: WIRE_VERSION,
+            model: c.tenants[tenant].name.clone(),
+            op: op.to_wire(),
+        });
+        let t0 = Instant::now();
+        let resp = svc.handle(&wire);
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            resp.get("ok").and_then(|v| v.as_bool()),
+            Some(true),
+            "scenario '{}': op {:?} failed: {}",
+            c.name,
+            op,
+            resp.to_string()
+        );
+        let key = (tenant, op.op_type().to_string());
+        per_tenant_op.entry(key.clone()).or_insert_with(Histogram::new).record(dt);
+        *issued.entry(key).or_insert(0) += 1;
+        match op {
+            ScenarioOp::Predict { rows, .. } => predict_rows[tenant] += rows.len() as u64,
+            ScenarioOp::Delete { .. } => {
+                deleted_ids[tenant] +=
+                    resp.get("deleted").and_then(|v| v.as_u64()).unwrap_or(0)
+            }
+            _ => {}
+        }
+    }
+    let wall_s = t_start.elapsed().as_secs_f64();
+    let mut per_op: BTreeMap<String, Histogram> = BTreeMap::new();
+    for ((_, op), h) in &per_tenant_op {
+        per_op.entry(op.clone()).or_insert_with(Histogram::new).merge(h);
+    }
+    Replayed {
+        svc,
+        per_op,
+        per_tenant_op,
+        issued,
+        predict_rows,
+        deleted_ids,
+        wall_s,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-check
+// ---------------------------------------------------------------------------
+
+/// The harness's correctness surface (DESIGN.md §14): differential-oracle
+/// byte equality + probe-prediction bit equality + telemetry coherence for
+/// every tenant, then the scenario-specific [`Check`]s.
+pub fn cross_check(c: &CompiledScenario, r: &Replayed) {
+    for (i, tenant) in c.tenants.iter().enumerate() {
+        let model = r.svc.registry().get(&tenant.name).expect("tenant registered");
+
+        // 1. Differential oracle: final flushed state, byte for byte.
+        let snap = model.sharded().snapshot();
+        assert_eq!(
+            forest_to_json(&snap),
+            forest_to_json(&tenant.oracle),
+            "scenario '{}': tenant '{}' final snapshot diverged from its \
+             differential oracle",
+            c.name,
+            tenant.name
+        );
+        assert_eq!(
+            model.sharded().predict_proba_rows(&tenant.probes),
+            tenant.oracle.predict_proba_rows(&tenant.probes),
+            "scenario '{}': tenant '{}' probe predictions diverged",
+            c.name,
+            tenant.name
+        );
+
+        // 2. Telemetry coherence: the service's ledger must reconcile with
+        // the ops the driver issued — counts, errors, histogram mass, and
+        // the mutation counters.
+        let tel = model.telemetry();
+        for op in ["predict", "delete", "add", "delete_cost"] {
+            let want = r.issued.get(&(i, op.to_string())).copied().unwrap_or(0);
+            assert_eq!(
+                tel.op_count(op),
+                want,
+                "scenario '{}': tenant '{}' telemetry count for '{op}' diverged",
+                c.name,
+                tenant.name
+            );
+            assert_eq!(tel.op_errors(op), 0, "scenario '{}': '{op}' errored", c.name);
+            let hist_count = tel.op_histogram(op).map(|h| h.count()).unwrap_or(0);
+            assert_eq!(
+                hist_count, want,
+                "scenario '{}': '{op}' histogram mass != op count",
+                c.name
+            );
+        }
+        assert_eq!(
+            tel.counter("predict_rows"),
+            r.predict_rows[i],
+            "scenario '{}': predict_rows counter diverged",
+            c.name
+        );
+        assert_eq!(
+            tel.counter("deleted_ids"),
+            r.deleted_ids[i],
+            "scenario '{}': deleted_ids counter diverged",
+            c.name
+        );
+
+        // Stats surface: the flushed store reports a clean backlog and the
+        // payload agrees with the oracle on the corpus.
+        assert_eq!(model.sharded().pending_retrains(), 0);
+        let stats = model.stats();
+        assert_eq!(
+            stats.get("n_alive").and_then(|v| v.as_u64()),
+            Some(tenant.oracle.n_alive() as u64),
+            "scenario '{}': stats n_alive diverged",
+            c.name
+        );
+        assert_eq!(stats.get("dirty_subtrees").and_then(|v| v.as_u64()), Some(0));
+    }
+
+    for check in &c.checks {
+        match check {
+            Check::ScratchRetrain { tenant } => {
+                let t = &c.tenants[*tenant];
+                let model = r.svc.registry().get(&t.name).unwrap();
+                let f = model.sharded().snapshot();
+                for (k, tree) in f.trees().iter().enumerate() {
+                    let ctx = TrainCtx {
+                        data: f.data(),
+                        params: f.params(),
+                        tree_seed: tree.tree_seed,
+                    };
+                    let scratch = train(
+                        &ctx,
+                        owned_live_ids(f.data(), tree.tree_seed, f.params().q),
+                        0,
+                        ROOT_PATH,
+                    );
+                    assert!(
+                        tree.matches_root(&scratch),
+                        "scenario '{}': tenant '{}' tree {k} != from-scratch \
+                         retrain on the surviving corpus",
+                        c.name,
+                        t.name
+                    );
+                }
+            }
+            Check::AccuracyRecovery {
+                tenant,
+                test_rows,
+                test_labels,
+                baseline_acc,
+                poisoned_acc: _,
+            } => {
+                let t = &c.tenants[*tenant];
+                let model = r.svc.registry().get(&t.name).unwrap();
+                let recovered =
+                    accuracy(&model.sharded().predict_proba_rows(test_rows), test_labels);
+                assert!(
+                    (recovered - baseline_acc).abs() < 1e-12,
+                    "scenario '{}': purge must restore held-out accuracy \
+                     exactly (baseline {baseline_acc}, recovered {recovered})",
+                    c.name
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reporting
+// ---------------------------------------------------------------------------
+
+/// One scenario's entry in `BENCH_scenarios.json`.
+pub fn scenario_json(c: &CompiledScenario, r: &Replayed) -> Value {
+    let mut ops = Value::obj();
+    let mut total = 0u64;
+    for (op, h) in &r.per_op {
+        total += h.count();
+        ops.set(op.as_str(), h.to_json());
+    }
+    let mut extra = Value::obj();
+    for check in &c.checks {
+        if let Check::AccuracyRecovery {
+            baseline_acc,
+            poisoned_acc,
+            ..
+        } = check
+        {
+            extra
+                .set("baseline_acc", *baseline_acc)
+                .set("poisoned_acc", *poisoned_acc);
+        }
+    }
+    let mut o = Value::obj();
+    o.set("name", c.name.as_str())
+        .set("seed", c.seed.to_string())
+        .set("tenants", c.tenants.len())
+        .set("ops_total", total)
+        .set("wall_s", r.wall_s)
+        .set("ops", ops);
+    if !matches!(extra, Value::Obj(ref m) if m.is_empty()) {
+        o.set("recovery", extra);
+    }
+    o
+}
+
+/// The full `BENCH_scenarios.json` document (schema pinned by
+/// `tests/scenarios.rs::bench_schema_is_pinned`).
+pub fn report_json(scale: usize, entries: Vec<Value>) -> Value {
+    let mut o = Value::obj();
+    o.set("suite", "scenarios")
+        .set("scale", scale)
+        .set("lazy_policy", LazyPolicy::from_env().to_string())
+        .set("scenarios", Value::Arr(entries));
+    o
+}
+
+/// Write the report where every other BENCH file lands (repo root when run
+/// via `cargo bench`).
+pub fn save_report<P: AsRef<std::path::Path>>(path: P, report: &Value) -> anyhow::Result<()> {
+    std::fs::write(path.as_ref(), report.to_pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(kind: ScenarioKind, seed: u64) -> Scenario {
+        Scenario {
+            kind,
+            scale: 80,
+            seed,
+        }
+    }
+
+    #[test]
+    fn compilation_is_deterministic_for_every_kind() {
+        for kind in [
+            ScenarioKind::AdversarialChurn,
+            ScenarioKind::PoisonPurge,
+            ScenarioKind::SlidingWindow,
+            ScenarioKind::MultiTenantZipf,
+            ScenarioKind::Fuzz,
+        ] {
+            let a = tiny(kind, 7).compile();
+            let b = tiny(kind, 7).compile();
+            assert_eq!(a.ops, b.ops, "{kind:?}: op stream must be seed-deterministic");
+            assert_eq!(
+                forest_to_json(&a.tenants[0].oracle),
+                forest_to_json(&b.tenants[0].oracle),
+                "{kind:?}: oracle state must be seed-deterministic"
+            );
+            let c = tiny(kind, 8).compile();
+            assert_ne!(a.ops, c.ops, "{kind:?}: different seeds must diverge");
+        }
+    }
+
+    #[test]
+    fn scripts_cover_their_advertised_shapes() {
+        let churn = tiny(ScenarioKind::AdversarialChurn, 3).compile();
+        assert!(churn.ops.iter().all(|o| !matches!(o, ScenarioOp::Add { .. })));
+        assert!(matches!(churn.checks.as_slice(), [Check::ScratchRetrain { .. }]));
+
+        let purge = tiny(ScenarioKind::PoisonPurge, 3).compile();
+        let adds = purge.ops.iter().filter(|o| matches!(o, ScenarioOp::Add { .. })).count();
+        let deleted: usize = purge
+            .ops
+            .iter()
+            .filter_map(|o| match o {
+                ScenarioOp::Delete { ids, .. } => Some(ids.len()),
+                _ => None,
+            })
+            .sum();
+        assert!(adds > 0 && deleted == adds, "purge must delete exactly the injected ids");
+
+        let zipf_sc = tiny(ScenarioKind::MultiTenantZipf, 3).compile();
+        assert_eq!(zipf_sc.tenants.len(), 4);
+        assert!(
+            zipf_sc.tenants.iter().any(|t| t.oracle.params().subsampled()),
+            "one zipf tenant must run Occ(q)"
+        );
+    }
+
+    #[test]
+    fn zipf_routing_is_head_heavy() {
+        let mut rng = Rng::new(9);
+        let mut counts = [0usize; 4];
+        for _ in 0..4000 {
+            counts[zipf(&mut rng, 4, 1.2)] += 1;
+        }
+        assert!(counts[0] > counts[1] && counts[1] > counts[3], "{counts:?}");
+    }
+
+    #[test]
+    fn fuzz_scenario_replays_and_cross_checks_at_tiny_scale() {
+        let c = tiny(ScenarioKind::Fuzz, 11).compile();
+        let r = replay(&c);
+        cross_check(&c, &r);
+        assert!(r.per_op.values().map(|h| h.count()).sum::<u64>() == c.ops.len() as u64);
+    }
+
+    #[test]
+    fn per_tenant_histograms_merge_into_the_rollup() {
+        let c = tiny(ScenarioKind::MultiTenantZipf, 5).compile();
+        let r = replay(&c);
+        cross_check(&c, &r);
+        for (op, rollup) in &r.per_op {
+            let split: u64 = r
+                .per_tenant_op
+                .iter()
+                .filter(|((_, o), _)| o == op)
+                .map(|(_, h)| h.count())
+                .sum();
+            assert_eq!(rollup.count(), split, "merge must preserve '{op}' mass");
+        }
+    }
+
+    #[test]
+    fn scenario_json_carries_the_histogram_entries() {
+        let c = tiny(ScenarioKind::Fuzz, 13).compile();
+        let r = replay(&c);
+        let entry = scenario_json(&c, &r);
+        assert_eq!(entry.get("name").unwrap().as_str(), Some("fuzz"));
+        let ops = entry.get("ops").unwrap();
+        let pred = ops.get("predict").expect("fuzz scripts always predict");
+        for key in ["count", "p50_s", "p95_s", "p99_s", "max_s"] {
+            assert!(pred.get(key).is_some(), "missing '{key}'");
+        }
+        let report = report_json(80, vec![entry]);
+        assert_eq!(report.get("suite").unwrap().as_str(), Some("scenarios"));
+        assert!(report.get("lazy_policy").is_some());
+    }
+}

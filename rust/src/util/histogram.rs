@@ -1,0 +1,357 @@
+//! Fixed-bucket log-spaced latency histogram (no hdrhistogram in the
+//! offline image).
+//!
+//! The bucket layout is a compile-time constant shared by every histogram:
+//! [`BUCKETS_PER_DECADE`] log-spaced buckets per decade across
+//! [`LO_SECONDS`, `HI_SECONDS`) (100 ns … 100 s), plus an underflow bucket
+//! (index 0, everything `< LO_SECONDS` including zero and non-finite
+//! garbage) and an overflow bucket (the last index, everything
+//! `>= HI_SECONDS`). A fixed layout is what makes [`Histogram::merge`]
+//! exact and associative: merging is element-wise counter addition, so
+//! `(a ⊕ b) ⊕ c == a ⊕ (b ⊕ c)` bucket-for-bucket and scenario drivers can
+//! aggregate per-tenant histograms into per-op rollups without losing
+//! anything but the sub-bucket ordering they never had.
+//!
+//! Quantiles are bucket-resolution upper bounds (the conservative side for
+//! latency reporting), clamped into the exactly-tracked `[min, max]` range —
+//! so a single-sample histogram reports every quantile as exactly that
+//! sample, and `quantile` is monotone in q by construction (cumulative scan
+//! + monotone clamp). `count`, `sum`, `min`, `max` are tracked exactly.
+
+use crate::util::json::Value;
+
+/// Lower bound of the finest bucket: 100 ns.
+pub const LO_SECONDS: f64 = 1e-7;
+/// Upper bound of the coarsest non-overflow bucket: 100 s.
+pub const HI_SECONDS: f64 = 1e2;
+/// Log-spaced buckets per decade.
+pub const BUCKETS_PER_DECADE: usize = 8;
+/// Decades spanned by the regular buckets (1e-7 … 1e2).
+pub const DECADES: usize = 9;
+/// Total buckets: underflow + regular + overflow.
+pub const N_BUCKETS: usize = DECADES * BUCKETS_PER_DECADE + 2;
+
+/// Mergeable latency histogram over the fixed global bucket layout.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: [u64; N_BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// Upper bound (seconds) of bucket `i` in the regular range; `bound(0)` is
+/// `LO_SECONDS` (the underflow bucket's ceiling).
+fn bound(i: usize) -> f64 {
+    LO_SECONDS * 10f64.powf(i as f64 / BUCKETS_PER_DECADE as f64)
+}
+
+/// Bucket index for a sample. Non-positive and non-finite samples (a clock
+/// that went backwards, a NaN from a division) land in the underflow bucket
+/// rather than poisoning the layout.
+fn index(x: f64) -> usize {
+    if !(x >= LO_SECONDS) {
+        return 0;
+    }
+    if x >= HI_SECONDS {
+        return N_BUCKETS - 1;
+    }
+    // log10(x / LO) in units of buckets; the guards above keep the result
+    // inside the regular range even at the exact boundaries.
+    let b = ((x / LO_SECONDS).log10() * BUCKETS_PER_DECADE as f64).floor() as usize;
+    (1 + b).min(N_BUCKETS - 2)
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: [0; N_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Record one sample (seconds).
+    pub fn record(&mut self, seconds: f64) {
+        self.counts[index(seconds)] += 1;
+        self.count += 1;
+        let s = if seconds.is_finite() { seconds } else { 0.0 };
+        self.sum += s;
+        self.min = self.min.min(s);
+        self.max = self.max.max(s);
+    }
+
+    /// Total samples recorded (merges preserve this exactly).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of samples (seconds).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean, 0.0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact minimum sample, 0.0 when empty.
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum sample, 0.0 when empty.
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Raw bucket counters (layout documented at module level).
+    pub fn bucket_counts(&self) -> &[u64; N_BUCKETS] {
+        &self.counts
+    }
+
+    /// Fold `other` into `self`: element-wise counter addition plus exact
+    /// count/sum/min/max combination. Associative and commutative because
+    /// every histogram shares the same fixed bucket layout.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.count > 0 {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+    }
+
+    /// Bucket-resolution quantile for `q ∈ [0, 1]` (seconds): the upper
+    /// bound of the bucket containing the `ceil(q·count)`-th smallest
+    /// sample, clamped into the exact `[min, max]` range. 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        let mut bucket = N_BUCKETS - 1;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                bucket = i;
+                break;
+            }
+        }
+        // Upper bound of the bucket: underflow caps at LO, overflow (and
+        // anything past the table) caps at the exact max.
+        let ub = if bucket == 0 {
+            LO_SECONDS
+        } else if bucket >= N_BUCKETS - 1 {
+            self.max
+        } else {
+            bound(bucket)
+        };
+        ub.clamp(self.min, self.max)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// JSON summary — the per-op-type entry shape of `BENCH_scenarios.json`
+    /// (pinned by `tests/scenarios.rs::bench_schema_is_pinned`).
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("count", self.count)
+            .set("mean_s", self.mean())
+            .set("min_s", self.min())
+            .set("max_s", self.max())
+            .set("p50_s", self.p50())
+            .set("p95_s", self.p95())
+            .set("p99_s", self.p99());
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+    use crate::util::rng::Rng;
+
+    fn sample(rng: &mut Rng) -> f64 {
+        // Log-uniform across (and beyond) the bucket range, with a sliver
+        // of pathological inputs.
+        match rng.index(20) {
+            0 => 0.0,
+            1 => -rng.f64(),
+            2 => 1e3 * (1.0 + rng.f64()),
+            _ => 10f64.powf(rng.range_f32(-8.0, 2.5) as f64),
+        }
+    }
+
+    fn hist_of(samples: &[f64]) -> Histogram {
+        let mut h = Histogram::new();
+        for &s in samples {
+            h.record(s);
+        }
+        h
+    }
+
+    fn assert_same(a: &Histogram, b: &Histogram) {
+        assert_eq!(a.bucket_counts(), b.bucket_counts());
+        assert_eq!(a.count(), b.count());
+        assert!((a.sum() - b.sum()).abs() < 1e-12 * (1.0 + a.sum().abs()));
+        assert_eq!(a.min(), b.min());
+        assert_eq!(a.max(), b.max());
+    }
+
+    #[test]
+    fn merge_is_associative_and_count_preserving() {
+        check("histogram merge associativity", Config::default(), |rng| {
+            let mk = |rng: &mut Rng| {
+                let n = rng.index(40);
+                let xs: Vec<f64> = (0..n).map(|_| sample(rng)).collect();
+                hist_of(&xs)
+            };
+            let (a, b, c) = (mk(rng), mk(rng), mk(rng));
+
+            let mut left = a.clone();
+            left.merge(&b);
+            left.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            assert_same(&left, &right);
+            assert_eq!(left.count(), a.count() + b.count() + c.count());
+            // Quantiles are a pure function of the merged state.
+            for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+                assert_eq!(left.quantile(q), right.quantile(q));
+            }
+        });
+    }
+
+    #[test]
+    fn merge_matches_direct_recording() {
+        check("merge == record-all", Config::default(), |rng| {
+            let n1 = rng.index(30);
+            let n2 = rng.index(30);
+            let xs: Vec<f64> = (0..n1 + n2).map(|_| sample(rng)).collect();
+            let mut merged = hist_of(&xs[..n1]);
+            merged.merge(&hist_of(&xs[n1..]));
+            assert_same(&merged, &hist_of(&xs));
+        });
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_bracketed() {
+        check("quantile monotonicity", Config::default(), |rng| {
+            let n = 1 + rng.index(60);
+            let xs: Vec<f64> = (0..n).map(|_| sample(rng)).collect();
+            let h = hist_of(&xs);
+            let mut prev = f64::NEG_INFINITY;
+            for i in 0..=20 {
+                let v = h.quantile(i as f64 / 20.0);
+                assert!(v >= prev, "quantile must be monotone in q ({v} < {prev})");
+                assert!(v >= h.min() && v <= h.max(), "quantile outside [min, max]");
+                prev = v;
+            }
+        });
+    }
+
+    #[test]
+    fn single_sample_is_exact_at_every_quantile() {
+        for x in [3e-7, 1e-4, 0.25, 5.0] {
+            let h = hist_of(&[x]);
+            for q in [0.0, 0.01, 0.5, 0.99, 1.0] {
+                assert_eq!(h.quantile(q), x, "single-sample clamp must be exact");
+            }
+            assert_eq!(h.max(), x);
+            assert_eq!(h.mean(), x);
+        }
+    }
+
+    #[test]
+    fn bucket_boundary_edges() {
+        // Exactly LO lands in the first regular bucket, strictly below it
+        // underflows; HI and beyond overflow; garbage underflows.
+        assert_eq!(index(LO_SECONDS), 1);
+        assert!(index(LO_SECONDS * 0.999) == 0);
+        assert_eq!(index(0.0), 0);
+        assert_eq!(index(-1.0), 0);
+        assert_eq!(index(f64::NAN), 0);
+        assert_eq!(index(HI_SECONDS), N_BUCKETS - 1);
+        assert_eq!(index(f64::INFINITY), N_BUCKETS - 1);
+        // Monotone: bucket index never decreases as the sample grows.
+        let mut prev = 0;
+        let mut x = LO_SECONDS / 4.0;
+        while x < HI_SECONDS * 4.0 {
+            let i = index(x);
+            assert!(i >= prev, "index must be monotone in the sample");
+            prev = i;
+            x *= 1.07;
+        }
+        // Every regular boundary maps inside the regular range.
+        for i in 1..=DECADES * BUCKETS_PER_DECADE {
+            let b = index(bound(i - 1));
+            assert!(b >= 1 && b <= N_BUCKETS - 2, "bound {i} escaped: {b}");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        let j = h.to_json();
+        assert_eq!(j.get("count").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn json_summary_has_the_pinned_keys() {
+        let h = hist_of(&[1e-4, 2e-4, 3e-4, 1e-2]);
+        let j = h.to_json();
+        for key in ["count", "mean_s", "min_s", "max_s", "p50_s", "p95_s", "p99_s"] {
+            assert!(j.get(key).is_some(), "missing histogram key {key}");
+        }
+        assert_eq!(j.get("count").unwrap().as_u64(), Some(4));
+        let p99 = j.get("p99_s").unwrap().as_f64().unwrap();
+        let p50 = j.get("p50_s").unwrap().as_f64().unwrap();
+        assert!(p99 >= p50);
+    }
+}

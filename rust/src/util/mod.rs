@@ -1,10 +1,12 @@
 //! Substrate utilities built from scratch for the offline environment:
-//! RNG, JSON, CLI parsing, thread pool, statistics, property testing, timing,
-//! and text-table rendering for the experiment harness.
+//! RNG, JSON, CLI parsing, thread pool, statistics, latency histograms,
+//! property testing, timing, and text-table rendering for the experiment
+//! harness.
 
 pub mod cli;
 pub mod fsio;
 pub mod hash;
+pub mod histogram;
 pub mod json;
 pub mod prop;
 pub mod rng;

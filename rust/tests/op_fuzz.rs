@@ -37,6 +37,15 @@
 //! Seeds come from `DARE_FUZZ_SEEDS` (comma-separated) when set — CI pins a
 //! fixed list — else a built-in 22-seed default. No external fuzzing deps:
 //! seeded `util::rng` streams, same style as `proptests.rs`.
+//!
+//! A fourth leg (ISSUE 9) fuzzes at the *scenario* layer: randomized
+//! `exp::scenarios` specs (multi-tenant scripts over the full op
+//! vocabulary, adversarial or random delete targets, Occ(q) tenants) are
+//! compiled once and replayed twice through the coordinator stack — the
+//! replays must agree byte-for-byte on final forest state and
+//! count-for-count on per-op histograms, and the first replay must pass
+//! the harness's full oracle cross-check, under the ambient
+//! `DARE_LAZY_POLICY`.
 
 use dare::coordinator::api::{encode_response, Response};
 use dare::coordinator::{ServiceConfig, ShardedForest, UnlearningService};
@@ -1115,4 +1124,49 @@ fn follower_tailing_the_leader_matches_recovery_bit_for_bit() {
         let _ = std::fs::remove_dir_all(&follower_root);
     }
     let _ = std::fs::remove_dir_all(&leader_root);
+}
+
+/// Leg 4 (ISSUE 9): fuzz the scenario harness itself. Each seed draws a
+/// randomized multi-tenant script (`ScenarioKind::Fuzz`: adds, single and
+/// dead-id deletes, adversarial targets, cost reads, flush/compact/stats)
+/// — compiled once, replayed twice against a fresh service each time.
+/// Determinism contract (DESIGN.md §14): replays of one compiled script
+/// are byte-identical in final forest state and identical in per-op
+/// counts; latencies are the only free variable. The first replay also
+/// runs the full cross-check (differential oracle, telemetry coherence),
+/// so this leg fuzzes the checker as much as the service.
+#[test]
+fn fuzzed_scenarios_replay_deterministically() {
+    use dare::exp::scenarios::{cross_check, replay, Scenario, ScenarioKind};
+
+    for seed in fuzz_seeds().into_iter().take(4) {
+        let sc = Scenario {
+            kind: ScenarioKind::Fuzz,
+            scale: 160,
+            seed: mix_seed(&[seed, 0x5CE2]),
+        };
+        let compiled = sc.compile();
+        // The spec is a pure function of its seed: an independent compile
+        // must agree op-for-op (and PartialEq sees rows, ids, and routing).
+        assert_eq!(
+            compiled.ops,
+            sc.compile().ops,
+            "seed {seed}: scenario compilation is not deterministic"
+        );
+
+        let first = replay(&compiled);
+        cross_check(&compiled, &first);
+
+        let second = replay(&compiled);
+        assert_eq!(
+            first.final_snapshots(&compiled),
+            second.final_snapshots(&compiled),
+            "seed {seed}: scenario replay diverged in final forest state"
+        );
+        assert_eq!(
+            first.op_counts(),
+            second.op_counts(),
+            "seed {seed}: scenario replay diverged in per-op counts"
+        );
+    }
 }

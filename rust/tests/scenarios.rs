@@ -1,0 +1,122 @@
+//! Scenario-harness smoke suite (DESIGN.md §14): each canonical scenario
+//! compiles at `DARE_SCENARIO_SCALE` (CI pins 2000; default 400), replays
+//! against the full coordinator stack under the ambient
+//! `DARE_LAZY_POLICY`, and must
+//!
+//! 1. pass [`cross_check`] — differential-oracle byte equality, probe
+//!    prediction bit equality, telemetry coherence, and the attached
+//!    scenario checks (from-scratch retrain, exact accuracy recovery);
+//! 2. replay *reproducibly*: a second replay of the same compiled script
+//!    yields byte-identical final snapshots and identical per-op counts
+//!    (latencies are the only thing allowed to differ between replays).
+//!
+//! Plus: compile determinism across processes' worth of state (two
+//! independent compiles), and the pinned `BENCH_scenarios.json` schema.
+
+use dare::exp::scenarios::{
+    cross_check, replay, report_json, scenario_json, scenario_scale, Scenario, ScenarioKind,
+};
+
+/// Compile → replay → cross-check → replay again; the second pass must
+/// reproduce the first bit-for-bit (snapshots) and count-for-count.
+fn run_scenario(kind: ScenarioKind) {
+    let sc = Scenario {
+        kind,
+        scale: scenario_scale(),
+        seed: 0xCAFE + kind as u64,
+    };
+    let compiled = sc.compile();
+    assert!(!compiled.ops.is_empty());
+
+    let first = replay(&compiled);
+    cross_check(&compiled, &first);
+
+    let second = replay(&compiled);
+    assert_eq!(
+        first.final_snapshots(&compiled),
+        second.final_snapshots(&compiled),
+        "{}: replaying the same compiled script must reproduce the final \
+         forest state byte-for-byte",
+        compiled.name
+    );
+    assert_eq!(
+        first.op_counts(),
+        second.op_counts(),
+        "{}: replays must agree on per-op-type counts",
+        compiled.name
+    );
+    cross_check(&compiled, &second);
+}
+
+#[test]
+fn adversarial_churn_replays_exactly() {
+    run_scenario(ScenarioKind::AdversarialChurn);
+}
+
+#[test]
+fn poison_purge_replays_exactly_and_recovers_accuracy() {
+    run_scenario(ScenarioKind::PoisonPurge);
+}
+
+#[test]
+fn sliding_window_replays_exactly() {
+    run_scenario(ScenarioKind::SlidingWindow);
+}
+
+#[test]
+fn multi_tenant_zipf_replays_exactly() {
+    run_scenario(ScenarioKind::MultiTenantZipf);
+}
+
+#[test]
+fn compilation_is_a_pure_function_of_the_spec() {
+    for sc in Scenario::canonical(scenario_scale().min(120)) {
+        let a = sc.compile();
+        let b = sc.compile();
+        assert_eq!(a.ops, b.ops, "{}: op streams diverged across compiles", a.name);
+        assert_eq!(
+            a.tenants.len(),
+            b.tenants.len(),
+            "{}: tenant sets diverged",
+            a.name
+        );
+    }
+}
+
+/// `BENCH_scenarios.json` schema pin: downstream tooling (CI artifact
+/// diffing, the perf-history scripts) reads these exact keys. Extending
+/// the schema is fine; renaming or dropping keys is a breaking change that
+/// must be made deliberately, here.
+#[test]
+fn bench_schema_is_pinned() {
+    let sc = Scenario {
+        kind: ScenarioKind::Fuzz,
+        scale: 80,
+        seed: 42,
+    };
+    let compiled = sc.compile();
+    let r = replay(&compiled);
+    let entry = scenario_json(&compiled, &r);
+    let report = report_json(80, vec![entry]);
+
+    assert_eq!(report.get("suite").unwrap().as_str(), Some("scenarios"));
+    assert_eq!(report.get("scale").unwrap().as_u64(), Some(80));
+    assert!(report.get("lazy_policy").unwrap().as_str().is_some());
+
+    let scenarios = report.get("scenarios").unwrap().as_arr().unwrap();
+    assert_eq!(scenarios.len(), 1);
+    let s = &scenarios[0];
+    for key in ["name", "seed", "tenants", "ops_total", "wall_s", "ops"] {
+        assert!(s.get(key).is_some(), "scenario entry missing '{key}'");
+    }
+    let ops = s.get("ops").unwrap();
+    let pred = ops.get("predict").expect("fuzz scripts always predict");
+    for key in [
+        "count", "mean_s", "min_s", "max_s", "p50_s", "p95_s", "p99_s",
+    ] {
+        assert!(pred.get(key).is_some(), "histogram entry missing '{key}'");
+    }
+    // Total op mass in the report equals the script length.
+    let total = s.get("ops_total").unwrap().as_u64().unwrap();
+    assert_eq!(total, compiled.ops.len() as u64);
+}
