@@ -1,0 +1,175 @@
+//! Time-budgeted, deadline-aware serving (DESIGN.md §15): several tenants
+//! behind one coordinator with a `Scheduler` attached — ticket queues,
+//! learned per-(tenant, op, batch-bucket) cost models, EDF for deadlined
+//! traffic, deficit-round-robin fairness for the rest, admission control
+//! past a queue-depth bound, and background compaction *bidding* for
+//! slack instead of stealing foreground time.
+//!
+//!     cargo run --release --offline --example scheduled_serving
+//!
+//! The example drives `submit` / `run_for` directly so every scheduling
+//! decision is visible; behind `serve()` the attached scheduler does the
+//! same thing with a runner thread (`dare serve --budget-ms 10`).
+
+use dare::coordinator::api::ApiError;
+use dare::coordinator::{
+    Scheduler, SchedulerConfig, ServiceConfig, Submitted, UnlearningService,
+};
+use dare::data::synth::{generate, SynthSpec};
+use dare::forest::{DareForest, Params};
+use dare::util::json::{parse, Value};
+use std::time::Duration;
+
+fn tenant_forest(n: usize, seed: u64) -> DareForest {
+    let data = generate(
+        &SynthSpec {
+            n,
+            informative: 4,
+            redundant: 1,
+            noise: 2,
+            flip: 0.05,
+            ..Default::default()
+        },
+        seed,
+    );
+    DareForest::fit(
+        data,
+        &Params {
+            n_trees: 6,
+            max_depth: 6,
+            k: 8,
+            ..Default::default()
+        },
+        seed ^ 0xDA2E,
+    )
+}
+
+fn predict_req(tenant: &str, deadline_ms: Option<u64>) -> Value {
+    let deadline = deadline_ms
+        .map(|ms| format!(r#","deadline_ms":{ms}"#))
+        .unwrap_or_default();
+    parse(&format!(
+        r#"{{"v":1,"model":"{tenant}","op":"predict","rows":[[0.2,-0.4,1.0,0.0,0.6,-1.2,0.8]]{deadline}}}"#
+    ))
+    .unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("training two tenant models...");
+    let svc = UnlearningService::with_models(
+        vec![
+            ("gold".to_string(), tenant_forest(900, 7)),
+            ("free".to_string(), tenant_forest(900, 8)),
+        ],
+        ServiceConfig {
+            // Compaction belongs to the scheduler's slack in this example.
+            compact_interval: Duration::from_secs(3600),
+            ..Default::default()
+        },
+    );
+
+    // Gold pays for 3x the service share; 10 ms budget cycles; refuse a
+    // tenant past 64 queued tickets.
+    let mut cfg = SchedulerConfig::default();
+    cfg.budget = Duration::from_millis(10);
+    cfg.queue_depth = 64;
+    cfg.weights =
+        SchedulerConfig::parse_weights("gold=3,free=1").map_err(|e| anyhow::anyhow!(e))?;
+    let sched = Scheduler::attach(&svc, cfg);
+
+    // --- a synchronized burst: both tenants pile on at once ----------------
+    let mut replies = Vec::new();
+    for _ in 0..40 {
+        for tenant in ["gold", "free"] {
+            match sched.submit(&predict_req(tenant, None))? {
+                Submitted::Queued(rx) => replies.push(rx),
+                Submitted::Immediate(_) => unreachable!("predict always queues"),
+            }
+        }
+    }
+    // One deadlined straggler: EDF pulls it (and its tenant's queue) ahead
+    // of every no-deadline ticket, without reordering within the tenant.
+    let Submitted::Queued(urgent) = sched.submit(&predict_req("free", Some(15)))? else {
+        unreachable!()
+    };
+
+    let mut cycles = 0;
+    while sched.queued_total() > 0 {
+        let r = sched.run_for(Duration::from_millis(10));
+        cycles += 1;
+        if cycles <= 3 {
+            println!(
+                "cycle {cycles}: executed {} tickets in {:.3} ms (budget 10 ms, {} left)",
+                r.executed,
+                r.spent_s * 1e3,
+                r.remaining
+            );
+        }
+    }
+    println!("burst drained in {cycles} budget cycles");
+    let probs = urgent.recv()?;
+    println!(
+        "deadlined request served ok={}",
+        probs.get("ok").and_then(Value::as_bool).unwrap_or(false)
+    );
+    for rx in replies {
+        assert_eq!(rx.recv()?.get("ok").and_then(Value::as_bool), Some(true));
+    }
+    for tenant in ["gold", "free"] {
+        let ts = sched.tenant_stats(tenant);
+        println!(
+            "  {:<5} weight={} executed={} mean wait={:.3} ms",
+            tenant,
+            ts.get("weight").and_then(Value::as_f64).unwrap_or(1.0),
+            ts.get("executed").and_then(Value::as_u64).unwrap_or(0),
+            ts.get("waited_s").and_then(Value::as_f64).unwrap_or(0.0) * 1e3
+                / ts.get("executed").and_then(Value::as_u64).unwrap_or(1).max(1) as f64
+        );
+    }
+
+    // --- admission control: the 65th queued ticket is refused ---------------
+    let mut queued = Vec::new();
+    let refusal = loop {
+        match sched.submit(&predict_req("free", None)) {
+            Ok(Submitted::Queued(rx)) => queued.push(rx),
+            Ok(Submitted::Immediate(_)) => unreachable!(),
+            Err(e) => break e,
+        }
+    };
+    let retry_after_ms = match refusal {
+        ApiError::Overloaded { retry_after_ms } => retry_after_ms,
+        other => anyhow::bail!("expected Overloaded, got {other:?}"),
+    };
+    println!(
+        "admission control: refused after {} queued tickets, retry_after_ms={retry_after_ms}",
+        queued.len()
+    );
+    while sched.queued_total() > 0 {
+        sched.run_for(Duration::from_millis(10));
+    }
+    for rx in queued {
+        rx.recv()?;
+    }
+
+    // --- background compaction bids for slack --------------------------------
+    let delete =
+        parse(r#"{"v":1,"model":"gold","op":"delete","ids":[3,4,5,6,7,8,9,10]}"#).unwrap();
+    if let Submitted::Queued(rx) = sched.submit(&delete)? {
+        while sched.queued_total() > 0 {
+            sched.run_for(Duration::from_millis(10));
+        }
+        rx.recv()?;
+    }
+    assert!(sched.bid_compact("gold", 1_000));
+    let r = sched.run_for(Duration::from_millis(10));
+    let model = svc.registry().get("gold")?;
+    println!(
+        "slack cycle ran {} background ticket(s); compact_ticks={}, pending retrains={}",
+        r.executed_bg,
+        model.telemetry().counter("compact_ticks"),
+        model.sharded().pending_retrains()
+    );
+
+    println!("scheduled serving example done");
+    Ok(())
+}

@@ -1,0 +1,114 @@
+//! Bench: time-budgeted scheduled serving (DESIGN.md §15) under the
+//! `burst` scenario — synchronized multi-tenant arrival spikes, the shape
+//! the scheduler exists for.
+//!
+//! The burst script is compiled once at `DARE_SCENARIO_SCALE`, replayed
+//! once directly through `UnlearningService::handle` (the baseline), and
+//! then through a `Scheduler` at several budget settings. For each budget
+//! the report carries budget utilization (mean spent/budget across
+//! `run_for` cycles), the worst per-cycle overrun, and the
+//! submit→response sojourn distribution (p50/p95/p99/max) — the serving
+//! latency a tenant actually experiences under the spike. Every replay is
+//! cross-checked against the compiled differential oracle first, so
+//! numbers from a diverged run never get written.
+//!
+//! Emits `BENCH_scheduler.json` at the repo root.
+
+use dare::exp::scenarios::{
+    cross_check, replay, replay_scheduled, save_report, scenario_scale, Scenario,
+    ScenarioKind,
+};
+use dare::forest::LazyPolicy;
+use dare::util::json::Value;
+use std::time::Duration;
+
+fn sojourn_json(h: &dare::util::histogram::Histogram) -> Value {
+    let mut o = Value::obj();
+    o.set("count", h.count())
+        .set("p50_s", h.p50())
+        .set("p95_s", h.p95())
+        .set("p99_s", h.p99())
+        .set("max_s", h.max());
+    o
+}
+
+fn main() -> anyhow::Result<()> {
+    let scale = scenario_scale();
+    let sc = Scenario {
+        kind: ScenarioKind::Burst,
+        scale,
+        seed: 0xB1257,
+    };
+    let compiled = sc.compile();
+
+    let direct = replay(&compiled);
+    cross_check(&compiled, &direct);
+    println!(
+        "burst (direct)     scale={} ops={} wall={:.3}s",
+        scale,
+        compiled.ops.len(),
+        direct.wall_s
+    );
+    let mut direct_json = Value::obj();
+    direct_json
+        .set("ops_total", compiled.ops.len())
+        .set("wall_s", direct.wall_s);
+
+    let mut runs = Vec::new();
+    for budget_ms in [2u64, 5, 10] {
+        let budget = Duration::from_millis(budget_ms);
+        let r = replay_scheduled(&compiled, budget);
+        cross_check(&compiled, &r.replayed);
+        assert_eq!(
+            direct.final_snapshots(&compiled),
+            r.replayed.final_snapshots(&compiled),
+            "scheduled replay diverged from the direct baseline"
+        );
+
+        let busy: Vec<_> = r.cycles.iter().filter(|c| c.executed > 0).collect();
+        let utilization = if busy.is_empty() {
+            0.0
+        } else {
+            busy.iter().map(|c| c.spent_s / c.budget_s).sum::<f64>() / busy.len() as f64
+        };
+        let overrun_max_s = busy
+            .iter()
+            .map(|c| (c.spent_s - c.budget_s).max(0.0))
+            .fold(0.0f64, f64::max);
+        println!(
+            "burst (sched {budget_ms:>2}ms) cycles={:<5} util={:.3} overrun_max={:.6}s \
+             sojourn p50={:.6}s p99={:.6}s wall={:.3}s",
+            r.cycles.len(),
+            utilization,
+            overrun_max_s,
+            r.sojourn.p50(),
+            r.sojourn.p99(),
+            r.replayed.wall_s
+        );
+
+        let mut o = Value::obj();
+        o.set("budget_ms", budget_ms)
+            .set("cycles", r.cycles.len())
+            .set("busy_cycles", busy.len())
+            .set("utilization", utilization)
+            .set("overrun_max_s", overrun_max_s)
+            .set("wall_s", r.replayed.wall_s)
+            .set("sojourn", sojourn_json(&r.sojourn));
+        runs.push(o);
+    }
+
+    let mut report = Value::obj();
+    report
+        .set("suite", "scheduler")
+        .set("scale", scale)
+        .set("lazy_policy", LazyPolicy::from_env().to_string())
+        .set("direct", direct_json)
+        .set("scheduled", Value::Arr(runs));
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .join("BENCH_scheduler.json");
+    save_report(&out, &report)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

@@ -57,6 +57,10 @@ pub enum ApiError {
     /// The addressed model is a read-serving follower (DESIGN.md §12):
     /// mutations must go to `leader` instead.
     ReadOnly { leader: String },
+    /// Admission control (DESIGN.md §15): the tenant's scheduler queue is
+    /// at its depth bound. `retry_after_ms` is the predicted drain time of
+    /// the queue — a structured backoff hint, not a promise.
+    Overloaded { retry_after_ms: u64 },
     /// Client-side only: the transport failed (IO, unparseable response)
     /// after `attempts` tries. Never emitted by the server.
     Transport { msg: String, attempts: u32 },
@@ -72,6 +76,7 @@ impl ApiError {
             ApiError::UnknownId(_) => "unknown_id",
             ApiError::ShuttingDown => "shutting_down",
             ApiError::ReadOnly { .. } => "read_only",
+            ApiError::Overloaded { .. } => "overloaded",
             ApiError::Transport { .. } => "transport",
         }
     }
@@ -93,6 +98,9 @@ impl fmt::Display for ApiError {
                 write!(f, "instance {id} is not a live training instance")
             }
             ApiError::ShuttingDown => write!(f, "service is shutting down"),
+            ApiError::Overloaded { retry_after_ms } => {
+                write!(f, "tenant queue is full; retry after {retry_after_ms} ms")
+            }
         }
     }
 }
@@ -279,6 +287,17 @@ fn num_row(cells: &[Value]) -> Result<Vec<f32>, ApiError> {
         .iter()
         .map(|c| c.as_f64().map(|x| x as f32).ok_or_else(|| bad("row cells must be numbers")))
         .collect()
+}
+
+/// Scheduling metadata (DESIGN.md §15): an optional top-level
+/// `"deadline_ms"` key — milliseconds from arrival by which the caller
+/// wants the op served. Deliberately NOT a [`Request`] field: a deadline
+/// describes *this delivery*, not the operation, so it must never be
+/// journaled into the WAL or shipped to replicas (a replayed op's deadline
+/// is meaningless). The scheduler peels it off the raw wire object before
+/// `decode`, which ignores unknown keys as always.
+pub fn deadline_ms(req: &Value) -> Result<Option<u64>, ApiError> {
+    opt_uint(req, "deadline_ms")
 }
 
 /// Decode one wire object into a typed [`Request`].
@@ -617,6 +636,9 @@ pub fn err_value(e: &ApiError) -> Value {
         ApiError::Transport { attempts, .. } => {
             eo.set("attempts", *attempts as u64);
         }
+        ApiError::Overloaded { retry_after_ms } => {
+            eo.set("retry_after_ms", *retry_after_ms);
+        }
         _ => {}
     }
     let mut o = Value::obj();
@@ -652,6 +674,9 @@ pub fn error_from_wire(resp: &Value) -> ApiError {
         "shutting_down" => ApiError::ShuttingDown,
         "read_only" => ApiError::ReadOnly {
             leader: e.get("leader").and_then(Value::as_str).unwrap_or("").to_string(),
+        },
+        "overloaded" => ApiError::Overloaded {
+            retry_after_ms: e.get("retry_after_ms").and_then(Value::as_u64).unwrap_or(0),
         },
         "transport" => ApiError::Transport {
             msg,
@@ -939,6 +964,19 @@ mod tests {
     }
 
     #[test]
+    fn deadline_ms_is_metadata_not_part_of_the_request() {
+        let with = parse(r#"{"v":1,"model":"m","op":"stats","deadline_ms":250}"#).unwrap();
+        let without = parse(r#"{"v":1,"model":"m","op":"stats"}"#).unwrap();
+        assert_eq!(deadline_ms(&with).unwrap(), Some(250));
+        assert_eq!(deadline_ms(&without).unwrap(), None);
+        // decode is blind to the key: same typed request either way, so
+        // nothing downstream (WAL, replication) can ever see a deadline.
+        assert_eq!(decode(&with).unwrap(), decode(&without).unwrap());
+        assert!(deadline_ms(&parse(r#"{"op":"stats","deadline_ms":-5}"#).unwrap()).is_err());
+        assert!(deadline_ms(&parse(r#"{"op":"stats","deadline_ms":"soon"}"#).unwrap()).is_err());
+    }
+
+    #[test]
     fn error_wire_roundtrip_every_variant() {
         for e in [
             ApiError::BadRequest("nope".to_string()),
@@ -949,6 +987,7 @@ mod tests {
             ApiError::ReadOnly {
                 leader: "10.0.0.1:7878".to_string(),
             },
+            ApiError::Overloaded { retry_after_ms: 120 },
             ApiError::Transport {
                 msg: "pipe broke".to_string(),
                 attempts: 3,

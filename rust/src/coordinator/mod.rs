@@ -8,13 +8,17 @@
 //! write-ahead op log, crash recovery by replay, and signed deletion
 //! certificates; and log-shipping replication (`replica`, DESIGN.md §12):
 //! WAL-tailing read-only followers with epoch-consistent catch-up,
-//! staleness annotation, and failover by promotion.
+//! staleness annotation, and failover by promotion; and a deadline-aware
+//! cross-tenant scheduler (`scheduler`, DESIGN.md §15): ticket queues,
+//! learned per-(tenant, op-class, batch-bucket) cost estimators, and
+//! time-budgeted serving with EDF + deficit-round-robin packing.
 
 pub mod api;
 pub mod batcher;
 pub mod protocol;
 pub mod registry;
 pub mod replica;
+pub mod scheduler;
 pub mod service;
 pub mod shards;
 pub mod telemetry;
@@ -28,6 +32,9 @@ pub use batcher::{DeleteOutcome, DeletionBatcher};
 pub use protocol::{serve, Client, ClientConfig, Prediction};
 pub use registry::{Model, ModelRegistry};
 pub use replica::{bootstrap_follower, Applied, ReplicaState, ReplicationConfig};
+pub use scheduler::{
+    Clock, ManualClock, OpClass, RunReport, Scheduler, SchedulerConfig, Submitted,
+};
 pub use service::{ServiceConfig, UnlearningService};
 pub use shards::ShardedForest;
 pub use telemetry::Telemetry;

@@ -76,7 +76,13 @@ fn handle_connection(svc: &UnlearningService, stream: TcpStream) -> anyhow::Resu
             continue;
         }
         let resp = match parse(&line) {
-            Ok(req) => svc.handle(&req),
+            // With a scheduler attached (DESIGN.md §15) scheduled ops wait
+            // for their budget slot (or bounce `overloaded`); without one
+            // — and for every bypass op — this is the direct path.
+            Ok(req) => match svc.scheduler() {
+                Some(sched) => sched.handle(&req),
+                None => svc.handle(&req),
+            },
             Err(e) => api::encode_response(&Response::Err(ApiError::BadRequest(format!(
                 "bad request: {e}"
             )))),

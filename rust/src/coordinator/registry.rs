@@ -423,6 +423,23 @@ impl Model {
         self.sharded.compact(budget)
     }
 
+    /// [`Model::compact`] with tick accounting: every drain — the wire
+    /// `compact` op, a scheduler compaction bid replaying through it, or
+    /// the legacy background sweep — counts a `compact_ticks`, its
+    /// retrains, and the time it spent, so compaction is observable in
+    /// `stats` no matter which path triggered it.
+    pub fn drain_compact(&self, budget: usize) -> u64 {
+        let t0 = std::time::Instant::now();
+        let flushed = self.compact(budget);
+        self.telemetry.incr("compact_ticks", 1);
+        self.telemetry
+            .incr("compact_spent_us", t0.elapsed().as_micros() as u64);
+        if flushed > 0 {
+            self.telemetry.incr("compacted_retrains", flushed);
+        }
+        flushed
+    }
+
     /// The `list` summary line for this model.
     pub fn summary(&self) -> ModelSummary {
         ModelSummary {
@@ -647,6 +664,18 @@ mod tests {
         // per-model telemetry: only 'a' recorded the mutation
         assert_eq!(a.telemetry().counter("mutations"), 1);
         assert_eq!(b.telemetry().counter("mutations"), 0);
+    }
+
+    #[test]
+    fn drain_compact_ticks_are_observable() {
+        let m = Model::new("m", forest(7), &cfg());
+        let flushed = m.drain_compact(4);
+        // a fresh model has no backlog: the tick still counts, retrains 0
+        assert_eq!(flushed, 0);
+        assert_eq!(m.telemetry().counter("compact_ticks"), 1);
+        assert_eq!(m.telemetry().counter("compacted_retrains"), 0);
+        m.drain_compact(4);
+        assert_eq!(m.telemetry().counter("compact_ticks"), 2);
     }
 
     #[test]

@@ -1,0 +1,1177 @@
+//! Deadline-aware cross-tenant scheduler (DESIGN.md §15).
+//!
+//! A serving runtime between the wire and the per-model data plane: every
+//! scheduled op becomes a *ticket* (tenant, op class, batch-size bucket,
+//! optional deadline, arrival time) in a per-tenant FIFO queue, and a
+//! time-budgeted [`Scheduler::run_for`] packs queued work into a latency
+//! budget using learned per-(tenant, class, bucket) Welford cost
+//! estimators — deadline-first (EDF) among tenants holding deadlined
+//! tickets, deficit round-robin (DRR) by tenant weight among the rest.
+//! Work that does not fit stays queued; the budget is never knowingly
+//! blown (`run_for(d)` overruns `d` by at most one ticket's *predicted*
+//! cost — the one progress-guaranteeing dispatch per cycle).
+//!
+//! **Exactness is untouched.** The scheduler reorders *when* work runs
+//! across tenants, never *what* one tenant's op stream contains: within a
+//! tenant, scheduled ops (predict / delete / add / delete_cost / flush /
+//! compact) execute in exact submission order, through the same
+//! `UnlearningService::handle` path as unscheduled traffic. So every
+//! §8/§9/§13 differential oracle applies verbatim to scheduled execution
+//! (proven by the op_fuzz scheduler leg). Background compaction tickets
+//! are the one out-of-FIFO insertion, and those are order-free by
+//! flush-order invariance (§9).
+//!
+//! **Admission control.** Each tenant's foreground queue is depth-bounded;
+//! past the bound, submission is refused with the structured
+//! `ApiError::Overloaded { retry_after_ms }` where the hint is the
+//! predicted drain time of the queue.
+//!
+//! **Testability.** Time and execution are injected: the real deployment
+//! uses a monotonic clock and `svc.handle`, the unit suite a manual clock
+//! plus a synthetic executor whose cost *is* the prediction — which turns
+//! the budget-overrun bound, EDF order, and DRR ratios into exact,
+//! wall-clock-free assertions.
+
+use crate::coordinator::api::{
+    self, decode, encode_request, err_value, ApiError, Op, Request, WIRE_VERSION,
+};
+use crate::coordinator::service::UnlearningService;
+use crate::coordinator::telemetry::Telemetry;
+use crate::util::histogram::Histogram;
+use crate::util::json::Value;
+use crate::util::stats::Welford;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Op classes and batch-size buckets
+// ---------------------------------------------------------------------------
+
+/// The scheduled op classes. Reads (`predict`, `delete_cost`) are Predict;
+/// `delete`/`add` are Mutate; `flush`/`compact` are their own classes
+/// because their cost scales with the dirty set, not the request payload.
+/// Everything else on the wire (stats, lifecycle, replication, certify,
+/// save, shutdown) bypasses the queue and executes immediately — none of
+/// those mutate a tenant's op stream, so FIFO is unaffected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OpClass {
+    Predict,
+    Mutate,
+    Flush,
+    Compact,
+}
+
+impl OpClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Predict => "predict",
+            OpClass::Mutate => "mutate",
+            OpClass::Flush => "flush",
+            OpClass::Compact => "compact",
+        }
+    }
+}
+
+/// log2 batch-size bucket: requests with 1 row and 1000 rows should not
+/// share a cost estimate, but per-exact-size estimators would never
+/// converge.
+fn bucket_of(n: usize) -> usize {
+    let mut b = 0usize;
+    let mut x = n.max(1);
+    while x > 1 {
+        x >>= 1;
+        b += 1;
+    }
+    b
+}
+
+/// Class + bucket for a scheduled op; `None` for bypass (immediate) ops.
+fn class_of(op: &Op) -> Option<(OpClass, usize)> {
+    match op {
+        Op::Predict { rows } => Some((OpClass::Predict, bucket_of(rows.len()))),
+        Op::DeleteCost { .. } => Some((OpClass::Predict, 0)),
+        Op::Delete { ids } => Some((OpClass::Mutate, bucket_of(ids.len()))),
+        Op::Add { .. } => Some((OpClass::Mutate, 0)),
+        Op::Flush => Some((OpClass::Flush, 0)),
+        Op::Compact { .. } => Some((OpClass::Compact, 0)),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Injected clock
+// ---------------------------------------------------------------------------
+
+/// A hand-advanced clock for deterministic scheduling tests.
+#[derive(Clone, Default)]
+pub struct ManualClock(Arc<AtomicU64>);
+
+impl ManualClock {
+    pub fn now(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::SeqCst))
+    }
+    pub fn advance(&self, seconds: f64) {
+        let _ = self.0.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |bits| {
+            Some((f64::from_bits(bits) + seconds).to_bits())
+        });
+    }
+}
+
+/// Scheduler time source: monotonic in production, manual in tests.
+#[derive(Clone)]
+pub enum Clock {
+    Real(Instant),
+    Manual(ManualClock),
+}
+
+impl Clock {
+    pub fn real() -> Clock {
+        Clock::Real(Instant::now())
+    }
+    pub fn manual() -> (Clock, ManualClock) {
+        let m = ManualClock::default();
+        (Clock::Manual(m.clone()), m)
+    }
+    fn now(&self) -> f64 {
+        match self {
+            Clock::Real(t0) => t0.elapsed().as_secs_f64(),
+            Clock::Manual(m) => m.now(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Scheduler tuning. Weights and quantum drive DRR; safety/min_samples/
+/// default_cost drive the cost predictor.
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Default per-cycle budget for the background runner thread.
+    pub budget: Duration,
+    /// Per-tenant foreground queue depth bound; 0 = unbounded.
+    pub queue_depth: usize,
+    /// Per-tenant DRR weights (`--fairness a=2,b=1`); absent tenants get 1.
+    pub weights: BTreeMap<String, f64>,
+    /// Seconds of deficit credited per weight unit per replenish round.
+    pub quantum: f64,
+    /// Predicted cost = mean + `safety`·std (one-sided headroom).
+    pub safety: f64,
+    /// Bucket estimators are trusted once they hold this many samples;
+    /// below that the per-(tenant, class) aggregate answers.
+    pub min_samples: u64,
+    /// Prior for a never-observed (tenant, class): 100 µs.
+    pub default_cost: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            budget: Duration::from_millis(10),
+            queue_depth: 1024,
+            weights: BTreeMap::new(),
+            quantum: 0.002,
+            safety: 1.0,
+            min_samples: 8,
+            default_cost: 100e-6,
+        }
+    }
+}
+
+impl SchedulerConfig {
+    /// Parse a `--fairness` spec: `tenant=weight,tenant=weight,...`.
+    pub fn parse_weights(spec: &str) -> Result<BTreeMap<String, f64>, String> {
+        let mut out = BTreeMap::new();
+        for part in spec.split(',').filter(|p| !p.is_empty()) {
+            let (name, w) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fairness entry '{part}' is not tenant=weight"))?;
+            let w: f64 = w
+                .parse()
+                .map_err(|_| format!("fairness weight '{w}' is not a number"))?;
+            if !(w > 0.0) || !w.is_finite() {
+                return Err(format!("fairness weight for '{name}' must be finite and > 0"));
+            }
+            out.insert(name.to_string(), w);
+        }
+        Ok(out)
+    }
+
+    fn weight_for(&self, tenant: &str) -> f64 {
+        self.weights.get(tenant).copied().unwrap_or(1.0).max(1e-6)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Learned timing model
+// ---------------------------------------------------------------------------
+
+/// Two-level Welford cost model: fine per-(tenant, class, bucket)
+/// estimators backed by a per-(tenant, class) aggregate that also absorbs
+/// seed moments from PR 9's telemetry Welfords and latency histograms.
+struct TimingModel {
+    safety: f64,
+    min_samples: u64,
+    default_cost: f64,
+    buckets: BTreeMap<(String, OpClass, usize), Welford>,
+    agg: BTreeMap<(String, OpClass), Welford>,
+}
+
+impl TimingModel {
+    fn new(cfg: &SchedulerConfig) -> TimingModel {
+        TimingModel {
+            safety: cfg.safety,
+            min_samples: cfg.min_samples.max(1),
+            default_cost: cfg.default_cost,
+            buckets: BTreeMap::new(),
+            agg: BTreeMap::new(),
+        }
+    }
+
+    fn observe(&mut self, tenant: &str, class: OpClass, bucket: usize, cost: f64) {
+        self.buckets
+            .entry((tenant.to_string(), class, bucket))
+            .or_insert_with(Welford::new)
+            .push(cost);
+        self.agg
+            .entry((tenant.to_string(), class))
+            .or_insert_with(Welford::new)
+            .push(cost);
+    }
+
+    /// Merge external moments into the aggregate (seeding, not samples).
+    fn seed(&mut self, tenant: &str, class: OpClass, w: &Welford) {
+        self.agg
+            .entry((tenant.to_string(), class))
+            .or_insert_with(Welford::new)
+            .merge(w);
+    }
+
+    fn predict(&self, tenant: &str, class: OpClass, bucket: usize) -> f64 {
+        if let Some(w) = self.buckets.get(&(tenant.to_string(), class, bucket)) {
+            if w.n >= self.min_samples {
+                return (w.mean() + self.safety * w.std()).max(1e-9);
+            }
+        }
+        if let Some(w) = self.agg.get(&(tenant.to_string(), class)) {
+            if w.n > 0 {
+                return (w.mean() + self.safety * w.std()).max(1e-9);
+            }
+        }
+        self.default_cost
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tickets and queues
+// ---------------------------------------------------------------------------
+
+struct Ticket {
+    /// Global submission counter — the FIFO tiebreak.
+    seq: u64,
+    class: OpClass,
+    bucket: usize,
+    /// The raw wire object, executed verbatim through the injected
+    /// executor (production: `svc.handle`) — same path as direct traffic.
+    wire: Value,
+    /// Absolute scheduler-clock deadline (seconds), if the caller set one.
+    deadline: Option<f64>,
+    /// Scheduler-clock submission time — queue-wait accounting.
+    arrival: f64,
+    reply: Option<Sender<Value>>,
+    background: bool,
+}
+
+#[derive(Default)]
+struct TenantQ {
+    fg: VecDeque<Ticket>,
+    bg: VecDeque<Ticket>,
+    weight: f64,
+    deficit: f64,
+    executed: u64,
+    executed_bg: u64,
+    /// Total queue wait (arrival → dispatch) across executed tickets.
+    waited_s: f64,
+    compact_ticks: u64,
+    compact_spent_s: f64,
+    overloaded: u64,
+}
+
+struct Inner {
+    queues: BTreeMap<String, TenantQ>,
+    seq: u64,
+    cursor: usize,
+}
+
+/// `(tenant, background?, predicted cost)` — what `choose` hands `run_for`.
+struct Choice {
+    tenant: String,
+    background: bool,
+    predicted: f64,
+}
+
+/// Outcome of [`Scheduler::submit`].
+pub enum Submitted {
+    /// The op was enqueued; the receiver yields its response once executed.
+    Queued(Receiver<Value>),
+    /// A bypass (control-plane) op, executed inline.
+    Immediate(Value),
+}
+
+/// Per-cycle accounting from [`Scheduler::run_for`]. `spent_s` is measured
+/// on the scheduler's own clock, so `spent_s ≤ budget_s + last_cost_s`
+/// holds by construction and `spent_s ≤ budget_s + last_predicted_s`
+/// whenever predictions are exact (the virtual-clock unit suite).
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub budget_s: f64,
+    pub spent_s: f64,
+    pub executed: u64,
+    pub executed_bg: u64,
+    /// Measured cost of the last executed ticket.
+    pub last_cost_s: f64,
+    /// Predicted cost of the last executed ticket.
+    pub last_predicted_s: f64,
+    /// True when work remained but would have blown the budget.
+    pub deferred: bool,
+    /// Tickets still queued when the cycle ended.
+    pub remaining: usize,
+}
+
+// ---------------------------------------------------------------------------
+// The scheduler
+// ---------------------------------------------------------------------------
+
+type Exec = Box<dyn Fn(&Value) -> Value + Send + Sync>;
+
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+    clock: Clock,
+    exec: Exec,
+    timing: Mutex<TimingModel>,
+    inner: Mutex<Inner>,
+    /// Serializes `run_for` cycles (runner thread vs. ad-hoc callers).
+    run_lock: Mutex<()>,
+    park: Mutex<()>,
+    parked: Condvar,
+    stop: AtomicBool,
+}
+
+impl Scheduler {
+    /// Build a scheduler over an injected clock + executor. Production code
+    /// uses [`Scheduler::attach`]; tests inject a manual clock and a
+    /// synthetic executor.
+    pub fn new(cfg: SchedulerConfig, clock: Clock, exec: Exec) -> Scheduler {
+        let timing = TimingModel::new(&cfg);
+        Scheduler {
+            cfg,
+            clock,
+            exec,
+            timing: Mutex::new(timing),
+            inner: Mutex::new(Inner {
+                queues: BTreeMap::new(),
+                seq: 0,
+                cursor: 0,
+            }),
+            run_lock: Mutex::new(()),
+            park: Mutex::new(()),
+            parked: Condvar::new(),
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    /// Wire a scheduler onto a live service: execution routes through
+    /// `svc.handle` (the exact unscheduled path), cost estimators are
+    /// seeded from every registered model's telemetry Welfords, and the
+    /// service learns the scheduler so `serve` and the compactor route
+    /// through it.
+    pub fn attach(svc: &Arc<UnlearningService>, cfg: SchedulerConfig) -> Arc<Scheduler> {
+        let exec_svc = Arc::clone(svc);
+        let sched = Arc::new(Scheduler::new(
+            cfg,
+            Clock::real(),
+            Box::new(move |v| exec_svc.handle(v)),
+        ));
+        for model in svc.registry().models() {
+            sched.seed_from_telemetry(model.name(), model.telemetry());
+        }
+        svc.attach_scheduler(Arc::downgrade(&sched));
+        sched
+    }
+
+    /// Spawn the serving loop: drains queued work in `cfg.budget` cycles,
+    /// parking when idle. Exits when the scheduler is dropped or stopped.
+    pub fn spawn_runner(sched: &Arc<Scheduler>) {
+        let weak = Arc::downgrade(sched);
+        let _ = std::thread::Builder::new()
+            .name("dare-scheduler".into())
+            .spawn(move || loop {
+                let Some(s) = weak.upgrade() else { return };
+                if s.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if s.queued_total() == 0 {
+                    let guard = s.park.lock().unwrap();
+                    let _ = s
+                        .parked
+                        .wait_timeout(guard, Duration::from_millis(10))
+                        .unwrap();
+                    continue;
+                }
+                let budget = s.cfg.budget;
+                s.run_for(budget);
+            });
+    }
+
+    /// Ask the runner (and any parked waiters) to wind down.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.parked.notify_all();
+    }
+
+    // -- seeding ---------------------------------------------------------
+
+    /// Fold a model's exact telemetry Welfords into the aggregate cost
+    /// estimators (op name → class map mirrors `class_of`).
+    pub fn seed_from_telemetry(&self, tenant: &str, t: &Telemetry) {
+        const MAP: &[(&str, OpClass)] = &[
+            ("predict", OpClass::Predict),
+            ("delete_cost", OpClass::Predict),
+            ("delete", OpClass::Mutate),
+            ("add", OpClass::Mutate),
+            ("flush", OpClass::Flush),
+            ("compact", OpClass::Compact),
+        ];
+        let mut timing = self.timing.lock().unwrap();
+        for (op, class) in MAP {
+            if let Some(w) = t.op_latency(op) {
+                timing.seed(tenant, *class, &w);
+            }
+        }
+    }
+
+    /// Seed from a latency histogram (the cross-process artifact): exact
+    /// count/mean, bucket-midpoint variance (`Histogram::approx_moments`).
+    pub fn seed_from_histogram(&self, tenant: &str, class: OpClass, h: &Histogram) {
+        let (n, mean, var) = h.approx_moments();
+        let w = Welford::from_moments(n, mean, var, h.min(), h.max());
+        self.timing.lock().unwrap().seed(tenant, class, &w);
+    }
+
+    /// Current predicted cost (seconds) — test/observability hook.
+    pub fn predicted_cost(&self, tenant: &str, class: OpClass, bucket: usize) -> f64 {
+        self.timing.lock().unwrap().predict(tenant, class, bucket)
+    }
+
+    // -- submission ------------------------------------------------------
+
+    /// Decode + classify + enqueue one wire request. Scheduled ops return
+    /// a receiver for their eventual response; bypass ops execute inline.
+    /// Refuses with `Overloaded` past the tenant's queue-depth bound.
+    pub fn submit(&self, req: &Value) -> Result<Submitted, ApiError> {
+        let parsed = decode(req)?;
+        let deadline = api::deadline_ms(req)?;
+        let Some((class, bucket)) = class_of(&parsed.op) else {
+            return Ok(Submitted::Immediate((self.exec)(req)));
+        };
+        let now = self.clock.now();
+        let rx = {
+            let timing = self.timing.lock().unwrap();
+            let mut inner = self.inner.lock().unwrap();
+            inner.seq += 1;
+            let seq = inner.seq;
+            let weight = self.cfg.weight_for(&parsed.model);
+            let q = inner.queues.entry(parsed.model.clone()).or_insert_with(|| TenantQ {
+                weight,
+                ..Default::default()
+            });
+            if self.cfg.queue_depth > 0 && q.fg.len() >= self.cfg.queue_depth {
+                q.overloaded += 1;
+                let drain: f64 = q
+                    .fg
+                    .iter()
+                    .map(|t| timing.predict(&parsed.model, t.class, t.bucket))
+                    .sum();
+                return Err(ApiError::Overloaded {
+                    retry_after_ms: (drain * 1000.0).ceil().max(1.0) as u64,
+                });
+            }
+            let (tx, rx) = channel();
+            q.fg.push_back(Ticket {
+                seq,
+                class,
+                bucket,
+                wire: req.clone(),
+                deadline: deadline.map(|ms| now + ms as f64 / 1000.0),
+                arrival: now,
+                reply: Some(tx),
+                background: false,
+            });
+            rx
+        };
+        self.parked.notify_all();
+        Ok(Submitted::Queued(rx))
+    }
+
+    /// Blocking wire entry point — what `protocol::serve` calls when a
+    /// scheduler is attached. Scheduled ops wait for their turn in the
+    /// budget; everything else is served immediately.
+    pub fn handle(&self, req: &Value) -> Value {
+        match self.submit(req) {
+            Err(e) => err_value(&e),
+            Ok(Submitted::Immediate(v)) => v,
+            Ok(Submitted::Queued(rx)) => rx
+                .recv()
+                .unwrap_or_else(|_| err_value(&ApiError::ShuttingDown)),
+        }
+    }
+
+    /// Enqueue a background compaction bid for `model` (from the
+    /// compactor thread). Background tickets run only in slack — when no
+    /// foreground ticket is queued anywhere — and at most one bid per
+    /// tenant is outstanding. Returns false if a bid is already queued.
+    pub fn bid_compact(&self, model: &str, budget: usize) -> bool {
+        let wire = encode_request(&Request {
+            v: WIRE_VERSION,
+            model: model.to_string(),
+            op: Op::Compact { budget },
+        });
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.seq += 1;
+            let seq = inner.seq;
+            let weight = self.cfg.weight_for(model);
+            let q = inner.queues.entry(model.to_string()).or_insert_with(|| TenantQ {
+                weight,
+                ..Default::default()
+            });
+            if !q.bg.is_empty() {
+                return false;
+            }
+            q.bg.push_back(Ticket {
+                seq,
+                class: OpClass::Compact,
+                bucket: 0,
+                wire,
+                deadline: None,
+                arrival: self.clock.now(),
+                reply: None,
+                background: true,
+            });
+        }
+        self.parked.notify_all();
+        true
+    }
+
+    // -- the budget-packing loop ----------------------------------------
+
+    /// Execute queued tickets for up to `budget`, EDF-then-DRR, leaving
+    /// the remainder queued. The first ticket of a cycle always runs
+    /// (progress guarantee); afterwards a ticket is dispatched only if
+    /// `spent + predicted ≤ budget` — hence the one-predicted-cost
+    /// overrun bound.
+    pub fn run_for(&self, budget: Duration) -> RunReport {
+        let _cycle = self.run_lock.lock().unwrap();
+        let budget_s = budget.as_secs_f64();
+        let t0 = self.clock.now();
+        let mut report = RunReport {
+            budget_s,
+            ..Default::default()
+        };
+        loop {
+            let popped = {
+                let timing = self.timing.lock().unwrap();
+                let mut inner = self.inner.lock().unwrap();
+                let Some(choice) = choose(&mut inner, &timing, &self.cfg) else {
+                    break;
+                };
+                let spent = self.clock.now() - t0;
+                if report.executed > 0 && spent + choice.predicted > budget_s {
+                    report.deferred = true;
+                    break; // nothing popped: the ticket stays at its head
+                }
+                let q = inner.queues.get_mut(&choice.tenant).unwrap();
+                let ticket = if choice.background {
+                    q.bg.pop_front()
+                } else {
+                    q.fg.pop_front()
+                }
+                .expect("choose returned a tenant with an empty queue");
+                if !choice.background {
+                    q.deficit -= choice.predicted;
+                    if q.fg.is_empty() {
+                        q.deficit = 0.0;
+                    }
+                }
+                (ticket, choice)
+            };
+            let (ticket, choice) = popped;
+            let t_start = self.clock.now();
+            let resp = (self.exec)(&ticket.wire);
+            let dt = self.clock.now() - t_start;
+            self.timing
+                .lock()
+                .unwrap()
+                .observe(&choice.tenant, ticket.class, ticket.bucket, dt);
+            {
+                let mut inner = self.inner.lock().unwrap();
+                if let Some(q) = inner.queues.get_mut(&choice.tenant) {
+                    q.executed += 1;
+                    q.waited_s += (t_start - ticket.arrival).max(0.0);
+                    if ticket.background {
+                        q.executed_bg += 1;
+                        if ticket.class == OpClass::Compact {
+                            q.compact_ticks += 1;
+                            q.compact_spent_s += dt;
+                        }
+                    }
+                }
+            }
+            if let Some(tx) = ticket.reply {
+                let _ = tx.send(resp);
+            }
+            report.executed += 1;
+            if ticket.background {
+                report.executed_bg += 1;
+            }
+            report.last_cost_s = dt;
+            report.last_predicted_s = choice.predicted;
+        }
+        report.spent_s = self.clock.now() - t0;
+        report.remaining = self.queued_total();
+        report
+    }
+
+    // -- observability ---------------------------------------------------
+
+    /// Total queued tickets (foreground + background) across tenants.
+    pub fn queued_total(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.queues.values().map(|q| q.fg.len() + q.bg.len()).sum()
+    }
+
+    /// Queued foreground tickets for one tenant.
+    pub fn queued(&self, tenant: &str) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.queues.get(tenant).map(|q| q.fg.len()).unwrap_or(0)
+    }
+
+    /// True if a background bid is outstanding for `tenant`.
+    pub fn pending_bid(&self, tenant: &str) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner.queues.get(tenant).map(|q| !q.bg.is_empty()).unwrap_or(false)
+    }
+
+    /// The per-tenant `"sched"` object attached to `stats` payloads:
+    /// queue depths, DRR state, executed/compaction accounting.
+    pub fn tenant_stats(&self, tenant: &str) -> Value {
+        let inner = self.inner.lock().unwrap();
+        let mut o = Value::obj();
+        match inner.queues.get(tenant) {
+            None => {
+                o.set("queued", 0u64).set("queued_bg", 0u64);
+            }
+            Some(q) => {
+                o.set("queued", q.fg.len())
+                    .set("queued_bg", q.bg.len())
+                    .set("weight", q.weight)
+                    .set("deficit_s", q.deficit)
+                    .set("executed", q.executed)
+                    .set("executed_bg", q.executed_bg)
+                    .set("waited_s", q.waited_s)
+                    .set("compact_ticks", q.compact_ticks)
+                    .set("compact_spent_s", q.compact_spent_s)
+                    .set("overloaded", q.overloaded);
+            }
+        }
+        o
+    }
+}
+
+/// Pick the next tenant to serve. EDF first: among tenants whose
+/// foreground queue holds any deadlined ticket, the earliest effective
+/// deadline (min over the queue — the deadline pulls the whole tenant
+/// queue forward, in-tenant priority inheritance) wins and its HEAD runs
+/// (per-tenant FIFO is inviolable). Otherwise DRR: a tenant is eligible
+/// when its deficit covers its head's predicted cost; when none is,
+/// every contending tenant is replenished `weight·quantum` and the scan
+/// repeats — each round strictly grows every deficit, so the loop
+/// terminates and no weighted tenant starves. Background tickets run
+/// only when no foreground work exists anywhere.
+fn choose(inner: &mut Inner, timing: &TimingModel, cfg: &SchedulerConfig) -> Option<Choice> {
+    // EDF pass.
+    let mut best: Option<(f64, u64, String)> = None;
+    for (name, q) in inner.queues.iter() {
+        if q.fg.is_empty() {
+            continue;
+        }
+        let dl = q
+            .fg
+            .iter()
+            .filter_map(|t| t.deadline)
+            .fold(f64::INFINITY, f64::min);
+        if dl.is_finite() {
+            let head_seq = q.fg.front().unwrap().seq;
+            let better = match &best {
+                None => true,
+                Some((bd, bs, _)) => dl < *bd || (dl == *bd && head_seq < *bs),
+            };
+            if better {
+                best = Some((dl, head_seq, name.clone()));
+            }
+        }
+    }
+    if let Some((_, _, tenant)) = best {
+        let q = &inner.queues[&tenant];
+        let head = q.fg.front().unwrap();
+        let predicted = timing.predict(&tenant, head.class, head.bucket);
+        return Some(Choice {
+            tenant,
+            background: false,
+            predicted,
+        });
+    }
+
+    // DRR pass over tenants with foreground work.
+    let names: Vec<String> = inner
+        .queues
+        .iter()
+        .filter(|(_, q)| !q.fg.is_empty())
+        .map(|(n, _)| n.clone())
+        .collect();
+    if !names.is_empty() {
+        let preds: Vec<f64> = names
+            .iter()
+            .map(|n| {
+                let head = inner.queues[n].fg.front().unwrap();
+                timing.predict(n, head.class, head.bucket)
+            })
+            .collect();
+        let n = names.len();
+        for _round in 0..100_000 {
+            for i in 0..n {
+                let idx = (inner.cursor + i) % n;
+                if inner.queues[&names[idx]].deficit >= preds[idx] {
+                    inner.cursor = (idx + 1) % n;
+                    return Some(Choice {
+                        tenant: names[idx].clone(),
+                        background: false,
+                        predicted: preds[idx],
+                    });
+                }
+            }
+            for name in &names {
+                let q = inner.queues.get_mut(name).unwrap();
+                q.deficit += q.weight * cfg.quantum.max(1e-9);
+            }
+        }
+        // Degenerate floats only: serve the deepest deficit rather than spin.
+        let idx = (0..n)
+            .max_by(|&a, &b| {
+                inner.queues[&names[a]]
+                    .deficit
+                    .partial_cmp(&inner.queues[&names[b]].deficit)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .unwrap();
+        inner.cursor = (idx + 1) % n;
+        return Some(Choice {
+            tenant: names[idx].clone(),
+            background: false,
+            predicted: preds[idx],
+        });
+    }
+
+    // Slack: the oldest background bid across tenants.
+    let mut best_bg: Option<(u64, String)> = None;
+    for (name, q) in inner.queues.iter() {
+        if let Some(t) = q.bg.front() {
+            if best_bg.as_ref().map_or(true, |(s, _)| t.seq < *s) {
+                best_bg = Some((t.seq, name.clone()));
+            }
+        }
+    }
+    let (_, tenant) = best_bg?;
+    let head = inner.queues[&tenant].bg.front().unwrap();
+    let predicted = timing.predict(&tenant, head.class, head.bucket);
+    Some(Choice {
+        tenant,
+        background: true,
+        predicted,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{mix_seed, Rng};
+
+    /// Synthetic harness: manual clock + an executor whose cost is a pure
+    /// function of the tenant, so predictions converge to the exact cost
+    /// (constant ⇒ zero variance) and every scheduling assertion is
+    /// deterministic and wall-clock-free.
+    fn mk(
+        cfg: SchedulerConfig,
+        costs: &[(&str, f64)],
+    ) -> (Scheduler, ManualClock, Arc<Mutex<Vec<String>>>) {
+        let (clock, manual) = Clock::manual();
+        let costs: BTreeMap<String, f64> =
+            costs.iter().map(|(n, c)| (n.to_string(), *c)).collect();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let log2 = Arc::clone(&log);
+        let m2 = manual.clone();
+        let exec: Exec = Box::new(move |req: &Value| {
+            let model = req
+                .get("model")
+                .and_then(Value::as_str)
+                .unwrap_or("default")
+                .to_string();
+            m2.advance(costs.get(&model).copied().unwrap_or(0.001));
+            log2.lock().unwrap().push(req.to_string());
+            let mut o = Value::obj();
+            o.set("ok", true);
+            o
+        });
+        (Scheduler::new(cfg, clock, exec), manual, log)
+    }
+
+    fn predict_req(model: &str, rows: usize) -> Value {
+        encode_request(&Request {
+            v: WIRE_VERSION,
+            model: model.to_string(),
+            op: Op::Predict {
+                rows: vec![vec![0.5]; rows.max(1)],
+            },
+        })
+    }
+
+    fn delete_req(model: &str, id: u32) -> Value {
+        encode_request(&Request {
+            v: WIRE_VERSION,
+            model: model.to_string(),
+            op: Op::Delete { ids: vec![id] },
+        })
+    }
+
+    fn with_deadline(mut v: Value, ms: u64) -> Value {
+        v.set("deadline_ms", ms);
+        v
+    }
+
+    fn enqueue(s: &Scheduler, req: &Value) -> Receiver<Value> {
+        match s.submit(req).expect("submit refused") {
+            Submitted::Queued(rx) => rx,
+            Submitted::Immediate(_) => panic!("expected a queued ticket"),
+        }
+    }
+
+    #[test]
+    fn welford_cost_model_converges_on_synthetic_costs() {
+        let cfg = SchedulerConfig {
+            safety: 1.0,
+            min_samples: 8,
+            ..Default::default()
+        };
+        let mut tm = TimingModel::new(&cfg);
+        // Alternating 1ms/3ms: predicted → mean + std of the sample.
+        let xs: Vec<f64> = (0..100).map(|i| if i % 2 == 0 { 0.001 } else { 0.003 }).collect();
+        for &x in &xs {
+            tm.observe("t", OpClass::Predict, 0, x);
+        }
+        let want = crate::util::stats::mean(&xs) + crate::util::stats::std_dev(&xs);
+        let got = tm.predict("t", OpClass::Predict, 0);
+        assert!((got - want).abs() < 1e-12, "predict {got} != mean+std {want}");
+        // Bucket specificity: a different bucket trained on different costs
+        // answers with ITS moments, not the aggregate's.
+        for _ in 0..8 {
+            tm.observe("t", OpClass::Predict, 5, 0.010);
+        }
+        assert!((tm.predict("t", OpClass::Predict, 5) - 0.010).abs() < 1e-9);
+        // An untrained bucket falls back to the aggregate, never the default.
+        let agg = tm.predict("t", OpClass::Predict, 3);
+        assert!(agg > cfg.default_cost, "bucket 3 should fall back to aggregate");
+        // Unknown tenant: the prior.
+        assert_eq!(tm.predict("ghost", OpClass::Mutate, 0), cfg.default_cost);
+    }
+
+    #[test]
+    fn edf_serves_earliest_deadline_and_inherits_within_tenant() {
+        let (s, _clk, log) = mk(
+            SchedulerConfig {
+                min_samples: u64::MAX, // predictions pinned at default_cost
+                default_cost: 0.001,
+                ..Default::default()
+            },
+            &[("a", 0.001), ("b", 0.001), ("c", 0.001)],
+        );
+        // Submission order: a,a,b,b(+10ms deadline),c(+5ms deadline).
+        let rxs = vec![
+            enqueue(&s, &predict_req("a", 1)),
+            enqueue(&s, &predict_req("a", 1)),
+            enqueue(&s, &predict_req("b", 1)),
+            enqueue(&s, &with_deadline(predict_req("b", 1), 10)),
+            enqueue(&s, &with_deadline(predict_req("c", 1), 5)),
+        ];
+        let r = s.run_for(Duration::from_secs(1));
+        assert_eq!(r.executed, 5);
+        assert_eq!(r.remaining, 0);
+        for rx in rxs {
+            assert!(rx.recv().unwrap().get("ok").is_some());
+        }
+        let order: Vec<String> = log
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|w| {
+                crate::util::json::parse(w)
+                    .unwrap()
+                    .get("model")
+                    .unwrap()
+                    .as_str()
+                    .unwrap()
+                    .to_string()
+            })
+            .collect();
+        // c's 5ms deadline wins; then b — whose deadlined SECOND ticket
+        // pulls its non-deadlined head forward (in-tenant inheritance,
+        // FIFO preserved); a's backlog runs last under DRR.
+        assert_eq!(order, vec!["c", "b", "b", "a", "a"]);
+    }
+
+    #[test]
+    fn drr_shares_the_budget_by_tenant_weight() {
+        let mut weights = BTreeMap::new();
+        weights.insert("x".to_string(), 2.0);
+        weights.insert("y".to_string(), 1.0);
+        let (s, _clk, log) = mk(
+            SchedulerConfig {
+                weights,
+                quantum: 0.0005,
+                min_samples: u64::MAX,
+                default_cost: 0.001, // == the synthetic cost: exact packing
+                ..Default::default()
+            },
+            &[("x", 0.001), ("y", 0.001)],
+        );
+        for i in 0..60u32 {
+            enqueue(&s, &delete_req("x", i));
+            enqueue(&s, &delete_req("y", i));
+        }
+        let r = s.run_for(Duration::from_millis(30));
+        assert!(r.executed >= 29 && r.executed <= 31, "packed {} into 30ms", r.executed);
+        let xs = log
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|w| w.contains(r#""model":"x""#))
+            .count() as f64;
+        let ys = log.lock().unwrap().len() as f64 - xs;
+        assert!(ys > 0.0, "weight-1 tenant must not starve");
+        let ratio = xs / ys;
+        assert!(
+            (1.5..=2.5).contains(&ratio),
+            "weight 2:1 should serve ~2:1, got {xs}:{ys}"
+        );
+    }
+
+    #[test]
+    fn budget_overrun_is_bounded_by_one_predicted_ticket() {
+        let (s, _clk, _log) = mk(
+            SchedulerConfig {
+                min_samples: 4,
+                safety: 1.0,
+                ..Default::default()
+            },
+            &[("p", 0.002), ("q", 0.0005)],
+        );
+        // Warm-up: constant per-tenant costs → zero variance → the learned
+        // prediction equals the actual cost exactly.
+        for _ in 0..8 {
+            enqueue(&s, &predict_req("p", 1));
+            enqueue(&s, &predict_req("q", 1));
+        }
+        s.run_for(Duration::from_secs(10));
+        assert_eq!(s.queued_total(), 0);
+
+        for _ in 0..40 {
+            enqueue(&s, &predict_req("p", 1));
+            enqueue(&s, &predict_req("q", 1));
+        }
+        let mut executed = 0u64;
+        let mut deferred_cycles = 0;
+        for _cycle in 0..500 {
+            let r = s.run_for(Duration::from_millis(5));
+            if r.executed > 0 {
+                // THE acceptance bound: a cycle overruns its budget by at
+                // most the last ticket's predicted cost.
+                assert!(
+                    r.spent_s <= r.budget_s + r.last_predicted_s + 1e-12,
+                    "spent {} > budget {} + predicted {}",
+                    r.spent_s,
+                    r.budget_s,
+                    r.last_predicted_s
+                );
+            }
+            if r.deferred {
+                assert!(r.remaining > 0, "deferred cycle must leave work queued");
+                deferred_cycles += 1;
+            }
+            executed += r.executed;
+            if r.remaining == 0 {
+                break;
+            }
+        }
+        assert_eq!(executed, 80, "every ticket is eventually served");
+        assert!(deferred_cycles > 0, "5ms cycles over 80 tickets must defer");
+        assert_eq!(s.queued_total(), 0);
+    }
+
+    #[test]
+    fn per_tenant_fifo_is_preserved_under_cross_tenant_reordering() {
+        let (s, _clk, log) = mk(
+            SchedulerConfig::default(),
+            &[("a", 0.001), ("b", 0.0003), ("c", 0.002)],
+        );
+        let mut rng = Rng::new(mix_seed(&[11, 0x5CED]));
+        let tenants = ["a", "b", "c"];
+        let mut submitted: BTreeMap<&str, Vec<String>> = BTreeMap::new();
+        for i in 0..90u32 {
+            let t = tenants[rng.index(3)];
+            let mut req = match rng.index(3) {
+                0 => predict_req(t, 1 + rng.index(8)),
+                1 => delete_req(t, i),
+                _ => encode_request(&Request {
+                    v: WIRE_VERSION,
+                    model: t.to_string(),
+                    op: Op::Flush,
+                }),
+            };
+            if rng.bernoulli(0.3) {
+                req.set("deadline_ms", 1 + rng.index(50) as u64);
+            }
+            submitted.entry(t).or_default().push(req.to_string());
+            enqueue(&s, &req);
+        }
+        while s.queued_total() > 0 {
+            s.run_for(Duration::from_millis(3));
+        }
+        let done = log.lock().unwrap();
+        for t in tenants {
+            let key = format!(r#""model":"{t}""#);
+            let got: Vec<&String> = done.iter().filter(|w| w.contains(&key)).collect();
+            let want = submitted.get(t).map(|v| v.as_slice()).unwrap_or(&[]);
+            assert_eq!(got.len(), want.len(), "tenant {t} lost tickets");
+            for (g, w) in got.iter().zip(want) {
+                assert_eq!(
+                    g.as_str(),
+                    w.as_str(),
+                    "tenant {t}: execution order broke submission FIFO"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn admission_control_refuses_past_queue_depth_with_retry_hint() {
+        let (s, _clk, _log) = mk(
+            SchedulerConfig {
+                queue_depth: 2,
+                ..Default::default()
+            },
+            &[("a", 0.001)],
+        );
+        let _r1 = enqueue(&s, &predict_req("a", 1));
+        let _r2 = enqueue(&s, &predict_req("a", 1));
+        match s.submit(&predict_req("a", 1)) {
+            Err(ApiError::Overloaded { retry_after_ms }) => {
+                assert!(retry_after_ms >= 1, "hint must be a positive backoff");
+            }
+            other => panic!("expected Overloaded, got {:?}", other.is_ok()),
+        }
+        // The refusal is visible in the tenant's stats and on the wire.
+        let st = s.tenant_stats("a");
+        assert_eq!(st.get("overloaded").unwrap().as_u64(), Some(1));
+        assert_eq!(st.get("queued").unwrap().as_u64(), Some(2));
+        let wire = s.handle(&predict_req("a", 1));
+        let e = api::error_from_wire(&wire);
+        assert!(matches!(e, ApiError::Overloaded { .. }));
+        // Draining reopens admission.
+        s.run_for(Duration::from_secs(1));
+        assert!(s.submit(&predict_req("a", 1)).is_ok());
+    }
+
+    #[test]
+    fn background_bids_run_only_in_slack_and_dedupe() {
+        let (s, _clk, log) = mk(SchedulerConfig::default(), &[("a", 0.001)]);
+        for i in 0..5u32 {
+            enqueue(&s, &delete_req("a", i));
+        }
+        assert!(s.bid_compact("a", 4));
+        assert!(!s.bid_compact("a", 4), "one outstanding bid per tenant");
+        assert!(s.pending_bid("a"));
+        let r = s.run_for(Duration::from_secs(1));
+        assert_eq!(r.executed, 6);
+        assert_eq!(r.executed_bg, 1);
+        assert!(!s.pending_bid("a"));
+        let done = log.lock().unwrap();
+        assert!(
+            done.last().unwrap().contains(r#""op":"compact""#),
+            "the compact bid must run after ALL foreground work"
+        );
+        let st = s.tenant_stats("a");
+        assert_eq!(st.get("compact_ticks").unwrap().as_u64(), Some(1));
+        assert!(st.get("compact_spent_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn seeding_sets_the_prior_before_any_observation() {
+        let (s, _clk, _log) = mk(SchedulerConfig::default(), &[]);
+        let d = SchedulerConfig::default().default_cost;
+        assert_eq!(s.predicted_cost("m", OpClass::Predict, 0), d);
+        // Histogram seed (cross-process artifact).
+        let mut h = Histogram::new();
+        for _ in 0..20 {
+            h.record(0.005);
+        }
+        s.seed_from_histogram("m", OpClass::Predict, &h);
+        let p = s.predicted_cost("m", OpClass::Predict, 0);
+        assert!((0.004..0.02).contains(&p), "seeded predict {p} should be ~5ms");
+        // Telemetry seed (exact in-process Welford).
+        let t = Telemetry::new();
+        t.record("delete", 0.008, true);
+        t.record("delete", 0.008, true);
+        s.seed_from_telemetry("m", &t);
+        let p = s.predicted_cost("m", OpClass::Mutate, 0);
+        assert!((p - 0.008).abs() < 1e-9, "telemetry seed should be exact, got {p}");
+    }
+
+    #[test]
+    fn fairness_spec_parses_and_rejects_garbage() {
+        let w = SchedulerConfig::parse_weights("a=2,b=0.5").unwrap();
+        assert_eq!(w.get("a"), Some(&2.0));
+        assert_eq!(w.get("b"), Some(&0.5));
+        assert!(SchedulerConfig::parse_weights("").unwrap().is_empty());
+        assert!(SchedulerConfig::parse_weights("a").is_err());
+        assert!(SchedulerConfig::parse_weights("a=zero").is_err());
+        assert!(SchedulerConfig::parse_weights("a=-1").is_err());
+        assert!(SchedulerConfig::parse_weights("a=0").is_err());
+    }
+
+    #[test]
+    fn bypass_ops_execute_immediately_without_queueing() {
+        let (s, _clk, log) = mk(SchedulerConfig::default(), &[("a", 0.001)]);
+        enqueue(&s, &predict_req("a", 1)); // queued, NOT yet executed
+        let resp = s.handle(&encode_request(&Request {
+            v: WIRE_VERSION,
+            model: "a".to_string(),
+            op: Op::List,
+        }));
+        assert!(resp.get("ok").is_some());
+        assert_eq!(log.lock().unwrap().len(), 1, "only the bypass op ran");
+        assert_eq!(s.queued_total(), 1, "the predict is still queued");
+    }
+}

@@ -21,6 +21,7 @@
 
 use crate::coordinator::api::{self, ApiError, CreateSpec, Op, Request, Response, DEFAULT_MODEL};
 use crate::coordinator::registry::{Model, ModelRegistry};
+use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::shards::ShardedForest;
 use crate::coordinator::telemetry::Telemetry;
 use crate::coordinator::wal::{self, FsyncPolicy, Wal};
@@ -31,7 +32,7 @@ use crate::util::json::Value;
 use crate::util::threadpool::default_threads;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Weak};
+use std::sync::{Arc, Mutex, Weak};
 use std::time::Duration;
 
 /// Service configuration; also the template every `create`/`load`ed model
@@ -99,6 +100,10 @@ pub struct UnlearningService {
     /// default); shared by every model's WAL and by `verify_cert`.
     cert_key: Vec<u8>,
     shutdown: AtomicBool,
+    /// Attached [`Scheduler`] (DESIGN.md §15), when `serve --budget-ms`
+    /// routed traffic through one. Weak: the scheduler owns an `Arc` to
+    /// the service (its executor), so a strong back-edge would leak both.
+    scheduler: Mutex<Weak<Scheduler>>,
 }
 
 impl UnlearningService {
@@ -178,6 +183,7 @@ impl UnlearningService {
             cfg: cfg.clone(),
             cert_key,
             shutdown: AtomicBool::new(false),
+            scheduler: Mutex::new(Weak::new()),
         });
         spawn_compactor(Arc::downgrade(&svc), cfg.compact_interval, cfg.compact_budget);
         svc
@@ -230,6 +236,18 @@ impl UnlearningService {
         self.shutdown.load(Ordering::SeqCst)
     }
 
+    /// Register an attached scheduler (called by [`Scheduler::attach`]).
+    /// The wire loop and the background compactor route through it from
+    /// this point on.
+    pub fn attach_scheduler(&self, sched: Weak<Scheduler>) {
+        *self.scheduler.lock().unwrap() = sched;
+    }
+
+    /// The attached scheduler, if one is alive.
+    pub fn scheduler(&self) -> Option<Arc<Scheduler>> {
+        self.scheduler.lock().unwrap().upgrade()
+    }
+
     /// Handle one wire object: decode → dispatch → encode.
     pub fn handle(&self, req: &Value) -> Value {
         let resp = match api::decode(req) {
@@ -276,7 +294,18 @@ impl UnlearningService {
             // Data-plane: resolve the model (the registry lock is released
             // inside `get`, before any per-model lock is touched).
             op => match self.registry.get(&req.model) {
-                Ok(model) => dispatch_model(&model, op),
+                Ok(model) => match dispatch_model(&model, op) {
+                    // Stats carry the tenant's scheduling view (queue
+                    // depth, DRR state, compaction accounting) when a
+                    // scheduler is attached.
+                    Response::Stats(mut v) => {
+                        if let Some(sched) = self.scheduler() {
+                            v.set("sched", sched.tenant_stats(model.name()));
+                        }
+                        Response::Stats(v)
+                    }
+                    r => r,
+                },
                 Err(e) => Response::Err(e),
             },
         }
@@ -485,7 +514,7 @@ fn dispatch_model_inner(model: &Model, op: Op) -> Response {
             flushed: model.flush(),
         },
         Op::Compact { budget } => Response::Flushed {
-            flushed: model.compact(budget),
+            flushed: model.drain_compact(budget),
         },
         Op::Save { path } => match model.save(&path) {
             Ok(()) => Response::Ok,
@@ -551,6 +580,12 @@ fn dispatch_model_inner(model: &Model, op: Op) -> Response {
 /// handle — dropping the last service `Arc` (or the shutdown op) stops it
 /// within one tick. Timing is nondeterministic and harmlessly so: retrains
 /// are path-seeded, so *when* a flush runs cannot change what it builds.
+///
+/// With a scheduler attached (DESIGN.md §15) the compactor no longer
+/// compacts blindly: it *bids* a background compaction ticket per backlog
+/// model and the scheduler runs the bid in slack budget — after all
+/// foreground work, never against it. Without one it drains directly
+/// (via [`Model::drain_compact`], so ticks are observable either way).
 fn spawn_compactor(svc: Weak<UnlearningService>, interval: Duration, budget: usize) {
     let _ = std::thread::Builder::new()
         .name("dare-compactor".into())
@@ -562,11 +597,19 @@ fn spawn_compactor(svc: Weak<UnlearningService>, interval: Duration, budget: usi
             if svc.is_shutdown() {
                 return;
             }
+            let sched = svc.scheduler();
             for model in svc.registry.models() {
                 if model.lazy_policy().is_lazy() && model.sharded().pending_retrains() > 0 {
-                    let flushed = model.sharded().compact(budget);
-                    if flushed > 0 {
-                        model.telemetry().incr("compacted_retrains", flushed);
+                    match &sched {
+                        Some(s) => {
+                            // At most one outstanding bid per tenant; the
+                            // ticket replays through `svc.handle`, i.e. the
+                            // same compact path as a wire request.
+                            s.bid_compact(model.name(), budget);
+                        }
+                        None => {
+                            model.drain_compact(budget);
+                        }
                     }
                 }
             }

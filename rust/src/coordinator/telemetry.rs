@@ -78,6 +78,15 @@ impl Telemetry {
         self.ops.lock().unwrap().get(op).map(|s| s.hist.clone())
     }
 
+    /// Exact latency moments recorded under `op` (None when the op was
+    /// never seen). Cloned out like [`Telemetry::op_histogram`]; the
+    /// scheduler seeds its per-(tenant, op-class) cost estimators from this
+    /// so a freshly attached scheduler starts with everything the service
+    /// already learned about the tenant's costs.
+    pub fn op_latency(&self, op: &str) -> Option<Welford> {
+        self.ops.lock().unwrap().get(op).map(|s| s.latency.clone())
+    }
+
     /// Time a closure and record it under `op`.
     pub fn timed<R>(&self, op: &str, f: impl FnOnce() -> (R, bool)) -> R {
         let t0 = Instant::now();
@@ -172,6 +181,19 @@ mod tests {
         let p99 = p.get("latency_p99_s").unwrap().as_f64().unwrap();
         let max = p.get("latency_max_s").unwrap().as_f64().unwrap();
         assert!(p50 > 0.0 && p50 <= p99 && p99 <= max + 1e-12);
+    }
+
+    #[test]
+    fn op_latency_exports_exact_moments() {
+        let t = Telemetry::new();
+        assert!(t.op_latency("predict").is_none());
+        t.record("predict", 0.010, true);
+        t.record("predict", 0.030, true);
+        let w = t.op_latency("predict").unwrap();
+        assert_eq!(w.n, 2);
+        assert!((w.mean() - 0.020).abs() < 1e-12);
+        assert_eq!(w.min(), 0.010);
+        assert_eq!(w.max(), 0.030);
     }
 
     #[test]

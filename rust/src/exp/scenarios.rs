@@ -35,9 +35,15 @@
 //! batched purge, bit-exact accuracy recovery), sliding-window continual
 //! learning under distribution drift, and a zipf-routed multi-tenant mix
 //! with one Occ(q)-subsampled tenant. `benches/scenarios.rs` replays them
-//! at `DARE_SCENARIO_SCALE` and emits `BENCH_scenarios.json`.
+//! at `DARE_SCENARIO_SCALE` and emits `BENCH_scenarios.json`. A fifth
+//! kind, [`ScenarioKind::Burst`] (synchronized multi-tenant arrival
+//! spikes), pairs with [`replay_scheduled`] to drive the identical op
+//! stream through the DESIGN.md §15 time-budgeted scheduler — the
+//! scheduled-vs-direct snapshot comparison is how the scheduler's
+//! byte-exactness claim is enforced end to end.
 
 use crate::coordinator::api::{encode_request, Op, Request, WIRE_VERSION};
+use crate::coordinator::scheduler::{RunReport, Scheduler, SchedulerConfig, Submitted};
 use crate::coordinator::{ServiceConfig, UnlearningService};
 use crate::data::dataset::InstanceId;
 use crate::data::split::train_test;
@@ -87,6 +93,11 @@ pub enum ScenarioKind {
     /// Randomized spec for the op-fuzz replay leg: 1–2 small tenants, a
     /// random mix over the whole op vocabulary.
     Fuzz,
+    /// Synchronized multi-tenant arrival spikes: every round, all tenants
+    /// burst interleaved predict-heavy traffic at once (the workload the
+    /// DESIGN.md §15 scheduler packs into budget cycles); quiet tails of
+    /// cost reads and compaction separate the rounds.
+    Burst,
 }
 
 /// A scenario spec — the unit the harness compiles and replays.
@@ -105,6 +116,7 @@ impl Scenario {
             ScenarioKind::SlidingWindow => "sliding_window",
             ScenarioKind::MultiTenantZipf => "multi_tenant_zipf",
             ScenarioKind::Fuzz => "fuzz",
+            ScenarioKind::Burst => "burst",
         }
     }
 
@@ -135,6 +147,7 @@ impl Scenario {
             ScenarioKind::SlidingWindow => compile_sliding_window(&mut c, self.scale, self.seed),
             ScenarioKind::MultiTenantZipf => compile_multi_tenant_zipf(&mut c, self.scale),
             ScenarioKind::Fuzz => compile_fuzz(&mut c, self.scale),
+            ScenarioKind::Burst => compile_burst(&mut c, self.scale),
         }
         c.finish(self.name(), self.seed)
     }
@@ -669,6 +682,74 @@ fn compile_fuzz(c: &mut Compiler, scale: usize) {
     }
 }
 
+/// Synchronized multi-tenant arrival spikes. Three tenants; each round,
+/// every tenant's burst of predict-heavy traffic (with scattered deletes
+/// and adds) arrives interleaved — the adversarial shape for a
+/// time-budgeted scheduler, since no tenant's queue is ever empty during
+/// a spike and naive FIFO service would let one tenant starve the rest.
+/// Quiet tails of cost reads separate the rounds, and every other round
+/// ends with a wire compact per tenant (a foreground Compact-class
+/// ticket when replayed through the scheduler).
+fn compile_burst(c: &mut Compiler, scale: usize) {
+    let n = (scale / 3).max(48);
+    let mut tenants = Vec::new();
+    for i in 0..3 {
+        let params = Params {
+            n_trees: 3,
+            max_depth: 5,
+            k: 4 + i,
+            d_rmax: 1,
+            ..Default::default()
+        };
+        let fseed = c.rng.next_u64();
+        let data = generate(&spec(n), c.rng.next_u64());
+        tenants.push(c.tenant(&format!("burst{i}"), data, &params, fseed));
+    }
+    let rounds = 5;
+    let spike = (scale / 8).max(18);
+    for round in 0..rounds {
+        // The spike: requests from all tenants arrive interleaved, as a
+        // synchronized burst would at a shared front door.
+        for j in 0..spike {
+            let t = tenants[j % tenants.len()];
+            let p = c.tenants[t].oracle.data().n_features();
+            match c.rng.index(8) {
+                0 => {
+                    let live = c.tenants[t].oracle.live_ids();
+                    if live.len() > 24 {
+                        let id = live[c.rng.index(live.len())];
+                        c.delete(t, vec![id]);
+                    }
+                }
+                1 => {
+                    let row = random_row(&mut c.rng, p);
+                    let label = c.rng.index(2) as u8;
+                    c.add(t, row, label);
+                }
+                _ => {
+                    let rows: Vec<Vec<f32>> = (0..1 + c.rng.index(4))
+                        .map(|_| random_row(&mut c.rng, p))
+                        .collect();
+                    c.predict(t, rows);
+                }
+            }
+        }
+        // Quiet tail: one cost read per tenant, compaction every other
+        // round so deferred retrain backlogs never pile across rounds.
+        for &t in &tenants {
+            let live = c.tenants[t].oracle.live_ids();
+            if !live.is_empty() {
+                c.delete_cost(t, live[c.rng.index(live.len())]);
+            }
+        }
+        if round % 2 == 1 {
+            for &t in &tenants {
+                c.compact(t, 4);
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Replay
 // ---------------------------------------------------------------------------
@@ -786,6 +867,128 @@ pub fn replay(c: &CompiledScenario) -> Replayed {
         predict_rows,
         deleted_ids,
         wall_s,
+    }
+}
+
+/// A scheduled replay: the same [`Replayed`] surface (so [`cross_check`]
+/// and snapshot comparisons apply unchanged), plus the scheduler-side
+/// evidence — one [`RunReport`] per `run_for` cycle and the
+/// submit→response sojourn histogram over the queued ops.
+pub struct ScheduledReplay {
+    pub replayed: Replayed,
+    /// One report per `run_for(budget)` cycle, in execution order.
+    pub cycles: Vec<RunReport>,
+    /// Submit→response latency for queued ops (queue wait + execution).
+    pub sojourn: Histogram,
+}
+
+/// Drive the compiled op stream through a [`Scheduler`] attached to the
+/// replay service: ops are `submit`ted in stream order (per-tenant FIFO by
+/// construction), queued work is drained with `run_for(budget)` cycles
+/// whenever the backlog crosses a spike-sized bound, and every reply is
+/// collected and held to the same `ok` bar as [`replay`]. Because the
+/// scheduler executes through `UnlearningService::handle`, the telemetry
+/// ledger fills exactly as in a direct replay and [`cross_check`] applies
+/// verbatim — the ISSUE's byte-exactness claim is checked by comparing
+/// `final_snapshots` of the two replays.
+///
+/// Admission control is disabled (`queue_depth: 0` semantics via a depth
+/// larger than the stream): a synchronous driver that panics on refusal
+/// would make spike sizing a correctness knob, which it is not.
+pub fn replay_scheduled(c: &CompiledScenario, budget: Duration) -> ScheduledReplay {
+    let svc = UnlearningService::with_models(
+        c.tenants.iter().map(|t| (t.name.clone(), t.initial.clone())).collect(),
+        replay_config(),
+    );
+    let cfg = SchedulerConfig {
+        budget,
+        queue_depth: c.ops.len() + 1,
+        ..SchedulerConfig::default()
+    };
+    let sched = Scheduler::attach(&svc, cfg);
+    let mut per_tenant_op: BTreeMap<(usize, String), Histogram> = BTreeMap::new();
+    let mut issued: BTreeMap<(usize, String), u64> = BTreeMap::new();
+    let mut predict_rows = vec![0u64; c.tenants.len()];
+    let mut deleted_ids = vec![0u64; c.tenants.len()];
+    let mut cycles: Vec<RunReport> = Vec::new();
+    let mut sojourn = Histogram::new();
+    // Queued replies: (op index, submit instant, receiver).
+    let mut pending: Vec<(usize, Instant, std::sync::mpsc::Receiver<Value>)> = Vec::new();
+    let mut responses: Vec<Option<Value>> = (0..c.ops.len()).map(|_| None).collect();
+    let t_start = Instant::now();
+    for (k, op) in c.ops.iter().enumerate() {
+        let tenant = op.tenant();
+        let wire = encode_request(&Request {
+            v: WIRE_VERSION,
+            model: c.tenants[tenant].name.clone(),
+            op: op.to_wire(),
+        });
+        let t0 = Instant::now();
+        match sched.submit(&wire).expect("replay queue depth exceeds the stream") {
+            Submitted::Immediate(v) => {
+                let dt = t0.elapsed().as_secs_f64();
+                let key = (tenant, op.op_type().to_string());
+                per_tenant_op.entry(key).or_insert_with(Histogram::new).record(dt);
+                responses[k] = Some(v);
+            }
+            Submitted::Queued(rx) => pending.push((k, t0, rx)),
+        }
+        *issued.entry((tenant, op.op_type().to_string())).or_insert(0) += 1;
+        // Drain in budget-sized cycles once a spike's worth has queued —
+        // the queue stays deep enough that EDF/DRR choices are real.
+        while sched.queued_total() >= 64 {
+            cycles.push(sched.run_for(budget));
+        }
+    }
+    while sched.queued_total() > 0 {
+        cycles.push(sched.run_for(budget));
+    }
+    for (k, t0, rx) in pending {
+        let v = rx.recv().expect("scheduler dropped a reply");
+        let dt = t0.elapsed().as_secs_f64();
+        sojourn.record(dt);
+        let tenant = c.ops[k].tenant();
+        let key = (tenant, c.ops[k].op_type().to_string());
+        per_tenant_op.entry(key).or_insert_with(Histogram::new).record(dt);
+        responses[k] = Some(v);
+    }
+    let wall_s = t_start.elapsed().as_secs_f64();
+    for (k, op) in c.ops.iter().enumerate() {
+        let tenant = op.tenant();
+        let resp = responses[k].as_ref().expect("every op produced a response");
+        assert_eq!(
+            resp.get("ok").and_then(|v| v.as_bool()),
+            Some(true),
+            "scenario '{}' (scheduled): op {:?} failed: {}",
+            c.name,
+            op,
+            resp.to_string()
+        );
+        match op {
+            ScenarioOp::Predict { rows, .. } => predict_rows[tenant] += rows.len() as u64,
+            ScenarioOp::Delete { .. } => {
+                deleted_ids[tenant] +=
+                    resp.get("deleted").and_then(|v| v.as_u64()).unwrap_or(0)
+            }
+            _ => {}
+        }
+    }
+    let mut per_op: BTreeMap<String, Histogram> = BTreeMap::new();
+    for ((_, op), h) in &per_tenant_op {
+        per_op.entry(op.clone()).or_insert_with(Histogram::new).merge(h);
+    }
+    ScheduledReplay {
+        replayed: Replayed {
+            svc,
+            per_op,
+            per_tenant_op,
+            issued,
+            predict_rows,
+            deleted_ids,
+            wall_s,
+        },
+        cycles,
+        sojourn,
     }
 }
 
@@ -990,6 +1193,7 @@ mod tests {
             ScenarioKind::SlidingWindow,
             ScenarioKind::MultiTenantZipf,
             ScenarioKind::Fuzz,
+            ScenarioKind::Burst,
         ] {
             let a = tiny(kind, 7).compile();
             let b = tiny(kind, 7).compile();
@@ -1046,6 +1250,45 @@ mod tests {
         let r = replay(&c);
         cross_check(&c, &r);
         assert!(r.per_op.values().map(|h| h.count()).sum::<u64>() == c.ops.len() as u64);
+    }
+
+    #[test]
+    fn burst_scheduled_replay_is_byte_identical_to_direct() {
+        let c = tiny(ScenarioKind::Burst, 17).compile();
+        let direct = replay(&c);
+        cross_check(&c, &direct);
+        let sched = replay_scheduled(&c, Duration::from_millis(5));
+        // The scheduled service passes the identical correctness surface:
+        // differential oracle, probe bits, telemetry coherence.
+        cross_check(&c, &sched.replayed);
+        assert_eq!(
+            direct.final_snapshots(&c),
+            sched.replayed.final_snapshots(&c),
+            "scheduled execution must be byte-identical to direct handle()"
+        );
+        assert_eq!(direct.op_counts(), sched.replayed.op_counts());
+        // Every reply accounted for: sojourn mass == queued ops == total
+        // minus the bypass (stats) ops that returned Immediate.
+        let stats_ops =
+            c.ops.iter().filter(|o| matches!(o, ScenarioOp::Stats { .. })).count() as u64;
+        assert_eq!(sched.sojourn.count(), c.ops.len() as u64 - stats_ops);
+        // Budget packing held in every cycle that dispatched work: the
+        // overrun is bounded by the last ticket's measured cost (plus
+        // bookkeeping slop — this is a real clock, so the assertion is
+        // arithmetic-robust rather than wall-clock-tight; the exact bound
+        // lives in the virtual-clock unit suite).
+        assert!(!sched.cycles.is_empty());
+        for r in &sched.cycles {
+            if r.executed > 0 {
+                assert!(
+                    r.spent_s <= r.budget_s + r.last_cost_s + 0.05,
+                    "cycle overran its budget: spent {} budget {} last {}",
+                    r.spent_s,
+                    r.budget_s,
+                    r.last_cost_s
+                );
+            }
+        }
     }
 
     #[test]

@@ -13,7 +13,8 @@
 //!   datasets   list the 14-dataset corpus
 
 use dare::coordinator::{
-    bootstrap_follower, serve, Client, ReplicationConfig, ServiceConfig, UnlearningService,
+    bootstrap_follower, serve, Client, ReplicationConfig, Scheduler, SchedulerConfig,
+    ServiceConfig, UnlearningService,
 };
 use dare::data::registry::{corpus, find};
 use dare::data::split::train_test;
@@ -30,7 +31,8 @@ const VALUE_KEYS: &[&str] = &[
     "load", "csv", "ids", "addr", "workers", "repeats", "deletions", "worst-of", "datasets",
     "out-dir", "max-trees", "ks", "grid", "folds", "tolerances", "label", "n", "model",
     "wal-dir", "fsync", "snapshot-every", "hmac-key", "follow", "poll-ms", "pull-batch",
-    "stale-after", "retries", "connect-timeout-ms", "io-timeout-ms",
+    "stale-after", "retries", "connect-timeout-ms", "io-timeout-ms", "budget-ms", "queue-depth",
+    "fairness",
 ];
 
 fn main() {
@@ -79,6 +81,11 @@ COMMANDS
              that bootstraps from the leader's snapshot and tails its WAL
              [--poll-ms MS] [--pull-batch N] [--stale-after EPOCHS]
              [--retries R] [--connect-timeout-ms MS] [--io-timeout-ms MS]
+             scheduling: --budget-ms MS serves through the deadline-aware
+             cross-tenant scheduler (MS latency budget per cycle; requests
+             may carry \"deadline_ms\") [--queue-depth N]  (per-tenant
+             admission bound, refused ops answer overloaded+retry_after_ms)
+             [--fairness tenant=weight,...]  (deficit-round-robin shares)
   promote    --addr <follower> [--model NAME]  flip a follower model into
              a writable leader (drains catch-up first; failover)
   tune       --dataset <name> [--scale N] [--grid paper|small] [--folds F]
@@ -208,6 +215,42 @@ fn cmd_predict(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Build + attach the cross-tenant scheduler (DESIGN.md §15) when
+/// `--budget-ms` asks for scheduled serving. The returned `Arc` must stay
+/// alive across `serve` — the service only holds it weakly.
+fn scheduler_from_flags(
+    args: &Args,
+    svc: &std::sync::Arc<UnlearningService>,
+) -> anyhow::Result<Option<std::sync::Arc<Scheduler>>> {
+    let Some(budget) = args.get("budget-ms") else {
+        anyhow::ensure!(
+            args.get("queue-depth").is_none() && args.get("fairness").is_none(),
+            "--queue-depth/--fairness require --budget-ms (scheduled serving)"
+        );
+        return Ok(None);
+    };
+    let budget_ms: u64 = budget
+        .parse()
+        .ok()
+        .filter(|&ms| ms > 0)
+        .ok_or_else(|| anyhow::anyhow!("--budget-ms: expected milliseconds > 0, got '{budget}'"))?;
+    let mut cfg = SchedulerConfig::default();
+    cfg.budget = std::time::Duration::from_millis(budget_ms);
+    cfg.queue_depth = args.usize("queue-depth", cfg.queue_depth);
+    if let Some(spec) = args.get("fairness") {
+        cfg.weights =
+            SchedulerConfig::parse_weights(spec).map_err(|e| anyhow::anyhow!("--fairness: {e}"))?;
+    }
+    println!(
+        "scheduler: {budget_ms}ms budget cycles, queue depth {}, {} fairness weight(s)",
+        cfg.queue_depth,
+        cfg.weights.len()
+    );
+    let sched = Scheduler::attach(svc, cfg);
+    Scheduler::spawn_runner(&sched);
+    Ok(Some(sched))
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut cfg = ServiceConfig::default();
     if let Some(dir) = args.get("wal-dir") {
@@ -239,6 +282,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             args.duration_ms("connect-timeout-ms", rcfg.client.connect_timeout);
         rcfg.client.io_timeout = args.duration_ms("io-timeout-ms", rcfg.client.io_timeout);
         let svc = UnlearningService::with_models(Vec::new(), cfg);
+        let _sched = scheduler_from_flags(args, &svc)?;
         let followed = bootstrap_follower(&svc, &rcfg)?;
         anyhow::ensure!(
             !followed.is_empty(),
@@ -270,6 +314,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     };
     let durable = cfg.wal_dir.is_some();
     let svc = UnlearningService::with_models(vec![(name.to_string(), forest)], cfg);
+    let _sched = scheduler_from_flags(args, &svc)?;
     println!(
         "dare unlearning service (wire v{}, model '{name}', pjrt={}, durable={durable})",
         dare::coordinator::WIRE_VERSION,

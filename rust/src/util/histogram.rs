@@ -189,6 +189,43 @@ impl Histogram {
         self.quantile(0.99)
     }
 
+    /// Approximate second moment: `(count, mean, variance)` where the mean
+    /// is exact (from the tracked sum) and the variance is estimated from
+    /// bucket geometric-mean midpoints (sample variance, n-1 denominator;
+    /// underflow samples sit at `min`, overflow at `max`). This is the
+    /// cross-process seeding path for the scheduler's Welford cost
+    /// estimators: a histogram shipped in a stats payload carries no raw
+    /// samples, so variance is bucket-resolution — good enough for a
+    /// mean + safety·std cost predictor, and refined by live observations
+    /// as soon as work flows.
+    pub fn approx_moments(&self) -> (u64, f64, f64) {
+        if self.count < 2 {
+            return (self.count, self.mean(), 0.0);
+        }
+        let mean = self.mean();
+        let mut m2 = 0.0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            // Representative point: geometric mean of the bucket's bounds
+            // (the natural center of a log-spaced bucket), clamped into the
+            // exactly-tracked sample range.
+            let raw = if i == 0 {
+                self.min.min(LO_SECONDS)
+            } else if i >= N_BUCKETS - 1 {
+                self.max
+            } else {
+                let lo = if i == 1 { LO_SECONDS } else { bound(i - 1) };
+                (lo * bound(i)).sqrt()
+            };
+            let mid = raw.clamp(self.min, self.max);
+            let d = mid - mean;
+            m2 += c as f64 * d * d;
+        }
+        (self.count, mean, m2 / (self.count - 1) as f64)
+    }
+
     /// JSON summary — the per-op-type entry shape of `BENCH_scenarios.json`
     /// (pinned by `tests/scenarios.rs::bench_schema_is_pinned`).
     pub fn to_json(&self) -> Value {
@@ -328,6 +365,32 @@ mod tests {
             let b = index(bound(i - 1));
             assert!(b >= 1 && b <= N_BUCKETS - 2, "bound {i} escaped: {b}");
         }
+    }
+
+    #[test]
+    fn approx_moments_track_true_moments_at_bucket_resolution() {
+        // Tight cluster: approx variance must be small relative to a spread
+        // sample, and the mean is exact regardless of bucketing.
+        let tight = hist_of(&[1.0e-3, 1.05e-3, 1.1e-3, 0.95e-3]);
+        let (n, mean, var) = tight.approx_moments();
+        assert_eq!(n, 4);
+        assert!((mean - tight.mean()).abs() < 1e-15, "mean is exact");
+        let spread = hist_of(&[1e-5, 1e-3, 1e-1, 10.0]);
+        let (_, _, var_spread) = spread.approx_moments();
+        assert!(
+            var_spread > var,
+            "spread sample must show more estimated variance ({var_spread} vs {var})"
+        );
+        // The estimate is bucket-resolution, not garbage: std within ~one
+        // bucket width of the true std for an in-range sample.
+        let xs = [2e-3, 4e-3, 8e-3, 1.6e-2, 3.2e-2];
+        let h = hist_of(&xs);
+        let (_, _, v) = h.approx_moments();
+        let true_std = crate::util::stats::std_dev(&xs);
+        assert!(v.sqrt() > 0.3 * true_std && v.sqrt() < 3.0 * true_std);
+        // Degenerate cases report zero variance.
+        assert_eq!(Histogram::new().approx_moments(), (0, 0.0, 0.0));
+        assert_eq!(hist_of(&[0.5]).approx_moments(), (1, 0.5, 0.0));
     }
 
     #[test]

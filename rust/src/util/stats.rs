@@ -138,6 +138,48 @@ impl Welford {
             self.max
         }
     }
+
+    /// Parallel combine (Chan et al.): after merging, this accumulator is
+    /// exactly what it would have been had it seen `other`'s samples too.
+    /// Used by the scheduler to fold telemetry-derived moments into live
+    /// per-(tenant, op-class, bucket) estimators without replaying samples.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let (na, nb) = (self.n as f64, other.n as f64);
+        let delta = other.mean - self.mean;
+        self.mean += delta * nb / (na + nb);
+        self.m2 += other.m2 + delta * delta * na * nb / (na + nb);
+        self.n += other.n;
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
+    /// Reconstruct an accumulator from summary moments (sample variance,
+    /// n-1 denominator). The inverse of (`n`, `mean()`, `var()`, `min()`,
+    /// `max()`) — lets cross-process artifacts (histogram-derived moments)
+    /// seed a live estimator.
+    pub fn from_moments(n: u64, mean: f64, var: f64, min: f64, max: f64) -> Welford {
+        if n == 0 {
+            return Welford::new();
+        }
+        Welford {
+            n,
+            mean,
+            m2: if n < 2 { 0.0 } else { var * (n - 1) as f64 },
+            min,
+            max,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -180,6 +222,50 @@ mod tests {
         assert!((w.std() - std_dev(&xs)).abs() < 1e-12);
         assert_eq!(w.min(), 3.0);
         assert_eq!(w.max(), 24.0);
+    }
+
+    #[test]
+    fn welford_merge_matches_push_all() {
+        let xs = [3.0, 7.0, 7.0, 19.0, 24.0, -2.0, 0.5];
+        for split in 0..=xs.len() {
+            let mut a = Welford::new();
+            let mut b = Welford::new();
+            for &x in &xs[..split] {
+                a.push(x);
+            }
+            for &x in &xs[split..] {
+                b.push(x);
+            }
+            let mut all = Welford::new();
+            for &x in &xs {
+                all.push(x);
+            }
+            a.merge(&b);
+            assert_eq!(a.n, all.n, "split {split}");
+            assert!((a.mean() - all.mean()).abs() < 1e-12, "split {split}");
+            assert!((a.var() - all.var()).abs() < 1e-10, "split {split}");
+            assert_eq!(a.min(), all.min(), "split {split}");
+            assert_eq!(a.max(), all.max(), "split {split}");
+        }
+    }
+
+    #[test]
+    fn welford_from_moments_roundtrip() {
+        let mut w = Welford::new();
+        for x in [0.01, 0.02, 0.05, 0.03] {
+            w.push(x);
+        }
+        let r = Welford::from_moments(w.n, w.mean(), w.var(), w.min(), w.max());
+        assert_eq!(r.n, w.n);
+        assert!((r.mean() - w.mean()).abs() < 1e-15);
+        assert!((r.var() - w.var()).abs() < 1e-15);
+        assert_eq!(r.min(), w.min());
+        assert_eq!(r.max(), w.max());
+        // Empty and single-sample edges.
+        assert_eq!(Welford::from_moments(0, 5.0, 1.0, 0.0, 9.0).mean(), 0.0);
+        let one = Welford::from_moments(1, 0.5, 0.0, 0.5, 0.5);
+        assert_eq!(one.mean(), 0.5);
+        assert_eq!(one.var(), 0.0);
     }
 
     #[test]

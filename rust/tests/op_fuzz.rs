@@ -1170,3 +1170,64 @@ fn fuzzed_scenarios_replay_deterministically() {
         );
     }
 }
+
+/// Leg 5 (ISSUE 10): scheduled execution is byte-identical to direct
+/// `handle()`. Each seed draws a fuzzed multi-tenant script and replays
+/// it twice against fresh services — once straight through
+/// `UnlearningService::handle`, once `submit`ted to a DESIGN.md §15
+/// `Scheduler` and drained in time-budgeted `run_for` cycles (EDF + DRR
+/// cross-tenant reordering, per-tenant FIFO preserved). Final forest
+/// state must match byte-for-byte and both replays must pass the full
+/// cross-check under the ambient `DARE_LAZY_POLICY` — CI runs this leg
+/// in both halves of the lazy matrix. Seeds alternate between the fuzz
+/// vocabulary (every op kind, dead-id deletes) and the burst shape
+/// (synchronized arrival spikes), so the scheduler sees both sparse and
+/// saturated queues.
+#[test]
+fn fuzzed_scheduled_execution_matches_direct_handle() {
+    use dare::exp::scenarios::{
+        cross_check, replay, replay_scheduled, Scenario, ScenarioKind,
+    };
+    use std::time::Duration;
+
+    for (i, seed) in fuzz_seeds().into_iter().take(4).enumerate() {
+        let kind = if i % 2 == 0 {
+            ScenarioKind::Fuzz
+        } else {
+            ScenarioKind::Burst
+        };
+        let sc = Scenario {
+            kind,
+            scale: 120,
+            seed: mix_seed(&[seed, 0x5CED]),
+        };
+        let compiled = sc.compile();
+
+        let direct = replay(&compiled);
+        cross_check(&compiled, &direct);
+
+        let sched = replay_scheduled(&compiled, Duration::from_millis(3));
+        cross_check(&compiled, &sched.replayed);
+        assert_eq!(
+            direct.final_snapshots(&compiled),
+            sched.replayed.final_snapshots(&compiled),
+            "seed {seed} ({kind:?}): scheduled execution diverged from direct \
+             handle() in final forest state"
+        );
+        assert_eq!(
+            direct.op_counts(),
+            sched.replayed.op_counts(),
+            "seed {seed} ({kind:?}): scheduled replay diverged in per-op counts"
+        );
+        for r in &sched.cycles {
+            if r.executed > 0 {
+                assert!(
+                    r.spent_s <= r.budget_s + r.last_cost_s + 0.05,
+                    "seed {seed}: budget cycle overran (spent {} budget {})",
+                    r.spent_s,
+                    r.budget_s
+                );
+            }
+        }
+    }
+}

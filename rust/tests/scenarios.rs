@@ -14,8 +14,10 @@
 //! independent compiles), and the pinned `BENCH_scenarios.json` schema.
 
 use dare::exp::scenarios::{
-    cross_check, replay, report_json, scenario_json, scenario_scale, Scenario, ScenarioKind,
+    cross_check, replay, replay_scheduled, report_json, scenario_json, scenario_scale,
+    Scenario, ScenarioKind,
 };
+use std::time::Duration;
 
 /// Compile → replay → cross-check → replay again; the second pass must
 /// reproduce the first bit-for-bit (snapshots) and count-for-count.
@@ -66,6 +68,68 @@ fn sliding_window_replays_exactly() {
 #[test]
 fn multi_tenant_zipf_replays_exactly() {
     run_scenario(ScenarioKind::MultiTenantZipf);
+}
+
+/// The DESIGN.md §15 scheduler leg: the burst scenario (synchronized
+/// multi-tenant arrival spikes) replayed once directly and once through a
+/// `Scheduler` with 5 ms budget cycles. Scheduled serving must be
+/// byte-identical on every tenant's final snapshot, pass the full
+/// cross-check (differential oracle + telemetry coherence — the telemetry
+/// ledger fills through the identical `handle` path), keep every budget
+/// cycle's overrun bounded by the last ticket's measured cost, and keep
+/// the p99 submit→response sojourn under the budget-derived bound
+/// `cycles × (budget + max last-ticket cost)` — the drain loop's total
+/// extent, which is the worst any ticket can wait.
+#[test]
+fn burst_replays_exactly_through_the_scheduler() {
+    run_scenario(ScenarioKind::Burst);
+
+    let sc = Scenario {
+        kind: ScenarioKind::Burst,
+        scale: scenario_scale(),
+        seed: 0xCAFE + ScenarioKind::Burst as u64,
+    };
+    let compiled = sc.compile();
+    let direct = replay(&compiled);
+    cross_check(&compiled, &direct);
+
+    let budget = Duration::from_millis(5);
+    let sched = replay_scheduled(&compiled, budget);
+    cross_check(&compiled, &sched.replayed);
+    assert_eq!(
+        direct.final_snapshots(&compiled),
+        sched.replayed.final_snapshots(&compiled),
+        "burst: scheduled execution diverged from direct handle()"
+    );
+    assert_eq!(direct.op_counts(), sched.replayed.op_counts());
+
+    // Budget packing: arithmetic-robust per-cycle bound (real clock, so a
+    // bookkeeping slop term; the exact bound is in the unit suite).
+    assert!(!sched.cycles.is_empty(), "burst backlog must span budget cycles");
+    let mut max_last_cost = 0.0f64;
+    for r in &sched.cycles {
+        if r.executed > 0 {
+            assert!(
+                r.spent_s <= r.budget_s + r.last_cost_s + 0.05,
+                "burst: cycle overran: spent {} budget {} last {}",
+                r.spent_s,
+                r.budget_s,
+                r.last_cost_s
+            );
+            max_last_cost = max_last_cost.max(r.last_cost_s);
+        }
+    }
+
+    // p99 sojourn ≤ the budget-derived bound on the drain loop's extent.
+    let bound =
+        sched.cycles.len() as f64 * (budget.as_secs_f64() + max_last_cost) + 0.25;
+    let p99 = sched.sojourn.p99();
+    assert!(
+        p99 <= bound,
+        "burst: p99 sojourn {p99}s exceeds budget-derived bound {bound}s \
+         ({} cycles)",
+        sched.cycles.len()
+    );
 }
 
 #[test]
